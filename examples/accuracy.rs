@@ -1,0 +1,93 @@
+//! Accuracy parity — the paper's Sec. 1 claim that a BNN "could achieve
+//! 89% accuracy on CIFAR-10" carries over to our substitution dataset,
+//! and (the real point) binarized xnor inference loses NOTHING vs the
+//! float simulation of the same binarized network.
+//!
+//! Run: `make artifacts && cargo run --release --example accuracy`
+
+use anyhow::Result;
+
+use bitkernel::benchkit::Table;
+use bitkernel::bitops::XnorImpl;
+use bitkernel::data::Dataset;
+use bitkernel::model::{BnnEngine, EngineKernel};
+use bitkernel::utils::Stopwatch;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(),
+                    "run `make artifacts` first");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args
+        .iter()
+        .position(|a| a == "--images")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048);
+
+    let ds = Dataset::load(dir.join("dataset_test.bin"))?;
+    let engine = BnnEngine::load(dir.join("weights_small.bkw"))?;
+    let n = n.min(ds.count);
+    let x = ds.normalized(0, n);
+    println!(
+        "trained BNN (scale 0.25, {} params) on ShapeSet-10, {} test images",
+        engine.cfg.param_count(),
+        n
+    );
+
+    let mut table = Table::new(
+        "Accuracy parity across kernel arms",
+        &["kernel", "accuracy", "eval time", "img/s"],
+    );
+    let mut accs = Vec::new();
+    for kernel in [
+        EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Control,
+        EngineKernel::Optimized,
+    ] {
+        let sw = Stopwatch::start();
+        let acc = engine.evaluate(&x, &ds.labels[..n], kernel, 32);
+        let secs = sw.elapsed_secs();
+        table.row(&[
+            kernel.name(),
+            format!("{:.2}%", acc * 100.0),
+            format!("{secs:.2}s"),
+            format!("{:.0}", n as f64 / secs),
+        ]);
+        accs.push(acc);
+    }
+    table.print();
+
+    assert!(accs.iter().all(|&a| (a - accs[0]).abs() < 1e-6),
+            "arms must agree exactly");
+    assert!(accs[0] >= 0.89,
+            "trained BNN should be at/above the paper's 89% reference; got {}",
+            accs[0]);
+    println!(
+        "binarized xnor inference matches the float simulation exactly, at \
+         {:.1}% accuracy (paper's CIFAR-10 reference point: 89%) ✓",
+        accs[0] * 100.0
+    );
+
+    // Per-class breakdown (confusion row) for the xnor arm.
+    let preds = engine.predict(&x, EngineKernel::Xnor(XnorImpl::Blocked));
+    let mut per_class = [[0usize; 2]; 10]; // [correct, total]
+    for i in 0..n {
+        let t = ds.labels[i] as usize;
+        per_class[t][1] += 1;
+        if preds[i] == t {
+            per_class[t][0] += 1;
+        }
+    }
+    let mut t2 = Table::new("Per-class accuracy (xnor arm)",
+                            &["class", "correct/total", "accuracy"]);
+    for (c, [ok, total]) in per_class.iter().enumerate() {
+        t2.row(&[
+            bitkernel::server::CLASS_NAMES[c].to_string(),
+            format!("{ok}/{total}"),
+            format!("{:.1}%", 100.0 * *ok as f64 / (*total).max(1) as f64),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Quickstart: the whole stack in one binary.
+//!
+//! 1. prints the paper's Table 1 (xnor == ±1 multiply),
+//! 2. loads the trained BNN + test set from artifacts/,
+//! 3. classifies a few images with every kernel arm (native rust AND the
+//!    AOT-compiled PJRT executables) and shows the logits agree,
+//! 4. prints per-arm timing for a single image.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use bitkernel::benchkit::Table;
+use bitkernel::bitops::XnorImpl;
+use bitkernel::data::Dataset;
+use bitkernel::model::{BnnEngine, EngineKernel};
+use bitkernel::runtime::Runtime;
+use bitkernel::server::CLASS_NAMES;
+use bitkernel::utils::Stopwatch;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(),
+                    "run `make artifacts` first");
+
+    // --- Table 1: the xnor <-> multiply equivalence ------------------------
+    let mut t1 = Table::new(
+        "Table 1 — xnor(encodings) == multiply(values)",
+        &["enc a (val)", "enc b (val)", "xnor (product)"],
+    );
+    for (ea, eb) in [(0u32, 0u32), (0, 1), (1, 0), (1, 1)] {
+        let (va, vb) = (2 * ea as i32 - 1, 2 * eb as i32 - 1);
+        let xnor = 1 ^ (ea ^ eb);
+        t1.row(&[
+            format!("{ea} ({va:+})"),
+            format!("{eb} ({vb:+})"),
+            format!("{xnor} ({:+})", va * vb),
+        ]);
+    }
+    t1.print();
+
+    // --- load model + data -------------------------------------------------
+    let engine = BnnEngine::load(dir.join("weights_small.bkw"))?;
+    let ds = Dataset::load(dir.join("dataset_test.bin"))?;
+    println!(
+        "loaded trained BNN ({} params) + {} test images",
+        engine.cfg.param_count(),
+        ds.count
+    );
+
+    // --- classify with every native arm ------------------------------------
+    let n = 6;
+    let x = ds.normalized(0, n);
+    let arms = [
+        EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Control,
+        EngineKernel::Optimized,
+    ];
+    let mut table = Table::new(
+        "Predictions per kernel arm (must agree)",
+        &["image", "truth", "xnor", "control", "optimized"],
+    );
+    let preds: Vec<Vec<usize>> =
+        arms.iter().map(|&k| engine.predict(&x, k)).collect();
+    for i in 0..n {
+        table.row(&[
+            format!("{i}"),
+            CLASS_NAMES[ds.labels[i] as usize].to_string(),
+            CLASS_NAMES[preds[0][i]].to_string(),
+            CLASS_NAMES[preds[1][i]].to_string(),
+            CLASS_NAMES[preds[2][i]].to_string(),
+        ]);
+    }
+    table.print();
+    assert_eq!(preds[0], preds[1]);
+    assert_eq!(preds[0], preds[2]);
+    println!("all native arms agree ✓");
+
+    // --- PJRT (AOT pallas/XLA) arms ----------------------------------------
+    let mut rt = Runtime::new(&dir)?;
+    let x1 = ds.normalized(0, 1);
+    let native = engine.forward(&x1, EngineKernel::Xnor(XnorImpl::Blocked));
+    println!("\nPJRT executables (jax/pallas AOT -> HLO text -> {}):",
+             rt.platform());
+    for variant in ["xnor", "control", "optimized"] {
+        let sw = Stopwatch::start();
+        let model = rt.load_by("small", variant, 1)?;
+        let compile_ms = sw.elapsed_ms();
+        let sw = Stopwatch::start();
+        let out = model.infer(&x1)?;
+        let diff = out.max_abs_diff(&native);
+        println!(
+            "  {variant:<10} compile {compile_ms:>7.1} ms   infer {:>7.2} ms   max|Δlogit| vs native = {diff:.2e}",
+            sw.elapsed_ms()
+        );
+        assert!(diff < 5e-3);
+    }
+    println!("PJRT arms agree with the native engine ✓");
+
+    // --- single-image timing ------------------------------------------------
+    println!("\nsingle-image native timing (small model):");
+    for &kernel in &arms {
+        let sw = Stopwatch::start();
+        let iters = 10;
+        for _ in 0..iters {
+            std::hint::black_box(engine.forward(&x1, kernel));
+        }
+        println!(
+            "  {:<16} {:>8.2} ms/image",
+            kernel.name(),
+            sw.elapsed_ms() / iters as f64
+        );
+    }
+    println!("\nquickstart done — see examples/table2.rs for the paper's \
+              headline experiment");
+    Ok(())
+}

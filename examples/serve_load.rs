@@ -1,0 +1,218 @@
+//! End-to-end serving driver (the DESIGN.md §7 "E2E serving" row).
+//!
+//! Boots the full request path — HTTP server -> router -> dynamic
+//! batcher -> trained BNN on the native xnor kernel — then fires a
+//! multi-client closed-loop load generator at it over real TCP and
+//! reports throughput, latency percentiles, batching behaviour and
+//! prediction accuracy.  Proves every layer composes with python
+//! nowhere on the path.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_load`
+//! Flags: `-- --requests N` (default 256), `-- --clients C` (default 8),
+//!        `-- --backend pjrt-xnor|native-xnor` (default native-xnor)
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use bitkernel::benchkit::Table;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, NativeBackend, PjrtBackend, Router, RouterConfig,
+};
+use bitkernel::data::Dataset;
+use bitkernel::model::BnnEngine;
+use bitkernel::runtime::Runtime;
+use bitkernel::server::{serve, ServeOptions, Service};
+use bitkernel::utils::timer::{mean, percentile};
+use bitkernel::utils::Stopwatch;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize =
+        flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let clients: usize =
+        flag(&args, "--clients").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let backend_kind =
+        flag(&args, "--backend").unwrap_or_else(|| "native-xnor".into());
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(),
+                    "run `make artifacts` first");
+    let ds = Arc::new(Dataset::load(dir.join("dataset_test.bin"))?);
+
+    // --- boot the service ----------------------------------------------------
+    let weights = dir.join("weights_small.bkw");
+    let artifacts = dir.clone();
+    let bk = backend_kind.clone();
+    let router = Router::start(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            match bk.as_str() {
+                "native-xnor" => {
+                    let engine = Arc::new(BnnEngine::load(&weights)?);
+                    Ok(Box::new(NativeBackend::xnor(engine, 8)))
+                }
+                "pjrt-xnor" => {
+                    let mut rt = Runtime::new(&artifacts)?;
+                    let name = rt
+                        .manifest
+                        .find_model("small", "xnor", 8)?
+                        .name
+                        .clone();
+                    rt.load_model(&name)?;
+                    Ok(Box::new(PjrtBackend::new(rt.take_model(&name)?)))
+                }
+                other => anyhow::bail!("unknown backend '{other}'"),
+            }
+        },
+        RouterConfig {
+            queue_cap: 512,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(4),
+            },
+        },
+    )?;
+    let backend_name = router.backend_name().to_string();
+    let metrics = router.metrics();
+    let mut routers = BTreeMap::new();
+    routers.insert("bnn".to_string(), router);
+    let service = Arc::new(Service::new(routers, "bnn"));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let svc2 = Arc::clone(&service);
+    let stop2 = Arc::clone(&stop);
+    let server = std::thread::spawn(move || {
+        serve(
+            svc2,
+            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 8 },
+            stop2,
+            Some(ready_tx),
+        )
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(15))?;
+    println!("serving BNN on http://{addr} (backend {backend_name}, \
+              max_batch 8, max_delay 4ms)");
+
+    // --- closed-loop load generator ------------------------------------------
+    println!("load: {clients} clients x {} requests each",
+             requests / clients);
+    let next = Arc::new(AtomicUsize::new(0));
+    let correct = Arc::new(AtomicUsize::new(0));
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    let mut all_latencies: Vec<Vec<f64>> = Vec::new();
+    for _ in 0..clients {
+        let ds = Arc::clone(&ds);
+        let next = Arc::clone(&next);
+        let correct = Arc::clone(&correct);
+        let addr = addr;
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut latencies = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= requests {
+                    return latencies;
+                }
+                let idx = i % ds.count;
+                let sw = Stopwatch::start();
+                let (status, body) =
+                    http_post(&addr, "/classify", ds.image(idx));
+                latencies.push(sw.elapsed_ms());
+                assert_eq!(status, 200, "{body}");
+                let v = bitkernel::utils::json::Json::parse(&body).unwrap();
+                let class = v.get("class").unwrap().as_usize().unwrap();
+                if class == ds.labels[idx] as usize {
+                    correct.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        all_latencies.push(h.join().unwrap());
+    }
+    let wall = sw.elapsed_secs();
+
+    // --- report ---------------------------------------------------------------
+    let lat: Vec<f64> = all_latencies.into_iter().flatten().collect();
+    let snap = metrics.snapshot();
+    let mut t = Table::new(
+        "End-to-end serving (HTTP -> batcher -> BNN xnor kernel)",
+        &["metric", "value"],
+    );
+    t.row(&["backend".into(), backend_name]);
+    t.row(&["requests".into(), format!("{requests}")]);
+    t.row(&["concurrent clients".into(), format!("{clients}")]);
+    t.row(&["wall time".into(), format!("{wall:.2}s")]);
+    t.row(&["throughput".into(),
+            format!("{:.1} req/s", requests as f64 / wall)]);
+    t.row(&["latency mean".into(), format!("{:.2} ms", mean(&lat))]);
+    t.row(&["latency p50".into(),
+            format!("{:.2} ms", percentile(&lat, 0.50))]);
+    t.row(&["latency p95".into(),
+            format!("{:.2} ms", percentile(&lat, 0.95))]);
+    t.row(&["latency p99".into(),
+            format!("{:.2} ms", percentile(&lat, 0.99))]);
+    t.row(&["server batches".into(), format!("{}", snap.batches)]);
+    t.row(&["mean batch size".into(),
+            format!("{:.2}", snap.mean_batch_size)]);
+    t.row(&["queue p99".into(),
+            format!("{:.2} ms", snap.queue_p99_us as f64 / 1e3)]);
+    t.row(&["accuracy".into(),
+            format!("{:.1}%",
+                    100.0 * correct.load(Ordering::SeqCst) as f64
+                        / requests as f64)]);
+    t.print();
+
+    assert_eq!(snap.completed as usize, requests);
+    assert!(correct.load(Ordering::SeqCst) as f64 / requests as f64 > 0.9,
+            "served predictions should match labels");
+    assert!(snap.mean_batch_size > 1.0,
+            "dynamic batching should form multi-request batches");
+    println!("end-to-end path verified ✓");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap()?;
+    Ok(())
+}
+
+// --- minimal HTTP client ----------------------------------------------------
+
+fn http_post(addr: &std::net::SocketAddr, path: &str, body: &[u8]) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    stream.write_all(body).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}

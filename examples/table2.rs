@@ -1,0 +1,53 @@
+//! Regenerate the paper's Table 2 (the headline experiment).
+//!
+//! Run: `make artifacts && cargo run --release --example table2`
+//! Flags: `-- --quick` for a fast low-sample pass,
+//!        `-- --weights small` to use the trained small model instead of
+//!        the full-scale network.
+
+use anyhow::Result;
+
+use bitkernel::benchkit::table2::{run, Table2Options};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let weights = args
+        .iter()
+        .position(|a| a == "--weights")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "full".to_string());
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(),
+                    "run `make artifacts` first");
+
+    let opts = if quick {
+        Table2Options {
+            native_images: 4,
+            native_control_images: 1,
+            pjrt_batches: 1,
+            weights,
+        }
+    } else {
+        Table2Options { weights, ..Default::default() }
+    };
+
+    println!("testbed: {} (single-node CPU; see DESIGN.md §5 for the \
+              column substitutions)", std::env::consts::ARCH);
+    let result = run(&dir, &opts, |line| println!("{line}"))?;
+    println!("{}", result.render());
+
+    // The reproduction claim: orderings, not absolute seconds.
+    assert!(
+        result.native_speedup() > 1.5,
+        "native xnor should beat the control group comfortably"
+    );
+    assert!(
+        result.pjrt_speedup() > 1.0,
+        "pjrt xnor should beat the pallas control group"
+    );
+    println!("orderings consistent with the paper ✓");
+    Ok(())
+}

@@ -1,0 +1,271 @@
+"""AOT pipeline: dataset -> training -> HLO-text artifacts + manifest.
+
+Emits everything the rust layer needs into artifacts/:
+
+  dataset_test.bin / dataset_train.bin   BKD1 ShapeSet-10 splits
+  weights_small.bkw                      trained  BNN (scale 0.25)
+  weights_full.bkw                       random-init BNN (scale 1.0; Table-2
+                                         timing does not need trained weights)
+  bnn_<scale>_<variant>_b<batch>.hlo.txt whole-model inference executables
+  k_<kernel>_<layer>.hlo.txt             kernel-level micro executables
+  manifest.json                          input arg order/shapes/transforms
+  train_log.txt                          loss curve of the build-time training
+
+HLO *text* is the interchange format — jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  Weights are runtime ARGUMENTS, not baked constants, so one HLO
+serves any checkpoint and the text stays small.
+
+Run via `make artifacts`; idempotent at the Makefile level (stamp deps).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model, train
+
+SCALES = {"small": 0.25, "full": 1.0}
+BATCHES = {"small": (1, 8, 32), "full": (1, 8)}
+TEST_N = 10_000   # matches the CIFAR-10 test split the paper times
+TRAIN_N = 4_096
+TRAIN_STEPS = 400
+TRAIN_BATCH = 64
+TRAIN_LR = 3e-3
+
+# Kernel micro-bench shapes: (tag, D, K, N) — real gemm shapes of the
+# full-scale BNN at batch 1 (conv) / batch 8 (fc1).
+KERNEL_SHAPES = [
+    ("conv2", 128, 1152, 1024),
+    ("conv4", 256, 2304, 256),
+    ("conv6", 512, 4608, 64),
+    ("fc1b8", 1024, 8192, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text (return_tuple=True; see module doc)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# manifest input descriptors
+# ---------------------------------------------------------------------------
+
+def _dtype_tag(x) -> str:
+    return {jnp.float32.dtype: "f32", jnp.uint32.dtype: "u32"}[x.dtype]
+
+
+def input_descriptors(cfg: model.ModelConfig, params, x) -> list:
+    """Describe every flattened HLO parameter of fn(params, x), in order.
+
+    Each descriptor tells rust how to build the argument literal from the
+    BKW1 weight file:
+      transform "none"       -> load tensor `source` as-is
+      transform "pack_rows"  -> reshape [D, ...] -> [D, K], sign, bit-pack
+      kind "image"           -> the request batch (not from the bkw)
+    """
+    logical_k = {s.name: s.k for s in cfg.conv_specs}
+    logical_k.update({s.name: s.din for s in cfg.fc_specs})
+
+    leaves = jax.tree_util.tree_flatten_with_path((params, x))[0]
+    descs = []
+    for path, leaf in leaves:
+        idx = path[0].idx
+        if idx == 1:  # the image input
+            descs.append({"name": "x", "kind": "image",
+                          "dtype": _dtype_tag(leaf),
+                          "shape": list(leaf.shape), "transform": "none",
+                          "source": None})
+            continue
+        layer = path[1].key
+        field = path[2].key
+        if field == "wp":
+            descs.append({"name": f"{layer}.wp", "kind": "weight",
+                          "dtype": "u32", "shape": list(leaf.shape),
+                          "transform": "pack_rows",
+                          "source": f"{layer}.w",
+                          "logical_k": logical_k[layer]})
+        elif field == "w":
+            descs.append({"name": f"{layer}.w", "kind": "weight",
+                          "dtype": "f32", "shape": list(leaf.shape),
+                          "transform": "none", "source": f"{layer}.w"})
+        else:  # bn a / b
+            descs.append({"name": f"{layer}.{field}", "kind": "weight",
+                          "dtype": "f32", "shape": list(leaf.shape),
+                          "transform": "none", "source": f"{layer}.{field}"})
+    return descs
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def lower_model(cfg: model.ModelConfig, variant: str, batch: int,
+                out_path: str) -> list:
+    """Lower one (variant, batch) inference graph; returns input descs."""
+    params = model.binarize_params(model.init_params(cfg, seed=0))
+    if variant == "xnor":
+        params = model.pack_params(cfg, params)
+    x = jnp.zeros((batch, model.IMAGE_C, model.IMAGE_HW, model.IMAGE_HW),
+                  jnp.float32)
+    specs = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), (params, x))
+    fn = model.make_inference_fn(cfg, variant)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return input_descriptors(cfg, params, x)
+
+
+def lower_kernel(kernel: str, d: int, k: int, n: int, out_path: str) -> dict:
+    """Lower one micro gemm executable (for PJRT-arm kernel benches)."""
+    kw = (k + 31) // 32
+    if kernel == "xnor":
+        from .kernels.xnor_gemm import xnor_gemm
+        fn = lambda wp, xp: xnor_gemm(wp, xp, k)  # noqa: E731
+        specs = (jax.ShapeDtypeStruct((d, kw), jnp.uint32),
+                 jax.ShapeDtypeStruct((kw, n), jnp.uint32))
+        inputs = [{"dtype": "u32", "shape": [d, kw]},
+                  {"dtype": "u32", "shape": [kw, n]}]
+    elif kernel == "control":
+        from .kernels.gemm import gemm_f32
+        fn = gemm_f32
+        specs = (jax.ShapeDtypeStruct((d, k), jnp.float32),
+                 jax.ShapeDtypeStruct((k, n), jnp.float32))
+        inputs = [{"dtype": "f32", "shape": [d, k]},
+                  {"dtype": "f32", "shape": [k, n]}]
+    elif kernel == "optimized":
+        fn = jnp.matmul
+        specs = (jax.ShapeDtypeStruct((d, k), jnp.float32),
+                 jax.ShapeDtypeStruct((k, n), jnp.float32))
+        inputs = [{"dtype": "f32", "shape": [d, k]},
+                  {"dtype": "f32", "shape": [k, n]}]
+    else:
+        raise ValueError(kernel)
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(out_path, "w") as f:
+        f.write(text)
+    return {"kernel": kernel, "d": d, "k": k, "n": n, "inputs": inputs}
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, quick: bool = False, log=print) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"format": 1, "models": [], "kernels": [],
+                      "weights": {}, "datasets": {}}
+
+    # 1. datasets ----------------------------------------------------------
+    test_n = 256 if quick else TEST_N
+    train_n = 256 if quick else TRAIN_N
+    log(f"[aot] generating ShapeSet-10: test={test_n} train={train_n}")
+    imgs_te, labels_te = dataset.make_split(test_n, seed=1000)
+    dataset.save_bkd(os.path.join(out_dir, "dataset_test.bin"),
+                     imgs_te, labels_te)
+    imgs_tr, labels_tr = dataset.make_split(train_n, seed=2000)
+    dataset.save_bkd(os.path.join(out_dir, "dataset_train.bin"),
+                     imgs_tr, labels_tr)
+    manifest["datasets"] = {
+        "test": {"file": "dataset_test.bin", "count": test_n},
+        "train": {"file": "dataset_train.bin", "count": train_n},
+    }
+
+    # 2. training (small model) -------------------------------------------
+    steps = 20 if quick else TRAIN_STEPS
+    cfg_small = model.ModelConfig(scale=SCALES["small"])
+    log(f"[aot] training small BNN ({cfg_small.param_count():,} params, "
+        f"{steps} steps)")
+    t0 = time.time()
+    lines = []
+    tp, running, hist = train.train(
+        cfg_small, steps=steps, batch=TRAIN_BATCH, lr=TRAIN_LR,
+        train_n=train_n, seed=0, log_every=25,
+        log=lambda s: (lines.append(s), log("  " + s)))
+    params_small = model.fold_bn(tp, running)
+    acc = train.eval_accuracy(cfg_small, params_small, imgs_te[:512],
+                              labels_te[:512])
+    log(f"[aot] trained in {time.time() - t0:.0f}s, test accuracy {acc:.3f}")
+    with open(os.path.join(out_dir, "train_log.txt"), "w") as f:
+        f.write("\n".join(lines) + f"\ntest_acc {acc:.4f}\n")
+        f.write("".join(f"{i} {l:.5f} {a:.4f}\n" for i, l, a in hist))
+    train.save_bkw(os.path.join(out_dir, "weights_small.bkw"),
+                   cfg_small, params_small)
+
+    cfg_full = model.ModelConfig(scale=SCALES["full"])
+    params_full = model.binarize_params(model.init_params(cfg_full, seed=0))
+    train.save_bkw(os.path.join(out_dir, "weights_full.bkw"),
+                   cfg_full, params_full)
+    manifest["weights"] = {
+        "small": {"file": "weights_small.bkw", "scale": SCALES["small"],
+                  "trained": True, "test_acc": acc},
+        "full": {"file": "weights_full.bkw", "scale": SCALES["full"],
+                 "trained": False},
+    }
+
+    # 3. whole-model HLOs ---------------------------------------------------
+    scales = {"small": SCALES["small"]} if quick else SCALES
+    for sname, scale in scales.items():
+        cfg = model.ModelConfig(scale=scale)
+        batches = (1,) if quick else BATCHES[sname]
+        for variant in model.VARIANTS:
+            for batch in batches:
+                name = f"bnn_{sname}_{variant}_b{batch}"
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                t0 = time.time()
+                descs = lower_model(cfg, variant, batch, path)
+                log(f"[aot] lowered {name} "
+                    f"({os.path.getsize(path) // 1024} KiB, "
+                    f"{time.time() - t0:.1f}s)")
+                manifest["models"].append({
+                    "name": name, "file": f"{name}.hlo.txt",
+                    "variant": variant, "scale": scale, "batch": batch,
+                    "weights": sname,
+                    "inputs": descs,
+                    "output": {"dtype": "f32",
+                               "shape": [batch, model.NUM_CLASSES]},
+                })
+
+    # 4. kernel micro HLOs --------------------------------------------------
+    kshapes = KERNEL_SHAPES[:1] if quick else KERNEL_SHAPES
+    for tag, d, k, n in kshapes:
+        for kernel in ("xnor", "control", "optimized"):
+            name = f"k_{kernel}_{tag}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            info = lower_kernel(kernel, d, k, n, path)
+            info.update({"name": name, "file": f"{name}.hlo.txt",
+                         "tag": tag, "logical_k": k})
+            manifest["kernels"].append(info)
+            log(f"[aot] lowered {name}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"[aot] wrote manifest with {len(manifest['models'])} models, "
+        f"{len(manifest['kernels'])} kernels")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--quick", action="store_true",
+                   help="tiny build for CI/tests")
+    args = p.parse_args()
+    build(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

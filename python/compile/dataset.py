@@ -1,0 +1,130 @@
+"""ShapeSet-10 — procedural CIFAR-10 stand-in (DESIGN.md §5).
+
+The paper times BNN inference on the CIFAR-10 *test set*; inference speed
+depends only on tensor shapes, which ShapeSet-10 matches exactly
+(32x32x3 uint8, 10 classes, 50k train / 10k test).  Accuracy-parity
+experiments (the paper's 89%-on-CIFAR-10 citation) run on this dataset
+instead.
+
+Classes (procedurally drawn, random color/position/size/noise):
+  0 circle   1 square   2 triangle  3 cross      4 ring
+  5 h-stripe 6 v-stripe 7 checker   8 dot-grid   9 diag-gradient
+
+Binary export format "BKD1" (mirrored by rust/src/data/):
+  magic  b"BKD1"
+  u32le  count, height, width, channels
+  count * { u8 label, h*w*c u8 pixels (HWC row-major) }
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+H = W = 32
+C = 3
+NUM_CLASSES = 10
+CLASS_NAMES = [
+    "circle", "square", "triangle", "cross", "ring",
+    "h-stripe", "v-stripe", "checker", "dot-grid", "diag-gradient",
+]
+
+_YY, _XX = np.mgrid[0:H, 0:W].astype(np.float32)
+
+
+def _draw(label: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one HxWx1 float mask in [0,1] for the given class."""
+    cy = rng.uniform(10, 22)
+    cx = rng.uniform(10, 22)
+    r = rng.uniform(6, 12)
+    yy, xx = _YY - cy, _XX - cx
+    if label == 0:    # circle
+        m = (yy * yy + xx * xx) <= r * r
+    elif label == 1:  # square
+        m = (np.abs(yy) <= r * 0.8) & (np.abs(xx) <= r * 0.8)
+    elif label == 2:  # triangle (upward)
+        m = (yy <= r * 0.7) & (yy >= -r * 0.7) & \
+            (np.abs(xx) <= (yy + r * 0.7) * 0.6)
+    elif label == 3:  # cross
+        t = r * 0.3
+        m = (np.abs(yy) <= t) | (np.abs(xx) <= t)
+        m &= (np.abs(yy) <= r) & (np.abs(xx) <= r)
+    elif label == 4:  # ring
+        d2 = yy * yy + xx * xx
+        m = (d2 <= r * r) & (d2 >= (r * 0.55) ** 2)
+    elif label == 5:  # horizontal stripes
+        p = rng.integers(3, 6)
+        m = ((_YY.astype(np.int32) // p) % 2) == 0
+    elif label == 6:  # vertical stripes
+        p = rng.integers(3, 6)
+        m = ((_XX.astype(np.int32) // p) % 2) == 0
+    elif label == 7:  # checkerboard
+        p = rng.integers(3, 6)
+        m = (((_YY.astype(np.int32) // p) +
+              (_XX.astype(np.int32) // p)) % 2) == 0
+    elif label == 8:  # dot grid
+        p = rng.integers(5, 8)
+        m = ((_YY.astype(np.int32) % p) < 2) & ((_XX.astype(np.int32) % p) < 2)
+    elif label == 9:  # diagonal gradient (no mask; handled below)
+        g = (_YY + _XX) / (H + W - 2)
+        if rng.random() < 0.5:
+            g = 1.0 - g
+        return g
+    else:
+        raise ValueError(label)
+    return m.astype(np.float32)
+
+
+def make_image(label: int, rng: np.random.Generator) -> np.ndarray:
+    """One HxWxC uint8 image for `label`."""
+    fg = rng.uniform(0.55, 1.0, size=3)
+    bg = rng.uniform(0.0, 0.45, size=3)
+    if rng.random() < 0.3:  # sometimes dark-on-light
+        fg, bg = bg, fg
+    mask = _draw(label, rng)[:, :, None]
+    img = mask * fg[None, None, :] + (1.0 - mask) * bg[None, None, :]
+    img = img + rng.normal(0.0, 0.06, size=img.shape)
+    return (np.clip(img, 0.0, 1.0) * 255.0).astype(np.uint8)
+
+
+def make_split(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate n images/labels with a balanced class distribution."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    imgs = np.stack([make_image(int(l), rng) for l in labels])
+    return imgs, labels.astype(np.uint8)
+
+
+def normalize(imgs: np.ndarray) -> np.ndarray:
+    """uint8 HWC batch -> float32 NCHW in [-1, 1] (the model's input)."""
+    x = imgs.astype(np.float32) / 127.5 - 1.0
+    return np.ascontiguousarray(x.transpose(0, 3, 1, 2))
+
+
+def save_bkd(path: str, imgs: np.ndarray, labels: np.ndarray) -> None:
+    """Write the BKD1 binary format consumed by rust/src/data/."""
+    n, h, w, c = imgs.shape
+    assert labels.shape == (n,)
+    with open(path, "wb") as f:
+        f.write(b"BKD1")
+        f.write(struct.pack("<IIII", n, h, w, c))
+        for i in range(n):
+            f.write(struct.pack("<B", int(labels[i])))
+            f.write(imgs[i].tobytes())
+
+
+def load_bkd(path: str) -> tuple[np.ndarray, np.ndarray]:
+    """Read a BKD1 file back (used by tests for round-trip checks)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == b"BKD1", magic
+        n, h, w, c = struct.unpack("<IIII", f.read(16))
+        imgs = np.empty((n, h, w, c), np.uint8)
+        labels = np.empty((n,), np.uint8)
+        for i in range(n):
+            labels[i] = struct.unpack("<B", f.read(1))[0]
+            imgs[i] = np.frombuffer(f.read(h * w * c),
+                                    np.uint8).reshape(h, w, c)
+    return imgs, labels

@@ -1,0 +1,5 @@
+"""BitKernel L1 kernels: Pallas xnor-bitcount compute + pure-jnp oracles."""
+
+from . import binconv, gemm, pack, ref, xnor_gemm  # noqa: F401
+
+__all__ = ["binconv", "gemm", "pack", "ref", "xnor_gemm"]

@@ -1,0 +1,74 @@
+"""Pallas control-group gemm — the paper's Sec. 4.3 baseline.
+
+The paper's control group is the SAME im2col forward graph with a plain
+float-32 Gemm-Accumulation and *no vendor library* (no cuDNN/MKL).  To
+keep that property here, the tile product is computed as an explicit
+broadcast-multiply-reduce (one MAC per logical element) rather than
+`jnp.dot`, so XLA cannot substitute its optimized dot emitter for the
+inner product — this is the float kernel the xnor kernel is measured
+against, with identical tiling/grid structure so the only difference is
+the arithmetic (32 f32 MACs vs 1 xnor + 1 popcount per 32 elements).
+
+interpret=True: see DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_D = 128
+_BLOCK_N = 128
+_BLOCK_K = 256  # logical (unpacked) reduction elements per step
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step of the naive float gemm."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]                                    # [bd, bk] f32
+    b = b_ref[...]                                    # [bk, bn] f32
+    # Naive MAC loop, vectorized but not dot-fused: mirrors the control
+    # group's un-optimized Gemm-Accumulation.
+    o_ref[...] += jnp.sum(a[:, :, None] * b[None, :, :], axis=1)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "block_k"))
+def gemm_f32(a: jax.Array, b: jax.Array, *, block_d: int = _BLOCK_D,
+             block_n: int = _BLOCK_N, block_k: int = _BLOCK_K) -> jax.Array:
+    """Control-group float gemm: f32 [D, K] x f32 [K, N] -> f32 [D, N]."""
+    d, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+
+    bd = min(block_d, max(d, 1))
+    bn = min(block_n, max(n, 1))
+    bk = min(block_k, max(k, 1))
+    dp, np_, kp = _ceil_to(d, bd), _ceil_to(n, bn), _ceil_to(k, bk)
+
+    if (dp, kp) != (d, k):
+        a = jnp.pad(a, ((0, dp - d), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(dp // bd, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bd, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, np_), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:d, :n]

@@ -1,0 +1,110 @@
+"""Pallas encode kernels: float tensors -> 1-bit packed uint32 matrices.
+
+This is the paper's Sec. 3.1 'Encoding' step, rethought for TPU:
+
+  * the paper encodes with a CUDA thread per output word; here a Pallas
+    grid program owns a (rows x words) VMEM tile and produces all its
+    words with vectorized shift-accumulate on the VPU,
+  * bit i of word w encodes logical reduction index w*32 + i (little
+    endian), encoding 1 <=> value +1 — identical to ref.py and to
+    rust/src/bitops/.
+
+Both kernels run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import WORD, padded_k
+
+# Default tile sizes.  A pack tile touches bd*WORD*bw f32 in + bd*bw u32
+# out; with bd=256, bw=8 that is 256*256*4 B = 256 KiB in / 8 KiB out —
+# comfortably inside a 16 MiB VMEM budget together with double buffering.
+_BLOCK_ROWS = 256
+_BLOCK_WORDS = 8
+
+
+def _pack_rows_kernel(x_ref, o_ref):
+    """One grid step packs a [bd, bw*WORD] f32 tile -> [bd, bw] u32 tile."""
+    x = x_ref[...]                                   # [bd, bw*WORD] f32
+    bd, kb = x.shape
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(bd, kb // WORD, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(bits << shifts[None, None, :], axis=-1,
+                         dtype=jnp.uint32)
+
+
+def _pack_cols_kernel(x_ref, o_ref):
+    """One grid step packs a [bw*WORD, bn] f32 tile -> [bw, bn] u32 tile."""
+    x = x_ref[...]                                   # [bw*WORD, bn] f32
+    kb, bn = x.shape
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = bits.reshape(kb // WORD, WORD, bn)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(bits << shifts[None, :, None], axis=1,
+                         dtype=jnp.uint32)
+
+
+def _pad_to(x: jax.Array, axis: int, size: int, value: float) -> jax.Array:
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - cur)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_words"))
+def pack_rows(w: jax.Array, *, block_rows: int = _BLOCK_ROWS,
+              block_words: int = _BLOCK_WORDS) -> jax.Array:
+    """Pack float [D, K] row-wise into uint32 [D, ceil(K/32)] via Pallas.
+
+    K is padded to a multiple of 32 with value -1 (encoding 0); D and the
+    word count are padded to the tile grid and cropped back afterwards.
+    """
+    d, k = w.shape
+    kw = padded_k(k) // WORD
+    bd = min(block_rows, max(d, 1))
+    bw = min(block_words, max(kw, 1))
+    dp = -(-d // bd) * bd
+    kwp = -(-kw // bw) * bw
+    # Pad: rows with anything (cropped), K with -1 so padding encodes 0.
+    wp = _pad_to(_pad_to(w, 1, kwp * WORD, -1.0), 0, dp, -1.0)
+    out = pl.pallas_call(
+        _pack_rows_kernel,
+        grid=(dp // bd, kwp // bw),
+        in_specs=[pl.BlockSpec((bd, bw * WORD), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bd, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, kwp), jnp.uint32),
+        interpret=True,
+    )(wp)
+    return out[:d, :kw]
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "block_cols"))
+def pack_cols(x: jax.Array, *, block_words: int = _BLOCK_WORDS,
+              block_cols: int = _BLOCK_ROWS) -> jax.Array:
+    """Pack float [K, N] column-wise into uint32 [ceil(K/32), N] via Pallas."""
+    k, n = x.shape
+    kw = padded_k(k) // WORD
+    bw = min(block_words, max(kw, 1))
+    bn = min(block_cols, max(n, 1))
+    kwp = -(-kw // bw) * bw
+    np_ = -(-n // bn) * bn
+    xp = _pad_to(_pad_to(x, 0, kwp * WORD, -1.0), 1, np_, -1.0)
+    out = pl.pallas_call(
+        _pack_cols_kernel,
+        grid=(kwp // bw, np_ // bn),
+        in_specs=[pl.BlockSpec((bw * WORD, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bw, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((kwp, np_), jnp.uint32),
+        interpret=True,
+    )(xp)
+    return out[:kw, :n]

@@ -1,0 +1,205 @@
+"""Pure-jnp correctness oracles for the BitKernel L1 kernels.
+
+Everything here is deliberately simple, un-tiled jnp so it can serve as the
+ground truth the Pallas kernels (pack.py / xnor_gemm.py / gemm.py /
+binconv.py) are tested against.  The chain of trust is:
+
+    float matmul on {-1,+1} values            (mathematical ground truth)
+      == xnor_gemm_packed_ref (this file)     (packed-domain oracle)
+      == pallas xnor_gemm                     (the kernel under test)
+
+Bit-packing convention (must match rust/src/bitops/):
+  * sign(x) = +1 if x >= 0 else -1
+  * encoding: bit 1 <=> value +1, bit 0 <=> value -1
+  * little-endian bit order: bit i of word w encodes logical index w*32+i
+  * the reduction axis K is padded up to a multiple of 32 with encoding 0
+    (value -1) on BOTH operands; each padded position contributes
+    xnor = 1 -> +1 to the popcount sum, so the packed gemm subtracts n_pad.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+WORD = 32  # bits per packed word (uint32)
+
+
+# ---------------------------------------------------------------------------
+# sign / binarize
+# ---------------------------------------------------------------------------
+
+def sign(x: jax.Array) -> jax.Array:
+    """Deterministic binarization: sign(x) in {-1.0, +1.0}, sign(0) = +1.
+
+    This is the paper's 'Deterministic Binarization' (Sec. 4.2); mapping 0
+    to +1 keeps the value domain bijective with the bit encoding below.
+    """
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def encode_bits(x: jax.Array) -> jax.Array:
+    """Value domain -> encoding domain: {-1,+1} (or any float) -> {0,1} u32."""
+    return (x >= 0).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# bit packing
+# ---------------------------------------------------------------------------
+
+def padded_k(k: int) -> int:
+    """K rounded up to a multiple of the word size."""
+    return (k + WORD - 1) // WORD * WORD
+
+
+def pack_rows_ref(w: jax.Array) -> jax.Array:
+    """Pack a float [D, K] matrix row-wise into uint32 [D, ceil(K/32)].
+
+    The paper packs the weight matrix 'in the direction of rows'
+    (Sec. 3.1): consecutive elements of a row share a word.  Padding
+    positions (K..Kpad) get encoding 0 (value -1).
+    """
+    d, k = w.shape
+    kp = padded_k(k)
+    bits = encode_bits(w)
+    if kp != k:
+        bits = jnp.pad(bits, ((0, 0), (0, kp - k)))
+    bits = bits.reshape(d, kp // WORD, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def pack_cols_ref(x: jax.Array) -> jax.Array:
+    """Pack a float [K, N] matrix column-wise into uint32 [ceil(K/32), N].
+
+    The im2col'd input is packed 'in the direction of columns' (Sec. 3.1):
+    consecutive elements of a column share a word.
+    """
+    k, n = x.shape
+    kp = padded_k(k)
+    bits = encode_bits(x)
+    if kp != k:
+        bits = jnp.pad(bits, ((0, kp - k), (0, 0)))
+    bits = bits.reshape(kp // WORD, WORD, n)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[None, :, None], axis=1, dtype=jnp.uint32)
+
+
+def unpack_rows_ref(wp: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_rows_ref back to the value domain {-1,+1} f32."""
+    d, kw = wp.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (wp[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    vals = bits.reshape(d, kw * WORD)[:, :k].astype(jnp.float32)
+    return vals * 2.0 - 1.0
+
+
+def unpack_cols_ref(xp: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_cols_ref back to the value domain {-1,+1} f32."""
+    kw, n = xp.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (xp[:, None, :] >> shifts[None, :, None]) & jnp.uint32(1)
+    vals = bits.reshape(kw * WORD, n)[:k, :].astype(jnp.float32)
+    return vals * 2.0 - 1.0
+
+
+# ---------------------------------------------------------------------------
+# gemm oracles
+# ---------------------------------------------------------------------------
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain float matmul — ground truth for both kernels."""
+    return jnp.matmul(a, b)
+
+
+def xnor_gemm_packed_ref(wp: jax.Array, xp: jax.Array, k: int) -> jax.Array:
+    """Packed-domain oracle for the paper's Sec. 3.2 formula.
+
+    a[i,j] = sum_w ( 2 * popcount(~(wp[i,w] ^ xp[w,j])) - 32 ) - n_pad
+
+    with n_pad = Kpad - k correcting for the zero-encoded padding on both
+    operands (each padded bit xnors to 1 and would otherwise contribute +1).
+    Returns int32 [D, N]; exact (no float rounding).
+    """
+    kw = wp.shape[1]
+    assert xp.shape[0] == kw, (wp.shape, xp.shape)
+    n_pad = kw * WORD - k
+    xnor = jnp.bitwise_not(wp[:, :, None] ^ xp[None, :, :])  # [D, Kw, N]
+    pc = lax.population_count(xnor).astype(jnp.int32)
+    return jnp.sum(2 * pc - WORD, axis=1) - jnp.int32(n_pad)
+
+
+def xnor_gemm_value_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Value-domain reference: binarize then float-matmul. [D,K] x [K,N]."""
+    return jnp.matmul(sign(w), sign(x))
+
+
+# ---------------------------------------------------------------------------
+# im2col / conv oracles (Figure 1 / Figure 2 / Figure 3 of the paper)
+# ---------------------------------------------------------------------------
+
+def im2col_ref(x: jax.Array, kh: int, kw: int, stride: int = 1,
+               pad: int = 0) -> jax.Array:
+    """im2col for NCHW input [B, C, H, W] -> [C*kh*kw, B*OH*OW].
+
+    Patch-row layout ordered (c, i, j) to match
+    lax.conv_general_dilated_patches and the rust implementation; the
+    column index is ordered (b, oh, ow).
+    """
+    b, c, h, w = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for ci in range(c):
+        for i in range(kh):
+            for j in range(kw):
+                patch = x[:, ci, i:i + (oh - 1) * stride + 1:stride,
+                          j:j + (ow - 1) * stride + 1:stride]
+                cols.append(patch.reshape(b * oh * ow))
+    return jnp.stack(cols, axis=0)  # [C*kh*kw, B*OH*OW]
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               pad: int = 0) -> jax.Array:
+    """Direct convolution oracle via lax.conv. x:[B,C,H,W], w:[D,C,kh,kw]."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_im2col_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+                      pad: int = 0) -> jax.Array:
+    """Figure-2 forward graph: im2col -> gemm -> col2im(reshape)."""
+    b, c, h, wd = x.shape
+    d, _, kh, kw = w.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    cols = im2col_ref(x, kh, kw, stride, pad)          # [K, B*OH*OW]
+    wmat = w.reshape(d, c * kh * kw)                   # [D, K]
+    out = gemm_ref(wmat, cols)                         # [D, B*OH*OW]
+    return out.reshape(d, b, oh, ow).transpose(1, 0, 2, 3)
+
+
+def binconv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+                  pad: int = 0) -> jax.Array:
+    """Figure-3 forward graph oracle, value domain.
+
+    Binarized convolution: im2col, then sign() both the column matrix and
+    the weight matrix, then float gemm.  NOTE on zero padding: spatial
+    padding inserts 0s which sign() maps to +1 — this is deliberate and
+    both the oracle and the packed kernels binarize the *padded* column
+    matrix, so they agree bit-for-bit.
+    """
+    b, c, h, wd = x.shape
+    d, _, kh, kw = w.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    cols = sign(im2col_ref(x, kh, kw, stride, pad))
+    wmat = sign(w.reshape(d, c * kh * kw))
+    out = gemm_ref(wmat, cols)
+    return out.reshape(d, b, oh, ow).transpose(1, 0, 2, 3)

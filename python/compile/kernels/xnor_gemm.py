@@ -1,0 +1,112 @@
+"""Pallas xnor-bitcount gemm — the paper's core kernel (Sec. 3.2).
+
+Computes, for packed uint32 operands wp [D, Kw] and xp [Kw, N],
+
+    a[i,j] = sum_w ( 2 * popcount(~(wp[i,w] ^ xp[w,j])) - 32 ) - n_pad
+
+which equals the float matmul of the underlying {-1,+1} matrices exactly
+(integer arithmetic, no rounding).
+
+TPU adaptation of the paper's CUDA kernel (DESIGN.md §3):
+  * the CUDA block/thread decomposition becomes a Pallas grid over
+    (D-tiles, N-tiles, K-tiles); `BlockSpec` index maps express the
+    HBM->VMEM schedule the paper expressed with threadblocks,
+  * `__popc()` becomes `lax.population_count`, an elementwise VPU op,
+  * the K reduction is the innermost grid dimension, accumulating into the
+    output tile kept resident in VMEM (revisited, not re-fetched),
+  * packing gives a 32x denser reduction: a [bd, bk] uint32 tile carries
+    bd*bk*32 logical elements.
+
+VMEM budget per grid step (defaults bd=bn=128, bk=8):
+    wp tile 128*8*4 B = 4 KiB, xp tile 8*128*4 B = 4 KiB,
+    xnor intermediate 128*8*128*4 B = 512 KiB, acc 128*128*4 B = 64 KiB
+  ~ 0.6 MiB total, far under 16 MiB — headroom for double buffering.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import WORD
+
+_BLOCK_D = 128
+_BLOCK_N = 128
+_BLOCK_K = 8  # packed words per reduction step = 256 logical elements
+
+
+def _xnor_gemm_kernel(wp_ref, xp_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += xnor-popcount(w[i,k], x[k,j])."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wp = wp_ref[...]                                  # [bd, bk] u32
+    xp = xp_ref[...]                                  # [bk, bn] u32
+    xnor = jnp.bitwise_not(wp[:, :, None] ^ xp[None, :, :])  # [bd, bk, bn]
+    pc = lax.population_count(xnor).astype(jnp.int32)
+    # sum_w (2*pc - 32)  ==  2 * sum_w pc - 32*bk   (hoist the affine part)
+    acc = 2 * jnp.sum(pc, axis=1) - jnp.int32(WORD * wp.shape[1])
+    o_ref[...] += acc
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_d", "block_n", "block_k"))
+def xnor_gemm(wp: jax.Array, xp: jax.Array, k: int, *,
+              block_d: int = _BLOCK_D, block_n: int = _BLOCK_N,
+              block_k: int = _BLOCK_K) -> jax.Array:
+    """Packed xnor gemm: uint32 [D, Kw] x uint32 [Kw, N] -> int32 [D, N].
+
+    `k` is the LOGICAL reduction length (before padding to a multiple of
+    32); the result subtracts the n_pad = Kw*32 - k correction for the
+    zero-encoded padding present on both operands.
+
+    Zero-padding of the D/N/Kw tile grid is folded into the same
+    correction: a padded K word is 0 on both operands, xnors to ~0
+    (popcount 32) and contributes 2*32 - 32 = +32 = +1 per bit, exactly
+    like the 32-alignment padding bits — all covered by n_pad below.
+    """
+    d, kw = wp.shape
+    kw2, n = xp.shape
+    assert kw == kw2, (wp.shape, xp.shape)
+    assert k <= kw * WORD, (k, kw)
+
+    bd = min(block_d, max(d, 1))
+    bn = min(block_n, max(n, 1))
+    bk = min(block_k, max(kw, 1))
+    dp, np_, kwp = _ceil_to(d, bd), _ceil_to(n, bn), _ceil_to(kw, bk)
+
+    if (dp, kwp) != (d, kw):
+        wp = jnp.pad(wp, ((0, dp - d), (0, kwp - kw)))
+    if (kwp, np_) != (kw, n):
+        xp = jnp.pad(xp, ((0, kwp - kw), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _xnor_gemm_kernel,
+        grid=(dp // bd, np_ // bn, kwp // bk),
+        in_specs=[
+            pl.BlockSpec((bd, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, np_), jnp.int32),
+        interpret=True,
+    )(wp, xp)
+
+    # Correction: every bit position beyond the logical k (both the
+    # 32-alignment padding inside the last real word range and the whole
+    # zero words added for grid alignment) is 0 on both operands, xnors to
+    # 1, and contributed +1 to the accumulated sum.
+    n_pad = kwp * WORD - k
+    out = out - jnp.int32(n_pad)
+    return out[:d, :n]

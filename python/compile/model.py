@@ -1,0 +1,360 @@
+"""L2: the Binarized Neural Network (Courbariaux et al. 2016) in JAX.
+
+This is the network of the paper's Sec. 4.2, width-scalable:
+
+    (2x 128C3) - MP2 - (2x 256C3) - MP2 - (2x 512C3) - MP2
+    - 1024FC - 1024FC - 10FC          (BatchNorm after every layer)
+
+All conv layers beyond the first, and all FC layers, carry {-1,+1}
+weights and consume {-1,+1} activations.  The first conv keeps the float
+input image (binarizing raw pixels destroys the signal; Courbariaux et
+al. treat the first layer in fixed point) — it is computed identically in
+every Table-2 arm, so the arms differ ONLY in the binarized-layer kernel:
+
+    variant "xnor"      — Pallas encode + xnor-bitcount  (Figure 3)
+    variant "control"   — Pallas naive f32 gemm          (Figure 2, Sec 4.3)
+    variant "optimized" — lax.conv / jnp.dot             ("PyTorch" row)
+
+Inference-time BatchNorm is folded to a per-channel affine (a, b); Htanh
+is omitted at inference because sign(htanh(x)) == sign(x) and every
+binarized layer re-binarizes its input internally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import binconv
+from .kernels.gemm import gemm_f32
+from .kernels.pack import pack_cols, pack_rows
+from .kernels.ref import sign
+from .kernels.xnor_gemm import xnor_gemm
+
+VARIANTS = ("xnor", "control", "optimized")
+NUM_CLASSES = 10
+IMAGE_HW = 32
+IMAGE_C = 3
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    cin: int
+    cout: int
+    ksize: int = 3
+    stride: int = 1
+    pad: int = 1
+    pool: bool = False       # 2x2 max-pool after the conv
+    binarized: bool = True   # False only for conv1 (float input)
+
+    @property
+    def k(self) -> int:
+        """Logical gemm reduction length K = C * kh * kw."""
+        return self.cin * self.ksize * self.ksize
+
+
+@dataclasses.dataclass(frozen=True)
+class FcSpec:
+    name: str
+    din: int
+    dout: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Width-scaled BNN; scale=1.0 is the paper's full network."""
+    scale: float = 1.0
+
+    def _c(self, w: int) -> int:
+        return max(8, int(round(w * self.scale)))
+
+    @property
+    def widths(self) -> List[int]:
+        return [self._c(128), self._c(128), self._c(256), self._c(256),
+                self._c(512), self._c(512)]
+
+    @property
+    def fc_widths(self) -> List[int]:
+        return [self._c(1024), self._c(1024), NUM_CLASSES]
+
+    @property
+    def conv_specs(self) -> List[ConvSpec]:
+        w = self.widths
+        chans = [IMAGE_C] + w
+        return [ConvSpec(
+            name=f"conv{i + 1}", cin=chans[i], cout=chans[i + 1],
+            pool=(i % 2 == 1),           # pool after conv2, conv4, conv6
+            binarized=(i != 0),
+        ) for i in range(6)]
+
+    @property
+    def fc_specs(self) -> List[FcSpec]:
+        hw = IMAGE_HW // 8               # three 2x2 pools: 32 -> 4
+        dins = [self.widths[-1] * hw * hw] + self.fc_widths[:-1]
+        return [FcSpec(f"fc{i + 1}", dins[i], self.fc_widths[i])
+                for i in range(3)]
+
+    def param_count(self) -> int:
+        n = sum(s.cout * s.k for s in self.conv_specs)
+        n += sum(s.din * s.dout for s in self.fc_specs)
+        n += 2 * (sum(s.cout for s in self.conv_specs)
+                  + sum(s.dout for s in self.fc_specs))
+        return n
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization / transforms
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Random latent floats + identity BN — the untrained starting point."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, Any] = {}
+    for s in cfg.conv_specs:
+        params[s.name] = {"w": jnp.asarray(
+            rng.normal(0, 1.0 / np.sqrt(s.k),
+                       size=(s.cout, s.cin, s.ksize, s.ksize))
+            .astype(np.float32))}
+        params[f"bn_{s.name}"] = {"a": jnp.ones((s.cout,), jnp.float32),
+                                  "b": jnp.zeros((s.cout,), jnp.float32)}
+    for s in cfg.fc_specs:
+        params[s.name] = {"w": jnp.asarray(
+            rng.normal(0, 1.0 / np.sqrt(s.din), size=(s.dout, s.din))
+            .astype(np.float32))}
+        params[f"bn_{s.name}"] = {"a": jnp.ones((s.dout,), jnp.float32),
+                                  "b": jnp.zeros((s.dout,), jnp.float32)}
+    return params
+
+
+def binarize_params(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Latent floats -> exported {-1,+1} weights (BN affine untouched)."""
+    return {k: ({"w": sign(v["w"])} if "w" in v else dict(v))
+            for k, v in params.items()}
+
+
+def pack_params(cfg: ModelConfig, params: Dict[str, Any]) -> Dict[str, Any]:
+    """Float params -> the xnor variant's packed-weight pytree.
+
+    conv1 stays float (its input is not binarized); every other conv and
+    all FC weights become uint32 [D, ceil(K/32)] via pack_rows of the
+    sign-binarized [D, K] weight matrix — the paper's offline weight
+    encoding (Sec. 3.1).
+    """
+    out: Dict[str, Any] = {}
+    for s in cfg.conv_specs:
+        w = params[s.name]["w"]
+        if s.binarized:
+            out[s.name] = {"wp": pack_rows(sign(w.reshape(s.cout, s.k)))}
+        else:
+            out[s.name] = {"w": sign(w)}
+        out[f"bn_{s.name}"] = dict(params[f"bn_{s.name}"])
+    for s in cfg.fc_specs:
+        out[s.name] = {"wp": pack_rows(sign(params[s.name]["w"]))}
+        out[f"bn_{s.name}"] = dict(params[f"bn_{s.name}"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# inference forward (the AOT-lowered graphs)
+# ---------------------------------------------------------------------------
+
+def _bn_nchw(h: jax.Array, bn: Dict[str, jax.Array]) -> jax.Array:
+    return h * bn["a"][None, :, None, None] + bn["b"][None, :, None, None]
+
+
+def _bn_nf(h: jax.Array, bn: Dict[str, jax.Array]) -> jax.Array:
+    return h * bn["a"][None, :] + bn["b"][None, :]
+
+
+def maxpool2(h: jax.Array) -> jax.Array:
+    """2x2 max pool, stride 2, NCHW."""
+    b, c, hh, ww = h.shape
+    h = h.reshape(b, c, hh // 2, 2, ww // 2, 2)
+    return h.max(axis=(3, 5))
+
+
+def _conv_first(x: jax.Array, w: jax.Array) -> jax.Array:
+    """conv1: float input, {-1,+1} weights — identical in every arm.
+
+    Weights arrive pre-binarized from the BKW1 export (binarize_params /
+    fold_bn), so no in-graph sign() — §Perf L2: the lowered graphs carry
+    no redundant weight binarization.
+    """
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def apply_inference(cfg: ModelConfig, params: Dict[str, Any], x: jax.Array,
+                    variant: str) -> jax.Array:
+    """Full inference forward -> logits [B, 10].
+
+    `params` is the float pytree for variants control/optimized and the
+    packed pytree (pack_params) for variant xnor.  Weight tensors MUST be
+    pre-binarized {-1,+1} (binarize_params / fold_bn guarantee this; the
+    graphs skip the redundant in-graph sign() — §Perf L2).  All three
+    variants produce IDENTICAL logits — the network is the same; only the
+    conv/FC kernel differs (the paper's premise, our core invariant).
+    """
+    assert variant in VARIANTS, variant
+    h = x
+    for s in cfg.conv_specs:
+        if not s.binarized:
+            h = _conv_first(h, params[s.name]["w"])
+        elif variant == "xnor":
+            h = binconv.binconv2d(h, params[s.name]["wp"],
+                                  (s.cout, s.cin, s.ksize, s.ksize),
+                                  s.stride, s.pad)
+        elif variant == "control":
+            h = binconv.conv2d_control(h, params[s.name]["w"],
+                                       s.stride, s.pad, weights_pm1=True)
+        else:
+            h = binconv.conv2d_optimized(h, params[s.name]["w"],
+                                         s.stride, s.pad, weights_pm1=True)
+        if s.pool:
+            h = maxpool2(h)
+        h = _bn_nchw(h, params[f"bn_{s.name}"])
+
+    b = h.shape[0]
+    h = h.reshape(b, -1)                       # flatten in (c, h, w) order
+    for s in cfg.fc_specs:
+        if variant == "xnor":
+            xp = pack_cols(h.T)                # encode cols of [K, B]
+            h = xnor_gemm(params[s.name]["wp"], xp,
+                          s.din).T.astype(jnp.float32)
+        elif variant == "control":
+            h = gemm_f32(params[s.name]["w"], sign(h.T)).T
+        else:
+            h = jnp.dot(sign(h), params[s.name]["w"].T)
+        h = _bn_nf(h, params[f"bn_{s.name}"])
+    return h
+
+
+def make_inference_fn(cfg: ModelConfig, variant: str):
+    """(params, x) -> logits closure suitable for jax.jit / AOT lowering."""
+    def fn(params, x):
+        return apply_inference(cfg, params, x, variant)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# training forward (STE; build-time only, never lowered to rust)
+# ---------------------------------------------------------------------------
+
+def binact(x: jax.Array) -> jax.Array:
+    """Binarize activation with the Htanh straight-through estimator.
+
+    Forward: sign(x).  Backward: 1_{|x| <= 1} (the derivative of Htanh),
+    the paper's Sec. 4.2 answer to the gradient-mismatch problem.
+    """
+    clipped = jnp.clip(x, -1.0, 1.0)
+    return clipped + lax.stop_gradient(sign(x) - clipped)
+
+
+def binweight(w: jax.Array) -> jax.Array:
+    """Binarize weight with identity STE (gradients reach the latent w)."""
+    return w + lax.stop_gradient(sign(w) - w)
+
+
+def batchnorm_train(h: jax.Array, gamma: jax.Array, beta: jax.Array,
+                    axes: tuple, eps: float = 1e-4):
+    """BatchNorm over `axes` with batch statistics; returns (out, mu, var).
+
+    The channel axis is axis 1 for NCHW and axis 1 for [B, F] — both
+    reshape the per-channel stats to broadcast over the rest.
+    """
+    mu = h.mean(axis=axes)
+    var = h.var(axis=axes)
+    shape = [1] * h.ndim
+    shape[1] = -1
+    mu_b, var_b = mu.reshape(shape), var.reshape(shape)
+    out = (h - mu_b) / jnp.sqrt(var_b + eps) * gamma.reshape(shape) \
+        + beta.reshape(shape)
+    return out, mu, var
+
+
+def apply_train(cfg: ModelConfig, tp: Dict[str, Any], x: jax.Array):
+    """Training forward: logits + per-BN batch statistics (for folding).
+
+    `tp` is the training pytree {layer: {w}, bn_layer: {gamma, beta}}.
+    """
+    stats: Dict[str, Any] = {}
+    h = x
+    for s in cfg.conv_specs:
+        w = binweight(tp[s.name]["w"])
+        if s.binarized:
+            # Binarize, then pad with +1 explicitly: inference binarizes
+            # the zero-padded column matrix and sign(0) = +1, so training
+            # must see the same padding values (train/infer consistency).
+            a = binact(h)
+            if s.pad:
+                a = jnp.pad(a, ((0, 0), (0, 0), (s.pad, s.pad),
+                                (s.pad, s.pad)), constant_values=1.0)
+            pad = 0
+        else:
+            a, pad = h, s.pad
+        h = lax.conv_general_dilated(
+            a, w, window_strides=(s.stride, s.stride),
+            padding=[(pad, pad), (pad, pad)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        if s.pool:
+            h = maxpool2(h)
+        bn = tp[f"bn_{s.name}"]
+        h, mu, var = batchnorm_train(h, bn["gamma"], bn["beta"], (0, 2, 3))
+        stats[f"bn_{s.name}"] = (mu, var)
+    h = h.reshape(h.shape[0], -1)
+    for s in cfg.fc_specs:
+        a = binact(h)
+        h = jnp.dot(a, binweight(tp[s.name]["w"]).T)
+        bn = tp[f"bn_{s.name}"]
+        h, mu, var = batchnorm_train(h, bn["gamma"], bn["beta"], (0,))
+        stats[f"bn_{s.name}"] = (mu, var)
+    return h, stats
+
+
+def init_train_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Training pytree: latent float weights + BN (gamma, beta)."""
+    rng = np.random.default_rng(seed)
+    tp: Dict[str, Any] = {}
+    for s in cfg.conv_specs:
+        tp[s.name] = {"w": jnp.asarray(
+            rng.normal(0, 1.0 / np.sqrt(s.k),
+                       size=(s.cout, s.cin, s.ksize, s.ksize))
+            .astype(np.float32))}
+        tp[f"bn_{s.name}"] = {"gamma": jnp.ones((s.cout,), jnp.float32),
+                              "beta": jnp.zeros((s.cout,), jnp.float32)}
+    for s in cfg.fc_specs:
+        tp[s.name] = {"w": jnp.asarray(
+            rng.normal(0, 1.0 / np.sqrt(s.din), size=(s.dout, s.din))
+            .astype(np.float32))}
+        tp[f"bn_{s.name}"] = {"gamma": jnp.ones((s.dout,), jnp.float32),
+                              "beta": jnp.zeros((s.dout,), jnp.float32)}
+    return tp
+
+
+def fold_bn(tp: Dict[str, Any], running: Dict[str, Any],
+            eps: float = 1e-4) -> Dict[str, Any]:
+    """Training pytree + running (mu, var) -> inference float pytree.
+
+    BN(y) = gamma*(y-mu)/sqrt(var+eps) + beta  ==  a*y + b  with
+    a = gamma/sqrt(var+eps), b = beta - a*mu.  Weights are sign-binarized.
+    """
+    params: Dict[str, Any] = {}
+    for k, v in tp.items():
+        if "w" in v:
+            params[k] = {"w": sign(v["w"])}
+        else:
+            mu, var = running[k]
+            a = v["gamma"] / jnp.sqrt(var + eps)
+            params[k] = {"a": a, "b": v["beta"] - a * mu}
+    return params

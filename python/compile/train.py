@@ -1,0 +1,219 @@
+"""BNN training (STE) on ShapeSet-10 + BKW1 weight export.
+
+Build-time only.  Trains the width-scaled BNN of model.py with the
+straight-through estimator (sign forward / Htanh-clip backward — the
+paper's Sec. 4.2 recipe), a hand-rolled Adam (no optax offline), and
+running BatchNorm statistics folded to per-channel affines at export.
+
+BKW1 binary format (mirrored by rust/src/model/format.rs):
+    magic  b"BKW1"
+    u32le  n_tensors
+    n_tensors * {
+        u16le name_len, name (utf-8),
+        u8 dtype (0 = f32, 1 = u32),
+        u8 ndim, ndim * u32le dims,
+        data (little-endian, row-major)
+    }
+Exported tensor names: meta.widths (u32 [c1..c6, f1, f2, 10]),
+conv1.w .. conv6.w, fc1.w .. fc3.w (sign-binarized {-1,+1} f32) and
+bn_conv1.a/.b .. bn_fc3.a/.b (folded BN affine, f32).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+
+DTYPE_F32 = 0
+DTYPE_U32 = 1
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam (pytree)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    tf = t.astype(jnp.float32)
+    def step(p, m_, v_):
+        mhat = m_ / (1 - b1 ** tf)
+        vhat = v_ / (1 - b2 ** tf)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    new_params = jax.tree_util.tree_map(step, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def clip_latents(tp):
+    """Courbariaux: clip latent weights to [-1, 1] after each update."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.clip(x, -1.0, 1.0) if x.ndim > 1 else x, tp)
+
+
+# ---------------------------------------------------------------------------
+# loss / steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def make_train_step(cfg: model.ModelConfig, lr: float):
+    def loss_fn(tp, x, y):
+        logits, stats = model.apply_train(cfg, tp, x)
+        return cross_entropy(logits, y), (logits, stats)
+
+    @jax.jit
+    def step(tp, opt, x, y):
+        (loss, (logits, stats)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(tp, x, y)
+        tp, opt = adam_update(tp, grads, opt, lr=lr)
+        tp = clip_latents(tp)
+        acc = (logits.argmax(axis=1) == y).mean()
+        return tp, opt, loss, acc, stats
+    return step
+
+
+def update_running(running: Dict[str, Any], stats: Dict[str, Any],
+                   momentum: float = 0.9) -> Dict[str, Any]:
+    out = {}
+    for k, (mu, var) in stats.items():
+        if k in running:
+            rmu, rvar = running[k]
+            out[k] = (momentum * rmu + (1 - momentum) * mu,
+                      momentum * rvar + (1 - momentum) * var)
+        else:
+            out[k] = (mu, var)
+    return out
+
+
+def train(cfg: model.ModelConfig, steps: int = 300, batch: int = 64,
+          lr: float = 2e-3, seed: int = 0, train_n: int = 4096,
+          log_every: int = 50, log=print) -> Tuple[Dict, Dict, list]:
+    """Train on ShapeSet-10; returns (train_pytree, running_stats, history)."""
+    imgs, labels = dataset.make_split(train_n, seed=seed + 1)
+    x_all = jnp.asarray(dataset.normalize(imgs))
+    y_all = jnp.asarray(labels.astype(np.int32))
+
+    tp = model.init_train_params(cfg, seed=seed)
+    opt = adam_init(tp)
+    step_fn = make_train_step(cfg, lr)
+    running: Dict[str, Any] = {}
+    history = []
+    rng = np.random.default_rng(seed + 2)
+    for i in range(steps):
+        idx = rng.integers(0, train_n, size=batch)
+        tp, opt, loss, acc, stats = step_fn(tp, opt, x_all[idx], y_all[idx])
+        running = update_running(running, stats)
+        history.append((i, float(loss), float(acc)))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log(f"step {i:4d}  loss {float(loss):.4f}  acc {float(acc):.3f}")
+    return tp, running, history
+
+
+def eval_accuracy(cfg: model.ModelConfig, params: Dict[str, Any],
+                  imgs: np.ndarray, labels: np.ndarray,
+                  variant: str = "optimized", batch: int = 64) -> float:
+    """Inference-graph accuracy on uint8 HWC images (the folded model)."""
+    x = dataset.normalize(imgs)
+    n = x.shape[0]
+    correct = 0
+    fn = jax.jit(model.make_inference_fn(cfg, variant))
+    for i in range(0, n - n % batch, batch):
+        logits = fn(params, jnp.asarray(x[i:i + batch]))
+        correct += int((np.asarray(logits).argmax(1)
+                        == labels[i:i + batch]).sum())
+    return correct / (n - n % batch)
+
+
+# ---------------------------------------------------------------------------
+# BKW1 export
+# ---------------------------------------------------------------------------
+
+def _write_tensor(f, name: str, arr: np.ndarray) -> None:
+    data = np.ascontiguousarray(arr)
+    if data.dtype == np.float32:
+        dt = DTYPE_F32
+    elif data.dtype == np.uint32:
+        dt = DTYPE_U32
+    else:
+        raise TypeError(data.dtype)
+    nb = name.encode("utf-8")
+    f.write(struct.pack("<H", len(nb)))
+    f.write(nb)
+    f.write(struct.pack("<BB", dt, data.ndim))
+    for d in data.shape:
+        f.write(struct.pack("<I", d))
+    f.write(data.tobytes())
+
+
+def save_bkw(path: str, cfg: model.ModelConfig,
+             params: Dict[str, Any]) -> None:
+    """Export the inference float pytree (binarize_params/fold_bn output)."""
+    tensors: list[tuple[str, np.ndarray]] = []
+    widths = np.asarray(cfg.widths + cfg.fc_widths, np.uint32)
+    tensors.append(("meta.widths", widths))
+    for s in cfg.conv_specs:
+        tensors.append((f"{s.name}.w", np.asarray(params[s.name]["w"])))
+        tensors.append((f"bn_{s.name}.a",
+                        np.asarray(params[f"bn_{s.name}"]["a"])))
+        tensors.append((f"bn_{s.name}.b",
+                        np.asarray(params[f"bn_{s.name}"]["b"])))
+    for s in cfg.fc_specs:
+        tensors.append((f"{s.name}.w", np.asarray(params[s.name]["w"])))
+        tensors.append((f"bn_{s.name}.a",
+                        np.asarray(params[f"bn_{s.name}"]["a"])))
+        tensors.append((f"bn_{s.name}.b",
+                        np.asarray(params[f"bn_{s.name}"]["b"])))
+    with open(path, "wb") as f:
+        f.write(b"BKW1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            _write_tensor(f, name, arr)
+
+
+def load_bkw(path: str) -> Dict[str, np.ndarray]:
+    """Read BKW1 back as {name: array} (tests / aot input prep)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"BKW1"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dtype = np.float32 if dt == DTYPE_F32 else np.uint32
+            count = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(
+                f.read(count * 4), dtype).reshape(dims).copy()
+    return out
+
+
+def bkw_to_pytree(cfg: model.ModelConfig,
+                  raw: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    """{name: array} -> the inference float pytree of model.py."""
+    params: Dict[str, Any] = {}
+    for s in list(cfg.conv_specs) + list(cfg.fc_specs):
+        params[s.name] = {"w": jnp.asarray(raw[f"{s.name}.w"])}
+        params[f"bn_{s.name}"] = {
+            "a": jnp.asarray(raw[f"bn_{s.name}.a"]),
+            "b": jnp.asarray(raw[f"bn_{s.name}.b"]),
+        }
+    return params

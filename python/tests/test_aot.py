@@ -1,0 +1,79 @@
+"""AOT lowering smoke tests: descriptors, HLO text, manifest contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+TINY = model.ModelConfig(scale=0.0625)
+
+
+def test_input_descriptors_cover_all_args_in_order():
+    params = model.binarize_params(model.init_params(TINY, seed=0))
+    packed = model.pack_params(TINY, params)
+    x = jnp.zeros((1, 3, 32, 32), jnp.float32)
+    descs = aot.input_descriptors(TINY, packed, x)
+    leaves = jax.tree_util.tree_flatten((packed, x))[0]
+    assert len(descs) == len(leaves)
+    # shapes/dtypes match the actual flattened leaves, in order
+    for d, leaf in zip(descs, leaves):
+        assert tuple(d["shape"]) == leaf.shape, d["name"]
+        assert d["dtype"] == ("u32" if leaf.dtype == jnp.uint32 else "f32")
+    # exactly one image input, and it is the LAST flattened leaf
+    kinds = [d["kind"] for d in descs]
+    assert kinds.count("image") == 1
+    assert kinds[-1] == "image"
+    # every packed weight records its source + logical k
+    for d in descs:
+        if d["transform"] == "pack_rows":
+            assert d["source"].endswith(".w")
+            assert d["logical_k"] > 0
+            assert d["shape"][1] == (d["logical_k"] + 31) // 32
+
+
+def test_lower_model_writes_parsable_hlo(tmp_path):
+    out = str(tmp_path / "m.hlo.txt")
+    descs = aot.lower_model(TINY, "optimized", 1, out)
+    text = open(out).read()
+    assert text.startswith("HloModule")
+    assert len(descs) >= 10
+    # parameter count in the HLO matches the descriptor count
+    assert text.count("parameter(") >= len(descs)
+
+
+def test_lower_kernel_all_variants(tmp_path):
+    for kernel in ["xnor", "control", "optimized"]:
+        out = str(tmp_path / f"{kernel}.hlo.txt")
+        info = aot.lower_kernel(kernel, 8, 70, 6, out)
+        assert info["kernel"] == kernel
+        assert open(out).read().startswith("HloModule")
+        if kernel == "xnor":
+            assert info["inputs"][0]["dtype"] == "u32"
+            assert info["inputs"][0]["shape"] == [8, 3]
+
+
+def test_quick_build_manifest_contract(tmp_path):
+    """A full (quick) build emits a manifest rust can rely on."""
+    out = str(tmp_path / "art")
+    aot.build(out, quick=True, log=lambda *_: None)
+    m = json.load(open(os.path.join(out, "manifest.json")))
+    assert m["format"] == 1
+    assert {x["variant"] for x in m["models"]} == {"xnor", "control",
+                                                   "optimized"}
+    for entry in m["models"]:
+        assert os.path.exists(os.path.join(out, entry["file"]))
+        assert entry["output"]["shape"][1] == 10
+        assert entry["inputs"][-1]["kind"] == "image"
+    assert os.path.exists(os.path.join(out, m["weights"]["small"]["file"]))
+    assert os.path.exists(os.path.join(out, m["datasets"]["test"]["file"]))
+    # dataset round-trips
+    from compile import dataset
+    imgs, labels = dataset.load_bkd(
+        os.path.join(out, m["datasets"]["test"]["file"]))
+    assert imgs.shape[0] == m["datasets"]["test"]["count"]
+    assert labels.max() <= 9

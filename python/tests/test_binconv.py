@@ -1,0 +1,75 @@
+"""Fused binarized conv (Figure 3) and the three Table-2 conv arms.
+
+The three arms (xnor / control / optimized) must produce IDENTICAL
+outputs — they compute the same binarized network with different kernels.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binconv, pack, ref
+
+
+def _rand(seed, *shape):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .normal(size=shape).astype(np.float32))
+
+
+def _packed_weights(w):
+    d = w.shape[0]
+    return pack.pack_rows(ref.sign(w.reshape(d, -1)))
+
+
+@pytest.mark.parametrize("stride,pad,kh", [(1, 0, 3), (1, 1, 3), (2, 1, 3),
+                                           (1, 0, 1), (2, 2, 5)])
+def test_binconv_matches_oracle(stride, pad, kh):
+    x = _rand(10 * stride + pad, 2, 3, 11, 11)
+    w = _rand(20 * stride + pad, 4, 3, kh, kh)
+    want = np.asarray(ref.binconv2d_ref(x, w, stride, pad))
+    got = np.asarray(binconv.binconv2d(x, _packed_weights(w),
+                                       (4, 3, kh, kh), stride, pad))
+    assert (got == want).all()
+
+
+@settings(deadline=None, max_examples=15)
+@given(b=st.integers(1, 3), c=st.integers(1, 5), d=st.integers(1, 6),
+       hw=st.integers(4, 12))
+def test_three_arms_identical(b, c, d, hw):
+    """xnor == control == optimized, elementwise exact."""
+    seed = b * 1000 + c * 100 + d * 10 + hw
+    x = _rand(seed, b, c, hw, hw)
+    w = _rand(seed + 1, d, c, 3, 3)
+    o_xnor = np.asarray(binconv.binconv2d(x, _packed_weights(w),
+                                          (d, c, 3, 3), 1, 1))
+    o_ctrl = np.asarray(binconv.conv2d_control(x, w, 1, 1))
+    o_opt = np.asarray(binconv.conv2d_optimized(x, w, 1, 1))
+    assert (o_xnor == o_ctrl).all()
+    assert (o_xnor == o_opt).all()
+
+
+def test_im2col_matches_ref():
+    x = _rand(5, 2, 3, 9, 9)
+    a = np.asarray(binconv.im2col(x, 3, 3, 1, 1))
+    b = np.asarray(ref.im2col_ref(x, 3, 3, 1, 1))
+    np.testing.assert_allclose(a, b)
+
+
+def test_im2col_strided_matches_ref():
+    x = _rand(6, 1, 4, 10, 12)
+    a = np.asarray(binconv.im2col(x, 5, 3, 2, 2))
+    b = np.asarray(ref.im2col_ref(x, 5, 3, 2, 2))
+    np.testing.assert_allclose(a, b)
+
+
+def test_binconv_output_integrality():
+    """Binarized conv outputs are exact signed integers with K's parity."""
+    x = _rand(7, 1, 3, 8, 8)
+    w = _rand(8, 2, 3, 3, 3)
+    out = np.asarray(binconv.binconv2d(x, _packed_weights(w),
+                                       (2, 3, 3, 3), 1, 0))
+    k = 3 * 3 * 3
+    assert (out == np.round(out)).all()
+    assert np.abs(out).max() <= k
+    assert ((out.astype(np.int64) % 2) == (k % 2)).all()

@@ -1,0 +1,70 @@
+"""Cross-language convention pins.
+
+The rust engine re-implements bit packing, normalization and the BKW1/
+BKD1 formats.  These tests pin the python side of each convention to
+golden values that rust/src/bitops/pack.rs::tests::golden_cross_language
+and rust/src/data/bkd.rs pin identically — if either side drifts, one of
+the twins fails.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import dataset
+from compile.kernels import ref
+
+
+def test_pack_golden_matches_rust():
+    """Same case as rust bitops::pack::tests::golden_cross_language."""
+    vals = np.sin(np.arange(40, dtype=np.float32) * 0.7)
+    p = np.asarray(ref.pack_rows_ref(jnp.asarray(vals[None, :])))
+    want0 = 0
+    want1 = 0
+    for i, v in enumerate(vals):
+        if v >= 0:
+            if i < 32:
+                want0 |= 1 << i
+            else:
+                want1 |= 1 << (i - 32)
+    assert p.tolist() == [[want0, want1]]
+
+
+def test_pack_bit_order_golden():
+    """Element 0 -> bit 0 word 0; element 33 -> bit 1 word 1 (rust twin:
+    bit_order_little_endian)."""
+    row = -np.ones(64, np.float32)
+    row[0] = 1.0
+    row[33] = 1.0
+    p = np.asarray(ref.pack_rows_ref(jnp.asarray(row[None, :])))
+    assert p.tolist() == [[1, 2]]
+
+
+def test_pack_padding_golden():
+    """40 ones -> [0xFFFFFFFF, 0xFF] (rust twin: padding_bits_are_zero)."""
+    p = np.asarray(ref.pack_rows_ref(jnp.ones((1, 40))))
+    assert p.tolist() == [[0xFFFFFFFF, 0xFF]]
+
+
+def test_normalization_golden():
+    """255 -> +1.0, 0 -> -1.0, 128 -> 128/127.5 - 1 (rust twin:
+    data::bkd::tests::normalize_layout_and_range)."""
+    imgs = np.zeros((1, 32, 32, 3), np.uint8)
+    imgs[0, 0, 0, 0] = 255
+    imgs[0, 0, 0, 1] = 128
+    x = dataset.normalize(imgs)
+    assert x[0, 0, 0, 0] == 1.0
+    assert abs(x[0, 1, 0, 0] - (128 / 127.5 - 1.0)) < 1e-6
+    assert x[0, 2, 0, 0] == -1.0
+
+
+def test_xnor_formula_golden():
+    """One fixed word pair, the Sec. 3.2 formula by hand (rust twin:
+    xnor::tests::table1_word_identity)."""
+    a = np.uint32(0xAAAAAAAA)
+    b = np.uint32(0x55555555)
+    # xnor = ~(a ^ b) = ~0xFFFFFFFF = 0 -> popcount 0 -> 2*0 - 32 = -32
+    assert bin(~(int(a) ^ int(b)) & 0xFFFFFFFF).count("1") == 0
+    wp = jnp.asarray([[a]], jnp.uint32)
+    xp = jnp.asarray([[b]], jnp.uint32)
+    out = np.asarray(ref.xnor_gemm_packed_ref(wp, xp, 32))
+    assert out.tolist() == [[-32]]

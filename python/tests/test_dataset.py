@@ -1,0 +1,65 @@
+"""ShapeSet-10 generator + BKD1 round-trip tests."""
+
+import numpy as np
+import pytest
+
+from compile import dataset
+
+
+def test_make_image_shapes_and_range():
+    rng = np.random.default_rng(0)
+    for label in range(dataset.NUM_CLASSES):
+        img = dataset.make_image(label, rng)
+        assert img.shape == (32, 32, 3)
+        assert img.dtype == np.uint8
+
+
+def test_split_balanced_and_deterministic():
+    imgs1, labels1 = dataset.make_split(100, seed=5)
+    imgs2, labels2 = dataset.make_split(100, seed=5)
+    np.testing.assert_array_equal(imgs1, imgs2)
+    np.testing.assert_array_equal(labels1, labels2)
+    counts = np.bincount(labels1, minlength=10)
+    assert counts.min() == counts.max() == 10
+
+
+def test_split_seed_sensitivity():
+    imgs1, _ = dataset.make_split(20, seed=1)
+    imgs2, _ = dataset.make_split(20, seed=2)
+    assert (imgs1 != imgs2).any()
+
+
+def test_normalize():
+    imgs = np.zeros((2, 32, 32, 3), np.uint8)
+    imgs[0] = 255
+    x = dataset.normalize(imgs)
+    assert x.shape == (2, 3, 32, 32)
+    assert x.dtype == np.float32
+    np.testing.assert_allclose(x[0], 1.0)
+    np.testing.assert_allclose(x[1], -1.0)
+
+
+def test_bkd_roundtrip(tmp_path):
+    imgs, labels = dataset.make_split(30, seed=9)
+    p = str(tmp_path / "ds.bin")
+    dataset.save_bkd(p, imgs, labels)
+    imgs2, labels2 = dataset.load_bkd(p)
+    np.testing.assert_array_equal(imgs, imgs2)
+    np.testing.assert_array_equal(labels, labels2)
+
+
+def test_bkd_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE" + b"\0" * 16)
+    with pytest.raises(AssertionError):
+        dataset.load_bkd(str(p))
+
+
+def test_classes_are_visually_distinct():
+    """Mean images of different classes must differ substantially."""
+    imgs, labels = dataset.make_split(200, seed=3)
+    means = np.stack([imgs[labels == c].mean(axis=0).mean(axis=-1)
+                      for c in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            assert np.abs(means[a] - means[b]).mean() > 1.0, (a, b)

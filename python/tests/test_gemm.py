@@ -1,0 +1,52 @@
+"""Control-group Pallas f32 gemm vs jnp matmul."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm import gemm_f32
+
+
+def _rand(seed, *shape):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .normal(size=shape).astype(np.float32))
+
+
+@settings(deadline=None, max_examples=25)
+@given(d=st.integers(1, 40), k=st.integers(1, 150), n=st.integers(1, 40))
+def test_gemm_matches_matmul(d, k, n):
+    a = _rand(d * 100000 + k * 100 + n, d, k)
+    b = _rand(d * 100000 + k * 100 + n + 1, k, n)
+    got = np.asarray(gemm_f32(a, b, block_d=16, block_n=16, block_k=32))
+    want = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bd,bn,bk", [(1, 1, 1), (7, 5, 13), (128, 128, 256),
+                                      (64, 32, 64)])
+def test_gemm_block_invariance(bd, bn, bk):
+    a = _rand(1, 33, 170)
+    b = _rand(2, 170, 29)
+    got = np.asarray(gemm_f32(a, b, block_d=bd, block_n=bn, block_k=bk))
+    np.testing.assert_allclose(got, np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_exact_on_binary_values():
+    """On {-1,+1} operands the float gemm is exact (integers < 2^24)."""
+    rng = np.random.default_rng(9)
+    a = np.where(rng.normal(size=(12, 100)) >= 0, 1.0, -1.0).astype(np.float32)
+    b = np.where(rng.normal(size=(100, 11)) >= 0, 1.0, -1.0).astype(np.float32)
+    got = np.asarray(gemm_f32(jnp.asarray(a), jnp.asarray(b),
+                              block_d=8, block_n=8, block_k=32))
+    assert (got == a @ b).all()
+
+
+def test_gemm_zero_k_block_padding():
+    """K smaller than the block: padding must not pollute the result."""
+    a = _rand(5, 3, 2)
+    b = _rand(6, 2, 3)
+    got = np.asarray(gemm_f32(a, b))
+    np.testing.assert_allclose(got, np.asarray(a) @ np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

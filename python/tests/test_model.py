@@ -1,0 +1,104 @@
+"""L2 model tests: config, shapes, and the cross-variant logit invariant."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+TINY = model.ModelConfig(scale=0.0625)
+
+
+def _x(seed, b=2):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .normal(size=(b, 3, 32, 32)).astype(np.float32))
+
+
+def test_config_full_matches_paper():
+    cfg = model.ModelConfig(scale=1.0)
+    assert cfg.widths == [128, 128, 256, 256, 512, 512]
+    assert cfg.fc_widths == [1024, 1024, 10]
+    specs = cfg.conv_specs
+    assert [s.pool for s in specs] == [False, True] * 3
+    assert specs[0].binarized is False
+    assert all(s.binarized for s in specs[1:])
+    assert cfg.fc_specs[0].din == 512 * 4 * 4
+    # Courbariaux's CIFAR-10 ConvNet is ~14M parameters
+    assert 13_000_000 < cfg.param_count() < 16_000_000
+
+
+def test_config_scaling():
+    cfg = model.ModelConfig(scale=0.25)
+    assert cfg.widths == [32, 32, 64, 64, 128, 128]
+    assert cfg.fc_widths == [256, 256, 10]
+
+
+def test_inference_shapes():
+    params = model.binarize_params(model.init_params(TINY, seed=0))
+    logits = model.apply_inference(TINY, params, _x(0, b=3), "optimized")
+    assert logits.shape == (3, 10)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_variant_equivalence_exact(seed):
+    """The paper's premise: all three kernels compute the SAME network."""
+    params = model.binarize_params(model.init_params(TINY, seed=seed))
+    packed = model.pack_params(TINY, params)
+    x = _x(seed)
+    lo = np.asarray(model.apply_inference(TINY, params, x, "optimized"))
+    lc = np.asarray(model.apply_inference(TINY, params, x, "control"))
+    lx = np.asarray(model.apply_inference(TINY, packed, x, "xnor"))
+    np.testing.assert_array_equal(lo, lc)
+    np.testing.assert_array_equal(lo, lx)
+
+
+def test_variant_equivalence_with_bn():
+    """Equivalence must survive non-identity folded BN affines."""
+    rng = np.random.default_rng(7)
+    params = model.binarize_params(model.init_params(TINY, seed=7))
+    for k, v in params.items():
+        if "a" in v:
+            v["a"] = jnp.asarray(rng.uniform(0.5, 2.0,
+                                             v["a"].shape).astype(np.float32))
+            v["b"] = jnp.asarray(rng.normal(0, 1,
+                                            v["b"].shape).astype(np.float32))
+    packed = model.pack_params(TINY, params)
+    x = _x(7)
+    lo = np.asarray(model.apply_inference(TINY, params, x, "optimized"))
+    lx = np.asarray(model.apply_inference(TINY, packed, x, "xnor"))
+    np.testing.assert_allclose(lo, lx, rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool2():
+    h = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 1, 4, 4))
+    out = np.asarray(model.maxpool2(h))
+    assert out.shape == (1, 1, 2, 2)
+    assert out.reshape(-1).tolist() == [5, 7, 13, 15]
+
+
+def test_binact_forward_and_gradient():
+    import jax
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    y = model.binact(x)
+    assert np.asarray(y).tolist() == [-1, -1, 1, 1, 1]
+    g = jax.grad(lambda v: model.binact(v).sum())(x)
+    # Htanh STE: gradient 1 inside [-1, 1], 0 outside
+    assert np.asarray(g).tolist() == [0, 1, 1, 1, 0]
+
+
+def test_binweight_gradient_is_identity():
+    import jax
+    w = jnp.asarray([-2.0, 0.3, 1.5])
+    g = jax.grad(lambda v: (model.binweight(v) * 3.0).sum())(w)
+    assert np.asarray(g).tolist() == [3, 3, 3]
+
+
+def test_pack_params_structure():
+    params = model.binarize_params(model.init_params(TINY, seed=0))
+    packed = model.pack_params(TINY, params)
+    assert "w" in packed["conv1"] and "wp" not in packed["conv1"]
+    for name in ["conv2", "conv3", "fc1", "fc3"]:
+        assert "wp" in packed[name]
+        assert packed[name]["wp"].dtype == jnp.uint32
+    s = TINY.conv_specs[1]
+    assert packed["conv2"]["wp"].shape == (s.cout, (s.k + 31) // 32)

@@ -1,0 +1,161 @@
+"""Oracle self-consistency: the ref.py chain of trust.
+
+These tests pin the *oracles* themselves against mathematical ground
+truth (plain float matmul on {-1,+1} values, lax.conv), including the
+paper's Table 1 truth table, so the Pallas-vs-ref tests elsewhere are
+anchored to something real.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _randf(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Table 1: xnor(encodings) == multiply(values)
+# ---------------------------------------------------------------------------
+
+def test_table1_truth_table():
+    """Exhaustive Table 1: for all 4 bit pairs, xnor == +-1 multiply."""
+    for ea in (0, 1):
+        for eb in (0, 1):
+            va, vb = 2 * ea - 1, 2 * eb - 1
+            xnor = 1 ^ (ea ^ eb)
+            assert 2 * xnor - 1 == va * vb
+
+
+def test_table1_wordwise():
+    """Word-level Table 1: 2*popcount(~(a^b)) - 32 == dot of +-1 vectors."""
+    for _ in range(64):
+        a_bits = RNG.integers(0, 2, size=32)
+        b_bits = RNG.integers(0, 2, size=32)
+        a = int(sum(int(b) << i for i, b in enumerate(a_bits)))
+        b = int(sum(int(b) << i for i, b in enumerate(b_bits)))
+        popc = bin(~(a ^ b) & 0xFFFFFFFF).count("1")
+        dot = int(np.dot(2 * a_bits - 1, 2 * b_bits - 1))
+        assert 2 * popc - 32 == dot
+
+
+# ---------------------------------------------------------------------------
+# sign / pack / unpack
+# ---------------------------------------------------------------------------
+
+def test_sign_zero_maps_to_plus_one():
+    x = jnp.asarray([-2.0, -0.0, 0.0, 0.5])
+    out = np.asarray(ref.sign(x))
+    # -0.0 >= 0 is True in IEEE, so both zeros binarize to +1.
+    assert out.tolist() == [-1.0, 1.0, 1.0, 1.0]
+
+
+@settings(deadline=None, max_examples=30)
+@given(d=st.integers(1, 40), k=st.integers(1, 130))
+def test_pack_rows_roundtrip(d, k):
+    w = jnp.asarray(np.random.default_rng(d * 1000 + k)
+                    .normal(size=(d, k)).astype(np.float32))
+    wp = ref.pack_rows_ref(w)
+    assert wp.dtype == jnp.uint32
+    assert wp.shape == (d, ref.padded_k(k) // 32)
+    back = ref.unpack_rows_ref(wp, k)
+    assert (back == ref.sign(w)).all()
+
+
+@settings(deadline=None, max_examples=30)
+@given(k=st.integers(1, 130), n=st.integers(1, 40))
+def test_pack_cols_roundtrip(k, n):
+    x = jnp.asarray(np.random.default_rng(k * 1000 + n)
+                    .normal(size=(k, n)).astype(np.float32))
+    xp = ref.pack_cols_ref(x)
+    assert xp.shape == (ref.padded_k(k) // 32, n)
+    back = ref.unpack_cols_ref(xp, k)
+    assert (back == ref.sign(x)).all()
+
+
+def test_pack_bit_order_little_endian():
+    """Bit i of word w encodes element w*32+i; element 0 is bit 0."""
+    w = -jnp.ones((1, 64))
+    w = w.at[0, 0].set(1.0)    # word 0, bit 0
+    w = w.at[0, 33].set(1.0)   # word 1, bit 1
+    wp = np.asarray(ref.pack_rows_ref(w))
+    assert wp[0, 0] == 1
+    assert wp[0, 1] == 2
+
+
+def test_pack_row_col_transpose_consistency():
+    """pack_cols(x) == pack_rows(x.T).T for any x."""
+    x = _randf(70, 9)
+    a = np.asarray(ref.pack_cols_ref(x))
+    b = np.asarray(ref.pack_rows_ref(x.T)).T
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# packed gemm oracle vs value-domain ground truth
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=30)
+@given(d=st.integers(1, 24), k=st.integers(1, 100), n=st.integers(1, 24))
+def test_xnor_gemm_packed_ref_exact(d, k, n):
+    rng = np.random.default_rng(d * 10000 + k * 100 + n)
+    w = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    truth = np.asarray(ref.xnor_gemm_value_ref(w, x)).astype(np.int32)
+    got = np.asarray(ref.xnor_gemm_packed_ref(
+        ref.pack_rows_ref(w), ref.pack_cols_ref(x), k))
+    assert (got == truth).all()
+
+
+def test_xnor_gemm_extremes():
+    """All +1 x all +1 -> K; all +1 x all -1 -> -K (exercises correction)."""
+    for k in (1, 31, 32, 33, 95):
+        ones = jnp.ones((2, k))
+        mones = -jnp.ones((k, 3))
+        got = np.asarray(ref.xnor_gemm_packed_ref(
+            ref.pack_rows_ref(ones), ref.pack_cols_ref(mones), k))
+        assert (got == -k).all(), k
+        got2 = np.asarray(ref.xnor_gemm_packed_ref(
+            ref.pack_rows_ref(ones), ref.pack_cols_ref(-mones), k))
+        assert (got2 == k).all(), k
+
+
+# ---------------------------------------------------------------------------
+# im2col / conv graphs (Figures 1-3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,pad,kh", [(1, 0, 3), (1, 1, 3), (2, 1, 3),
+                                           (1, 0, 1), (2, 0, 5), (1, 2, 5)])
+def test_im2col_conv_equiv(stride, pad, kh):
+    """Figure-2 graph (im2col+gemm) == direct lax.conv."""
+    x = _randf(2, 3, 12, 12)
+    w = _randf(4, 3, kh, kh)
+    a = np.asarray(ref.conv2d_im2col_ref(x, w, stride, pad))
+    b = np.asarray(ref.conv2d_ref(x, w, stride, pad))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shape():
+    x = _randf(2, 3, 8, 10)
+    cols = ref.im2col_ref(x, 3, 3, stride=1, pad=1)
+    assert cols.shape == (3 * 3 * 3, 2 * 8 * 10)
+
+
+@pytest.mark.parametrize("stride,pad", [(1, 0), (1, 1), (2, 1)])
+def test_binconv_ref_is_binarized_conv(stride, pad):
+    """Figure-3 oracle == lax.conv on sign(x), sign(w) (pad in sign domain)."""
+    x = _randf(1, 2, 9, 9)
+    w = _randf(3, 2, 3, 3)
+    a = np.asarray(ref.binconv2d_ref(x, w, stride, pad))
+    xb = ref.sign(x)
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, 0), (pad, pad), (pad, pad)),
+                     constant_values=1.0)
+    b = np.asarray(ref.conv2d_ref(xb, ref.sign(w), stride, 0))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,75 @@
+"""Training-loop tests: STE learning signal, BN folding, BKW1 round-trip."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import dataset, model, train
+
+TINY = model.ModelConfig(scale=0.0625)
+
+
+def test_adam_decreases_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = train.adam_init(params)
+    import jax
+    for _ in range(200):
+        g = jax.grad(lambda p: (p["w"] ** 2).sum())(params)
+        params, opt = train.adam_update(params, g, opt, lr=0.1)
+    assert np.abs(np.asarray(params["w"])).max() < 0.1
+
+
+def test_training_reduces_loss():
+    tp, running, hist = train.train(TINY, steps=60, batch=32, train_n=320,
+                                    log_every=0, seed=1)
+    first = np.mean([h[1] for h in hist[:10]])
+    last = np.mean([h[1] for h in hist[-10:]])
+    assert last < first, (first, last)
+
+
+def test_fold_bn_matches_batchnorm():
+    gamma = jnp.asarray([2.0, 0.5])
+    beta = jnp.asarray([1.0, -1.0])
+    mu = jnp.asarray([0.3, -0.2])
+    var = jnp.asarray([4.0, 0.25])
+    tp = {"bn_x": {"gamma": gamma, "beta": beta}}
+    folded = model.fold_bn(tp, {"bn_x": (mu, var)}, eps=0.0)
+    y = jnp.asarray([1.0, 1.0])
+    want = gamma * (y - mu) / jnp.sqrt(var) + beta
+    got = folded["bn_x"]["a"] * y + folded["bn_x"]["b"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_fold_bn_binarizes_weights():
+    tp = {"conv1": {"w": jnp.asarray([[0.3, -0.7], [0.0, 2.0]])}}
+    folded = model.fold_bn(tp, {})
+    assert np.asarray(folded["conv1"]["w"]).tolist() == [[1, -1], [1, 1]]
+
+
+def test_bkw_roundtrip(tmp_path):
+    params = model.binarize_params(model.init_params(TINY, seed=4))
+    p = str(tmp_path / "w.bkw")
+    train.save_bkw(p, TINY, params)
+    raw = train.load_bkw(p)
+    assert (raw["meta.widths"]
+            == np.asarray(TINY.widths + TINY.fc_widths, np.uint32)).all()
+    back = train.bkw_to_pytree(TINY, raw)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(1, 3, 32, 32)).astype(np.float32))
+    a = model.apply_inference(TINY, params, x, "optimized")
+    b = model.apply_inference(TINY, back, x, "optimized")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_clip_latents_only_touches_matrices():
+    tp = {"conv": {"w": jnp.asarray([[3.0, -3.0]])},
+          "bn": {"gamma": jnp.asarray([5.0]), "beta": jnp.asarray([-5.0])}}
+    out = train.clip_latents(tp)
+    assert np.asarray(out["conv"]["w"]).tolist() == [[1.0, -1.0]]
+    assert float(out["bn"]["gamma"][0]) == 5.0  # 1-D BN params not clipped
+
+
+def test_eval_accuracy_untrained_near_chance():
+    params = model.binarize_params(model.init_params(TINY, seed=0))
+    imgs, labels = dataset.make_split(128, seed=11)
+    acc = train.eval_accuracy(TINY, params, imgs, labels, batch=64)
+    assert 0.0 <= acc <= 0.45  # untrained: near 10% chance

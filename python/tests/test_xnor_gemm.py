@@ -1,0 +1,84 @@
+"""Pallas xnor-bitcount gemm vs ground truth — the CORE correctness signal.
+
+The kernel must be EXACTLY equal (integer arithmetic) to the float matmul
+of the underlying {-1,+1} matrices, for any shape, any padding residue
+K % 32, and any tile decomposition.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack, ref
+from compile.kernels.xnor_gemm import xnor_gemm
+
+
+def _case(seed, d, k, n):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    truth = np.asarray(ref.xnor_gemm_value_ref(w, x)).astype(np.int32)
+    return pack.pack_rows(w), pack.pack_cols(x), truth
+
+
+@settings(deadline=None, max_examples=30)
+@given(d=st.integers(1, 48), k=st.integers(1, 200), n=st.integers(1, 48))
+def test_xnor_gemm_exact_any_shape(d, k, n):
+    wp, xp, truth = _case(d * 100000 + k * 100 + n, d, k, n)
+    got = np.asarray(xnor_gemm(wp, xp, k, block_d=16, block_n=16, block_k=2))
+    assert got.dtype == np.int32
+    assert (got == truth).all()
+
+
+@pytest.mark.parametrize("k", [1, 31, 32, 33, 63, 64, 65, 96, 127])
+def test_xnor_gemm_padding_residues(k):
+    """Every K % 32 residue class near word boundaries."""
+    wp, xp, truth = _case(k, 5, k, 7)
+    got = np.asarray(xnor_gemm(wp, xp, k, block_d=4, block_n=4, block_k=1))
+    assert (got == truth).all()
+
+
+@pytest.mark.parametrize("bd,bn,bk", [(1, 1, 1), (3, 5, 2), (16, 16, 4),
+                                      (128, 128, 8), (64, 256, 16)])
+def test_xnor_gemm_block_invariance(bd, bn, bk):
+    """Result must not depend on the tile decomposition."""
+    wp, xp, truth = _case(42, 33, 170, 29)
+    got = np.asarray(xnor_gemm(wp, xp, 170, block_d=bd, block_n=bn,
+                               block_k=bk))
+    assert (got == truth).all()
+
+
+def test_xnor_gemm_layer_shape():
+    """A real BNN layer shape: D=128, K=3*3*128=1152, N=an 8x8 feature map."""
+    wp, xp, truth = _case(7, 128, 1152, 64)
+    got = np.asarray(xnor_gemm(wp, xp, 1152))
+    assert (got == truth).all()
+
+
+def test_xnor_gemm_identity_rows():
+    """w row == x col -> output K (perfect correlation); negated -> -K."""
+    k = 70
+    v = jnp.asarray(np.random.default_rng(3).normal(size=(1, k))
+                    .astype(np.float32))
+    wp = pack.pack_rows(v)
+    xp = pack.pack_cols(jnp.stack([v[0], -v[0]], axis=1))
+    got = np.asarray(xnor_gemm(wp, xp, k, block_d=1, block_n=1, block_k=1))
+    assert got[0, 0] == k
+    assert got[0, 1] == -k
+
+
+def test_xnor_gemm_mismatched_kw_raises():
+    wp = jnp.zeros((2, 3), jnp.uint32)
+    xp = jnp.zeros((4, 2), jnp.uint32)
+    with pytest.raises(AssertionError):
+        xnor_gemm(wp, xp, 96)
+
+
+def test_xnor_gemm_output_range():
+    """Every output element lies in [-K, K] with K's parity."""
+    k = 77
+    wp, xp, _ = _case(11, 9, k, 9)
+    got = np.asarray(xnor_gemm(wp, xp, k, block_d=8, block_n=8, block_k=2))
+    assert got.min() >= -k and got.max() <= k
+    assert ((got % 2) == (k % 2)).all()  # dot of k odd/even +-1 terms

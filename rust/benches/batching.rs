@@ -1,0 +1,151 @@
+//! `cargo bench --bench batching` — coordinator policy sweep:
+//! throughput/latency vs (max_batch, max_delay) under closed-loop load,
+//! using the trained BNN on the native xnor kernel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitkernel::benchkit::Table;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, MockBackend, NativeBackend, Router, RouterConfig,
+};
+use bitkernel::data::Dataset;
+use bitkernel::model::BnnEngine;
+use bitkernel::utils::timer::{mean, percentile};
+use bitkernel::utils::Stopwatch;
+
+fn drive(
+    router: &Router,
+    ds: &Dataset,
+    requests: usize,
+    clients: usize,
+) -> (f64, Vec<f64>) {
+    let next = Arc::new(AtomicUsize::new(0));
+    let sw = Stopwatch::start();
+    let lat: Vec<f64> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let next = Arc::clone(&next);
+            handles.push(s.spawn(|| {
+                let next = next;
+                let mut lat = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= requests {
+                        return lat;
+                    }
+                    let img = ds.normalized(i % ds.count, i % ds.count + 1);
+                    let sw = Stopwatch::start();
+                    router.submit_wait(img.into_data()).unwrap();
+                    lat.push(sw.elapsed_ms());
+                }
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    (sw.elapsed_secs(), lat)
+}
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    // --- policy sweep with the mock backend (pure coordinator cost) -----------
+    let mut table = Table::new(
+        "Batching policy sweep (mock backend, 2ms/batch, 256 req, 16 clients)",
+        &["max_batch", "max_delay", "req/s", "p50 ms", "p99 ms",
+          "mean batch"],
+    );
+    for (mb, delay_ms) in
+        [(1, 0u64), (4, 1), (8, 2), (8, 10), (16, 2), (32, 5)]
+    {
+        let router = Router::start(
+            move || Ok(Box::new(MockBackend::new(mb, 2)) as Box<dyn Backend>),
+            RouterConfig {
+                queue_cap: 1024,
+                batcher: BatcherConfig {
+                    max_batch: mb,
+                    max_delay: Duration::from_millis(delay_ms),
+                },
+            },
+        )
+        .unwrap();
+        // synthetic images: mock ignores content
+        let (wall, lat) = {
+            let next = Arc::new(AtomicUsize::new(0));
+            let requests = 256;
+            let sw = Stopwatch::start();
+            let lat: Vec<f64> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for _ in 0..16 {
+                    let next = Arc::clone(&next);
+                    let router = &router;
+                    handles.push(s.spawn(move || {
+                        let mut lat = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::SeqCst);
+                            if i >= requests {
+                                return lat;
+                            }
+                            let sw = Stopwatch::start();
+                            router
+                                .submit_wait(vec![0.1f32; 3 * 32 * 32])
+                                .unwrap();
+                            lat.push(sw.elapsed_ms());
+                        }
+                    }));
+                }
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            (sw.elapsed_secs(), lat)
+        };
+        let snap = router.metrics().snapshot();
+        table.row(&[
+            format!("{mb}"),
+            format!("{delay_ms}ms"),
+            format!("{:.0}", 256.0 / wall),
+            format!("{:.2}", percentile(&lat, 0.5)),
+            format!("{:.2}", percentile(&lat, 0.99)),
+            format!("{:.2}", snap.mean_batch_size),
+        ]);
+    }
+    table.print();
+
+    // --- real model -------------------------------------------------------------
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(skipping real-model batching bench: no artifacts)");
+        return;
+    }
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let mut table = Table::new(
+        "Batching with the trained BNN (native xnor, 64 req, 8 clients)",
+        &["max_batch", "req/s", "mean ms", "p99 ms", "mean batch"],
+    );
+    for mb in [1usize, 4, 8, 16] {
+        let weights = dir.join("weights_small.bkw");
+        let router = Router::start(
+            move || {
+                let engine = Arc::new(BnnEngine::load(&weights)?);
+                Ok(Box::new(NativeBackend::xnor(engine, mb)) as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 256,
+                batcher: BatcherConfig {
+                    max_batch: mb,
+                    max_delay: Duration::from_millis(3),
+                },
+            },
+        )
+        .unwrap();
+        let (wall, lat) = drive(&router, &ds, 64, 8);
+        let snap = router.metrics().snapshot();
+        table.row(&[
+            format!("{mb}"),
+            format!("{:.1}", 64.0 / wall),
+            format!("{:.1}", mean(&lat)),
+            format!("{:.1}", percentile(&lat, 0.99)),
+            format!("{:.2}", snap.mean_batch_size),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,127 @@
+//! `cargo bench --bench kernels` — per-layer gemm kernel comparison
+//! (the paper's §6 discussion: measure time, don't count instructions).
+//!
+//! For every conv/fc gemm shape of the full-scale BNN, times the native
+//! xnor kernel vs the naive control vs the blocked float kernel, then
+//! the same three shapes through the AOT PJRT executables.
+
+use bitkernel::benchkit::{bench, Table};
+use bitkernel::bitops::{pack_rows, xnor_gemm, XnorImpl};
+use bitkernel::gemm::{gemm_blocked, gemm_naive};
+use bitkernel::runtime::Runtime;
+use bitkernel::utils::Rng;
+
+/// (name, D, K, N) — gemm shapes of the full BNN at batch 1 (conv) and
+/// batch 8 (fc1).
+const SHAPES: [(&str, usize, usize, usize); 4] = [
+    ("conv2 (128x1152x1024)", 128, 1152, 1024),
+    ("conv4 (256x2304x256)", 256, 2304, 256),
+    ("conv6 (512x4608x64)", 512, 4608, 64),
+    ("fc1 b8 (1024x8192x8)", 1024, 8192, 8),
+];
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let mut table = Table::new(
+        "Native gemm kernels per BNN layer shape (ms, lower is better)",
+        &["layer", "xnor (ours)", "control (naive f32)",
+          "blocked f32 (optimized)", "xnor vs control"],
+    );
+    for (name, d, k, n) in SHAPES {
+        let a = rng.sign_vec(d * k);
+        let bt = rng.sign_vec(n * k);
+        let wp = pack_rows(&a, d, k);
+        let xp = pack_rows(&bt, n, k);
+        let mut iout = vec![0i32; d * n];
+        let mut fout = vec![0.0f32; d * n];
+
+        let mx = bench("xnor", 0.4, 3, 1.0, || {
+            xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Blocked);
+        });
+        let mc = bench("control", 0.4, 3, 1.0, || {
+            gemm_naive(&a, &bt, &mut fout, d, k, n);
+        });
+        let mb = bench("blocked", 0.4, 3, 1.0, || {
+            gemm_blocked(&a, &bt, &mut fout, d, k, n);
+        });
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", mx.mean_s() * 1e3),
+            format!("{:.3}", mc.mean_s() * 1e3),
+            format!("{:.3}", mb.mean_s() * 1e3),
+            format!("{:.1}x", mc.mean_s() / mx.mean_s()),
+        ]);
+        assert!(mx.mean_s() < mc.mean_s(),
+                "{name}: xnor must beat naive float");
+    }
+    table.print();
+
+    // --- PJRT micro-kernels --------------------------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(skipping pjrt kernel bench: no artifacts)");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let mut table = Table::new(
+        "PJRT kernel executables per layer shape (ms)",
+        &["layer", "xnor (pallas)", "control (pallas f32)",
+          "optimized (XLA dot)", "xnor vs control"],
+    );
+    let tags: Vec<&str> = {
+        let mut t: Vec<&str> =
+            rt.manifest.kernels.iter().map(|k| k.tag.as_str()).collect();
+        t.dedup();
+        t
+    };
+    for tag in tags {
+        let mut ms = std::collections::BTreeMap::new();
+        for kernel in ["xnor", "control", "optimized"] {
+            let entry = rt
+                .manifest
+                .kernels
+                .iter()
+                .find(|k| k.kernel == kernel && k.tag == tag)
+                .unwrap()
+                .clone();
+            let exe = rt.load_kernel(&entry.name).unwrap();
+            let kw = entry.k.div_ceil(32);
+            let (a, b) = if kernel == "xnor" {
+                (
+                    xla::Literal::vec1(&vec![0xAAAAAAAAu32; entry.d * kw])
+                        .reshape(&[entry.d as i64, kw as i64])
+                        .unwrap(),
+                    xla::Literal::vec1(&vec![0x55555555u32; kw * entry.n])
+                        .reshape(&[kw as i64, entry.n as i64])
+                        .unwrap(),
+                )
+            } else {
+                (
+                    xla::Literal::vec1(&vec![1.0f32; entry.d * entry.k])
+                        .reshape(&[entry.d as i64, entry.k as i64])
+                        .unwrap(),
+                    xla::Literal::vec1(&vec![-1.0f32; entry.k * entry.n])
+                        .reshape(&[entry.k as i64, entry.n as i64])
+                        .unwrap(),
+                )
+            };
+            // warmup
+            let _ = exe.execute::<xla::Literal>(&[a.clone(), b.clone()]).unwrap();
+            let m = bench(kernel, 0.4, 3, 1.0, || {
+                std::hint::black_box(
+                    exe.execute::<xla::Literal>(&[a.clone(), b.clone()])
+                        .unwrap(),
+                );
+            });
+            ms.insert(kernel.to_string(), m.mean_s());
+        }
+        table.row(&[
+            tag.to_string(),
+            format!("{:.3}", ms["xnor"] * 1e3),
+            format!("{:.3}", ms["control"] * 1e3),
+            format!("{:.3}", ms["optimized"] * 1e3),
+            format!("{:.1}x", ms["control"] / ms["xnor"]),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,68 @@
+//! `cargo bench --bench pack` — encoding cost (paper Sec. 3.1).
+//!
+//! The xnor pipeline pays an encode (bit-pack) pass per layer that the
+//! float arms do not.  This bench measures that overhead per layer shape
+//! and its share of the total xnor conv time — the paper's implicit
+//! claim is that encoding is cheap relative to the gemm it accelerates.
+
+use bitkernel::benchkit::{bench, Table};
+use bitkernel::bitops::{pack_rows, pack_rows_from, xnor_gemm, XnorImpl};
+use bitkernel::tensor::PackedMatrix;
+use bitkernel::utils::Rng;
+
+const SHAPES: [(&str, usize, usize, usize); 4] = [
+    ("conv2 cols (1024x1152)", 128, 1152, 1024),
+    ("conv4 cols (256x2304)", 256, 2304, 256),
+    ("conv6 cols (64x4608)", 512, 4608, 64),
+    ("fc1 act b8 (8x8192)", 1024, 8192, 8),
+];
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let mut table = Table::new(
+        "Encode (bit-pack) cost per layer (paper Sec. 3.1)",
+        &["layer", "pack ms", "xnor-gemm ms", "pack share",
+          "pack GB/s (f32 in)"],
+    );
+    for (name, d, k, n) in SHAPES {
+        let cols = rng.normal_vec(n * k);
+        let w = pack_rows(&rng.sign_vec(d * k), d, k);
+        let mut xp = PackedMatrix::zeros(n, k);
+        let mut out = vec![0i32; d * n];
+
+        let mp = bench("pack", 0.3, 3, 1.0, || {
+            pack_rows_from(&cols, &mut xp);
+        });
+        let mg = bench("gemm", 0.3, 3, 1.0, || {
+            xnor_gemm(&w, &xp, &mut out, XnorImpl::Blocked);
+        });
+        let bytes_in = (n * k * 4) as f64;
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", mp.mean_s() * 1e3),
+            format!("{:.3}", mg.mean_s() * 1e3),
+            format!("{:.0}%", 100.0 * mp.mean_s()
+                    / (mp.mean_s() + mg.mean_s())),
+            format!("{:.2}", bytes_in / mp.mean_s() / 1e9),
+        ]);
+    }
+    table.print();
+
+    // Allocation-free repack vs fresh allocation (hot-path design choice).
+    let (_, d, k, n) = SHAPES[0];
+    let cols = rng.normal_vec(n * k);
+    let mut xp = PackedMatrix::zeros(n, k);
+    let m_reuse = bench("reuse", 0.3, 3, 1.0, || {
+        pack_rows_from(&cols, &mut xp);
+    });
+    let m_alloc = bench("alloc", 0.3, 3, 1.0, || {
+        std::hint::black_box(pack_rows(&cols, n, k));
+    });
+    println!(
+        "buffer reuse vs alloc (conv2 cols): {:.3} ms vs {:.3} ms ({:.2}x)",
+        m_reuse.mean_s() * 1e3,
+        m_alloc.mean_s() * 1e3,
+        m_alloc.mean_s() / m_reuse.mean_s()
+    );
+    let _ = d;
+}

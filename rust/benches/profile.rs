@@ -1,0 +1,70 @@
+//! `cargo bench --bench profile` — per-layer wall-time breakdown of the
+//! native engine (the §Perf profiling tool for the L3 hot path).
+
+use bitkernel::benchkit::Table;
+use bitkernel::bitops::XnorImpl;
+use bitkernel::data::Dataset;
+use bitkernel::model::{BnnEngine, EngineKernel};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let weights = std::env::args()
+        .skip_while(|a| a != "--weights")
+        .nth(1)
+        .unwrap_or_else(|| "full".into());
+    let engine = BnnEngine::load(dir.join(format!("weights_{weights}.bkw")))
+        .unwrap();
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let x = ds.normalized(0, 1);
+
+    let arms = [
+        EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Optimized,
+        EngineKernel::Control,
+    ];
+    // Average over a few runs (after warmup) per arm.
+    let reps = 3usize;
+    let mut per_arm: Vec<Vec<(String, f64)>> = Vec::new();
+    for &kernel in &arms {
+        let _ = engine.forward_profiled(&x, kernel); // warmup
+        let mut acc: Vec<(String, f64)> = Vec::new();
+        for _ in 0..reps {
+            let (_, stages) = engine.forward_profiled(&x, kernel);
+            if acc.is_empty() {
+                acc = stages;
+            } else {
+                for (a, s) in acc.iter_mut().zip(stages) {
+                    a.1 += s.1;
+                }
+            }
+        }
+        for a in &mut acc {
+            a.1 /= reps as f64;
+        }
+        per_arm.push(acc);
+    }
+
+    let mut table = Table::new(
+        &format!("Per-layer breakdown, {weights} model, batch 1 (ms)"),
+        &["stage", "xnor", "optimized", "control", "xnor share"],
+    );
+    let xnor_total: f64 = per_arm[0].iter().map(|(_, t)| t).sum();
+    for i in 0..per_arm[0].len() {
+        table.row(&[
+            per_arm[0][i].0.clone(),
+            format!("{:.3}", per_arm[0][i].1 * 1e3),
+            format!("{:.3}", per_arm[1][i].1 * 1e3),
+            format!("{:.3}", per_arm[2][i].1 * 1e3),
+            format!("{:.0}%", 100.0 * per_arm[0][i].1 / xnor_total),
+        ]);
+    }
+    for (arm, stages) in arms.iter().zip(&per_arm) {
+        let total: f64 = stages.iter().map(|(_, t)| t).sum();
+        println!("total {}: {:.2} ms", arm.name(), total * 1e3);
+    }
+    table.print();
+}

@@ -1,0 +1,40 @@
+//! `cargo bench --bench table2` — regenerate the paper's Table 2.
+//!
+//! See benchkit::table2 for the experiment definition and DESIGN.md §5
+//! for the CPU/GPU column substitutions.
+
+use bitkernel::benchkit::table2::{run, Table2Options};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping table2 bench: run `make artifacts` first");
+        return;
+    }
+    // `cargo bench -- --quick` for a fast pass.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = if quick {
+        Table2Options {
+            native_images: 4,
+            native_control_images: 1,
+            pjrt_batches: 1,
+            ..Default::default()
+        }
+    } else {
+        Table2Options::default()
+    };
+    let result = run(&dir, &opts, |line| eprintln!("{line}")).unwrap();
+    println!("{}", result.render());
+
+    // Reproduction shape checks (who wins, roughly by how much).
+    assert!(result.native_speedup() > 1.5,
+            "native: xnor must beat control clearly");
+    assert!(result.pjrt_speedup() > 1.0,
+            "pjrt: xnor must beat the pallas control");
+    let opt = result.row("PyTorch");
+    let xnor = result.row("Our");
+    assert!(opt.pjrt_s < xnor.pjrt_s,
+            "accelerator arm: the vendor-optimized kernel stays fastest \
+             (paper's GPU ordering)");
+    println!("table2 orderings hold ✓");
+}

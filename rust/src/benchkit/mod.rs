@@ -1,0 +1,180 @@
+//! Hand-rolled measurement harness (offline substrate for criterion).
+//!
+//! `cargo bench` targets use [`bench`] / [`bench_n`] for warmed-up,
+//! repeated timing with mean/min/percentile summaries, and
+//! [`Table`] to print the paper-style result tables.
+
+pub mod table2;
+
+use crate::utils::timer::{mean, percentile};
+use crate::utils::Stopwatch;
+
+/// One measured routine.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub samples: Vec<f64>,
+    /// Work items per iteration (images, elements...) for throughput.
+    pub items_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.samples, 0.5)
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.items_per_iter / self.mean_s()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<28} mean {:>10.4} ms   min {:>10.4} ms   p50 {:>10.4} ms",
+            self.name,
+            self.mean_s() * 1e3,
+            self.min_s() * 1e3,
+            self.p50_s() * 1e3,
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn bench_n<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items_per_iter: f64,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed_secs());
+    }
+    Measurement { name: name.to_string(), samples, items_per_iter }
+}
+
+/// Adaptive variant: picks an iteration count that spends roughly
+/// `budget_s` seconds, with at least `min_iters` runs.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    budget_s: f64,
+    min_iters: usize,
+    items_per_iter: f64,
+    mut f: F,
+) -> Measurement {
+    // One calibration run (also serves as warmup).
+    let sw = Stopwatch::start();
+    f();
+    let once = sw.elapsed_secs().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(min_iters, 10_000);
+    bench_n(name, 1, iters, items_per_iter, f)
+}
+
+/// Paper-style fixed-width table printer.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str(&format!(
+            "|{}|\n",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_samples() {
+        let m = bench_n("t", 1, 5, 2.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.mean_s() >= 0.0);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn adaptive_bench_respects_min() {
+        let m = bench("t", 0.0, 3, 1.0, || {});
+        assert!(m.samples.len() >= 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Results", &["kernel", "CPU"]);
+        t.row(&["xnor".into(), "1.0s".into()]);
+        t.row(&["control-group".into(), "4.5s".into()]);
+        let s = t.render();
+        assert!(s.contains("Results"));
+        assert!(s.contains("control-group"));
+        // column alignment: header and both data rows same width
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 4); // header, separator, 2 rows
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+}

@@ -1,0 +1,16 @@
+//! Bit packing + the xnor-bitcount gemm family — the paper's Sec. 3
+//! kernel, natively in rust (the Table-2 "CPU" arm).
+//!
+//! * [`pack`] — encode float tensors into [`crate::tensor::PackedMatrix`]
+//!   (bit 1 <=> value +1, little-endian within each u32 word, identical
+//!   to the python ref/pallas convention — pinned by golden tests),
+//! * [`xnor`] — `a[i,j] = 2*popcount(~(w ^ x)) - 32` accumulated over the
+//!   packed reduction, in four implementations (scalar u32, u64 words,
+//!   register-blocked, multi-threaded) benchmarked against each other in
+//!   `benches/ablation.rs`.
+
+pub mod pack;
+pub mod xnor;
+
+pub use pack::{pack_rows, pack_rows_from, pack_slice};
+pub use xnor::{xnor_gemm, XnorImpl};

@@ -1,0 +1,140 @@
+//! Encoding: float {-1,+1} (or arbitrary sign) matrices -> packed bits.
+//!
+//! The paper's Sec. 3.1: weights pack along rows (done once, offline);
+//! activations pack the columns of the im2col matrix — which this engine
+//! stores transposed ([N, K] row-major), so both cases are row packing.
+//!
+//! Convention (must match python/compile/kernels/ref.py and rust tests'
+//! golden vectors): sign(x) = +1 iff x >= 0; encoding bit 1 <=> +1;
+//! bit i of word w encodes logical element w*32 + i; padding bits are 0.
+
+use crate::tensor::PackedMatrix;
+
+/// Pack one logical row (`row.len() == k`) into `out` (`ceil(k/32)` words).
+#[inline]
+pub fn pack_slice(row: &[f32], out: &mut [u32]) {
+    debug_assert_eq!(out.len(), row.len().div_ceil(32));
+    out.fill(0);
+    // Full 32-element words: branch-free shift-accumulate.
+    let full = row.len() / 32;
+    for (w, chunk) in row.chunks_exact(32).enumerate().take(full) {
+        let mut word = 0u32;
+        for (i, &v) in chunk.iter().enumerate() {
+            // f32 sign-bit trick: v >= 0.0 (incl. -0.0 per IEEE compare)
+            word |= u32::from(v >= 0.0) << i;
+        }
+        out[w] = word;
+    }
+    // Tail.
+    let tail_start = full * 32;
+    if tail_start < row.len() {
+        let mut word = 0u32;
+        for (i, &v) in row[tail_start..].iter().enumerate() {
+            word |= u32::from(v >= 0.0) << i;
+        }
+        out[full] = word;
+    }
+}
+
+/// Pack a row-major [rows, k] float matrix.
+pub fn pack_rows(mat: &[f32], rows: usize, k: usize) -> PackedMatrix {
+    assert_eq!(mat.len(), rows * k, "matrix len vs rows*k");
+    let mut p = PackedMatrix::zeros(rows, k);
+    let kw = p.kw;
+    for r in 0..rows {
+        pack_slice(&mat[r * k..(r + 1) * k], &mut p.data[r * kw..(r + 1) * kw]);
+    }
+    p
+}
+
+/// Pack into an existing, correctly-sized PackedMatrix (no allocation —
+/// the per-request hot path reuses buffers).
+pub fn pack_rows_from(mat: &[f32], p: &mut PackedMatrix) {
+    assert_eq!(mat.len(), p.rows * p.k);
+    let kw = p.kw;
+    let k = p.k;
+    for r in 0..p.rows {
+        pack_slice(&mat[r * k..(r + 1) * k], &mut p.data[r * kw..(r + 1) * kw]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_order_little_endian() {
+        // element 0 -> bit 0 of word 0; element 33 -> bit 1 of word 1.
+        let mut row = vec![-1.0f32; 64];
+        row[0] = 1.0;
+        row[33] = 1.0;
+        let p = pack_rows(&row, 1, 64);
+        assert_eq!(p.data, vec![1, 2]);
+    }
+
+    #[test]
+    fn zero_packs_as_plus_one() {
+        let p = pack_rows(&[0.0, -0.0, -1.0, 2.0], 1, 4);
+        // 0.0 -> 1, -0.0 -> 1 (>= 0 in IEEE), -1 -> 0, 2 -> 1
+        assert_eq!(p.data, vec![0b1011]);
+    }
+
+    #[test]
+    fn padding_bits_are_zero() {
+        let p = pack_rows(&[1.0; 40], 1, 40);
+        assert_eq!(p.kw, 2);
+        assert_eq!(p.data[0], u32::MAX);
+        assert_eq!(p.data[1], 0xFF); // 8 real bits, 24 pad zeros
+        assert_eq!(p.pad_bits(), 24);
+    }
+
+    #[test]
+    fn roundtrip_via_get() {
+        let vals: Vec<f32> = (0..70)
+            .map(|i| if (i * 7) % 3 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let p = pack_rows(&vals, 1, 70);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(p.get(0, i), v, "element {i}");
+        }
+    }
+
+    #[test]
+    fn multi_row_independent() {
+        let mat = [1.0, -1.0, -1.0, 1.0];
+        let p = pack_rows(&mat, 2, 2);
+        assert_eq!(p.kw, 1);
+        assert_eq!(p.data, vec![0b01, 0b10]);
+    }
+
+    #[test]
+    fn pack_rows_from_reuses_buffer() {
+        let mut p = PackedMatrix::zeros(2, 40);
+        pack_rows_from(&vec![1.0; 80], &mut p);
+        assert_eq!(p.data, vec![u32::MAX, 0xFF, u32::MAX, 0xFF]);
+        pack_rows_from(&vec![-1.0; 80], &mut p);
+        assert_eq!(p.data, vec![0, 0, 0, 0]);
+    }
+
+    /// Golden vector shared with python (tests/test_cross_language.py
+    /// generates the same case and asserts the same words).
+    #[test]
+    fn golden_cross_language() {
+        let vals: Vec<f32> = (0..40)
+            .map(|i| (i as f32 * 0.7).sin())
+            .collect();
+        let p = pack_rows(&vals, 1, 40);
+        let mut want0 = 0u32;
+        let mut want1 = 0u32;
+        for (i, &v) in vals.iter().enumerate() {
+            if v >= 0.0 {
+                if i < 32 {
+                    want0 |= 1 << i;
+                } else {
+                    want1 |= 1 << (i - 32);
+                }
+            }
+        }
+        assert_eq!(p.data, vec![want0, want1]);
+    }
+}

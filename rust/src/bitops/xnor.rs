@@ -1,0 +1,412 @@
+//! The xnor-bitcount gemm (paper Sec. 3.2), four implementations.
+//!
+//! All compute, for packed operands `w` ([D, k] logical) and `x`
+//! ([N, k] logical — the im2col matrix transposed so its reduction is
+//! contiguous):
+//!
+//! ```text
+//!     out[i, j] = sum_over_words( 2 * popcount(~(w[i,w] ^ x[j,w])) - 32 )
+//!                 - pad_bits
+//! ```
+//!
+//! which equals the float dot product of the underlying {-1,+1} rows
+//! exactly.  `popcount` compiles to the hardware `popcnt` instruction
+//! (the paper uses libpopcnt / CUDA `__popc`).
+//!
+//! Implementations (ablated in benches/ablation.rs):
+//! * `Scalar`   — word-at-a-time u32, the paper's reference C loop
+//! * `Word64`   — pairs u32 words into u64 (half the popcnt ops)
+//! * `Blocked`  — Word64 + 4-column register blocking (reuses the loaded
+//!   w-word across 4 x-rows, cutting w-side loads 4x)
+//! * `Threaded` — Blocked split over output rows via scoped threads
+
+use crate::tensor::PackedMatrix;
+
+/// Which xnor-gemm implementation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XnorImpl {
+    Scalar,
+    Word64,
+    Blocked,
+    /// 2 w-rows x 4 x-rows register blocking.
+    Blocked2x4,
+    /// Blocked, split across `n` threads.
+    Threaded(usize),
+}
+
+impl XnorImpl {
+    pub const ALL_SINGLE: [XnorImpl; 3] =
+        [XnorImpl::Scalar, XnorImpl::Word64, XnorImpl::Blocked];
+
+    pub fn name(&self) -> String {
+        match self {
+            XnorImpl::Scalar => "scalar32".into(),
+            XnorImpl::Word64 => "word64".into(),
+            XnorImpl::Blocked => "blocked".into(),
+            XnorImpl::Blocked2x4 => "blocked2x4".into(),
+            XnorImpl::Threaded(n) => format!("threaded{n}"),
+        }
+    }
+}
+
+/// Popcount of the xnor of two packed rows (u32 at a time).
+#[inline]
+fn popc_xnor_u32(a: &[u32], b: &[u32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (&wa, &wb) in a.iter().zip(b.iter()) {
+        acc += (!(wa ^ wb)).count_ones();
+    }
+    acc
+}
+
+/// Popcount of the xnor of two packed rows, u64 at a time.
+#[inline]
+fn popc_xnor_u64(a: &[u32], b: &[u32]) -> u32 {
+    let mut acc = 0u32;
+    let (a2, ra) = a.split_at(a.len() & !1);
+    let (b2, rb) = b.split_at(b.len() & !1);
+    for (pa, pb) in a2.chunks_exact(2).zip(b2.chunks_exact(2)) {
+        let wa = (pa[0] as u64) | ((pa[1] as u64) << 32);
+        let wb = (pb[0] as u64) | ((pb[1] as u64) << 32);
+        acc += (!(wa ^ wb)).count_ones();
+    }
+    if let (Some(&wa), Some(&wb)) = (ra.first(), rb.first()) {
+        acc += (!(wa ^ wb)).count_ones();
+    }
+    acc
+}
+
+#[inline]
+fn finish(popc: u32, kw: usize, pad: i32) -> i32 {
+    2 * popc as i32 - 32 * kw as i32 - pad
+}
+
+fn gemm_scalar(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    for i in 0..w.rows {
+        let wrow = w.row(i);
+        let orow = &mut out[i * x.rows..(i + 1) * x.rows];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = finish(popc_xnor_u32(wrow, x.row(j)), kw, pad);
+        }
+    }
+}
+
+fn gemm_word64(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    for i in 0..w.rows {
+        let wrow = w.row(i);
+        let orow = &mut out[i * x.rows..(i + 1) * x.rows];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = finish(popc_xnor_u64(wrow, x.row(j)), kw, pad);
+        }
+    }
+}
+
+/// Register-blocked kernel body for rows `i_lo..i_hi` of `w`.
+///
+/// Processes 4 x-rows per inner sweep so each loaded w-word is reused 4
+/// times from a register; the reduction runs u64-at-a-time.
+fn gemm_blocked_rows(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: &mut [i32],
+    i_lo: usize,
+    i_hi: usize,
+) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    let n = x.rows;
+    let n4 = n & !3;
+    for i in i_lo..i_hi {
+        let wrow = w.row(i);
+        let orow = &mut out[(i - i_lo) * n..(i - i_lo + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let x0 = x.row(j);
+            let x1 = x.row(j + 1);
+            let x2 = x.row(j + 2);
+            let x3 = x.row(j + 3);
+            let (mut a0, mut a1, mut a2, mut a3) = (0u32, 0u32, 0u32, 0u32);
+            let full2 = kw & !1;
+            let mut wi = 0;
+            while wi < full2 {
+                let ww = (wrow[wi] as u64) | ((wrow[wi + 1] as u64) << 32);
+                a0 += (!(ww ^ ((x0[wi] as u64) | ((x0[wi + 1] as u64) << 32))))
+                    .count_ones();
+                a1 += (!(ww ^ ((x1[wi] as u64) | ((x1[wi + 1] as u64) << 32))))
+                    .count_ones();
+                a2 += (!(ww ^ ((x2[wi] as u64) | ((x2[wi + 1] as u64) << 32))))
+                    .count_ones();
+                a3 += (!(ww ^ ((x3[wi] as u64) | ((x3[wi + 1] as u64) << 32))))
+                    .count_ones();
+                wi += 2;
+            }
+            if wi < kw {
+                let ww = wrow[wi];
+                a0 += (!(ww ^ x0[wi])).count_ones();
+                a1 += (!(ww ^ x1[wi])).count_ones();
+                a2 += (!(ww ^ x2[wi])).count_ones();
+                a3 += (!(ww ^ x3[wi])).count_ones();
+            }
+            orow[j] = finish(a0, kw, pad);
+            orow[j + 1] = finish(a1, kw, pad);
+            orow[j + 2] = finish(a2, kw, pad);
+            orow[j + 3] = finish(a3, kw, pad);
+            j += 4;
+        }
+        while j < n {
+            orow[j] = finish(popc_xnor_u64(wrow, x.row(j)), kw, pad);
+            j += 1;
+        }
+    }
+}
+
+fn gemm_blocked(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    gemm_blocked_rows(w, x, out, 0, w.rows);
+}
+
+/// 2x4 register blocking: two w-rows share every loaded x-word (halves
+/// x-side loads vs the 1x4 `Blocked`).  §Perf experiment; ablated in
+/// benches/ablation.rs.
+fn gemm_blocked2x4(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    let n = x.rows;
+    let rows = w.rows;
+    let r2 = rows & !1;
+    let n4 = n & !3;
+    let mut i = 0;
+    while i < r2 {
+        let w0 = w.row(i);
+        let w1 = w.row(i + 1);
+        let mut j = 0;
+        while j < n4 {
+            let x0 = x.row(j);
+            let x1 = x.row(j + 1);
+            let x2 = x.row(j + 2);
+            let x3 = x.row(j + 3);
+            let mut acc = [0u32; 8];
+            let full2 = kw & !1;
+            let mut wi = 0;
+            while wi < full2 {
+                let wa = (w0[wi] as u64) | ((w0[wi + 1] as u64) << 32);
+                let wb = (w1[wi] as u64) | ((w1[wi + 1] as u64) << 32);
+                let xa = (x0[wi] as u64) | ((x0[wi + 1] as u64) << 32);
+                let xb = (x1[wi] as u64) | ((x1[wi + 1] as u64) << 32);
+                let xc = (x2[wi] as u64) | ((x2[wi + 1] as u64) << 32);
+                let xd = (x3[wi] as u64) | ((x3[wi + 1] as u64) << 32);
+                acc[0] += (!(wa ^ xa)).count_ones();
+                acc[1] += (!(wa ^ xb)).count_ones();
+                acc[2] += (!(wa ^ xc)).count_ones();
+                acc[3] += (!(wa ^ xd)).count_ones();
+                acc[4] += (!(wb ^ xa)).count_ones();
+                acc[5] += (!(wb ^ xb)).count_ones();
+                acc[6] += (!(wb ^ xc)).count_ones();
+                acc[7] += (!(wb ^ xd)).count_ones();
+                wi += 2;
+            }
+            if wi < kw {
+                for (r, wrow) in [w0, w1].into_iter().enumerate() {
+                    let ww = wrow[wi];
+                    acc[r * 4] += (!(ww ^ x0[wi])).count_ones();
+                    acc[r * 4 + 1] += (!(ww ^ x1[wi])).count_ones();
+                    acc[r * 4 + 2] += (!(ww ^ x2[wi])).count_ones();
+                    acc[r * 4 + 3] += (!(ww ^ x3[wi])).count_ones();
+                }
+            }
+            for r in 0..2 {
+                for c in 0..4 {
+                    out[(i + r) * n + j + c] =
+                        finish(acc[r * 4 + c], kw, pad);
+                }
+            }
+            j += 4;
+        }
+        while j < n {
+            out[i * n + j] = finish(popc_xnor_u64(w0, x.row(j)), kw, pad);
+            out[(i + 1) * n + j] =
+                finish(popc_xnor_u64(w1, x.row(j)), kw, pad);
+            j += 1;
+        }
+        i += 2;
+    }
+    if i < rows {
+        // Odd final row: reuse the 1x4 kernel on the tail slice.
+        let tail = &mut out[i * n..];
+        gemm_blocked_rows(w, x, tail, i, rows);
+    }
+}
+
+fn gemm_threaded(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: &mut [i32],
+    threads: usize,
+) {
+    let n = x.rows;
+    // Split the output rows into disjoint &mut chunks first, then hand
+    // one contiguous row-range to each scoped thread.
+    let rows = w.rows;
+    let t = threads.max(1).min(rows.max(1));
+    let chunk_rows = rows.div_ceil(t);
+    let mut slices: Vec<&mut [i32]> = Vec::with_capacity(t);
+    let mut rest = out;
+    for ti in 0..t {
+        let lo = ti * chunk_rows;
+        let hi = ((ti + 1) * chunk_rows).min(rows);
+        if lo >= hi {
+            break;
+        }
+        let (head, tail) = rest.split_at_mut((hi - lo) * n);
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (ti, slice) in slices.into_iter().enumerate() {
+            let lo = ti * chunk_rows;
+            let hi = ((ti + 1) * chunk_rows).min(rows);
+            s.spawn(move || gemm_blocked_rows(w, x, slice, lo, hi));
+        }
+    });
+}
+
+/// Packed gemm dispatch: `out[i * x.rows + j] = <w_i, x_j>` exactly.
+///
+/// `w`: [D, k] packed, `x`: [N, k] packed (im2col transposed), `out`
+/// must have `w.rows * x.rows` elements.
+pub fn xnor_gemm(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: &mut [i32],
+    imp: XnorImpl,
+) {
+    assert_eq!(w.k, x.k, "reduction length mismatch");
+    assert_eq!(w.kw, x.kw);
+    assert_eq!(out.len(), w.rows * x.rows, "output size");
+    match imp {
+        XnorImpl::Scalar => gemm_scalar(w, x, out),
+        XnorImpl::Word64 => gemm_word64(w, x, out),
+        XnorImpl::Blocked => gemm_blocked(w, x, out),
+        XnorImpl::Blocked2x4 => gemm_blocked2x4(w, x, out),
+        XnorImpl::Threaded(t) => gemm_threaded(w, x, out, t),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::pack::pack_rows;
+    use crate::utils::Rng;
+
+    fn dense_dot(a: &[f32], b: &[f32]) -> i32 {
+        a.iter().zip(b).map(|(x, y)| (x * y) as i32).sum()
+    }
+
+    fn check_all_impls(d: usize, k: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let wm = rng.sign_vec(d * k);
+        let xm = rng.sign_vec(n * k);
+        let w = pack_rows(&wm, d, k);
+        let x = pack_rows(&xm, n, k);
+
+        let mut want = vec![0i32; d * n];
+        for i in 0..d {
+            for j in 0..n {
+                want[i * n + j] =
+                    dense_dot(&wm[i * k..(i + 1) * k], &xm[j * k..(j + 1) * k]);
+            }
+        }
+        for imp in [
+            XnorImpl::Scalar,
+            XnorImpl::Word64,
+            XnorImpl::Blocked,
+            XnorImpl::Blocked2x4,
+            XnorImpl::Threaded(3),
+        ] {
+            let mut got = vec![0i32; d * n];
+            xnor_gemm(&w, &x, &mut got, imp);
+            assert_eq!(got, want, "impl {:?} d={d} k={k} n={n}", imp);
+        }
+    }
+
+    #[test]
+    fn table1_word_identity() {
+        // 2*popcount(~(a^b)) - 32 == dot of the +-1 interpretations.
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let a = rng.next_u32();
+            let b = rng.next_u32();
+            let mut dot = 0i32;
+            for i in 0..32 {
+                let va = if (a >> i) & 1 == 1 { 1 } else { -1 };
+                let vb = if (b >> i) & 1 == 1 { 1 } else { -1 };
+                dot += va * vb;
+            }
+            assert_eq!(2 * (!(a ^ b)).count_ones() as i32 - 32, dot);
+        }
+    }
+
+    #[test]
+    fn exact_small_shapes() {
+        for (d, k, n) in [(1, 1, 1), (2, 31, 3), (3, 32, 5), (4, 33, 4),
+                          (5, 70, 7), (8, 64, 8)] {
+            check_all_impls(d, k, n, (d * 1000 + k * 10 + n) as u64);
+        }
+    }
+
+    #[test]
+    fn exact_layer_shape() {
+        // A real BNN gemm: conv3 at scale 0.25 (D=64, K=288, N=64).
+        check_all_impls(64, 288, 64, 42);
+    }
+
+    #[test]
+    fn extremes() {
+        for k in [1usize, 31, 32, 33, 95] {
+            let ones = vec![1.0f32; k];
+            let mones = vec![-1.0f32; k];
+            let w = pack_rows(&ones, 1, k);
+            let xs = pack_rows(&[ones.clone(), mones].concat(), 2, k);
+            let mut out = vec![0i32; 2];
+            xnor_gemm(&w, &xs, &mut out, XnorImpl::Blocked);
+            assert_eq!(out, vec![k as i32, -(k as i32)], "k={k}");
+        }
+    }
+
+    #[test]
+    fn threaded_more_threads_than_rows() {
+        check_all_impls(2, 40, 3, 7); // Threaded(3) > 2 rows inside
+        let mut rng = Rng::new(9);
+        let wm = rng.sign_vec(2 * 40);
+        let xm = rng.sign_vec(3 * 40);
+        let w = pack_rows(&wm, 2, 40);
+        let x = pack_rows(&xm, 3, 40);
+        let mut a = vec![0i32; 6];
+        let mut b = vec![0i32; 6];
+        xnor_gemm(&w, &x, &mut a, XnorImpl::Threaded(64));
+        xnor_gemm(&w, &x, &mut b, XnorImpl::Scalar);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "reduction length mismatch")]
+    fn rejects_k_mismatch() {
+        let w = PackedMatrix::zeros(1, 32);
+        let x = PackedMatrix::zeros(1, 64);
+        xnor_gemm(&w, &x, &mut [0], XnorImpl::Scalar);
+    }
+
+    #[test]
+    fn output_parity_and_range() {
+        let k = 77;
+        let mut rng = Rng::new(5);
+        let w = pack_rows(&rng.sign_vec(4 * k), 4, k);
+        let x = pack_rows(&rng.sign_vec(6 * k), 6, k);
+        let mut out = vec![0i32; 24];
+        xnor_gemm(&w, &x, &mut out, XnorImpl::Word64);
+        for &v in &out {
+            assert!(v.abs() <= k as i32);
+            assert_eq!(v.rem_euclid(2), k as i32 % 2);
+        }
+    }
+}

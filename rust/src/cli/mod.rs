@@ -1,0 +1,157 @@
+//! Hand-rolled CLI argument parser (offline substrate for clap).
+//!
+//! Grammar: `bitkernel <subcommand> [--flag value | --switch]...`.
+//! Flags are declared up front so `--help` output and unknown-flag
+//! errors come for free.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag '--{0}'")]
+    UnknownFlag(String),
+    #[error("flag '--{0}' needs a value")]
+    MissingValue(String),
+    #[error("bad value for '--{0}': {1}")]
+    BadValue(String, String),
+    #[error("unexpected positional argument '{0}'")]
+    Positional(String),
+}
+
+impl Args {
+    /// Parse `argv` (after the subcommand) against the declared flags.
+    pub fn parse(
+        argv: &[String],
+        specs: &[FlagSpec],
+    ) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        for s in specs {
+            if let Some(d) = s.default {
+                out.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(CliError::Positional(arg.clone()));
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| CliError::UnknownFlag(name.to_string()))?;
+            if spec.takes_value {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                out.values.insert(name.to_string(), v.clone());
+            } else {
+                out.switches.push(name.to_string());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                CliError::BadValue(name.to_string(), format!("{e}"))
+            }),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Render a --help block for a subcommand.
+pub fn render_help(cmd: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("bitkernel {cmd} — {about}\n\nflags:\n");
+    for s in specs {
+        let v = if s.takes_value { " <value>" } else { "" };
+        let d = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{v:<12} {}{d}\n", s.name, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPECS: &[FlagSpec] = &[
+        FlagSpec { name: "batch", takes_value: true, default: Some("8"),
+                   help: "batch size" },
+        FlagSpec { name: "verbose", takes_value: false, default: None,
+                   help: "log more" },
+    ];
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::parse(&argv(&[]), SPECS).unwrap();
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 8);
+        let a = Args::parse(&argv(&["--batch", "32"]), SPECS).unwrap();
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn switches() {
+        let a = Args::parse(&argv(&["--verbose"]), SPECS).unwrap();
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(Args::parse(&argv(&["--nope"]), SPECS),
+                         Err(CliError::UnknownFlag(_))));
+        assert!(matches!(Args::parse(&argv(&["--batch"]), SPECS),
+                         Err(CliError::MissingValue(_))));
+        assert!(matches!(Args::parse(&argv(&["stray"]), SPECS),
+                         Err(CliError::Positional(_))));
+        let a = Args::parse(&argv(&["--batch", "x"]), SPECS).unwrap();
+        assert!(matches!(a.get_usize("batch", 0),
+                         Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("serve", "run the server", SPECS);
+        assert!(h.contains("--batch"));
+        assert!(h.contains("default: 8"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Inference backends the coordinator can drive.
+//!
+//! A [`Backend`] consumes a fixed-capacity image batch and returns
+//! logits.  Three implementations:
+//! * [`NativeBackend`] — the in-process rust engine (Table-2 CPU arm),
+//! * [`PjrtBackend`]   — an AOT-compiled XLA executable (accelerator arm),
+//! * [`MockBackend`]   — deterministic stub for coordinator tests.
+
+use anyhow::Result;
+
+use crate::bitops::XnorImpl;
+use crate::model::{BnnEngine, EngineKernel};
+use crate::nn::conv::ConvScratch;
+use crate::runtime::LoadedModel;
+use crate::tensor::Tensor;
+
+/// A batched inference backend.  `infer` receives exactly
+/// `max_batch()` images ([B, 3, 32, 32] normalized) — the worker pads
+/// short batches — and returns logits [B, 10].
+///
+/// NOT `Send`: PJRT handles contain thread-affine state (`Rc`, raw
+/// pointers), so the router constructs every backend INSIDE its worker
+/// thread via a `Send` factory closure (see [`super::Router::start`]).
+pub trait Backend {
+    fn name(&self) -> String;
+    fn max_batch(&self) -> usize;
+    fn infer(&mut self, images: &Tensor) -> Result<Tensor>;
+}
+
+/// Native rust engine backend (any [`EngineKernel`] arm).
+pub struct NativeBackend {
+    engine: std::sync::Arc<BnnEngine>,
+    kernel: EngineKernel,
+    batch: usize,
+    scratch: ConvScratch,
+}
+
+impl NativeBackend {
+    pub fn new(
+        engine: std::sync::Arc<BnnEngine>,
+        kernel: EngineKernel,
+        batch: usize,
+    ) -> Self {
+        Self { engine, kernel, batch, scratch: ConvScratch::default() }
+    }
+
+    /// Default arm: the paper's kernel, best native implementation.
+    pub fn xnor(engine: std::sync::Arc<BnnEngine>, batch: usize) -> Self {
+        Self::new(engine, EngineKernel::Xnor(XnorImpl::Blocked), batch)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        format!("native/{}", self.kernel.name())
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer(&mut self, images: &Tensor) -> Result<Tensor> {
+        Ok(self
+            .engine
+            .forward_with_scratch(images, self.kernel, &mut self.scratch))
+    }
+}
+
+/// PJRT executable backend (fixed batch baked at AOT time).
+pub struct PjrtBackend {
+    model: LoadedModel,
+}
+
+impl PjrtBackend {
+    pub fn new(model: LoadedModel) -> Self {
+        Self { model }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt/{}", self.model.name)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.model.batch
+    }
+
+    fn infer(&mut self, images: &Tensor) -> Result<Tensor> {
+        self.model.infer(images)
+    }
+}
+
+/// Test stub: logits[i][c] = image mean * (c == target) with an optional
+/// artificial delay, so tests can assert routing and batching without a
+/// model.
+pub struct MockBackend {
+    pub batch: usize,
+    pub delay: std::time::Duration,
+    pub calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl MockBackend {
+    pub fn new(batch: usize, delay_ms: u64) -> Self {
+        Self {
+            batch,
+            delay: std::time::Duration::from_millis(delay_ms),
+            calls: Default::default(),
+        }
+    }
+}
+
+impl Backend for MockBackend {
+    fn name(&self) -> String {
+        format!("mock/b{}", self.batch)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer(&mut self, images: &Tensor) -> Result<Tensor> {
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let b = images.dim(0);
+        let chw = images.len() / b;
+        let mut out = vec![0.0f32; b * 10];
+        for i in 0..b {
+            let mean: f32 = images.data()[i * chw..(i + 1) * chw]
+                .iter()
+                .sum::<f32>()
+                / chw as f32;
+            // Deterministic "class": scaled mean bucketed into 0..10.
+            let cls = (((mean + 1.0) / 2.0 * 9.99) as usize).min(9);
+            out[i * 10 + cls] = 1.0 + mean.abs();
+        }
+        Ok(Tensor::new(vec![b, 10], out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_backend_deterministic() {
+        let mut m = MockBackend::new(4, 0);
+        let x = Tensor::full(vec![2, 3, 32, 32], 0.5);
+        let a = m.infer(&x).unwrap();
+        let b = m.infer(&x).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(m.calls.load(std::sync::atomic::Ordering::SeqCst), 2);
+        assert_eq!(a.shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn mock_class_tracks_mean() {
+        let mut m = MockBackend::new(1, 0);
+        let lo = m.infer(&Tensor::full(vec![1, 3, 32, 32], -0.9)).unwrap();
+        let hi = m.infer(&Tensor::full(vec![1, 3, 32, 32], 0.9)).unwrap();
+        let am = crate::nn::argmax(lo.row(0));
+        let bm = crate::nn::argmax(hi.row(0));
+        assert!(am < bm, "{am} vs {bm}");
+    }
+}

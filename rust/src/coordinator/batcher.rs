@@ -1,0 +1,137 @@
+//! Dynamic batcher: max-size / max-delay batch formation.
+//!
+//! One batcher thread owns the request queue.  A batch closes when
+//! `max_batch` requests are waiting, or `max_delay` has elapsed since
+//! the FIRST request of the batch arrived — the standard serving
+//! trade-off between throughput (big batches) and tail latency.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Batch-formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_delay: Duration::from_millis(5) }
+    }
+}
+
+/// Pulls from `rx` and yields closed batches.
+pub struct DynamicBatcher<T> {
+    rx: mpsc::Receiver<T>,
+    cfg: BatcherConfig,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: mpsc::Receiver<T>, cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Self { rx, cfg }
+    }
+
+    /// Block until a batch forms; `None` when all senders are gone.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block for the batch's first element.
+        let first = self.rx.recv().ok()?;
+        let mut batch = Vec::with_capacity(self.cfg.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + self.cfg.max_delay;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_delay: Duration::from_secs(5) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn closes_on_delay_with_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(10),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn none_when_senders_dropped() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let (tx, rx) = mpsc::channel();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 3,
+                max_delay: Duration::from_millis(200),
+            },
+        );
+        let h = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(2).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(3).unwrap();
+        });
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch, vec![1, 2, 3]); // closed by max_batch, not delay
+    }
+
+    #[test]
+    fn partial_batch_on_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 5, max_delay: Duration::from_secs(1) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,168 @@
+//! Serving metrics: counters + a lock-free log-bucketed latency
+//! histogram (offline substrate for an HDR-histogram crate).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram with logarithmic buckets from 1us to ~17min.
+/// Bucket i covers [2^i, 2^(i+1)) microseconds.
+const BUCKETS: usize = 30;
+
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile (upper bound of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All coordinator counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub queue_latency: Histogram,
+    pub total_latency: Histogram,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub queue_mean_us: f64,
+    pub queue_p99_us: u64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                self.batched_requests.load(Ordering::Relaxed) as f64
+                    / batches as f64
+            },
+            queue_mean_us: self.queue_latency.mean_us(),
+            queue_p99_us: self.queue_latency.quantile_us(0.99),
+            latency_mean_us: self.total_latency.mean_us(),
+            latency_p50_us: self.total_latency.quantile_us(0.5),
+            latency_p99_us: self.total_latency.quantile_us(0.99),
+        }
+    }
+
+    /// Prometheus-style exposition for GET /metrics.
+    pub fn render_prometheus(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "bitkernel_requests_submitted {}\n\
+             bitkernel_requests_completed {}\n\
+             bitkernel_requests_rejected {}\n\
+             bitkernel_batches_total {}\n\
+             bitkernel_batch_size_mean {:.3}\n\
+             bitkernel_queue_latency_mean_us {:.1}\n\
+             bitkernel_queue_latency_p99_us {}\n\
+             bitkernel_latency_mean_us {:.1}\n\
+             bitkernel_latency_p50_us {}\n\
+             bitkernel_latency_p99_us {}\n",
+            s.submitted,
+            s.completed,
+            s.rejected,
+            s.batches,
+            s.mean_batch_size,
+            s.queue_mean_us,
+            s.queue_p99_us,
+            s.latency_mean_us,
+            s.latency_p50_us,
+            s.latency_p99_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.record_us(us);
+            }
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1000, "{p50}");
+        assert!((h.mean_us() - 22222.0).abs() < 1000.0);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_batch_mean() {
+        let m = Metrics::default();
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert_eq!(m.snapshot().mean_batch_size, 2.5);
+        assert!(m.render_prometheus().contains("bitkernel_batches_total 4"));
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving coordinator: dynamic batching over pluggable inference
+//! backends, with bounded-queue backpressure and latency metrics.
+//!
+//! Request path (all rust, no python):
+//!
+//! ```text
+//!     client -> Router::submit -> bounded queue -> batcher thread
+//!            -> worker (native engine or PJRT executable) -> response
+//! ```
+//!
+//! The batcher implements the classic max-size/max-delay policy: a batch
+//! closes when `max_batch` requests are waiting or the oldest request
+//! has waited `max_delay`, whichever comes first — the knob the
+//! `benches/batching.rs` harness sweeps.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use backend::{Backend, MockBackend, NativeBackend, PjrtBackend};
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{InferReply, Router, RouterConfig, SubmitError};

@@ -1,0 +1,340 @@
+//! Router: bounded admission queue -> dynamic batcher -> backend worker.
+//!
+//! One [`Router`] drives one backend on a dedicated thread.  Submission
+//! is non-blocking with explicit backpressure (`SubmitError::QueueFull`
+//! when the admission queue is at capacity); replies come back over
+//! per-request channels.  A serving deployment maps model names to
+//! routers (see `server/`).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::nn::argmax;
+use crate::tensor::Tensor;
+
+use super::backend::Backend;
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+
+pub const IMAGE_ELEMS: usize = 3 * 32 * 32;
+
+/// A completed inference.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub class: usize,
+    pub logits: Vec<f32>,
+    /// Time from submit to batch formation.
+    pub queue_us: u64,
+    /// Time from submit to reply.
+    pub total_us: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission queue at capacity — caller should retry/shed.
+    QueueFull,
+    /// Router shut down.
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full"),
+            SubmitError::Shutdown => write!(f, "router shut down"),
+        }
+    }
+}
+
+struct Request {
+    /// Normalized CHW image (3*32*32 f32).
+    image: Vec<f32>,
+    submitted: Instant,
+    reply_tx: mpsc::Sender<InferReply>,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Admission queue capacity (backpressure bound).
+    pub queue_cap: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { queue_cap: 256, batcher: BatcherConfig::default() }
+    }
+}
+
+/// A running pipeline: queue -> batcher -> backend.
+pub struct Router {
+    tx: Option<mpsc::SyncSender<Request>>,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+    backend_name: String,
+}
+
+impl Router {
+    /// Spawn the worker thread; the backend is constructed INSIDE it via
+    /// `factory` (PJRT handles are not `Send`).  Construction errors are
+    /// surfaced synchronously.
+    pub fn start<F>(factory: F, cfg: RouterConfig) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
+        let metrics = Arc::new(Metrics::default());
+        let m = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) =
+            mpsc::channel::<anyhow::Result<(String, usize)>>();
+        let batcher_cfg = cfg.batcher;
+        let worker = std::thread::Builder::new()
+            .name("bk-worker".to_string())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok((b.name(), b.max_batch())));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let bcfg = BatcherConfig {
+                    // Never form batches larger than the backend.
+                    max_batch: batcher_cfg.max_batch.min(backend.max_batch()),
+                    max_delay: batcher_cfg.max_delay,
+                };
+                let batcher = DynamicBatcher::new(rx, bcfg);
+                let cap = backend.max_batch();
+                while let Some(batch) = batcher.next_batch() {
+                    let formed = Instant::now();
+                    let b = batch.len();
+                    m.batches.fetch_add(1, Ordering::Relaxed);
+                    m.batched_requests.fetch_add(b as u64, Ordering::Relaxed);
+                    for r in &batch {
+                        m.queue_latency.record_us(
+                            (formed - r.submitted).as_micros() as u64,
+                        );
+                    }
+                    // Assemble the (padded) image tensor.
+                    let mut data = vec![0.0f32; cap * IMAGE_ELEMS];
+                    for (i, r) in batch.iter().enumerate() {
+                        data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS]
+                            .copy_from_slice(&r.image);
+                    }
+                    let images =
+                        Tensor::new(vec![cap, 3, 32, 32], data);
+                    match backend.infer(&images) {
+                        Ok(logits) => {
+                            let done = Instant::now();
+                            for (i, r) in batch.into_iter().enumerate() {
+                                let row = logits.row(i).to_vec();
+                                let reply = InferReply {
+                                    class: argmax(&row),
+                                    logits: row,
+                                    queue_us: (formed - r.submitted)
+                                        .as_micros()
+                                        as u64,
+                                    total_us: (done - r.submitted)
+                                        .as_micros()
+                                        as u64,
+                                };
+                                m.total_latency
+                                    .record_us(reply.total_us);
+                                m.completed.fetch_add(1, Ordering::Relaxed);
+                                let _ = r.reply_tx.send(reply);
+                            }
+                        }
+                        Err(e) => {
+                            crate::log_error!(
+                                "backend inference failed: {e:#}"
+                            );
+                            // Drop the requests; their reply channels
+                            // disconnect, which callers observe as an
+                            // error.
+                            m.rejected
+                                .fetch_add(b as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker");
+        let (backend_name, _max_batch) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
+        Ok(Self { tx: Some(tx), metrics, worker: Some(worker), backend_name })
+    }
+
+    pub fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Non-blocking submit; returns the reply channel.
+    pub fn submit(
+        &self,
+        image_chw: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
+        assert_eq!(image_chw.len(), IMAGE_ELEMS, "image element count");
+        let tx = self.tx.as_ref().ok_or(SubmitError::Shutdown)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            image: image_chw,
+            submitted: Instant::now(),
+            reply_tx,
+        };
+        match tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(reply_rx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(SubmitError::Shutdown)
+            }
+        }
+    }
+
+    /// Submit and block for the reply.
+    pub fn submit_wait(&self, image_chw: Vec<f32>) -> Result<InferReply, SubmitError> {
+        let rx = self.submit(image_chw)?;
+        rx.recv().map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Graceful shutdown: drain the queue, then join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use std::time::Duration;
+
+    fn image(v: f32) -> Vec<f32> {
+        vec![v; IMAGE_ELEMS]
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let router = Router::start(
+            || Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
+            RouterConfig::default(),
+        )
+        .unwrap();
+        let reply = router.submit_wait(image(0.9)).unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        assert!(reply.class >= 8, "{}", reply.class); // high mean -> high class
+        assert!(reply.total_us >= reply.queue_us);
+        let snap = router.metrics().snapshot();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let backend = MockBackend::new(8, 5);
+        let calls = Arc::clone(&backend.calls);
+        let router = Router::start(
+            move || Ok(Box::new(backend) as Box<dyn Backend>),
+            RouterConfig {
+                queue_cap: 64,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(50),
+                },
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|_| router.submit(image(0.0)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // All 8 should have ridden one or two batches, not 8 singles.
+        let n = calls.load(Ordering::SeqCst);
+        assert!(n <= 2, "backend called {n} times");
+        assert!(router.metrics().snapshot().mean_batch_size >= 4.0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Slow backend + tiny queue -> QueueFull.
+        let router = Router::start(
+            || Ok(Box::new(MockBackend::new(1, 50)) as Box<dyn Backend>),
+            RouterConfig {
+                queue_cap: 2,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let mut rejected = 0;
+        let mut kept = Vec::new();
+        for _ in 0..20 {
+            match router.submit(image(0.0)) {
+                Ok(rx) => kept.push(rx),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert!(rejected > 0, "expected rejections");
+        for rx in kept {
+            let _ = rx.recv();
+        }
+        assert_eq!(router.metrics().snapshot().rejected, rejected);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let router = Router::start(
+            || Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>),
+            RouterConfig::default(),
+        )
+        .unwrap();
+        let r = router.submit_wait(image(0.1)).unwrap();
+        assert_eq!(r.logits.len(), 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let router = Router::start(
+            || Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>),
+            RouterConfig::default(),
+        )
+        .unwrap();
+        let metrics = router.metrics();
+        router.shutdown();
+        let _ = metrics.snapshot(); // metrics survive shutdown
+    }
+}

@@ -1,0 +1,165 @@
+//! BKD1 dataset loader (mirror of python/compile/dataset.py).
+//!
+//! ```text
+//!     magic  b"BKD1"
+//!     u32le  count, height, width, channels
+//!     count * { u8 label, h*w*c u8 pixels (HWC row-major) }
+//! ```
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// An in-memory image dataset (uint8 HWC + labels).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub count: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// count * h*w*c bytes, HWC row-major per image.
+    pub pixels: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl Dataset {
+    pub fn parse(mut r: impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == b"BKD1", "bad magic {magic:?}");
+        let count = read_u32(&mut r)? as usize;
+        let height = read_u32(&mut r)? as usize;
+        let width = read_u32(&mut r)? as usize;
+        let channels = read_u32(&mut r)? as usize;
+        ensure!(count < 10_000_000 && height * width * channels < 1 << 24,
+                "implausible dims");
+        let img_bytes = height * width * channels;
+        let mut pixels = vec![0u8; count * img_bytes];
+        let mut labels = vec![0u8; count];
+        for i in 0..count {
+            let mut lab = [0u8; 1];
+            r.read_exact(&mut lab).context("label")?;
+            labels[i] = lab[0];
+            r.read_exact(&mut pixels[i * img_bytes..(i + 1) * img_bytes])
+                .context("pixels")?;
+        }
+        Ok(Self { count, height, width, channels, pixels, labels })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Self::parse(std::io::BufReader::new(f))
+    }
+
+    /// View of one image's raw HWC bytes.
+    pub fn image(&self, i: usize) -> &[u8] {
+        let n = self.height * self.width * self.channels;
+        &self.pixels[i * n..(i + 1) * n]
+    }
+
+    /// Normalize images `lo..hi` into a float NCHW tensor in [-1, 1].
+    pub fn normalized(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(hi <= self.count && lo <= hi);
+        normalize_batch(
+            &self.pixels[lo * self.height * self.width * self.channels
+                ..hi * self.height * self.width * self.channels],
+            hi - lo,
+            self.height,
+            self.width,
+            self.channels,
+        )
+    }
+}
+
+/// uint8 HWC batch -> f32 NCHW in [-1, 1]  (x/127.5 - 1, like python).
+pub fn normalize_batch(
+    pixels: &[u8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Tensor {
+    assert_eq!(pixels.len(), n * h * w * c);
+    let mut out = vec![0.0f32; n * c * h * w];
+    for i in 0..n {
+        let img = &pixels[i * h * w * c..(i + 1) * h * w * c];
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    out[((i * c + ch) * h + y) * w + x] =
+                        img[(y * w + x) * c + ch] as f32 / 127.5 - 1.0;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, c, h, w], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_blob() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(b"BKD1");
+        for v in [2u32, 2, 2, 3] {
+            out.extend(v.to_le_bytes());
+        }
+        for i in 0..2u8 {
+            out.push(i); // label
+            out.extend((0..12).map(|p| p + i * 12)); // pixels
+        }
+        out
+    }
+
+    #[test]
+    fn parse_and_views() {
+        let ds = Dataset::parse(&sample_blob()[..]).unwrap();
+        assert_eq!(ds.count, 2);
+        assert_eq!(ds.labels, vec![0, 1]);
+        assert_eq!(ds.image(1)[0], 12);
+    }
+
+    #[test]
+    fn normalize_layout_and_range() {
+        // single white pixel at (0,0) channel 2
+        let mut px = vec![0u8; 12];
+        px[2] = 255;
+        let t = normalize_batch(&px, 1, 2, 2, 3);
+        assert_eq!(t.shape(), &[1, 3, 2, 2]);
+        // channel 2 plane, position (0,0) == +1; everything else == -1
+        assert_eq!(t.data()[2 * 4], 1.0);
+        assert_eq!(t.data()[0], -1.0);
+    }
+
+    #[test]
+    fn normalized_range_slices() {
+        let ds = Dataset::parse(&sample_blob()[..]).unwrap();
+        let t = ds.normalized(1, 2);
+        assert_eq!(t.shape(), &[1, 3, 2, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut blob = sample_blob();
+        blob[1] = b'X';
+        assert!(Dataset::parse(&blob[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let blob = sample_blob();
+        assert!(Dataset::parse(&blob[..blob.len() - 2]).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Dataset handling: the BKD1 binary format written by python (the
+//! shared ShapeSet-10 splits) plus a native generator for load tests.
+
+pub mod bkd;
+pub mod shapeset;
+
+pub use bkd::{normalize_batch, Dataset};
+pub use shapeset::random_image;

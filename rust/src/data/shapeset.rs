@@ -1,0 +1,124 @@
+//! Native ShapeSet-10-style image generator.
+//!
+//! Used by the load generator and benches to synthesize request payloads
+//! without reading the dataset from disk.  It draws the same 10 shape
+//! classes as python/compile/dataset.py but does NOT need to be
+//! pixel-identical — accuracy experiments always use the shared BKD1
+//! files; this generator only has to look like real traffic.
+
+use crate::utils::Rng;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+
+/// One uint8 HWC image of the given class (0..10).
+pub fn random_image(label: usize, rng: &mut Rng) -> Vec<u8> {
+    assert!(label < 10);
+    let cy = rng.uniform(10.0, 22.0);
+    let cx = rng.uniform(10.0, 22.0);
+    let r = rng.uniform(6.0, 12.0);
+    let mut fg = [rng.uniform(0.55, 1.0), rng.uniform(0.55, 1.0),
+                  rng.uniform(0.55, 1.0)];
+    let mut bg = [rng.uniform(0.0, 0.45), rng.uniform(0.0, 0.45),
+                  rng.uniform(0.0, 0.45)];
+    if rng.next_f32() < 0.3 {
+        std::mem::swap(&mut fg, &mut bg);
+    }
+    let period = 3 + rng.below(3) as i32;
+    let flip = rng.next_f32() < 0.5;
+
+    let mut out = vec![0u8; H * W * C];
+    for y in 0..H {
+        for x in 0..W {
+            let yy = y as f32 - cy;
+            let xx = x as f32 - cx;
+            let m: f32 = match label {
+                0 => f32::from(yy * yy + xx * xx <= r * r),
+                1 => f32::from(yy.abs() <= r * 0.8 && xx.abs() <= r * 0.8),
+                2 => f32::from(
+                    yy.abs() <= r * 0.7 && xx.abs() <= (yy + r * 0.7) * 0.6,
+                ),
+                3 => {
+                    let t = r * 0.3;
+                    f32::from(
+                        (yy.abs() <= t || xx.abs() <= t)
+                            && yy.abs() <= r
+                            && xx.abs() <= r,
+                    )
+                }
+                4 => {
+                    let d2 = yy * yy + xx * xx;
+                    f32::from(d2 <= r * r && d2 >= (r * 0.55) * (r * 0.55))
+                }
+                5 => f32::from((y as i32 / period) % 2 == 0),
+                6 => f32::from((x as i32 / period) % 2 == 0),
+                7 => f32::from(
+                    ((y as i32 / period) + (x as i32 / period)) % 2 == 0,
+                ),
+                8 => f32::from(
+                    (y as i32 % (period + 2)) < 2
+                        && (x as i32 % (period + 2)) < 2,
+                ),
+                9 => {
+                    let g = (y + x) as f32 / (H + W - 2) as f32;
+                    if flip {
+                        1.0 - g
+                    } else {
+                        g
+                    }
+                }
+                _ => unreachable!(),
+            };
+            for ch in 0..C {
+                let v = m * fg[ch] + (1.0 - m) * bg[ch]
+                    + 0.06 * rng.normal();
+                out[(y * W + x) * C + ch] =
+                    (v.clamp(0.0, 1.0) * 255.0) as u8;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = random_image(0, &mut Rng::new(1));
+        let b = random_image(0, &mut Rng::new(1));
+        assert_eq!(a.len(), H * W * C);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_classes_render() {
+        let mut rng = Rng::new(2);
+        for label in 0..10 {
+            let img = random_image(label, &mut rng);
+            // non-degenerate: some pixel variation
+            let min = *img.iter().min().unwrap();
+            let max = *img.iter().max().unwrap();
+            assert!(max > min, "class {label} degenerate");
+        }
+    }
+
+    #[test]
+    fn classes_differ_on_average() {
+        let mut rng = Rng::new(3);
+        let mean = |l: usize, rng: &mut Rng| -> f64 {
+            let mut acc = 0f64;
+            for _ in 0..8 {
+                let img = random_image(l, rng);
+                acc += img.iter().map(|&v| v as f64).sum::<f64>()
+                    / img.len() as f64;
+            }
+            acc / 8.0
+        };
+        let m5 = mean(5, &mut rng); // stripes: ~half fg
+        let m8 = mean(8, &mut rng); // dot grid: mostly bg
+        assert!((m5 - m8).abs() > 5.0, "{m5} vs {m8}");
+    }
+}

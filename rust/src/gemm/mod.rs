@@ -1,0 +1,190 @@
+//! Float-32 gemm kernels — the non-binarized arms of Table 2.
+//!
+//! Both take `a` as [D, k] row-major and `bt` as [N, k] row-major (the
+//! TRANSPOSE of the mathematical right operand, matching the packed
+//! layout used by the xnor kernels so every arm sees the same memory
+//! traffic pattern) and write `out[i * n + j] = <a_i, bt_j>`.
+//!
+//! * [`gemm_naive`]   — the paper's Control Group (Sec 4.3): plain
+//!   dot-product loops, no vendor library, no blocking.
+//! * [`gemm_blocked`] — cache/register-blocked float gemm, standing in
+//!   for the "highly optimized by MKL" PyTorch CPU kernel.
+
+/// Control-group gemm: naive dot products, one MAC per element.
+pub fn gemm_naive(a: &[f32], bt: &[f32], out: &mut [f32], d: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), d * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), d * n);
+    for i in 0..d {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bt[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Blocked gemm: 4-column register blocking + 4-way unrolled reduction
+/// with independent accumulators (keeps the FMA pipeline busy), standing
+/// in for the vendor-optimized float kernel.
+pub fn gemm_blocked(a: &[f32], bt: &[f32], out: &mut [f32], d: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), d * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), d * n);
+    let n4 = n & !3;
+    for i in 0..d {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let b0 = &bt[j * k..(j + 1) * k];
+            let b1 = &bt[(j + 1) * k..(j + 2) * k];
+            let b2 = &bt[(j + 2) * k..(j + 3) * k];
+            let b3 = &bt[(j + 3) * k..(j + 4) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
+            for kk in 0..k {
+                let av = arow[kk];
+                a0 += av * b0[kk];
+                a1 += av * b1[kk];
+                a2 += av * b2[kk];
+                a3 += av * b3[kk];
+            }
+            orow[j] = a0;
+            orow[j + 1] = a1;
+            orow[j + 2] = a2;
+            orow[j + 3] = a3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &bt[j * k..(j + 1) * k];
+            orow[j] = dot_unrolled(arow, brow);
+            j += 1;
+        }
+    }
+}
+
+/// 4-way unrolled dot product with independent accumulators.
+#[inline]
+fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    let k4 = a.len() & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    let mut kk = 0;
+    while kk < k4 {
+        s0 += a[kk] * b[kk];
+        s1 += a[kk + 1] * b[kk + 1];
+        s2 += a[kk + 2] * b[kk + 2];
+        s3 += a[kk + 3] * b[kk + 3];
+        kk += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while kk < a.len() {
+        s += a[kk] * b[kk];
+        kk += 1;
+    }
+    s
+}
+
+/// Which float kernel to run (mirrors [`crate::bitops::XnorImpl`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmImpl {
+    Naive,
+    Blocked,
+}
+
+pub fn gemm_f32(
+    a: &[f32],
+    bt: &[f32],
+    out: &mut [f32],
+    d: usize,
+    k: usize,
+    n: usize,
+    imp: GemmImpl,
+) {
+    match imp {
+        GemmImpl::Naive => gemm_naive(a, bt, out, d, k, n),
+        GemmImpl::Blocked => gemm_blocked(a, bt, out, d, k, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::Rng;
+
+    fn reference(a: &[f32], bt: &[f32], d: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f64; d * n];
+        for i in 0..d {
+            for j in 0..n {
+                out[i * n + j] = (0..k)
+                    .map(|kk| a[i * k + kk] as f64 * bt[j * k + kk] as f64)
+                    .sum();
+            }
+        }
+        out.into_iter().map(|v| v as f32).collect()
+    }
+
+    fn check(d: usize, k: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = rng.normal_vec(d * k);
+        let bt = rng.normal_vec(n * k);
+        let want = reference(&a, &bt, d, k, n);
+        for imp in [GemmImpl::Naive, GemmImpl::Blocked] {
+            let mut got = vec![0.0f32; d * n];
+            gemm_f32(&a, &bt, &mut got, d, k, n, imp);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                    "{imp:?} d={d} k={k} n={n}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference() {
+        for (d, k, n) in [(1, 1, 1), (3, 7, 5), (4, 32, 4), (5, 100, 9),
+                          (8, 64, 8), (2, 300, 3)] {
+            check(d, k, n, (d + k + n) as u64);
+        }
+    }
+
+    #[test]
+    fn exact_on_binary_values() {
+        let mut rng = Rng::new(3);
+        let (d, k, n) = (6, 95, 7);
+        let a = rng.sign_vec(d * k);
+        let bt = rng.sign_vec(n * k);
+        let mut naive = vec![0.0f32; d * n];
+        let mut blocked = vec![0.0f32; d * n];
+        gemm_naive(&a, &bt, &mut naive, d, k, n);
+        gemm_blocked(&a, &bt, &mut blocked, d, k, n);
+        assert_eq!(naive, blocked); // integer-valued: exact equality
+        for v in naive {
+            assert!(v.abs() <= k as f32 && v.fract() == 0.0);
+        }
+    }
+
+    #[test]
+    fn agrees_with_xnor_gemm_on_signs() {
+        use crate::bitops::{pack_rows, xnor_gemm, XnorImpl};
+        let mut rng = Rng::new(11);
+        let (d, k, n) = (5, 70, 6);
+        let a = rng.sign_vec(d * k);
+        let bt = rng.sign_vec(n * k);
+        let mut fout = vec![0.0f32; d * n];
+        gemm_naive(&a, &bt, &mut fout, d, k, n);
+        let mut iout = vec![0i32; d * n];
+        xnor_gemm(
+            &pack_rows(&a, d, k),
+            &pack_rows(&bt, n, k),
+            &mut iout,
+            XnorImpl::Blocked,
+        );
+        let f_as_i: Vec<i32> = fout.iter().map(|&v| v as i32).collect();
+        assert_eq!(f_as_i, iout);
+    }
+}

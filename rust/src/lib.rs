@@ -1,0 +1,41 @@
+//! BitKernel — an XNOR-bitcount binarized-network inference stack.
+//!
+//! Reproduction of "A Computing Kernel for Network Binarization on PyTorch"
+//! (Xu & Pedersoli, 2019) as a three-layer system:
+//!
+//! * **L1** Pallas xnor-bitcount / encode kernels (python, build time),
+//! * **L2** the Binarized Neural Network forward graph in JAX, AOT-lowered
+//!   to HLO text artifacts,
+//! * **L3** this crate: a native compute engine (the paper's "CPU" arm),
+//!   a PJRT runtime that loads the AOT artifacts (the "accelerator" arm),
+//!   and a serving coordinator (dynamic batching, router, metrics, HTTP).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `bitkernel` binary is self-contained.
+//!
+//! Layout:
+//! * [`tensor`] — minimal NCHW float tensor + packed bit matrices
+//! * [`bitops`] — bit packing and the xnor-bitcount gemm family
+//! * [`gemm`]   — float gemm kernels (naive control group / blocked)
+//! * [`nn`]     — im2col, conv, pooling, batchnorm, linear
+//! * [`model`]  — BNN config, BKW1 weights, the native inference engine
+//! * [`data`]   — ShapeSet-10 (BKD1) loading + native generation
+//! * [`runtime`] — PJRT client wrapper + artifact manifest/registry
+//! * [`coordinator`] — dynamic batcher, workers, router, metrics
+//! * [`server`] — minimal HTTP/1.1 front-end
+//! * [`utils`], [`benchkit`], [`testing`] — substrates built in-repo
+//!   (offline environment: no tokio/clap/criterion/proptest)
+
+pub mod benchkit;
+pub mod bitops;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod gemm;
+pub mod model;
+pub mod nn;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod testing;
+pub mod utils;

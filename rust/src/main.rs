@@ -1,0 +1,349 @@
+//! bitkernel — CLI entry point for the serving coordinator.
+//!
+//! Subcommands:
+//! * `serve`    — run the HTTP inference service
+//! * `classify` — classify test-set images from the command line
+//! * `eval`     — accuracy of a weight file over the test split
+//! * `inspect`  — summarize the artifact manifest
+//! * `selftest` — verify the three Table-2 arms agree end-to-end
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::cli::{render_help, Args, FlagSpec};
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, NativeBackend, PjrtBackend, Router, RouterConfig,
+};
+use bitkernel::data::Dataset;
+use bitkernel::model::{BnnEngine, EngineKernel};
+use bitkernel::runtime::Runtime;
+use bitkernel::server::{serve, ServeOptions, Service, CLASS_NAMES};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "classify" => cmd_classify(rest),
+        "eval" => cmd_eval(rest),
+        "inspect" => cmd_inspect(rest),
+        "selftest" => cmd_selftest(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `bitkernel help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "bitkernel — XNOR-bitcount BNN inference stack\n\n\
+         usage: bitkernel <subcommand> [flags]\n\n\
+         subcommands:\n\
+         \x20 serve     run the HTTP inference service\n\
+         \x20 classify  classify test-set images\n\
+         \x20 eval      accuracy over the test split\n\
+         \x20 inspect   summarize the artifact manifest\n\
+         \x20 selftest  verify all kernel arms agree\n\n\
+         run `bitkernel <subcommand> --help` for flags"
+    );
+}
+
+const COMMON: [FlagSpec; 2] = [
+    FlagSpec { name: "artifacts", takes_value: true,
+               default: Some("artifacts"),
+               help: "artifacts directory (make artifacts)" },
+    FlagSpec { name: "help", takes_value: false, default: None,
+               help: "show this help" },
+];
+
+fn parse_kernel(name: &str) -> Result<EngineKernel> {
+    Ok(match name {
+        "xnor" | "xnor-blocked" => EngineKernel::Xnor(XnorImpl::Blocked),
+        "xnor-scalar" => EngineKernel::Xnor(XnorImpl::Scalar),
+        "xnor-word64" => EngineKernel::Xnor(XnorImpl::Word64),
+        "control" => EngineKernel::Control,
+        "optimized" => EngineKernel::Optimized,
+        other => bail!("unknown kernel '{other}'"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = [
+        COMMON[0].clone(),
+        FlagSpec { name: "addr", takes_value: true,
+                   default: Some("127.0.0.1:8080"), help: "bind address" },
+        FlagSpec { name: "backend", takes_value: true,
+                   default: Some("native-xnor"),
+                   help: "native-{xnor,control,optimized} or pjrt-{xnor,control,optimized}" },
+        FlagSpec { name: "weights", takes_value: true, default: Some("small"),
+                   help: "weight set: small (trained) or full" },
+        FlagSpec { name: "batch", takes_value: true, default: Some("8"),
+                   help: "max dynamic batch size" },
+        FlagSpec { name: "max-delay-ms", takes_value: true, default: Some("5"),
+                   help: "batch formation deadline" },
+        FlagSpec { name: "queue-cap", takes_value: true, default: Some("256"),
+                   help: "admission queue capacity" },
+        FlagSpec { name: "threads", takes_value: true, default: Some("4"),
+                   help: "HTTP handler threads" },
+        COMMON[1].clone(),
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help("serve", "run the HTTP service", &specs));
+        return Ok(());
+    }
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let backend = args.get_or("backend", "native-xnor").to_string();
+    let weights = args.get_or("weights", "small").to_string();
+    let batch = args.get_usize("batch", 8)?;
+    let delay = args.get_usize("max-delay-ms", 5)?;
+    let cfg = RouterConfig {
+        queue_cap: args.get_usize("queue-cap", 256)?,
+        batcher: BatcherConfig {
+            max_batch: batch,
+            max_delay: std::time::Duration::from_millis(delay as u64),
+        },
+    };
+
+    let router = start_backend(&artifacts, &backend, &weights, batch, cfg)?;
+    let mut routers = BTreeMap::new();
+    routers.insert("bnn".to_string(), router);
+    let service = Arc::new(Service::new(routers, "bnn"));
+    let stop = Arc::new(AtomicBool::new(false));
+    serve(
+        service,
+        &ServeOptions {
+            addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+            threads: args.get_usize("threads", 4)?,
+        },
+        stop,
+        None,
+    )
+}
+
+/// Wire up one backend per the `--backend` spec string.
+fn start_backend(
+    artifacts: &str,
+    backend: &str,
+    weights: &str,
+    batch: usize,
+    cfg: RouterConfig,
+) -> Result<Router> {
+    let artifacts = artifacts.to_string();
+    let weights_name = weights.to_string();
+    match backend {
+        b if b.starts_with("native-") => {
+            let kernel = parse_kernel(&b["native-".len()..])?;
+            Router::start(
+                move || {
+                    let manifest =
+                        bitkernel::runtime::Manifest::load(&artifacts)?;
+                    let path = manifest.weight_file(&weights_name)?;
+                    let engine = Arc::new(BnnEngine::load(path)?);
+                    Ok(Box::new(NativeBackend::new(engine, kernel, batch))
+                        as Box<dyn Backend>)
+                },
+                cfg,
+            )
+        }
+        b if b.starts_with("pjrt-") => {
+            let variant = b["pjrt-".len()..].to_string();
+            Router::start(
+                move || {
+                    let mut rt = Runtime::new(&artifacts)?;
+                    let name = rt
+                        .manifest
+                        .find_model(&weights_name, &variant, batch)?
+                        .name
+                        .clone();
+                    rt.load_model(&name)?;
+                    let model = rt.take_model(&name)?;
+                    Ok(Box::new(PjrtBackend::new(model)) as Box<dyn Backend>)
+                },
+                cfg,
+            )
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// classify / eval / inspect / selftest
+// ---------------------------------------------------------------------------
+
+fn cmd_classify(argv: &[String]) -> Result<()> {
+    let specs = [
+        COMMON[0].clone(),
+        FlagSpec { name: "index", takes_value: true, default: Some("0"),
+                   help: "first test-set image index" },
+        FlagSpec { name: "count", takes_value: true, default: Some("8"),
+                   help: "number of images" },
+        FlagSpec { name: "kernel", takes_value: true, default: Some("xnor"),
+                   help: "xnor|xnor-scalar|xnor-word64|control|optimized" },
+        FlagSpec { name: "weights", takes_value: true, default: Some("small"),
+                   help: "weight set" },
+        COMMON[1].clone(),
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help("classify", "classify test images", &specs));
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let ds = Dataset::load(dir.join("dataset_test.bin"))?;
+    let weights = format!("weights_{}.bkw", args.get_or("weights", "small"));
+    let engine = BnnEngine::load(dir.join(weights))?;
+    let kernel = parse_kernel(args.get_or("kernel", "xnor"))?;
+    let lo = args.get_usize("index", 0)?;
+    let n = args.get_usize("count", 8)?.min(ds.count - lo);
+    let x = ds.normalized(lo, lo + n);
+    let preds = engine.predict(&x, kernel);
+    println!("kernel: {}", kernel.name());
+    let mut correct = 0;
+    for (i, p) in preds.iter().enumerate() {
+        let truth = ds.labels[lo + i] as usize;
+        let mark = if *p == truth { "ok " } else { "MISS" };
+        if *p == truth {
+            correct += 1;
+        }
+        println!(
+            "image {:>5}  pred {:<13} truth {:<13} {}",
+            lo + i,
+            CLASS_NAMES[*p],
+            CLASS_NAMES[truth],
+            mark
+        );
+    }
+    println!("{correct}/{n} correct");
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let specs = [
+        COMMON[0].clone(),
+        FlagSpec { name: "count", takes_value: true, default: Some("1024"),
+                   help: "number of test images" },
+        FlagSpec { name: "kernel", takes_value: true, default: Some("xnor"),
+                   help: "kernel arm" },
+        FlagSpec { name: "weights", takes_value: true, default: Some("small"),
+                   help: "weight set" },
+        FlagSpec { name: "batch", takes_value: true, default: Some("32"),
+                   help: "eval batch size" },
+        COMMON[1].clone(),
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help("eval", "test-split accuracy", &specs));
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let ds = Dataset::load(dir.join("dataset_test.bin"))?;
+    let weights = format!("weights_{}.bkw", args.get_or("weights", "small"));
+    let engine = BnnEngine::load(dir.join(weights))?;
+    let kernel = parse_kernel(args.get_or("kernel", "xnor"))?;
+    let n = args.get_usize("count", 1024)?.min(ds.count);
+    let x = ds.normalized(0, n);
+    let sw = bitkernel::utils::Stopwatch::start();
+    let acc = engine.evaluate(&x, &ds.labels[..n], kernel,
+                              args.get_usize("batch", 32)?);
+    println!(
+        "kernel {}  images {n}  accuracy {:.4}  ({:.2}s, {:.1} img/s)",
+        kernel.name(),
+        acc,
+        sw.elapsed_secs(),
+        n as f64 / sw.elapsed_secs()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let specs = [COMMON[0].clone(), COMMON[1].clone()];
+    let args = Args::parse(argv, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help("inspect", "summarize artifacts", &specs));
+        return Ok(());
+    }
+    let manifest =
+        bitkernel::runtime::Manifest::load(args.get_or("artifacts", "artifacts"))
+            .context("load manifest (run `make artifacts`)")?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!("\nmodels ({}):", manifest.models.len());
+    for m in &manifest.models {
+        println!(
+            "  {:<28} variant {:<10} scale {:<5} batch {:<3} args {}",
+            m.name, m.variant, m.scale, m.batch,
+            m.inputs.len()
+        );
+    }
+    println!("\nkernels ({}):", manifest.kernels.len());
+    for k in &manifest.kernels {
+        println!(
+            "  {:<24} {}x{}x{} ({})",
+            k.name, k.d, k.k, k.n, k.kernel
+        );
+    }
+    println!("\nweights:");
+    for w in &manifest.weights {
+        println!("  {:<8} {} (scale {}, trained: {})",
+                 w.name, w.file, w.scale, w.trained);
+    }
+    Ok(())
+}
+
+fn cmd_selftest(argv: &[String]) -> Result<()> {
+    let specs = [COMMON[0].clone(), COMMON[1].clone()];
+    let args = Args::parse(argv, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help("selftest", "verify kernel arms", &specs));
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let ds = Dataset::load(dir.join("dataset_test.bin"))?;
+    let engine = BnnEngine::load(dir.join("weights_small.bkw"))?;
+    let x = ds.normalized(0, 4);
+    let reference = engine.forward(&x, EngineKernel::Optimized);
+    let mut ok = true;
+    for kernel in [
+        EngineKernel::Control,
+        EngineKernel::Xnor(XnorImpl::Scalar),
+        EngineKernel::Xnor(XnorImpl::Word64),
+        EngineKernel::Xnor(XnorImpl::Blocked),
+    ] {
+        let diff = engine.forward(&x, kernel).max_abs_diff(&reference);
+        let status = if diff <= 2e-3 { "ok" } else { "FAIL" };
+        if diff > 2e-3 {
+            ok = false;
+        }
+        println!("{:<16} max |Δlogit| = {diff:.2e}  {status}", kernel.name());
+    }
+    if !ok {
+        bail!("selftest failed");
+    }
+    println!("all arms agree");
+    Ok(())
+}

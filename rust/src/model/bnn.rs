@@ -1,0 +1,292 @@
+//! The native BNN inference engine — the Table-2 "CPU" arm.
+//!
+//! Executes the exact network of python/compile/model.py from a BKW1
+//! weight file, with the gemm kernel swapped per [`EngineKernel`]:
+//!
+//! * `Xnor(imp)`  — "Our Kernel": encode + xnor-bitcount (Sec. 3)
+//! * `Control`    — "Control Group": naive float-32 Gemm-Accumulation
+//! * `Optimized`  — "PyTorch" row: blocked float gemm (the vendor-
+//!   optimized stand-in)
+//!
+//! All three arms compute IDENTICAL logits (integer arithmetic on
+//! {-1,+1}); `rust/tests/integration_engine.rs` pins that invariant, and
+//! `integration_runtime.rs` pins agreement with the PJRT artifacts.
+//!
+//! conv1 consumes the real-valued image in every arm (see DESIGN.md §4):
+//! the Control arm runs it with the naive float gemm, the other two with
+//! the blocked float gemm.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::bitops::{pack_rows, XnorImpl};
+use crate::gemm::GemmImpl;
+use crate::nn::conv::{conv2d, ConvKernel, ConvParams, ConvScratch, ConvWeights};
+use crate::nn::linear::{linear, LinearKernel};
+use crate::nn::{argmax, bn_affine_nchw, bn_affine_rows, maxpool2};
+use crate::tensor::Tensor;
+
+use super::config::{ModelConfig, IMAGE_C, IMAGE_HW, NUM_CLASSES};
+use super::format::WeightFile;
+
+/// Which Table-2 arm to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKernel {
+    /// The paper's xnor-bitcount kernel, with the given implementation.
+    Xnor(XnorImpl),
+    /// The paper's control group: naive float gemm, no vendor library.
+    Control,
+    /// Vendor-optimized float stand-in (blocked gemm).
+    Optimized,
+}
+
+impl EngineKernel {
+    pub fn name(&self) -> String {
+        match self {
+            EngineKernel::Xnor(imp) => format!("xnor/{}", imp.name()),
+            EngineKernel::Control => "control".into(),
+            EngineKernel::Optimized => "optimized".into(),
+        }
+    }
+}
+
+struct ConvLayer {
+    params: ConvParams,
+    pool: bool,
+    binarized: bool,
+    w_float: ConvWeights,
+    w_packed: Option<ConvWeights>,
+    bn_a: Vec<f32>,
+    bn_b: Vec<f32>,
+}
+
+struct FcLayer {
+    din: usize,
+    dout: usize,
+    w_float: ConvWeights,
+    w_packed: ConvWeights,
+    bn_a: Vec<f32>,
+    bn_b: Vec<f32>,
+}
+
+/// A loaded, ready-to-run BNN.
+pub struct BnnEngine {
+    pub cfg: ModelConfig,
+    convs: Vec<ConvLayer>,
+    fcs: Vec<FcLayer>,
+}
+
+impl BnnEngine {
+    /// Build from a parsed BKW1 file (binarized weights + folded BN).
+    pub fn from_weight_file(wf: &WeightFile) -> Result<Self> {
+        let cfg = ModelConfig::from_widths(&wf.widths()?)?;
+        let mut convs = Vec::with_capacity(cfg.convs.len());
+        for s in &cfg.convs {
+            let wt = wf.get(&format!("{}.w", s.name))?;
+            ensure!(
+                wt.shape == vec![s.cout, s.cin, s.ksize, s.ksize],
+                "{}: shape {:?}", s.name, wt.shape
+            );
+            let w = wt.as_f32()?; // row-major [D, C, k, k] == [D, K]
+            let packed = s
+                .binarized
+                .then(|| ConvWeights::Packed(pack_rows(&w, s.cout, s.k())));
+            let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
+            let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
+            ensure!(bn_a.len() == s.cout && bn_b.len() == s.cout,
+                    "bn_{} length", s.name);
+            convs.push(ConvLayer {
+                params: ConvParams {
+                    cout: s.cout,
+                    cin: s.cin,
+                    ksize: s.ksize,
+                    stride: s.stride,
+                    pad: s.pad,
+                },
+                pool: s.pool,
+                binarized: s.binarized,
+                w_float: ConvWeights::Float(w),
+                w_packed: packed,
+                bn_a,
+                bn_b,
+            });
+        }
+        let mut fcs = Vec::with_capacity(cfg.fcs.len());
+        for s in &cfg.fcs {
+            let wt = wf.get(&format!("{}.w", s.name))?;
+            ensure!(wt.shape == vec![s.dout, s.din],
+                    "{}: shape {:?}", s.name, wt.shape);
+            let w = wt.as_f32()?;
+            let packed = ConvWeights::Packed(pack_rows(&w, s.dout, s.din));
+            let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
+            let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
+            fcs.push(FcLayer {
+                din: s.din,
+                dout: s.dout,
+                w_float: ConvWeights::Float(w),
+                w_packed: packed,
+                bn_a,
+                bn_b,
+            });
+        }
+        Ok(Self { cfg, convs, fcs })
+    }
+
+    /// Convenience: load straight from a .bkw path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let wf = WeightFile::load(&path).context("loading weight file")?;
+        Self::from_weight_file(&wf)
+    }
+
+    /// Full forward pass: normalized NCHW images -> logits [B, 10].
+    pub fn forward(&self, x: &Tensor, kernel: EngineKernel) -> Tensor {
+        let mut scratch = ConvScratch::default();
+        self.forward_with_scratch(x, kernel, &mut scratch)
+    }
+
+    /// Forward pass with a per-layer wall-time breakdown (perf tooling;
+    /// see `cargo bench --bench profile` and EXPERIMENTS.md §Perf).
+    pub fn forward_profiled(
+        &self,
+        x: &Tensor,
+        kernel: EngineKernel,
+    ) -> (Tensor, Vec<(String, f64)>) {
+        let mut scratch = ConvScratch::default();
+        let mut stages = Vec::new();
+        let out = self.forward_inner(x, kernel, &mut scratch,
+                                     &mut Some(&mut stages));
+        (out, stages)
+    }
+
+    /// Forward pass reusing caller-owned scratch (the serving hot path).
+    pub fn forward_with_scratch(
+        &self,
+        x: &Tensor,
+        kernel: EngineKernel,
+        scratch: &mut ConvScratch,
+    ) -> Tensor {
+        self.forward_inner(x, kernel, scratch, &mut None)
+    }
+
+    fn forward_inner(
+        &self,
+        x: &Tensor,
+        kernel: EngineKernel,
+        scratch: &mut ConvScratch,
+        stages: &mut Option<&mut Vec<(String, f64)>>,
+    ) -> Tensor {
+        use crate::utils::Stopwatch;
+        macro_rules! stage {
+            ($name:expr, $body:expr) => {{
+                let sw = Stopwatch::start();
+                let out = $body;
+                if let Some(s) = stages.as_deref_mut() {
+                    s.push(($name, sw.elapsed_secs()));
+                }
+                out
+            }};
+        }
+        assert_eq!(x.dim(1), IMAGE_C);
+        assert_eq!(x.dim(2), IMAGE_HW);
+        let mut h = x.clone();
+        for (li, layer) in self.convs.iter().enumerate() {
+            let (ck, w): (ConvKernel, &ConvWeights) = if !layer.binarized {
+                // conv1: float input in every arm.
+                let imp = match kernel {
+                    EngineKernel::Control => GemmImpl::Naive,
+                    _ => GemmImpl::Blocked,
+                };
+                (ConvKernel::FloatReal(imp), &layer.w_float)
+            } else {
+                match kernel {
+                    EngineKernel::Xnor(imp) => (
+                        ConvKernel::Xnor(imp),
+                        layer.w_packed.as_ref().expect("packed weights"),
+                    ),
+                    EngineKernel::Control => (
+                        ConvKernel::FloatBinarized(GemmImpl::Naive),
+                        &layer.w_float,
+                    ),
+                    EngineKernel::Optimized => (
+                        ConvKernel::FloatBinarized(GemmImpl::Blocked),
+                        &layer.w_float,
+                    ),
+                }
+            };
+            h = stage!(format!("conv{}", li + 1),
+                       conv2d(&h, w, &layer.params, ck, scratch));
+            if layer.pool {
+                h = stage!(format!("pool{}", li + 1), maxpool2(&h));
+            }
+            bn_affine_nchw(&mut h, &layer.bn_a, &layer.bn_b);
+        }
+
+        // Flatten NCHW -> [B, C*H*W] (row-major: already (c, h, w) order).
+        let b = h.dim(0);
+        let feat = h.len() / b;
+        let mut h = h.reshaped(vec![b, feat]);
+
+        for (li, layer) in self.fcs.iter().enumerate() {
+            assert_eq!(h.dim(1), layer.din);
+            let (lk, w): (LinearKernel, &ConvWeights) = match kernel {
+                EngineKernel::Xnor(imp) => {
+                    (LinearKernel::Xnor(imp), &layer.w_packed)
+                }
+                EngineKernel::Control => (
+                    LinearKernel::FloatBinarized(GemmImpl::Naive),
+                    &layer.w_float,
+                ),
+                EngineKernel::Optimized => (
+                    LinearKernel::FloatBinarized(GemmImpl::Blocked),
+                    &layer.w_float,
+                ),
+            };
+            h = stage!(format!("fc{}", li + 1),
+                       linear(&h, w, layer.dout, lk));
+            bn_affine_rows(&mut h, &layer.bn_a, &layer.bn_b);
+        }
+        assert_eq!(h.dim(1), NUM_CLASSES);
+        h
+    }
+
+    /// Predicted class per image.
+    pub fn predict(&self, x: &Tensor, kernel: EngineKernel) -> Vec<usize> {
+        let logits = self.forward(x, kernel);
+        let b = logits.dim(0);
+        (0..b).map(|i| argmax(logits.row(i))).collect()
+    }
+
+    /// Accuracy over a normalized NCHW image tensor + labels.
+    pub fn evaluate(
+        &self,
+        images: &Tensor,
+        labels: &[u8],
+        kernel: EngineKernel,
+        batch: usize,
+    ) -> f32 {
+        let n = images.dim(0);
+        assert_eq!(labels.len(), n);
+        let chw = IMAGE_C * IMAGE_HW * IMAGE_HW;
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        let mut scratch = ConvScratch::default();
+        while done < n {
+            let b = batch.min(n - done);
+            let slice = Tensor::new(
+                vec![b, IMAGE_C, IMAGE_HW, IMAGE_HW],
+                images.data()[done * chw..(done + b) * chw].to_vec(),
+            );
+            let logits = self.forward_with_scratch(
+                &slice,
+                kernel,
+                &mut scratch,
+            );
+            for i in 0..b {
+                if argmax(logits.row(i)) == labels[done + i] as usize {
+                    correct += 1;
+                }
+            }
+            done += b;
+        }
+        correct as f32 / n as f32
+    }
+}

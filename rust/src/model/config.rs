@@ -1,0 +1,127 @@
+//! BNN architecture description — the rust mirror of
+//! python/compile/model.py::ModelConfig.
+//!
+//! The canonical source of truth at runtime is the `meta.widths` tensor
+//! in the BKW1 weight file ([c1..c6, f1, f2, 10]); `from_widths` rebuilds
+//! the full spec list from it so rust and python can never drift on
+//! scale arithmetic.
+
+pub const IMAGE_HW: usize = 32;
+pub const IMAGE_C: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+
+/// One convolutional layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// 2x2 max-pool after this conv.
+    pub pool: bool,
+    /// Input activations are binarized (all convs except conv1).
+    pub binarized: bool,
+}
+
+impl ConvSpec {
+    /// Gemm reduction length K = Cin * k * k.
+    pub fn k(&self) -> usize {
+        self.cin * self.ksize * self.ksize
+    }
+}
+
+/// One fully-connected layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FcSpec {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// The whole network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub convs: Vec<ConvSpec>,
+    pub fcs: Vec<FcSpec>,
+}
+
+impl ModelConfig {
+    /// Rebuild from the widths vector stored in a BKW1 file:
+    /// [c1, c2, c3, c4, c5, c6, f1, f2, classes].
+    pub fn from_widths(widths: &[u32]) -> anyhow::Result<Self> {
+        anyhow::ensure!(widths.len() == 9, "expected 9 widths, got {}",
+                        widths.len());
+        let w: Vec<usize> = widths.iter().map(|&x| x as usize).collect();
+        let chans = [IMAGE_C, w[0], w[1], w[2], w[3], w[4], w[5]];
+        let convs = (0..6)
+            .map(|i| ConvSpec {
+                name: format!("conv{}", i + 1),
+                cin: chans[i],
+                cout: chans[i + 1],
+                ksize: 3,
+                stride: 1,
+                pad: 1,
+                pool: i % 2 == 1, // after conv2, conv4, conv6
+                binarized: i != 0,
+            })
+            .collect();
+        let hw = IMAGE_HW / 8; // three 2x2 pools
+        let dins = [w[4] * hw * hw, w[6], w[7]];
+        let fcs = (0..3)
+            .map(|i| FcSpec {
+                name: format!("fc{}", i + 1),
+                din: dins[i],
+                dout: if i == 2 { w[8] } else { w[5 + i + 1] },
+            })
+            .collect();
+        Ok(Self { convs, fcs })
+    }
+
+    /// Total learnable parameter count (weights + folded BN affines).
+    pub fn param_count(&self) -> usize {
+        let conv: usize = self.convs.iter().map(|s| s.cout * s.k()).sum();
+        let fc: usize = self.fcs.iter().map(|s| s.din * s.dout).sum();
+        let bn: usize = self.convs.iter().map(|s| 2 * s.cout).sum::<usize>()
+            + self.fcs.iter().map(|s| 2 * s.dout).sum::<usize>();
+        conv + fc + bn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: [u32; 9] = [128, 128, 256, 256, 512, 512, 1024, 1024, 10];
+
+    #[test]
+    fn full_scale_matches_paper() {
+        let cfg = ModelConfig::from_widths(&FULL).unwrap();
+        assert_eq!(cfg.convs.len(), 6);
+        assert_eq!(cfg.fcs.len(), 3);
+        assert_eq!(cfg.convs[0].cin, 3);
+        assert!(!cfg.convs[0].binarized);
+        assert!(cfg.convs[1].binarized && cfg.convs[1].pool);
+        assert_eq!(cfg.convs[5].cout, 512);
+        assert_eq!(cfg.fcs[0].din, 512 * 4 * 4);
+        assert_eq!(cfg.fcs[2].dout, 10);
+        let p = cfg.param_count();
+        assert!((13_000_000..16_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn small_scale() {
+        let cfg = ModelConfig::from_widths(&[32, 32, 64, 64, 128, 128, 256,
+                                             256, 10])
+            .unwrap();
+        assert_eq!(cfg.fcs[0].din, 128 * 16);
+        assert_eq!(cfg.fcs[1].din, 256);
+        assert_eq!(cfg.convs[2].k(), 32 * 9);
+    }
+
+    #[test]
+    fn rejects_bad_length() {
+        assert!(ModelConfig::from_widths(&[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! BKW1 weight-file format (mirror of python/compile/train.py).
+//!
+//! ```text
+//!     magic  b"BKW1"
+//!     u32le  n_tensors
+//!     n_tensors * {
+//!         u16le name_len, name (utf-8),
+//!         u8 dtype (0 = f32, 1 = u32),
+//!         u8 ndim, ndim * u32le dims,
+//!         data (little-endian, row-major)
+//!     }
+//! ```
+//!
+//! Contains `meta.widths` (u32[9]) plus, per layer, the sign-binarized
+//! weight tensor and the folded BN affine (`bn_<layer>.a` / `.b`).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U32,
+}
+
+/// One named tensor from a BKW1 file.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// Raw little-endian words; reinterpret per `dtype`.
+    pub words: Vec<u32>,
+}
+
+impl WeightTensor {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == Dtype::F32, "tensor is not f32");
+        Ok(self.words.iter().map(|&w| f32::from_bits(w)).collect())
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        ensure!(self.dtype == Dtype::U32, "tensor is not u32");
+        Ok(&self.words)
+    }
+}
+
+/// A parsed BKW1 file.
+#[derive(Debug, Clone)]
+pub struct WeightFile {
+    tensors: BTreeMap<String, WeightTensor>,
+}
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let b = read_exact(r, 2)?;
+    Ok(u16::from_le_bytes([b[0], b[1]]))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let b = read_exact(r, 4)?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+impl WeightFile {
+    pub fn parse(mut r: impl Read) -> Result<Self> {
+        let magic = read_exact(&mut r, 4)?;
+        ensure!(&magic == b"BKW1", "bad magic {magic:?}");
+        let n = read_u32(&mut r)? as usize;
+        ensure!(n < 100_000, "implausible tensor count {n}");
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u16(&mut r)? as usize;
+            let name = String::from_utf8(read_exact(&mut r, name_len)?)
+                .context("tensor name not utf-8")?;
+            let dt = read_exact(&mut r, 1)?[0];
+            let dtype = match dt {
+                0 => Dtype::F32,
+                1 => Dtype::U32,
+                _ => bail!("unknown dtype {dt} for '{name}'"),
+            };
+            let ndim = read_exact(&mut r, 1)?[0] as usize;
+            ensure!(ndim <= 8, "implausible ndim {ndim}");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            ensure!(count < 1 << 28, "implausible element count {count}");
+            let raw = read_exact(&mut r, count * 4)
+                .with_context(|| format!("data of '{name}'"))?;
+            let words = raw
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, WeightTensor { dtype, shape, words });
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Self::parse(std::io::BufReader::new(f))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&WeightTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// The architecture widths vector (meta.widths).
+    pub fn widths(&self) -> Result<Vec<u32>> {
+        Ok(self.get("meta.widths")?.as_u32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny BKW1 blob in memory.
+    fn sample_blob() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(b"BKW1");
+        out.extend(2u32.to_le_bytes());
+        // tensor 1: meta.widths u32[3]
+        let name = b"meta.widths";
+        out.extend((name.len() as u16).to_le_bytes());
+        out.extend(name);
+        out.push(1); // u32
+        out.push(1); // ndim
+        out.extend(3u32.to_le_bytes());
+        for v in [8u32, 16, 10] {
+            out.extend(v.to_le_bytes());
+        }
+        // tensor 2: conv1.w f32[2,2]
+        let name = b"conv1.w";
+        out.extend((name.len() as u16).to_le_bytes());
+        out.extend(name);
+        out.push(0); // f32
+        out.push(2); // ndim
+        out.extend(2u32.to_le_bytes());
+        out.extend(2u32.to_le_bytes());
+        for v in [1.0f32, -1.0, 1.0, 1.0] {
+            out.extend(v.to_bits().to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parse_sample() {
+        let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        assert_eq!(wf.len(), 2);
+        assert_eq!(wf.get("meta.widths").unwrap().as_u32().unwrap(),
+                   &[8, 16, 10]);
+        let w = wf.get("conv1.w").unwrap();
+        assert_eq!(w.shape, vec![2, 2]);
+        assert_eq!(w.as_f32().unwrap(), vec![1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut blob = sample_blob();
+        blob[0] = b'X';
+        assert!(WeightFile::parse(&blob[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let blob = sample_blob();
+        assert!(WeightFile::parse(&blob[..blob.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        assert!(wf.get("conv1.w").unwrap().as_u32().is_err());
+        assert!(wf.get("meta.widths").unwrap().as_f32().is_err());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        assert!(wf.get("nope").is_err());
+    }
+}

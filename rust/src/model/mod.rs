@@ -1,0 +1,10 @@
+//! The BNN model layer: architecture config, BKW1 weights, and the
+//! native inference engine (the Table-2 "CPU" arm).
+
+pub mod bnn;
+pub mod config;
+pub mod format;
+
+pub use bnn::{BnnEngine, EngineKernel};
+pub use config::{ConvSpec, FcSpec, ModelConfig};
+pub use format::{Dtype, WeightFile, WeightTensor};

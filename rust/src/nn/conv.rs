@@ -1,0 +1,311 @@
+//! Convolution via im2col + pluggable gemm — Figures 2 and 3 as code.
+//!
+//! [`ConvKernel`] selects the Table-2 arm:
+//! * `Xnor(imp)`       — Figure 3: binarize+pack the column matrix, run
+//!   the xnor-bitcount gemm (weights arrive pre-packed, Sec. 3.1),
+//! * `FloatBinarized`  — Figure 2 on the SAME binarized network: sign the
+//!   column matrix, float gemm on {-1,+1} (naive = Control Group,
+//!   blocked = "optimized library" stand-in),
+//! * `FloatReal`       — plain float conv (used for conv1, whose input
+//!   stays real-valued in every arm).
+
+use crate::bitops::{pack_rows, xnor_gemm, XnorImpl};
+use crate::gemm::{gemm_f32, GemmImpl};
+use crate::tensor::{PackedMatrix, Tensor};
+
+use super::im2col::{col2im_nchw, col2im_nchw_i32, im2col_t, out_hw};
+use super::ops::sign_inplace;
+
+/// The weights of one conv layer, in whichever form the kernel needs.
+#[derive(Debug, Clone)]
+pub enum ConvWeights {
+    /// Row-major [D, K] float (K = C*kh*kw); values {-1,+1} for
+    /// binarized layers.
+    Float(Vec<f32>),
+    /// Pre-packed [D, K] bits (the paper's offline weight encoding).
+    Packed(PackedMatrix),
+}
+
+/// Which gemm runs inside the conv.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvKernel {
+    /// Encode + xnor-bitcount (requires `ConvWeights::Packed`).
+    Xnor(XnorImpl),
+    /// Binarize activations, float gemm (requires `ConvWeights::Float`).
+    FloatBinarized(GemmImpl),
+    /// No binarization at all (conv1; requires `ConvWeights::Float`).
+    FloatReal(GemmImpl),
+}
+
+/// Convolution parameters (square kernels, as in the BNN).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvParams {
+    pub cout: usize,
+    pub cin: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvParams {
+    pub fn k(&self) -> usize {
+        self.cin * self.ksize * self.ksize
+    }
+}
+
+/// Scratch buffers reused across calls on the per-request hot path.
+#[derive(Debug, Default)]
+pub struct ConvScratch {
+    pub cols_packed: Option<PackedMatrix>,
+    pub gemm_i32: Vec<i32>,
+    pub gemm_f32: Vec<f32>,
+}
+
+/// im2col convolution with the selected kernel.
+///
+/// `x`: [B, Cin, H, W]; returns [B, Cout, OH, OW].
+pub fn conv2d(
+    x: &Tensor,
+    weights: &ConvWeights,
+    p: &ConvParams,
+    kernel: ConvKernel,
+    scratch: &mut ConvScratch,
+) -> Tensor {
+    let (b, h, w) = (x.dim(0), x.dim(2), x.dim(3));
+    assert_eq!(x.dim(1), p.cin, "input channels");
+    let (oh, ow) = out_hw(h, w, p.ksize, p.ksize, p.stride, p.pad);
+    let n = b * oh * ow;
+    let k = p.k();
+    let d = p.cout;
+
+    match (kernel, weights) {
+        (ConvKernel::Xnor(imp), ConvWeights::Packed(wp)) => {
+            assert_eq!(wp.rows, d);
+            assert_eq!(wp.k, k);
+            // Fused im2col + encode (§Perf): pack the binarized column
+            // matrix straight from the input; sign(0) = +1 on padding.
+            let mut xp = match scratch.cols_packed.take() {
+                Some(pm) if pm.rows == n && pm.k == k => pm,
+                _ => PackedMatrix::zeros(n, k),
+            };
+            super::im2col::im2col_pack(x, p.ksize, p.ksize, p.stride,
+                                       p.pad, &mut xp);
+            scratch.gemm_i32.resize(d * n, 0);
+            xnor_gemm(wp, &xp, &mut scratch.gemm_i32, imp);
+            scratch.cols_packed = Some(xp);
+            col2im_nchw_i32(&scratch.gemm_i32, b, d, oh, ow)
+        }
+        (ConvKernel::FloatBinarized(imp), ConvWeights::Float(wf)) => {
+            assert_eq!(wf.len(), d * k);
+            let mut cols = im2col_t(x, p.ksize, p.ksize, p.stride, p.pad);
+            sign_inplace(cols.data_mut());
+            scratch.gemm_f32.resize(d * n, 0.0);
+            gemm_f32(wf, cols.data(), &mut scratch.gemm_f32, d, k, n, imp);
+            col2im_nchw(&scratch.gemm_f32, b, d, oh, ow)
+        }
+        (ConvKernel::FloatReal(imp), ConvWeights::Float(wf)) => {
+            assert_eq!(wf.len(), d * k);
+            let cols = im2col_t(x, p.ksize, p.ksize, p.stride, p.pad);
+            scratch.gemm_f32.resize(d * n, 0.0);
+            gemm_f32(wf, cols.data(), &mut scratch.gemm_f32, d, k, n, imp);
+            col2im_nchw(&scratch.gemm_f32, b, d, oh, ow)
+        }
+        (kern, _) => panic!("weight form does not match kernel {kern:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::Rng;
+
+    /// Direct (quadruple-loop) conv reference on binarized operands with
+    /// +1 padding in the sign domain — mirrors python ref.binconv2d_ref.
+    fn binconv_reference(
+        x: &Tensor,
+        wf: &[f32],
+        p: &ConvParams,
+    ) -> Tensor {
+        let (b, h, w) = (x.dim(0), x.dim(2), x.dim(3));
+        let (oh, ow) = out_hw(h, w, p.ksize, p.ksize, p.stride, p.pad);
+        let mut out = Tensor::zeros(vec![b, p.cout, oh, ow]);
+        let sgn = |v: f32| if v >= 0.0 { 1.0 } else { -1.0 };
+        for bi in 0..b {
+            for di in 0..p.cout {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0;
+                        for ci in 0..p.cin {
+                            for dy in 0..p.ksize {
+                                for dx in 0..p.ksize {
+                                    let iy = (oy * p.stride + dy) as isize
+                                        - p.pad as isize;
+                                    let ix = (ox * p.stride + dx) as isize
+                                        - p.pad as isize;
+                                    let xv = if iy >= 0
+                                        && iy < h as isize
+                                        && ix >= 0
+                                        && ix < w as isize
+                                    {
+                                        x.data()[((bi * p.cin + ci) * h
+                                            + iy as usize)
+                                            * w
+                                            + ix as usize]
+                                    } else {
+                                        0.0 // sign(0) = +1 below
+                                    };
+                                    let wv = wf[di * p.k()
+                                        + (ci * p.ksize + dy) * p.ksize
+                                        + dx];
+                                    acc += sgn(xv) * sgn(wv);
+                                }
+                            }
+                        }
+                        out.data_mut()
+                            [((bi * p.cout + di) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn case(b: usize, p: ConvParams, hw: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::new(
+            vec![b, p.cin, hw, hw],
+            rng.normal_vec(b * p.cin * hw * hw),
+        );
+        let wf_raw = rng.normal_vec(p.cout * p.k());
+        let wf: Vec<f32> = wf_raw
+            .iter()
+            .map(|&v| if v >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let want = binconv_reference(&x, &wf, &p);
+
+        let mut scratch = ConvScratch::default();
+        // Arm 1: xnor
+        let wp = pack_rows(&wf, p.cout, p.k());
+        let got_x = conv2d(
+            &x,
+            &ConvWeights::Packed(wp),
+            &p,
+            ConvKernel::Xnor(XnorImpl::Blocked),
+            &mut scratch,
+        );
+        assert_eq!(got_x.max_abs_diff(&want), 0.0, "xnor arm");
+        // Arm 2: control (naive float)
+        let got_c = conv2d(
+            &x,
+            &ConvWeights::Float(wf.clone()),
+            &p,
+            ConvKernel::FloatBinarized(GemmImpl::Naive),
+            &mut scratch,
+        );
+        assert_eq!(got_c.max_abs_diff(&want), 0.0, "control arm");
+        // Arm 3: optimized (blocked float)
+        let got_o = conv2d(
+            &x,
+            &ConvWeights::Float(wf),
+            &p,
+            ConvKernel::FloatBinarized(GemmImpl::Blocked),
+            &mut scratch,
+        );
+        assert_eq!(got_o.max_abs_diff(&want), 0.0, "optimized arm");
+    }
+
+    #[test]
+    fn three_arms_match_direct_reference() {
+        case(
+            2,
+            ConvParams { cout: 4, cin: 3, ksize: 3, stride: 1, pad: 1 },
+            8,
+            1,
+        );
+        case(
+            1,
+            ConvParams { cout: 5, cin: 2, ksize: 3, stride: 2, pad: 1 },
+            9,
+            2,
+        );
+        case(
+            1,
+            ConvParams { cout: 3, cin: 4, ksize: 1, stride: 1, pad: 0 },
+            5,
+            3,
+        );
+        case(
+            2,
+            ConvParams { cout: 2, cin: 1, ksize: 5, stride: 1, pad: 2 },
+            7,
+            4,
+        );
+    }
+
+    #[test]
+    fn float_real_matches_dense_math() {
+        // FloatReal: no binarization; compare against direct float conv.
+        let p = ConvParams { cout: 2, cin: 2, ksize: 3, stride: 1, pad: 0 };
+        let mut rng = Rng::new(9);
+        let x = Tensor::new(vec![1, 2, 5, 5], rng.normal_vec(50));
+        let wf = rng.normal_vec(p.cout * p.k());
+        let mut scratch = ConvScratch::default();
+        let got = conv2d(
+            &x,
+            &ConvWeights::Float(wf.clone()),
+            &p,
+            ConvKernel::FloatReal(GemmImpl::Blocked),
+            &mut scratch,
+        );
+        // brute force
+        let (oh, ow) = out_hw(5, 5, 3, 3, 1, 0);
+        for di in 0..2 {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..2 {
+                        for dy in 0..3 {
+                            for dx in 0..3 {
+                                acc += x.data()
+                                    [(ci * 5 + oy + dy) * 5 + ox + dx]
+                                    * wf[di * 18 + (ci * 3 + dy) * 3 + dx];
+                            }
+                        }
+                    }
+                    let got_v =
+                        got.data()[(di * oh + oy) * ow + ox];
+                    assert!((got_v - acc).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_safe() {
+        let p = ConvParams { cout: 3, cin: 2, ksize: 3, stride: 1, pad: 1 };
+        let mut rng = Rng::new(5);
+        let wf: Vec<f32> = rng.sign_vec(p.cout * p.k());
+        let wp = pack_rows(&wf, p.cout, p.k());
+        let mut scratch = ConvScratch::default();
+        let x1 = Tensor::new(vec![1, 2, 6, 6], rng.normal_vec(72));
+        let a1 = conv2d(&x1, &ConvWeights::Packed(wp.clone()), &p,
+                        ConvKernel::Xnor(XnorImpl::Scalar), &mut scratch);
+        let a2 = conv2d(&x1, &ConvWeights::Packed(wp), &p,
+                        ConvKernel::Xnor(XnorImpl::Scalar), &mut scratch);
+        assert_eq!(a1.max_abs_diff(&a2), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight form")]
+    fn mismatched_weight_form_panics() {
+        let p = ConvParams { cout: 1, cin: 1, ksize: 1, stride: 1, pad: 0 };
+        let x = Tensor::zeros(vec![1, 1, 2, 2]);
+        conv2d(
+            &x,
+            &ConvWeights::Float(vec![1.0]),
+            &p,
+            ConvKernel::Xnor(XnorImpl::Scalar),
+            &mut ConvScratch::default(),
+        );
+    }
+}

@@ -1,0 +1,298 @@
+//! im2col / col2im — the paper's Figure 1.
+//!
+//! `im2col_t` lowers an NCHW batch into the TRANSPOSED column matrix
+//! [N, K] (N = B*OH*OW output positions ordered (b, oh, ow); K = C*kh*kw
+//! patch elements ordered (c, i, j), matching
+//! `lax.conv_general_dilated_patches` and python's ref.im2col_ref).
+//! Spatial zero padding inserts literal 0.0 values — binarization maps
+//! them to +1 downstream, identical to the python oracle.
+
+use crate::tensor::Tensor;
+
+/// Output spatial dims for a conv.
+pub fn out_hw(h: usize, w: usize, kh: usize, kw: usize, stride: usize,
+              pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - kh) / stride + 1, (w + 2 * pad - kw) / stride + 1)
+}
+
+/// NCHW [B, C, H, W] -> transposed column matrix [B*OH*OW, C*kh*kw].
+pub fn im2col_t(x: &Tensor, kh: usize, kw: usize, stride: usize,
+                pad: usize) -> Tensor {
+    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = out_hw(h, w, kh, kw, stride, pad);
+    let k = c * kh * kw;
+    let n = b * oh * ow;
+    let xd = x.data();
+    let mut out = vec![0.0f32; n * k];
+
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut out[((bi * oh + oy) * ow + ox) * k..][..k];
+                let iy0 = (oy * stride) as isize - pad as isize;
+                let ix0 = (ox * stride) as isize - pad as isize;
+                let mut idx = 0;
+                for ci in 0..c {
+                    let plane = &xd[(bi * c + ci) * h * w..][..h * w];
+                    for dy in 0..kh {
+                        let iy = iy0 + dy as isize;
+                        if iy < 0 || iy >= h as isize {
+                            idx += kw; // row stays zero (padding)
+                            continue;
+                        }
+                        let src = &plane[iy as usize * w..][..w];
+                        for dx in 0..kw {
+                            let ix = ix0 + dx as isize;
+                            if ix >= 0 && ix < w as isize {
+                                row[idx] = src[ix as usize];
+                            }
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, k], out)
+}
+
+/// Fused im2col + encode (§Perf optimization 1): pack the binarized
+/// column matrix straight from the NCHW input, never materializing the
+/// [N, K] float matrix.  Exactly equivalent to
+/// `pack_rows(im2col_t(x, ..).data(), n, k)`:
+/// spatial padding contributes value 0.0 -> sign +1 -> bit 1.
+pub fn im2col_pack(x: &Tensor, kh: usize, kw: usize, stride: usize,
+                   pad: usize, out: &mut crate::tensor::PackedMatrix) {
+    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, ow) = out_hw(h, w, kh, kw, stride, pad);
+    let k = c * kh * kw;
+    let n = b * oh * ow;
+    assert_eq!(out.rows, n, "packed rows");
+    assert_eq!(out.k, k, "packed k");
+    let xd = x.data();
+    let kwords = out.kw;
+
+    // Accumulate each 32-bit word in a register and store once (a
+    // read-modify-write per bit costs ~4x; §Perf optimization 2).
+    struct BitWriter<'a> {
+        row: &'a mut [u32],
+        word: u32,
+        bits: u32,
+        widx: usize,
+    }
+    impl<'a> BitWriter<'a> {
+        #[inline]
+        fn push(&mut self, bit: u32) {
+            self.word |= bit << self.bits;
+            self.bits += 1;
+            if self.bits == 32 {
+                self.row[self.widx] = self.word;
+                self.widx += 1;
+                self.word = 0;
+                self.bits = 0;
+            }
+        }
+        #[inline]
+        fn finish(self) {
+            if self.bits > 0 {
+                self.row[self.widx] = self.word;
+            }
+        }
+    }
+
+    for bi in 0..b {
+        for oy in 0..oh {
+            let iy0 = (oy * stride) as isize - pad as isize;
+            for ox in 0..ow {
+                let r = (bi * oh + oy) * ow + ox;
+                let row = &mut out.data[r * kwords..(r + 1) * kwords];
+                let ix0 = (ox * stride) as isize - pad as isize;
+                let mut bw = BitWriter { row, word: 0, bits: 0, widx: 0 };
+                for ci in 0..c {
+                    let plane = &xd[(bi * c + ci) * h * w..][..h * w];
+                    for dy in 0..kh {
+                        let iy = iy0 + dy as isize;
+                        if iy < 0 || iy >= h as isize {
+                            // padding: value 0.0 -> sign +1 -> bit 1
+                            for _ in 0..kw {
+                                bw.push(1);
+                            }
+                            continue;
+                        }
+                        let src = &plane[iy as usize * w..][..w];
+                        let in_x0 = ix0.max(0) as usize;
+                        let in_x1 = (ix0 + kw as isize).min(w as isize)
+                            as usize;
+                        // left pad
+                        for _ in 0..(in_x0 as isize - ix0) {
+                            bw.push(1);
+                        }
+                        // interior: branch-free sign bit
+                        for &v in &src[in_x0..in_x1.max(in_x0)] {
+                            bw.push(u32::from(v >= 0.0));
+                        }
+                        // right pad
+                        for _ in 0..(ix0 + kw as isize
+                            - in_x1.max(in_x0) as isize)
+                        {
+                            bw.push(1);
+                        }
+                    }
+                }
+                bw.finish();
+            }
+        }
+    }
+}
+
+/// Gemm output [D, N] (row-major) -> NCHW [B, D, OH, OW].
+pub fn col2im_nchw(gemm_out: &[f32], b: usize, d: usize, oh: usize,
+                   ow: usize) -> Tensor {
+    let n = b * oh * ow;
+    assert_eq!(gemm_out.len(), d * n);
+    let mut out = vec![0.0f32; d * n];
+    let hw = oh * ow;
+    for di in 0..d {
+        let src = &gemm_out[di * n..(di + 1) * n];
+        for bi in 0..b {
+            out[(bi * d + di) * hw..][..hw]
+                .copy_from_slice(&src[bi * hw..(bi + 1) * hw]);
+        }
+    }
+    Tensor::new(vec![b, d, oh, ow], out)
+}
+
+/// col2im fused with the i32 -> f32 conversion of the xnor gemm output
+/// (§Perf optimization 3: one pass instead of convert-then-copy).
+pub fn col2im_nchw_i32(gemm_out: &[i32], b: usize, d: usize, oh: usize,
+                       ow: usize) -> Tensor {
+    let n = b * oh * ow;
+    assert_eq!(gemm_out.len(), d * n);
+    let mut out = vec![0.0f32; d * n];
+    let hw = oh * ow;
+    for di in 0..d {
+        let src = &gemm_out[di * n..(di + 1) * n];
+        for bi in 0..b {
+            let dst = &mut out[(bi * d + di) * hw..][..hw];
+            for (o, &v) in dst.iter_mut().zip(&src[bi * hw..(bi + 1) * hw]) {
+                *o = v as f32;
+            }
+        }
+    }
+    Tensor::new(vec![b, d, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn shapes() {
+        let x = seq_tensor(vec![2, 3, 8, 10]);
+        let cols = im2col_t(&x, 3, 3, 1, 1);
+        assert_eq!(cols.shape(), &[2 * 8 * 10, 27]);
+        assert_eq!(out_hw(8, 10, 3, 3, 1, 1), (8, 10));
+        assert_eq!(out_hw(8, 10, 3, 3, 2, 1), (4, 5));
+    }
+
+    #[test]
+    fn identity_1x1() {
+        // 1x1 kernel, no pad: row n is exactly the channel vector at that
+        // position.
+        let x = seq_tensor(vec![1, 2, 2, 2]);
+        let cols = im2col_t(&x, 1, 1, 1, 0);
+        assert_eq!(cols.shape(), &[4, 2]);
+        // position (0,0): channels [0, 4]; position (1,1): [3, 7]
+        assert_eq!(cols.row(0), &[0.0, 4.0]);
+        assert_eq!(cols.row(3), &[3.0, 7.0]);
+    }
+
+    #[test]
+    fn padding_zeros() {
+        let x = Tensor::full(vec![1, 1, 2, 2], 5.0);
+        let cols = im2col_t(&x, 3, 3, 1, 1);
+        assert_eq!(cols.shape(), &[4, 9]);
+        // top-left output: the 3x3 patch centered at (0,0) has 5 pad zeros
+        let row = cols.row(0);
+        assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), 5);
+        assert_eq!(row.iter().filter(|&&v| v == 5.0).count(), 4);
+    }
+
+    #[test]
+    fn patch_element_order_is_c_i_j() {
+        // One channel distinct from the other: K index = c*kh*kw + i*kw + j.
+        let mut data = vec![0.0f32; 2 * 3 * 3];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let x = Tensor::new(vec![1, 2, 3, 3], data);
+        let cols = im2col_t(&x, 3, 3, 1, 0);
+        assert_eq!(cols.shape(), &[1, 18]);
+        // Single output position: row = [c0 row-major .. c1 row-major].
+        let want: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        assert_eq!(cols.row(0), &want[..]);
+    }
+
+    #[test]
+    fn stride_2() {
+        let x = seq_tensor(vec![1, 1, 4, 4]);
+        let cols = im2col_t(&x, 2, 2, 2, 0);
+        assert_eq!(cols.shape(), &[4, 4]);
+        assert_eq!(cols.row(0), &[0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(cols.row(3), &[10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn col2im_roundtrip_layout() {
+        // D=2 channels, B=2, OH=OW=1: gemm layout [D, N] with N=(b)
+        let gemm_out = [1.0, 2.0, 10.0, 20.0]; // d0: [b0, b1], d1: [b0, b1]
+        let t = col2im_nchw(&gemm_out, 2, 2, 1, 1);
+        assert_eq!(t.shape(), &[2, 2, 1, 1]);
+        assert_eq!(t.data(), &[1.0, 10.0, 2.0, 20.0]);
+    }
+}
+
+#[cfg(test)]
+mod fused_tests {
+    use super::*;
+    use crate::bitops::pack_rows;
+    use crate::tensor::PackedMatrix;
+    use crate::utils::Rng;
+
+    #[test]
+    fn im2col_pack_equals_unfused() {
+        let mut rng = Rng::new(21);
+        for (b, c, h, w, ks, stride, pad) in [
+            (1, 2, 6, 6, 3, 1, 1),
+            (2, 3, 8, 8, 3, 1, 1),
+            (1, 1, 5, 7, 3, 2, 1),
+            (1, 4, 4, 4, 1, 1, 0),
+            (2, 2, 9, 9, 5, 1, 2),
+        ] {
+            let x = Tensor::new(vec![b, c, h, w],
+                                rng.normal_vec(b * c * h * w));
+            let cols = im2col_t(&x, ks, ks, stride, pad);
+            let n = cols.dim(0);
+            let k = cols.dim(1);
+            let want = pack_rows(cols.data(), n, k);
+            let mut got = PackedMatrix::zeros(n, k);
+            im2col_pack(&x, ks, ks, stride, pad, &mut got);
+            assert_eq!(got, want, "b{b} c{c} {h}x{w} k{ks} s{stride} p{pad}");
+        }
+    }
+
+    #[test]
+    fn im2col_pack_padding_is_plus_one() {
+        // all-negative input: real elements bit 0, padding bits 1.
+        let x = Tensor::full(vec![1, 1, 2, 2], -5.0);
+        let mut got = PackedMatrix::zeros(4, 9);
+        im2col_pack(&x, 3, 3, 1, 1, &mut got);
+        // top-left position: 5 padded (bit 1) + 4 real (bit 0)
+        assert_eq!(got.row(0)[0].count_ones(), 5);
+    }
+}

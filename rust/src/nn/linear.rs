@@ -1,0 +1,116 @@
+//! Fully-connected layer over the same kernel family as the convs.
+//!
+//! Input [B, K] (flattened activations), weights [D, K]; output [B, D].
+//! The binarized arms sign the activations first (and the xnor arm packs
+//! them), exactly like the FC layers in python/compile/model.py.
+
+use crate::bitops::{pack_rows, xnor_gemm, XnorImpl};
+use crate::gemm::{gemm_f32, GemmImpl};
+use crate::tensor::{PackedMatrix, Tensor};
+
+use super::conv::ConvWeights;
+use super::ops::sign_inplace;
+
+/// Kernel choice for a linear layer (same arms as conv).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinearKernel {
+    Xnor(XnorImpl),
+    FloatBinarized(GemmImpl),
+}
+
+/// x: [B, K] -> [B, D].
+pub fn linear(
+    x: &Tensor,
+    weights: &ConvWeights,
+    d: usize,
+    kernel: LinearKernel,
+) -> Tensor {
+    let (b, k) = (x.dim(0), x.dim(1));
+    match (kernel, weights) {
+        (LinearKernel::Xnor(imp), ConvWeights::Packed(wp)) => {
+            assert_eq!(wp.rows, d);
+            assert_eq!(wp.k, k);
+            let xp: PackedMatrix = pack_rows(x.data(), b, k);
+            // out_gemm[d, b] -> transpose into [b, d]
+            let mut gemm_out = vec![0i32; d * b];
+            xnor_gemm(wp, &xp, &mut gemm_out, imp);
+            let mut out = vec![0.0f32; b * d];
+            for di in 0..d {
+                for bi in 0..b {
+                    out[bi * d + di] = gemm_out[di * b + bi] as f32;
+                }
+            }
+            Tensor::new(vec![b, d], out)
+        }
+        (LinearKernel::FloatBinarized(imp), ConvWeights::Float(wf)) => {
+            assert_eq!(wf.len(), d * k);
+            let mut xb = x.clone();
+            sign_inplace(xb.data_mut());
+            let mut gemm_out = vec![0.0f32; d * b];
+            gemm_f32(wf, xb.data(), &mut gemm_out, d, k, b, imp);
+            let mut out = vec![0.0f32; b * d];
+            for di in 0..d {
+                for bi in 0..b {
+                    out[bi * d + di] = gemm_out[di * b + bi];
+                }
+            }
+            Tensor::new(vec![b, d], out)
+        }
+        (kern, _) => panic!("weight form does not match kernel {kern:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::Rng;
+
+    #[test]
+    fn arms_agree_and_match_dense() {
+        let (b, k, d) = (3, 70, 5);
+        let mut rng = Rng::new(2);
+        let xf = rng.normal_vec(b * k);
+        let wf = rng.sign_vec(d * k);
+        let x = Tensor::new(vec![b, k], xf.clone());
+
+        // dense reference on signs
+        let mut want = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for di in 0..d {
+                want[bi * d + di] = (0..k)
+                    .map(|kk| {
+                        let xv = if xf[bi * k + kk] >= 0.0 { 1.0 } else { -1.0 };
+                        xv * wf[di * k + kk]
+                    })
+                    .sum();
+            }
+        }
+
+        let got_f = linear(
+            &x,
+            &ConvWeights::Float(wf.clone()),
+            d,
+            LinearKernel::FloatBinarized(GemmImpl::Naive),
+        );
+        assert_eq!(got_f.data(), &want[..]);
+
+        let wp = pack_rows(&wf, d, k);
+        let got_x = linear(
+            &x,
+            &ConvWeights::Packed(wp),
+            d,
+            LinearKernel::Xnor(XnorImpl::Blocked),
+        );
+        assert_eq!(got_x.data(), &want[..]);
+    }
+
+    #[test]
+    fn output_shape() {
+        let x = Tensor::zeros(vec![2, 8]);
+        let w = ConvWeights::Float(vec![1.0; 3 * 8]);
+        let y = linear(&x, &w, 3, LinearKernel::FloatBinarized(GemmImpl::Blocked));
+        assert_eq!(y.shape(), &[2, 3]);
+        // all-zero input binarizes to +1; +1 dot +1 over k=8 = 8
+        assert!(y.data().iter().all(|&v| v == 8.0));
+    }
+}

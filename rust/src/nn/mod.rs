@@ -1,0 +1,25 @@
+//! Neural-network building blocks for the native BNN engine.
+//!
+//! The data flow mirrors the paper's Figure 2/3 exactly:
+//!
+//! ```text
+//!     x (NCHW) -> im2col -> [encode] -> gemm/xnor-gemm -> col2im -> BN
+//! ```
+//!
+//! with the single twist that the im2col matrix is stored TRANSPOSED
+//! ([N, K] row-major, one output position's patch per row) so that both
+//! the bit-packing and every gemm kernel reduce over contiguous memory.
+
+pub mod conv;
+pub mod im2col;
+pub mod linear;
+pub mod norm;
+pub mod ops;
+pub mod pool;
+
+pub use conv::{conv2d, ConvKernel};
+pub use im2col::{col2im_nchw, im2col_t, out_hw};
+pub use linear::linear;
+pub use norm::{bn_affine_nchw, bn_affine_rows};
+pub use ops::{argmax, htanh, sign_inplace, softmax_inplace};
+pub use pool::maxpool2;

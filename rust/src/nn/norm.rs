@@ -1,0 +1,66 @@
+//! Folded inference BatchNorm: per-channel affine `y = a*x + b`.
+
+use crate::tensor::Tensor;
+
+/// Apply a per-channel affine over an NCHW tensor, in place.
+pub fn bn_affine_nchw(x: &mut Tensor, a: &[f32], b: &[f32]) {
+    let (batch, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    assert_eq!(a.len(), c);
+    assert_eq!(b.len(), c);
+    let hw = h * w;
+    let data = x.data_mut();
+    for bi in 0..batch {
+        for ci in 0..c {
+            let (ac, bc) = (a[ci], b[ci]);
+            for v in &mut data[(bi * c + ci) * hw..][..hw] {
+                *v = ac * *v + bc;
+            }
+        }
+    }
+}
+
+/// Apply a per-feature affine over a [B, F] matrix, in place.
+pub fn bn_affine_rows(x: &mut Tensor, a: &[f32], b: &[f32]) {
+    let (batch, f) = (x.dim(0), x.dim(1));
+    assert_eq!(a.len(), f);
+    assert_eq!(b.len(), f);
+    let data = x.data_mut();
+    for bi in 0..batch {
+        for (fi, v) in data[bi * f..(bi + 1) * f].iter_mut().enumerate() {
+            *v = a[fi] * *v + b[fi];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchw_per_channel() {
+        let mut x = Tensor::new(vec![1, 2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        bn_affine_nchw(&mut x, &[2.0, -1.0], &[0.5, 0.0]);
+        assert_eq!(x.data(), &[2.5, 4.5, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn nchw_batch_dim() {
+        let mut x = Tensor::new(vec![2, 1, 1, 1], vec![1.0, 10.0]);
+        bn_affine_nchw(&mut x, &[3.0], &[1.0]);
+        assert_eq!(x.data(), &[4.0, 31.0]);
+    }
+
+    #[test]
+    fn rows_per_feature() {
+        let mut x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        bn_affine_rows(&mut x, &[1.0, 10.0], &[0.0, -1.0]);
+        assert_eq!(x.data(), &[1.0, 19.0, 3.0, 39.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_channel_count_panics() {
+        let mut x = Tensor::zeros(vec![1, 3, 1, 1]);
+        bn_affine_nchw(&mut x, &[1.0], &[0.0]);
+    }
+}

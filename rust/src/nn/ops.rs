@@ -1,0 +1,81 @@
+//! Elementwise ops: sign, htanh, softmax, argmax.
+
+/// In-place deterministic binarization: sign(x) with sign(0) = +1
+/// (matches the bit encoding and the python oracle).
+pub fn sign_inplace(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+    }
+}
+
+/// Hard tanh: clip(x, -1, 1) — the BNN's training activation.  At
+/// inference it only matters if applied before a non-sign consumer;
+/// provided for completeness and the engine's optional activation taps.
+pub fn htanh(x: f32) -> f32 {
+    x.clamp(-1.0, 1.0)
+}
+
+/// Numerically-stable in-place softmax over a logits row.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_zero_is_plus_one() {
+        let mut v = [-2.0, -0.0, 0.0, 3.0];
+        sign_inplace(&mut v);
+        assert_eq!(v, [-1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn htanh_clips() {
+        assert_eq!(htanh(-3.0), -1.0);
+        assert_eq!(htanh(0.25), 0.25);
+        assert_eq!(htanh(9.0), 1.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut row = [1.0, 2.0, 3.0];
+        softmax_inplace(&mut row);
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn softmax_stable_with_large_logits() {
+        let mut row = [1000.0, 1001.0];
+        softmax_inplace(&mut row);
+        assert!(row.iter().all(|v| v.is_finite()));
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

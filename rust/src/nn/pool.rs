@@ -1,0 +1,66 @@
+//! 2x2 max pooling (stride 2), the BNN's only pooling op.
+
+use crate::tensor::Tensor;
+
+/// NCHW [B, C, H, W] -> [B, C, H/2, W/2].  H and W must be even.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even dims, got {h}x{w}");
+    let (oh, ow) = (h / 2, w / 2);
+    let xd = x.data();
+    let mut out = vec![0.0f32; b * c * oh * ow];
+    for p in 0..b * c {
+        let src = &xd[p * h * w..][..h * w];
+        let dst = &mut out[p * oh * ow..][..oh * ow];
+        for oy in 0..oh {
+            let r0 = &src[2 * oy * w..][..w];
+            let r1 = &src[(2 * oy + 1) * w..][..w];
+            for ox in 0..ow {
+                let m = r0[2 * ox]
+                    .max(r0[2 * ox + 1])
+                    .max(r1[2 * ox])
+                    .max(r1[2 * ox + 1]);
+                dst[oy * ow + ox] = m;
+            }
+        }
+    }
+    Tensor::new(vec![b, c, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_maxima() {
+        let x = Tensor::new(
+            vec![1, 1, 4, 4],
+            (0..16).map(|i| i as f32).collect(),
+        );
+        let y = maxpool2(&x);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn channels_independent() {
+        let mut data = vec![0.0; 2 * 2 * 2];
+        data[0..4].copy_from_slice(&[1.0, 2.0, 3.0, 4.0]); // channel 0
+        data[4..8].copy_from_slice(&[-1.0, -2.0, -3.0, -4.0]); // channel 1
+        let x = Tensor::new(vec![1, 2, 2, 2], data);
+        let y = maxpool2(&x);
+        assert_eq!(y.data(), &[4.0, -1.0]);
+    }
+
+    #[test]
+    fn negative_values() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![-5.0, -3.0, -8.0, -4.0]);
+        assert_eq!(maxpool2(&x).data(), &[-3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "even dims")]
+    fn odd_dims_panic() {
+        maxpool2(&Tensor::zeros(vec![1, 1, 3, 4]));
+    }
+}

@@ -1,0 +1,24 @@
+//! Tensor <-> xla::Literal bridge.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Tensor;
+
+/// Dense f32 tensor -> an XLA literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Raw u32 words -> an XLA literal with the given shape.
+pub fn u32s_to_literal(words: &[u32], shape: &[usize]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == words.len(),
+            "shape {shape:?} vs {} words", words.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(words).reshape(&dims)?)
+}
+
+/// Flatten an f32 literal back into a Vec.
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

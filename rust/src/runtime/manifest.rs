@@ -1,0 +1,274 @@
+//! artifacts/manifest.json — the contract between aot.py and this crate.
+//!
+//! The manifest records, for every lowered executable, the exact
+//! flattened HLO parameter order with a recipe for building each
+//! argument from the BKW1 weight file (`transform`), so the rust side
+//! never has to re-derive jax pytree flattening rules.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::utils::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    /// Built from the weight file.
+    Weight,
+    /// The request image batch.
+    Image,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transform {
+    /// Load `source` as-is.
+    None,
+    /// Reshape [D, ...] -> [D, K], sign-binarize, bit-pack rows.
+    PackRows,
+}
+
+/// One HLO parameter of a lowered model.
+#[derive(Debug, Clone)]
+pub struct InputDesc {
+    pub name: String,
+    pub kind: InputKind,
+    pub dtype: String, // "f32" | "u32"
+    pub shape: Vec<usize>,
+    pub transform: Transform,
+    pub source: Option<String>,
+    pub logical_k: Option<usize>,
+}
+
+/// One whole-model executable.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: String,
+    pub variant: String, // xnor | control | optimized
+    pub scale: f64,
+    pub batch: usize,
+    pub weights: String, // "small" | "full"
+    pub inputs: Vec<InputDesc>,
+    pub output_shape: Vec<usize>,
+}
+
+/// One kernel micro executable.
+#[derive(Debug, Clone)]
+pub struct KernelEntry {
+    pub name: String,
+    pub file: String,
+    pub kernel: String, // xnor | control | optimized
+    pub tag: String,    // conv2 | conv4 | conv6 | fc1b8
+    pub d: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Weight-file metadata.
+#[derive(Debug, Clone)]
+pub struct WeightsEntry {
+    pub name: String,
+    pub file: String,
+    pub scale: f64,
+    pub trained: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub kernels: Vec<KernelEntry>,
+    pub weights: Vec<WeightsEntry>,
+    pub test_dataset: Option<String>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim"))
+        .collect()
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .with_context(|| format!("missing '{key}'"))?
+        .as_str()
+        .with_context(|| format!("'{key}' not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let root = Json::parse(&text).context("parse manifest.json")?;
+
+        let mut models = Vec::new();
+        for m in root.get("models").context("models")?.as_arr().unwrap_or(&[])
+        {
+            let mut inputs = Vec::new();
+            for inp in m.get("inputs").context("inputs")?.as_arr().unwrap_or(&[]) {
+                let kind = match str_of(inp, "kind")?.as_str() {
+                    "weight" => InputKind::Weight,
+                    "image" => InputKind::Image,
+                    other => bail!("unknown input kind '{other}'"),
+                };
+                let transform = match str_of(inp, "transform")?.as_str() {
+                    "none" => Transform::None,
+                    "pack_rows" => Transform::PackRows,
+                    other => bail!("unknown transform '{other}'"),
+                };
+                inputs.push(InputDesc {
+                    name: str_of(inp, "name")?,
+                    kind,
+                    dtype: str_of(inp, "dtype")?,
+                    shape: shape_of(inp.get("shape").context("shape")?)?,
+                    transform,
+                    source: inp
+                        .get("source")
+                        .and_then(|s| s.as_str())
+                        .map(String::from),
+                    logical_k: inp.get("logical_k").and_then(|k| k.as_usize()),
+                });
+            }
+            models.push(ModelEntry {
+                name: str_of(m, "name")?,
+                file: str_of(m, "file")?,
+                variant: str_of(m, "variant")?,
+                scale: m.get("scale").and_then(|s| s.as_f64()).unwrap_or(1.0),
+                batch: m.get("batch").and_then(|b| b.as_usize()).context("batch")?,
+                weights: str_of(m, "weights")?,
+                inputs,
+                output_shape: shape_of(
+                    m.get("output").context("output")?.get("shape").context("output.shape")?,
+                )?,
+            });
+        }
+
+        let mut kernels = Vec::new();
+        for k in root.get("kernels").map(|k| k.as_arr().unwrap_or(&[])).unwrap_or(&[]) {
+            kernels.push(KernelEntry {
+                name: str_of(k, "name")?,
+                file: str_of(k, "file")?,
+                kernel: str_of(k, "kernel")?,
+                tag: str_of(k, "tag")?,
+                d: k.get("d").and_then(|v| v.as_usize()).context("d")?,
+                k: k.get("k").and_then(|v| v.as_usize()).context("k")?,
+                n: k.get("n").and_then(|v| v.as_usize()).context("n")?,
+            });
+        }
+
+        let mut weights = Vec::new();
+        if let Some(Json::Obj(map)) = root.get("weights") {
+            for (name, w) in map {
+                weights.push(WeightsEntry {
+                    name: name.clone(),
+                    file: str_of(w, "file")?,
+                    scale: w.get("scale").and_then(|s| s.as_f64()).unwrap_or(1.0),
+                    trained: w
+                        .get("trained")
+                        .and_then(|t| t.as_bool())
+                        .unwrap_or(false),
+                });
+            }
+        }
+
+        let test_dataset = root
+            .get("datasets")
+            .and_then(|d| d.get("test"))
+            .and_then(|t| t.get("file"))
+            .and_then(|f| f.as_str())
+            .map(String::from);
+
+        Ok(Self { dir, models, kernels, weights, test_dataset })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    /// Find a model by (scale name, variant, batch).
+    pub fn find_model(
+        &self,
+        weights: &str,
+        variant: &str,
+        batch: usize,
+    ) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.weights == weights && m.variant == variant
+                  && m.batch == batch)
+            .with_context(|| {
+                format!("no model for weights={weights} variant={variant} batch={batch}")
+            })
+    }
+
+    pub fn weight_file(&self, name: &str) -> Result<PathBuf> {
+        let w = self
+            .weights
+            .iter()
+            .find(|w| w.name == name)
+            .with_context(|| format!("weights '{name}'"))?;
+        Ok(self.dir.join(&w.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_sample(dir: &Path) {
+        let text = r#"{
+          "format": 1,
+          "models": [{
+            "name": "bnn_small_xnor_b1", "file": "m.hlo.txt",
+            "variant": "xnor", "scale": 0.25, "batch": 1,
+            "weights": "small",
+            "inputs": [
+              {"name": "conv1.w", "kind": "weight", "dtype": "f32",
+               "shape": [8,3,3,3], "transform": "none", "source": "conv1.w"},
+              {"name": "conv2.wp", "kind": "weight", "dtype": "u32",
+               "shape": [8,3], "transform": "pack_rows",
+               "source": "conv2.w", "logical_k": 72},
+              {"name": "x", "kind": "image", "dtype": "f32",
+               "shape": [1,3,32,32], "transform": "none", "source": null}
+            ],
+            "output": {"dtype": "f32", "shape": [1, 10]}
+          }],
+          "kernels": [{"name": "k_xnor_conv2", "file": "k.hlo.txt",
+                       "kernel": "xnor", "tag": "conv2",
+                       "d": 128, "k": 1152, "n": 1024,
+                       "inputs": [], "logical_k": 1152}],
+          "weights": {"small": {"file": "w.bkw", "scale": 0.25,
+                      "trained": true}},
+          "datasets": {"test": {"file": "ds.bin", "count": 7}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parse_sample_manifest() {
+        let dir = std::env::temp_dir().join("bk_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let model = m.find_model("small", "xnor", 1).unwrap();
+        assert_eq!(model.inputs.len(), 3);
+        assert_eq!(model.inputs[1].transform, Transform::PackRows);
+        assert_eq!(model.inputs[1].logical_k, Some(72));
+        assert_eq!(model.inputs[2].kind, InputKind::Image);
+        assert_eq!(model.output_shape, vec![1, 10]);
+        assert_eq!(m.kernels[0].d, 128);
+        assert_eq!(m.weight_file("small").unwrap(),
+                   dir.join("w.bkw"));
+        assert_eq!(m.test_dataset.as_deref(), Some("ds.bin"));
+        assert!(m.find_model("small", "xnor", 99).is_err());
+    }
+}

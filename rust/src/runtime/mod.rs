@@ -1,0 +1,14 @@
+//! The PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the Table-2 "accelerator" arm: the whole-model inference
+//! graphs that python lowered (Pallas xnor / Pallas control / XLA
+//! optimized) are compiled once by the PJRT CPU client and then executed
+//! from the rust hot path with zero python involvement.
+
+pub mod literal;
+pub mod manifest;
+pub mod registry;
+
+pub use literal::{literal_to_vec_f32, tensor_to_literal, u32s_to_literal};
+pub use manifest::{InputDesc, InputKind, KernelEntry, Manifest, ModelEntry, Transform};
+pub use registry::{LoadedModel, Runtime};

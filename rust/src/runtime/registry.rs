@@ -1,0 +1,223 @@
+//! The executable registry: PJRT client + lazily-compiled AOT models.
+//!
+//! `Runtime::load_model` reads the HLO text (the 64-bit-id-safe
+//! interchange format), compiles it on the CPU PJRT client, pre-builds
+//! every weight argument literal from the BKW1 file per the manifest's
+//! input recipes, and returns a [`LoadedModel`] whose `infer` needs only
+//! the image batch — the serving hot path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::bitops::pack_rows;
+use crate::model::format::WeightFile;
+use crate::nn::sign_inplace;
+use crate::tensor::Tensor;
+
+use super::literal::{tensor_to_literal, u32s_to_literal};
+use super::manifest::{InputKind, Manifest, ModelEntry, Transform};
+
+/// A compiled whole-model executable with its weight literals baked.
+pub struct LoadedModel {
+    pub name: String,
+    pub variant: String,
+    pub batch: usize,
+    pub output_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+    /// Literals for every HLO parameter; the image slot is rebuilt per
+    /// call (index `image_idx`).
+    weight_literals: Vec<Option<xla::Literal>>,
+    image_idx: usize,
+    image_shape: Vec<usize>,
+}
+
+impl LoadedModel {
+    /// Run one batch: normalized NCHW images -> logits [batch, 10].
+    pub fn infer(&self, images: &Tensor) -> Result<Tensor> {
+        ensure!(
+            images.shape() == self.image_shape,
+            "image shape {:?}, executable wants {:?}",
+            images.shape(),
+            self.image_shape
+        );
+        let image_lit = tensor_to_literal(images)?;
+        // Assemble the argument list (weights are pre-built literals).
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(self.weight_literals.len());
+        for (i, slot) in self.weight_literals.iter().enumerate() {
+            if i == self.image_idx {
+                args.push(&image_lit);
+            } else {
+                args.push(slot.as_ref().expect("weight literal"));
+            }
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Tensor::new(self.output_shape.clone(), values))
+    }
+}
+
+/// PJRT client + manifest + loaded-model cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    weight_files: HashMap<String, WeightFile>,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Self {
+            manifest,
+            client,
+            weight_files: HashMap::new(),
+            models: HashMap::new(),
+        })
+    }
+
+    fn weight_file(&mut self, name: &str) -> Result<&WeightFile> {
+        if !self.weight_files.contains_key(name) {
+            let path = self.manifest.weight_file(name)?;
+            let wf = WeightFile::load(&path)?;
+            self.weight_files.insert(name.to_string(), wf);
+        }
+        Ok(&self.weight_files[name])
+    }
+
+    /// Compile (or fetch from cache) a whole-model executable.
+    pub fn load_model(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.models.contains_key(name) {
+            let entry = self.manifest.model(name)?.clone();
+            let model = self.build_model(&entry)?;
+            self.models.insert(name.to_string(), model);
+        }
+        Ok(&self.models[name])
+    }
+
+    /// Find by (weights, variant, batch) and load.
+    pub fn load_by(
+        &mut self,
+        weights: &str,
+        variant: &str,
+        batch: usize,
+    ) -> Result<&LoadedModel> {
+        let name = self
+            .manifest
+            .find_model(weights, variant, batch)?
+            .name
+            .clone();
+        self.load_model(&name)
+    }
+
+    fn build_model(&mut self, entry: &ModelEntry) -> Result<LoadedModel> {
+        let hlo_path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("hlo path utf-8")?,
+        )
+        .with_context(|| format!("parse {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", entry.name))?;
+
+        let wf = self.weight_file(&entry.weights)?;
+        let mut weight_literals = Vec::with_capacity(entry.inputs.len());
+        let mut image_idx = None;
+        let mut image_shape = Vec::new();
+        for (i, inp) in entry.inputs.iter().enumerate() {
+            match inp.kind {
+                InputKind::Image => {
+                    ensure!(image_idx.is_none(), "two image inputs");
+                    image_idx = Some(i);
+                    image_shape = inp.shape.clone();
+                    weight_literals.push(None);
+                }
+                InputKind::Weight => {
+                    let src = inp.source.as_deref().context("source")?;
+                    let t = wf.get(src)?;
+                    let lit = match inp.transform {
+                        Transform::None => {
+                            let vals = t.as_f32()?;
+                            ensure!(
+                                vals.len()
+                                    == inp.shape.iter().product::<usize>(),
+                                "{}: {} elems vs shape {:?}",
+                                inp.name,
+                                vals.len(),
+                                inp.shape
+                            );
+                            tensor_to_literal(&Tensor::new(
+                                inp.shape.clone(),
+                                vals,
+                            ))?
+                        }
+                        Transform::PackRows => {
+                            let mut vals = t.as_f32()?;
+                            sign_inplace(&mut vals);
+                            let d = inp.shape[0];
+                            let k = inp
+                                .logical_k
+                                .context("pack_rows needs logical_k")?;
+                            ensure!(vals.len() == d * k,
+                                    "{}: {} vs {}x{}", inp.name,
+                                    vals.len(), d, k);
+                            let packed = pack_rows(&vals, d, k);
+                            ensure!(packed.kw == inp.shape[1],
+                                    "{}: kw {} vs shape {:?}", inp.name,
+                                    packed.kw, inp.shape);
+                            u32s_to_literal(&packed.data, &inp.shape)?
+                        }
+                    };
+                    weight_literals.push(Some(lit));
+                }
+            }
+        }
+
+        Ok(LoadedModel {
+            name: entry.name.clone(),
+            variant: entry.variant.clone(),
+            batch: entry.batch,
+            output_shape: entry.output_shape.clone(),
+            exe,
+            weight_literals,
+            image_idx: image_idx.context("model has no image input")?,
+            image_shape,
+        })
+    }
+
+    /// Remove a loaded model from the cache and hand it to the caller
+    /// (e.g. to move it into a worker thread's backend).
+    pub fn take_model(&mut self, name: &str) -> Result<LoadedModel> {
+        self.models
+            .remove(name)
+            .with_context(|| format!("model '{name}' not loaded"))
+    }
+
+    /// Compile a kernel micro executable (benches).  Returns the
+    /// executable directly — kernels take raw literals.
+    pub fn load_kernel(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let entry = self
+            .manifest
+            .kernels
+            .iter()
+            .find(|k| k.name == name)
+            .with_context(|| format!("kernel '{name}'"))?;
+        let hlo_path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

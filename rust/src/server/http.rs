@@ -1,0 +1,192 @@
+//! HTTP/1.1 message parsing and serialization (request side minimal,
+//! enough for the coordinator's API surface).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Parsed query parameters.
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Read one request from a buffered stream.  Returns Ok(None) on a
+    /// cleanly closed connection (EOF before any bytes).
+    pub fn read(reader: &mut BufReader<impl Read>) -> Result<Option<Self>> {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        let mut parts = line.trim_end().split(' ');
+        let method = parts.next().unwrap_or("").to_uppercase();
+        let target = parts.next().context("missing request target")?;
+        let version = parts.next().unwrap_or("");
+        ensure!(version.starts_with("HTTP/1."), "bad version '{version}'");
+        ensure!(!method.is_empty(), "empty method");
+
+        let (path, query_str) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), q),
+            None => (target.to_string(), ""),
+        };
+        let mut query = BTreeMap::new();
+        for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.insert(k.to_string(), v.to_string());
+        }
+
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            ensure!(reader.read_line(&mut h)? > 0, "eof in headers");
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let (k, v) = h.split_once(':').context("bad header line")?;
+            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+
+        let len: usize = headers
+            .get("content-length")
+            .map(|v| v.parse().context("bad content-length"))
+            .transpose()?
+            .unwrap_or(0);
+        ensure!(len <= 16 << 20, "body too large ({len} bytes)");
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).context("reading body")?;
+        if headers.get("transfer-encoding").map(|s| s.as_str())
+            == Some("chunked")
+        {
+            bail!("chunked bodies not supported");
+        }
+        Ok(Some(Self { method, path, query, headers, body }))
+    }
+
+    pub fn wants_keep_alive(&self) -> bool {
+        self.headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true) // HTTP/1.1 default
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: String) -> Self {
+        Self {
+            status,
+            content_type: "application/json".into(),
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8".into(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
+            _ => "Internal Server Error",
+        }
+    }
+
+    pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &str) -> HttpRequest {
+        HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap()
+            .unwrap()
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /classify?model=bnn&x=1 HTTP/1.1\r\nHost: a\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/classify");
+        assert_eq!(r.query.get("model").map(String::as_str), Some("bnn"));
+        assert_eq!(r.query.get("x").map(String::as_str), Some("1"));
+        assert!(r.wants_keep_alive());
+    }
+
+    #[test]
+    fn parses_post_body() {
+        let r = parse(
+            "POST /c HTTP/1.1\r\nContent-Length: 5\r\nConnection: close\r\n\r\nhello",
+        );
+        assert_eq!(r.body, b"hello");
+        assert!(!r.wants_keep_alive());
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let r = HttpRequest::read(&mut BufReader::new(&b""[..])).unwrap();
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_huge_body() {
+        assert!(HttpRequest::read(&mut BufReader::new(
+            &b"GET / SPDY/99\r\n\r\n"[..]
+        ))
+        .is_err());
+        assert!(HttpRequest::read(&mut BufReader::new(
+            &b"POST / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n"[..]
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = HttpResponse::json(200, "{\"ok\":true}".into());
+        let mut buf = Vec::new();
+        resp.write(&mut buf, true).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 11"));
+        assert!(s.ends_with("{\"ok\":true}"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Minimal HTTP/1.1 front-end for the serving coordinator.
+//!
+//! Routes:
+//! * `GET  /healthz`           — liveness
+//! * `GET  /models`            — JSON list of served models
+//! * `GET  /metrics`           — Prometheus-style counters (per model)
+//! * `POST /classify?model=m`  — body: 3072 raw HWC uint8 pixels
+//!   (32x32x3) or JSON `{"pixels": [..3072 ints..]}`; responds JSON
+//!   `{"class": c, "label": name, "latency_us": t}`
+//!
+//! Built directly on std::net (offline: no hyper/tokio); one handler
+//! thread per connection from a fixed accept pool, keep-alive supported.
+
+pub mod http;
+pub mod service;
+
+pub use http::{HttpRequest, HttpResponse};
+pub use service::{serve, ServeOptions, Service, CLASS_NAMES};

@@ -1,0 +1,347 @@
+//! The serving service: model-name -> Router dispatch + HTTP plumbing.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Router, SubmitError};
+use crate::data::normalize_batch;
+use crate::utils::json::Json;
+use crate::{log_error, log_info};
+
+use super::http::{HttpRequest, HttpResponse};
+
+pub const CLASS_NAMES: [&str; 10] = [
+    "circle", "square", "triangle", "cross", "ring",
+    "h-stripe", "v-stripe", "checker", "dot-grid", "diag-gradient",
+];
+
+const IMAGE_BYTES: usize = 32 * 32 * 3;
+
+/// A named collection of routers behind one HTTP endpoint.
+pub struct Service {
+    routers: BTreeMap<String, Router>,
+    default_model: String,
+}
+
+impl Service {
+    pub fn new(routers: BTreeMap<String, Router>, default_model: &str) -> Self {
+        assert!(routers.contains_key(default_model), "unknown default model");
+        Self { routers, default_model: default_model.to_string() }
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.routers.keys().cloned().collect()
+    }
+
+    pub fn router(&self, name: &str) -> Option<&Router> {
+        self.routers.get(name)
+    }
+
+    /// Dispatch one parsed request.
+    pub fn handle(&self, req: &HttpRequest) -> HttpResponse {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
+            ("GET", "/models") => {
+                let names: Vec<Json> = self
+                    .routers
+                    .iter()
+                    .map(|(name, r)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(name.clone())),
+                            ("backend",
+                             Json::Str(r.backend_name().to_string())),
+                        ])
+                    })
+                    .collect();
+                HttpResponse::json(200, Json::Arr(names).to_string())
+            }
+            ("GET", "/metrics") => {
+                let mut out = String::new();
+                for (name, r) in &self.routers {
+                    for line in r.metrics().render_prometheus().lines() {
+                        let (metric, value) =
+                            line.split_once(' ').unwrap_or((line, ""));
+                        out.push_str(&format!(
+                            "{metric}{{model=\"{name}\"}} {value}\n"
+                        ));
+                    }
+                }
+                HttpResponse::text(200, out)
+            }
+            ("POST", "/classify") => self.classify(req),
+            ("GET", _) | ("POST", _) => {
+                HttpResponse::text(404, "not found\n")
+            }
+            _ => HttpResponse::text(405, "method not allowed\n"),
+        }
+    }
+
+    fn classify(&self, req: &HttpRequest) -> HttpResponse {
+        let model = req
+            .query
+            .get("model")
+            .cloned()
+            .unwrap_or_else(|| self.default_model.clone());
+        let Some(router) = self.routers.get(&model) else {
+            return HttpResponse::json(
+                404,
+                format!("{{\"error\":\"unknown model '{model}'\"}}"),
+            );
+        };
+        let pixels = match decode_pixels(req) {
+            Ok(p) => p,
+            Err(e) => {
+                return HttpResponse::json(
+                    400,
+                    format!("{{\"error\":\"{e}\"}}"),
+                )
+            }
+        };
+        let image = normalize_batch(&pixels, 1, 32, 32, 3);
+        match router.submit_wait(image.into_data()) {
+            Ok(reply) => {
+                let body = Json::obj(vec![
+                    ("class", Json::Num(reply.class as f64)),
+                    ("label",
+                     Json::Str(CLASS_NAMES[reply.class].to_string())),
+                    ("latency_us", Json::Num(reply.total_us as f64)),
+                    ("queue_us", Json::Num(reply.queue_us as f64)),
+                    (
+                        "logits",
+                        Json::Arr(
+                            reply
+                                .logits
+                                .iter()
+                                .map(|&v| Json::Num(v as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                HttpResponse::json(200, body.to_string())
+            }
+            Err(SubmitError::QueueFull) => HttpResponse::json(
+                429,
+                "{\"error\":\"queue full\"}".into(),
+            ),
+            Err(SubmitError::Shutdown) => HttpResponse::json(
+                503,
+                "{\"error\":\"shutting down\"}".into(),
+            ),
+        }
+    }
+}
+
+/// Accept raw 3072-byte bodies or JSON {"pixels": [...]}.
+fn decode_pixels(req: &HttpRequest) -> Result<Vec<u8>> {
+    let ct = req
+        .headers
+        .get("content-type")
+        .map(String::as_str)
+        .unwrap_or("application/octet-stream");
+    if ct.starts_with("application/json") {
+        let text = std::str::from_utf8(&req.body).context("body utf-8")?;
+        let v = Json::parse(text).context("body json")?;
+        let arr = v
+            .get("pixels")
+            .and_then(|p| p.as_arr())
+            .context("missing 'pixels' array")?;
+        anyhow::ensure!(arr.len() == IMAGE_BYTES,
+                        "expected {IMAGE_BYTES} pixels, got {}", arr.len());
+        arr.iter()
+            .map(|x| {
+                let n = x.as_f64().context("pixel not a number")?;
+                anyhow::ensure!((0.0..=255.0).contains(&n), "pixel range");
+                Ok(n as u8)
+            })
+            .collect()
+    } else {
+        anyhow::ensure!(req.body.len() == IMAGE_BYTES,
+                        "expected {IMAGE_BYTES} body bytes, got {}",
+                        req.body.len());
+        Ok(req.body.clone())
+    }
+}
+
+/// Serving options.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub addr: String,
+    /// Connection-handler threads.
+    pub threads: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:8080".into(), threads: 4 }
+    }
+}
+
+/// Run the accept loop until `stop` flips true.  Returns the bound
+/// address (useful with port 0 in tests).
+pub fn serve(
+    service: Arc<Service>,
+    opts: &ServeOptions,
+    stop: Arc<AtomicBool>,
+    ready_tx: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+) -> Result<()> {
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("bind {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    log_info!("serving on http://{addr} (models: {:?})", service.models());
+    if let Some(tx) = ready_tx {
+        let _ = tx.send(addr);
+    }
+    let pool = crate::utils::threadpool::ThreadPool::new(opts.threads);
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let svc = Arc::clone(&service);
+                pool.execute(move || {
+                    if let Err(e) = handle_connection(stream, &svc) {
+                        crate::log_debug!("connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => {
+                log_error!("accept: {e}");
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_connection(stream: TcpStream, service: &Service) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let Some(req) = HttpRequest::read(&mut reader)? else {
+            return Ok(()); // clean close
+        };
+        let keep_alive = req.wants_keep_alive();
+        let resp = service.handle(&req);
+        resp.write(&mut writer, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{MockBackend, Router, RouterConfig};
+    use crate::coordinator::backend as bitkernel_backend;
+    use std::collections::BTreeMap;
+
+    fn mock_service() -> Service {
+        let mut routers = BTreeMap::new();
+        routers.insert(
+            "mock".to_string(),
+            Router::start(
+                || Ok(Box::new(MockBackend::new(4, 0))
+                      as Box<dyn bitkernel_backend::Backend>),
+                RouterConfig::default(),
+            )
+            .unwrap(),
+        );
+        Service::new(routers, "mock")
+    }
+
+    fn get(path: &str) -> HttpRequest {
+        HttpRequest {
+            method: "GET".into(),
+            path: path.into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn healthz_and_models() {
+        let svc = mock_service();
+        assert_eq!(svc.handle(&get("/healthz")).status, 200);
+        let resp = svc.handle(&get("/models"));
+        assert_eq!(resp.status, 200);
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("mock"));
+    }
+
+    #[test]
+    fn metrics_labelled_per_model() {
+        let svc = mock_service();
+        let resp = svc.handle(&get("/metrics"));
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("bitkernel_requests_submitted{model=\"mock\"}"),
+                "{body}");
+    }
+
+    #[test]
+    fn classify_raw_body() {
+        let svc = mock_service();
+        let req = HttpRequest {
+            method: "POST".into(),
+            path: "/classify".into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: vec![200u8; IMAGE_BYTES],
+        };
+        let resp = svc.handle(&req);
+        assert_eq!(resp.status, 200, "{}",
+                   String::from_utf8_lossy(&resp.body));
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("\"class\""));
+        assert!(body.contains("\"label\""));
+    }
+
+    #[test]
+    fn classify_json_body() {
+        let svc = mock_service();
+        let pixels: Vec<String> =
+            (0..IMAGE_BYTES).map(|i| (i % 256).to_string()).collect();
+        let mut headers = BTreeMap::new();
+        headers.insert("content-type".into(), "application/json".into());
+        let req = HttpRequest {
+            method: "POST".into(),
+            path: "/classify".into(),
+            query: BTreeMap::new(),
+            headers,
+            body: format!("{{\"pixels\":[{}]}}", pixels.join(","))
+                .into_bytes(),
+        };
+        assert_eq!(svc.handle(&req).status, 200);
+    }
+
+    #[test]
+    fn classify_rejects_bad_sizes_and_unknown_model() {
+        let svc = mock_service();
+        let mut req = HttpRequest {
+            method: "POST".into(),
+            path: "/classify".into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: vec![0u8; 10],
+        };
+        assert_eq!(svc.handle(&req).status, 400);
+        req.body = vec![0u8; IMAGE_BYTES];
+        req.query.insert("model".into(), "nope".into());
+        assert_eq!(svc.handle(&req).status, 404);
+    }
+
+    #[test]
+    fn unknown_path_404() {
+        let svc = mock_service();
+        assert_eq!(svc.handle(&get("/nope")).status, 404);
+    }
+}

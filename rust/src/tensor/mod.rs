@@ -1,0 +1,191 @@
+//! Minimal dense tensors: an NCHW-oriented f32 [`Tensor`] and the packed
+//! 1-bit [`PackedMatrix`] used by the xnor-bitcount kernels.
+//!
+//! Deliberately small: row-major contiguous storage, shape checks in
+//! debug, and just the views the BNN engine needs.  No strides/broadcast
+//! machinery — layers reshape explicitly, mirroring the paper's im2col
+//! data flow.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape;
+        self
+    }
+
+    /// Dimension helper with bounds message.
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Row view of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[r * w..(r + 1) * w]
+    }
+
+    /// Elementwise maximum absolute difference (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Bit-packed {-1,+1} matrix: `rows` logical rows of `k` elements, each
+/// row packed little-endian into `kw = ceil(k/32)` u32 words
+/// (bit 1 <=> value +1; padding bits are 0, i.e. value -1).
+///
+/// Both operands of the xnor gemm use this layout: the weight matrix
+/// packs its rows directly; the activation matrix packs the *columns* of
+/// the im2col output, i.e. the rows of its transpose — so reduction runs
+/// contiguously for both sides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    /// Logical (unpadded) reduction length.
+    pub k: usize,
+    /// Words per row = ceil(k / 32).
+    pub kw: usize,
+    /// Row-major [rows, kw].
+    pub data: Vec<u32>,
+}
+
+impl PackedMatrix {
+    pub fn zeros(rows: usize, k: usize) -> Self {
+        let kw = k.div_ceil(32);
+        Self { rows, k, kw, data: vec![0; rows * kw] }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.data[r * self.kw..(r + 1) * self.kw]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u32] {
+        &mut self.data[r * self.kw..(r + 1) * self.kw]
+    }
+
+    /// Number of zero-padding bits per row.
+    #[inline]
+    pub fn pad_bits(&self) -> i32 {
+        (self.kw * 32 - self.k) as i32
+    }
+
+    /// Logical element (r, i) in the value domain {-1.0, +1.0}.
+    pub fn get(&self, r: usize, i: usize) -> f32 {
+        assert!(i < self.k);
+        let w = self.data[r * self.kw + i / 32];
+        if (w >> (i % 32)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.row(1), &[0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_mismatched_shape() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshaped(vec![3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn packed_matrix_layout() {
+        let mut p = PackedMatrix::zeros(2, 40);
+        assert_eq!(p.kw, 2);
+        assert_eq!(p.pad_bits(), 24);
+        p.row_mut(1)[0] = 1; // bit 0 of row 1
+        assert_eq!(p.get(1, 0), 1.0);
+        assert_eq!(p.get(1, 1), -1.0);
+        assert_eq!(p.get(0, 0), -1.0);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Mini property-testing harness (offline substrate for proptest).
+//!
+//! [`prop_check`] runs a predicate over `iters` pseudo-random cases and,
+//! on failure, retries with the same seed to report the failing case
+//! index — enough for the shrinking-free invariant checks this repo
+//! needs (bit-packing round trips, kernel equivalences, batcher
+//! invariants).
+
+use crate::utils::Rng;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (seed {}): {}",
+            self.case, self.seed, self.message
+        )
+    }
+}
+
+/// Run `prop` over `iters` cases.  The closure receives a per-case RNG
+/// (derived deterministically from `seed` and the case index) and
+/// returns `Err(message)` to fail the property.
+pub fn prop_check<F>(seed: u64, iters: usize, prop: F) -> Result<(), PropFailure>
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..iters {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(message) = prop(&mut rng, case) {
+            return Err(PropFailure { case, seed, message });
+        }
+    }
+    Ok(())
+}
+
+/// Assert-style wrapper: panics with the failing case on error.
+pub fn prop_assert<F>(seed: u64, iters: usize, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    if let Err(f) = prop_check(seed, iters, prop) {
+        panic!("{f}");
+    }
+}
+
+/// Random dimension helper in [1, hi].
+pub fn dim(rng: &mut Rng, hi: usize) -> usize {
+    1 + rng.below(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_assert(1, 50, |rng, _| {
+            let x = rng.next_u32();
+            if x as u64 <= u32::MAX as u64 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = prop_check(2, 100, |_, case| {
+            if case == 17 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+        let f = r.unwrap_err();
+        assert_eq!(f.case, 17);
+        assert!(f.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn deterministic_rng_per_case() {
+        // Same seed -> same per-case streams.
+        use std::cell::RefCell;
+        let a = RefCell::new(Vec::new());
+        let b = RefCell::new(Vec::new());
+        prop_check(4, 3, |rng, _| {
+            a.borrow_mut().push(rng.next_u64());
+            Ok(())
+        })
+        .unwrap();
+        prop_check(4, 3, |rng, _| {
+            b.borrow_mut().push(rng.next_u64());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(a.into_inner(), b.into_inner());
+    }
+}

@@ -1,0 +1,132 @@
+//! `key = value` config-file parser (offline substrate for a toml crate).
+//!
+//! Grammar: one `key = value` per line, `#` comments, blank lines ignored.
+//! Values stay strings; typed getters parse on demand.  Used by the
+//! serving coordinator (`bitkernel serve --config <file>`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: expected 'key = value', got '{1}'")]
+    Syntax(usize, String),
+    #[error("key '{0}': {1}")]
+    Type(String, String),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Syntax(i + 1, raw.to_string()))?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Overlay: `other` wins on conflicts (CLI-over-file semantics).
+    pub fn merged(mut self, other: &Config) -> Self {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| ConfigError::Type(key.into(), format!("{e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| ConfigError::Type(key.into(), format!("{e}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(s) => Err(ConfigError::Type(key.into(), format!("bad bool '{s}'"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = Config::parse("a = 1\n# comment\nb = hello world # tail\n\n")
+            .unwrap();
+        assert_eq!(c.get("a"), Some("1"));
+        assert_eq!(c.get("b"), Some("hello world"));
+        assert_eq!(c.get_usize("a", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn defaults_and_types() {
+        let c = Config::parse("x = 2.5\nflag = yes\n").unwrap();
+        assert_eq!(c.get_f64("x", 0.0).unwrap(), 2.5);
+        assert!(c.get_bool("flag", false).unwrap());
+        assert_eq!(c.get_usize("missing", 7).unwrap(), 7);
+        assert!(c.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_line() {
+        assert!(Config::parse("just a line\n").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let base = Config::parse("a = 1\nb = 2\n").unwrap();
+        let over = Config::parse("b = 3\n").unwrap();
+        let m = base.merged(&over);
+        assert_eq!(m.get("a"), Some("1"));
+        assert_eq!(m.get("b"), Some("3"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Support substrates: PRNG, timing, JSON, config, logging, thread pool.
+//!
+//! The build environment is offline (no crates.io), so everything a crate
+//! would normally pull in — rand, serde_json, rayon, env_logger — is
+//! implemented here, small and tested.
+
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

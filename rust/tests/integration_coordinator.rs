@@ -1,0 +1,248 @@
+//! End-to-end coordinator tests: real engine behind the router, and the
+//! HTTP service over a real TCP socket.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, MockBackend, NativeBackend, Router, RouterConfig,
+};
+use bitkernel::data::Dataset;
+use bitkernel::model::BnnEngine;
+use bitkernel::server::{serve, ServeOptions, Service};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn router_with_native_engine_classifies_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let weights = dir.join("weights_small.bkw");
+    let router = Router::start(
+        move || {
+            let engine = Arc::new(BnnEngine::load(&weights)?);
+            Ok(Box::new(NativeBackend::xnor(engine, 8)) as Box<dyn Backend>)
+        },
+        RouterConfig {
+            queue_cap: 64,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+        },
+    )
+    .unwrap();
+
+    let n = 32;
+    let mut correct = 0;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let img = ds.normalized(i, i + 1);
+            router.submit(img.into_data()).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().unwrap();
+        if reply.class == ds.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 29, "{correct}/{n}"); // trained model: ~100%
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert!(snap.mean_batch_size > 1.0, "batching never kicked in");
+}
+
+#[test]
+fn http_service_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let weights = dir.join("weights_small.bkw");
+
+    let mut routers = BTreeMap::new();
+    routers.insert(
+        "bnn".to_string(),
+        Router::start(
+            move || {
+                let engine = Arc::new(BnnEngine::load(&weights)?);
+                Ok(Box::new(NativeBackend::xnor(engine, 8)) as Box<dyn Backend>)
+            },
+            RouterConfig::default(),
+        )
+        .unwrap(),
+    );
+    let service = Arc::new(Service::new(routers, "bnn"));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let svc2 = Arc::clone(&service);
+    let server = std::thread::spawn(move || {
+        serve(
+            svc2,
+            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            stop2,
+            Some(ready_tx),
+        )
+        .unwrap();
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+    // healthz
+    let body = http_get(&addr, "/healthz");
+    assert!(body.1.contains("ok"), "{body:?}");
+
+    // classify 8 images, count correct
+    let mut correct = 0;
+    for i in 0..8 {
+        let (status, body) =
+            http_post(&addr, "/classify?model=bnn", ds.image(i));
+        assert_eq!(status, 200, "{body}");
+        let v = bitkernel::utils::json::Json::parse(&body).unwrap();
+        let class = v.get("class").unwrap().as_usize().unwrap();
+        assert!(v.get("latency_us").unwrap().as_f64().unwrap() > 0.0);
+        if class == ds.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 7, "{correct}/8");
+
+    // metrics reflect the traffic
+    let (_, metrics) = http_get(&addr, "/metrics");
+    assert!(metrics.contains("bitkernel_requests_completed{model=\"bnn\"} 8"),
+            "{metrics}");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn service_supports_multiple_models() {
+    // Two mock models: routing by ?model= must hit the right one.
+    let mk = |batch| {
+        Router::start(
+            move || Ok(Box::new(MockBackend::new(batch, 0)) as Box<dyn Backend>),
+            RouterConfig::default(),
+        )
+        .unwrap()
+    };
+    let mut routers = BTreeMap::new();
+    routers.insert("a".to_string(), mk(1));
+    routers.insert("b".to_string(), mk(4));
+    let service = Arc::new(Service::new(routers, "a"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let svc2 = Arc::clone(&service);
+    let server = std::thread::spawn(move || {
+        serve(svc2, &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+              stop2, Some(ready_tx)).unwrap();
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+    let img = vec![128u8; 3072];
+    assert_eq!(http_post(&addr, "/classify?model=a", &img).0, 200);
+    assert_eq!(http_post(&addr, "/classify?model=b", &img).0, 200);
+    assert_eq!(http_post(&addr, "/classify?model=zz", &img).0, 404);
+    let (_, models) = http_get(&addr, "/models");
+    assert!(models.contains("\"a\"") && models.contains("\"b\""));
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn failing_backend_drops_requests_and_counts_rejections() {
+    /// Backend that errors on every batch (failure injection).
+    struct FailingBackend;
+    impl Backend for FailingBackend {
+        fn name(&self) -> String {
+            "failing".into()
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn infer(
+            &mut self,
+            _images: &bitkernel::tensor::Tensor,
+        ) -> anyhow::Result<bitkernel::tensor::Tensor> {
+            anyhow::bail!("injected fault")
+        }
+    }
+    let router = Router::start(
+        || Ok(Box::new(FailingBackend) as Box<dyn Backend>),
+        RouterConfig::default(),
+    )
+    .unwrap();
+    let rx = router.submit(vec![0.0; 3 * 32 * 32]).unwrap();
+    // The reply channel must disconnect (request dropped), not hang.
+    assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.completed, 0);
+}
+
+#[test]
+fn backend_construction_failure_is_synchronous() {
+    let r = Router::start(
+        || anyhow::bail!("no such model"),
+        RouterConfig::default(),
+    );
+    assert!(r.is_err());
+    assert!(format!("{:#}", r.err().unwrap()).contains("no such model"));
+}
+
+// --- tiny test HTTP client -------------------------------------------------
+
+fn http_get(addr: &std::net::SocketAddr, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    read_response(stream)
+}
+
+fn http_post(addr: &std::net::SocketAddr, path: &str, body: &[u8]) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    stream.write_all(body).unwrap();
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> (u16, String) {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}

@@ -1,0 +1,115 @@
+//! PJRT-runtime integration: the AOT artifacts must load, execute, and
+//! agree with the native engine (cross-LANGUAGE, cross-RUNTIME check:
+//! jax/pallas-lowered HLO vs hand-written rust kernels).
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::data::Dataset;
+use bitkernel::model::{BnnEngine, EngineKernel};
+use bitkernel::runtime::Runtime;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn manifest_enumerates_models_and_kernels() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.manifest.models.len() >= 9, "{}", rt.manifest.models.len());
+    assert!(rt.manifest.kernels.len() >= 3);
+    for variant in ["xnor", "control", "optimized"] {
+        assert!(rt.manifest.find_model("small", variant, 1).is_ok());
+    }
+}
+
+#[test]
+fn pjrt_arms_agree_with_native_engine() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let engine = BnnEngine::load(dir.join("weights_small.bkw")).unwrap();
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let x = ds.normalized(0, 1);
+    let native = engine.forward(&x, EngineKernel::Xnor(XnorImpl::Blocked));
+
+    for variant in ["optimized", "xnor", "control"] {
+        let model = rt.load_by("small", variant, 1).unwrap();
+        let out = model.infer(&x).unwrap();
+        assert_eq!(out.shape(), &[1, 10]);
+        let diff = out.max_abs_diff(&native);
+        assert!(diff <= 5e-3, "pjrt {variant} vs native: {diff}");
+    }
+}
+
+#[test]
+fn pjrt_batch8_matches_batch1() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let xb = ds.normalized(0, 8);
+    let batched = rt.load_by("small", "xnor", 8).unwrap().infer(&xb).unwrap();
+    let m1_name = rt.manifest.find_model("small", "xnor", 1).unwrap().name.clone();
+    let m1 = rt.load_model(&m1_name).unwrap();
+    for i in 0..8 {
+        let single = m1.infer(&ds.normalized(i, i + 1)).unwrap();
+        for c in 0..10 {
+            let d = (single.row(0)[c] - batched.row(i)[c]).abs();
+            assert!(d <= 1e-4, "img {i} class {c}: {d}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_predictions_match_labels() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let n = 32;
+    let model = rt.load_by("small", "xnor", 8).unwrap();
+    let mut correct = 0;
+    for chunk in 0..n / 8 {
+        let x = ds.normalized(chunk * 8, (chunk + 1) * 8);
+        let logits = model.infer(&x).unwrap();
+        for i in 0..8 {
+            let pred = bitkernel::nn::argmax(logits.row(i));
+            if pred == ds.labels[chunk * 8 + i] as usize {
+                correct += 1;
+            }
+        }
+    }
+    assert!(correct as f32 / n as f32 >= 0.9, "{correct}/{n}");
+}
+
+#[test]
+fn kernel_micro_executables_run() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    // The optimized f32 kernel at conv2 shape: matmul of ones -> K.
+    let entry = rt
+        .manifest
+        .kernels
+        .iter()
+        .find(|k| k.kernel == "optimized" && k.tag == "conv2")
+        .unwrap()
+        .clone();
+    let exe = rt.load_kernel(&entry.name).unwrap();
+    let a = xla::Literal::vec1(&vec![1.0f32; entry.d * entry.k])
+        .reshape(&[entry.d as i64, entry.k as i64])
+        .unwrap();
+    let b = xla::Literal::vec1(&vec![1.0f32; entry.k * entry.n])
+        .reshape(&[entry.k as i64, entry.n as i64])
+        .unwrap();
+    let out = exe.execute::<xla::Literal>(&[a, b]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let vals = out.to_vec::<f32>().unwrap();
+    assert_eq!(vals.len(), entry.d * entry.n);
+    assert!(vals.iter().all(|&v| v == entry.k as f32));
+}

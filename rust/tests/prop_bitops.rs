@@ -1,0 +1,167 @@
+//! Property tests (testing::prop harness) on the bit-level invariants
+//! the paper's whole speedup argument rests on.
+
+use bitkernel::bitops::{pack_rows, xnor_gemm, XnorImpl};
+use bitkernel::gemm::{gemm_naive, gemm_blocked};
+use bitkernel::nn::{im2col_t, out_hw};
+use bitkernel::tensor::Tensor;
+use bitkernel::testing::{dim, prop_assert};
+use bitkernel::utils::Rng;
+
+/// Dense ±1 dot product in i32 (exact).
+fn dense_dot(a: &[f32], b: &[f32]) -> i32 {
+    a.iter().zip(b).map(|(x, y)| (x * y) as i32).sum()
+}
+
+#[test]
+fn prop_pack_roundtrip() {
+    prop_assert(11, 60, |rng: &mut Rng, _| {
+        let rows = dim(rng, 12);
+        let k = dim(rng, 150);
+        let vals = rng.normal_vec(rows * k);
+        let p = pack_rows(&vals, rows, k);
+        for r in 0..rows {
+            for i in 0..k {
+                let want = if vals[r * k + i] >= 0.0 { 1.0 } else { -1.0 };
+                if p.get(r, i) != want {
+                    return Err(format!("({r},{i}): {} vs {want}",
+                                       p.get(r, i)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xnor_gemm_equals_dense_all_impls() {
+    prop_assert(12, 40, |rng: &mut Rng, case| {
+        let d = dim(rng, 10);
+        let k = dim(rng, 200);
+        let n = dim(rng, 10);
+        let wm = rng.sign_vec(d * k);
+        let xm = rng.sign_vec(n * k);
+        let w = pack_rows(&wm, d, k);
+        let x = pack_rows(&xm, n, k);
+        let imp = [
+            XnorImpl::Scalar,
+            XnorImpl::Word64,
+            XnorImpl::Blocked,
+            XnorImpl::Threaded(2),
+        ][case % 4];
+        let mut got = vec![0i32; d * n];
+        xnor_gemm(&w, &x, &mut got, imp);
+        for i in 0..d {
+            for j in 0..n {
+                let want = dense_dot(&wm[i * k..(i + 1) * k],
+                                     &xm[j * k..(j + 1) * k]);
+                if got[i * n + j] != want {
+                    return Err(format!(
+                        "{imp:?} ({i},{j}) d={d} k={k} n={n}: {} vs {want}",
+                        got[i * n + j]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_float_gemms_agree_on_signs() {
+    // On ±1 inputs all float kernels and the xnor kernel are EXACTLY equal.
+    prop_assert(13, 30, |rng: &mut Rng, _| {
+        let d = dim(rng, 8);
+        let k = dim(rng, 120);
+        let n = dim(rng, 8);
+        let a = rng.sign_vec(d * k);
+        let bt = rng.sign_vec(n * k);
+        let mut naive = vec![0.0f32; d * n];
+        let mut blocked = vec![0.0f32; d * n];
+        gemm_naive(&a, &bt, &mut naive, d, k, n);
+        gemm_blocked(&a, &bt, &mut blocked, d, k, n);
+        if naive != blocked {
+            return Err("naive != blocked".into());
+        }
+        let mut packed = vec![0i32; d * n];
+        xnor_gemm(&pack_rows(&a, d, k), &pack_rows(&bt, n, k), &mut packed,
+                  XnorImpl::Blocked);
+        for (f, i) in naive.iter().zip(&packed) {
+            if *f as i32 != *i {
+                return Err(format!("float {f} vs packed {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_im2col_row_matches_patch() {
+    // Every im2col row must equal the brute-force extracted patch.
+    prop_assert(14, 25, |rng: &mut Rng, _| {
+        let b = dim(rng, 2);
+        let c = dim(rng, 3);
+        let h = 4 + rng.below(6);
+        let w = 4 + rng.below(6);
+        let ks = [1, 3, 5][rng.below(3)];
+        let pad = rng.below(ks.min(3));
+        let stride = 1 + rng.below(2);
+        if h + 2 * pad < ks || w + 2 * pad < ks {
+            return Ok(());
+        }
+        let x = Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w));
+        let cols = im2col_t(&x, ks, ks, stride, pad);
+        let (oh, ow) = out_hw(h, w, ks, ks, stride, pad);
+        // spot-check a few random rows
+        for _ in 0..5 {
+            let bi = rng.below(b);
+            let oy = rng.below(oh);
+            let ox = rng.below(ow);
+            let row = cols.row((bi * oh + oy) * ow + ox);
+            for _ in 0..5 {
+                let ci = rng.below(c);
+                let dy = rng.below(ks);
+                let dx = rng.below(ks);
+                let iy = (oy * stride + dy) as isize - pad as isize;
+                let ix = (ox * stride + dx) as isize - pad as isize;
+                let want = if iy >= 0 && iy < h as isize && ix >= 0
+                    && ix < w as isize
+                {
+                    x.data()[((bi * c + ci) * h + iy as usize) * w
+                        + ix as usize]
+                } else {
+                    0.0
+                };
+                let got = row[(ci * ks + dy) * ks + dx];
+                if got != want {
+                    return Err(format!(
+                        "b{bi} c{ci} oy{oy} ox{ox} dy{dy} dx{dx}: {got} vs {want}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parity_invariant() {
+    // <w, x> over k ±1 terms always has k's parity — a cheap whole-kernel
+    // sanity invariant the paper's formula must satisfy.
+    prop_assert(15, 40, |rng: &mut Rng, _| {
+        let k = dim(rng, 257);
+        let w = pack_rows(&rng.sign_vec(3 * k), 3, k);
+        let x = pack_rows(&rng.sign_vec(4 * k), 4, k);
+        let mut out = vec![0i32; 12];
+        xnor_gemm(&w, &x, &mut out, XnorImpl::Word64);
+        for &v in &out {
+            if v.rem_euclid(2) != (k % 2) as i32 {
+                return Err(format!("k={k} value {v}"));
+            }
+            if v.abs() > k as i32 {
+                return Err(format!("k={k} out of range {v}"));
+            }
+        }
+        Ok(())
+    });
+}
