@@ -1,0 +1,12 @@
+# Repo-level convenience targets.
+#
+#   make ci        — tier-1 gate: build + tests + fmt + profile smoke run
+#   make artifacts — python AOT pipeline -> rust/artifacts (needs jax)
+
+.PHONY: ci artifacts
+
+ci:
+	./scripts/ci.sh
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts

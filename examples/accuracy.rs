@@ -49,7 +49,7 @@ fn main() -> Result<()> {
         let acc = engine.evaluate(&x, &ds.labels[..n], kernel, 32);
         let secs = sw.elapsed_secs();
         table.row(&[
-            kernel.name(),
+            kernel.name().into_owned(),
             format!("{:.2}%", acc * 100.0),
             format!("{secs:.2}s"),
             format!("{:.0}", n as f64 / secs),

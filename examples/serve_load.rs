@@ -57,8 +57,8 @@ fn main() -> Result<()> {
         move || -> anyhow::Result<Box<dyn Backend>> {
             match bk.as_str() {
                 "native-xnor" => {
-                    let engine = Arc::new(BnnEngine::load(&weights)?);
-                    Ok(Box::new(NativeBackend::xnor(engine, 8)))
+                    let engine = BnnEngine::load(&weights)?;
+                    Ok(Box::new(NativeBackend::xnor(&engine, 8)))
                 }
                 "pjrt-xnor" => {
                     let mut rt = Runtime::new(&artifacts)?;

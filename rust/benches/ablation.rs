@@ -1,10 +1,13 @@
 //! `cargo bench --bench ablation` — design-choice ablations DESIGN.md §9
-//! calls out: word width (u32 vs u64), register blocking, threading, and
-//! naive-vs-blocked float gemm.
+//! calls out: word width (u32 vs u64), register blocking, threading,
+//! naive-vs-blocked float gemm, and the fused `bn_sign_pack` layer
+//! epilogue of the plan/session path.
 
 use bitkernel::benchkit::{bench, Table};
-use bitkernel::bitops::{pack_rows, xnor_gemm, XnorImpl};
+use bitkernel::bitops::{pack_rows, pack_rows_from, xnor_gemm, XnorImpl};
 use bitkernel::gemm::{gemm_blocked, gemm_naive};
+use bitkernel::nn::fuse::bn_sign_pack_rows_i32;
+use bitkernel::tensor::PackedMatrix;
 use bitkernel::utils::Rng;
 
 const SHAPES: [(&str, usize, usize, usize); 3] = [
@@ -74,6 +77,55 @@ fn main() {
             format!("{:.3}", mn.mean_s() * 1e3),
             format!("{:.3}", mb.mean_s() * 1e3),
             format!("{:.2}x", mn.mean_s() / mb.mean_s()),
+        ]);
+    }
+    table.print();
+
+    // --- fused bn_sign_pack epilogue (plan/session hot path) -------------------
+    // The xnor arm's fc boundary: gemm i32 [D, B] + folded BN -> the next
+    // layer's packed rows.  Unfused = the legacy engine's three passes
+    // (transpose to f32 rows, bn affine in place, pack rows), buffers
+    // preallocated here so the comparison is pure compute; fused = one
+    // pass, no float rows ever materialized.
+    let mut table = Table::new(
+        "fc epilogue: unfused (transpose, bn, pack) vs fused bn_sign_pack (ms)",
+        &["layer", "unfused", "fused", "speedup"],
+    );
+    for (name, d, b) in [("fc1 b8 (1024x8)", 1024usize, 8usize),
+                         ("fc2 b32 (1024x32)", 1024, 32)] {
+        let gemm: Vec<i32> =
+            (0..d * b).map(|i| (i % 65) as i32 - 32).collect();
+        let a = rng.normal_vec(d);
+        let bias = rng.normal_vec(d);
+        let mut rows = vec![0.0f32; b * d];
+        let mut packed = PackedMatrix::zeros(b, d);
+        let mu = bench("unfused", 0.2, 3, 1.0, || {
+            // pass 1: transpose [D, B] i32 -> [B, D] f32 (linear())
+            for di in 0..d {
+                for bi in 0..b {
+                    rows[bi * d + di] = gemm[di * b + bi] as f32;
+                }
+            }
+            // pass 2: bn affine in place (bn_affine_rows)
+            for bi in 0..b {
+                for (di, v) in rows[bi * d..(bi + 1) * d]
+                    .iter_mut()
+                    .enumerate()
+                {
+                    *v = a[di] * *v + bias[di];
+                }
+            }
+            // pass 3: sign + pack (next layer's pack_rows)
+            pack_rows_from(&rows, &mut packed);
+        });
+        let mf = bench("fused", 0.2, 3, 1.0, || {
+            bn_sign_pack_rows_i32(&gemm, d, b, &a, &bias, &mut packed);
+        });
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", mu.mean_s() * 1e3),
+            format!("{:.4}", mf.mean_s() * 1e3),
+            format!("{:.2}x", mu.mean_s() / mf.mean_s()),
         ]);
     }
     table.print();

@@ -125,8 +125,8 @@ fn main() {
         let weights = dir.join("weights_small.bkw");
         let router = Router::start(
             move || {
-                let engine = Arc::new(BnnEngine::load(&weights)?);
-                Ok(Box::new(NativeBackend::xnor(engine, mb)) as Box<dyn Backend>)
+                let engine = BnnEngine::load(&weights)?;
+                Ok(Box::new(NativeBackend::xnor(&engine, mb)) as Box<dyn Backend>)
             },
             RouterConfig {
                 queue_cap: 256,

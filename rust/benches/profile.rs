@@ -1,10 +1,23 @@
-//! `cargo bench --bench profile` — per-layer wall-time breakdown of the
-//! native engine (the §Perf profiling tool for the L3 hot path).
+//! `cargo bench --bench profile` — per-op wall-time breakdown of the
+//! native engine's compiled plan (the §Perf profiling tool for the L3
+//! hot path).
+//!
+//! Each Table-2 arm compiles its own plan, so the stage list differs by
+//! arm: the xnor arm shows the fused `encode` (im2col+bn+sign+pack) and
+//! `bn_sign_pack` epilogue ops; the float arms show the unfused
+//! im2col / gemm / pool / bn ladder.
+//!
+//! Flags: `--weights <set>` (default full), `--reps <n>` (default 3;
+//! `scripts/ci.sh` passes 1 for a smoke run).
 
 use bitkernel::benchkit::Table;
 use bitkernel::bitops::XnorImpl;
 use bitkernel::data::Dataset;
 use bitkernel::model::{BnnEngine, EngineKernel};
+
+fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
 
 fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -12,10 +25,11 @@ fn main() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
-    let weights = std::env::args()
-        .skip_while(|a| a != "--weights")
-        .nth(1)
-        .unwrap_or_else(|| "full".into());
+    let weights = arg("--weights").unwrap_or_else(|| "full".into());
+    let reps: usize = arg("--reps")
+        .map(|v| v.parse().expect("--reps takes a number"))
+        .unwrap_or(3)
+        .max(1);
     let engine = BnnEngine::load(dir.join(format!("weights_{weights}.bkw")))
         .unwrap();
     let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
@@ -26,14 +40,13 @@ fn main() {
         EngineKernel::Optimized,
         EngineKernel::Control,
     ];
-    // Average over a few runs (after warmup) per arm.
-    let reps = 3usize;
-    let mut per_arm: Vec<Vec<(String, f64)>> = Vec::new();
-    for &kernel in &arms {
-        let _ = engine.forward_profiled(&x, kernel); // warmup
+    for kernel in arms {
+        // Compile once; the session reuses its buffers across reps.
+        let mut session = engine.plan(kernel, 1).session();
+        let _ = session.run(&x); // warmup
         let mut acc: Vec<(String, f64)> = Vec::new();
         for _ in 0..reps {
-            let (_, stages) = engine.forward_profiled(&x, kernel);
+            let (_, stages) = session.run_profiled(&x);
             if acc.is_empty() {
                 acc = stages;
             } else {
@@ -45,26 +58,22 @@ fn main() {
         for a in &mut acc {
             a.1 /= reps as f64;
         }
-        per_arm.push(acc);
-    }
+        let total: f64 = acc.iter().map(|(_, t)| t).sum();
 
-    let mut table = Table::new(
-        &format!("Per-layer breakdown, {weights} model, batch 1 (ms)"),
-        &["stage", "xnor", "optimized", "control", "xnor share"],
-    );
-    let xnor_total: f64 = per_arm[0].iter().map(|(_, t)| t).sum();
-    for i in 0..per_arm[0].len() {
-        table.row(&[
-            per_arm[0][i].0.clone(),
-            format!("{:.3}", per_arm[0][i].1 * 1e3),
-            format!("{:.3}", per_arm[1][i].1 * 1e3),
-            format!("{:.3}", per_arm[2][i].1 * 1e3),
-            format!("{:.0}%", 100.0 * per_arm[0][i].1 / xnor_total),
-        ]);
+        let mut table = Table::new(
+            &format!("{} — per-op breakdown, {weights} model, batch 1",
+                     kernel.name()),
+            &["stage", "ms", "share"],
+        );
+        for (name, secs) in &acc {
+            table.row(&[
+                name.clone(),
+                format!("{:.3}", secs * 1e3),
+                format!("{:.0}%", 100.0 * secs / total),
+            ]);
+        }
+        table.print();
+        println!("total {}: {:.2} ms ({} ops)\n",
+                 kernel.name(), total * 1e3, acc.len());
     }
-    for (arm, stages) in arms.iter().zip(&per_arm) {
-        let total: f64 = stages.iter().map(|(_, t)| t).sum();
-        println!("total {}: {:.2} ms", arm.name(), total * 1e3);
-    }
-    table.print();
 }

@@ -116,20 +116,23 @@ impl Table2Result {
     }
 }
 
-/// Time `engine.forward` per image on the native arm.
+/// Time per image on the native arm, through the compiled plan path
+/// (compile once, then steady-state `Session::run` — the serving
+/// configuration the paper's Table 2 is about).
 fn time_native(
     engine: &BnnEngine,
     ds: &Dataset,
     kernel: EngineKernel,
     images: usize,
 ) -> f64 {
+    let mut session = engine.plan(kernel, 1).session();
     // Warmup on one image.
     let x = ds.normalized(0, 1);
-    std::hint::black_box(engine.forward(&x, kernel));
+    std::hint::black_box(session.run(&x));
     let sw = Stopwatch::start();
     for i in 0..images {
         let x = ds.normalized(i, i + 1);
-        std::hint::black_box(engine.forward(&x, kernel));
+        std::hint::black_box(session.run(&x));
     }
     sw.elapsed_secs() / images as f64
 }

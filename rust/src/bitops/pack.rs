@@ -10,6 +10,48 @@
 
 use crate::tensor::PackedMatrix;
 
+/// Streaming bit packer for one packed row: accumulates each 32-bit
+/// word in a register and stores it once (a read-modify-write per bit
+/// costs ~4x; §Perf optimization 2).  Callers push exactly `k` bits in
+/// logical order, then `finish()`; every word of the row (including the
+/// zero tail-padding bits of the last partial word) gets written.
+///
+/// This is THE activation-side encoding loop — `nn::im2col` (fused
+/// im2col+pack) and `nn::fuse` (bn_sign_pack epilogues) both build rows
+/// through it, so the bit convention can never drift between them.
+pub(crate) struct BitWriter<'a> {
+    row: &'a mut [u32],
+    word: u32,
+    bits: u32,
+    widx: usize,
+}
+
+impl<'a> BitWriter<'a> {
+    #[inline]
+    pub(crate) fn new(row: &'a mut [u32]) -> Self {
+        Self { row, word: 0, bits: 0, widx: 0 }
+    }
+
+    #[inline]
+    pub(crate) fn push(&mut self, bit: u32) {
+        self.word |= bit << self.bits;
+        self.bits += 1;
+        if self.bits == 32 {
+            self.row[self.widx] = self.word;
+            self.widx += 1;
+            self.word = 0;
+            self.bits = 0;
+        }
+    }
+
+    #[inline]
+    pub(crate) fn finish(self) {
+        if self.bits > 0 {
+            self.row[self.widx] = self.word;
+        }
+    }
+}
+
 /// Pack one logical row (`row.len() == k`) into `out` (`ceil(k/32)` words).
 #[inline]
 pub fn pack_slice(row: &[f32], out: &mut [u32]) {

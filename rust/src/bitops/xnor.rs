@@ -38,13 +38,16 @@ impl XnorImpl {
     pub const ALL_SINGLE: [XnorImpl; 3] =
         [XnorImpl::Scalar, XnorImpl::Word64, XnorImpl::Blocked];
 
-    pub fn name(&self) -> String {
+    /// Implementation label.  Borrowed (allocation-free) for every
+    /// variant except `Threaded`, whose thread count is dynamic —
+    /// metrics labels sit on the request path.
+    pub fn name(&self) -> std::borrow::Cow<'static, str> {
         match self {
             XnorImpl::Scalar => "scalar32".into(),
             XnorImpl::Word64 => "word64".into(),
             XnorImpl::Blocked => "blocked".into(),
             XnorImpl::Blocked2x4 => "blocked2x4".into(),
-            XnorImpl::Threaded(n) => format!("threaded{n}"),
+            XnorImpl::Threaded(n) => format!("threaded{n}").into(),
         }
     }
 }

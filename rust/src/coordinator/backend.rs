@@ -3,91 +3,105 @@
 //! A [`Backend`] consumes a fixed-capacity image batch and returns
 //! logits.  Three implementations:
 //! * [`NativeBackend`] — the in-process rust engine (Table-2 CPU arm),
+//!   a compiled [`Session`] over the requested kernel arm,
 //! * [`PjrtBackend`]   — an AOT-compiled XLA executable (accelerator arm),
 //! * [`MockBackend`]   — deterministic stub for coordinator tests.
+//!
+//! The trait is shaped for the request path: `name` borrows (metrics
+//! labels allocate nothing) and `infer` returns the logits by reference
+//! into backend-owned storage, so the native backend's inference step
+//! itself allocates nothing in steady state.  (The router's worker loop
+//! still allocates its padded input tensor and per-request reply rows —
+//! see `router.rs` — so the zero-alloc guarantee is scoped to
+//! `Session::run` inside `infer`.)
 
 use anyhow::Result;
 
 use crate::bitops::XnorImpl;
-use crate::model::{BnnEngine, EngineKernel};
-use crate::nn::conv::ConvScratch;
+use crate::model::{BnnEngine, EngineKernel, Session};
 use crate::runtime::LoadedModel;
 use crate::tensor::Tensor;
 
 /// A batched inference backend.  `infer` receives exactly
 /// `max_batch()` images ([B, 3, 32, 32] normalized) — the worker pads
-/// short batches — and returns logits [B, 10].
+/// short batches — and returns logits [B, 10], valid until the next
+/// `infer` call.
 ///
 /// NOT `Send`: PJRT handles contain thread-affine state (`Rc`, raw
 /// pointers), so the router constructs every backend INSIDE its worker
 /// thread via a `Send` factory closure (see [`super::Router::start`]).
 pub trait Backend {
-    fn name(&self) -> String;
+    fn name(&self) -> &str;
     fn max_batch(&self) -> usize;
-    fn infer(&mut self, images: &Tensor) -> Result<Tensor>;
+    fn infer(&mut self, images: &Tensor) -> Result<&Tensor>;
 }
 
-/// Native rust engine backend (any [`EngineKernel`] arm).
+/// Native rust engine backend (any [`EngineKernel`] arm): a compiled
+/// plan's [`Session`], so every request batch reuses the same buffers.
+/// The engine itself is NOT retained — the plan shares its weights.
 pub struct NativeBackend {
-    engine: std::sync::Arc<BnnEngine>,
-    kernel: EngineKernel,
-    batch: usize,
-    scratch: ConvScratch,
+    name: String,
+    session: Session,
 }
 
 impl NativeBackend {
-    pub fn new(
-        engine: std::sync::Arc<BnnEngine>,
-        kernel: EngineKernel,
-        batch: usize,
-    ) -> Self {
-        Self { engine, kernel, batch, scratch: ConvScratch::default() }
+    pub fn new(engine: &BnnEngine, kernel: EngineKernel, batch: usize)
+               -> Self {
+        Self {
+            name: format!("native/{}", kernel.name()),
+            session: engine.plan(kernel, batch).session(),
+        }
     }
 
     /// Default arm: the paper's kernel, best native implementation.
-    pub fn xnor(engine: std::sync::Arc<BnnEngine>, batch: usize) -> Self {
+    pub fn xnor(engine: &BnnEngine, batch: usize) -> Self {
         Self::new(engine, EngineKernel::Xnor(XnorImpl::Blocked), batch)
     }
 }
 
 impl Backend for NativeBackend {
-    fn name(&self) -> String {
-        format!("native/{}", self.kernel.name())
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn max_batch(&self) -> usize {
-        self.batch
+        self.session.max_batch()
     }
 
-    fn infer(&mut self, images: &Tensor) -> Result<Tensor> {
-        Ok(self
-            .engine
-            .forward_with_scratch(images, self.kernel, &mut self.scratch))
+    fn infer(&mut self, images: &Tensor) -> Result<&Tensor> {
+        Ok(self.session.run(images))
     }
 }
 
 /// PJRT executable backend (fixed batch baked at AOT time).
 pub struct PjrtBackend {
+    name: String,
     model: LoadedModel,
+    last: Tensor,
 }
 
 impl PjrtBackend {
     pub fn new(model: LoadedModel) -> Self {
-        Self { model }
+        Self {
+            name: format!("pjrt/{}", model.name),
+            model,
+            last: Tensor::zeros(vec![1, 1]),
+        }
     }
 }
 
 impl Backend for PjrtBackend {
-    fn name(&self) -> String {
-        format!("pjrt/{}", self.model.name)
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn max_batch(&self) -> usize {
         self.model.batch
     }
 
-    fn infer(&mut self, images: &Tensor) -> Result<Tensor> {
-        self.model.infer(images)
+    fn infer(&mut self, images: &Tensor) -> Result<&Tensor> {
+        self.last = self.model.infer(images)?;
+        Ok(&self.last)
     }
 }
 
@@ -98,6 +112,8 @@ pub struct MockBackend {
     pub batch: usize,
     pub delay: std::time::Duration,
     pub calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    name: String,
+    out: Tensor,
 }
 
 impl MockBackend {
@@ -106,20 +122,22 @@ impl MockBackend {
             batch,
             delay: std::time::Duration::from_millis(delay_ms),
             calls: Default::default(),
+            name: format!("mock/b{batch}"),
+            out: Tensor::zeros(vec![1, 1]),
         }
     }
 }
 
 impl Backend for MockBackend {
-    fn name(&self) -> String {
-        format!("mock/b{}", self.batch)
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn max_batch(&self) -> usize {
         self.batch
     }
 
-    fn infer(&mut self, images: &Tensor) -> Result<Tensor> {
+    fn infer(&mut self, images: &Tensor) -> Result<&Tensor> {
         self.calls
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         if !self.delay.is_zero() {
@@ -127,7 +145,8 @@ impl Backend for MockBackend {
         }
         let b = images.dim(0);
         let chw = images.len() / b;
-        let mut out = vec![0.0f32; b * 10];
+        self.out.reset(&[b, 10]);
+        self.out.data_mut().fill(0.0);
         for i in 0..b {
             let mean: f32 = images.data()[i * chw..(i + 1) * chw]
                 .iter()
@@ -135,9 +154,9 @@ impl Backend for MockBackend {
                 / chw as f32;
             // Deterministic "class": scaled mean bucketed into 0..10.
             let cls = (((mean + 1.0) / 2.0 * 9.99) as usize).min(9);
-            out[i * 10 + cls] = 1.0 + mean.abs();
+            self.out.data_mut()[i * 10 + cls] = 1.0 + mean.abs();
         }
-        Ok(Tensor::new(vec![b, 10], out))
+        Ok(&self.out)
     }
 }
 
@@ -149,8 +168,8 @@ mod tests {
     fn mock_backend_deterministic() {
         let mut m = MockBackend::new(4, 0);
         let x = Tensor::full(vec![2, 3, 32, 32], 0.5);
-        let a = m.infer(&x).unwrap();
-        let b = m.infer(&x).unwrap();
+        let a = m.infer(&x).unwrap().clone();
+        let b = m.infer(&x).unwrap().clone();
         assert_eq!(a, b);
         assert_eq!(m.calls.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(a.shape(), &[2, 10]);
@@ -159,8 +178,14 @@ mod tests {
     #[test]
     fn mock_class_tracks_mean() {
         let mut m = MockBackend::new(1, 0);
-        let lo = m.infer(&Tensor::full(vec![1, 3, 32, 32], -0.9)).unwrap();
-        let hi = m.infer(&Tensor::full(vec![1, 3, 32, 32], 0.9)).unwrap();
+        let lo = m
+            .infer(&Tensor::full(vec![1, 3, 32, 32], -0.9))
+            .unwrap()
+            .clone();
+        let hi = m
+            .infer(&Tensor::full(vec![1, 3, 32, 32], 0.9))
+            .unwrap()
+            .clone();
         let am = crate::nn::argmax(lo.row(0));
         let bm = crate::nn::argmax(hi.row(0));
         assert!(am < bm, "{am} vs {bm}");

@@ -97,7 +97,8 @@ impl Router {
             .spawn(move || {
                 let mut backend = match factory() {
                     Ok(b) => {
-                        let _ = ready_tx.send(Ok((b.name(), b.max_batch())));
+                        let _ = ready_tx
+                            .send(Ok((b.name().to_string(), b.max_batch())));
                         b
                     }
                     Err(e) => {

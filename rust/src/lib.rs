@@ -13,12 +13,22 @@
 //! Python never runs on the request path: after `make artifacts` the
 //! `bitkernel` binary is self-contained.
 //!
+//! The native engine is COMPILED, not interpreted: `BnnEngine::plan`
+//! lowers the network once into a flat op program (kernel dispatch
+//! resolved at plan time; binarized layers fuse bn+sign+pack so they
+//! emit the next layer's packed bits directly), and `Plan::session`
+//! pairs it with preallocated buffers so `Session::run` serves batches
+//! with zero steady-state heap allocation.  See `model/plan.rs` and
+//! README §"Plan/Session API".
+//!
 //! Layout:
 //! * [`tensor`] — minimal NCHW float tensor + packed bit matrices
 //! * [`bitops`] — bit packing and the xnor-bitcount gemm family
 //! * [`gemm`]   — float gemm kernels (naive control group / blocked)
-//! * [`nn`]     — im2col, conv, pooling, batchnorm, linear
-//! * [`model`]  — BNN config, BKW1 weights, the native inference engine
+//! * [`nn`]     — im2col, conv, pooling, batchnorm, linear, and the
+//!   fused `bn_sign_pack` layer-boundary epilogues ([`nn::fuse`])
+//! * [`model`]  — BNN config, BKW1 weights, the native engine, and the
+//!   compiled [`model::Plan`]/[`model::Session`] execution path
 //! * [`data`]   — ShapeSet-10 (BKD1) loading + native generation
 //! * [`runtime`] — PJRT client wrapper + artifact manifest/registry
 //! * [`coordinator`] — dynamic batcher, workers, router, metrics

@@ -164,8 +164,10 @@ fn start_backend(
                     let manifest =
                         bitkernel::runtime::Manifest::load(&artifacts)?;
                     let path = manifest.weight_file(&weights_name)?;
-                    let engine = Arc::new(BnnEngine::load(path)?);
-                    Ok(Box::new(NativeBackend::new(engine, kernel, batch))
+                    // The compiled plan shares the engine's weights; the
+                    // engine itself need not outlive backend creation.
+                    let engine = BnnEngine::load(path)?;
+                    Ok(Box::new(NativeBackend::new(&engine, kernel, batch))
                         as Box<dyn Backend>)
                 },
                 cfg,

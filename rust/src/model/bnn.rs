@@ -12,9 +12,22 @@
 //! {-1,+1}); `rust/tests/integration_engine.rs` pins that invariant, and
 //! `integration_runtime.rs` pins agreement with the PJRT artifacts.
 //!
+//! Since the plan/session redesign the serving path is COMPILED, not
+//! interpreted: [`BnnEngine::plan`] lowers the layer list into a flat op
+//! program once (all kernel dispatch resolved at plan time), and
+//! [`super::plan::Session`] executes it against preallocated buffers —
+//! see `model/plan.rs`.  The `forward*` methods here are thin
+//! conveniences that compile a throwaway plan per call;
+//! [`BnnEngine::forward_reference`] keeps the original unfused
+//! layer-by-layer pipeline alive as the bit-exactness oracle for
+//! `tests/plan_session.rs`.
+//!
 //! conv1 consumes the real-valued image in every arm (see DESIGN.md §4):
 //! the Control arm runs it with the naive float gemm, the other two with
 //! the blocked float gemm.
+
+use std::borrow::Cow;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -23,7 +36,7 @@ use crate::gemm::GemmImpl;
 use crate::nn::conv::{conv2d, ConvKernel, ConvParams, ConvScratch, ConvWeights};
 use crate::nn::linear::{linear, LinearKernel};
 use crate::nn::{argmax, bn_affine_nchw, bn_affine_rows, maxpool2};
-use crate::tensor::Tensor;
+use crate::tensor::{PackedMatrix, Tensor};
 
 use super::config::{ModelConfig, IMAGE_C, IMAGE_HW, NUM_CLASSES};
 use super::format::WeightFile;
@@ -40,39 +53,54 @@ pub enum EngineKernel {
 }
 
 impl EngineKernel {
-    pub fn name(&self) -> String {
+    /// Arm label.  Borrowed (allocation-free) for every fixed variant;
+    /// only `Xnor(Threaded(n))` allocates, because its thread count is
+    /// dynamic.  The fixed `"xnor/<imp>"` strings are duplicated from
+    /// [`XnorImpl::name`] precisely so they can stay borrowed; the
+    /// `names` test below pins the two methods together.
+    pub fn name(&self) -> Cow<'static, str> {
         match self {
-            EngineKernel::Xnor(imp) => format!("xnor/{}", imp.name()),
+            EngineKernel::Xnor(XnorImpl::Scalar) => "xnor/scalar32".into(),
+            EngineKernel::Xnor(XnorImpl::Word64) => "xnor/word64".into(),
+            EngineKernel::Xnor(XnorImpl::Blocked) => "xnor/blocked".into(),
+            EngineKernel::Xnor(XnorImpl::Blocked2x4) => {
+                "xnor/blocked2x4".into()
+            }
+            EngineKernel::Xnor(imp) => format!("xnor/{}", imp.name()).into(),
             EngineKernel::Control => "control".into(),
             EngineKernel::Optimized => "optimized".into(),
         }
     }
 }
 
-struct ConvLayer {
-    params: ConvParams,
-    pool: bool,
-    binarized: bool,
-    w_float: ConvWeights,
-    w_packed: Option<ConvWeights>,
-    bn_a: Vec<f32>,
-    bn_b: Vec<f32>,
+/// One loaded conv layer.  Weight and BN buffers are `Arc`-shared with
+/// every [`super::plan::Plan`] compiled from the engine, so plans are
+/// self-contained (no lifetime back into the engine) without copying
+/// matrices.
+pub(crate) struct ConvLayer {
+    pub(crate) params: ConvParams,
+    pub(crate) pool: bool,
+    pub(crate) binarized: bool,
+    pub(crate) w_float: Arc<Vec<f32>>,
+    pub(crate) w_packed: Option<Arc<PackedMatrix>>,
+    pub(crate) bn_a: Arc<Vec<f32>>,
+    pub(crate) bn_b: Arc<Vec<f32>>,
 }
 
-struct FcLayer {
-    din: usize,
-    dout: usize,
-    w_float: ConvWeights,
-    w_packed: ConvWeights,
-    bn_a: Vec<f32>,
-    bn_b: Vec<f32>,
+pub(crate) struct FcLayer {
+    pub(crate) din: usize,
+    pub(crate) dout: usize,
+    pub(crate) w_float: Arc<Vec<f32>>,
+    pub(crate) w_packed: Arc<PackedMatrix>,
+    pub(crate) bn_a: Arc<Vec<f32>>,
+    pub(crate) bn_b: Arc<Vec<f32>>,
 }
 
 /// A loaded, ready-to-run BNN.
 pub struct BnnEngine {
     pub cfg: ModelConfig,
-    convs: Vec<ConvLayer>,
-    fcs: Vec<FcLayer>,
+    pub(crate) convs: Vec<ConvLayer>,
+    pub(crate) fcs: Vec<FcLayer>,
 }
 
 impl BnnEngine {
@@ -89,7 +117,7 @@ impl BnnEngine {
             let w = wt.as_f32()?; // row-major [D, C, k, k] == [D, K]
             let packed = s
                 .binarized
-                .then(|| ConvWeights::Packed(pack_rows(&w, s.cout, s.k())));
+                .then(|| Arc::new(pack_rows(&w, s.cout, s.k())));
             let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
             let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
             ensure!(bn_a.len() == s.cout && bn_b.len() == s.cout,
@@ -104,10 +132,10 @@ impl BnnEngine {
                 },
                 pool: s.pool,
                 binarized: s.binarized,
-                w_float: ConvWeights::Float(w),
+                w_float: Arc::new(w),
                 w_packed: packed,
-                bn_a,
-                bn_b,
+                bn_a: Arc::new(bn_a),
+                bn_b: Arc::new(bn_b),
             });
         }
         let mut fcs = Vec::with_capacity(cfg.fcs.len());
@@ -116,16 +144,16 @@ impl BnnEngine {
             ensure!(wt.shape == vec![s.dout, s.din],
                     "{}: shape {:?}", s.name, wt.shape);
             let w = wt.as_f32()?;
-            let packed = ConvWeights::Packed(pack_rows(&w, s.dout, s.din));
+            let packed = Arc::new(pack_rows(&w, s.dout, s.din));
             let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
             let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
             fcs.push(FcLayer {
                 din: s.din,
                 dout: s.dout,
-                w_float: ConvWeights::Float(w),
+                w_float: Arc::new(w),
                 w_packed: packed,
-                bn_a,
-                bn_b,
+                bn_a: Arc::new(bn_a),
+                bn_b: Arc::new(bn_b),
             });
         }
         Ok(Self { cfg, convs, fcs })
@@ -138,124 +166,45 @@ impl BnnEngine {
     }
 
     /// Full forward pass: normalized NCHW images -> logits [B, 10].
+    ///
+    /// Convenience wrapper: compiles a throwaway [`super::plan::Plan`]
+    /// sized for this batch.  Repeated callers should hold a
+    /// plan/session themselves
+    /// (`engine.plan(kernel, max_batch).session()`), which is the
+    /// zero-allocation path.
     pub fn forward(&self, x: &Tensor, kernel: EngineKernel) -> Tensor {
-        let mut scratch = ConvScratch::default();
-        self.forward_with_scratch(x, kernel, &mut scratch)
+        let mut session = self.plan(kernel, x.dim(0)).session();
+        session.run(x).clone()
     }
 
-    /// Forward pass with a per-layer wall-time breakdown (perf tooling;
-    /// see `cargo bench --bench profile` and EXPERIMENTS.md §Perf).
+    /// Forward pass with a per-op wall-time breakdown (perf tooling; see
+    /// `cargo bench --bench profile` and EXPERIMENTS.md §Perf).  Thin
+    /// wrapper over [`super::plan::Session::run_profiled`]; stage names
+    /// follow the compiled op program (`conv2:encode`,
+    /// `fc1:bn_sign_pack`, ...).
     pub fn forward_profiled(
         &self,
         x: &Tensor,
         kernel: EngineKernel,
     ) -> (Tensor, Vec<(String, f64)>) {
-        let mut scratch = ConvScratch::default();
-        let mut stages = Vec::new();
-        let out = self.forward_inner(x, kernel, &mut scratch,
-                                     &mut Some(&mut stages));
-        (out, stages)
-    }
-
-    /// Forward pass reusing caller-owned scratch (the serving hot path).
-    pub fn forward_with_scratch(
-        &self,
-        x: &Tensor,
-        kernel: EngineKernel,
-        scratch: &mut ConvScratch,
-    ) -> Tensor {
-        self.forward_inner(x, kernel, scratch, &mut None)
-    }
-
-    fn forward_inner(
-        &self,
-        x: &Tensor,
-        kernel: EngineKernel,
-        scratch: &mut ConvScratch,
-        stages: &mut Option<&mut Vec<(String, f64)>>,
-    ) -> Tensor {
-        use crate::utils::Stopwatch;
-        macro_rules! stage {
-            ($name:expr, $body:expr) => {{
-                let sw = Stopwatch::start();
-                let out = $body;
-                if let Some(s) = stages.as_deref_mut() {
-                    s.push(($name, sw.elapsed_secs()));
-                }
-                out
-            }};
-        }
-        assert_eq!(x.dim(1), IMAGE_C);
-        assert_eq!(x.dim(2), IMAGE_HW);
-        let mut h = x.clone();
-        for (li, layer) in self.convs.iter().enumerate() {
-            let (ck, w): (ConvKernel, &ConvWeights) = if !layer.binarized {
-                // conv1: float input in every arm.
-                let imp = match kernel {
-                    EngineKernel::Control => GemmImpl::Naive,
-                    _ => GemmImpl::Blocked,
-                };
-                (ConvKernel::FloatReal(imp), &layer.w_float)
-            } else {
-                match kernel {
-                    EngineKernel::Xnor(imp) => (
-                        ConvKernel::Xnor(imp),
-                        layer.w_packed.as_ref().expect("packed weights"),
-                    ),
-                    EngineKernel::Control => (
-                        ConvKernel::FloatBinarized(GemmImpl::Naive),
-                        &layer.w_float,
-                    ),
-                    EngineKernel::Optimized => (
-                        ConvKernel::FloatBinarized(GemmImpl::Blocked),
-                        &layer.w_float,
-                    ),
-                }
-            };
-            h = stage!(format!("conv{}", li + 1),
-                       conv2d(&h, w, &layer.params, ck, scratch));
-            if layer.pool {
-                h = stage!(format!("pool{}", li + 1), maxpool2(&h));
-            }
-            bn_affine_nchw(&mut h, &layer.bn_a, &layer.bn_b);
-        }
-
-        // Flatten NCHW -> [B, C*H*W] (row-major: already (c, h, w) order).
-        let b = h.dim(0);
-        let feat = h.len() / b;
-        let mut h = h.reshaped(vec![b, feat]);
-
-        for (li, layer) in self.fcs.iter().enumerate() {
-            assert_eq!(h.dim(1), layer.din);
-            let (lk, w): (LinearKernel, &ConvWeights) = match kernel {
-                EngineKernel::Xnor(imp) => {
-                    (LinearKernel::Xnor(imp), &layer.w_packed)
-                }
-                EngineKernel::Control => (
-                    LinearKernel::FloatBinarized(GemmImpl::Naive),
-                    &layer.w_float,
-                ),
-                EngineKernel::Optimized => (
-                    LinearKernel::FloatBinarized(GemmImpl::Blocked),
-                    &layer.w_float,
-                ),
-            };
-            h = stage!(format!("fc{}", li + 1),
-                       linear(&h, w, layer.dout, lk));
-            bn_affine_rows(&mut h, &layer.bn_a, &layer.bn_b);
-        }
-        assert_eq!(h.dim(1), NUM_CLASSES);
-        h
+        let mut session = self.plan(kernel, x.dim(0)).session();
+        let (out, stages) = session.run_profiled(x);
+        (out.clone(), stages)
     }
 
     /// Predicted class per image.
     pub fn predict(&self, x: &Tensor, kernel: EngineKernel) -> Vec<usize> {
-        let logits = self.forward(x, kernel);
-        let b = logits.dim(0);
+        let b = x.dim(0);
+        let mut session = self.plan(kernel, b).session();
+        let logits = session.run(x);
         (0..b).map(|i| argmax(logits.row(i))).collect()
     }
 
     /// Accuracy over a normalized NCHW image tensor + labels.
+    ///
+    /// Runs one [`super::plan::Session`] across all batches: every batch
+    /// is fed as a borrowed view of `images` (no per-batch slice copy)
+    /// and reuses the session's activation buffers.
     pub fn evaluate(
         &self,
         images: &Tensor,
@@ -265,21 +214,15 @@ impl BnnEngine {
     ) -> f32 {
         let n = images.dim(0);
         assert_eq!(labels.len(), n);
+        let batch = batch.max(1).min(n.max(1));
         let chw = IMAGE_C * IMAGE_HW * IMAGE_HW;
+        let mut session = self.plan(kernel, batch).session();
         let mut correct = 0usize;
         let mut done = 0usize;
-        let mut scratch = ConvScratch::default();
         while done < n {
             let b = batch.min(n - done);
-            let slice = Tensor::new(
-                vec![b, IMAGE_C, IMAGE_HW, IMAGE_HW],
-                images.data()[done * chw..(done + b) * chw].to_vec(),
-            );
-            let logits = self.forward_with_scratch(
-                &slice,
-                kernel,
-                &mut scratch,
-            );
+            let logits = session
+                .run_images(&images.data()[done * chw..(done + b) * chw], b);
             for i in 0..b {
                 if argmax(logits.row(i)) == labels[done + i] as usize {
                     correct += 1;
@@ -288,5 +231,103 @@ impl BnnEngine {
             done += b;
         }
         correct as f32 / n as f32
+    }
+
+    /// The ORIGINAL unfused layer-by-layer pipeline, kept verbatim as
+    /// the bit-exactness oracle for the compiled plan path (see
+    /// `tests/plan_session.rs`).  Allocates per layer; never use it for
+    /// serving.
+    pub fn forward_reference(&self, x: &Tensor, kernel: EngineKernel)
+                             -> Tensor {
+        assert_eq!(x.dim(1), IMAGE_C);
+        assert_eq!(x.dim(2), IMAGE_HW);
+        let mut scratch = ConvScratch::default();
+        let mut h = x.clone();
+        for layer in &self.convs {
+            let (ck, w): (ConvKernel, ConvWeights) = if !layer.binarized {
+                // conv1: float input in every arm.
+                let imp = match kernel {
+                    EngineKernel::Control => GemmImpl::Naive,
+                    _ => GemmImpl::Blocked,
+                };
+                (ConvKernel::FloatReal(imp),
+                 ConvWeights::Float(Arc::clone(&layer.w_float)))
+            } else {
+                match kernel {
+                    EngineKernel::Xnor(imp) => (
+                        ConvKernel::Xnor(imp),
+                        ConvWeights::Packed(Arc::clone(
+                            layer.w_packed.as_ref().expect("packed weights"),
+                        )),
+                    ),
+                    EngineKernel::Control => (
+                        ConvKernel::FloatBinarized(GemmImpl::Naive),
+                        ConvWeights::Float(Arc::clone(&layer.w_float)),
+                    ),
+                    EngineKernel::Optimized => (
+                        ConvKernel::FloatBinarized(GemmImpl::Blocked),
+                        ConvWeights::Float(Arc::clone(&layer.w_float)),
+                    ),
+                }
+            };
+            h = conv2d(&h, &w, &layer.params, ck, &mut scratch);
+            if layer.pool {
+                h = maxpool2(&h);
+            }
+            bn_affine_nchw(&mut h, &layer.bn_a, &layer.bn_b);
+        }
+
+        // Flatten NCHW -> [B, C*H*W] (row-major: already (c, h, w) order).
+        let b = h.dim(0);
+        let feat = h.len() / b;
+        let mut h = h.reshaped(vec![b, feat]);
+
+        for layer in &self.fcs {
+            assert_eq!(h.dim(1), layer.din);
+            let (lk, w): (LinearKernel, ConvWeights) = match kernel {
+                EngineKernel::Xnor(imp) => (
+                    LinearKernel::Xnor(imp),
+                    ConvWeights::Packed(Arc::clone(&layer.w_packed)),
+                ),
+                EngineKernel::Control => (
+                    LinearKernel::FloatBinarized(GemmImpl::Naive),
+                    ConvWeights::Float(Arc::clone(&layer.w_float)),
+                ),
+                EngineKernel::Optimized => (
+                    LinearKernel::FloatBinarized(GemmImpl::Blocked),
+                    ConvWeights::Float(Arc::clone(&layer.w_float)),
+                ),
+            };
+            h = linear(&h, &w, layer.dout, lk);
+            bn_affine_rows(&mut h, &layer.bn_a, &layer.bn_b);
+        }
+        assert_eq!(h.dim(1), NUM_CLASSES);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The hardcoded borrowed labels in `EngineKernel::name` must track
+    /// `XnorImpl::name` — this is the drift guard for the duplication.
+    #[test]
+    fn kernel_names_track_xnor_impl_names() {
+        for imp in [
+            XnorImpl::Scalar,
+            XnorImpl::Word64,
+            XnorImpl::Blocked,
+            XnorImpl::Blocked2x4,
+            XnorImpl::Threaded(3),
+        ] {
+            assert_eq!(
+                EngineKernel::Xnor(imp).name(),
+                format!("xnor/{}", imp.name()),
+                "{imp:?}"
+            );
+        }
+        assert_eq!(EngineKernel::Control.name(), "control");
+        assert_eq!(EngineKernel::Optimized.name(), "optimized");
     }
 }

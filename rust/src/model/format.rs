@@ -78,6 +78,13 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
 }
 
 impl WeightFile {
+    /// Assemble a weight file from in-memory tensors — the synthetic-
+    /// model path used by `testing::synthetic_engine` and tests that
+    /// need a [`crate::model::BnnEngine`] without artifacts on disk.
+    pub fn from_tensors(tensors: BTreeMap<String, WeightTensor>) -> Self {
+        Self { tensors }
+    }
+
     pub fn parse(mut r: impl Read) -> Result<Self> {
         let magic = read_exact(&mut r, 4)?;
         ensure!(&magic == b"BKW1", "bad magic {magic:?}");

@@ -1,10 +1,18 @@
-//! The BNN model layer: architecture config, BKW1 weights, and the
-//! native inference engine (the Table-2 "CPU" arm).
+//! The BNN model layer: architecture config, BKW1 weights, the native
+//! inference engine (the Table-2 "CPU" arm), and its compiled
+//! plan/session execution path.
+//!
+//! Serving flow: load a [`BnnEngine`], compile a [`Plan`] once per
+//! (kernel, max_batch), derive one [`Session`] per worker thread, and
+//! call [`Session::run`] per batch — zero heap allocation in steady
+//! state.
 
 pub mod bnn;
 pub mod config;
 pub mod format;
+pub mod plan;
 
 pub use bnn::{BnnEngine, EngineKernel};
 pub use config::{ConvSpec, FcSpec, ModelConfig};
 pub use format::{Dtype, WeightFile, WeightTensor};
+pub use plan::{Plan, Session};

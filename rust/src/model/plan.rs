@@ -1,0 +1,643 @@
+//! Compiled execution plans — the engine's zero-allocation hot path.
+//!
+//! The legacy `forward` re-dispatched the [`EngineKernel`] enum per
+//! layer per call, cloned its input, and allocated a fresh activation
+//! tensor for every op.  [`BnnEngine::plan`] instead lowers the network
+//! ONCE into a flat [`Op`] program with all kernel dispatch resolved at
+//! plan time, and [`Plan::session`] pairs that program with preallocated
+//! ping-pong activation buffers, im2col scratch, and packed-activation
+//! buffers sized for `max_batch` — so [`Session::run`] performs no heap
+//! allocation in steady state (pinned by `tests/plan_session.rs`).
+//!
+//! Lowering per arm:
+//!
+//! * **Xnor** — conv1 runs float (`im2col` + blocked gemm); every
+//!   binarized conv becomes `encode` (fused im2col + bn + sign + pack,
+//!   the PREVIOUS layer's BatchNorm folded into the sign) + `xnor-gemm`
+//!   (+ `pool`); the conv→fc boundary and each fc→fc boundary become
+//!   fused `bn_sign_pack` epilogues that emit the next layer's
+//!   [`PackedMatrix`] directly — no bn'd float activation is ever
+//!   materialized past conv1.
+//! * **Control / Optimized** — the paper's baselines stay unfused
+//!   (im2col+sign, float gemm, pool, bn as separate ops) but run
+//!   against the same reusable buffers.
+//!
+//! Every lowering is bit-identical to
+//! [`BnnEngine::forward_reference`]: fused ops perform the same f32
+//! multiply-adds in the same order and only skip materialization.
+//!
+//! A [`Plan`] holds `Arc`s of the engine's weight/BN buffers, so it is
+//! self-contained: the engine may be dropped, plans may be shared, and
+//! each worker thread derives its own [`Session`].
+
+use std::sync::Arc;
+
+use crate::bitops::{xnor_gemm, XnorImpl};
+use crate::gemm::{gemm_f32, GemmImpl};
+use crate::nn::fuse::{bn_rows_from_gemm_f32, bn_rows_from_gemm_i32,
+                      bn_sign_pack_nchw, bn_sign_pack_rows_i32};
+use crate::nn::im2col::{col2im_nchw_i32_into, col2im_nchw_into,
+                        im2col_pack_bn, im2col_t_into, out_hw};
+use crate::nn::norm::bn_affine_nchw_slice;
+use crate::nn::pool::maxpool2_into;
+use crate::nn::sign_inplace;
+use crate::tensor::{PackedMatrix, Tensor};
+use crate::utils::Stopwatch;
+
+use super::bnn::{BnnEngine, EngineKernel};
+use super::config::{IMAGE_C, IMAGE_HW, NUM_CLASSES};
+
+/// Per-image conv geometry, resolved at plan time.
+#[derive(Debug, Clone, Copy)]
+struct ConvGeom {
+    cin: usize,
+    cout: usize,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+    /// Input spatial dims.
+    h: usize,
+    w: usize,
+    /// Output spatial dims.
+    oh: usize,
+    ow: usize,
+}
+
+impl ConvGeom {
+    fn k(&self) -> usize {
+        self.cin * self.ksize * self.ksize
+    }
+}
+
+/// A per-layer BatchNorm affine, shared with the engine.
+#[derive(Clone)]
+struct Bn {
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+}
+
+/// One lowered instruction.  Buffer roles are fixed by the executor:
+/// float activations ping-pong between two buffers, column/packed/gemm
+/// scratch each have a single home.
+enum Op {
+    /// Float activation -> float column matrix [b*oh*ow, k] (optionally
+    /// signed) in the column scratch.
+    Im2col { g: ConvGeom, sign: bool },
+    /// Float activation -> packed column bits, folding the PREVIOUS
+    /// layer's bn affine into the sign when present (xnor arm).
+    Encode { g: ConvGeom, bn: Option<Bn> },
+    /// Float gemm over the column scratch + col2im into the other
+    /// activation buffer.
+    ConvGemmF { w: Arc<Vec<f32>>, g: ConvGeom, imp: GemmImpl },
+    /// Xnor gemm over the packed scratch + col2im into the other
+    /// activation buffer.
+    ConvGemmX { w: Arc<PackedMatrix>, g: ConvGeom, imp: XnorImpl },
+    /// 2x2 max-pool into the other activation buffer (input dims given).
+    Pool { c: usize, h: usize, w: usize },
+    /// In-place per-channel bn on the current activation (float arms).
+    BnConv { bn: Bn, c: usize, hw: usize },
+    /// Flatten marker: the activation is henceforth rows [b, feat].
+    /// Row-major NCHW already has (c, h, w) feature order — no data
+    /// motion.
+    Flatten { feat: usize },
+    /// In-place sign over the current activation rows (float-arm fc
+    /// input binarization).
+    SignRows { k: usize },
+    /// Float fc gemm: activation rows [b, k] -> float gemm scratch
+    /// [d, b].
+    FcGemmF { w: Arc<Vec<f32>>, d: usize, k: usize, imp: GemmImpl },
+    /// Xnor fc gemm: packed rows [b, k] -> i32 gemm scratch [d, b].
+    FcGemmX { w: Arc<PackedMatrix>, d: usize, k: usize, imp: XnorImpl },
+    /// Fused epilogue (xnor arm, conv->fc boundary): float NCHW
+    /// activation + bn -> packed rows [b, c*hw].
+    BnSignPackNchw { bn: Bn, c: usize, hw: usize },
+    /// Fused epilogue (xnor arm, fc->fc boundary): i32 gemm scratch
+    /// [d, b] + bn -> packed rows [b, d].
+    BnSignPackRows { bn: Bn, d: usize },
+    /// i32 gemm scratch [d, b] + bn -> float logits [b, d] (xnor arm
+    /// final layer).
+    BnRowsI { bn: Bn, d: usize },
+    /// f32 gemm scratch [d, b] + bn -> float rows [b, d]; into the
+    /// logits tensor when `logits`, else into the other activation
+    /// buffer (float arms).
+    BnRowsF { bn: Bn, d: usize, logits: bool },
+}
+
+/// Buffer sizes (elements / u32 words) required at `max_batch`.
+#[derive(Debug, Clone, Copy, Default)]
+struct BufSpec {
+    act: usize,
+    cols: usize,
+    packed_words: usize,
+    gemm_i32: usize,
+    gemm_f32: usize,
+}
+
+pub(crate) struct PlanInner {
+    kernel: EngineKernel,
+    max_batch: usize,
+    image_c: usize,
+    image_hw: usize,
+    ops: Vec<Op>,
+    names: Vec<String>,
+    bufs: BufSpec,
+}
+
+/// A compiled, immutable execution plan for one (kernel, max_batch)
+/// pair.  Cheap to clone; create per-thread [`Session`]s from it.
+#[derive(Clone)]
+pub struct Plan {
+    inner: Arc<PlanInner>,
+}
+
+impl Plan {
+    pub fn kernel(&self) -> EngineKernel {
+        self.inner.kernel
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.inner.max_batch
+    }
+
+    /// Number of lowered ops (one profiling stage each).
+    pub fn num_ops(&self) -> usize {
+        self.inner.ops.len()
+    }
+
+    /// Stage names in execution order (`conv2:encode`,
+    /// `fc1:bn_sign_pack`, ...).
+    pub fn stage_names(&self) -> &[String] {
+        &self.inner.names
+    }
+
+    /// Materialize an execution context: every buffer the op program
+    /// needs, preallocated for `max_batch`.  `Session::run` then never
+    /// allocates.
+    pub fn session(&self) -> Session {
+        let s = self.inner.bufs;
+        Session {
+            plan: Arc::clone(&self.inner),
+            act_a: vec![0.0; s.act],
+            act_b: vec![0.0; s.act],
+            cols: vec![0.0; s.cols],
+            packed: PackedMatrix::with_word_capacity(s.packed_words),
+            gemm_i32: vec![0; s.gemm_i32],
+            gemm_f32: vec![0.0; s.gemm_f32],
+            out: Tensor::zeros(vec![self.inner.max_batch, NUM_CLASSES]),
+        }
+    }
+}
+
+impl BnnEngine {
+    /// Lower the network into a flat op program for `kernel`, sized for
+    /// batches up to `max_batch`.  All per-layer kernel dispatch happens
+    /// here, once; [`Session::run`] just walks the ops.
+    pub fn plan(&self, kernel: EngineKernel, max_batch: usize) -> Plan {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(!self.convs.is_empty() && !self.fcs.is_empty(),
+                "cannot plan an empty network");
+        let mb = max_batch;
+        let mut ops: Vec<Op> = Vec::new();
+        let mut names: Vec<String> = Vec::new();
+        let mut bufs = BufSpec::default();
+
+        let is_xnor = matches!(kernel, EngineKernel::Xnor(_));
+        // Float gemm used wherever a float conv/fc runs: conv1 in every
+        // arm, everything on the Control/Optimized arms.  Control is the
+        // paper's naive baseline; the other arms get the blocked kernel.
+        let float_imp = match kernel {
+            EngineKernel::Control => GemmImpl::Naive,
+            _ => GemmImpl::Blocked,
+        };
+
+        let (mut c, mut h, mut w) = (IMAGE_C, IMAGE_HW, IMAGE_HW);
+        // Xnor arm: each layer's bn is folded into its consumer's sign.
+        let mut pending_bn: Option<Bn> = None;
+
+        for (li, layer) in self.convs.iter().enumerate() {
+            let p = &layer.params;
+            assert_eq!(c, p.cin, "conv{} input channels", li + 1);
+            let (oh, ow) = out_hw(h, w, p.ksize, p.ksize, p.stride, p.pad);
+            let g = ConvGeom {
+                cin: p.cin,
+                cout: p.cout,
+                ksize: p.ksize,
+                stride: p.stride,
+                pad: p.pad,
+                h,
+                w,
+                oh,
+                ow,
+            };
+            let n = mb * oh * ow;
+            let k = g.k();
+            let lname = format!("conv{}", li + 1);
+
+            if is_xnor && layer.binarized {
+                let EngineKernel::Xnor(imp) = kernel else { unreachable!() };
+                bufs.packed_words =
+                    bufs.packed_words.max(n * k.div_ceil(32));
+                ops.push(Op::Encode { g, bn: pending_bn.take() });
+                names.push(format!("{lname}:encode"));
+                bufs.gemm_i32 = bufs.gemm_i32.max(p.cout * n);
+                bufs.act = bufs.act.max(mb * p.cout * oh * ow);
+                ops.push(Op::ConvGemmX {
+                    w: Arc::clone(
+                        layer.w_packed.as_ref().expect("packed weights"),
+                    ),
+                    g,
+                    imp,
+                });
+                names.push(format!("{lname}:xnor-gemm"));
+            } else {
+                debug_assert!(pending_bn.is_none(),
+                              "bn fold lost before conv{}", li + 1);
+                let imp = float_imp;
+                bufs.cols = bufs.cols.max(n * k);
+                ops.push(Op::Im2col { g, sign: layer.binarized });
+                names.push(if layer.binarized {
+                    format!("{lname}:im2col+sign")
+                } else {
+                    format!("{lname}:im2col")
+                });
+                bufs.gemm_f32 = bufs.gemm_f32.max(p.cout * n);
+                bufs.act = bufs.act.max(mb * p.cout * oh * ow);
+                ops.push(Op::ConvGemmF {
+                    w: Arc::clone(&layer.w_float),
+                    g,
+                    imp,
+                });
+                names.push(format!("{lname}:gemm"));
+            }
+            (c, h, w) = (p.cout, oh, ow);
+            if layer.pool {
+                ops.push(Op::Pool { c, h, w });
+                names.push(format!("pool{}", li + 1));
+                h /= 2;
+                w /= 2;
+            }
+            // The layer's BatchNorm (applied AFTER pooling, as in the
+            // reference pipeline): materialized on the float arms,
+            // deferred into the next consumer's sign on the xnor arm.
+            let bn = Bn {
+                a: Arc::clone(&layer.bn_a),
+                b: Arc::clone(&layer.bn_b),
+            };
+            if is_xnor {
+                pending_bn = Some(bn);
+            } else {
+                ops.push(Op::BnConv { bn, c, hw: h * w });
+                names.push(format!("{lname}:bn"));
+            }
+        }
+
+        let feat = c * h * w;
+        if is_xnor {
+            bufs.packed_words =
+                bufs.packed_words.max(mb * feat.div_ceil(32));
+            ops.push(Op::BnSignPackNchw {
+                bn: pending_bn.take().expect("final conv bn"),
+                c,
+                hw: h * w,
+            });
+            names.push("flatten:bn_sign_pack".to_string());
+        } else {
+            ops.push(Op::Flatten { feat });
+            names.push("flatten".to_string());
+        }
+
+        let mut kdim = feat;
+        let nf = self.fcs.len();
+        for (fi, fc) in self.fcs.iter().enumerate() {
+            assert_eq!(kdim, fc.din, "fc{} input width", fi + 1);
+            let lname = format!("fc{}", fi + 1);
+            let last = fi + 1 == nf;
+            let bn = Bn {
+                a: Arc::clone(&fc.bn_a),
+                b: Arc::clone(&fc.bn_b),
+            };
+            match kernel {
+                EngineKernel::Xnor(imp) => {
+                    bufs.gemm_i32 = bufs.gemm_i32.max(fc.dout * mb);
+                    ops.push(Op::FcGemmX {
+                        w: Arc::clone(&fc.w_packed),
+                        d: fc.dout,
+                        k: fc.din,
+                        imp,
+                    });
+                    names.push(format!("{lname}:xnor-gemm"));
+                    if last {
+                        ops.push(Op::BnRowsI { bn, d: fc.dout });
+                        names.push(format!("{lname}:bn+logits"));
+                    } else {
+                        bufs.packed_words = bufs
+                            .packed_words
+                            .max(mb * fc.dout.div_ceil(32));
+                        ops.push(Op::BnSignPackRows { bn, d: fc.dout });
+                        names.push(format!("{lname}:bn_sign_pack"));
+                    }
+                }
+                _ => {
+                    ops.push(Op::SignRows { k: fc.din });
+                    names.push(format!("{lname}:sign"));
+                    bufs.gemm_f32 = bufs.gemm_f32.max(fc.dout * mb);
+                    ops.push(Op::FcGemmF {
+                        w: Arc::clone(&fc.w_float),
+                        d: fc.dout,
+                        k: fc.din,
+                        imp: float_imp,
+                    });
+                    names.push(format!("{lname}:gemm"));
+                    if !last {
+                        bufs.act = bufs.act.max(mb * fc.dout);
+                    }
+                    ops.push(Op::BnRowsF { bn, d: fc.dout, logits: last });
+                    names.push(if last {
+                        format!("{lname}:bn+logits")
+                    } else {
+                        format!("{lname}:bn")
+                    });
+                }
+            }
+            kdim = fc.dout;
+        }
+        assert_eq!(kdim, NUM_CLASSES, "final fc width");
+
+        Plan {
+            inner: Arc::new(PlanInner {
+                kernel,
+                max_batch,
+                image_c: IMAGE_C,
+                image_hw: IMAGE_HW,
+                ops,
+                names,
+                bufs,
+            }),
+        }
+    }
+}
+
+/// Which buffer holds the current float activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cur {
+    /// The caller's input images (read-only; consumed by the first op
+    /// without cloning).
+    Input,
+    A,
+    B,
+}
+
+/// An execution context over one [`Plan`]: the plan's op program plus
+/// every buffer it needs, preallocated for `max_batch`.  One session
+/// serves one thread; `run` reuses all buffers, so steady-state
+/// inference performs no heap allocation.
+pub struct Session {
+    plan: Arc<PlanInner>,
+    /// Ping-pong float NCHW / row activations.
+    act_a: Vec<f32>,
+    act_b: Vec<f32>,
+    /// Float im2col scratch.
+    cols: Vec<f32>,
+    /// Packed activation bits (im2col columns / fc rows).
+    packed: PackedMatrix,
+    /// Gemm outputs, [D, N] row-major.
+    gemm_i32: Vec<i32>,
+    gemm_f32: Vec<f32>,
+    /// Logits [b, 10]; returned by reference from `run`.
+    out: Tensor,
+}
+
+impl Session {
+    pub fn kernel(&self) -> EngineKernel {
+        self.plan.kernel
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.plan.max_batch
+    }
+
+    fn check_images(&self, images: &Tensor) -> usize {
+        assert_eq!(images.shape().len(), 4, "expected NCHW images");
+        assert_eq!(images.dim(1), self.plan.image_c, "image channels");
+        assert_eq!(images.dim(2), self.plan.image_hw, "image height");
+        assert_eq!(images.dim(3), self.plan.image_hw, "image width");
+        images.dim(0)
+    }
+
+    /// Run inference on `images` ([B, 3, 32, 32] normalized, B <=
+    /// `max_batch`); returns the logits [B, 10] by reference into the
+    /// session's output buffer (valid until the next `run`).
+    pub fn run(&mut self, images: &Tensor) -> &Tensor {
+        let b = self.check_images(images);
+        self.run_inner(images.data(), b, false);
+        &self.out
+    }
+
+    /// [`Session::run`] over a borrowed raw image slice
+    /// (`data.len() == b * 3*32*32`) — the batch-view path `evaluate`
+    /// uses to step through a dataset tensor without copying slices.
+    pub fn run_images(&mut self, data: &[f32], b: usize) -> &Tensor {
+        self.run_inner(data, b, false);
+        &self.out
+    }
+
+    /// [`Session::run`] with a per-op wall-time breakdown
+    /// `(stage_name, seconds)` (the profiling path of
+    /// `cargo bench --bench profile`).
+    pub fn run_profiled(&mut self, images: &Tensor)
+                        -> (&Tensor, Vec<(String, f64)>) {
+        let b = self.check_images(images);
+        let stages = self.run_inner(images.data(), b, true);
+        (&self.out, stages)
+    }
+
+    /// (pointer, capacity) of every internal buffer — the allocation
+    /// fingerprint `tests/plan_session.rs` uses to prove steady-state
+    /// runs never reallocate.
+    pub fn buffer_signature(&self) -> [(usize, usize); 7] {
+        [
+            (self.act_a.as_ptr() as usize, self.act_a.capacity()),
+            (self.act_b.as_ptr() as usize, self.act_b.capacity()),
+            (self.cols.as_ptr() as usize, self.cols.capacity()),
+            (self.packed.data.as_ptr() as usize, self.packed.word_capacity()),
+            (self.gemm_i32.as_ptr() as usize, self.gemm_i32.capacity()),
+            (self.gemm_f32.as_ptr() as usize, self.gemm_f32.capacity()),
+            (self.out.data().as_ptr() as usize, self.out.capacity()),
+        ]
+    }
+
+    fn run_inner(&mut self, x: &[f32], b: usize, profile: bool)
+                 -> Vec<(String, f64)> {
+        let plan = Arc::clone(&self.plan);
+        assert!(b >= 1, "empty batch");
+        assert!(b <= plan.max_batch,
+                "batch {b} exceeds plan max_batch {}", plan.max_batch);
+        let chw = plan.image_c * plan.image_hw * plan.image_hw;
+        assert_eq!(x.len(), b * chw, "image data length");
+
+        let mut stages: Vec<(String, f64)> = Vec::new();
+        let mut cur = Cur::Input;
+        for (op, name) in plan.ops.iter().zip(&plan.names) {
+            // Only the profiled path pays for the clock reads.
+            let sw = profile.then(Stopwatch::start);
+            match op {
+                Op::Im2col { g, sign } => {
+                    let n = b * g.oh * g.ow;
+                    let k = g.k();
+                    let src: &[f32] = match cur {
+                        Cur::Input => x,
+                        Cur::A => &self.act_a[..],
+                        Cur::B => &self.act_b[..],
+                    };
+                    let cols = &mut self.cols[..n * k];
+                    im2col_t_into(&src[..b * g.cin * g.h * g.w], b, g.cin,
+                                  g.h, g.w, g.ksize, g.ksize, g.stride,
+                                  g.pad, cols);
+                    if *sign {
+                        sign_inplace(cols);
+                    }
+                }
+                Op::Encode { g, bn } => {
+                    let n = b * g.oh * g.ow;
+                    let src: &[f32] = match cur {
+                        Cur::Input => x,
+                        Cur::A => &self.act_a[..],
+                        Cur::B => &self.act_b[..],
+                    };
+                    self.packed.reset(n, g.k());
+                    let bn_ref =
+                        bn.as_ref().map(|bn| (&bn.a[..], &bn.b[..]));
+                    im2col_pack_bn(&src[..b * g.cin * g.h * g.w], b, g.cin,
+                                   g.h, g.w, g.ksize, g.ksize, g.stride,
+                                   g.pad, bn_ref, &mut self.packed);
+                }
+                Op::ConvGemmF { w, g, imp } => {
+                    let n = b * g.oh * g.ow;
+                    let (d, k) = (g.cout, g.k());
+                    gemm_f32(w, &self.cols[..n * k],
+                             &mut self.gemm_f32[..d * n], d, k, n, *imp);
+                    let (dst, next) = match cur {
+                        Cur::A => (&mut self.act_b, Cur::B),
+                        _ => (&mut self.act_a, Cur::A),
+                    };
+                    col2im_nchw_into(&self.gemm_f32[..d * n], b, d, g.oh,
+                                     g.ow, &mut dst[..d * n]);
+                    cur = next;
+                }
+                Op::ConvGemmX { w, g, imp } => {
+                    let n = b * g.oh * g.ow;
+                    let d = g.cout;
+                    xnor_gemm(w, &self.packed,
+                              &mut self.gemm_i32[..d * n], *imp);
+                    let (dst, next) = match cur {
+                        Cur::A => (&mut self.act_b, Cur::B),
+                        _ => (&mut self.act_a, Cur::A),
+                    };
+                    col2im_nchw_i32_into(&self.gemm_i32[..d * n], b, d,
+                                         g.oh, g.ow, &mut dst[..d * n]);
+                    cur = next;
+                }
+                Op::Pool { c, h, w } => {
+                    let (c, h, w) = (*c, *h, *w);
+                    let (src, dst, next) = match cur {
+                        Cur::A => (&self.act_a[..], &mut self.act_b, Cur::B),
+                        Cur::B => (&self.act_b[..], &mut self.act_a, Cur::A),
+                        Cur::Input => unreachable!("pool reads activations"),
+                    };
+                    maxpool2_into(&src[..b * c * h * w], b * c, h, w,
+                                  &mut dst[..b * c * (h / 2) * (w / 2)]);
+                    cur = next;
+                }
+                Op::BnConv { bn, c, hw } => {
+                    let act = match cur {
+                        Cur::A => &mut self.act_a,
+                        Cur::B => &mut self.act_b,
+                        Cur::Input => unreachable!("bn reads activations"),
+                    };
+                    bn_affine_nchw_slice(&mut act[..b * c * hw], b, *c,
+                                         *hw, &bn.a[..], &bn.b[..]);
+                }
+                Op::Flatten { feat } => {
+                    // Row-major NCHW is already (c, h, w) feature order;
+                    // purely a logical reinterpretation.
+                    debug_assert!(!matches!(cur, Cur::Input));
+                    debug_assert!(b * feat <= self.act_a.len());
+                }
+                Op::SignRows { k } => {
+                    let act = match cur {
+                        Cur::A => &mut self.act_a,
+                        Cur::B => &mut self.act_b,
+                        Cur::Input => unreachable!("sign reads activations"),
+                    };
+                    sign_inplace(&mut act[..b * k]);
+                }
+                Op::FcGemmF { w, d, k, imp } => {
+                    let (d, k) = (*d, *k);
+                    let src: &[f32] = match cur {
+                        Cur::A => &self.act_a[..],
+                        Cur::B => &self.act_b[..],
+                        Cur::Input => unreachable!("fc reads activations"),
+                    };
+                    gemm_f32(w, &src[..b * k],
+                             &mut self.gemm_f32[..d * b], d, k, b, *imp);
+                }
+                Op::FcGemmX { w, d, k, imp } => {
+                    let d = *d;
+                    debug_assert_eq!(self.packed.rows, b);
+                    debug_assert_eq!(self.packed.k, *k);
+                    xnor_gemm(w, &self.packed,
+                              &mut self.gemm_i32[..d * b], *imp);
+                }
+                Op::BnSignPackNchw { bn, c, hw } => {
+                    let (c, hw) = (*c, *hw);
+                    let src: &[f32] = match cur {
+                        Cur::A => &self.act_a[..],
+                        Cur::B => &self.act_b[..],
+                        Cur::Input => unreachable!("flatten reads activations"),
+                    };
+                    self.packed.reset(b, c * hw);
+                    bn_sign_pack_nchw(&src[..b * c * hw], b, c, hw,
+                                      &bn.a[..], &bn.b[..],
+                                      &mut self.packed);
+                }
+                Op::BnSignPackRows { bn, d } => {
+                    let d = *d;
+                    self.packed.reset(b, d);
+                    bn_sign_pack_rows_i32(&self.gemm_i32[..d * b], d, b,
+                                          &bn.a[..], &bn.b[..],
+                                          &mut self.packed);
+                }
+                Op::BnRowsI { bn, d } => {
+                    let d = *d;
+                    self.out.reset(&[b, d]);
+                    bn_rows_from_gemm_i32(&self.gemm_i32[..d * b], d, b,
+                                          &bn.a[..], &bn.b[..],
+                                          self.out.data_mut());
+                }
+                Op::BnRowsF { bn, d, logits } => {
+                    let d = *d;
+                    if *logits {
+                        self.out.reset(&[b, d]);
+                        bn_rows_from_gemm_f32(&self.gemm_f32[..d * b], d, b,
+                                              &bn.a[..], &bn.b[..],
+                                              self.out.data_mut());
+                    } else {
+                        let (dst, next) = match cur {
+                            Cur::A => (&mut self.act_b, Cur::B),
+                            _ => (&mut self.act_a, Cur::A),
+                        };
+                        bn_rows_from_gemm_f32(&self.gemm_f32[..d * b], d, b,
+                                              &bn.a[..], &bn.b[..],
+                                              &mut dst[..b * d]);
+                        cur = next;
+                    }
+                }
+            }
+            if let Some(sw) = sw {
+                stages.push((name.clone(), sw.elapsed_secs()));
+            }
+        }
+        debug_assert_eq!(self.out.shape(), &[b, NUM_CLASSES]);
+        stages
+    }
+}

@@ -9,6 +9,8 @@
 //! * `FloatReal`       — plain float conv (used for conv1, whose input
 //!   stays real-valued in every arm).
 
+use std::sync::Arc;
+
 use crate::bitops::{pack_rows, xnor_gemm, XnorImpl};
 use crate::gemm::{gemm_f32, GemmImpl};
 use crate::tensor::{PackedMatrix, Tensor};
@@ -17,13 +19,28 @@ use super::im2col::{col2im_nchw, col2im_nchw_i32, im2col_t, out_hw};
 use super::ops::sign_inplace;
 
 /// The weights of one conv layer, in whichever form the kernel needs.
+///
+/// Weight storage is `Arc`-shared so a compiled execution plan
+/// (`model::plan::Plan`) can hold the same buffers as the engine that
+/// produced it: cloning a `ConvWeights` is a refcount bump, never a
+/// copy of the matrix.
 #[derive(Debug, Clone)]
 pub enum ConvWeights {
     /// Row-major [D, K] float (K = C*kh*kw); values {-1,+1} for
     /// binarized layers.
-    Float(Vec<f32>),
+    Float(Arc<Vec<f32>>),
     /// Pre-packed [D, K] bits (the paper's offline weight encoding).
-    Packed(PackedMatrix),
+    Packed(Arc<PackedMatrix>),
+}
+
+impl ConvWeights {
+    pub fn float(v: Vec<f32>) -> Self {
+        Self::Float(Arc::new(v))
+    }
+
+    pub fn packed(p: PackedMatrix) -> Self {
+        Self::Packed(Arc::new(p))
+    }
 }
 
 /// Which gemm runs inside the conv.
@@ -91,7 +108,7 @@ pub fn conv2d(
             super::im2col::im2col_pack(x, p.ksize, p.ksize, p.stride,
                                        p.pad, &mut xp);
             scratch.gemm_i32.resize(d * n, 0);
-            xnor_gemm(wp, &xp, &mut scratch.gemm_i32, imp);
+            xnor_gemm(wp.as_ref(), &xp, &mut scratch.gemm_i32, imp);
             scratch.cols_packed = Some(xp);
             col2im_nchw_i32(&scratch.gemm_i32, b, d, oh, ow)
         }
@@ -188,7 +205,7 @@ mod tests {
         let wp = pack_rows(&wf, p.cout, p.k());
         let got_x = conv2d(
             &x,
-            &ConvWeights::Packed(wp),
+            &ConvWeights::packed(wp),
             &p,
             ConvKernel::Xnor(XnorImpl::Blocked),
             &mut scratch,
@@ -197,7 +214,7 @@ mod tests {
         // Arm 2: control (naive float)
         let got_c = conv2d(
             &x,
-            &ConvWeights::Float(wf.clone()),
+            &ConvWeights::float(wf.clone()),
             &p,
             ConvKernel::FloatBinarized(GemmImpl::Naive),
             &mut scratch,
@@ -206,7 +223,7 @@ mod tests {
         // Arm 3: optimized (blocked float)
         let got_o = conv2d(
             &x,
-            &ConvWeights::Float(wf),
+            &ConvWeights::float(wf),
             &p,
             ConvKernel::FloatBinarized(GemmImpl::Blocked),
             &mut scratch,
@@ -252,7 +269,7 @@ mod tests {
         let mut scratch = ConvScratch::default();
         let got = conv2d(
             &x,
-            &ConvWeights::Float(wf.clone()),
+            &ConvWeights::float(wf.clone()),
             &p,
             ConvKernel::FloatReal(GemmImpl::Blocked),
             &mut scratch,
@@ -285,12 +302,12 @@ mod tests {
         let p = ConvParams { cout: 3, cin: 2, ksize: 3, stride: 1, pad: 1 };
         let mut rng = Rng::new(5);
         let wf: Vec<f32> = rng.sign_vec(p.cout * p.k());
-        let wp = pack_rows(&wf, p.cout, p.k());
+        let wp = ConvWeights::packed(pack_rows(&wf, p.cout, p.k()));
         let mut scratch = ConvScratch::default();
         let x1 = Tensor::new(vec![1, 2, 6, 6], rng.normal_vec(72));
-        let a1 = conv2d(&x1, &ConvWeights::Packed(wp.clone()), &p,
+        let a1 = conv2d(&x1, &wp, &p,
                         ConvKernel::Xnor(XnorImpl::Scalar), &mut scratch);
-        let a2 = conv2d(&x1, &ConvWeights::Packed(wp), &p,
+        let a2 = conv2d(&x1, &wp, &p,
                         ConvKernel::Xnor(XnorImpl::Scalar), &mut scratch);
         assert_eq!(a1.max_abs_diff(&a2), 0.0);
     }
@@ -302,7 +319,7 @@ mod tests {
         let x = Tensor::zeros(vec![1, 1, 2, 2]);
         conv2d(
             &x,
-            &ConvWeights::Float(vec![1.0]),
+            &ConvWeights::float(vec![1.0]),
             &p,
             ConvKernel::Xnor(XnorImpl::Scalar),
             &mut ConvScratch::default(),

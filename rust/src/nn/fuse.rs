@@ -1,0 +1,184 @@
+//! Fused layer-boundary epilogues for the plan/session execution path.
+//!
+//! The paper's speedup comes from keeping the xnor-bitcount inner loop
+//! tight; these kernels keep the glue between layers tight too.  On the
+//! xnor arm a binarized fc layer's output is consumed only as SIGNS by
+//! the next layer, so the unfused chain
+//!
+//! ```text
+//!     gemm i32 [D,B] -> transpose+f32 [B,D] -> bn affine -> sign -> pack
+//! ```
+//!
+//! (three full passes plus two materialized float matrices) collapses
+//! into ONE pass that emits the next layer's [`PackedMatrix`] directly —
+//! the `bn_sign_pack` epilogue op of `model::plan`.  All variants are
+//! bit-identical to the unfused pipeline: they perform the same f32
+//! multiply-add in the same order and only skip the materialization
+//! (pinned by the tests below and by `tests/plan_session.rs`).
+
+use crate::bitops::pack::BitWriter;
+use crate::tensor::PackedMatrix;
+
+/// Xnor fc epilogue: gemm output [D, B] (i32, row-major) + per-feature
+/// affine `y = a*x + b` -> packed sign rows [B, D] for the next
+/// binarized layer.  `out` must be pre-`reset` to (B, D); every word
+/// (including the zero padding bits) is overwritten.
+pub fn bn_sign_pack_rows_i32(gemm: &[i32], d: usize, b: usize,
+                             a: &[f32], bias: &[f32],
+                             out: &mut PackedMatrix) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(a.len(), d, "bn scale len");
+    assert_eq!(bias.len(), d, "bn shift len");
+    assert_eq!(out.rows, b, "packed rows");
+    assert_eq!(out.k, d, "packed k");
+    let kw = out.kw;
+    for bi in 0..b {
+        let mut bw =
+            BitWriter::new(&mut out.data[bi * kw..(bi + 1) * kw]);
+        for di in 0..d {
+            let v = a[di] * gemm[di * b + bi] as f32 + bias[di];
+            bw.push(u32::from(v >= 0.0));
+        }
+        bw.finish();
+    }
+}
+
+/// Xnor flatten epilogue: float NCHW activation (post-pool, PRE-bn) +
+/// per-channel affine -> packed sign rows [B, C*HW].  Row-major NCHW
+/// flattening is exactly the (c, h, w) feature order of fc1, so this
+/// replaces `bn_affine_nchw` + flatten + `pack_rows` with one pass.
+pub fn bn_sign_pack_nchw(x: &[f32], b: usize, c: usize, hw: usize,
+                         a: &[f32], bias: &[f32], out: &mut PackedMatrix) {
+    assert_eq!(x.len(), b * c * hw, "activation len");
+    assert_eq!(a.len(), c, "bn scale len");
+    assert_eq!(bias.len(), c, "bn shift len");
+    assert_eq!(out.rows, b, "packed rows");
+    assert_eq!(out.k, c * hw, "packed k");
+    let kw = out.kw;
+    for bi in 0..b {
+        let src = &x[bi * c * hw..(bi + 1) * c * hw];
+        let mut bw =
+            BitWriter::new(&mut out.data[bi * kw..(bi + 1) * kw]);
+        for ci in 0..c {
+            let (ac, bc) = (a[ci], bias[ci]);
+            for &v in &src[ci * hw..(ci + 1) * hw] {
+                bw.push(u32::from(ac * v + bc >= 0.0));
+            }
+        }
+        bw.finish();
+    }
+}
+
+/// Fused transpose + bn for i32 gemm output: [D, B] -> float rows
+/// [B, D] with `y = a*x + b` applied per feature (the final-logits
+/// epilogue of the xnor arm).
+pub fn bn_rows_from_gemm_i32(gemm: &[i32], d: usize, b: usize,
+                             a: &[f32], bias: &[f32], out: &mut [f32]) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(out.len(), b * d, "output len");
+    assert_eq!(a.len(), d);
+    assert_eq!(bias.len(), d);
+    for di in 0..d {
+        let (ac, bc) = (a[di], bias[di]);
+        for bi in 0..b {
+            out[bi * d + di] = ac * gemm[di * b + bi] as f32 + bc;
+        }
+    }
+}
+
+/// [`bn_rows_from_gemm_i32`] for float gemm output (the fc epilogue of
+/// the Control/Optimized arms).
+pub fn bn_rows_from_gemm_f32(gemm: &[f32], d: usize, b: usize,
+                             a: &[f32], bias: &[f32], out: &mut [f32]) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(out.len(), b * d, "output len");
+    assert_eq!(a.len(), d);
+    assert_eq!(bias.len(), d);
+    for di in 0..d {
+        let (ac, bc) = (a[di], bias[di]);
+        for bi in 0..b {
+            out[bi * d + di] = ac * gemm[di * b + bi] + bc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::pack_rows;
+    use crate::nn::norm::{bn_affine_nchw, bn_affine_rows};
+    use crate::tensor::Tensor;
+    use crate::utils::Rng;
+
+    /// Unfused oracle for the fc epilogue: transpose to [B, D] float,
+    /// bn affine, pack rows — exactly the legacy engine's data flow.
+    fn unfused_rows_i32(gemm: &[i32], d: usize, b: usize, a: &[f32],
+                        bias: &[f32]) -> (Vec<f32>, PackedMatrix) {
+        let mut rows = vec![0.0f32; b * d];
+        for di in 0..d {
+            for bi in 0..b {
+                rows[bi * d + di] = gemm[di * b + bi] as f32;
+            }
+        }
+        let mut t = Tensor::new(vec![b, d], rows);
+        bn_affine_rows(&mut t, a, bias);
+        let packed = pack_rows(t.data(), b, d);
+        (t.into_data(), packed)
+    }
+
+    #[test]
+    fn bn_sign_pack_rows_matches_unfused() {
+        let mut rng = Rng::new(40);
+        for (d, b) in [(10, 1), (33, 3), (64, 8), (70, 5)] {
+            let gemm: Vec<i32> =
+                (0..d * b).map(|_| rng.below(41) as i32 - 20).collect();
+            let a = rng.normal_vec(d); // signed scales on purpose
+            let bias = rng.normal_vec(d);
+            let (_, want) = unfused_rows_i32(&gemm, d, b, &a, &bias);
+            let mut got = PackedMatrix::zeros(b, d);
+            // poison: stale bits must be fully overwritten
+            got.data.fill(0xDEAD_BEEF);
+            bn_sign_pack_rows_i32(&gemm, d, b, &a, &bias, &mut got);
+            assert_eq!(got, want, "d={d} b={b}");
+        }
+    }
+
+    #[test]
+    fn bn_rows_from_gemm_matches_unfused() {
+        let mut rng = Rng::new(41);
+        let (d, b) = (10, 4);
+        let gemm: Vec<i32> =
+            (0..d * b).map(|_| rng.below(21) as i32 - 10).collect();
+        let a = rng.normal_vec(d);
+        let bias = rng.normal_vec(d);
+        let (want, _) = unfused_rows_i32(&gemm, d, b, &a, &bias);
+        let mut got = vec![0.0f32; b * d];
+        bn_rows_from_gemm_i32(&gemm, d, b, &a, &bias, &mut got);
+        assert_eq!(got, want);
+
+        // f32 variant agrees on integer-valued inputs
+        let gemm_f: Vec<f32> = gemm.iter().map(|&v| v as f32).collect();
+        let mut got_f = vec![0.0f32; b * d];
+        bn_rows_from_gemm_f32(&gemm_f, d, b, &a, &bias, &mut got_f);
+        assert_eq!(got_f, want);
+    }
+
+    #[test]
+    fn bn_sign_pack_nchw_matches_unfused() {
+        let mut rng = Rng::new(42);
+        for (b, c, hw) in [(1, 3, 16), (2, 8, 16), (3, 5, 9)] {
+            let x = Tensor::new(vec![b, c, hw, 1],
+                                rng.normal_vec(b * c * hw));
+            let a = rng.normal_vec(c);
+            let bias = rng.normal_vec(c);
+            // oracle: bn on NCHW, flatten (row-major no-op), pack rows
+            let mut xb = x.clone();
+            bn_affine_nchw(&mut xb, &a, &bias);
+            let want = pack_rows(xb.data(), b, c * hw);
+            let mut got = PackedMatrix::zeros(b, c * hw);
+            got.data.fill(0xFFFF_FFFF);
+            bn_sign_pack_nchw(x.data(), b, c, hw, &a, &bias, &mut got);
+            assert_eq!(got, want, "b={b} c={c} hw={hw}");
+        }
+    }
+}

@@ -6,8 +6,14 @@
 //! `lax.conv_general_dilated_patches` and python's ref.im2col_ref).
 //! Spatial zero padding inserts literal 0.0 values — binarization maps
 //! them to +1 downstream, identical to the python oracle.
+//!
+//! Every transform exists in two forms: an allocating convenience
+//! (`im2col_t`, `col2im_nchw`, ...) and an `_into` core that writes a
+//! caller-owned buffer — the plan/session execution path uses only the
+//! latter so `Session::run` stays allocation-free in steady state.
 
-use crate::tensor::Tensor;
+use crate::bitops::pack::BitWriter;
+use crate::tensor::{PackedMatrix, Tensor};
 
 /// Output spatial dims for a conv.
 pub fn out_hw(h: usize, w: usize, kh: usize, kw: usize, stride: usize,
@@ -22,8 +28,23 @@ pub fn im2col_t(x: &Tensor, kh: usize, kw: usize, stride: usize,
     let (oh, ow) = out_hw(h, w, kh, kw, stride, pad);
     let k = c * kh * kw;
     let n = b * oh * ow;
-    let xd = x.data();
     let mut out = vec![0.0f32; n * k];
+    im2col_t_into(x.data(), b, c, h, w, kh, kw, stride, pad, &mut out);
+    Tensor::new(vec![n, k], out)
+}
+
+/// Core of [`im2col_t`] over raw slices, writing a caller-owned buffer
+/// (`out.len() == B*OH*OW * C*kh*kw`; fully overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_t_into(xd: &[f32], b: usize, c: usize, h: usize, w: usize,
+                     kh: usize, kw: usize, stride: usize, pad: usize,
+                     out: &mut [f32]) {
+    let (oh, ow) = out_hw(h, w, kh, kw, stride, pad);
+    let k = c * kh * kw;
+    let n = b * oh * ow;
+    assert_eq!(xd.len(), b * c * h * w, "input len");
+    assert_eq!(out.len(), n * k, "column buffer len");
+    out.fill(0.0); // padding positions stay zero
 
     for bi in 0..b {
         for oy in 0..oh {
@@ -53,7 +74,6 @@ pub fn im2col_t(x: &Tensor, kh: usize, kw: usize, stride: usize,
             }
         }
     }
-    Tensor::new(vec![n, k], out)
 }
 
 /// Fused im2col + encode (§Perf optimization 1): pack the binarized
@@ -62,43 +82,36 @@ pub fn im2col_t(x: &Tensor, kh: usize, kw: usize, stride: usize,
 /// `pack_rows(im2col_t(x, ..).data(), n, k)`:
 /// spatial padding contributes value 0.0 -> sign +1 -> bit 1.
 pub fn im2col_pack(x: &Tensor, kh: usize, kw: usize, stride: usize,
-                   pad: usize, out: &mut crate::tensor::PackedMatrix) {
-    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+                   pad: usize, out: &mut PackedMatrix) {
+    im2col_pack_bn(x.data(), x.dim(0), x.dim(1), x.dim(2), x.dim(3),
+                   kh, kw, stride, pad, None, out);
+}
+
+/// [`im2col_pack`] over raw slices, optionally folding the PREVIOUS
+/// layer's per-channel BatchNorm affine into the sign: when `bn` is
+/// `Some((a, b))` each interior element contributes bit
+/// `a[c]*v + b[c] >= 0` — bit-identical to materializing
+/// `bn_affine_nchw` and packing the result (same f32 ops, same order) —
+/// while im2col's own zero padding stays bit 1 (it is inserted AFTER the
+/// affine in the unfused pipeline).  This is the xnor arm's layer-fusion
+/// path: binarized conv layers never materialize a bn'd float
+/// activation.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_pack_bn(xd: &[f32], b: usize, c: usize, h: usize, w: usize,
+                      kh: usize, kw: usize, stride: usize, pad: usize,
+                      bn: Option<(&[f32], &[f32])>,
+                      out: &mut PackedMatrix) {
     let (oh, ow) = out_hw(h, w, kh, kw, stride, pad);
     let k = c * kh * kw;
     let n = b * oh * ow;
+    assert_eq!(xd.len(), b * c * h * w, "input len");
     assert_eq!(out.rows, n, "packed rows");
     assert_eq!(out.k, k, "packed k");
-    let xd = x.data();
+    if let Some((a, bb)) = bn {
+        assert_eq!(a.len(), c, "bn scale len");
+        assert_eq!(bb.len(), c, "bn shift len");
+    }
     let kwords = out.kw;
-
-    // Accumulate each 32-bit word in a register and store once (a
-    // read-modify-write per bit costs ~4x; §Perf optimization 2).
-    struct BitWriter<'a> {
-        row: &'a mut [u32],
-        word: u32,
-        bits: u32,
-        widx: usize,
-    }
-    impl<'a> BitWriter<'a> {
-        #[inline]
-        fn push(&mut self, bit: u32) {
-            self.word |= bit << self.bits;
-            self.bits += 1;
-            if self.bits == 32 {
-                self.row[self.widx] = self.word;
-                self.widx += 1;
-                self.word = 0;
-                self.bits = 0;
-            }
-        }
-        #[inline]
-        fn finish(self) {
-            if self.bits > 0 {
-                self.row[self.widx] = self.word;
-            }
-        }
-    }
 
     for bi in 0..b {
         for oy in 0..oh {
@@ -107,9 +120,13 @@ pub fn im2col_pack(x: &Tensor, kh: usize, kw: usize, stride: usize,
                 let r = (bi * oh + oy) * ow + ox;
                 let row = &mut out.data[r * kwords..(r + 1) * kwords];
                 let ix0 = (ox * stride) as isize - pad as isize;
-                let mut bw = BitWriter { row, word: 0, bits: 0, widx: 0 };
+                let mut bw = BitWriter::new(row);
                 for ci in 0..c {
                     let plane = &xd[(bi * c + ci) * h * w..][..h * w];
+                    let (ac, bc) = match bn {
+                        Some((a, bb)) => (a[ci], bb[ci]),
+                        None => (1.0, 0.0),
+                    };
                     for dy in 0..kh {
                         let iy = iy0 + dy as isize;
                         if iy < 0 || iy >= h as isize {
@@ -127,9 +144,17 @@ pub fn im2col_pack(x: &Tensor, kh: usize, kw: usize, stride: usize,
                         for _ in 0..(in_x0 as isize - ix0) {
                             bw.push(1);
                         }
-                        // interior: branch-free sign bit
-                        for &v in &src[in_x0..in_x1.max(in_x0)] {
-                            bw.push(u32::from(v >= 0.0));
+                        // interior: branch-free sign bit; the bn=None
+                        // path keeps the plain compare (no identity
+                        // affine cost on the legacy encode loop)
+                        if bn.is_some() {
+                            for &v in &src[in_x0..in_x1.max(in_x0)] {
+                                bw.push(u32::from(ac * v + bc >= 0.0));
+                            }
+                        } else {
+                            for &v in &src[in_x0..in_x1.max(in_x0)] {
+                                bw.push(u32::from(v >= 0.0));
+                            }
                         }
                         // right pad
                         for _ in 0..(ix0 + kw as isize
@@ -148,9 +173,17 @@ pub fn im2col_pack(x: &Tensor, kh: usize, kw: usize, stride: usize,
 /// Gemm output [D, N] (row-major) -> NCHW [B, D, OH, OW].
 pub fn col2im_nchw(gemm_out: &[f32], b: usize, d: usize, oh: usize,
                    ow: usize) -> Tensor {
+    let mut out = vec![0.0f32; d * b * oh * ow];
+    col2im_nchw_into(gemm_out, b, d, oh, ow, &mut out);
+    Tensor::new(vec![b, d, oh, ow], out)
+}
+
+/// Core of [`col2im_nchw`] writing a caller-owned buffer.
+pub fn col2im_nchw_into(gemm_out: &[f32], b: usize, d: usize, oh: usize,
+                        ow: usize, out: &mut [f32]) {
     let n = b * oh * ow;
     assert_eq!(gemm_out.len(), d * n);
-    let mut out = vec![0.0f32; d * n];
+    assert_eq!(out.len(), d * n);
     let hw = oh * ow;
     for di in 0..d {
         let src = &gemm_out[di * n..(di + 1) * n];
@@ -159,16 +192,23 @@ pub fn col2im_nchw(gemm_out: &[f32], b: usize, d: usize, oh: usize,
                 .copy_from_slice(&src[bi * hw..(bi + 1) * hw]);
         }
     }
-    Tensor::new(vec![b, d, oh, ow], out)
 }
 
 /// col2im fused with the i32 -> f32 conversion of the xnor gemm output
 /// (§Perf optimization 3: one pass instead of convert-then-copy).
 pub fn col2im_nchw_i32(gemm_out: &[i32], b: usize, d: usize, oh: usize,
                        ow: usize) -> Tensor {
+    let mut out = vec![0.0f32; d * b * oh * ow];
+    col2im_nchw_i32_into(gemm_out, b, d, oh, ow, &mut out);
+    Tensor::new(vec![b, d, oh, ow], out)
+}
+
+/// Core of [`col2im_nchw_i32`] writing a caller-owned buffer.
+pub fn col2im_nchw_i32_into(gemm_out: &[i32], b: usize, d: usize,
+                            oh: usize, ow: usize, out: &mut [f32]) {
     let n = b * oh * ow;
     assert_eq!(gemm_out.len(), d * n);
-    let mut out = vec![0.0f32; d * n];
+    assert_eq!(out.len(), d * n);
     let hw = oh * ow;
     for di in 0..d {
         let src = &gemm_out[di * n..(di + 1) * n];
@@ -179,7 +219,6 @@ pub fn col2im_nchw_i32(gemm_out: &[i32], b: usize, d: usize, oh: usize,
             }
         }
     }
-    Tensor::new(vec![b, d, oh, ow], out)
 }
 
 #[cfg(test)]
@@ -255,6 +294,25 @@ mod tests {
         assert_eq!(t.shape(), &[2, 2, 1, 1]);
         assert_eq!(t.data(), &[1.0, 10.0, 2.0, 20.0]);
     }
+
+    #[test]
+    fn into_variants_overwrite_stale_data() {
+        // Reused buffers must not leak previous contents (padding zeros
+        // and every interior element are rewritten).
+        let x = seq_tensor(vec![1, 1, 3, 3]);
+        let want = im2col_t(&x, 3, 3, 1, 1);
+        let n = want.dim(0);
+        let k = want.dim(1);
+        let mut buf = vec![7.5f32; n * k];
+        im2col_t_into(x.data(), 1, 1, 3, 3, 3, 3, 1, 1, &mut buf);
+        assert_eq!(&buf[..], want.data());
+
+        let gemm: Vec<i32> = (0..8).map(|i| i - 4).collect();
+        let want = col2im_nchw_i32(&gemm, 2, 2, 1, 2);
+        let mut out = vec![9.0f32; 8];
+        col2im_nchw_i32_into(&gemm, 2, 2, 1, 2, &mut out);
+        assert_eq!(&out[..], want.data());
+    }
 }
 
 #[cfg(test)]
@@ -294,5 +352,33 @@ mod fused_tests {
         im2col_pack(&x, 3, 3, 1, 1, &mut got);
         // top-left position: 5 padded (bit 1) + 4 real (bit 0)
         assert_eq!(got.row(0)[0].count_ones(), 5);
+    }
+
+    #[test]
+    fn im2col_pack_bn_equals_materialized_bn() {
+        use crate::nn::norm::bn_affine_nchw;
+        let mut rng = Rng::new(33);
+        for (b, c, h, w, ks, stride, pad) in [
+            (2, 3, 6, 6, 3, 1, 1),
+            (1, 4, 5, 5, 3, 2, 1),
+            (1, 2, 4, 4, 1, 1, 0),
+        ] {
+            let x = Tensor::new(vec![b, c, h, w],
+                                rng.normal_vec(b * c * h * w));
+            // Signed scales on purpose: folding must respect a < 0.
+            let a = rng.normal_vec(c);
+            let bb = rng.normal_vec(c);
+
+            // unfused oracle: materialize bn, then pack
+            let mut xb = x.clone();
+            bn_affine_nchw(&mut xb, &a, &bb);
+            let cols = im2col_t(&xb, ks, ks, stride, pad);
+            let want = pack_rows(cols.data(), cols.dim(0), cols.dim(1));
+
+            let mut got = PackedMatrix::zeros(cols.dim(0), cols.dim(1));
+            im2col_pack_bn(x.data(), b, c, h, w, ks, ks, stride, pad,
+                           Some((&a[..], &bb[..])), &mut got);
+            assert_eq!(got, want, "b{b} c{c} {h}x{w} k{ks}");
+        }
     }
 }

@@ -88,7 +88,7 @@ mod tests {
 
         let got_f = linear(
             &x,
-            &ConvWeights::Float(wf.clone()),
+            &ConvWeights::float(wf.clone()),
             d,
             LinearKernel::FloatBinarized(GemmImpl::Naive),
         );
@@ -97,7 +97,7 @@ mod tests {
         let wp = pack_rows(&wf, d, k);
         let got_x = linear(
             &x,
-            &ConvWeights::Packed(wp),
+            &ConvWeights::packed(wp),
             d,
             LinearKernel::Xnor(XnorImpl::Blocked),
         );
@@ -107,7 +107,7 @@ mod tests {
     #[test]
     fn output_shape() {
         let x = Tensor::zeros(vec![2, 8]);
-        let w = ConvWeights::Float(vec![1.0; 3 * 8]);
+        let w = ConvWeights::float(vec![1.0; 3 * 8]);
         let y = linear(&x, &w, 3, LinearKernel::FloatBinarized(GemmImpl::Blocked));
         assert_eq!(y.shape(), &[2, 3]);
         // all-zero input binarizes to +1; +1 dot +1 over k=8 = 8

@@ -11,6 +11,7 @@
 //! the bit-packing and every gemm kernel reduce over contiguous memory.
 
 pub mod conv;
+pub mod fuse;
 pub mod im2col;
 pub mod linear;
 pub mod norm;
@@ -18,6 +19,8 @@ pub mod ops;
 pub mod pool;
 
 pub use conv::{conv2d, ConvKernel};
+pub use fuse::{bn_rows_from_gemm_f32, bn_rows_from_gemm_i32,
+               bn_sign_pack_nchw, bn_sign_pack_rows_i32};
 pub use im2col::{col2im_nchw, im2col_t, out_hw};
 pub use linear::linear;
 pub use norm::{bn_affine_nchw, bn_affine_rows};

@@ -5,10 +5,16 @@ use crate::tensor::Tensor;
 /// Apply a per-channel affine over an NCHW tensor, in place.
 pub fn bn_affine_nchw(x: &mut Tensor, a: &[f32], b: &[f32]) {
     let (batch, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    bn_affine_nchw_slice(x.data_mut(), batch, c, h * w, a, b);
+}
+
+/// Core of [`bn_affine_nchw`] over a raw `[batch, c, hw]` slice (the
+/// plan executor's buffer-based entry point).
+pub fn bn_affine_nchw_slice(data: &mut [f32], batch: usize, c: usize,
+                            hw: usize, a: &[f32], b: &[f32]) {
     assert_eq!(a.len(), c);
     assert_eq!(b.len(), c);
-    let hw = h * w;
-    let data = x.data_mut();
+    assert_eq!(data.len(), batch * c * hw, "activation len");
     for bi in 0..batch {
         for ci in 0..c {
             let (ac, bc) = (a[ci], b[ci]);

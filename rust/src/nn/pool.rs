@@ -5,11 +5,20 @@ use crate::tensor::Tensor;
 /// NCHW [B, C, H, W] -> [B, C, H/2, W/2].  H and W must be even.
 pub fn maxpool2(x: &Tensor) -> Tensor {
     let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let mut out = vec![0.0f32; b * c * (h / 2) * (w / 2)];
+    maxpool2_into(x.data(), b * c, h, w, &mut out);
+    Tensor::new(vec![b, c, h / 2, w / 2], out)
+}
+
+/// Core of [`maxpool2`] over `planes = B*C` contiguous HxW planes,
+/// writing a caller-owned buffer (`out.len() == planes * (h/2) * (w/2)`).
+pub fn maxpool2_into(xd: &[f32], planes: usize, h: usize, w: usize,
+                     out: &mut [f32]) {
     assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even dims, got {h}x{w}");
     let (oh, ow) = (h / 2, w / 2);
-    let xd = x.data();
-    let mut out = vec![0.0f32; b * c * oh * ow];
-    for p in 0..b * c {
+    assert_eq!(xd.len(), planes * h * w, "input len");
+    assert_eq!(out.len(), planes * oh * ow, "output len");
+    for p in 0..planes {
         let src = &xd[p * h * w..][..h * w];
         let dst = &mut out[p * oh * ow..][..oh * ow];
         for oy in 0..oh {
@@ -24,7 +33,6 @@ pub fn maxpool2(x: &Tensor) -> Tensor {
             }
         }
     }
-    Tensor::new(vec![b, c, oh, ow], out)
 }
 
 #[cfg(test)]

@@ -75,6 +75,23 @@ impl Tensor {
         self.shape[i]
     }
 
+    /// Re-dimension in place, reusing the backing buffer.  Never shrinks
+    /// capacity; never reallocates when the new element count (and rank)
+    /// fits the existing capacity — the primitive `model::plan::Session`
+    /// uses to keep its output tensor allocation-free across runs.
+    pub fn reset(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        self.data.resize(n, 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+    }
+
+    /// Capacity of the backing buffer (allocation diagnostics; see the
+    /// steady-state checks in `tests/plan_session.rs`).
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
     /// Row view of a 2-D tensor.
     pub fn row(&self, r: usize) -> &[f32] {
         debug_assert_eq!(self.shape.len(), 2);
@@ -116,6 +133,28 @@ impl PackedMatrix {
     pub fn zeros(rows: usize, k: usize) -> Self {
         let kw = k.div_ceil(32);
         Self { rows, k, kw, data: vec![0; rows * kw] }
+    }
+
+    /// Empty matrix whose word buffer can hold `words` u32s without
+    /// reallocating (pre-sizing for [`PackedMatrix::reset`]).
+    pub fn with_word_capacity(words: usize) -> Self {
+        Self { rows: 0, k: 0, kw: 0, data: Vec::with_capacity(words) }
+    }
+
+    /// Re-dimension in place, reusing the word buffer.  No reallocation
+    /// when `rows * ceil(k/32)` fits the existing capacity — the packed
+    /// scratch buffers of `model::plan::Session` cycle through every
+    /// layer shape of a network this way.
+    pub fn reset(&mut self, rows: usize, k: usize) {
+        self.rows = rows;
+        self.k = k;
+        self.kw = k.div_ceil(32);
+        self.data.resize(rows * self.kw, 0);
+    }
+
+    /// Capacity of the word buffer (allocation diagnostics).
+    pub fn word_capacity(&self) -> usize {
+        self.data.capacity()
     }
 
     #[inline]
@@ -187,5 +226,30 @@ mod tests {
         let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
         let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]);
         assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn tensor_reset_reuses_buffer() {
+        let mut t = Tensor::zeros(vec![4, 10]);
+        let ptr = t.data().as_ptr();
+        let cap = t.capacity();
+        t.reset(&[2, 10]);
+        assert_eq!(t.shape(), &[2, 10]);
+        assert_eq!(t.len(), 20);
+        t.reset(&[4, 10]); // grow back within capacity
+        assert_eq!(t.data().as_ptr(), ptr);
+        assert_eq!(t.capacity(), cap);
+    }
+
+    #[test]
+    fn packed_reset_reuses_buffer() {
+        let mut p = PackedMatrix::with_word_capacity(8);
+        let cap = p.word_capacity();
+        p.reset(2, 40); // 2 rows * 2 words
+        assert_eq!((p.rows, p.k, p.kw), (2, 40, 2));
+        assert_eq!(p.data.len(), 4);
+        p.reset(4, 64); // 4 rows * 2 words = 8 words, still in capacity
+        assert_eq!(p.data.len(), 8);
+        assert_eq!(p.word_capacity(), cap);
     }
 }

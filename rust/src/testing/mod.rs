@@ -57,6 +57,63 @@ pub fn dim(rng: &mut Rng, hi: usize) -> usize {
     1 + rng.below(hi)
 }
 
+/// Build a [`crate::model::BnnEngine`] with random sign-binarized
+/// weights and random (signed!) folded-BN affines — no artifacts on
+/// disk needed.  `widths` follows the BKW1 `meta.widths` layout
+/// `[c1..c6, f1, f2, classes]`; the architecture requires
+/// `widths[4] == widths[5]` (conv6 width == the fc1 flatten width).
+///
+/// This is the oracle substrate for `tests/plan_session.rs`: small
+/// widths keep a full forward pass fast while exercising every layer
+/// kind (float conv1, binarized convs, pooling, all three fcs).
+pub fn synthetic_engine(widths: [u32; 9], seed: u64)
+                        -> crate::model::BnnEngine {
+    use crate::model::{BnnEngine, Dtype, WeightFile, WeightTensor};
+    use std::collections::BTreeMap;
+
+    assert_eq!(widths[4], widths[5],
+               "conv5/conv6 widths must match the fc1 flatten width");
+    let f32t = |vals: Vec<f32>, shape: Vec<usize>| WeightTensor {
+        dtype: Dtype::F32,
+        shape,
+        words: vals.iter().map(|v| v.to_bits()).collect(),
+    };
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    tensors.insert(
+        "meta.widths".to_string(),
+        WeightTensor { dtype: Dtype::U32, shape: vec![9],
+                       words: widths.to_vec() },
+    );
+    let w: Vec<usize> = widths.iter().map(|&x| x as usize).collect();
+    let chans = [3usize, w[0], w[1], w[2], w[3], w[4], w[5]];
+    for i in 0..6 {
+        let (cin, cout) = (chans[i], chans[i + 1]);
+        let name = format!("conv{}", i + 1);
+        tensors.insert(format!("{name}.w"),
+                       f32t(rng.sign_vec(cout * cin * 9),
+                            vec![cout, cin, 3, 3]));
+        tensors.insert(format!("bn_{name}.a"),
+                       f32t(rng.normal_vec(cout), vec![cout]));
+        tensors.insert(format!("bn_{name}.b"),
+                       f32t(rng.normal_vec(cout), vec![cout]));
+    }
+    let dins = [w[4] * 16, w[6], w[7]]; // 16 = (32 / 2^3 pools)^2
+    let douts = [w[6], w[7], w[8]];
+    for i in 0..3 {
+        let name = format!("fc{}", i + 1);
+        tensors.insert(format!("{name}.w"),
+                       f32t(rng.sign_vec(douts[i] * dins[i]),
+                            vec![douts[i], dins[i]]));
+        tensors.insert(format!("bn_{name}.a"),
+                       f32t(rng.normal_vec(douts[i]), vec![douts[i]]));
+        tensors.insert(format!("bn_{name}.b"),
+                       f32t(rng.normal_vec(douts[i]), vec![douts[i]]));
+    }
+    BnnEngine::from_weight_file(&WeightFile::from_tensors(tensors))
+        .expect("synthetic weight file")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

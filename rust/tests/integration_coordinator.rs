@@ -32,8 +32,8 @@ fn router_with_native_engine_classifies_correctly() {
     let weights = dir.join("weights_small.bkw");
     let router = Router::start(
         move || {
-            let engine = Arc::new(BnnEngine::load(&weights)?);
-            Ok(Box::new(NativeBackend::xnor(engine, 8)) as Box<dyn Backend>)
+            let engine = BnnEngine::load(&weights)?;
+            Ok(Box::new(NativeBackend::xnor(&engine, 8)) as Box<dyn Backend>)
         },
         RouterConfig {
             queue_cap: 64,
@@ -76,8 +76,8 @@ fn http_service_end_to_end() {
         "bnn".to_string(),
         Router::start(
             move || {
-                let engine = Arc::new(BnnEngine::load(&weights)?);
-                Ok(Box::new(NativeBackend::xnor(engine, 8)) as Box<dyn Backend>)
+                let engine = BnnEngine::load(&weights)?;
+                Ok(Box::new(NativeBackend::xnor(&engine, 8)) as Box<dyn Backend>)
             },
             RouterConfig::default(),
         )
@@ -168,8 +168,8 @@ fn failing_backend_drops_requests_and_counts_rejections() {
     /// Backend that errors on every batch (failure injection).
     struct FailingBackend;
     impl Backend for FailingBackend {
-        fn name(&self) -> String {
-            "failing".into()
+        fn name(&self) -> &str {
+            "failing"
         }
         fn max_batch(&self) -> usize {
             4
@@ -177,7 +177,7 @@ fn failing_backend_drops_requests_and_counts_rejections() {
         fn infer(
             &mut self,
             _images: &bitkernel::tensor::Tensor,
-        ) -> anyhow::Result<bitkernel::tensor::Tensor> {
+        ) -> anyhow::Result<&bitkernel::tensor::Tensor> {
             anyhow::bail!("injected fault")
         }
     }

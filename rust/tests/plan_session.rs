@@ -1,0 +1,202 @@
+//! Plan/session execution tests against a synthetic engine — these run
+//! WITHOUT artifacts, unlike the integration tests, so the compiled hot
+//! path is covered in every environment.
+//!
+//! Pins the three plan/session contracts:
+//! 1. `Session::run` is BIT-IDENTICAL to the legacy unfused pipeline
+//!    (`BnnEngine::forward_reference`) on every Table-2 arm and at odd
+//!    batch sizes — the fused encode/bn_sign_pack ops change data
+//!    movement, never arithmetic.
+//! 2. A session carries no state between runs (buffer reuse is safe).
+//! 3. Steady-state runs never reallocate any session buffer.
+
+use std::cell::RefCell;
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::model::EngineKernel;
+use bitkernel::nn::argmax;
+use bitkernel::tensor::Tensor;
+use bitkernel::testing::{prop_assert, synthetic_engine};
+use bitkernel::utils::Rng;
+
+/// Small-but-complete architecture: float conv1, binarized convs with
+/// all three pools, three fcs.  widths[4] == widths[5] as the BNN
+/// topology requires.
+const WIDTHS: [u32; 9] = [4, 4, 6, 6, 8, 8, 16, 12, 10];
+const CHW: usize = 3 * 32 * 32;
+const MAX_BATCH: usize = 4;
+
+fn arms() -> [EngineKernel; 5] {
+    [
+        EngineKernel::Xnor(XnorImpl::Scalar),
+        EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Xnor(XnorImpl::Threaded(2)),
+        EngineKernel::Control,
+        EngineKernel::Optimized,
+    ]
+}
+
+fn images(rng: &mut Rng, b: usize) -> Tensor {
+    Tensor::new(vec![b, 3, 32, 32], rng.normal_vec(b * CHW))
+}
+
+#[test]
+fn prop_session_bit_identical_to_legacy_forward() {
+    let engine = synthetic_engine(WIDTHS, 71);
+    for kernel in arms() {
+        let session =
+            RefCell::new(engine.plan(kernel, MAX_BATCH).session());
+        prop_assert(72, 9, |rng, case| {
+            // Odd batch sizes on purpose: 1, 3, and max_batch.
+            let b = [1, 3, MAX_BATCH][case % 3];
+            let x = images(rng, b);
+            let want = engine.forward_reference(&x, kernel);
+            let mut s = session.borrow_mut();
+            let got = s.run(&x);
+            if got.shape() != want.shape() {
+                return Err(format!(
+                    "{kernel:?} b={b}: shape {:?} vs {:?}",
+                    got.shape(),
+                    want.shape()
+                ));
+            }
+            let diff = got.max_abs_diff(&want);
+            if diff != 0.0 {
+                return Err(format!(
+                    "{kernel:?} b={b}: max |Δlogit| = {diff} (must be \
+                     bit-identical)"
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn consecutive_runs_do_not_contaminate() {
+    let engine = synthetic_engine(WIDTHS, 73);
+    for kernel in [
+        EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Control,
+        EngineKernel::Optimized,
+    ] {
+        let mut session = engine.plan(kernel, MAX_BATCH).session();
+        let mut rng = Rng::new(9001);
+        let x1 = images(&mut rng, MAX_BATCH);
+        let x2 = images(&mut rng, 2);
+        let first = session.run(&x1).clone();
+        let mid = session.run(&x2).clone(); // smaller batch in between
+        let again = session.run(&x1).clone();
+        assert_eq!(first, again, "{kernel:?}: state leaked across runs");
+        // The interleaved small batch matches a fresh session too.
+        let fresh = engine.plan(kernel, MAX_BATCH).session().run(&x2).clone();
+        assert_eq!(mid, fresh, "{kernel:?}: stale buffer contents leaked");
+    }
+}
+
+#[test]
+fn batch_rows_match_single_image_runs() {
+    let engine = synthetic_engine(WIDTHS, 77);
+    let mut rng = Rng::new(5);
+    let x = images(&mut rng, 3);
+    let kernel = EngineKernel::Xnor(XnorImpl::Blocked);
+    let mut session = engine.plan(kernel, 3).session();
+    let batch = session.run(&x).clone();
+    let chw = CHW;
+    for i in 0..3 {
+        let single = Tensor::new(vec![1, 3, 32, 32],
+                                 x.data()[i * chw..(i + 1) * chw].to_vec());
+        let row = session.run(&single).clone();
+        assert_eq!(row.row(0), batch.row(i), "image {i}");
+    }
+}
+
+#[test]
+fn steady_state_runs_never_reallocate() {
+    let engine = synthetic_engine(WIDTHS, 74);
+    for kernel in arms() {
+        let mut session = engine.plan(kernel, MAX_BATCH).session();
+        let mut rng = Rng::new(4242);
+        // Every buffer is preallocated at session creation: even the
+        // FIRST run must leave the allocation fingerprint untouched.
+        let sig = session.buffer_signature();
+        for case in 0..8 {
+            let b = [MAX_BATCH, 1, 2, 3][case % 4];
+            let x = images(&mut rng, b);
+            let _ = session.run(&x);
+            assert_eq!(session.buffer_signature(), sig,
+                       "{kernel:?}: buffer reallocated (case {case}, b={b})");
+        }
+    }
+}
+
+#[test]
+fn wrappers_are_thin_shims_over_the_plan() {
+    let engine = synthetic_engine(WIDTHS, 75);
+    let mut rng = Rng::new(7);
+    let x = images(&mut rng, 3);
+    let kernel = EngineKernel::Xnor(XnorImpl::Blocked);
+    let want = engine.forward_reference(&x, kernel);
+
+    assert_eq!(engine.forward(&x, kernel), want);
+
+    let preds = engine.predict(&x, kernel);
+    for (i, p) in preds.iter().enumerate() {
+        assert_eq!(*p, argmax(want.row(i)), "image {i}");
+    }
+
+    let (out, stages) = engine.forward_profiled(&x, kernel);
+    assert_eq!(out, want);
+    assert_eq!(stages.len(), engine.plan(kernel, 3).num_ops());
+}
+
+#[test]
+fn fused_epilogue_is_a_distinct_profiling_stage() {
+    let engine = synthetic_engine(WIDTHS, 78);
+    let xnor = engine.plan(EngineKernel::Xnor(XnorImpl::Blocked), 2);
+    let names = xnor.stage_names();
+    for needle in ["conv1:im2col", "conv2:encode", "pool2",
+                   "flatten:bn_sign_pack", "fc1:xnor-gemm",
+                   "fc1:bn_sign_pack", "fc3:bn+logits"] {
+        assert!(names.iter().any(|n| n == needle),
+                "xnor plan missing stage {needle}: {names:?}");
+    }
+    // The xnor arm never materializes a bn'd float activation: no
+    // standalone bn op anywhere in its program.
+    assert!(!names.iter().any(|n| n.ends_with(":bn")), "{names:?}");
+
+    let control = engine.plan(EngineKernel::Control, 2);
+    let names = control.stage_names();
+    for needle in ["conv1:bn", "conv2:im2col+sign", "flatten",
+                   "fc1:sign", "fc3:bn+logits"] {
+        assert!(names.iter().any(|n| n == needle),
+                "control plan missing stage {needle}: {names:?}");
+    }
+
+    // And the profiled run reports exactly the compiled stages.
+    let mut rng = Rng::new(12);
+    let x = images(&mut rng, 2);
+    let mut session = xnor.session();
+    let (_, stages) = session.run_profiled(&x);
+    let got: Vec<&str> = stages.iter().map(|(n, _)| n.as_str()).collect();
+    let want: Vec<&str> =
+        xnor.stage_names().iter().map(|n| n.as_str()).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn evaluate_runs_borrowed_batches_through_one_session() {
+    let engine = synthetic_engine(WIDTHS, 76);
+    let mut rng = Rng::new(11);
+    let n = 10;
+    let xs = images(&mut rng, n);
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    let kernel = EngineKernel::Xnor(XnorImpl::Blocked);
+    // batch 4 exercises a ragged final batch of 2
+    let acc = engine.evaluate(&xs, &labels, kernel, 4);
+    let logits = engine.forward_reference(&xs, kernel);
+    let correct = (0..n)
+        .filter(|&i| argmax(logits.row(i)) == labels[i] as usize)
+        .count();
+    assert_eq!(acc, correct as f32 / n as f32);
+}

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (also: `make ci`).
+#
+#   build (release) -> tests -> formatting -> profile-bench smoke run
+#
+# The profile smoke run exercises the compiled plan/session path end to
+# end (1 rep per arm); it self-skips when `make artifacts` has not been
+# run, so ci.sh works in artifact-less environments too.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== bench smoke: profile (1 rep)"
+cargo bench --bench profile -- --reps 1
+
+echo "ci.sh: all green"
