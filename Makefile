@@ -1,12 +1,17 @@
 # Repo-level convenience targets.
 #
-#   make ci        — tier-1 gate: build + tests + fmt + profile smoke run
+#   make ci        — tier-1 gate: build + tests + fmt + clippy + smoke runs
+#   make bench     — kernel ablation -> BENCH_2.json (per-impl GiOP/s
+#                    for the Table-2 layer shapes; the perf trajectory)
 #   make artifacts — python AOT pipeline -> rust/artifacts (needs jax)
 
-.PHONY: ci artifacts
+.PHONY: ci bench artifacts
 
 ci:
 	./scripts/ci.sh
+
+bench:
+	cd rust && cargo bench --bench ablation -- --json ../BENCH_2.json
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts

@@ -76,26 +76,35 @@ fn main() -> Result<()> {
     assert_eq!(preds[0], preds[2]);
     println!("all native arms agree ✓");
 
-    // --- PJRT (AOT pallas/XLA) arms ----------------------------------------
-    let mut rt = Runtime::new(&dir)?;
+    // --- PJRT (AOT pallas/XLA) arms (needs --features pjrt) ----------------
     let x1 = ds.normalized(0, 1);
     let native = engine.forward(&x1, EngineKernel::Xnor(XnorImpl::Blocked));
-    println!("\nPJRT executables (jax/pallas AOT -> HLO text -> {}):",
-             rt.platform());
-    for variant in ["xnor", "control", "optimized"] {
-        let sw = Stopwatch::start();
-        let model = rt.load_by("small", variant, 1)?;
-        let compile_ms = sw.elapsed_ms();
-        let sw = Stopwatch::start();
-        let out = model.infer(&x1)?;
-        let diff = out.max_abs_diff(&native);
-        println!(
-            "  {variant:<10} compile {compile_ms:>7.1} ms   infer {:>7.2} ms   max|Δlogit| vs native = {diff:.2e}",
-            sw.elapsed_ms()
-        );
-        assert!(diff < 5e-3);
+    match Runtime::new(&dir) {
+        // Only the built-without-pjrt stub error is skippable; in a
+        // pjrt build a Runtime failure is a real regression.
+        Err(e) if !cfg!(feature = "pjrt") => {
+            println!("\nskipping PJRT arms: {e:#}");
+        }
+        Err(e) => return Err(e),
+        Ok(mut rt) => {
+            println!("\nPJRT executables (jax/pallas AOT -> HLO text -> {}):",
+                     rt.platform());
+            for variant in ["xnor", "control", "optimized"] {
+                let sw = Stopwatch::start();
+                let model = rt.load_by("small", variant, 1)?;
+                let compile_ms = sw.elapsed_ms();
+                let sw = Stopwatch::start();
+                let out = model.infer(&x1)?;
+                let diff = out.max_abs_diff(&native);
+                println!(
+                    "  {variant:<10} compile {compile_ms:>7.1} ms   infer {:>7.2} ms   max|Δlogit| vs native = {diff:.2e}",
+                    sw.elapsed_ms()
+                );
+                assert!(diff < 5e-3);
+            }
+            println!("PJRT arms agree with the native engine ✓");
+        }
     }
-    println!("PJRT arms agree with the native engine ✓");
 
     // --- single-image timing ------------------------------------------------
     // Compile the plan once per arm and time steady-state Session::run —

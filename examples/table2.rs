@@ -44,10 +44,14 @@ fn main() -> Result<()> {
         result.native_speedup() > 1.5,
         "native xnor should beat the control group comfortably"
     );
-    assert!(
-        result.pjrt_speedup() > 1.0,
-        "pjrt xnor should beat the pallas control group"
-    );
+    if result.has_pjrt() {
+        assert!(
+            result.pjrt_speedup() > 1.0,
+            "pjrt xnor should beat the pallas control group"
+        );
+    } else {
+        println!("(pjrt column skipped: built without the pjrt feature)");
+    }
     println!("orderings consistent with the paper ✓");
     Ok(())
 }

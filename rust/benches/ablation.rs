@@ -1,82 +1,149 @@
 //! `cargo bench --bench ablation` — design-choice ablations DESIGN.md §9
-//! calls out: word width (u32 vs u64), register blocking, threading,
-//! naive-vs-blocked float gemm, and the fused `bn_sign_pack` layer
-//! epilogue of the plan/session path.
+//! calls out: word width (u32 vs u64), register blocking, the SIMD/wide
+//! tiers, 2-D tiled threading, shape-aware `Auto`, naive-vs-SIMD float
+//! gemm, and the fused `bn_sign_pack` layer epilogue of the plan/session
+//! path.
+//!
+//! Flags:
+//! * `--quick`        — tiny budgets (the `scripts/ci.sh` smoke run)
+//! * `--json <path>`  — also emit per-impl GiOP/s for every layer shape
+//!   as JSON (the `make bench` perf-trajectory artifact, BENCH_2.json)
 
 use bitkernel::benchkit::{bench, Table};
-use bitkernel::bitops::{pack_rows, pack_rows_from, xnor_gemm, XnorImpl};
-use bitkernel::gemm::{gemm_blocked, gemm_naive};
+use bitkernel::bitops::{pack_rows, pack_rows_from, simd_tier, xnor_gemm,
+                        XnorImpl};
+use bitkernel::gemm::{gemm_blocked, gemm_naive, gemm_simd};
 use bitkernel::nn::fuse::bn_sign_pack_rows_i32;
 use bitkernel::tensor::PackedMatrix;
 use bitkernel::utils::Rng;
 
-const SHAPES: [(&str, usize, usize, usize); 3] = [
+/// Table-2 layer gemm shapes, plus the small-D acceptance shape for the
+/// SIMD + 2-D-tiling work (a quarter-scale conv3 at batch 16: D=64 is
+/// where row-only threading stopped scaling).
+const SHAPES: [(&str, usize, usize, usize); 4] = [
     ("conv2 (128x1152x1024)", 128, 1152, 1024),
+    ("conv3q (64x288x1024)", 64, 288, 1024),
     ("conv6 (512x4608x64)", 512, 4608, 64),
     ("fc1 b8 (1024x8192x8)", 1024, 8192, 8),
 ];
 
+fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let json_path = arg("--json");
+    let (budget, min_iters) = if quick { (0.02, 1) } else { (0.3, 3) };
     let mut rng = Rng::new(17);
 
     // --- xnor implementation ladder ------------------------------------------
+    let impls: Vec<XnorImpl> = {
+        let mut v = XnorImpl::ALL_SINGLE.to_vec();
+        v.push(XnorImpl::Threaded(2));
+        let t = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if t > 2 {
+            v.push(XnorImpl::Threaded(t));
+        }
+        v.push(XnorImpl::Auto);
+        v
+    };
+    let headers: Vec<String> = std::iter::once("layer".to_string())
+        .chain(impls.iter().map(|i| i.name().into_owned()))
+        .chain(["best speedup".to_string()])
+        .collect();
+    let header_refs: Vec<&str> =
+        headers.iter().map(String::as_str).collect();
     let mut table = Table::new(
-        "xnor-gemm implementation ablation (ms; speedup vs scalar32)",
-        &["layer", "scalar32", "word64", "blocked", "blocked2x4",
-          "threaded2", "best speedup"],
+        &format!(
+            "xnor-gemm implementation ablation (ms; speedup vs scalar32; \
+             simd tier: {})",
+            simd_tier()
+        ),
+        &header_refs,
     );
+    // (layer, d, k, n, per-impl mean seconds) for the JSON report and
+    // the acceptance checks.
+    let mut measured: Vec<(&str, usize, usize, usize, Vec<f64>)> =
+        Vec::new();
     for (name, d, k, n) in SHAPES {
         let wp = pack_rows(&rng.sign_vec(d * k), d, k);
         let xp = pack_rows(&rng.sign_vec(n * k), n, k);
         let mut out = vec![0i32; d * n];
         let mut times = Vec::new();
-        for imp in [
-            XnorImpl::Scalar,
-            XnorImpl::Word64,
-            XnorImpl::Blocked,
-            XnorImpl::Blocked2x4,
-            XnorImpl::Threaded(2),
-        ] {
-            let m = bench(&imp.name(), 0.3, 3, 1.0, || {
+        for &imp in &impls {
+            let m = bench(&imp.name(), budget, min_iters, 1.0, || {
                 xnor_gemm(&wp, &xp, &mut out, imp);
             });
             times.push(m.mean_s());
         }
-        let best = times[1..].iter().cloned().fold(f64::INFINITY, f64::min);
-        table.row(&[
-            name.to_string(),
-            format!("{:.3}", times[0] * 1e3),
-            format!("{:.3}", times[1] * 1e3),
-            format!("{:.3}", times[2] * 1e3),
-            format!("{:.3}", times[3] * 1e3),
-            format!("{:.3}", times[4] * 1e3),
-            format!("{:.2}x", times[0] / best),
-        ]);
+        let best =
+            times[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut row: Vec<String> = vec![name.to_string()];
+        row.extend(times.iter().map(|t| format!("{:.3}", t * 1e3)));
+        row.push(format!("{:.2}x", times[0] / best));
+        table.row(&row);
+        measured.push((name, d, k, n, times));
     }
     table.print();
-    println!("(testbed has 1 CPU core: threaded2 ~ blocked is expected; \
-              the ablation exists for multi-core hosts)");
+
+    // --- acceptance checks (informational: perf varies per host) -------------
+    let blocked_at = impls
+        .iter()
+        .position(|i| *i == XnorImpl::Blocked)
+        .unwrap();
+    let simd_at =
+        impls.iter().position(|i| *i == XnorImpl::Simd).unwrap();
+    let auto_at =
+        impls.iter().position(|i| *i == XnorImpl::Auto).unwrap();
+    for (name, _, _, n, times) in &measured {
+        if name.starts_with("conv3q") && *n >= 1024 {
+            let speedup = times[blocked_at] / times[simd_at];
+            println!(
+                "acceptance: simd vs blocked on {name}: {:.2}x ({})",
+                speedup,
+                if speedup >= 2.0 { "PASS >= 2x" } else { "below 2x" }
+            );
+        }
+        // Auto within 10% of the best single-threaded impl everywhere.
+        let best_single = XnorImpl::ALL_SINGLE
+            .iter()
+            .map(|i| times[impls.iter().position(|x| x == i).unwrap()])
+            .fold(f64::INFINITY, f64::min);
+        let ratio = times[auto_at] / best_single;
+        println!(
+            "acceptance: auto vs best-single on {name}: {:.2} ({})",
+            ratio,
+            if ratio <= 1.1 { "PASS <= 1.10" } else { "over budget" }
+        );
+    }
 
     // --- float gemm ladder -----------------------------------------------------
     let mut table = Table::new(
-        "float gemm ablation (control naive vs optimized blocked, ms)",
-        &["layer", "naive", "blocked", "speedup"],
+        "float gemm ablation (control naive vs blocked vs simd, ms)",
+        &["layer", "naive", "blocked", "simd", "speedup (naive/simd)"],
     );
     for (name, d, k, n) in SHAPES {
         let a = rng.sign_vec(d * k);
         let bt = rng.sign_vec(n * k);
         let mut out = vec![0.0f32; d * n];
-        let mn = bench("naive", 0.3, 3, 1.0, || {
+        let mn = bench("naive", budget, min_iters, 1.0, || {
             gemm_naive(&a, &bt, &mut out, d, k, n);
         });
-        let mb = bench("blocked", 0.3, 3, 1.0, || {
+        let mb = bench("blocked", budget, min_iters, 1.0, || {
             gemm_blocked(&a, &bt, &mut out, d, k, n);
+        });
+        let ms = bench("simd", budget, min_iters, 1.0, || {
+            gemm_simd(&a, &bt, &mut out, d, k, n);
         });
         table.row(&[
             name.to_string(),
             format!("{:.3}", mn.mean_s() * 1e3),
             format!("{:.3}", mb.mean_s() * 1e3),
-            format!("{:.2}x", mn.mean_s() / mb.mean_s()),
+            format!("{:.3}", ms.mean_s() * 1e3),
+            format!("{:.2}x", mn.mean_s() / ms.mean_s()),
         ]);
     }
     table.print();
@@ -99,7 +166,7 @@ fn main() {
         let bias = rng.normal_vec(d);
         let mut rows = vec![0.0f32; b * d];
         let mut packed = PackedMatrix::zeros(b, d);
-        let mu = bench("unfused", 0.2, 3, 1.0, || {
+        let mu = bench("unfused", budget, min_iters, 1.0, || {
             // pass 1: transpose [D, B] i32 -> [B, D] f32 (linear())
             for di in 0..d {
                 for bi in 0..b {
@@ -118,7 +185,7 @@ fn main() {
             // pass 3: sign + pack (next layer's pack_rows)
             pack_rows_from(&rows, &mut packed);
         });
-        let mf = bench("fused", 0.2, 3, 1.0, || {
+        let mf = bench("fused", budget, min_iters, 1.0, || {
             bn_sign_pack_rows_i32(&gemm, d, b, &a, &bias, &mut packed);
         });
         table.row(&[
@@ -138,10 +205,10 @@ fn main() {
     let a = rng.sign_vec(d * k);
     let bt = rng.sign_vec(n * k);
     let mut fout = vec![0.0f32; d * n];
-    let mx = bench("xnor", 0.5, 3, 1.0, || {
-        xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Blocked);
+    let mx = bench("xnor", budget, min_iters, 1.0, || {
+        xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Simd);
     });
-    let mc = bench("naive", 0.5, 3, 1.0, || {
+    let mc = bench("naive", budget, min_iters, 1.0, || {
         gemm_naive(&a, &bt, &mut fout, d, k, n);
     });
     let macs = (d * k * n) as f64;
@@ -153,4 +220,39 @@ fn main() {
         macs / mx.mean_s() / 1e9,
         macs / mc.mean_s() / 1e9
     );
+
+    // --- JSON perf-trajectory artifact (make bench -> BENCH_2.json) ------------
+    if let Some(path) = json_path {
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"xnor-gemm ablation\",\n");
+        out.push_str(&format!("  \"simd_tier\": \"{}\",\n", simd_tier()));
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str("  \"shapes\": [\n");
+        for (si, (name, d, k, n, times)) in measured.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"layer\": \"{name}\", \"d\": {d}, \"k\": {k}, \
+                 \"n\": {n}, \"impls\": [\n"
+            ));
+            for (ii, (imp, t)) in impls.iter().zip(times).enumerate() {
+                // 1 MAC-equivalent = 1 xnor+popcount bit op; report
+                // 2*d*k*n ops (mul+add) per gemm, in GiOP/s.
+                let giops = 2.0 * (*d * *k * *n) as f64 / t / 1e9;
+                out.push_str(&format!(
+                    "      {{\"impl\": \"{}\", \"ms\": {:.6}, \
+                     \"giop_s\": {:.3}}}{}\n",
+                    imp.name(),
+                    t * 1e3,
+                    giops,
+                    if ii + 1 < impls.len() { "," } else { "" }
+                ));
+            }
+            out.push_str(&format!(
+                "    ]}}{}\n",
+                if si + 1 < measured.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out).expect("write json report");
+        eprintln!("wrote {path}");
+    }
 }

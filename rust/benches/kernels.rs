@@ -2,13 +2,13 @@
 //! (the paper's §6 discussion: measure time, don't count instructions).
 //!
 //! For every conv/fc gemm shape of the full-scale BNN, times the native
-//! xnor kernel vs the naive control vs the blocked float kernel, then
-//! the same three shapes through the AOT PJRT executables.
+//! xnor kernels (blocked and SIMD tiers) vs the naive control vs the
+//! blocked/SIMD float kernels, then (with `--features pjrt` and
+//! artifacts present) the same shapes through the AOT PJRT executables.
 
 use bitkernel::benchkit::{bench, Table};
-use bitkernel::bitops::{pack_rows, xnor_gemm, XnorImpl};
-use bitkernel::gemm::{gemm_blocked, gemm_naive};
-use bitkernel::runtime::Runtime;
+use bitkernel::bitops::{pack_rows, simd_tier, xnor_gemm, XnorImpl};
+use bitkernel::gemm::{gemm_naive, gemm_simd};
 use bitkernel::utils::Rng;
 
 /// (name, D, K, N) — gemm shapes of the full BNN at batch 1 (conv) and
@@ -23,9 +23,13 @@ const SHAPES: [(&str, usize, usize, usize); 4] = [
 fn main() {
     let mut rng = Rng::new(7);
     let mut table = Table::new(
-        "Native gemm kernels per BNN layer shape (ms, lower is better)",
-        &["layer", "xnor (ours)", "control (naive f32)",
-          "blocked f32 (optimized)", "xnor vs control"],
+        &format!(
+            "Native gemm kernels per BNN layer shape (ms; simd tier: {})",
+            simd_tier()
+        ),
+        &["layer", "xnor blocked", "xnor simd", "xnor auto",
+          "control (naive f32)", "simd f32 (optimized)",
+          "xnor-simd vs control"],
     );
     for (name, d, k, n) in SHAPES {
         let a = rng.sign_vec(d * k);
@@ -35,28 +39,43 @@ fn main() {
         let mut iout = vec![0i32; d * n];
         let mut fout = vec![0.0f32; d * n];
 
-        let mx = bench("xnor", 0.4, 3, 1.0, || {
+        let mb = bench("xnor-blocked", 0.4, 3, 1.0, || {
             xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Blocked);
+        });
+        let ms = bench("xnor-simd", 0.4, 3, 1.0, || {
+            xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Simd);
+        });
+        let ma = bench("xnor-auto", 0.4, 3, 1.0, || {
+            xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Auto);
         });
         let mc = bench("control", 0.4, 3, 1.0, || {
             gemm_naive(&a, &bt, &mut fout, d, k, n);
         });
-        let mb = bench("blocked", 0.4, 3, 1.0, || {
-            gemm_blocked(&a, &bt, &mut fout, d, k, n);
+        let mf = bench("simd-f32", 0.4, 3, 1.0, || {
+            gemm_simd(&a, &bt, &mut fout, d, k, n);
         });
         table.row(&[
             name.to_string(),
-            format!("{:.3}", mx.mean_s() * 1e3),
-            format!("{:.3}", mc.mean_s() * 1e3),
             format!("{:.3}", mb.mean_s() * 1e3),
-            format!("{:.1}x", mc.mean_s() / mx.mean_s()),
+            format!("{:.3}", ms.mean_s() * 1e3),
+            format!("{:.3}", ma.mean_s() * 1e3),
+            format!("{:.3}", mc.mean_s() * 1e3),
+            format!("{:.3}", mf.mean_s() * 1e3),
+            format!("{:.1}x", mc.mean_s() / ms.mean_s()),
         ]);
-        assert!(mx.mean_s() < mc.mean_s(),
+        assert!(ms.mean_s() < mc.mean_s(),
                 "{name}: xnor must beat naive float");
     }
     table.print();
 
-    // --- PJRT micro-kernels --------------------------------------------------
+    pjrt_section();
+}
+
+/// PJRT micro-kernel executables (needs artifacts + the pjrt feature).
+#[cfg(feature = "pjrt")]
+fn pjrt_section() {
+    use bitkernel::runtime::Runtime;
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("(skipping pjrt kernel bench: no artifacts)");
@@ -124,4 +143,9 @@ fn main() {
         ]);
     }
     table.print();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section() {
+    eprintln!("(skipping pjrt kernel bench: built without the pjrt feature)");
 }

@@ -35,7 +35,10 @@ fn main() {
     let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
     let x = ds.normalized(0, 1);
 
+    // Auto first: its stage names record the impl each xnor-gemm op
+    // resolved to (e.g. `conv2:xnor-gemm[threaded8]`).
     let arms = [
+        EngineKernel::Xnor(XnorImpl::Auto),
         EngineKernel::Xnor(XnorImpl::Blocked),
         EngineKernel::Optimized,
         EngineKernel::Control,

@@ -29,12 +29,16 @@ fn main() {
     // Reproduction shape checks (who wins, roughly by how much).
     assert!(result.native_speedup() > 1.5,
             "native: xnor must beat control clearly");
-    assert!(result.pjrt_speedup() > 1.0,
-            "pjrt: xnor must beat the pallas control");
-    let opt = result.row("PyTorch");
-    let xnor = result.row("Our");
-    assert!(opt.pjrt_s < xnor.pjrt_s,
-            "accelerator arm: the vendor-optimized kernel stays fastest \
-             (paper's GPU ordering)");
+    if result.has_pjrt() {
+        assert!(result.pjrt_speedup() > 1.0,
+                "pjrt: xnor must beat the pallas control");
+        let opt = result.row("PyTorch");
+        let xnor = result.row("Our");
+        assert!(opt.pjrt_s < xnor.pjrt_s,
+                "accelerator arm: the vendor-optimized kernel stays \
+                 fastest (paper's GPU ordering)");
+    } else {
+        eprintln!("(pjrt column skipped: built without the pjrt feature)");
+    }
     println!("table2 orderings hold ✓");
 }

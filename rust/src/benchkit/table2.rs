@@ -19,6 +19,7 @@ use anyhow::Result;
 use crate::bitops::XnorImpl;
 use crate::data::Dataset;
 use crate::model::{BnnEngine, EngineKernel};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::utils::Stopwatch;
 
@@ -77,6 +78,12 @@ impl Table2Result {
             .expect("row")
     }
 
+    /// Whether the PJRT column was actually measured (false in
+    /// non-`pjrt` builds, where it is NaN-filled).
+    pub fn has_pjrt(&self) -> bool {
+        self.rows.iter().all(|r| !r.pjrt_s.is_nan())
+    }
+
     /// Speedup of the xnor kernel over the control group.
     pub fn native_speedup(&self) -> f64 {
         self.row("Control").native_s / self.row("Our").native_s
@@ -98,20 +105,31 @@ impl Table2Result {
             t.row(&[
                 row.name.to_string(),
                 format!("{:.1}s", row.native_s),
-                format!("{:.1}s", row.pjrt_s),
+                if row.pjrt_s.is_nan() {
+                    "-".to_string()
+                } else {
+                    format!("{:.1}s", row.pjrt_s)
+                },
                 format!("{pcpu:.0}s"),
                 format!("{pgpu:.2}s"),
             ]);
         }
         let mut out = t.render();
         out.push_str(&format!(
-            "\nxnor vs control speedup:  native {:.2}x (paper: {:.2}x)   \
-             pjrt {:.2}x (paper: {:.2}x)\n",
+            "\nxnor vs control speedup:  native {:.2}x (paper: {:.2}x)",
             self.native_speedup(),
             PAPER[2].1 / PAPER[1].1,
-            self.pjrt_speedup(),
-            PAPER[2].2 / PAPER[1].2,
         ));
+        if self.has_pjrt() {
+            out.push_str(&format!(
+                "   pjrt {:.2}x (paper: {:.2}x)",
+                self.pjrt_speedup(),
+                PAPER[2].2 / PAPER[1].2,
+            ));
+        } else {
+            out.push_str("   pjrt — (not built)");
+        }
+        out.push('\n');
         out
     }
 }
@@ -152,7 +170,7 @@ pub fn run(
     let mut native = Vec::new();
     for (kernel, images) in [
         (EngineKernel::Optimized, opts.native_images),
-        (EngineKernel::Xnor(XnorImpl::Blocked), opts.native_images),
+        (EngineKernel::Xnor(XnorImpl::Auto), opts.native_images),
         (EngineKernel::Control, opts.native_control_images),
     ] {
         log(&format!("[native] timing {} over {} images...",
@@ -163,24 +181,36 @@ pub fn run(
         native.push(per_image * PAPER_TEST_IMAGES as f64);
     }
 
-    // --- PJRT arm ------------------------------------------------------------
-    let mut rt = Runtime::new(artifacts)?;
-    let mut pjrt = Vec::new();
-    for variant in ["optimized", "xnor", "control"] {
-        log(&format!("[pjrt] compiling bnn_{}_{}_b8...", opts.weights, variant));
-        let model = rt.load_by(&opts.weights, variant, 8)?;
-        let x = ds.normalized(0, 8);
-        std::hint::black_box(model.infer(&x)?); // warmup (first exec)
-        let sw = Stopwatch::start();
-        for b in 0..opts.pjrt_batches {
-            let x = ds.normalized(b * 8, (b + 1) * 8);
-            std::hint::black_box(model.infer(&x)?);
+    // --- PJRT arm (needs the `pjrt` feature; NaN-filled otherwise so
+    // the native results survive in default builds) ---------------------------
+    #[cfg(feature = "pjrt")]
+    let pjrt = {
+        let mut rt = Runtime::new(artifacts)?;
+        let mut pjrt = Vec::new();
+        for variant in ["optimized", "xnor", "control"] {
+            log(&format!("[pjrt] compiling bnn_{}_{}_b8...",
+                         opts.weights, variant));
+            let model = rt.load_by(&opts.weights, variant, 8)?;
+            let x = ds.normalized(0, 8);
+            std::hint::black_box(model.infer(&x)?); // warmup (first exec)
+            let sw = Stopwatch::start();
+            for b in 0..opts.pjrt_batches {
+                let x = ds.normalized(b * 8, (b + 1) * 8);
+                std::hint::black_box(model.infer(&x)?);
+            }
+            let per_image =
+                sw.elapsed_secs() / (8 * opts.pjrt_batches) as f64;
+            log(&format!("[pjrt] {variant}: {:.1} ms/image",
+                         per_image * 1e3));
+            pjrt.push(per_image * PAPER_TEST_IMAGES as f64);
         }
-        let per_image =
-            sw.elapsed_secs() / (8 * opts.pjrt_batches) as f64;
-        log(&format!("[pjrt] {variant}: {:.1} ms/image", per_image * 1e3));
-        pjrt.push(per_image * PAPER_TEST_IMAGES as f64);
-    }
+        pjrt
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let pjrt = {
+        log("[pjrt] skipped: built without the `pjrt` feature");
+        vec![f64::NAN; native.len()]
+    };
 
     Ok(Table2Result {
         rows: vec![

@@ -5,12 +5,18 @@
 //!   (bit 1 <=> value +1, little-endian within each u32 word, identical
 //!   to the python ref/pallas convention — pinned by golden tests),
 //! * [`xnor`] — `a[i,j] = 2*popcount(~(w ^ x)) - 32` accumulated over the
-//!   packed reduction, in four implementations (scalar u32, u64 words,
-//!   register-blocked, multi-threaded) benchmarked against each other in
-//!   `benches/ablation.rs`.
+//!   packed reduction, as an implementation ladder (scalar u32, u64
+//!   words, register-blocked, SIMD/wide, 2-D tiled multi-threaded, and
+//!   a shape-aware `Auto`) benchmarked against each other in
+//!   `benches/ablation.rs`,
+//! * [`simd`] — the vectorized tiers behind the ladder: AVX2
+//!   xnor+popcount tiles and movemask sign packing, with a portable
+//!   `[u64; 4]`-wide fallback.
 
 pub mod pack;
+pub mod simd;
 pub mod xnor;
 
 pub use pack::{pack_rows, pack_rows_from, pack_slice};
-pub use xnor::{xnor_gemm, XnorImpl};
+pub use simd::{avx2_available, simd_tier};
+pub use xnor::{xnor_gemm, xnor_gemm_pooled, XnorImpl};

@@ -10,11 +10,18 @@
 
 use crate::tensor::PackedMatrix;
 
+use super::simd;
+
 /// Streaming bit packer for one packed row: accumulates each 32-bit
 /// word in a register and stores it once (a read-modify-write per bit
 /// costs ~4x; §Perf optimization 2).  Callers push exactly `k` bits in
 /// logical order, then `finish()`; every word of the row (including the
 /// zero tail-padding bits of the last partial word) gets written.
+///
+/// Contiguous sign runs should go through [`BitWriter::push_signs`] /
+/// [`BitWriter::push_signs_bn`]: once the run reaches a word boundary
+/// they emit whole words via the SIMD pack (`bitops::simd`,
+/// movemask-based on AVX2) instead of per-element shifts.
 ///
 /// This is THE activation-side encoding loop — `nn::im2col` (fused
 /// im2col+pack) and `nn::fuse` (bn_sign_pack epilogues) both build rows
@@ -44,6 +51,52 @@ impl<'a> BitWriter<'a> {
         }
     }
 
+    /// Push one sign bit per element of `vals` (bit 1 <=> `v >= 0.0`),
+    /// vectorizing the word-aligned middle of the run.
+    #[inline]
+    pub(crate) fn push_signs(&mut self, vals: &[f32]) {
+        let mut rest = vals;
+        // Head: finish the current partial word bit by bit.
+        while self.bits != 0 && !rest.is_empty() {
+            self.push(u32::from(rest[0] >= 0.0));
+            rest = &rest[1..];
+        }
+        // Aligned middle: whole words through the SIMD pack.
+        let words = rest.len() / 32;
+        if words > 0 {
+            simd::pack_words(&rest[..words * 32],
+                             &mut self.row[self.widx..self.widx + words]);
+            self.widx += words;
+            rest = &rest[words * 32..];
+        }
+        // Tail.
+        for &v in rest {
+            self.push(u32::from(v >= 0.0));
+        }
+    }
+
+    /// [`BitWriter::push_signs`] with a folded affine: bit 1 <=>
+    /// `a*v + b >= 0.0` (bit-identical to pushing the materialized
+    /// affine: same mul-then-add per element).
+    #[inline]
+    pub(crate) fn push_signs_bn(&mut self, vals: &[f32], a: f32, b: f32) {
+        let mut rest = vals;
+        while self.bits != 0 && !rest.is_empty() {
+            self.push(u32::from(a * rest[0] + b >= 0.0));
+            rest = &rest[1..];
+        }
+        let words = rest.len() / 32;
+        if words > 0 {
+            simd::pack_words_bn(&rest[..words * 32], a, b,
+                                &mut self.row[self.widx..self.widx + words]);
+            self.widx += words;
+            rest = &rest[words * 32..];
+        }
+        for &v in rest {
+            self.push(u32::from(a * v + b >= 0.0));
+        }
+    }
+
     #[inline]
     pub(crate) fn finish(self) {
         if self.bits > 0 {
@@ -53,21 +106,16 @@ impl<'a> BitWriter<'a> {
 }
 
 /// Pack one logical row (`row.len() == k`) into `out` (`ceil(k/32)` words).
+///
+/// Full words go through the SIMD pack (movemask-based on AVX2 — no
+/// per-element branches or shifts); only the ragged tail word is built
+/// bit by bit.  The compare is `v >= 0.0` (incl. `-0.0` per IEEE).
 #[inline]
 pub fn pack_slice(row: &[f32], out: &mut [u32]) {
     debug_assert_eq!(out.len(), row.len().div_ceil(32));
-    out.fill(0);
-    // Full 32-element words: branch-free shift-accumulate.
     let full = row.len() / 32;
-    for (w, chunk) in row.chunks_exact(32).enumerate().take(full) {
-        let mut word = 0u32;
-        for (i, &v) in chunk.iter().enumerate() {
-            // f32 sign-bit trick: v >= 0.0 (incl. -0.0 per IEEE compare)
-            word |= u32::from(v >= 0.0) << i;
-        }
-        out[w] = word;
-    }
-    // Tail.
+    simd::pack_words(&row[..full * 32], &mut out[..full]);
+    // Tail (the word's padding bits stay zero).
     let tail_start = full * 32;
     if tail_start < row.len() {
         let mut word = 0u32;
@@ -156,6 +204,56 @@ mod tests {
         assert_eq!(p.data, vec![u32::MAX, 0xFF, u32::MAX, 0xFF]);
         pack_rows_from(&vec![-1.0; 80], &mut p);
         assert_eq!(p.data, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn push_signs_matches_per_bit_pushes() {
+        use crate::utils::Rng;
+        let mut rng = Rng::new(77);
+        for (head, run, tail) in [(0usize, 64usize, 0usize), (3, 70, 2),
+                                  (31, 33, 1), (1, 100, 0), (5, 7, 0),
+                                  (0, 31, 0), (32, 32, 32)] {
+            let total = head + run + tail;
+            let vals = rng.normal_vec(total);
+            let (a, b) = (-0.75f32, 0.125f32);
+            let kw = total.div_ceil(32);
+
+            let mut want = vec![0u32; kw];
+            let mut bw = BitWriter::new(&mut want);
+            for &v in &vals {
+                bw.push(u32::from(v >= 0.0));
+            }
+            bw.finish();
+            let mut got = vec![0u32; kw];
+            let mut bw = BitWriter::new(&mut got);
+            for &v in &vals[..head] {
+                bw.push(u32::from(v >= 0.0));
+            }
+            bw.push_signs(&vals[head..head + run]);
+            for &v in &vals[head + run..] {
+                bw.push(u32::from(v >= 0.0));
+            }
+            bw.finish();
+            assert_eq!(got, want, "plain h{head} r{run} t{tail}");
+
+            let mut want = vec![0u32; kw];
+            let mut bw = BitWriter::new(&mut want);
+            for &v in &vals {
+                bw.push(u32::from(a * v + b >= 0.0));
+            }
+            bw.finish();
+            let mut got = vec![0u32; kw];
+            let mut bw = BitWriter::new(&mut got);
+            for &v in &vals[..head] {
+                bw.push(u32::from(a * v + b >= 0.0));
+            }
+            bw.push_signs_bn(&vals[head..head + run], a, b);
+            for &v in &vals[head + run..] {
+                bw.push(u32::from(a * v + b >= 0.0));
+            }
+            bw.finish();
+            assert_eq!(got, want, "bn h{head} r{run} t{tail}");
+        }
     }
 
     /// Golden vector shared with python (tests/test_cross_language.py

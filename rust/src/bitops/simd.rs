@@ -1,0 +1,487 @@
+//! SIMD xnor-popcount kernels + vectorized sign packing.
+//!
+//! The paper's throughput claim lives or dies in this inner loop, so it
+//! exists at three width tiers with a fixed runtime fallback chain:
+//!
+//! 1. **AVX2** (`x86_64`, detected via `is_x86_feature_detected!`):
+//!    xnor over 256-bit lanes, popcount via the nibble-LUT
+//!    `_mm256_shuffle_epi8` trick reduced with `_mm256_sad_epu8`
+//!    (the Harley–Seal byte-count family — 8 packed words per step),
+//!    and sign packing via `_mm256_cmp_ps(GE_OQ)` + `movemask`.
+//! 2. **Portable wide** (any arch): `[u64; 4]`-at-a-time xnor+popcount
+//!    with independent accumulators, compiling to hardware `popcnt` /
+//!    `cnt` wherever the target has it.
+//! 3. The scalar u32/u64 kernels in [`super::xnor`] remain as the
+//!    bit-exactness oracles.
+//!
+//! Every tier computes the identical integer result (popcounts are
+//! order-free), and the packing tiers perform the identical f32
+//! compare (`v >= 0.0`, or `a*v + b >= 0.0` for the folded-BN path) —
+//! `-0.0` and `NaN` behave exactly like the scalar loop, pinned by the
+//! differential tests below and in `tests/prop_bitops.rs`.
+//!
+//! The gemm entry point here is the *tile* kernel: it fills
+//! `out[i*n + j]` for a rectangular `[i_lo, i_hi) x [j_lo, j_hi)`
+//! sub-block through a raw pointer, so the 2-D tiled multi-threaded
+//! driver in [`super::xnor`] can hand disjoint tiles of one output
+//! buffer to different workers without aliasing `&mut` slices.
+
+use crate::tensor::PackedMatrix;
+
+use super::xnor::finish;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Does this CPU have the AVX2 tier?  (Cached by std's feature
+/// detection; cheap enough to call per gemm.)
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Human label for the widest available tier (bench/profile reports).
+pub fn simd_tier() -> &'static str {
+    if avx2_available() {
+        "avx2"
+    } else {
+        "wide64x4"
+    }
+}
+
+/// Two adjacent packed u32 words as one u64 (little-endian word order,
+/// matching the bit convention: word w holds logical bits w*32..).
+#[inline(always)]
+fn u64_at(s: &[u32], i: usize) -> u64 {
+    (s[i] as u64) | ((s[i + 1] as u64) << 32)
+}
+
+/// Popcount of the xnor of two packed rows, `[u64; 4]` per step with
+/// independent accumulators (the portable wide tier).
+#[inline]
+pub(crate) fn popc_xnor_wide(a: &[u32], b: &[u32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() & !7;
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    let mut i = 0;
+    while i < n8 {
+        c0 += (!(u64_at(a, i) ^ u64_at(b, i))).count_ones();
+        c1 += (!(u64_at(a, i + 2) ^ u64_at(b, i + 2))).count_ones();
+        c2 += (!(u64_at(a, i + 4) ^ u64_at(b, i + 4))).count_ones();
+        c3 += (!(u64_at(a, i + 6) ^ u64_at(b, i + 6))).count_ones();
+        i += 8;
+    }
+    let mut acc = (c0 + c1) + (c2 + c3);
+    while i + 2 <= a.len() {
+        acc += (!(u64_at(a, i) ^ u64_at(b, i))).count_ones();
+        i += 2;
+    }
+    if i < a.len() {
+        acc += (!(a[i] ^ b[i])).count_ones();
+    }
+    acc
+}
+
+/// Portable wide gemm tile: `out[i*n + j] = <w_i, x_j>` for the block
+/// `[i_lo, i_hi) x [j_lo, j_hi)`.  1x4 column blocking over the
+/// `[u64; 4]` reduction, so each loaded w quad is reused 4 times.
+///
+/// # Safety
+/// `out` must be valid for writes at every `i*n + j` in the block, and
+/// concurrent callers must use disjoint blocks.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_tile_wide(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    let kw8 = kw & !7;
+    for i in i_lo..i_hi {
+        let wrow = w.row(i);
+        let mut j = j_lo;
+        while j + 4 <= j_hi {
+            let rows =
+                [x.row(j), x.row(j + 1), x.row(j + 2), x.row(j + 3)];
+            let mut acc = [0u32; 4];
+            let mut wi = 0;
+            while wi < kw8 {
+                let w0 = u64_at(wrow, wi);
+                let w1 = u64_at(wrow, wi + 2);
+                let w2 = u64_at(wrow, wi + 4);
+                let w3 = u64_at(wrow, wi + 6);
+                for (c, xr) in rows.iter().enumerate() {
+                    acc[c] += (!(w0 ^ u64_at(xr, wi))).count_ones()
+                        + (!(w1 ^ u64_at(xr, wi + 2))).count_ones()
+                        + (!(w2 ^ u64_at(xr, wi + 4))).count_ones()
+                        + (!(w3 ^ u64_at(xr, wi + 6))).count_ones();
+                }
+                wi += 8;
+            }
+            while wi < kw {
+                let ww = wrow[wi];
+                for (c, xr) in rows.iter().enumerate() {
+                    acc[c] += (!(ww ^ xr[wi])).count_ones();
+                }
+                wi += 1;
+            }
+            for (c, &a) in acc.iter().enumerate() {
+                *out.add(i * n + j + c) = finish(a, kw, pad);
+            }
+            j += 4;
+        }
+        while j < j_hi {
+            *out.add(i * n + j) =
+                finish(popc_xnor_wide(wrow, x.row(j)), kw, pad);
+            j += 1;
+        }
+    }
+}
+
+/// Per-64-bit-lane popcount of a 256-bit vector: nibble LUT via
+/// `shuffle_epi8`, bytes reduced with `sad_epu8` (each u64 lane holds
+/// the popcount of its 8 bytes).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn popcount256(v: __m256i) -> __m256i {
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+    let cnt = _mm256_add_epi8(
+        _mm256_shuffle_epi8(lut, lo),
+        _mm256_shuffle_epi8(lut, hi),
+    );
+    _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+}
+
+/// Sum of the four u64 lanes of an accumulator vector.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn hsum_epi64(v: __m256i) -> u64 {
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+/// AVX2 gemm tile (same contract as [`gemm_tile_wide`]): 8 packed words
+/// per 256-bit step, 1x4 column blocking, vectorized popcount.
+///
+/// # Safety
+/// Caller must have verified `avx2_available()`; `out` aliasing rules as
+/// in [`gemm_tile_wide`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_tile_avx2(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    let kw8 = kw & !7;
+    let ones = _mm256_set1_epi64x(-1);
+    for i in i_lo..i_hi {
+        let wrow = w.row(i);
+        let mut j = j_lo;
+        while j + 4 <= j_hi {
+            let rows =
+                [x.row(j), x.row(j + 1), x.row(j + 2), x.row(j + 3)];
+            let mut vacc = [_mm256_setzero_si256(); 4];
+            let mut wi = 0;
+            while wi < kw8 {
+                let wv = _mm256_loadu_si256(
+                    wrow.as_ptr().add(wi) as *const __m256i
+                );
+                for (c, xr) in rows.iter().enumerate() {
+                    let xv = _mm256_loadu_si256(
+                        xr.as_ptr().add(wi) as *const __m256i
+                    );
+                    // xnor = NOT (w XOR x) = (w XOR x) XOR ones
+                    let xn = _mm256_xor_si256(_mm256_xor_si256(wv, xv),
+                                              ones);
+                    vacc[c] = _mm256_add_epi64(vacc[c], popcount256(xn));
+                }
+                wi += 8;
+            }
+            let mut acc = [
+                hsum_epi64(vacc[0]) as u32,
+                hsum_epi64(vacc[1]) as u32,
+                hsum_epi64(vacc[2]) as u32,
+                hsum_epi64(vacc[3]) as u32,
+            ];
+            while wi < kw {
+                let ww = wrow[wi];
+                for (c, xr) in rows.iter().enumerate() {
+                    acc[c] += (!(ww ^ xr[wi])).count_ones();
+                }
+                wi += 1;
+            }
+            for (c, &a) in acc.iter().enumerate() {
+                *out.add(i * n + j + c) = finish(a, kw, pad);
+            }
+            j += 4;
+        }
+        while j < j_hi {
+            let xr = x.row(j);
+            let mut vacc = _mm256_setzero_si256();
+            let mut wi = 0;
+            while wi < kw8 {
+                let wv = _mm256_loadu_si256(
+                    wrow.as_ptr().add(wi) as *const __m256i
+                );
+                let xv = _mm256_loadu_si256(
+                    xr.as_ptr().add(wi) as *const __m256i
+                );
+                let xn =
+                    _mm256_xor_si256(_mm256_xor_si256(wv, xv), ones);
+                vacc = _mm256_add_epi64(vacc, popcount256(xn));
+                wi += 8;
+            }
+            let mut acc = hsum_epi64(vacc) as u32;
+            while wi < kw {
+                acc += (!(wrow[wi] ^ xr[wi])).count_ones();
+                wi += 1;
+            }
+            *out.add(i * n + j) = finish(acc, kw, pad);
+            j += 1;
+        }
+    }
+}
+
+/// Widest-available gemm tile: AVX2 when the CPU has it, else the
+/// portable wide tier.  Same contract/safety as [`gemm_tile_wide`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_tile_best(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return gemm_tile_avx2(w, x, out, n, i_lo, i_hi, j_lo, j_hi);
+        }
+    }
+    gemm_tile_wide(w, x, out, n, i_lo, i_hi, j_lo, j_hi)
+}
+
+// ---------------------------------------------------------------------------
+// Sign packing: f32 runs -> packed sign words
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn pack_words_scalar(vals: &[f32], out: &mut [u32]) {
+    for (word, chunk) in out.iter_mut().zip(vals.chunks_exact(32)) {
+        let mut acc = 0u32;
+        for (i, &v) in chunk.iter().enumerate() {
+            acc |= u32::from(v >= 0.0) << i;
+        }
+        *word = acc;
+    }
+}
+
+#[inline]
+fn pack_words_bn_scalar(vals: &[f32], a: f32, b: f32, out: &mut [u32]) {
+    for (word, chunk) in out.iter_mut().zip(vals.chunks_exact(32)) {
+        let mut acc = 0u32;
+        for (i, &v) in chunk.iter().enumerate() {
+            acc |= u32::from(a * v + b >= 0.0) << i;
+        }
+        *word = acc;
+    }
+}
+
+/// One packed word from 32 floats: four 8-lane `v >= 0` compares +
+/// movemask.  `GE_OQ` matches the scalar `>=` exactly (`-0.0` -> true,
+/// `NaN` -> false).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn pack_words_avx2(vals: &[f32], out: &mut [u32]) {
+    let zero = _mm256_setzero_ps();
+    for (wi, word) in out.iter_mut().enumerate() {
+        let base = vals.as_ptr().add(wi * 32);
+        let mut acc = 0u32;
+        for g in 0..4 {
+            let v = _mm256_loadu_ps(base.add(g * 8));
+            let m = _mm256_cmp_ps::<_CMP_GE_OQ>(v, zero);
+            acc |= ((_mm256_movemask_ps(m) as u32) & 0xff) << (g * 8);
+        }
+        *word = acc;
+    }
+}
+
+/// BN-folded variant: packs `a*v + b >= 0`.  Mul-then-add (no FMA), so
+/// the rounding is bit-identical to the scalar expression.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn pack_words_bn_avx2(vals: &[f32], a: f32, b: f32,
+                             out: &mut [u32]) {
+    let zero = _mm256_setzero_ps();
+    let av = _mm256_set1_ps(a);
+    let bv = _mm256_set1_ps(b);
+    for (wi, word) in out.iter_mut().enumerate() {
+        let base = vals.as_ptr().add(wi * 32);
+        let mut acc = 0u32;
+        for g in 0..4 {
+            let v = _mm256_loadu_ps(base.add(g * 8));
+            let t = _mm256_add_ps(_mm256_mul_ps(av, v), bv);
+            let m = _mm256_cmp_ps::<_CMP_GE_OQ>(t, zero);
+            acc |= ((_mm256_movemask_ps(m) as u32) & 0xff) << (g * 8);
+        }
+        *word = acc;
+    }
+}
+
+/// Pack full words of sign bits: `vals.len() == out.len() * 32`
+/// (callers handle ragged tails).  Bit 1 <=> `v >= 0.0`.
+#[inline]
+pub(crate) fn pack_words(vals: &[f32], out: &mut [u32]) {
+    debug_assert_eq!(vals.len(), out.len() * 32);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            unsafe { pack_words_avx2(vals, out) };
+            return;
+        }
+    }
+    pack_words_scalar(vals, out);
+}
+
+/// [`pack_words`] with the previous layer's per-channel BN affine folded
+/// into the sign: bit 1 <=> `a*v + b >= 0.0`.
+#[inline]
+pub(crate) fn pack_words_bn(vals: &[f32], a: f32, b: f32,
+                            out: &mut [u32]) {
+    debug_assert_eq!(vals.len(), out.len() * 32);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            unsafe { pack_words_bn_avx2(vals, a, b, out) };
+            return;
+        }
+    }
+    pack_words_bn_scalar(vals, a, b, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::pack_rows;
+    use crate::utils::Rng;
+
+    fn popc_xnor_u32_ref(a: &[u32], b: &[u32]) -> u32 {
+        a.iter().zip(b).map(|(&x, &y)| (!(x ^ y)).count_ones()).sum()
+    }
+
+    #[test]
+    fn wide_popcount_matches_u32_reference() {
+        let mut rng = Rng::new(91);
+        for words in [1usize, 2, 7, 8, 9, 15, 16, 33] {
+            let a: Vec<u32> = (0..words).map(|_| rng.next_u32()).collect();
+            let b: Vec<u32> = (0..words).map(|_| rng.next_u32()).collect();
+            assert_eq!(popc_xnor_wide(&a, &b), popc_xnor_u32_ref(&a, &b),
+                       "words={words}");
+        }
+    }
+
+    fn tile_vs_scalar(d: usize, k: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let w = pack_rows(&rng.sign_vec(d * k), d, k);
+        let x = pack_rows(&rng.sign_vec(n * k), n, k);
+        let mut want = vec![0i32; d * n];
+        crate::bitops::xnor_gemm(&w, &x, &mut want,
+                                 crate::bitops::XnorImpl::Scalar);
+
+        // full-range tile, both tiers
+        let mut wide = vec![0i32; d * n];
+        unsafe { gemm_tile_wide(&w, &x, wide.as_mut_ptr(), n, 0, d, 0, n) };
+        assert_eq!(wide, want, "wide d={d} k={k} n={n}");
+        let mut best = vec![0i32; d * n];
+        unsafe { gemm_tile_best(&w, &x, best.as_mut_ptr(), n, 0, d, 0, n) };
+        assert_eq!(best, want, "best d={d} k={k} n={n}");
+
+        // a strict sub-tile only touches its own cells
+        if d >= 2 && n >= 3 {
+            let mut part = vec![i32::MIN; d * n];
+            unsafe {
+                gemm_tile_best(&w, &x, part.as_mut_ptr(), n, 1, d, 1,
+                               n - 1)
+            };
+            for i in 0..d {
+                for j in 0..n {
+                    let inside = i >= 1 && (1..n - 1).contains(&j);
+                    if inside {
+                        assert_eq!(part[i * n + j], want[i * n + j],
+                                   "({i},{j})");
+                    } else {
+                        assert_eq!(part[i * n + j], i32::MIN,
+                                   "({i},{j}) written outside tile");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_match_scalar_over_ragged_shapes() {
+        for (d, k, n) in [(1, 1, 1), (3, 31, 5), (4, 32, 4), (5, 33, 7),
+                          (2, 255, 3), (3, 257, 9), (8, 256, 8),
+                          (7, 289, 6)] {
+            tile_vs_scalar(d, k, n, (d * 7919 + k * 31 + n) as u64);
+        }
+    }
+
+    #[test]
+    fn pack_words_matches_scalar_compare() {
+        let mut rng = Rng::new(92);
+        for words in [1usize, 2, 3, 8] {
+            let mut vals = rng.normal_vec(words * 32);
+            // poison with the compare edge cases
+            vals[0] = 0.0;
+            vals[1] = -0.0;
+            vals[2] = f32::NAN;
+            let mut got = vec![0u32; words];
+            pack_words(&vals, &mut got);
+            let mut want = vec![0u32; words];
+            pack_words_scalar(&vals, &mut want);
+            assert_eq!(got, want);
+            // and bit 0/1 semantics: 0.0 -> 1, -0.0 -> 1, NaN -> 0
+            assert_eq!(got[0] & 0b111, 0b011);
+
+            let (a, b) = (-1.25f32, 0.375f32);
+            let mut got_bn = vec![0u32; words];
+            pack_words_bn(&vals, a, b, &mut got_bn);
+            let mut want_bn = vec![0u32; words];
+            pack_words_bn_scalar(&vals, a, b, &mut want_bn);
+            assert_eq!(got_bn, want_bn);
+        }
+    }
+}

@@ -1,8 +1,8 @@
-//! The xnor-bitcount gemm (paper Sec. 3.2), four implementations.
+//! The xnor-bitcount gemm (paper Sec. 3.2), from scalar oracle to SIMD.
 //!
-//! All compute, for packed operands `w` ([D, k] logical) and `x`
-//! ([N, k] logical — the im2col matrix transposed so its reduction is
-//! contiguous):
+//! All implementations compute, for packed operands `w` ([D, k] logical)
+//! and `x` ([N, k] logical — the im2col matrix transposed so its
+//! reduction is contiguous):
 //!
 //! ```text
 //!     out[i, j] = sum_over_words( 2 * popcount(~(w[i,w] ^ x[j,w])) - 32 )
@@ -11,16 +11,32 @@
 //!
 //! which equals the float dot product of the underlying {-1,+1} rows
 //! exactly.  `popcount` compiles to the hardware `popcnt` instruction
-//! (the paper uses libpopcnt / CUDA `__popc`).
+//! (the paper uses libpopcnt / CUDA `__popc`); the SIMD tier vectorizes
+//! it over 256-bit lanes (see [`super::simd`]).
 //!
-//! Implementations (ablated in benches/ablation.rs):
-//! * `Scalar`   — word-at-a-time u32, the paper's reference C loop
-//! * `Word64`   — pairs u32 words into u64 (half the popcnt ops)
-//! * `Blocked`  — Word64 + 4-column register blocking (reuses the loaded
-//!   w-word across 4 x-rows, cutting w-side loads 4x)
-//! * `Threaded` — Blocked split over output rows via scoped threads
+//! Implementations (ablated in benches/ablation.rs; every one
+//! bit-identical to `Scalar`):
+//! * `Scalar`     — word-at-a-time u32, the paper's reference C loop
+//! * `Word64`     — pairs u32 words into u64 (half the popcnt ops)
+//! * `Blocked`    — Word64 + 4-column register blocking
+//! * `Blocked2x4` — 2 w-rows x 4 x-rows register blocking
+//! * `Wide`       — portable `[u64; 4]`-wide kernel with 4-column
+//!   blocking (SIMD fallback tier)
+//! * `Simd`       — widest tier the CPU supports (AVX2, else `Wide`)
+//! * `Threaded`   — `Simd` tiles split 2-D (rows x columns) across
+//!   threads, so small-D layers still scale
+//! * `Auto`       — resolved per shape (heuristic table, or one-shot
+//!   microbench via [`XnorImpl::calibrate`]) — the plan-time default
+//!
+//! Threading runs either on scoped threads (the free-function path) or
+//! on a persistent [`ThreadPool`] via [`xnor_gemm_pooled`] — the
+//! plan/session serving path owns such a pool so steady-state inference
+//! never spawns.
 
 use crate::tensor::PackedMatrix;
+use crate::utils::threadpool::{scope_chunks, ThreadPool};
+
+use super::simd;
 
 /// Which xnor-gemm implementation to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,13 +46,45 @@ pub enum XnorImpl {
     Blocked,
     /// 2 w-rows x 4 x-rows register blocking.
     Blocked2x4,
-    /// Blocked, split across `n` threads.
+    /// Portable `[u64; 4]`-wide kernel (always available).
+    Wide,
+    /// Widest SIMD tier detected at runtime (AVX2 -> `Wide` fallback).
+    Simd,
+    /// Shape-aware choice, resolved at dispatch/plan time.
+    Auto,
+    /// Simd tiles split across `n` threads (2-D row x column grid).
     Threaded(usize),
 }
 
+/// Work (in packed words, `D * N * kw`) below which threading is not
+/// worth a wakeup: at the wide kernel's throughput this is a few µs,
+/// comparable to waking the pool.
+const THREAD_WORDS: usize = 1 << 17;
+
+/// Auto never picks more threads than this (diminishing returns on the
+/// shared-memory reduction; the serving layer owns cross-request
+/// parallelism).
+const MAX_AUTO_THREADS: usize = 16;
+
+/// Host parallelism, clamped for `Auto` resolution.
+fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_AUTO_THREADS)
+}
+
 impl XnorImpl {
-    pub const ALL_SINGLE: [XnorImpl; 3] =
-        [XnorImpl::Scalar, XnorImpl::Word64, XnorImpl::Blocked];
+    /// Every single-threaded implementation (differential-fuzz and
+    /// ablation coverage; `Auto`/`Threaded` are derived from these).
+    pub const ALL_SINGLE: [XnorImpl; 6] = [
+        XnorImpl::Scalar,
+        XnorImpl::Word64,
+        XnorImpl::Blocked,
+        XnorImpl::Blocked2x4,
+        XnorImpl::Wide,
+        XnorImpl::Simd,
+    ];
 
     /// Implementation label.  Borrowed (allocation-free) for every
     /// variant except `Threaded`, whose thread count is dynamic —
@@ -47,8 +95,80 @@ impl XnorImpl {
             XnorImpl::Word64 => "word64".into(),
             XnorImpl::Blocked => "blocked".into(),
             XnorImpl::Blocked2x4 => "blocked2x4".into(),
+            XnorImpl::Wide => "wide64".into(),
+            XnorImpl::Simd => "simd".into(),
+            XnorImpl::Auto => "auto".into(),
             XnorImpl::Threaded(n) => format!("threaded{n}").into(),
         }
+    }
+
+    /// Resolve `Auto` into a concrete impl for a `[D, k] x [N, k]` gemm
+    /// (identity on everything else).  The heuristic table:
+    /// single-thread `Simd` for small problems, 2-D tiled `Threaded`
+    /// once the popcount work amortizes a pool wakeup.  Plan
+    /// compilation calls this once per op; `xnor_gemm` also applies it
+    /// so `Auto` is always a valid argument.
+    pub fn resolve(self, d: usize, k: usize, n: usize) -> XnorImpl {
+        match self {
+            XnorImpl::Auto => {
+                let kw = k.div_ceil(32);
+                let work = d * n * kw;
+                let t = auto_threads();
+                if t > 1 && work >= THREAD_WORDS {
+                    XnorImpl::Threaded(t)
+                } else {
+                    XnorImpl::Simd
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// One-shot microbench calibration: time each candidate on a
+    /// synthetic `[d, k] x [n, k]` problem (one warmup + two reps, min
+    /// taken) and return the fastest.  Costs a few ms per shape — the
+    /// opt-in alternative to the [`XnorImpl::resolve`] heuristic for
+    /// plan compilation (`BITKERNEL_CALIBRATE=1`) and the bench reports.
+    ///
+    /// `Threaded` is timed through a warm [`ThreadPool`] — the
+    /// execution mode the plan would actually use — not through
+    /// per-call scoped spawns, so the comparison is not biased against
+    /// threading by spawn overhead the serving path never pays.
+    pub fn calibrate(d: usize, k: usize, n: usize) -> XnorImpl {
+        use crate::utils::{Rng, Stopwatch};
+        let mut rng = Rng::new(0xB17C0DE);
+        let w = super::pack::pack_rows(&rng.sign_vec(d * k), d, k);
+        let x = super::pack::pack_rows(&rng.sign_vec(n * k), n, k);
+        let mut out = vec![0i32; d * n];
+        let mut candidates = vec![
+            XnorImpl::Blocked,
+            XnorImpl::Blocked2x4,
+            XnorImpl::Wide,
+            XnorImpl::Simd,
+        ];
+        let t = auto_threads();
+        let pool = (t > 1).then(|| ThreadPool::new(t));
+        if pool.is_some() {
+            candidates.push(XnorImpl::Threaded(t));
+        }
+        let mut best = (f64::INFINITY, XnorImpl::Simd);
+        for imp in candidates {
+            let mut run = |out: &mut [i32]| match &pool {
+                Some(p) => xnor_gemm_pooled(&w, &x, out, imp, p),
+                None => xnor_gemm(&w, &x, out, imp),
+            };
+            run(&mut out); // warmup
+            let mut t_min = f64::INFINITY;
+            for _ in 0..2 {
+                let sw = Stopwatch::start();
+                run(&mut out);
+                t_min = t_min.min(sw.elapsed_secs());
+            }
+            if t_min < best.0 {
+                best = (t_min, imp);
+            }
+        }
+        best.1
     }
 }
 
@@ -80,8 +200,10 @@ fn popc_xnor_u64(a: &[u32], b: &[u32]) -> u32 {
     acc
 }
 
+/// `2*popc - 32*kw - pad`: the packed-word identity, shared by every
+/// implementation tier (including `super::simd`).
 #[inline]
-fn finish(popc: u32, kw: usize, pad: i32) -> i32 {
+pub(crate) fn finish(popc: u32, kw: usize, pad: i32) -> i32 {
     2 * popc as i32 - 32 * kw as i32 - pad
 }
 
@@ -240,43 +362,99 @@ fn gemm_blocked2x4(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
     }
 }
 
-fn gemm_threaded(
+fn gemm_wide(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    // SAFETY: out covers the full [rows, n] block, single caller.
+    unsafe {
+        simd::gemm_tile_wide(w, x, out.as_mut_ptr(), x.rows, 0, w.rows,
+                             0, x.rows);
+    }
+}
+
+fn gemm_simd(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    // SAFETY: out covers the full [rows, n] block, single caller.
+    unsafe {
+        simd::gemm_tile_best(w, x, out.as_mut_ptr(), x.rows, 0, w.rows,
+                             0, x.rows);
+    }
+}
+
+/// Raw output pointer shared across worker tiles.  Sound because the
+/// tile grid below assigns every `out[i*n + j]` cell to exactly one
+/// tile, and the drivers join all workers before returning.
+struct OutPtr(*mut i32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// 2-D tile grid for a `[rows, n]` output split across `threads`
+/// workers: rows split first, then columns until there are at least two
+/// tiles per worker (load balance for small-D layers), with column
+/// tiles kept >= 4 wide for the kernels' 4-column blocking.
+fn tile_grid(rows: usize, n: usize, threads: usize) -> (usize, usize) {
+    let row_tiles = rows.min(threads).max(1);
+    // row_tiles <= threads < 2*threads, so columns always split at
+    // least 2-ways (when n allows) to reach ~2 tiles per worker.
+    let col_tiles = (2 * threads)
+        .div_ceil(row_tiles)
+        .min(n.div_ceil(4))
+        .max(1);
+    (row_tiles, col_tiles)
+}
+
+/// Threaded driver: `Simd` tiles over a 2-D row x column grid, run
+/// either on scoped threads (`pool: None`) or on a persistent pool.
+fn gemm_tiled(
     w: &PackedMatrix,
     x: &PackedMatrix,
     out: &mut [i32],
     threads: usize,
+    pool: Option<&ThreadPool>,
 ) {
-    let n = x.rows;
-    // Split the output rows into disjoint &mut chunks first, then hand
-    // one contiguous row-range to each scoped thread.
     let rows = w.rows;
-    let t = threads.max(1).min(rows.max(1));
-    let chunk_rows = rows.div_ceil(t);
-    let mut slices: Vec<&mut [i32]> = Vec::with_capacity(t);
-    let mut rest = out;
-    for ti in 0..t {
-        let lo = ti * chunk_rows;
-        let hi = ((ti + 1) * chunk_rows).min(rows);
-        if lo >= hi {
-            break;
-        }
-        let (head, tail) = rest.split_at_mut((hi - lo) * n);
-        slices.push(head);
-        rest = tail;
+    let n = x.rows;
+    if rows == 0 || n == 0 {
+        return;
     }
-    std::thread::scope(|s| {
-        for (ti, slice) in slices.into_iter().enumerate() {
-            let lo = ti * chunk_rows;
-            let hi = ((ti + 1) * chunk_rows).min(rows);
-            s.spawn(move || gemm_blocked_rows(w, x, slice, lo, hi));
+    let t = threads.max(1).min(rows * n);
+    if t == 1 {
+        gemm_simd(w, x, out);
+        return;
+    }
+    let (row_tiles, col_tiles) = tile_grid(rows, n, t);
+    let tr = rows.div_ceil(row_tiles);
+    let tc = n.div_ceil(col_tiles);
+    let tiles = row_tiles * col_tiles;
+    let optr = OutPtr(out.as_mut_ptr());
+    let run = |lo: usize, hi: usize| {
+        for tile in lo..hi {
+            let (ri, ci) = (tile / col_tiles, tile % col_tiles);
+            let i_lo = ri * tr;
+            let i_hi = ((ri + 1) * tr).min(rows);
+            let j_lo = ci * tc;
+            let j_hi = ((ci + 1) * tc).min(n);
+            if i_lo >= i_hi || j_lo >= j_hi {
+                continue;
+            }
+            // SAFETY: tiles are disjoint rectangles of the [rows, n]
+            // output; the driver below joins before `out` is released.
+            unsafe {
+                simd::gemm_tile_best(w, x, optr.0, n, i_lo, i_hi, j_lo,
+                                     j_hi);
+            }
         }
-    });
+    };
+    match pool {
+        Some(p) => p.run_chunks(tiles, &run),
+        None => scope_chunks(tiles, t, run),
+    }
 }
 
 /// Packed gemm dispatch: `out[i * x.rows + j] = <w_i, x_j>` exactly.
 ///
 /// `w`: [D, k] packed, `x`: [N, k] packed (im2col transposed), `out`
-/// must have `w.rows * x.rows` elements.
+/// must have `w.rows * x.rows` elements.  `Auto` resolves per call via
+/// [`XnorImpl::resolve`]; `Threaded` uses scoped threads here — the
+/// plan/session path uses [`xnor_gemm_pooled`] instead so steady-state
+/// serving never spawns.
 pub fn xnor_gemm(
     w: &PackedMatrix,
     x: &PackedMatrix,
@@ -286,12 +464,34 @@ pub fn xnor_gemm(
     assert_eq!(w.k, x.k, "reduction length mismatch");
     assert_eq!(w.kw, x.kw);
     assert_eq!(out.len(), w.rows * x.rows, "output size");
-    match imp {
+    match imp.resolve(w.rows, w.k, x.rows) {
         XnorImpl::Scalar => gemm_scalar(w, x, out),
         XnorImpl::Word64 => gemm_word64(w, x, out),
         XnorImpl::Blocked => gemm_blocked(w, x, out),
         XnorImpl::Blocked2x4 => gemm_blocked2x4(w, x, out),
-        XnorImpl::Threaded(t) => gemm_threaded(w, x, out, t),
+        XnorImpl::Wide => gemm_wide(w, x, out),
+        XnorImpl::Simd => gemm_simd(w, x, out),
+        XnorImpl::Threaded(t) => gemm_tiled(w, x, out, t, None),
+        XnorImpl::Auto => unreachable!("resolve() returns concrete impls"),
+    }
+}
+
+/// [`xnor_gemm`] with `Threaded` work running on `pool`'s persistent
+/// workers (the plan/session serving path) instead of per-call scoped
+/// spawns.  Bit-identical to [`xnor_gemm`] for every impl.
+pub fn xnor_gemm_pooled(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: &mut [i32],
+    imp: XnorImpl,
+    pool: &ThreadPool,
+) {
+    assert_eq!(w.k, x.k, "reduction length mismatch");
+    assert_eq!(w.kw, x.kw);
+    assert_eq!(out.len(), w.rows * x.rows, "output size");
+    match imp.resolve(w.rows, w.k, x.rows) {
+        XnorImpl::Threaded(t) => gemm_tiled(w, x, out, t, Some(pool)),
+        concrete => xnor_gemm(w, x, out, concrete),
     }
 }
 
@@ -303,6 +503,13 @@ mod tests {
 
     fn dense_dot(a: &[f32], b: &[f32]) -> i32 {
         a.iter().zip(b).map(|(x, y)| (x * y) as i32).sum()
+    }
+
+    fn all_impls() -> Vec<XnorImpl> {
+        let mut v = XnorImpl::ALL_SINGLE.to_vec();
+        v.push(XnorImpl::Auto);
+        v.push(XnorImpl::Threaded(3));
+        v
     }
 
     fn check_all_impls(d: usize, k: usize, n: usize, seed: u64) {
@@ -319,13 +526,7 @@ mod tests {
                     dense_dot(&wm[i * k..(i + 1) * k], &xm[j * k..(j + 1) * k]);
             }
         }
-        for imp in [
-            XnorImpl::Scalar,
-            XnorImpl::Word64,
-            XnorImpl::Blocked,
-            XnorImpl::Blocked2x4,
-            XnorImpl::Threaded(3),
-        ] {
+        for imp in all_impls() {
             let mut got = vec![0i32; d * n];
             xnor_gemm(&w, &x, &mut got, imp);
             assert_eq!(got, want, "impl {:?} d={d} k={k} n={n}", imp);
@@ -370,9 +571,12 @@ mod tests {
             let mones = vec![-1.0f32; k];
             let w = pack_rows(&ones, 1, k);
             let xs = pack_rows(&[ones.clone(), mones].concat(), 2, k);
-            let mut out = vec![0i32; 2];
-            xnor_gemm(&w, &xs, &mut out, XnorImpl::Blocked);
-            assert_eq!(out, vec![k as i32, -(k as i32)], "k={k}");
+            for imp in [XnorImpl::Blocked, XnorImpl::Wide, XnorImpl::Simd] {
+                let mut out = vec![0i32; 2];
+                xnor_gemm(&w, &xs, &mut out, imp);
+                assert_eq!(out, vec![k as i32, -(k as i32)],
+                           "k={k} {imp:?}");
+            }
         }
     }
 
@@ -389,6 +593,63 @@ mod tests {
         xnor_gemm(&w, &x, &mut a, XnorImpl::Threaded(64));
         xnor_gemm(&w, &x, &mut b, XnorImpl::Scalar);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pooled_matches_scoped() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Rng::new(31);
+        for (d, k, n) in [(5, 70, 9), (64, 288, 33), (2, 31, 1)] {
+            let w = pack_rows(&rng.sign_vec(d * k), d, k);
+            let x = pack_rows(&rng.sign_vec(n * k), n, k);
+            let mut want = vec![0i32; d * n];
+            xnor_gemm(&w, &x, &mut want, XnorImpl::Scalar);
+            for imp in [XnorImpl::Threaded(3), XnorImpl::Auto,
+                        XnorImpl::Simd] {
+                let mut got = vec![0i32; d * n];
+                xnor_gemm_pooled(&w, &x, &mut got, imp, &pool);
+                assert_eq!(got, want, "{imp:?} d={d} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_grid_covers_and_balances() {
+        // Small-D case (the motivating one): D=64 on 8 threads must
+        // produce more than 8 tiles so columns share the work.
+        let (rt, ct) = tile_grid(64, 1024, 8);
+        assert!(rt * ct >= 16, "{rt}x{ct}");
+        // Degenerate shapes stay valid.
+        assert_eq!(tile_grid(1, 1, 8).0, 1);
+        assert!(tile_grid(1, 3, 8).1 <= 1);
+        let (rt, ct) = tile_grid(2, 1000, 4);
+        assert!(rt <= 2 && ct >= 1);
+    }
+
+    #[test]
+    fn auto_resolves_to_concrete() {
+        // tiny problem -> single-thread Simd
+        assert_eq!(XnorImpl::Auto.resolve(4, 32, 4), XnorImpl::Simd);
+        // huge problem -> Threaded iff the host has >1 core
+        let r = XnorImpl::Auto.resolve(512, 4608, 4096);
+        match r {
+            XnorImpl::Threaded(t) => assert!(t >= 2),
+            XnorImpl::Simd => {
+                assert_eq!(super::auto_threads(), 1, "expected Threaded")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // non-Auto is identity
+        assert_eq!(XnorImpl::Blocked.resolve(512, 4608, 4096),
+                   XnorImpl::Blocked);
+    }
+
+    #[test]
+    fn calibrate_returns_valid_single_or_threaded() {
+        let imp = XnorImpl::calibrate(8, 64, 16);
+        assert!(XnorImpl::ALL_SINGLE.contains(&imp)
+                    || matches!(imp, XnorImpl::Threaded(_)),
+                "{imp:?}");
     }
 
     #[test]

@@ -53,9 +53,10 @@ impl NativeBackend {
         }
     }
 
-    /// Default arm: the paper's kernel, best native implementation.
+    /// Default arm: the paper's kernel, shape-aware auto-dispatch (the
+    /// plan resolves every op to the best impl for this CPU).
     pub fn xnor(engine: &BnnEngine, batch: usize) -> Self {
-        Self::new(engine, EngineKernel::Xnor(XnorImpl::Blocked), batch)
+        Self::new(engine, EngineKernel::Xnor(XnorImpl::Auto), batch)
     }
 }
 

@@ -79,12 +79,33 @@ const COMMON: [FlagSpec; 2] = [
 
 fn parse_kernel(name: &str) -> Result<EngineKernel> {
     Ok(match name {
-        "xnor" | "xnor-blocked" => EngineKernel::Xnor(XnorImpl::Blocked),
-        "xnor-scalar" => EngineKernel::Xnor(XnorImpl::Scalar),
+        // Default arm: shape-aware auto-dispatch at plan time.
+        "xnor" | "xnor-auto" => EngineKernel::Xnor(XnorImpl::Auto),
+        "xnor-blocked" => EngineKernel::Xnor(XnorImpl::Blocked),
+        "xnor-blocked2x4" => EngineKernel::Xnor(XnorImpl::Blocked2x4),
+        "xnor-scalar" | "xnor-scalar32" => {
+            EngineKernel::Xnor(XnorImpl::Scalar)
+        }
         "xnor-word64" => EngineKernel::Xnor(XnorImpl::Word64),
+        // Both the flag spelling and the impl's reported label work.
+        "xnor-wide" | "xnor-wide64" => EngineKernel::Xnor(XnorImpl::Wide),
+        "xnor-simd" => EngineKernel::Xnor(XnorImpl::Simd),
         "control" => EngineKernel::Control,
         "optimized" => EngineKernel::Optimized,
-        other => bail!("unknown kernel '{other}'"),
+        other => {
+            // xnor-threaded<N>: explicit 2-D tiled threading width.
+            if let Some(t) = other.strip_prefix("xnor-threaded") {
+                match t.parse::<usize>() {
+                    Ok(t) if t >= 1 => {
+                        return Ok(EngineKernel::Xnor(
+                            XnorImpl::Threaded(t),
+                        ));
+                    }
+                    _ => bail!("bad thread count in kernel '{other}'"),
+                }
+            }
+            bail!("unknown kernel '{other}'")
+        }
     })
 }
 
@@ -206,7 +227,9 @@ fn cmd_classify(argv: &[String]) -> Result<()> {
         FlagSpec { name: "count", takes_value: true, default: Some("8"),
                    help: "number of images" },
         FlagSpec { name: "kernel", takes_value: true, default: Some("xnor"),
-                   help: "xnor|xnor-scalar|xnor-word64|control|optimized" },
+                   help: "xnor(-auto)|xnor-simd|xnor-wide|xnor-blocked|\
+                          xnor-blocked2x4|xnor-scalar|xnor-word64|\
+                          xnor-threaded<n>|control|optimized" },
         FlagSpec { name: "weights", takes_value: true, default: Some("small"),
                    help: "weight set" },
         COMMON[1].clone(),
@@ -330,12 +353,12 @@ fn cmd_selftest(argv: &[String]) -> Result<()> {
     let x = ds.normalized(0, 4);
     let reference = engine.forward(&x, EngineKernel::Optimized);
     let mut ok = true;
-    for kernel in [
-        EngineKernel::Control,
-        EngineKernel::Xnor(XnorImpl::Scalar),
-        EngineKernel::Xnor(XnorImpl::Word64),
-        EngineKernel::Xnor(XnorImpl::Blocked),
-    ] {
+    // Every single-threaded impl (derived, so new tiers can't be
+    // silently skipped) plus the Auto plan-time dispatch.
+    let mut arms = vec![EngineKernel::Control];
+    arms.extend(XnorImpl::ALL_SINGLE.iter().map(|&i| EngineKernel::Xnor(i)));
+    arms.push(EngineKernel::Xnor(XnorImpl::Auto));
+    for kernel in arms {
         let diff = engine.forward(&x, kernel).max_abs_diff(&reference);
         let status = if diff <= 2e-3 { "ok" } else { "FAIL" };
         if diff > 2e-3 {

@@ -66,9 +66,25 @@ impl EngineKernel {
             EngineKernel::Xnor(XnorImpl::Blocked2x4) => {
                 "xnor/blocked2x4".into()
             }
+            EngineKernel::Xnor(XnorImpl::Wide) => "xnor/wide64".into(),
+            EngineKernel::Xnor(XnorImpl::Simd) => "xnor/simd".into(),
+            EngineKernel::Xnor(XnorImpl::Auto) => "xnor/auto".into(),
             EngineKernel::Xnor(imp) => format!("xnor/{}", imp.name()).into(),
             EngineKernel::Control => "control".into(),
             EngineKernel::Optimized => "optimized".into(),
+        }
+    }
+
+    /// Float gemm kernel used wherever a float conv/fc runs on this
+    /// arm: the naive loop on Control (the paper's baseline), the
+    /// widest SIMD kernel everywhere else (the vendor-optimized
+    /// stand-in).  Shared by [`BnnEngine::plan`] and
+    /// [`BnnEngine::forward_reference`] so the compiled path stays
+    /// bit-identical to the oracle.
+    pub(crate) fn float_impl(&self) -> GemmImpl {
+        match self {
+            EngineKernel::Control => GemmImpl::Naive,
+            _ => GemmImpl::Simd,
         }
     }
 }
@@ -246,11 +262,7 @@ impl BnnEngine {
         for layer in &self.convs {
             let (ck, w): (ConvKernel, ConvWeights) = if !layer.binarized {
                 // conv1: float input in every arm.
-                let imp = match kernel {
-                    EngineKernel::Control => GemmImpl::Naive,
-                    _ => GemmImpl::Blocked,
-                };
-                (ConvKernel::FloatReal(imp),
+                (ConvKernel::FloatReal(kernel.float_impl()),
                  ConvWeights::Float(Arc::clone(&layer.w_float)))
             } else {
                 match kernel {
@@ -260,12 +272,8 @@ impl BnnEngine {
                             layer.w_packed.as_ref().expect("packed weights"),
                         )),
                     ),
-                    EngineKernel::Control => (
-                        ConvKernel::FloatBinarized(GemmImpl::Naive),
-                        ConvWeights::Float(Arc::clone(&layer.w_float)),
-                    ),
-                    EngineKernel::Optimized => (
-                        ConvKernel::FloatBinarized(GemmImpl::Blocked),
+                    _ => (
+                        ConvKernel::FloatBinarized(kernel.float_impl()),
                         ConvWeights::Float(Arc::clone(&layer.w_float)),
                     ),
                 }
@@ -289,12 +297,8 @@ impl BnnEngine {
                     LinearKernel::Xnor(imp),
                     ConvWeights::Packed(Arc::clone(&layer.w_packed)),
                 ),
-                EngineKernel::Control => (
-                    LinearKernel::FloatBinarized(GemmImpl::Naive),
-                    ConvWeights::Float(Arc::clone(&layer.w_float)),
-                ),
-                EngineKernel::Optimized => (
-                    LinearKernel::FloatBinarized(GemmImpl::Blocked),
+                _ => (
+                    LinearKernel::FloatBinarized(kernel.float_impl()),
                     ConvWeights::Float(Arc::clone(&layer.w_float)),
                 ),
             };
@@ -319,6 +323,9 @@ mod tests {
             XnorImpl::Word64,
             XnorImpl::Blocked,
             XnorImpl::Blocked2x4,
+            XnorImpl::Wide,
+            XnorImpl::Simd,
+            XnorImpl::Auto,
             XnorImpl::Threaded(3),
         ] {
             assert_eq!(

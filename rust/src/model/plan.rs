@@ -29,10 +29,19 @@
 //! A [`Plan`] holds `Arc`s of the engine's weight/BN buffers, so it is
 //! self-contained: the engine may be dropped, plans may be shared, and
 //! each worker thread derives its own [`Session`].
+//!
+//! Kernel selection is part of plan compilation: `Xnor(Auto)` resolves
+//! every xnor-gemm op to a concrete impl from its shape (D, K, N at
+//! `max_batch`) and the detected CPU features — see
+//! [`XnorImpl::resolve`] — or via a one-shot microbench when
+//! `BITKERNEL_CALIBRATE=1`.  Ops that resolve to `Threaded` run on a
+//! persistent [`ThreadPool`] owned by the plan (shared by its
+//! sessions), never on per-call spawned threads.  Auto plans record the
+//! chosen impl in their stage names (`conv2:xnor-gemm[threaded8]`).
 
 use std::sync::Arc;
 
-use crate::bitops::{xnor_gemm, XnorImpl};
+use crate::bitops::{xnor_gemm, xnor_gemm_pooled, XnorImpl};
 use crate::gemm::{gemm_f32, GemmImpl};
 use crate::nn::fuse::{bn_rows_from_gemm_f32, bn_rows_from_gemm_i32,
                       bn_sign_pack_nchw, bn_sign_pack_rows_i32};
@@ -42,6 +51,7 @@ use crate::nn::norm::bn_affine_nchw_slice;
 use crate::nn::pool::maxpool2_into;
 use crate::nn::sign_inplace;
 use crate::tensor::{PackedMatrix, Tensor};
+use crate::utils::threadpool::ThreadPool;
 use crate::utils::Stopwatch;
 
 use super::bnn::{BnnEngine, EngineKernel};
@@ -141,6 +151,10 @@ pub(crate) struct PlanInner {
     ops: Vec<Op>,
     names: Vec<String>,
     bufs: BufSpec,
+    /// Persistent workers for `Threaded` xnor ops (present iff any op
+    /// resolved to one).  Owned by the plan, shared by every session
+    /// derived from it: steady-state serving never spawns a thread.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 /// A compiled, immutable execution plan for one (kernel, max_batch)
@@ -168,6 +182,22 @@ impl Plan {
     /// `fc1:bn_sign_pack`, ...).
     pub fn stage_names(&self) -> &[String] {
         &self.inner.names
+    }
+
+    /// Resolved xnor implementation per xnor-gemm op, in execution
+    /// order (empty on the float arms) — how `forward_profiled` and the
+    /// profile bench report which kernel actually ran.
+    pub fn xnor_impls(&self) -> Vec<XnorImpl> {
+        self.inner
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::ConvGemmX { imp, .. } | Op::FcGemmX { imp, .. } => {
+                    Some(*imp)
+                }
+                _ => None,
+            })
+            .collect()
     }
 
     /// Materialize an execution context: every buffer the op program
@@ -204,11 +234,13 @@ impl BnnEngine {
         let is_xnor = matches!(kernel, EngineKernel::Xnor(_));
         // Float gemm used wherever a float conv/fc runs: conv1 in every
         // arm, everything on the Control/Optimized arms.  Control is the
-        // paper's naive baseline; the other arms get the blocked kernel.
-        let float_imp = match kernel {
-            EngineKernel::Control => GemmImpl::Naive,
-            _ => GemmImpl::Blocked,
-        };
+        // paper's naive baseline; the other arms get the widest float
+        // kernel (shared with `forward_reference` so the compiled path
+        // stays bit-identical to the oracle).
+        let float_imp = kernel.float_impl();
+        // Largest thread count any resolved op asks for; > 0 means the
+        // plan owns a persistent pool.
+        let mut pool_threads = 0usize;
 
         let (mut c, mut h, mut w) = (IMAGE_C, IMAGE_HW, IMAGE_HW);
         // Xnor arm: each layer's bn is folded into its consumer's sign.
@@ -241,14 +273,18 @@ impl BnnEngine {
                 names.push(format!("{lname}:encode"));
                 bufs.gemm_i32 = bufs.gemm_i32.max(p.cout * n);
                 bufs.act = bufs.act.max(mb * p.cout * oh * ow);
+                let rimp = plan_xnor_impl(imp, p.cout, k, n);
+                if let XnorImpl::Threaded(t) = rimp {
+                    pool_threads = pool_threads.max(t);
+                }
                 ops.push(Op::ConvGemmX {
                     w: Arc::clone(
                         layer.w_packed.as_ref().expect("packed weights"),
                     ),
                     g,
-                    imp,
+                    imp: rimp,
                 });
-                names.push(format!("{lname}:xnor-gemm"));
+                names.push(xnor_gemm_stage_name(&lname, imp, rimp));
             } else {
                 debug_assert!(pending_bn.is_none(),
                               "bn fold lost before conv{}", li + 1);
@@ -319,13 +355,17 @@ impl BnnEngine {
             match kernel {
                 EngineKernel::Xnor(imp) => {
                     bufs.gemm_i32 = bufs.gemm_i32.max(fc.dout * mb);
+                    let rimp = plan_xnor_impl(imp, fc.dout, fc.din, mb);
+                    if let XnorImpl::Threaded(t) = rimp {
+                        pool_threads = pool_threads.max(t);
+                    }
                     ops.push(Op::FcGemmX {
                         w: Arc::clone(&fc.w_packed),
                         d: fc.dout,
                         k: fc.din,
-                        imp,
+                        imp: rimp,
                     });
-                    names.push(format!("{lname}:xnor-gemm"));
+                    names.push(xnor_gemm_stage_name(&lname, imp, rimp));
                     if last {
                         ops.push(Op::BnRowsI { bn, d: fc.dout });
                         names.push(format!("{lname}:bn+logits"));
@@ -372,8 +412,41 @@ impl BnnEngine {
                 ops,
                 names,
                 bufs,
+                pool: (pool_threads > 0)
+                    .then(|| Arc::new(ThreadPool::new(pool_threads))),
             }),
         }
+    }
+}
+
+/// Opt-in microbench calibration for plan-time `Auto` resolution
+/// (`BITKERNEL_CALIBRATE=1`; costs a few ms per distinct op shape).
+fn calibrate_enabled() -> bool {
+    std::env::var_os("BITKERNEL_CALIBRATE").is_some_and(|v| v != "0")
+}
+
+/// Resolve one op's xnor impl at plan time: `Auto` goes through the
+/// shape heuristic (or the one-shot microbench when calibration is
+/// enabled); explicit impls pass through untouched.
+fn plan_xnor_impl(imp: XnorImpl, d: usize, k: usize, n: usize)
+                  -> XnorImpl {
+    if imp == XnorImpl::Auto && calibrate_enabled() {
+        XnorImpl::calibrate(d, k, n)
+    } else {
+        imp.resolve(d, k, n)
+    }
+}
+
+/// Stage name for an xnor-gemm op.  When the arm is `Auto` the chosen
+/// impl is recorded in the name (`conv2:xnor-gemm[threaded8]`), so
+/// `run_profiled` and the profile bench report which kernel ran;
+/// explicit arms keep the stable bare name.
+fn xnor_gemm_stage_name(lname: &str, requested: XnorImpl,
+                        resolved: XnorImpl) -> String {
+    if requested == XnorImpl::Auto {
+        format!("{lname}:xnor-gemm[{}]", resolved.name())
+    } else {
+        format!("{lname}:xnor-gemm")
     }
 }
 
@@ -527,8 +600,15 @@ impl Session {
                 Op::ConvGemmX { w, g, imp } => {
                     let n = b * g.oh * g.ow;
                     let d = g.cout;
-                    xnor_gemm(w, &self.packed,
-                              &mut self.gemm_i32[..d * n], *imp);
+                    match plan.pool.as_deref() {
+                        Some(pool) => xnor_gemm_pooled(
+                            w, &self.packed,
+                            &mut self.gemm_i32[..d * n], *imp, pool,
+                        ),
+                        None => xnor_gemm(w, &self.packed,
+                                          &mut self.gemm_i32[..d * n],
+                                          *imp),
+                    }
                     let (dst, next) = match cur {
                         Cur::A => (&mut self.act_b, Cur::B),
                         _ => (&mut self.act_a, Cur::A),
@@ -585,8 +665,15 @@ impl Session {
                     let d = *d;
                     debug_assert_eq!(self.packed.rows, b);
                     debug_assert_eq!(self.packed.k, *k);
-                    xnor_gemm(w, &self.packed,
-                              &mut self.gemm_i32[..d * b], *imp);
+                    match plan.pool.as_deref() {
+                        Some(pool) => xnor_gemm_pooled(
+                            w, &self.packed,
+                            &mut self.gemm_i32[..d * b], *imp, pool,
+                        ),
+                        None => xnor_gemm(w, &self.packed,
+                                          &mut self.gemm_i32[..d * b],
+                                          *imp),
+                    }
                 }
                 Op::BnSignPackNchw { bn, c, hw } => {
                     let (c, hw) = (*c, *hw);

@@ -60,10 +60,9 @@ pub fn bn_sign_pack_nchw(x: &[f32], b: usize, c: usize, hw: usize,
         let mut bw =
             BitWriter::new(&mut out.data[bi * kw..(bi + 1) * kw]);
         for ci in 0..c {
-            let (ac, bc) = (a[ci], bias[ci]);
-            for &v in &src[ci * hw..(ci + 1) * hw] {
-                bw.push(u32::from(ac * v + bc >= 0.0));
-            }
+            // Whole-channel sign run: SIMD-packed once word-aligned.
+            bw.push_signs_bn(&src[ci * hw..(ci + 1) * hw], a[ci],
+                             bias[ci]);
         }
         bw.finish();
     }

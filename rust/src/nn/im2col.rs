@@ -144,17 +144,15 @@ pub fn im2col_pack_bn(xd: &[f32], b: usize, c: usize, h: usize, w: usize,
                         for _ in 0..(in_x0 as isize - ix0) {
                             bw.push(1);
                         }
-                        // interior: branch-free sign bit; the bn=None
-                        // path keeps the plain compare (no identity
-                        // affine cost on the legacy encode loop)
+                        // interior: sign-run push (SIMD whole words once
+                        // word-aligned); the bn=None path keeps the
+                        // plain compare (no identity affine cost on the
+                        // legacy encode loop)
+                        let interior = &src[in_x0..in_x1.max(in_x0)];
                         if bn.is_some() {
-                            for &v in &src[in_x0..in_x1.max(in_x0)] {
-                                bw.push(u32::from(ac * v + bc >= 0.0));
-                            }
+                            bw.push_signs_bn(interior, ac, bc);
                         } else {
-                            for &v in &src[in_x0..in_x1.max(in_x0)] {
-                                bw.push(u32::from(v >= 0.0));
-                            }
+                            bw.push_signs(interior);
                         }
                         // right pad
                         for _ in 0..(ix0 + kw as isize

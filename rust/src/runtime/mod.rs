@@ -4,11 +4,25 @@
 //! graphs that python lowered (Pallas xnor / Pallas control / XLA
 //! optimized) are compiled once by the PJRT CPU client and then executed
 //! from the rust hot path with zero python involvement.
+//!
+//! The PJRT client (and its `xla` native-library dependency) is gated
+//! behind the `pjrt` cargo feature.  Without it, [`Runtime`] and
+//! [`LoadedModel`] are type-compatible stubs whose constructors return
+//! a "rebuild with `--features pjrt`" error — the native engine, the
+//! coordinator, and every bench build and run regardless.
 
+#[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod registry;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use literal::{literal_to_vec_f32, tensor_to_literal, u32s_to_literal};
 pub use manifest::{InputDesc, InputKind, KernelEntry, Manifest, ModelEntry, Transform};
+#[cfg(feature = "pjrt")]
 pub use registry::{LoadedModel, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedModel, Runtime};

@@ -1,0 +1,71 @@
+//! No-PJRT stand-ins for [`super::registry`], compiled when the `pjrt`
+//! feature is off (the default: the xla native library is a heavy,
+//! often-unavailable build dependency, and only the Table-2
+//! "accelerator" arm needs it).
+//!
+//! Type-compatible with the real registry so every caller — the CLI's
+//! pjrt backends, [`crate::coordinator::PjrtBackend`], benchkit's
+//! table2 — compiles unchanged; construction fails at runtime with a
+//! clear "rebuild with `--features pjrt`" error instead.  Neither type
+//! can actually be instantiated in this configuration.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::manifest::Manifest;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: bitkernel was built without the `pjrt` \
+     feature (rebuild with `cargo build --features pjrt`)";
+
+/// Stub of the compiled whole-model executable.  Unconstructible: the
+/// only producer is [`Runtime`], whose constructor always errors here.
+pub struct LoadedModel {
+    pub name: String,
+    pub variant: String,
+    pub batch: usize,
+    pub output_shape: Vec<usize>,
+    #[allow(dead_code)]
+    unconstructible: (),
+}
+
+impl LoadedModel {
+    pub fn infer(&self, _images: &Tensor) -> Result<Tensor> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub of the PJRT client + model registry.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn load_model(&mut self, _name: &str) -> Result<&LoadedModel> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn load_by(
+        &mut self,
+        _weights: &str,
+        _variant: &str,
+        _batch: usize,
+    ) -> Result<&LoadedModel> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn take_model(&mut self, _name: &str) -> Result<LoadedModel> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".to_string()
+    }
+}

@@ -1,10 +1,16 @@
 //! Fixed-size thread pool (offline substrate for rayon/tokio).
 //!
 //! Work items are boxed closures on an mpsc channel guarded by a mutex on
-//! the receiver (classic shared-queue pool).  `scope_chunks` is the
-//! data-parallel helper the threaded xnor-gemm uses: it splits an index
-//! range into contiguous chunks and runs one std::thread::scope task per
-//! chunk — no pool needed, no 'static bound on the closure.
+//! the receiver (classic shared-queue pool).  Two data-parallel helpers
+//! drive the threaded xnor-gemm:
+//!
+//! * [`scope_chunks`] — splits an index range into contiguous chunks and
+//!   runs one `std::thread::scope` task per chunk; no pool needed, no
+//!   `'static` bound on the closure, but pays a thread spawn per chunk
+//!   per call.
+//! * [`ThreadPool::run_chunks`] — the same split executed on the pool's
+//!   persistent workers (the plan/session serving path: compile once,
+//!   then steady-state inference never spawns a thread).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -29,7 +35,17 @@ impl ThreadPool {
                 std::thread::spawn(move || loop {
                     let job = { rx.lock().unwrap().recv() };
                     match job {
-                        Ok(job) => job(),
+                        Ok(job) => {
+                            // A panicking job must not kill the worker:
+                            // pools are long-lived (a Plan owns one for
+                            // all its Sessions).  Caller-side
+                            // propagation is the submitter's business —
+                            // `run_chunks` re-panics via its DoneGuard
+                            // latch.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
+                        }
                         Err(_) => break, // sender dropped: shut down
                     }
                 })
@@ -52,6 +68,75 @@ impl ThreadPool {
 
     pub fn is_empty(&self) -> bool {
         self.workers.is_empty()
+    }
+
+    /// Run `f(chunk_start, chunk_end)` over `0..n` split into (at most)
+    /// one contiguous chunk per worker, on the pool's persistent
+    /// threads, blocking until every chunk completes.  The closure may
+    /// borrow from the caller's stack — the pooled equivalent of
+    /// [`scope_chunks`].
+    ///
+    /// Must not be called from a pool worker (the caller would block a
+    /// worker the chunks need).
+    pub fn run_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let parts = self.len().clamp(1, n);
+        if parts == 1 {
+            f(0, n);
+            return;
+        }
+        // Erase the closure's lifetime so jobs satisfy the queue's
+        // `'static` bound.  Sound: the completion latch below is
+        // drained before this frame returns, so the borrow outlives
+        // every job (a panicking job still signals via its DoneGuard
+        // during unwind).
+        let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let chunk = n.div_ceil(parts);
+        let (done_tx, done_rx) = mpsc::channel::<bool>();
+        let mut jobs = 0usize;
+        for t in 0..parts {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let guard = DoneGuard { tx: done_tx.clone(), ok: false };
+            self.execute(move || {
+                let mut guard = guard;
+                f_static(lo, hi);
+                guard.ok = true;
+            });
+            jobs += 1;
+        }
+        drop(done_tx);
+        let mut all_ok = true;
+        for _ in 0..jobs {
+            all_ok &= done_rx
+                .recv()
+                .expect("pool worker exited without completing its chunk");
+        }
+        assert!(all_ok, "a pooled chunk panicked");
+    }
+}
+
+/// Completion-latch token: signals even when the chunk panics (during
+/// unwind, with `ok: false`), so [`ThreadPool::run_chunks`] never
+/// deadlocks on a poisoned worker and panics propagate to the caller.
+struct DoneGuard {
+    tx: mpsc::Sender<bool>,
+    ok: bool,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(self.ok);
     }
 }
 
@@ -109,6 +194,63 @@ mod tests {
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join: all post-panic jobs still ran
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn run_chunks_propagates_chunk_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(4, |lo, _| {
+                if lo == 0 {
+                    panic!("chunk failed");
+                }
+            });
+        }));
+        assert!(r.is_err(), "chunk panic must reach the caller");
+        let sum = AtomicUsize::new(0);
+        pool.run_chunks(3, |lo, hi| {
+            sum.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn run_chunks_covers_range_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> =
+            (0..103).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_chunks(103, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // Reusable: a second dispatch on the same workers.
+        let sum = AtomicUsize::new(0);
+        pool.run_chunks(10, |lo, hi| {
+            sum.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 10);
+        // Degenerate inputs.
+        pool.run_chunks(0, |_, _| panic!("must not run"));
+        pool.run_chunks(1, |lo, hi| {
+            assert_eq!((lo, hi), (0, 1));
+        });
     }
 
     #[test]

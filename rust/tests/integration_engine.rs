@@ -35,6 +35,9 @@ fn all_arms_identical_logits() {
         EngineKernel::Xnor(XnorImpl::Scalar),
         EngineKernel::Xnor(XnorImpl::Word64),
         EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Xnor(XnorImpl::Wide),
+        EngineKernel::Xnor(XnorImpl::Simd),
+        EngineKernel::Xnor(XnorImpl::Auto),
         EngineKernel::Xnor(XnorImpl::Threaded(2)),
     ] {
         let logits = engine.forward(&x, kernel);

@@ -1,6 +1,10 @@
 //! PJRT-runtime integration: the AOT artifacts must load, execute, and
 //! agree with the native engine (cross-LANGUAGE, cross-RUNTIME check:
 //! jax/pallas-lowered HLO vs hand-written rust kernels).
+//!
+//! Whole crate gated on the `pjrt` feature: without it the runtime is
+//! the error-returning stub and these tests have nothing to exercise.
+#![cfg(feature = "pjrt")]
 
 use bitkernel::bitops::XnorImpl;
 use bitkernel::data::Dataset;

@@ -26,11 +26,14 @@ const WIDTHS: [u32; 9] = [4, 4, 6, 6, 8, 8, 16, 12, 10];
 const CHW: usize = 3 * 32 * 32;
 const MAX_BATCH: usize = 4;
 
-fn arms() -> [EngineKernel; 5] {
+fn arms() -> [EngineKernel; 8] {
     [
         EngineKernel::Xnor(XnorImpl::Scalar),
         EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Xnor(XnorImpl::Wide),
+        EngineKernel::Xnor(XnorImpl::Simd),
         EngineKernel::Xnor(XnorImpl::Threaded(2)),
+        EngineKernel::Xnor(XnorImpl::Auto),
         EngineKernel::Control,
         EngineKernel::Optimized,
     ]
@@ -182,6 +185,47 @@ fn fused_epilogue_is_a_distinct_profiling_stage() {
     let want: Vec<&str> =
         xnor.stage_names().iter().map(|n| n.as_str()).collect();
     assert_eq!(got, want);
+}
+
+#[test]
+fn auto_plan_resolves_impls_and_stays_bit_identical() {
+    let engine = synthetic_engine(WIDTHS, 79);
+    let kernel = EngineKernel::Xnor(XnorImpl::Auto);
+    let plan = engine.plan(kernel, MAX_BATCH);
+
+    // Every xnor op resolved to a concrete impl at plan time...
+    let impls = plan.xnor_impls();
+    assert!(!impls.is_empty());
+    for imp in &impls {
+        assert!(!matches!(imp, XnorImpl::Auto), "unresolved Auto op");
+    }
+    // ...and the chosen impl is recorded in the stage name.
+    let gemm_names: Vec<&String> = plan
+        .stage_names()
+        .iter()
+        .filter(|n| n.contains(":xnor-gemm"))
+        .collect();
+    assert_eq!(gemm_names.len(), impls.len());
+    for (name, imp) in gemm_names.iter().zip(&impls) {
+        assert!(name.ends_with(&format!("[{}]", imp.name())),
+                "stage {name} does not record {imp:?}");
+    }
+
+    // Auto sessions are bit-identical to the unfused oracle and
+    // buffer-stable across batch sizes, like every explicit arm.
+    let mut session = plan.session();
+    let sig = session.buffer_signature();
+    let mut rng = Rng::new(2024);
+    for case in 0..6 {
+        let b = [1, 3, MAX_BATCH][case % 3];
+        let x = images(&mut rng, b);
+        let want = engine.forward_reference(&x, kernel);
+        let got = session.run(&x);
+        assert_eq!(got.max_abs_diff(&want), 0.0,
+                   "auto plan diverged at b={b}");
+        assert_eq!(session.buffer_signature(), sig,
+                   "auto session reallocated (b={b})");
+    }
 }
 
 #[test]

@@ -33,9 +33,21 @@ fn prop_pack_roundtrip() {
     });
 }
 
+/// Every impl a fuzz case may pick: the full single-threaded ladder
+/// (incl. the SIMD tiers), the shape-resolved `Auto`, and 2-D tiled
+/// threading at two widths.
+fn fuzz_impls() -> Vec<XnorImpl> {
+    let mut v = XnorImpl::ALL_SINGLE.to_vec();
+    v.push(XnorImpl::Auto);
+    v.push(XnorImpl::Threaded(2));
+    v.push(XnorImpl::Threaded(5));
+    v
+}
+
 #[test]
 fn prop_xnor_gemm_equals_dense_all_impls() {
-    prop_assert(12, 40, |rng: &mut Rng, case| {
+    let impls = fuzz_impls();
+    prop_assert(12, 60, |rng: &mut Rng, case| {
         let d = dim(rng, 10);
         let k = dim(rng, 200);
         let n = dim(rng, 10);
@@ -43,12 +55,7 @@ fn prop_xnor_gemm_equals_dense_all_impls() {
         let xm = rng.sign_vec(n * k);
         let w = pack_rows(&wm, d, k);
         let x = pack_rows(&xm, n, k);
-        let imp = [
-            XnorImpl::Scalar,
-            XnorImpl::Word64,
-            XnorImpl::Blocked,
-            XnorImpl::Threaded(2),
-        ][case % 4];
+        let imp = impls[case % impls.len()];
         let mut got = vec![0i32; d * n];
         xnor_gemm(&w, &x, &mut got, imp);
         for i in 0..d {
@@ -61,6 +68,35 @@ fn prop_xnor_gemm_equals_dense_all_impls() {
                         got[i * n + j]
                     ));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_impls_bit_identical_to_scalar_on_ragged_shapes() {
+    // Differential fuzz: every impl (incl. Auto and the SIMD tiers)
+    // against the Scalar oracle over the ragged reduction lengths that
+    // stress word/lane tails, with odd D/N so the 4-column and 2-row
+    // blocking paths all hit their remainders.
+    const KS: [usize; 6] = [1, 31, 32, 33, 255, 257];
+    let impls = fuzz_impls();
+    prop_assert(16, 48, |rng: &mut Rng, case| {
+        let k = KS[case % KS.len()];
+        let d = 1 + 2 * rng.below(6); // odd in 1..=11
+        let n = 1 + 2 * rng.below(6);
+        let w = pack_rows(&rng.sign_vec(d * k), d, k);
+        let x = pack_rows(&rng.sign_vec(n * k), n, k);
+        let mut want = vec![0i32; d * n];
+        xnor_gemm(&w, &x, &mut want, XnorImpl::Scalar);
+        for &imp in &impls {
+            let mut got = vec![i32::MIN; d * n];
+            xnor_gemm(&w, &x, &mut got, imp);
+            if got != want {
+                return Err(format!(
+                    "{imp:?} diverges from Scalar at d={d} k={k} n={n}"
+                ));
             }
         }
         Ok(())

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (also: `make ci`).
 #
-#   build (release) -> tests -> formatting -> profile-bench smoke run
+#   build (release) -> tests -> formatting -> clippy -> bench smoke runs
 #
 # The profile smoke run exercises the compiled plan/session path end to
 # end (1 rep per arm); it self-skips when `make artifacts` has not been
-# run, so ci.sh works in artifact-less environments too.
+# run, so ci.sh works in artifact-less environments too.  The ablation
+# smoke run (--quick) exercises every xnor kernel impl — incl. the SIMD
+# tiers, tiled threading, and Auto dispatch — on real layer shapes.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -18,6 +20,12 @@ cargo test -q
 
 echo "== cargo fmt --check"
 cargo fmt --check
+
+echo "== cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "== bench smoke: kernel ablation (--quick)"
+cargo bench --bench ablation -- --quick
 
 echo "== bench smoke: profile (1 rep)"
 cargo bench --bench profile -- --reps 1
