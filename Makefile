@@ -1,17 +1,27 @@
 # Repo-level convenience targets.
 #
-#   make ci        — tier-1 gate: build + tests + fmt + clippy + smoke runs
+#   make ci        — tier-1 gate: build + tests + docs + fmt + clippy
+#                    + smoke runs
 #   make bench     — kernel ablation -> BENCH_2.json (per-impl GiOP/s
-#                    for the Table-2 layer shapes; the perf trajectory)
+#                    for the Table-2 layer shapes) and the replica
+#                    batching sweep (--quick) -> BENCH_3.json; run
+#                    `cargo bench --bench batching -- --json
+#                    ../BENCH_3.json` without --quick for full-fidelity
+#                    serving numbers
+#   make docs      — API docs only, rustdoc warnings denied
 #   make artifacts — python AOT pipeline -> rust/artifacts (needs jax)
 
-.PHONY: ci bench artifacts
+.PHONY: ci bench docs artifacts
 
 ci:
 	./scripts/ci.sh
 
 bench:
 	cd rust && cargo bench --bench ablation -- --json ../BENCH_2.json
+	cd rust && cargo bench --bench batching -- --quick --json ../BENCH_3.json
+
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts

@@ -1,23 +1,45 @@
-//! `cargo bench --bench batching` — coordinator policy sweep:
-//! throughput/latency vs (max_batch, max_delay) under closed-loop load,
-//! using the trained BNN on the native xnor kernel.
+//! `cargo bench --bench batching` — coordinator policy sweep.
+//!
+//! Three sections:
+//!
+//! 1. **Mock policy sweep** — throughput/latency vs (max_batch,
+//!    max_delay) with a fixed-cost backend: pure coordinator overhead.
+//! 2. **Replica scaling sweep** — the replicated-serving measurement:
+//!    replicas × max_batch × max_delay under closed-loop load against a
+//!    synthetic BNN (no artifacts needed), every replica minting its
+//!    session from ONE shared compiled plan.  This is the table that
+//!    backs the "N replicas ≈ N× requests/s" claim; `--json` writes it
+//!    as `BENCH_3.json`.
+//! 3. **Trained model** (skipped without `make artifacts`): the same
+//!    sweep shape against the real weights.
+//!
+//! Flags:
+//! * `--quick`        — tiny request counts (the CI smoke run)
+//! * `--json <path>`  — write the replica-sweep rows as JSON
+//!   (`make bench` emits BENCH_3.json this way)
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use bitkernel::benchkit::Table;
+use bitkernel::bitops::XnorImpl;
 use bitkernel::coordinator::{
     Backend, BatcherConfig, MockBackend, NativeBackend, Router, RouterConfig,
 };
 use bitkernel::data::Dataset;
-use bitkernel::model::BnnEngine;
+use bitkernel::model::{BnnEngine, EngineKernel};
+use bitkernel::testing::synthetic_engine;
+use bitkernel::utils::json::Json;
 use bitkernel::utils::timer::{mean, percentile};
-use bitkernel::utils::Stopwatch;
+use bitkernel::utils::{Rng, Stopwatch};
 
+/// Closed-loop load: `clients` threads race through `requests`
+/// submissions drawn round-robin from `images`.  Returns (wall seconds,
+/// per-request latencies in ms).
 fn drive(
     router: &Router,
-    ds: &Dataset,
+    images: &[Vec<f32>],
     requests: usize,
     clients: usize,
 ) -> (f64, Vec<f64>) {
@@ -27,17 +49,30 @@ fn drive(
         let mut handles = Vec::new();
         for _ in 0..clients {
             let next = Arc::clone(&next);
-            handles.push(s.spawn(|| {
-                let next = next;
+            handles.push(s.spawn(move || {
                 let mut lat = Vec::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::SeqCst);
                     if i >= requests {
                         return lat;
                     }
-                    let img = ds.normalized(i % ds.count, i % ds.count + 1);
+                    let img = images[i % images.len()].clone();
                     let sw = Stopwatch::start();
-                    router.submit_wait(img.into_data()).unwrap();
+                    // Retry on QueueFull: a closed loop should measure
+                    // service time, not shed its own load.
+                    loop {
+                        match router.submit_wait(img.clone()) {
+                            Ok(_) => break,
+                            Err(e) => {
+                                assert_eq!(
+                                    e,
+                                    bitkernel::coordinator::SubmitError::QueueFull,
+                                    "{e}"
+                                );
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
                     lat.push(sw.elapsed_ms());
                 }
             }));
@@ -47,22 +82,62 @@ fn drive(
     (sw.elapsed_secs(), lat)
 }
 
-fn main() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
 
-    // --- policy sweep with the mock backend (pure coordinator cost) -----------
+/// One measured grid point of the replica sweep.
+struct SweepRow {
+    replicas: usize,
+    max_batch: usize,
+    max_delay_ms: u64,
+    requests: usize,
+    clients: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+}
+
+impl SweepRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("max_delay_ms", Json::Num(self.max_delay_ms as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("req_per_s", Json::Num(self.req_per_s)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+        ])
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let json_path = arg("--json");
+    let host = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // --- 1. policy sweep with the mock backend (pure coordinator cost) --------
     let mut table = Table::new(
-        "Batching policy sweep (mock backend, 2ms/batch, 256 req, 16 clients)",
+        "Batching policy sweep (mock backend, 2ms/batch, 16 clients, 1 replica)",
         &["max_batch", "max_delay", "req/s", "p50 ms", "p99 ms",
           "mean batch"],
     );
+    let mock_requests = if quick { 64 } else { 256 };
+    let synth_image = vec![0.1f32; 3 * 32 * 32];
     for (mb, delay_ms) in
         [(1, 0u64), (4, 1), (8, 2), (8, 10), (16, 2), (32, 5)]
     {
         let router = Router::start(
-            move || Ok(Box::new(MockBackend::new(mb, 2)) as Box<dyn Backend>),
+            move |_| Ok(Box::new(MockBackend::new(mb, 2)) as Box<dyn Backend>),
             RouterConfig {
                 queue_cap: 1024,
+                replicas: 1,
                 batcher: BatcherConfig {
                     max_batch: mb,
                     max_delay: Duration::from_millis(delay_ms),
@@ -70,40 +145,17 @@ fn main() {
             },
         )
         .unwrap();
-        // synthetic images: mock ignores content
-        let (wall, lat) = {
-            let next = Arc::new(AtomicUsize::new(0));
-            let requests = 256;
-            let sw = Stopwatch::start();
-            let lat: Vec<f64> = std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for _ in 0..16 {
-                    let next = Arc::clone(&next);
-                    let router = &router;
-                    handles.push(s.spawn(move || {
-                        let mut lat = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::SeqCst);
-                            if i >= requests {
-                                return lat;
-                            }
-                            let sw = Stopwatch::start();
-                            router
-                                .submit_wait(vec![0.1f32; 3 * 32 * 32])
-                                .unwrap();
-                            lat.push(sw.elapsed_ms());
-                        }
-                    }));
-                }
-                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-            });
-            (sw.elapsed_secs(), lat)
-        };
+        let (wall, lat) = drive(
+            &router,
+            std::slice::from_ref(&synth_image),
+            mock_requests,
+            16,
+        );
         let snap = router.metrics().snapshot();
         table.row(&[
             format!("{mb}"),
             format!("{delay_ms}ms"),
-            format!("{:.0}", 256.0 / wall),
+            format!("{:.0}", mock_requests as f64 / wall),
             format!("{:.2}", percentile(&lat, 0.5)),
             format!("{:.2}", percentile(&lat, 0.99)),
             format!("{:.2}", snap.mean_batch_size),
@@ -111,25 +163,146 @@ fn main() {
     }
     table.print();
 
-    // --- real model -------------------------------------------------------------
+    // --- 2. replica scaling sweep (synthetic BNN, one shared plan) ------------
+    // Widths big enough that a batch costs real compute (so replica
+    // scaling is visible over coordinator overhead) but small enough
+    // for a quick sweep.
+    let engine = synthetic_engine([32, 32, 64, 64, 64, 64, 128, 128, 10], 99);
+    let mut rng = Rng::new(7);
+    let images: Vec<Vec<f32>> =
+        (0..32).map(|_| rng.normal_vec(3 * 32 * 32)).collect();
+    let (requests, clients) = if quick { (64, 8) } else { (512, 32) };
+    let replica_grid: Vec<usize> = {
+        let mut v = if quick { vec![1, host.min(4)] } else { vec![1, 2, 4] };
+        v.dedup();
+        v
+    };
+    let policy_grid: &[(usize, u64)] =
+        if quick { &[(8, 2)] } else { &[(1, 0), (8, 2), (16, 5)] };
+
+    let mut table = Table::new(
+        &format!(
+            "Replica scaling sweep (synthetic BNN, one shared plan, \
+             {requests} req, {clients} clients, {host}-core host)"
+        ),
+        &["replicas", "max_batch", "max_delay", "req/s", "p50 ms",
+          "p99 ms", "mean batch"],
+    );
+    let mut rows: Vec<SweepRow> = Vec::new();
+    for &(mb, delay_ms) in policy_grid {
+        // One compile per policy point, shared across every replica
+        // count — exactly the serving deployment's shape.
+        let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), mb);
+        for &replicas in &replica_grid {
+            let plan = plan.clone();
+            let router = Router::start(
+                move |_| {
+                    Ok(Box::new(NativeBackend::from_plan(&plan))
+                        as Box<dyn Backend>)
+                },
+                RouterConfig {
+                    queue_cap: 1024,
+                    replicas,
+                    batcher: BatcherConfig {
+                        max_batch: mb,
+                        max_delay: Duration::from_millis(delay_ms),
+                    },
+                },
+            )
+            .unwrap();
+            let (wall, lat) = drive(&router, &images, requests, clients);
+            let snap = router.metrics().snapshot();
+            router.shutdown();
+            let row = SweepRow {
+                replicas,
+                max_batch: mb,
+                max_delay_ms: delay_ms,
+                requests,
+                clients,
+                req_per_s: requests as f64 / wall,
+                p50_ms: percentile(&lat, 0.5),
+                p99_ms: percentile(&lat, 0.99),
+                mean_batch: snap.mean_batch_size,
+            };
+            table.row(&[
+                format!("{replicas}"),
+                format!("{mb}"),
+                format!("{delay_ms}ms"),
+                format!("{:.0}", row.req_per_s),
+                format!("{:.2}", row.p50_ms),
+                format!("{:.2}", row.p99_ms),
+                format!("{:.2}", row.mean_batch),
+            ]);
+            rows.push(row);
+        }
+    }
+    table.print();
+
+    // Acceptance check (informational; perf varies per host): at equal
+    // policy, the widest pool should scale throughput.
+    for &(mb, delay_ms) in policy_grid {
+        let at = |r: usize| {
+            rows.iter().find(|x| {
+                x.replicas == r
+                    && x.max_batch == mb
+                    && x.max_delay_ms == delay_ms
+            })
+        };
+        let (Some(one), Some(widest)) = (
+            at(1),
+            replica_grid.iter().rev().find_map(|&r| at(r).filter(|_| r > 1)),
+        ) else {
+            continue;
+        };
+        let speedup = widest.req_per_s / one.req_per_s;
+        println!(
+            "acceptance: {}x replicas vs 1 at max_batch={mb}: {speedup:.2}x \
+             req/s ({})",
+            widest.replicas,
+            if speedup >= 2.0 || host < 4 {
+                "PASS >= 2x (or host < 4 cores)"
+            } else {
+                "below 2x"
+            }
+        );
+    }
+
+    if let Some(path) = json_path {
+        let json =
+            Json::Arr(rows.iter().map(SweepRow::to_json).collect());
+        std::fs::write(&path, json.to_string()).expect("write json");
+        println!("wrote {path}");
+    }
+
+    // --- 3. trained model (needs artifacts) ------------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("(skipping real-model batching bench: no artifacts)");
+        eprintln!("(skipping trained-model batching bench: no artifacts)");
         return;
     }
     let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
+    let real_images: Vec<Vec<f32>> = (0..32.min(ds.count))
+        .map(|i| ds.normalized(i, i + 1).into_data())
+        .collect();
+    let weights = dir.join("weights_small.bkw");
+    let engine = BnnEngine::load(&weights).unwrap();
     let mut table = Table::new(
         "Batching with the trained BNN (native xnor, 64 req, 8 clients)",
-        &["max_batch", "req/s", "mean ms", "p99 ms", "mean batch"],
+        &["replicas", "max_batch", "req/s", "mean ms", "p99 ms",
+          "mean batch"],
     );
-    for mb in [1usize, 4, 8, 16] {
-        let weights = dir.join("weights_small.bkw");
+    let mut trained_grid = vec![(1usize, 1usize), (1, 8), (host.min(4), 8)];
+    trained_grid.dedup();
+    for (replicas, mb) in trained_grid {
+        let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), mb);
         let router = Router::start(
-            move || {
-                let engine = BnnEngine::load(&weights)?;
-                Ok(Box::new(NativeBackend::xnor(&engine, mb)) as Box<dyn Backend>)
+            move |_| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
             },
             RouterConfig {
                 queue_cap: 256,
+                replicas,
                 batcher: BatcherConfig {
                     max_batch: mb,
                     max_delay: Duration::from_millis(3),
@@ -137,9 +310,10 @@ fn main() {
             },
         )
         .unwrap();
-        let (wall, lat) = drive(&router, &ds, 64, 8);
+        let (wall, lat) = drive(&router, &real_images, 64, 8);
         let snap = router.metrics().snapshot();
         table.row(&[
+            format!("{replicas}"),
             format!("{mb}"),
             format!("{:.1}", 64.0 / wall),
             format!("{:.1}", mean(&lat)),

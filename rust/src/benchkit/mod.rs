@@ -12,6 +12,7 @@ use crate::utils::Stopwatch;
 /// One measured routine.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Label of the measured routine.
     pub name: String,
     /// Per-iteration wall time, seconds.
     pub samples: Vec<f64>,
@@ -20,22 +21,27 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Mean per-iteration seconds.
     pub fn mean_s(&self) -> f64 {
         mean(&self.samples)
     }
 
+    /// Fastest iteration, seconds.
     pub fn min_s(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Median iteration, seconds.
     pub fn p50_s(&self) -> f64 {
         percentile(&self.samples, 0.5)
     }
 
+    /// Items per second at the mean iteration time.
     pub fn throughput(&self) -> f64 {
         self.items_per_iter / self.mean_s()
     }
 
+    /// One-line mean/min/p50 summary.
     pub fn summary(&self) -> String {
         format!(
             "{:<28} mean {:>10.4} ms   min {:>10.4} ms   p50 {:>10.4} ms",
@@ -92,6 +98,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with a title row and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -100,11 +107,13 @@ impl Table {
         }
     }
 
+    /// Append one row (cell count must match the headers).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Render to an aligned fixed-width string.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> =
             self.headers.iter().map(|h| h.len()).collect();
@@ -138,6 +147,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }

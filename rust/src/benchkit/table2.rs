@@ -25,6 +25,7 @@ use crate::utils::Stopwatch;
 
 use super::Table;
 
+/// Test-set size the paper's Table 2 timings cover.
 pub const PAPER_TEST_IMAGES: usize = 10_000;
 
 /// Paper-reported seconds (CPU, GPU) per row.
@@ -34,6 +35,7 @@ pub const PAPER: [(&str, f64, f64); 3] = [
     ("Control Group", 1093.0, 11.23),
 ];
 
+/// Sampling knobs for regenerating Table 2.
 #[derive(Debug, Clone)]
 pub struct Table2Options {
     /// Images timed on the native arm for the fast kernels.
@@ -57,20 +59,26 @@ impl Default for Table2Options {
     }
 }
 
+/// One measured Table-2 row.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// Kernel arm label.
     pub name: &'static str,
     /// Extrapolated seconds for the 10k-image test set.
     pub native_s: f64,
+    /// Extrapolated PJRT seconds (NaN in non-`pjrt` builds).
     pub pjrt_s: f64,
 }
 
+/// The regenerated table.
 #[derive(Debug, Clone)]
 pub struct Table2Result {
+    /// Measured rows, paper order.
     pub rows: Vec<Table2Row>,
 }
 
 impl Table2Result {
+    /// The row whose arm name starts with `name_prefix`.
     pub fn row(&self, name_prefix: &str) -> &Table2Row {
         self.rows
             .iter()
@@ -89,6 +97,7 @@ impl Table2Result {
         self.row("Control").native_s / self.row("Our").native_s
     }
 
+    /// Speedup of the xnor kernel over the control group on PJRT.
     pub fn pjrt_speedup(&self) -> f64 {
         self.row("Control").pjrt_s / self.row("Our").pjrt_s
     }

@@ -41,8 +41,12 @@ use super::simd;
 /// Which xnor-gemm implementation to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum XnorImpl {
+    /// Word-at-a-time u32 loop — the paper's reference C kernel and the
+    /// bit-exactness oracle for every other tier.
     Scalar,
+    /// u32 words paired into u64 (half the popcnt ops).
     Word64,
+    /// `Word64` + 4-column register blocking.
     Blocked,
     /// 2 w-rows x 4 x-rows register blocking.
     Blocked2x4,

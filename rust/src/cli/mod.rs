@@ -6,11 +6,16 @@
 
 use std::collections::BTreeMap;
 
+/// Declaration of one `--flag` (value-taking or switch).
 #[derive(Debug, Clone)]
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// Whether the flag consumes the next argument as its value.
     pub takes_value: bool,
+    /// Default value when the flag is absent (value flags only).
     pub default: Option<&'static str>,
+    /// One-line description for `--help`.
     pub help: &'static str,
 }
 
@@ -21,14 +26,19 @@ pub struct Args {
     switches: Vec<String>,
 }
 
+/// Argument-parse failures.
 #[derive(Debug, thiserror::Error)]
 pub enum CliError {
+    /// A flag that was never declared.
     #[error("unknown flag '--{0}'")]
     UnknownFlag(String),
+    /// A value-taking flag at the end of the argument list.
     #[error("flag '--{0}' needs a value")]
     MissingValue(String),
+    /// A value that failed to parse as the requested type.
     #[error("bad value for '--{0}': {1}")]
     BadValue(String, String),
+    /// A bare argument (this grammar has none).
     #[error("unexpected positional argument '{0}'")]
     Positional(String),
 }
@@ -69,14 +79,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Value of a flag (explicit or declared default).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
 
+    /// Value of a flag, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Value of a flag parsed as usize, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -86,6 +99,7 @@ impl Args {
         }
     }
 
+    /// Whether a switch flag was passed.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }

@@ -18,7 +18,7 @@
 use anyhow::Result;
 
 use crate::bitops::XnorImpl;
-use crate::model::{BnnEngine, EngineKernel, Session};
+use crate::model::{BnnEngine, EngineKernel, Plan, Session};
 use crate::runtime::LoadedModel;
 use crate::tensor::Tensor;
 
@@ -28,11 +28,16 @@ use crate::tensor::Tensor;
 /// `infer` call.
 ///
 /// NOT `Send`: PJRT handles contain thread-affine state (`Rc`, raw
-/// pointers), so the router constructs every backend INSIDE its worker
-/// thread via a `Send` factory closure (see [`super::Router::start`]).
+/// pointers), so the router constructs every backend INSIDE its
+/// replica worker thread via a `Send + Sync` factory closure called
+/// once per replica (see [`super::Router::start`]).
 pub trait Backend {
+    /// Stable label for logs and metrics (e.g. `native/xnor/auto`).
     fn name(&self) -> &str;
+    /// Largest batch `infer` accepts (the worker pads up to it).
     fn max_batch(&self) -> usize;
+    /// Run one padded batch; the returned logits borrow backend-owned
+    /// storage and stay valid until the next call.
     fn infer(&mut self, images: &Tensor) -> Result<&Tensor>;
 }
 
@@ -45,11 +50,26 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Compile a fresh plan for `(kernel, batch)` and back it with one
+    /// session.  For a replica pool, prefer compiling once and calling
+    /// [`NativeBackend::from_plan`] per replica.
     pub fn new(engine: &BnnEngine, kernel: EngineKernel, batch: usize)
                -> Self {
         Self {
             name: format!("native/{}", kernel.name()),
             session: engine.plan(kernel, batch).session(),
+        }
+    }
+
+    /// Backend over an already-compiled, shared [`Plan`] — the
+    /// replica-pool path: [`super::Router::start`] calls its factory
+    /// once per replica, and each call mints a fresh [`Session`] (its
+    /// own ping-pong/scratch buffers) from the SAME plan.  One compile,
+    /// one weight set, one persistent thread pool, N sets of buffers.
+    pub fn from_plan(plan: &Plan) -> Self {
+        Self {
+            name: format!("native/{}", plan.kernel().name()),
+            session: plan.session(),
         }
     }
 
@@ -82,6 +102,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap one loaded PJRT executable.
     pub fn new(model: LoadedModel) -> Self {
         Self {
             name: format!("pjrt/{}", model.name),
@@ -110,14 +131,20 @@ impl Backend for PjrtBackend {
 /// artificial delay, so tests can assert routing and batching without a
 /// model.
 pub struct MockBackend {
+    /// Batch capacity reported by `max_batch`.
     pub batch: usize,
+    /// Artificial per-batch latency.
     pub delay: std::time::Duration,
+    /// Number of `infer` calls (shared, so replicated-router tests can
+    /// aggregate across replicas).
     pub calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
     name: String,
     out: Tensor,
 }
 
 impl MockBackend {
+    /// A mock with `batch` capacity and `delay_ms` of artificial
+    /// latency per batch.
     pub fn new(batch: usize, delay_ms: u64) -> Self {
         Self {
             batch,
@@ -126,6 +153,17 @@ impl MockBackend {
             name: format!("mock/b{batch}"),
             out: Tensor::zeros(vec![1, 1]),
         }
+    }
+
+    /// [`MockBackend::new`] with an externally shared call counter —
+    /// a replicated router constructs one backend per replica, so
+    /// tests counting total `infer` calls share the counter up front.
+    pub fn with_calls(
+        batch: usize,
+        delay_ms: u64,
+        calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    ) -> Self {
+        Self { calls, ..Self::new(batch, delay_ms) }
     }
 }
 

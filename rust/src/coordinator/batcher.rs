@@ -11,7 +11,9 @@ use std::time::{Duration, Instant};
 /// Batch-formation policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
+    /// Close a batch once this many requests are waiting.
     pub max_batch: usize,
+    /// ... or once the batch's FIRST request has waited this long.
     pub max_delay: Duration,
 }
 
@@ -28,6 +30,7 @@ pub struct DynamicBatcher<T> {
 }
 
 impl<T> DynamicBatcher<T> {
+    /// Wrap a request receiver with a batch-formation policy.
     pub fn new(rx: mpsc::Receiver<T>, cfg: BatcherConfig) -> Self {
         assert!(cfg.max_batch >= 1);
         Self { rx, cfg }

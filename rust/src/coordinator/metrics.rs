@@ -1,5 +1,19 @@
 //! Serving metrics: counters + a lock-free log-bucketed latency
 //! histogram (offline substrate for an HDR-histogram crate).
+//!
+//! Since the replica-pool redesign the router tracks two levels:
+//!
+//! * **router-wide** — admission (`submitted`/`rejected`), batch
+//!   formation (`batches`, `batched_requests`, `queue_latency`) and
+//!   end-to-end completion (`completed`, `total_latency`);
+//! * **per-replica** — one [`ReplicaMetrics`] entry per worker in the
+//!   pool: batches/requests executed, time spent inside
+//!   `Backend::infer` (`busy_us`, the utilization numerator), a
+//!   per-batch inference-latency histogram, and the live `inflight`
+//!   gauge the batcher uses for least-loaded dispatch.
+//!
+//! Everything is atomic and write-cheap: the request path only does
+//! relaxed `fetch_add`s.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -7,6 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Bucket i covers [2^i, 2^(i+1)) microseconds.
 const BUCKETS: usize = 30;
 
+/// Lock-free log-bucketed latency histogram (microsecond samples).
 #[derive(Default)]
 pub struct Histogram {
     buckets: [AtomicU64; BUCKETS],
@@ -15,6 +30,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Record one sample, in microseconds.
     pub fn record_us(&self, us: u64) {
         let idx = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
@@ -22,10 +38,12 @@ impl Histogram {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean sample value in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -53,34 +71,102 @@ impl Histogram {
     }
 }
 
-/// All coordinator counters.
+/// Counters for one replica worker in the pool.
+#[derive(Default)]
+pub struct ReplicaMetrics {
+    /// Batches executed by this replica.
+    pub batches: AtomicU64,
+    /// Requests carried by those batches.
+    pub requests: AtomicU64,
+    /// Requests currently queued on or running inside this replica —
+    /// the least-loaded dispatch key, incremented by the batcher at
+    /// dispatch and decremented by the worker after the batch finishes.
+    pub inflight: AtomicU64,
+    /// Cumulative wall time spent inside `Backend::infer`, in µs.
+    /// Utilization over a window = Δbusy_us / Δwall_us.
+    pub busy_us: AtomicU64,
+    /// Per-batch `Backend::infer` wall time.
+    pub infer_latency: Histogram,
+}
+
+/// All coordinator counters.  `default()` builds a router-wide-only
+/// instance (no replica entries); the router uses
+/// [`Metrics::with_replicas`].
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests accepted into the admission queue.
     pub submitted: AtomicU64,
+    /// Requests completed with a reply.
     pub completed: AtomicU64,
+    /// Requests shed: admission-queue rejections plus requests dropped
+    /// by a failing backend.
     pub rejected: AtomicU64,
+    /// Batches formed by the batcher.
     pub batches: AtomicU64,
+    /// Requests carried by formed batches.
     pub batched_requests: AtomicU64,
+    /// Submit -> batch-formation latency.
     pub queue_latency: Histogram,
+    /// Submit -> reply latency.
     pub total_latency: Histogram,
+    /// Per-replica counters, indexed by replica id.
+    pub replicas: Vec<ReplicaMetrics>,
+}
+
+/// Point-in-time copy of one [`ReplicaMetrics`].
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    /// Batches executed by this replica.
+    pub batches: u64,
+    /// Requests carried by those batches.
+    pub requests: u64,
+    /// Requests queued on or running inside this replica right now.
+    pub inflight: u64,
+    /// Cumulative µs spent inside `Backend::infer`.
+    pub busy_us: u64,
+    /// Median per-batch inference latency, µs.
+    pub infer_p50_us: u64,
+    /// p99 per-batch inference latency, µs.
+    pub infer_p99_us: u64,
 }
 
 /// A point-in-time copy for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Requests accepted into the admission queue.
     pub submitted: u64,
+    /// Requests completed with a reply.
     pub completed: u64,
+    /// Requests shed (queue-full rejections + backend failures).
     pub rejected: u64,
+    /// Batches formed.
     pub batches: u64,
+    /// Mean requests per formed batch.
     pub mean_batch_size: f64,
+    /// Mean submit -> batch-formation latency, µs.
     pub queue_mean_us: f64,
+    /// p99 submit -> batch-formation latency, µs.
     pub queue_p99_us: u64,
+    /// Mean submit -> reply latency, µs.
     pub latency_mean_us: f64,
+    /// Median submit -> reply latency, µs.
     pub latency_p50_us: u64,
+    /// p99 submit -> reply latency, µs.
     pub latency_p99_us: u64,
+    /// Per-replica snapshots, indexed by replica id.
+    pub replicas: Vec<ReplicaSnapshot>,
 }
 
 impl Metrics {
+    /// Metrics for a router driving `replicas` workers.
+    pub fn with_replicas(replicas: usize) -> Self {
+        Self {
+            replicas: (0..replicas).map(|_| ReplicaMetrics::default()).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Copy every counter into a [`MetricsSnapshot`].
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         MetricsSnapshot {
@@ -99,23 +185,53 @@ impl Metrics {
             latency_mean_us: self.total_latency.mean_us(),
             latency_p50_us: self.total_latency.quantile_us(0.5),
             latency_p99_us: self.total_latency.quantile_us(0.99),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| ReplicaSnapshot {
+                    batches: r.batches.load(Ordering::Relaxed),
+                    requests: r.requests.load(Ordering::Relaxed),
+                    inflight: r.inflight.load(Ordering::Relaxed),
+                    busy_us: r.busy_us.load(Ordering::Relaxed),
+                    infer_p50_us: r.infer_latency.quantile_us(0.5),
+                    infer_p99_us: r.infer_latency.quantile_us(0.99),
+                })
+                .collect(),
         }
     }
 
     /// Prometheus-style exposition for GET /metrics.
     pub fn render_prometheus(&self) -> String {
+        self.render_prometheus_labeled("")
+    }
+
+    /// Prometheus-style exposition with `extra` (e.g. `model="bnn"`,
+    /// may be empty) merged into every line's label set.  Per-replica
+    /// lines additionally carry a `replica="<id>"` label — merging
+    /// happens here, NOT by textual postprocessing in the HTTP layer,
+    /// so labelled and label-free lines stay well-formed.
+    pub fn render_prometheus_labeled(&self, extra: &str) -> String {
         let s = self.snapshot();
-        format!(
-            "bitkernel_requests_submitted {}\n\
-             bitkernel_requests_completed {}\n\
-             bitkernel_requests_rejected {}\n\
-             bitkernel_batches_total {}\n\
-             bitkernel_batch_size_mean {:.3}\n\
-             bitkernel_queue_latency_mean_us {:.1}\n\
-             bitkernel_queue_latency_p99_us {}\n\
-             bitkernel_latency_mean_us {:.1}\n\
-             bitkernel_latency_p50_us {}\n\
-             bitkernel_latency_p99_us {}\n",
+        let labels = |more: &str| -> String {
+            match (extra.is_empty(), more.is_empty()) {
+                (true, true) => String::new(),
+                (true, false) => format!("{{{more}}}"),
+                (false, true) => format!("{{{extra}}}"),
+                (false, false) => format!("{{{extra},{more}}}"),
+            }
+        };
+        let l = labels("");
+        let mut out = format!(
+            "bitkernel_requests_submitted{l} {}\n\
+             bitkernel_requests_completed{l} {}\n\
+             bitkernel_requests_rejected{l} {}\n\
+             bitkernel_batches_total{l} {}\n\
+             bitkernel_batch_size_mean{l} {:.3}\n\
+             bitkernel_queue_latency_mean_us{l} {:.1}\n\
+             bitkernel_queue_latency_p99_us{l} {}\n\
+             bitkernel_latency_mean_us{l} {:.1}\n\
+             bitkernel_latency_p50_us{l} {}\n\
+             bitkernel_latency_p99_us{l} {}\n",
             s.submitted,
             s.completed,
             s.rejected,
@@ -126,7 +242,25 @@ impl Metrics {
             s.latency_mean_us,
             s.latency_p50_us,
             s.latency_p99_us,
-        )
+        );
+        for (i, r) in s.replicas.iter().enumerate() {
+            let rl = labels(&format!("replica=\"{i}\""));
+            out.push_str(&format!(
+                "bitkernel_replica_batches{rl} {}\n\
+                 bitkernel_replica_requests{rl} {}\n\
+                 bitkernel_replica_inflight{rl} {}\n\
+                 bitkernel_replica_busy_us{rl} {}\n\
+                 bitkernel_replica_infer_p50_us{rl} {}\n\
+                 bitkernel_replica_infer_p99_us{rl} {}\n",
+                r.batches,
+                r.requests,
+                r.inflight,
+                r.busy_us,
+                r.infer_p50_us,
+                r.infer_p99_us,
+            ));
+        }
+        out
     }
 }
 
@@ -164,5 +298,30 @@ mod tests {
         m.batched_requests.store(10, Ordering::Relaxed);
         assert_eq!(m.snapshot().mean_batch_size, 2.5);
         assert!(m.render_prometheus().contains("bitkernel_batches_total 4"));
+    }
+
+    #[test]
+    fn replica_counters_surface_in_snapshot_and_prometheus() {
+        let m = Metrics::with_replicas(2);
+        m.replicas[1].batches.store(3, Ordering::Relaxed);
+        m.replicas[1].requests.store(24, Ordering::Relaxed);
+        m.replicas[1].busy_us.store(500, Ordering::Relaxed);
+        m.replicas[1].infer_latency.record_us(100);
+        let s = m.snapshot();
+        assert_eq!(s.replicas.len(), 2);
+        assert_eq!(s.replicas[1].batches, 3);
+        assert_eq!(s.replicas[1].requests, 24);
+        assert_eq!(s.replicas[0].batches, 0);
+        let text = m.render_prometheus();
+        assert!(text.contains("bitkernel_replica_batches{replica=\"1\"} 3"),
+                "{text}");
+        // Merged labels stay well-formed (single brace pair).
+        let labelled = m.render_prometheus_labeled("model=\"bnn\"");
+        assert!(labelled.contains(
+            "bitkernel_replica_requests{model=\"bnn\",replica=\"1\"} 24"
+        ), "{labelled}");
+        assert!(labelled.contains("bitkernel_batches_total{model=\"bnn\"} 0"),
+                "{labelled}");
+        assert!(!labelled.contains("}{"), "{labelled}");
     }
 }

@@ -1,17 +1,26 @@
-//! The serving coordinator: dynamic batching over pluggable inference
-//! backends, with bounded-queue backpressure and latency metrics.
+//! The serving coordinator: dynamic batching over a pool of replicated
+//! inference backends, with bounded-queue backpressure and latency
+//! metrics.
 //!
 //! Request path (all rust, no python):
 //!
 //! ```text
 //!     client -> Router::submit -> bounded queue -> batcher thread
-//!            -> worker (native engine or PJRT executable) -> response
+//!            -(least-loaded)-> replica worker 0..N
+//!               (native Session or PJRT executable)  -> response
 //! ```
 //!
 //! The batcher implements the classic max-size/max-delay policy: a batch
 //! closes when `max_batch` requests are waiting or the oldest request
-//! has waited `max_delay`, whichever comes first — the knob the
-//! `benches/batching.rs` harness sweeps.
+//! has waited `max_delay`, whichever comes first.  Each closed batch is
+//! dispatched to the replica with the fewest in-flight requests; on the
+//! native arm every replica is a [`model::Session`](crate::model::Session)
+//! minted from ONE shared compiled [`Plan`](crate::model::Plan), so the
+//! pool pays one compile and N buffer sets.  `benches/batching.rs`
+//! sweeps replicas × max_batch × max_delay and emits `BENCH_3.json`.
+//!
+//! See `docs/ARCHITECTURE.md` for the full design and
+//! `docs/SERVING.md` for the operator's view of the knobs.
 
 pub mod backend;
 pub mod batcher;
@@ -20,5 +29,6 @@ pub mod router;
 
 pub use backend::{Backend, MockBackend, NativeBackend, PjrtBackend};
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{InferReply, Router, RouterConfig, SubmitError};
+pub use metrics::{Metrics, MetricsSnapshot, ReplicaMetrics, ReplicaSnapshot};
+pub use router::{default_replicas, BackendFactory, InferReply, Router,
+                 RouterConfig, SubmitError};

@@ -1,10 +1,29 @@
-//! Router: bounded admission queue -> dynamic batcher -> backend worker.
+//! Router: bounded admission queue -> dynamic batcher -> replica pool.
 //!
-//! One [`Router`] drives one backend on a dedicated thread.  Submission
-//! is non-blocking with explicit backpressure (`SubmitError::QueueFull`
+//! One [`Router`] drives a pool of `cfg.replicas` worker threads, each
+//! holding its own [`Backend`] (for the native engine: one `Session`
+//! minted per replica from one shared compiled `Plan` — see
+//! [`super::backend::NativeBackend::from_plan`]).  Submission is
+//! non-blocking with explicit backpressure (`SubmitError::QueueFull`
 //! when the admission queue is at capacity); replies come back over
-//! per-request channels.  A serving deployment maps model names to
-//! routers (see `server/`).
+//! per-request channels.
+//!
+//! The pipeline:
+//!
+//! ```text
+//!     submit -> bounded queue -> batcher thread -(least-loaded)->
+//!         replica 0..N worker threads -> per-request reply channels
+//! ```
+//!
+//! The batcher forms max-size/max-delay batches and hands each one to
+//! the replica with the fewest in-flight requests (tracked in
+//! [`Metrics::replicas`]).  Per-replica dispatch channels are bounded
+//! to one queued batch, so when every replica is saturated the
+//! admission queue fills and callers see `QueueFull` — backpressure is
+//! preserved end to end.  [`Router::shutdown`] drains: every accepted
+//! request is batched, dispatched and answered before the threads are
+//! joined.  A serving deployment maps model names to routers (see
+//! `server/`).
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
@@ -19,12 +38,15 @@ use super::backend::Backend;
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 
+/// Elements of one normalized CHW request image (3 * 32 * 32).
 pub const IMAGE_ELEMS: usize = 3 * 32 * 32;
 
 /// A completed inference.
 #[derive(Debug, Clone)]
 pub struct InferReply {
+    /// Argmax class index.
     pub class: usize,
+    /// Raw logits, one per class.
     pub logits: Vec<f32>,
     /// Time from submit to batch formation.
     pub queue_us: u64,
@@ -32,6 +54,7 @@ pub struct InferReply {
     pub total_us: u64,
 }
 
+/// Why a submission was not accepted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
     /// Admission queue at capacity — caller should retry/shed.
@@ -56,131 +79,208 @@ struct Request {
     reply_tx: mpsc::Sender<InferReply>,
 }
 
+/// A formed batch in flight from the batcher to a replica.
+struct Batch {
+    /// When the batcher closed the batch (queue-latency reference).
+    formed: Instant,
+    reqs: Vec<Request>,
+}
+
+/// A backend constructor, called once per replica (with the replica
+/// index) inside that replica's worker thread.
+pub type BackendFactory =
+    dyn Fn(usize) -> anyhow::Result<Box<dyn Backend>> + Send + Sync;
+
+/// Default replica count: one worker per core the host exposes, capped
+/// at 8 (large gemm ops inside a native replica already fan out on the
+/// plan's shared thread pool, so more replicas than cores only adds
+/// contention).
+pub fn default_replicas() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
 /// Router configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct RouterConfig {
     /// Admission queue capacity (backpressure bound).
     pub queue_cap: usize,
+    /// Worker replicas behind the batcher (>= 1).  Defaults to
+    /// [`default_replicas`].
+    pub replicas: usize,
+    /// Batch-formation policy.
     pub batcher: BatcherConfig,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { queue_cap: 256, batcher: BatcherConfig::default() }
+        Self {
+            queue_cap: 256,
+            replicas: default_replicas(),
+            batcher: BatcherConfig::default(),
+        }
     }
 }
 
-/// A running pipeline: queue -> batcher -> backend.
+/// A running pipeline: queue -> batcher -> replica pool.
 pub struct Router {
     tx: Option<mpsc::SyncSender<Request>>,
     metrics: Arc<Metrics>,
-    worker: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     backend_name: String,
+    replicas: usize,
 }
 
 impl Router {
-    /// Spawn the worker thread; the backend is constructed INSIDE it via
-    /// `factory` (PJRT handles are not `Send`).  Construction errors are
-    /// surfaced synchronously.
+    /// Spawn the replica pool and batcher; the backends are constructed
+    /// INSIDE their worker threads via `factory` (PJRT handles are not
+    /// `Send`), called once per replica with the replica index.
+    /// Construction errors on any replica are surfaced synchronously
+    /// and tear the whole pool down.
+    ///
+    /// For the native engine, compile the plan ONCE outside and let
+    /// every call mint a session from it:
+    ///
+    /// ```
+    /// use bitkernel::coordinator::{Backend, NativeBackend, Router,
+    ///                              RouterConfig};
+    /// use bitkernel::model::EngineKernel;
+    /// use bitkernel::bitops::XnorImpl;
+    ///
+    /// let engine = bitkernel::testing::synthetic_engine(
+    ///     [8, 8, 8, 8, 8, 8, 16, 16, 10], 1);
+    /// let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4);
+    /// let router = Router::start(
+    ///     move |_replica| {
+    ///         Ok(Box::new(NativeBackend::from_plan(&plan))
+    ///             as Box<dyn Backend>)
+    ///     },
+    ///     RouterConfig { replicas: 2, ..RouterConfig::default() },
+    /// ).unwrap();
+    /// assert_eq!(router.replicas(), 2);
+    /// router.shutdown();
+    /// ```
     pub fn start<F>(factory: F, cfg: RouterConfig) -> anyhow::Result<Self>
     where
-        F: FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
+        F: Fn(usize) -> anyhow::Result<Box<dyn Backend>>
+            + Send
+            + Sync
+            + 'static,
     {
+        assert!(cfg.replicas >= 1, "need at least one replica");
+        let replicas = cfg.replicas;
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
-        let metrics = Arc::new(Metrics::default());
-        let m = Arc::clone(&metrics);
+        let metrics = Arc::new(Metrics::with_replicas(replicas));
+        let factory = Arc::new(factory);
         let (ready_tx, ready_rx) =
             mpsc::channel::<anyhow::Result<(String, usize)>>();
-        let batcher_cfg = cfg.batcher;
-        let worker = std::thread::Builder::new()
-            .name("bk-worker".to_string())
-            .spawn(move || {
-                let mut backend = match factory() {
-                    Ok(b) => {
-                        let _ = ready_tx
-                            .send(Ok((b.name().to_string(), b.max_batch())));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let bcfg = BatcherConfig {
-                    // Never form batches larger than the backend.
-                    max_batch: batcher_cfg.max_batch.min(backend.max_batch()),
-                    max_delay: batcher_cfg.max_delay,
-                };
-                let batcher = DynamicBatcher::new(rx, bcfg);
-                let cap = backend.max_batch();
-                while let Some(batch) = batcher.next_batch() {
-                    let formed = Instant::now();
-                    let b = batch.len();
-                    m.batches.fetch_add(1, Ordering::Relaxed);
-                    m.batched_requests.fetch_add(b as u64, Ordering::Relaxed);
-                    for r in &batch {
-                        m.queue_latency.record_us(
-                            (formed - r.submitted).as_micros() as u64,
-                        );
-                    }
-                    // Assemble the (padded) image tensor.
-                    let mut data = vec![0.0f32; cap * IMAGE_ELEMS];
-                    for (i, r) in batch.iter().enumerate() {
-                        data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS]
-                            .copy_from_slice(&r.image);
-                    }
-                    let images =
-                        Tensor::new(vec![cap, 3, 32, 32], data);
-                    match backend.infer(&images) {
-                        Ok(logits) => {
-                            let done = Instant::now();
-                            for (i, r) in batch.into_iter().enumerate() {
-                                let row = logits.row(i).to_vec();
-                                let reply = InferReply {
-                                    class: argmax(&row),
-                                    logits: row,
-                                    queue_us: (formed - r.submitted)
-                                        .as_micros()
-                                        as u64,
-                                    total_us: (done - r.submitted)
-                                        .as_micros()
-                                        as u64,
-                                };
-                                m.total_latency
-                                    .record_us(reply.total_us);
-                                m.completed.fetch_add(1, Ordering::Relaxed);
-                                let _ = r.reply_tx.send(reply);
-                            }
-                        }
-                        Err(e) => {
-                            crate::log_error!(
-                                "backend inference failed: {e:#}"
-                            );
-                            // Drop the requests; their reply channels
-                            // disconnect, which callers observe as an
-                            // error.
-                            m.rejected
-                                .fetch_add(b as u64, Ordering::Relaxed);
-                        }
-                    }
+
+        // Per-replica dispatch channels are bounded to ONE queued batch:
+        // enough to keep a replica busy back to back, small enough that
+        // saturation propagates to the admission queue (backpressure).
+        let mut workers = Vec::with_capacity(replicas);
+        let mut batch_txs: Vec<Option<mpsc::SyncSender<Batch>>> =
+            Vec::with_capacity(replicas);
+        for r in 0..replicas {
+            let (btx, brx) = mpsc::sync_channel::<Batch>(1);
+            batch_txs.push(Some(btx));
+            let f = Arc::clone(&factory);
+            let m = Arc::clone(&metrics);
+            let rtx = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bk-replica{r}"))
+                    .spawn(move || replica_loop(r, &*f, brx, &m, rtx))
+                    .expect("spawn replica worker"),
+            );
+        }
+        drop(ready_tx);
+
+        // Collect startup results; the smallest backend capacity bounds
+        // batch formation so every batch fits every replica.
+        let mut backend_name = String::new();
+        let mut min_cap = usize::MAX;
+        for _ in 0..replicas {
+            let result = match ready_rx.recv() {
+                Ok(r) => r,
+                // A worker died without reporting (panicked in factory).
+                Err(_) => Err(anyhow::anyhow!(
+                    "replica worker died during startup"
+                )),
+            };
+            match result {
+                Ok((name, cap)) => {
+                    backend_name = name;
+                    min_cap = min_cap.min(cap);
                 }
-            })
-            .expect("spawn worker");
-        let (backend_name, _max_batch) = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
-        Ok(Self { tx: Some(tx), metrics, worker: Some(worker), backend_name })
+                Err(e) => {
+                    // Tear the pool down: dropping the dispatch channels
+                    // ends every replica that did start.
+                    drop(batch_txs);
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+
+        let bcfg = BatcherConfig {
+            // Never form batches larger than the smallest backend.
+            max_batch: cfg.batcher.max_batch.min(min_cap),
+            max_delay: cfg.batcher.max_delay,
+        };
+        let m = Arc::clone(&metrics);
+        let batcher = std::thread::Builder::new()
+            .name("bk-batcher".to_string())
+            .spawn(move || batcher_loop(rx, bcfg, batch_txs, &m))
+            .expect("spawn batcher");
+
+        Ok(Self {
+            tx: Some(tx),
+            metrics,
+            batcher: Some(batcher),
+            workers,
+            backend_name,
+            replicas,
+        })
     }
 
+    /// Label of the backend the pool runs (all replicas share one
+    /// factory, hence one label).
     pub fn backend_name(&self) -> &str {
         &self.backend_name
     }
 
+    /// Number of worker replicas in the pool.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Shared handle to the router's counters.
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
     }
 
     /// Non-blocking submit; returns the reply channel.
+    ///
+    /// ```
+    /// use bitkernel::coordinator::{Backend, MockBackend, Router,
+    ///                              RouterConfig};
+    ///
+    /// let router = Router::start(
+    ///     |_replica| Ok(Box::new(MockBackend::new(4, 0))
+    ///                   as Box<dyn Backend>),
+    ///     RouterConfig { replicas: 2, ..RouterConfig::default() },
+    /// ).unwrap();
+    /// let rx = router.submit(vec![0.5; 3 * 32 * 32]).unwrap();
+    /// let reply = rx.recv().unwrap();
+    /// assert_eq!(reply.logits.len(), 10);
+    /// router.shutdown();
+    /// ```
     pub fn submit(
         &self,
         image_chw: Vec<f32>,
@@ -214,10 +314,19 @@ impl Router {
         rx.recv().map_err(|_| SubmitError::Shutdown)
     }
 
-    /// Graceful shutdown: drain the queue, then join the worker.
+    /// Graceful drain: stop admissions, let the batcher flush every
+    /// queued request through the replicas, then join all threads.  No
+    /// accepted request is dropped.
     pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -225,9 +334,155 @@ impl Router {
 
 impl Drop for Router {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.drain();
+    }
+}
+
+/// One replica worker: construct the backend, report readiness, then
+/// execute dispatched batches until the batcher hangs up.
+fn replica_loop(
+    replica: usize,
+    factory: &BackendFactory,
+    brx: mpsc::Receiver<Batch>,
+    m: &Metrics,
+    ready_tx: mpsc::Sender<anyhow::Result<(String, usize)>>,
+) {
+    let mut backend = match factory(replica) {
+        Ok(b) => {
+            let _ = ready_tx.send(Ok((b.name().to_string(), b.max_batch())));
+            b
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    drop(ready_tx);
+    let cap = backend.max_batch();
+    let rm = &m.replicas[replica];
+    while let Ok(batch) = brx.recv() {
+        let Batch { formed, reqs } = batch;
+        let b = reqs.len();
+        // Assemble the (padded) image tensor.
+        let mut data = vec![0.0f32; cap * IMAGE_ELEMS];
+        for (i, r) in reqs.iter().enumerate() {
+            data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS]
+                .copy_from_slice(&r.image);
+        }
+        let images = Tensor::new(vec![cap, 3, 32, 32], data);
+        let infer_sw = Instant::now();
+        let result = backend.infer(&images);
+        let infer_us = infer_sw.elapsed().as_micros() as u64;
+        rm.batches.fetch_add(1, Ordering::Relaxed);
+        rm.requests.fetch_add(b as u64, Ordering::Relaxed);
+        rm.busy_us.fetch_add(infer_us, Ordering::Relaxed);
+        rm.infer_latency.record_us(infer_us);
+        match result {
+            Ok(logits) => {
+                let done = Instant::now();
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let row = logits.row(i).to_vec();
+                    let reply = InferReply {
+                        class: argmax(&row),
+                        logits: row,
+                        queue_us: (formed - r.submitted).as_micros() as u64,
+                        total_us: (done - r.submitted).as_micros() as u64,
+                    };
+                    m.total_latency.record_us(reply.total_us);
+                    m.completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply_tx.send(reply);
+                }
+            }
+            Err(e) => {
+                crate::log_error!(
+                    "replica {replica} inference failed: {e:#}"
+                );
+                // Drop the requests; their reply channels disconnect,
+                // which callers observe as an error.
+                m.rejected.fetch_add(b as u64, Ordering::Relaxed);
+            }
+        }
+        rm.inflight.fetch_sub(b as u64, Ordering::Relaxed);
+    }
+}
+
+/// The batcher thread: form batches, dispatch each to the least-loaded
+/// replica.  Exits (dropping the dispatch channels, which drains the
+/// workers) when every submitter hung up and the queue is empty.
+fn batcher_loop(
+    rx: mpsc::Receiver<Request>,
+    bcfg: BatcherConfig,
+    mut batch_txs: Vec<Option<mpsc::SyncSender<Batch>>>,
+    m: &Metrics,
+) {
+    let batcher = DynamicBatcher::new(rx, bcfg);
+    while let Some(reqs) = batcher.next_batch() {
+        let formed = Instant::now();
+        let b = reqs.len();
+        m.batches.fetch_add(1, Ordering::Relaxed);
+        m.batched_requests.fetch_add(b as u64, Ordering::Relaxed);
+        for r in &reqs {
+            m.queue_latency
+                .record_us((formed - r.submitted).as_micros() as u64);
+        }
+        dispatch(Batch { formed, reqs }, &mut batch_txs, m);
+    }
+}
+
+/// Least-loaded dispatch: try replicas in ascending in-flight order
+/// without blocking; if every dispatch slot is full, block on the
+/// least-loaded live replica (which stalls the batcher and, in turn,
+/// fills the admission queue — the backpressure path).  Replicas whose
+/// worker died are retired from the rotation.
+fn dispatch(
+    mut batch: Batch,
+    batch_txs: &mut [Option<mpsc::SyncSender<Batch>>],
+    m: &Metrics,
+) {
+    let b = batch.reqs.len() as u64;
+    loop {
+        let mut order: Vec<usize> = (0..batch_txs.len())
+            .filter(|&r| batch_txs[r].is_some())
+            .collect();
+        if order.is_empty() {
+            // Every replica died: shed the batch (reply channels drop).
+            m.rejected.fetch_add(b, Ordering::Relaxed);
+            return;
+        }
+        order.sort_by_key(|&r| {
+            m.replicas[r].inflight.load(Ordering::Relaxed)
+        });
+        // Pass 1: non-blocking, in load order.
+        for &r in &order {
+            let rm = &m.replicas[r];
+            rm.inflight.fetch_add(b, Ordering::Relaxed);
+            match batch_txs[r].as_ref().unwrap().try_send(batch) {
+                Ok(()) => return,
+                Err(mpsc::TrySendError::Full(back)) => {
+                    rm.inflight.fetch_sub(b, Ordering::Relaxed);
+                    batch = back;
+                }
+                Err(mpsc::TrySendError::Disconnected(back)) => {
+                    rm.inflight.fetch_sub(b, Ordering::Relaxed);
+                    batch_txs[r] = None;
+                    batch = back;
+                }
+            }
+        }
+        // Pass 2: every slot full — block on the least-loaded replica.
+        let r = order[0];
+        if batch_txs[r].is_none() {
+            continue; // retired during pass 1; recompute the order
+        }
+        let rm = &m.replicas[r];
+        rm.inflight.fetch_add(b, Ordering::Relaxed);
+        match batch_txs[r].as_ref().unwrap().send(batch) {
+            Ok(()) => return,
+            Err(mpsc::SendError(back)) => {
+                rm.inflight.fetch_sub(b, Ordering::Relaxed);
+                batch_txs[r] = None;
+                batch = back;
+            }
         }
     }
 }
@@ -236,6 +491,7 @@ impl Drop for Router {
 mod tests {
     use super::*;
     use crate::coordinator::backend::MockBackend;
+    use std::sync::atomic::AtomicUsize;
     use std::time::Duration;
 
     fn image(v: f32) -> Vec<f32> {
@@ -245,7 +501,7 @@ mod tests {
     #[test]
     fn submit_roundtrip() {
         let router = Router::start(
-            || Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
+            |_| Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
             RouterConfig::default(),
         )
         .unwrap();
@@ -256,16 +512,28 @@ mod tests {
         let snap = router.metrics().snapshot();
         assert_eq!(snap.submitted, 1);
         assert_eq!(snap.completed, 1);
+        assert_eq!(snap.replicas.len(), router.replicas());
+        assert_eq!(
+            snap.replicas.iter().map(|r| r.requests).sum::<u64>(),
+            1
+        );
     }
 
     #[test]
     fn batches_multiple_requests() {
-        let backend = MockBackend::new(8, 5);
-        let calls = Arc::clone(&backend.calls);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = Arc::clone(&calls);
         let router = Router::start(
-            move || Ok(Box::new(backend) as Box<dyn Backend>),
+            move |_| {
+                Ok(Box::new(MockBackend::with_calls(
+                    8,
+                    5,
+                    Arc::clone(&calls2),
+                )) as Box<dyn Backend>)
+            },
             RouterConfig {
                 queue_cap: 64,
+                replicas: 1, // a single replica pins the batch count
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_delay: Duration::from_millis(50),
@@ -289,9 +557,10 @@ mod tests {
     fn backpressure_rejects_when_full() {
         // Slow backend + tiny queue -> QueueFull.
         let router = Router::start(
-            || Ok(Box::new(MockBackend::new(1, 50)) as Box<dyn Backend>),
+            |_| Ok(Box::new(MockBackend::new(1, 50)) as Box<dyn Backend>),
             RouterConfig {
                 queue_cap: 2,
+                replicas: 1,
                 batcher: BatcherConfig {
                     max_batch: 1,
                     max_delay: Duration::from_millis(1),
@@ -316,9 +585,43 @@ mod tests {
     }
 
     #[test]
+    fn least_loaded_dispatch_spreads_across_replicas() {
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::new(1, 10)) as Box<dyn Backend>),
+            RouterConfig {
+                queue_cap: 64,
+                replicas: 4,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..16)
+            .map(|_| router.submit(image(0.0)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let snap = router.metrics().snapshot();
+        assert_eq!(snap.completed, 16);
+        assert_eq!(
+            snap.replicas.iter().map(|r| r.requests).sum::<u64>(),
+            16
+        );
+        let used = snap.replicas.iter().filter(|r| r.requests > 0).count();
+        assert!(used >= 2, "dispatch never spread: {:?}", snap.replicas);
+        // Everything settled: no in-flight work left behind.
+        assert!(snap.replicas.iter().all(|r| r.inflight == 0));
+        assert!(snap.replicas.iter().all(|r| r.busy_us > 0
+                || r.requests == 0));
+    }
+
+    #[test]
     fn shutdown_joins_cleanly() {
         let router = Router::start(
-            || Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>),
+            |_| Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>),
             RouterConfig::default(),
         )
         .unwrap();
@@ -330,12 +633,27 @@ mod tests {
     #[test]
     fn submit_after_shutdown_errors() {
         let router = Router::start(
-            || Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>),
+            |_| Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>),
             RouterConfig::default(),
         )
         .unwrap();
         let metrics = router.metrics();
         router.shutdown();
         let _ = metrics.snapshot(); // metrics survive shutdown
+    }
+
+    #[test]
+    fn factory_failure_on_any_replica_is_synchronous() {
+        let r = Router::start(
+            |replica| {
+                if replica == 1 {
+                    anyhow::bail!("replica 1 refused")
+                }
+                Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>)
+            },
+            RouterConfig { replicas: 2, ..RouterConfig::default() },
+        );
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.err().unwrap()).contains("refused"));
     }
 }

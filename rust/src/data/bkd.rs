@@ -16,12 +16,17 @@ use crate::tensor::Tensor;
 /// An in-memory image dataset (uint8 HWC + labels).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Number of images.
     pub count: usize,
+    /// Image height in pixels.
     pub height: usize,
+    /// Image width in pixels.
     pub width: usize,
+    /// Color channels per pixel.
     pub channels: usize,
     /// count * h*w*c bytes, HWC row-major per image.
     pub pixels: Vec<u8>,
+    /// One class label per image.
     pub labels: Vec<u8>,
 }
 
@@ -32,6 +37,7 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
 }
 
 impl Dataset {
+    /// Parse a BKD1 stream.
     pub fn parse(mut r: impl Read) -> Result<Self> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
@@ -55,6 +61,7 @@ impl Dataset {
         Ok(Self { count, height, width, channels, pixels, labels })
     }
 
+    /// Load a BKD1 file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let f = std::fs::File::open(path)

@@ -8,8 +8,11 @@
 
 use crate::utils::Rng;
 
+/// Generated image height.
 pub const H: usize = 32;
+/// Generated image width.
 pub const W: usize = 32;
+/// Generated image channels.
 pub const C: usize = 3;
 
 /// One uint8 HWC image of the given class (0..10).

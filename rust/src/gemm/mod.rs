@@ -220,12 +220,15 @@ pub fn gemm_simd(a: &[f32], bt: &[f32], out: &mut [f32], d: usize,
 /// Which float kernel to run (mirrors [`crate::bitops::XnorImpl`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GemmImpl {
+    /// Plain dot-product loops (the paper's Control Group).
     Naive,
+    /// Cache/register-blocked kernel.
     Blocked,
     /// AVX2 when detected, else the portable 8-wide fallback.
     Simd,
 }
 
+/// Dispatch one `[D, k] x [N, k]` float gemm to the selected kernel.
 pub fn gemm_f32(
     a: &[f32],
     bt: &[f32],

@@ -31,10 +31,19 @@
 //!   compiled [`model::Plan`]/[`model::Session`] execution path
 //! * [`data`]   — ShapeSet-10 (BKD1) loading + native generation
 //! * [`runtime`] — PJRT client wrapper + artifact manifest/registry
-//! * [`coordinator`] — dynamic batcher, workers, router, metrics
+//! * [`coordinator`] — dynamic batcher, replica pool, router, metrics
 //! * [`server`] — minimal HTTP/1.1 front-end
 //! * [`utils`], [`benchkit`], [`testing`] — substrates built in-repo
 //!   (offline environment: no tokio/clap/criterion/proptest)
+//!
+//! The prose version of this map — request lifecycle, the Plan/Session
+//! compile-once contract, the replica pool — lives in
+//! `docs/ARCHITECTURE.md`; the operator's guide to the HTTP server is
+//! `docs/SERVING.md`.
+
+// Public API documentation is part of the tier-1 bar: `scripts/ci.sh`
+// runs `cargo doc --no-deps` with rustdoc warnings denied.
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod bitops;

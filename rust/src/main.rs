@@ -129,6 +129,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                    help: "batch formation deadline" },
         FlagSpec { name: "queue-cap", takes_value: true, default: Some("256"),
                    help: "admission queue capacity" },
+        FlagSpec { name: "replicas", takes_value: true, default: Some("0"),
+                   help: "worker replicas sharing one compiled plan \
+                          (0 = one per core, capped at 8)" },
         FlagSpec { name: "threads", takes_value: true, default: Some("4"),
                    help: "HTTP handler threads" },
         COMMON[1].clone(),
@@ -143,8 +146,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let weights = args.get_or("weights", "small").to_string();
     let batch = args.get_usize("batch", 8)?;
     let delay = args.get_usize("max-delay-ms", 5)?;
+    let replicas = match args.get_usize("replicas", 0)? {
+        0 => bitkernel::coordinator::default_replicas(),
+        n => n,
+    };
     let cfg = RouterConfig {
         queue_cap: args.get_usize("queue-cap", 256)?,
+        replicas,
         batcher: BatcherConfig {
             max_batch: batch,
             max_delay: std::time::Duration::from_millis(delay as u64),
@@ -167,7 +175,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     )
 }
 
-/// Wire up one backend per the `--backend` spec string.
+/// Wire up one replica pool per the `--backend` spec string.
 fn start_backend(
     artifacts: &str,
     backend: &str,
@@ -180,15 +188,17 @@ fn start_backend(
     match backend {
         b if b.starts_with("native-") => {
             let kernel = parse_kernel(&b["native-".len()..])?;
+            // Compile ONCE on the startup path; every replica mints its
+            // own session (own buffers) from this shared plan.  The
+            // engine itself need not outlive plan compilation — the
+            // plan Arc-shares its weights.
+            let manifest = bitkernel::runtime::Manifest::load(&artifacts)?;
+            let path = manifest.weight_file(&weights_name)?;
+            let engine = BnnEngine::load(path)?;
+            let plan = engine.plan(kernel, batch);
             Router::start(
-                move || {
-                    let manifest =
-                        bitkernel::runtime::Manifest::load(&artifacts)?;
-                    let path = manifest.weight_file(&weights_name)?;
-                    // The compiled plan shares the engine's weights; the
-                    // engine itself need not outlive backend creation.
-                    let engine = BnnEngine::load(path)?;
-                    Ok(Box::new(NativeBackend::new(&engine, kernel, batch))
+                move |_replica| {
+                    Ok(Box::new(NativeBackend::from_plan(&plan))
                         as Box<dyn Backend>)
                 },
                 cfg,
@@ -196,8 +206,10 @@ fn start_backend(
         }
         b if b.starts_with("pjrt-") => {
             let variant = b["pjrt-".len()..].to_string();
+            // PJRT handles are thread-affine: each replica compiles its
+            // own executable inside its worker thread.
             Router::start(
-                move || {
+                move |_replica| {
                     let mut rt = Runtime::new(&artifacts)?;
                     let name = rt
                         .manifest

@@ -114,6 +114,7 @@ pub(crate) struct FcLayer {
 
 /// A loaded, ready-to-run BNN.
 pub struct BnnEngine {
+    /// The architecture, rebuilt from the weight file's widths vector.
     pub cfg: ModelConfig,
     pub(crate) convs: Vec<ConvLayer>,
     pub(crate) fcs: Vec<FcLayer>,

@@ -6,18 +6,27 @@
 //! the full spec list from it so rust and python can never drift on
 //! scale arithmetic.
 
+/// Input image height and width.
 pub const IMAGE_HW: usize = 32;
+/// Input image channels.
 pub const IMAGE_C: usize = 3;
+/// Output classes.
 pub const NUM_CLASSES: usize = 10;
 
 /// One convolutional layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConvSpec {
+    /// Layer name (`conv1`..`conv6`), the weight-file key prefix.
     pub name: String,
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Square kernel side.
     pub ksize: usize,
+    /// Stride (both dims).
     pub stride: usize,
+    /// Zero padding (both dims).
     pub pad: usize,
     /// 2x2 max-pool after this conv.
     pub pool: bool,
@@ -35,15 +44,20 @@ impl ConvSpec {
 /// One fully-connected layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FcSpec {
+    /// Layer name (`fc1`..`fc3`), the weight-file key prefix.
     pub name: String,
+    /// Input width.
     pub din: usize,
+    /// Output width.
     pub dout: usize,
 }
 
 /// The whole network.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelConfig {
+    /// Conv layers, in order.
     pub convs: Vec<ConvSpec>,
+    /// Fully-connected layers, in order.
     pub fcs: Vec<FcSpec>,
 }
 

@@ -20,35 +20,44 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+/// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
 /// One named tensor from a BKW1 file.
 #[derive(Debug, Clone)]
 pub struct WeightTensor {
+    /// Element type.
     pub dtype: Dtype,
+    /// Dimension sizes.
     pub shape: Vec<usize>,
     /// Raw little-endian words; reinterpret per `dtype`.
     pub words: Vec<u32>,
 }
 
 impl WeightTensor {
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The elements as f32 (errors on non-f32 tensors).
     pub fn as_f32(&self) -> Result<Vec<f32>> {
         ensure!(self.dtype == Dtype::F32, "tensor is not f32");
         Ok(self.words.iter().map(|&w| f32::from_bits(w)).collect())
     }
 
+    /// The raw words of a u32 tensor (errors on non-u32 tensors).
     pub fn as_u32(&self) -> Result<&[u32]> {
         ensure!(self.dtype == Dtype::U32, "tensor is not u32");
         Ok(&self.words)
@@ -85,6 +94,7 @@ impl WeightFile {
         Self { tensors }
     }
 
+    /// Parse a BKW1 stream.
     pub fn parse(mut r: impl Read) -> Result<Self> {
         let magic = read_exact(&mut r, 4)?;
         ensure!(&magic == b"BKW1", "bad magic {magic:?}");
@@ -120,6 +130,7 @@ impl WeightFile {
         Ok(Self { tensors })
     }
 
+    /// Load a BKW1 file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let f = std::fs::File::open(path)
@@ -127,20 +138,24 @@ impl WeightFile {
         Self::parse(std::io::BufReader::new(f))
     }
 
+    /// Look one tensor up by name.
     pub fn get(&self, name: &str) -> Result<&WeightTensor> {
         self.tensors
             .get(name)
             .with_context(|| format!("missing tensor '{name}'"))
     }
 
+    /// Every tensor name, sorted.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.tensors.keys().map(|s| s.as_str())
     }
 
+    /// Number of tensors.
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// Whether the file holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }

@@ -165,10 +165,13 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// The kernel arm this plan was compiled for.
     pub fn kernel(&self) -> EngineKernel {
         self.inner.kernel
     }
 
+    /// Largest batch any session of this plan accepts (buffers are
+    /// sized for it).
     pub fn max_batch(&self) -> usize {
         self.inner.max_batch
     }
@@ -222,6 +225,31 @@ impl BnnEngine {
     /// Lower the network into a flat op program for `kernel`, sized for
     /// batches up to `max_batch`.  All per-layer kernel dispatch happens
     /// here, once; [`Session::run`] just walks the ops.
+    ///
+    /// A `Plan` is an `Arc` around the compiled program: `Clone` is a
+    /// refcount bump, and the plan is `Send + Sync`, so a replica pool
+    /// shares ONE plan and mints one [`Session`] per worker thread
+    /// (compile once, N buffer sets — see
+    /// `coordinator::NativeBackend::from_plan`).
+    ///
+    /// ```
+    /// use bitkernel::bitops::XnorImpl;
+    /// use bitkernel::model::EngineKernel;
+    /// use bitkernel::tensor::Tensor;
+    ///
+    /// // Synthetic weights: no artifacts needed.
+    /// let engine = bitkernel::testing::synthetic_engine(
+    ///     [8, 8, 8, 8, 8, 8, 16, 16, 10], 7);
+    ///
+    /// // 1. compile once ...
+    /// let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4);
+    /// // 2. ... mint a session (preallocated buffers) ...
+    /// let mut session = plan.session();
+    /// // 3. ... serve: zero steady-state allocation.
+    /// let images = Tensor::zeros(vec![2, 3, 32, 32]);
+    /// let logits = session.run(&images);
+    /// assert_eq!(logits.shape(), &[2, 10]);
+    /// ```
     pub fn plan(&self, kernel: EngineKernel, max_batch: usize) -> Plan {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         assert!(!self.convs.is_empty() && !self.fcs.is_empty(),
@@ -481,10 +509,12 @@ pub struct Session {
 }
 
 impl Session {
+    /// The kernel arm of the plan this session executes.
     pub fn kernel(&self) -> EngineKernel {
         self.plan.kernel
     }
 
+    /// Largest batch `run` accepts.
     pub fn max_batch(&self) -> usize {
         self.plan.max_batch
     }
@@ -726,5 +756,22 @@ impl Session {
         }
         debug_assert_eq!(self.out.shape(), &[b, NUM_CLASSES]);
         stages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The replica pool shares one `Plan` across worker threads and
+    /// moves each minted `Session` into its own thread — pin the auto
+    /// traits that make that legal (a regression here would break
+    /// `coordinator::Router` at its call sites, far from the cause).
+    #[test]
+    fn plan_is_shareable_and_sessions_are_movable() {
+        fn send_sync<T: Send + Sync>() {}
+        fn send<T: Send>() {}
+        send_sync::<Plan>();
+        send::<Session>();
     }
 }

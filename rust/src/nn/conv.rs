@@ -34,10 +34,12 @@ pub enum ConvWeights {
 }
 
 impl ConvWeights {
+    /// Wrap a float weight matrix (takes ownership, Arc-shares it).
     pub fn float(v: Vec<f32>) -> Self {
         Self::Float(Arc::new(v))
     }
 
+    /// Wrap a pre-packed weight matrix (takes ownership, Arc-shares it).
     pub fn packed(p: PackedMatrix) -> Self {
         Self::Packed(Arc::new(p))
     }
@@ -57,14 +59,20 @@ pub enum ConvKernel {
 /// Convolution parameters (square kernels, as in the BNN).
 #[derive(Debug, Clone, Copy)]
 pub struct ConvParams {
+    /// Output channels.
     pub cout: usize,
+    /// Input channels.
     pub cin: usize,
+    /// Square kernel side.
     pub ksize: usize,
+    /// Stride (both dims).
     pub stride: usize,
+    /// Zero padding (both dims).
     pub pad: usize,
 }
 
 impl ConvParams {
+    /// Gemm reduction length K = Cin * k * k.
     pub fn k(&self) -> usize {
         self.cin * self.ksize * self.ksize
     }
@@ -73,8 +81,11 @@ impl ConvParams {
 /// Scratch buffers reused across calls on the per-request hot path.
 #[derive(Debug, Default)]
 pub struct ConvScratch {
+    /// Packed im2col column bits (xnor arm).
     pub cols_packed: Option<PackedMatrix>,
+    /// i32 gemm output scratch (xnor arm).
     pub gemm_i32: Vec<i32>,
+    /// f32 gemm output scratch (float arms).
     pub gemm_f32: Vec<f32>,
 }
 

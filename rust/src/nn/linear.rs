@@ -14,7 +14,9 @@ use super::ops::sign_inplace;
 /// Kernel choice for a linear layer (same arms as conv).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinearKernel {
+    /// Sign+pack the activations, xnor-bitcount gemm.
     Xnor(XnorImpl),
+    /// Sign the activations, float gemm on {-1,+1}.
     FloatBinarized(GemmImpl),
 }
 

@@ -11,6 +11,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::utils::json::Json;
 
+/// What an HLO parameter is built from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InputKind {
     /// Built from the weight file.
@@ -19,6 +20,7 @@ pub enum InputKind {
     Image,
 }
 
+/// How to build an HLO parameter from its source tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Transform {
     /// Load `source` as-is.
@@ -30,55 +32,87 @@ pub enum Transform {
 /// One HLO parameter of a lowered model.
 #[derive(Debug, Clone)]
 pub struct InputDesc {
+    /// Parameter name in the HLO signature.
     pub name: String,
+    /// Weight-derived or the image slot.
     pub kind: InputKind,
-    pub dtype: String, // "f32" | "u32"
+    /// Element type: "f32" | "u32".
+    pub dtype: String,
+    /// Parameter shape.
     pub shape: Vec<usize>,
+    /// Recipe from source tensor to parameter.
     pub transform: Transform,
+    /// Weight-file tensor name (`None` for the image slot).
     pub source: Option<String>,
+    /// Unpadded reduction length for packed parameters.
     pub logical_k: Option<usize>,
 }
 
 /// One whole-model executable.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Unique model name.
     pub name: String,
+    /// HLO text file, relative to the artifacts dir.
     pub file: String,
-    pub variant: String, // xnor | control | optimized
+    /// Kernel arm: xnor | control | optimized.
+    pub variant: String,
+    /// Width scale relative to the paper's full model.
     pub scale: f64,
+    /// Batch size baked at AOT time.
     pub batch: usize,
-    pub weights: String, // "small" | "full"
+    /// Weight set: "small" | "full".
+    pub weights: String,
+    /// HLO parameters, in signature order.
     pub inputs: Vec<InputDesc>,
+    /// Logits shape.
     pub output_shape: Vec<usize>,
 }
 
 /// One kernel micro executable.
 #[derive(Debug, Clone)]
 pub struct KernelEntry {
+    /// Unique kernel name.
     pub name: String,
+    /// HLO text file, relative to the artifacts dir.
     pub file: String,
-    pub kernel: String, // xnor | control | optimized
-    pub tag: String,    // conv2 | conv4 | conv6 | fc1b8
+    /// Kernel arm: xnor | control | optimized.
+    pub kernel: String,
+    /// Layer tag: conv2 | conv4 | conv6 | fc1b8.
+    pub tag: String,
+    /// Output rows.
     pub d: usize,
+    /// Reduction length.
     pub k: usize,
+    /// Output columns.
     pub n: usize,
 }
 
 /// Weight-file metadata.
 #[derive(Debug, Clone)]
 pub struct WeightsEntry {
+    /// Weight-set name ("small" | "full").
     pub name: String,
+    /// BKW1 file, relative to the artifacts dir.
     pub file: String,
+    /// Width scale relative to the paper's full model.
     pub scale: f64,
+    /// Whether the weights were actually trained.
     pub trained: bool,
 }
 
+/// The parsed artifacts/manifest.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and every relative path) lives in.
     pub dir: PathBuf,
+    /// Whole-model executables.
     pub models: Vec<ModelEntry>,
+    /// Kernel micro executables.
     pub kernels: Vec<KernelEntry>,
+    /// Weight files.
     pub weights: Vec<WeightsEntry>,
+    /// Test-dataset file, when present.
     pub test_dataset: Option<String>,
 }
 
@@ -99,6 +133,7 @@ fn str_of(j: &Json, key: &str) -> Result<String> {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -186,6 +221,7 @@ impl Manifest {
         Ok(Self { dir, models, kernels, weights, test_dataset })
     }
 
+    /// Look a model up by exact name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .iter()
@@ -209,6 +245,7 @@ impl Manifest {
             })
     }
 
+    /// Absolute path of the named weight set's BKW1 file.
     pub fn weight_file(&self, name: &str) -> Result<PathBuf> {
         let w = self
             .weights

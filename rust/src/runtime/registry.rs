@@ -21,9 +21,13 @@ use super::manifest::{InputKind, Manifest, ModelEntry, Transform};
 
 /// A compiled whole-model executable with its weight literals baked.
 pub struct LoadedModel {
+    /// Model name from the manifest.
     pub name: String,
+    /// Kernel arm: xnor | control | optimized.
     pub variant: String,
+    /// Batch size baked at AOT time.
     pub batch: usize,
+    /// Logits shape.
     pub output_shape: Vec<usize>,
     exe: xla::PjRtLoadedExecutable,
     /// Literals for every HLO parameter; the image slot is rebuilt per
@@ -63,6 +67,7 @@ impl LoadedModel {
 
 /// PJRT client + manifest + loaded-model cache.
 pub struct Runtime {
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     weight_files: HashMap<String, WeightFile>,
@@ -70,6 +75,7 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Open the PJRT CPU client over an artifacts directory.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(&artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
@@ -217,6 +223,7 @@ impl Runtime {
         Ok(self.client.compile(&comp)?)
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -1,4 +1,5 @@
-//! No-PJRT stand-ins for [`super::registry`], compiled when the `pjrt`
+//! No-PJRT stand-ins for `super::registry` (absent in this
+//! configuration, hence no link), compiled when the `pjrt`
 //! feature is off (the default: the xla native library is a heavy,
 //! often-unavailable build dependency, and only the Table-2
 //! "accelerator" arm needs it).
@@ -24,15 +25,20 @@ const UNAVAILABLE: &str =
 /// Stub of the compiled whole-model executable.  Unconstructible: the
 /// only producer is [`Runtime`], whose constructor always errors here.
 pub struct LoadedModel {
+    /// Model name from the manifest.
     pub name: String,
+    /// Kernel arm: xnor | control | optimized.
     pub variant: String,
+    /// Batch size baked at AOT time.
     pub batch: usize,
+    /// Logits shape.
     pub output_shape: Vec<usize>,
     #[allow(dead_code)]
     unconstructible: (),
 }
 
 impl LoadedModel {
+    /// Always errors (built without `pjrt`).
     pub fn infer(&self, _images: &Tensor) -> Result<Tensor> {
         bail!(UNAVAILABLE)
     }
@@ -40,18 +46,22 @@ impl LoadedModel {
 
 /// Stub of the PJRT client + model registry.
 pub struct Runtime {
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
 }
 
 impl Runtime {
+    /// Always errors (built without `pjrt`).
     pub fn new(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         bail!(UNAVAILABLE)
     }
 
+    /// Always errors (built without `pjrt`).
     pub fn load_model(&mut self, _name: &str) -> Result<&LoadedModel> {
         bail!(UNAVAILABLE)
     }
 
+    /// Always errors (built without `pjrt`).
     pub fn load_by(
         &mut self,
         _weights: &str,
@@ -61,10 +71,12 @@ impl Runtime {
         bail!(UNAVAILABLE)
     }
 
+    /// Always errors (built without `pjrt`).
     pub fn take_model(&mut self, _name: &str) -> Result<LoadedModel> {
         bail!(UNAVAILABLE)
     }
 
+    /// Reports the platform as unavailable.
     pub fn platform(&self) -> String {
         "unavailable (built without pjrt)".to_string()
     }

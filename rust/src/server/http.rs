@@ -9,12 +9,15 @@ use anyhow::{bail, ensure, Context, Result};
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
+    /// Uppercased request method.
     pub method: String,
     /// Path without the query string.
     pub path: String,
     /// Parsed query parameters.
     pub query: BTreeMap<String, String>,
+    /// Headers with lowercased names.
     pub headers: BTreeMap<String, String>,
+    /// Raw request body.
     pub body: Vec<u8>,
 }
 
@@ -71,6 +74,8 @@ impl HttpRequest {
         Ok(Some(Self { method, path, query, headers, body }))
     }
 
+    /// Whether the client wants the connection kept open (HTTP/1.1
+    /// default unless `Connection: close`).
     pub fn wants_keep_alive(&self) -> bool {
         self.headers
             .get("connection")
@@ -82,12 +87,16 @@ impl HttpRequest {
 /// An HTTP response under construction.
 #[derive(Debug, Clone)]
 pub struct HttpResponse {
+    /// Status code.
     pub status: u16,
+    /// Content-Type header value.
     pub content_type: String,
+    /// Response body bytes.
     pub body: Vec<u8>,
 }
 
 impl HttpResponse {
+    /// A JSON response.
     pub fn json(status: u16, body: String) -> Self {
         Self {
             status,
@@ -96,6 +105,7 @@ impl HttpResponse {
         }
     }
 
+    /// A plain-text response.
     pub fn text(status: u16, body: impl Into<String>) -> Self {
         Self {
             status,
@@ -116,6 +126,7 @@ impl HttpResponse {
         }
     }
 
+    /// Serialize status line, headers, and body to `w`.
     pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> Result<()> {
         write!(
             w,

@@ -10,6 +10,9 @@
 //!
 //! Built directly on std::net (offline: no hyper/tokio); one handler
 //! thread per connection from a fixed accept pool, keep-alive supported.
+//! Behind each model name sits a replicated
+//! [`Router`](crate::coordinator::Router); see `docs/SERVING.md` for
+//! the ops guide (routes, knobs, backpressure, metrics).
 
 pub mod http;
 pub mod service;

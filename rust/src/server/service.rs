@@ -15,6 +15,7 @@ use crate::{log_error, log_info};
 
 use super::http::{HttpRequest, HttpResponse};
 
+/// ShapeSet-10 class labels, indexed by class id.
 pub const CLASS_NAMES: [&str; 10] = [
     "circle", "square", "triangle", "cross", "ring",
     "h-stripe", "v-stripe", "checker", "dot-grid", "diag-gradient",
@@ -29,15 +30,19 @@ pub struct Service {
 }
 
 impl Service {
+    /// Build a service over named routers; `default_model` answers
+    /// `/classify` requests that carry no `?model=` parameter.
     pub fn new(routers: BTreeMap<String, Router>, default_model: &str) -> Self {
         assert!(routers.contains_key(default_model), "unknown default model");
         Self { routers, default_model: default_model.to_string() }
     }
 
+    /// Names of every served model.
     pub fn models(&self) -> Vec<String> {
         self.routers.keys().cloned().collect()
     }
 
+    /// The router serving `name`, if any.
     pub fn router(&self, name: &str) -> Option<&Router> {
         self.routers.get(name)
     }
@@ -63,13 +68,12 @@ impl Service {
             ("GET", "/metrics") => {
                 let mut out = String::new();
                 for (name, r) in &self.routers {
-                    for line in r.metrics().render_prometheus().lines() {
-                        let (metric, value) =
-                            line.split_once(' ').unwrap_or((line, ""));
-                        out.push_str(&format!(
-                            "{metric}{{model=\"{name}\"}} {value}\n"
-                        ));
-                    }
+                    // Label merging happens in the renderer so
+                    // per-replica lines (which already carry a
+                    // `replica` label) stay well-formed.
+                    out.push_str(&r.metrics().render_prometheus_labeled(
+                        &format!("model=\"{name}\""),
+                    ));
                 }
                 HttpResponse::text(200, out)
             }
@@ -170,6 +174,7 @@ fn decode_pixels(req: &HttpRequest) -> Result<Vec<u8>> {
 /// Serving options.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
+    /// Bind address (`host:port`; port 0 picks a free port).
     pub addr: String,
     /// Connection-handler threads.
     pub threads: usize,
@@ -249,9 +254,9 @@ mod tests {
         routers.insert(
             "mock".to_string(),
             Router::start(
-                || Ok(Box::new(MockBackend::new(4, 0))
-                      as Box<dyn bitkernel_backend::Backend>),
-                RouterConfig::default(),
+                |_| Ok(Box::new(MockBackend::new(4, 0))
+                       as Box<dyn bitkernel_backend::Backend>),
+                RouterConfig { replicas: 2, ..RouterConfig::default() },
             )
             .unwrap(),
         );
@@ -285,6 +290,11 @@ mod tests {
         let body = String::from_utf8(resp.body).unwrap();
         assert!(body.contains("bitkernel_requests_submitted{model=\"mock\"}"),
                 "{body}");
+        // Per-replica series carry both labels, well-formed.
+        assert!(body.contains(
+            "bitkernel_replica_requests{model=\"mock\",replica=\"0\"}"
+        ), "{body}");
+        assert!(!body.contains("}{"), "{body}");
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Wrap `data` with `shape` (element counts must match).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -24,36 +25,44 @@ impl Tensor {
         Self { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Self { shape, data: vec![0.0; n] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
         let n = shape.iter().product();
         Self { shape, data: vec![v; n] }
     }
 
+    /// The dimension sizes.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Row-major element view.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element view.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the backing buffer.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -120,6 +129,7 @@ impl Tensor {
 /// contiguously for both sides.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedMatrix {
+    /// Logical row count.
     pub rows: usize,
     /// Logical (unpadded) reduction length.
     pub k: usize,
@@ -130,6 +140,7 @@ pub struct PackedMatrix {
 }
 
 impl PackedMatrix {
+    /// All-(-1) matrix (every packed bit 0) of the given logical shape.
     pub fn zeros(rows: usize, k: usize) -> Self {
         let kw = k.div_ceil(32);
         Self { rows, k, kw, data: vec![0; rows * kw] }
@@ -157,11 +168,13 @@ impl PackedMatrix {
         self.data.capacity()
     }
 
+    /// Packed words of row `r`.
     #[inline]
     pub fn row(&self, r: usize) -> &[u32] {
         &self.data[r * self.kw..(r + 1) * self.kw]
     }
 
+    /// Mutable packed words of row `r`.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [u32] {
         &mut self.data[r * self.kw..(r + 1) * self.kw]

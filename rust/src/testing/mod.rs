@@ -11,8 +11,11 @@ use crate::utils::Rng;
 /// Outcome of a property check.
 #[derive(Debug)]
 pub struct PropFailure {
+    /// Index of the failing case.
     pub case: usize,
+    /// The harness seed (rerun with it to reproduce).
     pub seed: u64,
+    /// The predicate's failure message.
     pub message: String,
 }
 

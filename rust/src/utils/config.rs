@@ -7,22 +7,28 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// A parsed `key = value` configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
     values: BTreeMap<String, String>,
 }
 
+/// Config parse/typing failures.
 #[derive(Debug, thiserror::Error)]
 pub enum ConfigError {
+    /// A line that is not `key = value`, a comment, or blank.
     #[error("line {0}: expected 'key = value', got '{1}'")]
     Syntax(usize, String),
+    /// A typed getter could not parse the stored string.
     #[error("key '{0}': {1}")]
     Type(String, String),
+    /// Underlying file I/O failure.
     #[error(transparent)]
     Io(#[from] std::io::Error),
 }
 
 impl Config {
+    /// Parse config text (one `key = value` per line).
     pub fn parse(text: &str) -> Result<Self, ConfigError> {
         let mut values = BTreeMap::new();
         for (i, raw) in text.lines().enumerate() {
@@ -38,6 +44,7 @@ impl Config {
         Ok(Self { values })
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
         Self::parse(&std::fs::read_to_string(path)?)
     }
@@ -50,18 +57,22 @@ impl Config {
         self
     }
 
+    /// Set (or overwrite) one key.
     pub fn set(&mut self, key: &str, value: impl Into<String>) {
         self.values.insert(key.to_string(), value.into());
     }
 
+    /// Raw string value of `key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Raw string value of `key`, or `default`.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `key` parsed as usize, or `default` when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
         match self.get(key) {
             None => Ok(default),
@@ -71,6 +82,7 @@ impl Config {
         }
     }
 
+    /// `key` parsed as f64, or `default` when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
         match self.get(key) {
             None => Ok(default),
@@ -80,6 +92,8 @@ impl Config {
         }
     }
 
+    /// `key` parsed as bool (`true/1/yes` vs `false/0/no`), or
+    /// `default` when absent.
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
         match self.get(key) {
             None => Ok(default),
@@ -89,6 +103,7 @@ impl Config {
         }
     }
 
+    /// Every configured key, in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }

@@ -6,13 +6,19 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable / dropped-work conditions.
     Error = 0,
+    /// Suspicious but handled conditions.
     Warn = 1,
+    /// Operational milestones (default level).
     Info = 2,
+    /// Per-request noise.
     Debug = 3,
+    /// Everything.
     Trace = 4,
 }
 
@@ -30,6 +36,7 @@ fn init_from_env() -> u8 {
     lvl
 }
 
+/// Current level as a raw u8 (lazily read from `BITKERNEL_LOG`).
 pub fn level() -> u8 {
     let l = LEVEL.load(Ordering::Relaxed);
     if l == 255 {
@@ -39,14 +46,17 @@ pub fn level() -> u8 {
     }
 }
 
+/// Override the level at runtime.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `l` are emitted.
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= level()
 }
 
+/// Emit one message (used via the `log_*!` macros).
 pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if enabled(l) {
         let tag = match l {
@@ -60,18 +70,22 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at [`Level::Error`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_error {
     ($($t:tt)*) => { $crate::utils::logging::log($crate::utils::logging::Level::Error, format_args!($($t)*)) };
 }
+/// Log at [`Level::Warn`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($t:tt)*) => { $crate::utils::logging::log($crate::utils::logging::Level::Warn, format_args!($($t)*)) };
 }
+/// Log at [`Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($t:tt)*) => { $crate::utils::logging::log($crate::utils::logging::Level::Info, format_args!($($t)*)) };
 }
+/// Log at [`Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($t:tt)*) => { $crate::utils::logging::log($crate::utils::logging::Level::Debug, format_args!($($t)*)) };

@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (same seed, same stream).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Self {
@@ -31,6 +32,7 @@ impl Rng {
         }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -45,6 +47,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 random bits (the high half of [`Rng::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -25,6 +25,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `threads` persistent workers.
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -54,6 +55,7 @@ impl ThreadPool {
         Self { tx: Some(tx), workers }
     }
 
+    /// Enqueue one job for any free worker.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
@@ -62,10 +64,12 @@ impl ThreadPool {
             .expect("worker panicked");
     }
 
+    /// Number of worker threads.
     pub fn len(&self) -> usize {
         self.workers.len()
     }
 
+    /// Whether the pool has no workers (never true for a live pool).
     pub fn is_empty(&self) -> bool {
         self.workers.is_empty()
     }

@@ -9,22 +9,27 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Time since start.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since start, in seconds.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Time since start, in milliseconds.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_secs() * 1e3
     }
 
+    /// Return the elapsed time and start over.
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();

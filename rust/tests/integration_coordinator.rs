@@ -1,5 +1,9 @@
-//! End-to-end coordinator tests: real engine behind the router, and the
-//! HTTP service over a real TCP socket.
+//! End-to-end coordinator tests: real engine behind the router, the
+//! replica pool's contracts (bit-identical replies, drain, explicit
+//! backpressure), and the HTTP service over a real TCP socket.
+//!
+//! Replica-pool tests run on a synthetic engine, so they need no
+//! artifacts; only the trained-model tests self-skip.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -8,12 +12,16 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use bitkernel::bitops::XnorImpl;
 use bitkernel::coordinator::{
     Backend, BatcherConfig, MockBackend, NativeBackend, Router, RouterConfig,
+    SubmitError,
 };
 use bitkernel::data::Dataset;
-use bitkernel::model::BnnEngine;
+use bitkernel::model::{BnnEngine, EngineKernel};
 use bitkernel::server::{serve, ServeOptions, Service};
+use bitkernel::testing::synthetic_engine;
+use bitkernel::utils::Rng;
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -30,13 +38,15 @@ fn router_with_native_engine_classifies_correctly() {
     let Some(dir) = artifacts() else { return };
     let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
     let weights = dir.join("weights_small.bkw");
+    let engine = BnnEngine::load(&weights).unwrap();
+    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 8);
     let router = Router::start(
-        move || {
-            let engine = BnnEngine::load(&weights)?;
-            Ok(Box::new(NativeBackend::xnor(&engine, 8)) as Box<dyn Backend>)
+        move |_replica| {
+            Ok(Box::new(NativeBackend::from_plan(&plan)) as Box<dyn Backend>)
         },
         RouterConfig {
             queue_cap: 64,
+            replicas: 2,
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_delay: Duration::from_millis(2),
@@ -71,13 +81,15 @@ fn http_service_end_to_end() {
     let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
     let weights = dir.join("weights_small.bkw");
 
+    let engine = BnnEngine::load(&weights).unwrap();
+    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 8);
     let mut routers = BTreeMap::new();
     routers.insert(
         "bnn".to_string(),
         Router::start(
-            move || {
-                let engine = BnnEngine::load(&weights)?;
-                Ok(Box::new(NativeBackend::xnor(&engine, 8)) as Box<dyn Backend>)
+            move |_replica| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
             },
             RouterConfig::default(),
         )
@@ -133,7 +145,7 @@ fn service_supports_multiple_models() {
     // Two mock models: routing by ?model= must hit the right one.
     let mk = |batch| {
         Router::start(
-            move || Ok(Box::new(MockBackend::new(batch, 0)) as Box<dyn Backend>),
+            move |_| Ok(Box::new(MockBackend::new(batch, 0)) as Box<dyn Backend>),
             RouterConfig::default(),
         )
         .unwrap()
@@ -182,7 +194,7 @@ fn failing_backend_drops_requests_and_counts_rejections() {
         }
     }
     let router = Router::start(
-        || Ok(Box::new(FailingBackend) as Box<dyn Backend>),
+        |_| Ok(Box::new(FailingBackend) as Box<dyn Backend>),
         RouterConfig::default(),
     )
     .unwrap();
@@ -197,11 +209,144 @@ fn failing_backend_drops_requests_and_counts_rejections() {
 #[test]
 fn backend_construction_failure_is_synchronous() {
     let r = Router::start(
-        || anyhow::bail!("no such model"),
+        |_| anyhow::bail!("no such model"),
         RouterConfig::default(),
     );
     assert!(r.is_err());
     assert!(format!("{:#}", r.err().unwrap()).contains("no such model"));
+}
+
+// --- replica-pool contracts (synthetic engine: no artifacts needed) --------
+
+/// Small but full-architecture synthetic network (same widths layout as
+/// `tests/plan_session.rs`).
+fn replica_test_plan(max_batch: usize) -> bitkernel::model::Plan {
+    synthetic_engine([8, 8, 8, 8, 8, 8, 16, 16, 10], 42)
+        .plan(EngineKernel::Xnor(XnorImpl::Auto), max_batch)
+}
+
+#[test]
+fn replies_bit_identical_for_1_and_4_replicas() {
+    let plan = replica_test_plan(4);
+    let mut rng = Rng::new(7);
+    let images: Vec<Vec<f32>> =
+        (0..24).map(|_| rng.normal_vec(3 * 32 * 32)).collect();
+
+    let run = |replicas: usize| -> Vec<Vec<f32>> {
+        let plan = plan.clone();
+        let router = Router::start(
+            move |_| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 64,
+                replicas,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(2),
+                },
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = images
+            .iter()
+            .map(|img| router.submit(img.clone()).unwrap())
+            .collect();
+        let out: Vec<Vec<f32>> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+        router.shutdown();
+        out
+    };
+
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one.len(), four.len());
+    for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "image {i} logit {j}: {x} vs {y} — replication must not \
+                 change results"
+            );
+        }
+    }
+}
+
+#[test]
+fn shutdown_drains_every_accepted_request() {
+    let router = Router::start(
+        |_| Ok(Box::new(MockBackend::new(4, 2)) as Box<dyn Backend>),
+        RouterConfig {
+            queue_cap: 256,
+            replicas: 4,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+            },
+        },
+    )
+    .unwrap();
+    let n = 64;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| router.submit(vec![0.25f32; 3 * 32 * 32]).unwrap())
+        .collect();
+    let metrics = router.metrics();
+    // Drain: every accepted request must still be answered.
+    router.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|e| panic!("request {i} lost in drain: {e}"));
+        assert_eq!(reply.logits.len(), 10);
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(
+        snap.replicas.iter().map(|r| r.requests).sum::<u64>(),
+        n as u64
+    );
+    assert!(snap.replicas.iter().all(|r| r.inflight == 0));
+}
+
+#[test]
+fn saturated_admission_queue_surfaces_queue_full() {
+    // Slow replicas + tiny admission queue: the bounded per-replica
+    // dispatch slots must propagate saturation back to submitters
+    // instead of buffering unboundedly.
+    let router = Router::start(
+        |_| Ok(Box::new(MockBackend::new(1, 30)) as Box<dyn Backend>),
+        RouterConfig {
+            queue_cap: 2,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_delay: Duration::from_millis(1),
+            },
+        },
+    )
+    .unwrap();
+    let mut kept = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..40 {
+        match router.submit(vec![0.0f32; 3 * 32 * 32]) {
+            Ok(rx) => kept.push(rx),
+            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    assert!(rejected > 0, "40 instant submits on 2 slow replicas with \
+                           queue_cap=2 must shed load");
+    // Every accepted request still completes.
+    for rx in kept {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.rejected, rejected);
+    assert_eq!(snap.submitted, 40 - rejected);
+    assert_eq!(snap.completed, 40 - rejected);
 }
 
 // --- tiny test HTTP client -------------------------------------------------

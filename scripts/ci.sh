@@ -1,13 +1,18 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (also: `make ci`).
 #
-#   build (release) -> tests -> formatting -> clippy -> bench smoke runs
+#   build (release) -> tests -> docs -> formatting -> clippy
+#   -> bench smoke runs
 #
-# The profile smoke run exercises the compiled plan/session path end to
-# end (1 rep per arm); it self-skips when `make artifacts` has not been
-# run, so ci.sh works in artifact-less environments too.  The ablation
-# smoke run (--quick) exercises every xnor kernel impl — incl. the SIMD
-# tiers, tiled threading, and Auto dispatch — on real layer shapes.
+# The docs step denies rustdoc warnings, so missing public-item docs
+# (lib.rs sets #![warn(missing_docs)]) and broken intra-doc links fail
+# CI.  The profile smoke run exercises the compiled plan/session path
+# end to end (1 rep per arm); it self-skips when `make artifacts` has
+# not been run, so ci.sh works in artifact-less environments too.  The
+# ablation smoke run (--quick) exercises every xnor kernel impl — incl.
+# the SIMD tiers, tiled threading, and Auto dispatch — on real layer
+# shapes; the batching smoke run (--quick) drives the replica pool end
+# to end on a synthetic model.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -17,6 +22,9 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+echo "== cargo doc --no-deps (rustdoc warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== cargo fmt --check"
 cargo fmt --check
@@ -29,5 +37,8 @@ cargo bench --bench ablation -- --quick
 
 echo "== bench smoke: profile (1 rep)"
 cargo bench --bench profile -- --reps 1
+
+echo "== bench smoke: replica batching (--quick)"
+cargo bench --bench batching -- --quick
 
 echo "ci.sh: all green"
