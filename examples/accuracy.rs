@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     let x = ds.normalized(0, n);
     println!(
         "trained BNN (scale 0.25, {} params) on ShapeSet-10, {} test images",
-        engine.cfg.param_count(),
+        engine.spec.param_count(),
         n
     );
 

@@ -1,0 +1,90 @@
+//! custom_net — serve a NON-CIFAR architecture end to end, artifact-free.
+//!
+//! The NetSpec IR makes the engine architecture-generic: this example
+//! builds a 1x28x28, 26-class conv net (nothing like the paper's CIFAR
+//! topology), gives it synthetic binarized weights, round-trips it
+//! through a BKW2 file on disk, compiles an xnor/auto plan, and checks
+//! the zero-alloc session path against the unfused oracle bit-for-bit.
+//!
+//!     cargo run --release --example custom_net
+//!
+//! No `make artifacts` needed — weights are synthesized in memory.
+
+use anyhow::Result;
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec, WeightFile};
+use bitkernel::tensor::Tensor;
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::Rng;
+
+fn main() -> Result<()> {
+    // 1. Describe the architecture.  The builder inserts the
+    //    Sign/BatchNorm/Flatten plumbing and binarizes every weighted
+    //    layer after the first; shape arithmetic is validated here,
+    //    with typed SpecErrors instead of mid-inference panics.
+    let spec = NetSpec::builder((1, 28, 28))
+        .conv(16, 3)
+        .pool()
+        .conv(32, 3)
+        .pool()
+        .linear(64)
+        .linear(26)
+        .build()?;
+    println!(
+        "spec: input {:?}, {} classes, {} params, {} ops",
+        spec.input(),
+        spec.classes(),
+        spec.param_count(),
+        spec.layers().len()
+    );
+    for (op, shape) in spec.layers().iter().zip(spec.output_shapes()) {
+        println!("  {:<10} -> {shape}", op.op_name());
+    }
+
+    // 2. Synthetic weights (random signs + folded BN), written as a
+    //    BKW2 file: the spec travels INSIDE the weight file, so the
+    //    serving side needs no out-of-band architecture knowledge.
+    let wf = synthetic_weight_file(&spec, 7);
+    let path = std::env::temp_dir().join("bitkernel_custom_net.bkw");
+    wf.save(&path)?;
+    let loaded = WeightFile::load(&path)?;
+    println!(
+        "\nround-trip: wrote BKW{} to {}, read back BKW{}",
+        wf.version(),
+        path.display(),
+        loaded.version()
+    );
+    assert_eq!(loaded.embedded_spec(), Some(&spec));
+
+    // 3. Engine + compiled plan on the paper's kernel (auto-dispatch).
+    let engine = BnnEngine::from_weight_file(&loaded)?;
+    let kernel = EngineKernel::Xnor(XnorImpl::Auto);
+    let plan = engine.plan(kernel, 8)?;
+    println!("\nplan ({} / max_batch 8):", kernel.name());
+    for name in plan.stage_names() {
+        println!("  {name}");
+    }
+    println!("session buffers:");
+    for (name, elems, bytes) in plan.buffer_sizes() {
+        println!("  {name:<20} {elems:>8} elems  {:>8.1} KiB",
+                 bytes as f64 / 1024.0);
+    }
+
+    // 4. Serve a batch and pin it against the unfused oracle.
+    let mut rng = Rng::new(42);
+    let x = Tensor::new(vec![4, 1, 28, 28], rng.normal_vec(4 * 28 * 28));
+    let mut session = plan.session();
+    let logits = session.run(&x).clone();
+    let oracle = engine.forward_reference(&x, kernel);
+    assert_eq!(logits.shape(), &[4, 26]);
+    assert_eq!(logits.max_abs_diff(&oracle), 0.0,
+               "plan must match the oracle bit-exactly");
+    println!(
+        "\nran batch of 4: logits [4, 26], bit-identical to \
+         forward_reference — a 28x28/26-class net on the same kernel \
+         that serves the paper's CIFAR net."
+    );
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}

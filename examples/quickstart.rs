@@ -44,7 +44,7 @@ fn main() -> Result<()> {
     let ds = Dataset::load(dir.join("dataset_test.bin"))?;
     println!(
         "loaded trained BNN ({} params) + {} test images",
-        engine.cfg.param_count(),
+        engine.spec.param_count(),
         ds.count
     );
 
@@ -111,7 +111,7 @@ fn main() -> Result<()> {
     // the serving configuration (plan compilation stays outside the loop).
     println!("\nsingle-image native timing (small model):");
     for &kernel in &arms {
-        let mut session = engine.plan(kernel, 1).session();
+        let mut session = engine.plan(kernel, 1)?.session();
         std::hint::black_box(session.run(&x1)); // warmup
         let sw = Stopwatch::start();
         let iters = 10;

@@ -70,7 +70,7 @@ fn main() -> Result<()> {
                 bitkernel::bitops::XnorImpl::Auto,
             ),
             8,
-        ))
+        )?)
     } else {
         None
     };

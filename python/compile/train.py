@@ -1,12 +1,23 @@
-"""BNN training (STE) on ShapeSet-10 + BKW1 weight export.
+"""BNN training (STE) on ShapeSet-10 + BKW2 weight export.
 
 Build-time only.  Trains the width-scaled BNN of model.py with the
 straight-through estimator (sign forward / Htanh-clip backward — the
 paper's Sec. 4.2 recipe), a hand-rolled Adam (no optax offline), and
 running BatchNorm statistics folded to per-channel affines at export.
 
-BKW1 binary format (mirrored by rust/src/model/format.rs):
-    magic  b"BKW1"
+BKW2 binary format (mirrored by rust/src/model/format.rs — the rust
+side reads BKW1 and BKW2; this exporter writes BKW2 so the file
+carries its own architecture):
+    magic  b"BKW2"
+    u32le  input_c, input_h, input_w, classes
+    u32le  n_ops
+    n_ops * { u8 opcode, fields }
+        0 = conv2d:   u32le cout, ksize, stride, pad; u8 binarized
+        1 = maxpool2
+        2 = batchnorm
+        3 = sign
+        4 = flatten
+        5 = linear:   u32le dout; u8 binarized
     u32le  n_tensors
     n_tensors * {
         u16le name_len, name (utf-8),
@@ -14,7 +25,8 @@ BKW1 binary format (mirrored by rust/src/model/format.rs):
         u8 ndim, ndim * u32le dims,
         data (little-endian, row-major)
     }
-Exported tensor names: meta.widths (u32 [c1..c6, f1, f2, 10]),
+(BKW1 is the same without the spec section.)  Exported tensor names:
+meta.widths (u32 [c1..c6, f1, f2, 10], kept for BKW1-era tooling),
 conv1.w .. conv6.w, fc1.w .. fc3.w (sign-binarized {-1,+1} f32) and
 bn_conv1.a/.b .. bn_fc3.a/.b (folded BN affine, f32).
 """
@@ -163,9 +175,52 @@ def _write_tensor(f, name: str, arr: np.ndarray) -> None:
     f.write(data.tobytes())
 
 
+# NetSpec opcodes (BKW2 spec section; mirror of rust model/spec.rs).
+OP_CONV2D = 0
+OP_MAXPOOL2 = 1
+OP_BATCHNORM = 2
+OP_SIGN = 3
+OP_FLATTEN = 4
+OP_LINEAR = 5
+
+
+def spec_ops(cfg: model.ModelConfig) -> list:
+    """ModelConfig -> the canonical NetSpec op list of the rust IR:
+    [Sign]? Conv2d [MaxPool2] BatchNorm per conv, Flatten, then
+    Sign Linear BatchNorm per fc (all fcs are binarized)."""
+    ops: list = []
+    for s in cfg.conv_specs:
+        if s.binarized:
+            ops.append((OP_SIGN,))
+        ops.append((OP_CONV2D, s.cout, s.ksize, s.stride, s.pad,
+                    1 if s.binarized else 0))
+        if s.pool:
+            ops.append((OP_MAXPOOL2,))
+        ops.append((OP_BATCHNORM,))
+    ops.append((OP_FLATTEN,))
+    for s in cfg.fc_specs:
+        ops.append((OP_SIGN,))
+        ops.append((OP_LINEAR, s.dout, 1))
+        ops.append((OP_BATCHNORM,))
+    return ops
+
+
+def _write_spec(f, cfg: model.ModelConfig) -> None:
+    ops = spec_ops(cfg)
+    f.write(struct.pack("<5I", model.IMAGE_C, model.IMAGE_HW,
+                        model.IMAGE_HW, model.NUM_CLASSES, len(ops)))
+    for op in ops:
+        f.write(struct.pack("<B", op[0]))
+        if op[0] == OP_CONV2D:
+            f.write(struct.pack("<4IB", *op[1:]))
+        elif op[0] == OP_LINEAR:
+            f.write(struct.pack("<IB", *op[1:]))
+
+
 def save_bkw(path: str, cfg: model.ModelConfig,
              params: Dict[str, Any]) -> None:
-    """Export the inference float pytree (binarize_params/fold_bn output)."""
+    """Export the inference float pytree (binarize_params/fold_bn output)
+    as BKW2: the NetSpec rides in the file, followed by the tensors."""
     tensors: list[tuple[str, np.ndarray]] = []
     widths = np.asarray(cfg.widths + cfg.fc_widths, np.uint32)
     tensors.append(("meta.widths", widths))
@@ -182,17 +237,35 @@ def save_bkw(path: str, cfg: model.ModelConfig,
         tensors.append((f"bn_{s.name}.b",
                         np.asarray(params[f"bn_{s.name}"]["b"])))
     with open(path, "wb") as f:
-        f.write(b"BKW1")
+        f.write(b"BKW2")
+        _write_spec(f, cfg)
         f.write(struct.pack("<I", len(tensors)))
         for name, arr in tensors:
             _write_tensor(f, name, arr)
 
 
+def _skip_spec(f) -> None:
+    """Consume a BKW2 spec section (load_bkw returns tensors only)."""
+    _c, _h, _w, _classes, n_ops = struct.unpack("<5I", f.read(20))
+    for _ in range(n_ops):
+        (opcode,) = struct.unpack("<B", f.read(1))
+        if opcode == OP_CONV2D:
+            f.read(17)  # 4 u32 + u8
+        elif opcode == OP_LINEAR:
+            f.read(5)   # u32 + u8
+        elif opcode not in (OP_MAXPOOL2, OP_BATCHNORM, OP_SIGN,
+                            OP_FLATTEN):
+            raise ValueError(f"unknown opcode {opcode}")
+
+
 def load_bkw(path: str) -> Dict[str, np.ndarray]:
-    """Read BKW1 back as {name: array} (tests / aot input prep)."""
+    """Read BKW1 or BKW2 back as {name: array} (tests / aot prep)."""
     out: Dict[str, np.ndarray] = {}
     with open(path, "rb") as f:
-        assert f.read(4) == b"BKW1"
+        magic = f.read(4)
+        assert magic in (b"BKW1", b"BKW2"), magic
+        if magic == b"BKW2":
+            _skip_spec(f)
         (n,) = struct.unpack("<I", f.read(4))
         for _ in range(n):
             (ln,) = struct.unpack("<H", f.read(2))

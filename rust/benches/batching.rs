@@ -192,7 +192,7 @@ fn main() {
     for &(mb, delay_ms) in policy_grid {
         // One compile per policy point, shared across every replica
         // count — exactly the serving deployment's shape.
-        let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), mb);
+        let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), mb).unwrap();
         for &replicas in &replica_grid {
             let plan = plan.clone();
             let router = Router::start(
@@ -294,7 +294,7 @@ fn main() {
     let mut trained_grid = vec![(1usize, 1usize), (1, 8), (host.min(4), 8)];
     trained_grid.dedup();
     for (replicas, mb) in trained_grid {
-        let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), mb);
+        let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), mb).unwrap();
         let router = Router::start(
             move |_| {
                 Ok(Box::new(NativeBackend::from_plan(&plan))

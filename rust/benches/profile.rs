@@ -45,7 +45,7 @@ fn main() {
     ];
     for kernel in arms {
         // Compile once; the session reuses its buffers across reps.
-        let mut session = engine.plan(kernel, 1).session();
+        let mut session = engine.plan(kernel, 1).unwrap().session();
         let _ = session.run(&x); // warmup
         let mut acc: Vec<(String, f64)> = Vec::new();
         for _ in 0..reps {

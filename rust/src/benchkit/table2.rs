@@ -152,7 +152,7 @@ fn time_native(
     kernel: EngineKernel,
     images: usize,
 ) -> f64 {
-    let mut session = engine.plan(kernel, 1).session();
+    let mut session = engine.plan(kernel, 1).unwrap().session();
     // Warmup on one image.
     let x = ds.normalized(0, 1);
     std::hint::black_box(session.run(&x));

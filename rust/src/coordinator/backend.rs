@@ -57,7 +57,10 @@ impl NativeBackend {
                -> Self {
         Self {
             name: format!("native/{}", kernel.name()),
-            session: engine.plan(kernel, batch).session(),
+            session: engine
+                .plan(kernel, batch)
+                .expect("batch >= 1 and spec validated at load")
+                .session(),
         }
     }
 

@@ -152,7 +152,7 @@ impl Router {
     ///
     /// let engine = bitkernel::testing::synthetic_engine(
     ///     [8, 8, 8, 8, 8, 8, 16, 16, 10], 1);
-    /// let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4);
+    /// let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4).unwrap();
     /// let router = Router::start(
     ///     move |_replica| {
     ///         Ok(Box::new(NativeBackend::from_plan(&plan))

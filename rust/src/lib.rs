@@ -27,8 +27,9 @@
 //! * [`gemm`]   — float gemm kernels (naive control group / blocked)
 //! * [`nn`]     — im2col, conv, pooling, batchnorm, linear, and the
 //!   fused `bn_sign_pack` layer-boundary epilogues ([`nn::fuse`])
-//! * [`model`]  — BNN config, BKW1 weights, the native engine, and the
-//!   compiled [`model::Plan`]/[`model::Session`] execution path
+//! * [`model`]  — the [`model::NetSpec`] architecture IR, BKW1/BKW2
+//!   weights, the native engine, and the compiled
+//!   [`model::Plan`]/[`model::Session`] execution path
 //! * [`data`]   — ShapeSet-10 (BKD1) loading + native generation
 //! * [`runtime`] — PJRT client wrapper + artifact manifest/registry
 //! * [`coordinator`] — dynamic batcher, replica pool, router, metrics

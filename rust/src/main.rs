@@ -4,6 +4,7 @@
 //! * `serve`    — run the HTTP inference service
 //! * `classify` — classify test-set images from the command line
 //! * `eval`     — accuracy of a weight file over the test split
+//! * `describe` — print a weight file's NetSpec, plan, and buffers
 //! * `inspect`  — summarize the artifact manifest
 //! * `selftest` — verify the three Table-2 arms agree end-to-end
 
@@ -45,6 +46,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "classify" => cmd_classify(rest),
         "eval" => cmd_eval(rest),
+        "describe" => cmd_describe(rest),
         "inspect" => cmd_inspect(rest),
         "selftest" => cmd_selftest(rest),
         "help" | "--help" | "-h" => {
@@ -63,6 +65,7 @@ fn print_usage() {
          \x20 serve     run the HTTP inference service\n\
          \x20 classify  classify test-set images\n\
          \x20 eval      accuracy over the test split\n\
+         \x20 describe  print a weight file's NetSpec, plan + buffers\n\
          \x20 inspect   summarize the artifact manifest\n\
          \x20 selftest  verify all kernel arms agree\n\n\
          run `bitkernel <subcommand> --help` for flags"
@@ -195,7 +198,21 @@ fn start_backend(
             let manifest = bitkernel::runtime::Manifest::load(&artifacts)?;
             let path = manifest.weight_file(&weights_name)?;
             let engine = BnnEngine::load(path)?;
-            let plan = engine.plan(kernel, batch);
+            // The HTTP front-end (routes, batcher padding, pixel
+            // normalization) is still fixed to 3x32x32/10-class
+            // requests; fail at startup with a clear message instead
+            // of panicking a replica worker on the first batch.
+            // Custom NetSpec architectures serve through the
+            // Plan/Session API (see examples/custom_net.rs).
+            anyhow::ensure!(
+                engine.spec.input() == (3, 32, 32)
+                    && engine.spec.classes() == 10,
+                "the HTTP service expects a 3x32x32/10-class model, but \
+                 '{weights_name}' describes input {:?} with {} classes",
+                engine.spec.input(),
+                engine.spec.classes()
+            );
+            let plan = engine.plan(kernel, batch)?;
             Router::start(
                 move |_replica| {
                     Ok(Box::new(NativeBackend::from_plan(&plan))
@@ -315,6 +332,140 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         sw.elapsed_secs(),
         n as f64 / sw.elapsed_secs()
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// describe
+// ---------------------------------------------------------------------------
+
+/// `bitkernel describe <weights.bkw> [--kernel k] [--batch n]`, or
+/// `--weights <set>` to resolve through the artifacts dir.  Prints the
+/// parsed NetSpec (op table with shapes and weight-key names), the
+/// compiled plan's stage names with resolved Auto kernel choices, and
+/// the per-session buffer footprint.
+fn cmd_describe(argv: &[String]) -> Result<()> {
+    // One optional positional: the weight-file path.
+    let (file, flags): (Option<String>, Vec<String>) = match argv.first() {
+        Some(a) if !a.starts_with("--") => {
+            (Some(a.clone()), argv[1..].to_vec())
+        }
+        _ => (None, argv.to_vec()),
+    };
+    let specs = [
+        COMMON[0].clone(),
+        FlagSpec { name: "weights", takes_value: true, default: None,
+                   help: "weight set in the artifacts dir (alternative \
+                          to the positional path)" },
+        FlagSpec { name: "kernel", takes_value: true, default: Some("xnor"),
+                   help: "kernel arm to compile the plan for" },
+        FlagSpec { name: "batch", takes_value: true, default: Some("8"),
+                   help: "max_batch the plan is sized for" },
+        COMMON[1].clone(),
+    ];
+    let args = Args::parse(&flags, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help(
+            "describe",
+            "print a weight file's NetSpec, plan, and session buffers \
+             (usage: bitkernel describe <weights.bkw>)",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let path = match (file, args.get("weights")) {
+        (Some(p), _) => std::path::PathBuf::from(p),
+        (None, Some(set)) => {
+            std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))
+                .join(format!("weights_{set}.bkw"))
+        }
+        (None, None) => anyhow::bail!(
+            "describe needs a weight file: a positional path or --weights"
+        ),
+    };
+    let wf = bitkernel::model::WeightFile::load(&path)?;
+    let spec = wf.net_spec()?;
+    let (ic, ih, iw) = spec.input();
+    println!("file: {}", path.display());
+    println!(
+        "format: BKW{} ({})",
+        wf.version(),
+        if wf.version() == 2 {
+            "spec embedded"
+        } else {
+            "legacy; spec synthesized from meta.widths"
+        }
+    );
+    println!(
+        "input {ic}x{ih}x{iw}  classes {}  params {}  tensors {}",
+        spec.classes(),
+        spec.param_count(),
+        wf.len()
+    );
+
+    println!("\nops ({}):", spec.layers().len());
+    let names = spec.layer_names();
+    for (i, (op, shape)) in spec
+        .layers()
+        .iter()
+        .zip(spec.output_shapes())
+        .enumerate()
+    {
+        let detail = match op {
+            bitkernel::model::LayerSpec::Conv2d {
+                cout, ksize, stride, pad, binarized,
+            } => format!(
+                "{cout}c {ksize}x{ksize} s{stride} p{pad}{}",
+                if *binarized { " binarized" } else { "" }
+            ),
+            bitkernel::model::LayerSpec::Linear { dout, binarized } => {
+                format!(
+                    "{dout}d{}",
+                    if *binarized { " binarized" } else { "" }
+                )
+            }
+            _ => String::new(),
+        };
+        // (bound first: width specs pad strings, not arbitrary Display)
+        let shape_s = shape.to_string();
+        println!(
+            "  {i:>3}  {:<10} {:<10} -> {:<12} {}",
+            op.op_name(),
+            names[i].as_deref().unwrap_or("-"),
+            shape_s,
+            detail
+        );
+    }
+
+    let kernel = parse_kernel(args.get_or("kernel", "xnor"))?;
+    let batch = args.get_usize("batch", 8)?;
+    let engine = BnnEngine::from_weight_file(&wf)?;
+    let plan = engine.plan(kernel, batch)?;
+    println!(
+        "\nplan ({} / max_batch {}): {} stages",
+        kernel.name(),
+        batch,
+        plan.num_ops()
+    );
+    for name in plan.stage_names() {
+        println!("  {name}");
+    }
+    let impls = plan.xnor_impls();
+    if !impls.is_empty() {
+        let labels: Vec<String> =
+            impls.iter().map(|i| i.name().to_string()).collect();
+        println!("resolved xnor impls: {}", labels.join(", "));
+    }
+
+    println!("\nsession buffers (per replica):");
+    let mut total = 0usize;
+    for (name, elems, bytes) in plan.buffer_sizes() {
+        total += bytes;
+        println!("  {name:<20} {elems:>10} elems  {:>10.1} KiB",
+                 bytes as f64 / 1024.0);
+    }
+    println!("  {:<20} {:>10}        {:>10.1} KiB", "total", "",
+             total as f64 / 1024.0);
     Ok(())
 }
 

@@ -1,7 +1,8 @@
 //! The native BNN inference engine — the Table-2 "CPU" arm.
 //!
-//! Executes the exact network of python/compile/model.py from a BKW1
-//! weight file, with the gemm kernel swapped per [`EngineKernel`]:
+//! Executes ANY network a [`NetSpec`] validates (the paper's CIFAR net
+//! is one point in that space) from a BKW1/BKW2 weight file, with the
+//! gemm kernel swapped per [`EngineKernel`]:
 //!
 //! * `Xnor(imp)`  — "Our Kernel": encode + xnor-bitcount (Sec. 3)
 //! * `Control`    — "Control Group": naive float-32 Gemm-Accumulation
@@ -13,18 +14,19 @@
 //! `integration_runtime.rs` pins agreement with the PJRT artifacts.
 //!
 //! Since the plan/session redesign the serving path is COMPILED, not
-//! interpreted: [`BnnEngine::plan`] lowers the layer list into a flat op
+//! interpreted: [`BnnEngine::plan`] lowers the spec into a flat op
 //! program once (all kernel dispatch resolved at plan time), and
 //! [`super::plan::Session`] executes it against preallocated buffers —
 //! see `model/plan.rs`.  The `forward*` methods here are thin
 //! conveniences that compile a throwaway plan per call;
 //! [`BnnEngine::forward_reference`] keeps the original unfused
 //! layer-by-layer pipeline alive as the bit-exactness oracle for
-//! `tests/plan_session.rs`.
+//! `tests/plan_session.rs` and `tests/netspec.rs`.
 //!
-//! conv1 consumes the real-valued image in every arm (see DESIGN.md §4):
-//! the Control arm runs it with the naive float gemm, the other two with
-//! the blocked float gemm.
+//! Non-binarized layers (conv1 of the paper's net, or any spec layer
+//! with `binarized: false`) consume real-valued input in every arm
+//! (see DESIGN.md §4): the Control arm runs them with the naive float
+//! gemm, the other two with the SIMD float gemm.
 
 use std::borrow::Cow;
 use std::sync::Arc;
@@ -38,8 +40,8 @@ use crate::nn::linear::{linear, LinearKernel};
 use crate::nn::{argmax, bn_affine_nchw, bn_affine_rows, maxpool2};
 use crate::tensor::{PackedMatrix, Tensor};
 
-use super::config::{ModelConfig, IMAGE_C, IMAGE_HW, NUM_CLASSES};
 use super::format::WeightFile;
+use super::spec::NetSpec;
 
 /// Which Table-2 arm to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,30 +108,37 @@ pub(crate) struct ConvLayer {
 pub(crate) struct FcLayer {
     pub(crate) din: usize,
     pub(crate) dout: usize,
+    pub(crate) binarized: bool,
     pub(crate) w_float: Arc<Vec<f32>>,
-    pub(crate) w_packed: Arc<PackedMatrix>,
+    pub(crate) w_packed: Option<Arc<PackedMatrix>>,
     pub(crate) bn_a: Arc<Vec<f32>>,
     pub(crate) bn_b: Arc<Vec<f32>>,
 }
 
 /// A loaded, ready-to-run BNN.
 pub struct BnnEngine {
-    /// The architecture, rebuilt from the weight file's widths vector.
-    pub cfg: ModelConfig,
+    /// The architecture IR: embedded in the weight file (BKW2) or
+    /// synthesized from its legacy widths vector (BKW1).
+    pub spec: NetSpec,
     pub(crate) convs: Vec<ConvLayer>,
     pub(crate) fcs: Vec<FcLayer>,
 }
 
 impl BnnEngine {
-    /// Build from a parsed BKW1 file (binarized weights + folded BN).
+    /// Build from a parsed BKW file (binarized weights + folded BN).
+    /// The weight tensors are looked up and shape-checked against the
+    /// file's [`NetSpec`] under the canonical layer names
+    /// ([`NetSpec::layer_names`]).
     pub fn from_weight_file(wf: &WeightFile) -> Result<Self> {
-        let cfg = ModelConfig::from_widths(&wf.widths()?)?;
-        let mut convs = Vec::with_capacity(cfg.convs.len());
-        for s in &cfg.convs {
+        let spec = wf.net_spec()?;
+        let (cblocks, fblocks) = spec.blocks();
+        let mut convs = Vec::with_capacity(cblocks.len());
+        for s in &cblocks {
             let wt = wf.get(&format!("{}.w", s.name))?;
             ensure!(
                 wt.shape == vec![s.cout, s.cin, s.ksize, s.ksize],
-                "{}: shape {:?}", s.name, wt.shape
+                "{}: shape {:?} (spec wants [{}, {}, {}, {}])",
+                s.name, wt.shape, s.cout, s.cin, s.ksize, s.ksize
             );
             let w = wt.as_f32()?; // row-major [D, C, k, k] == [D, K]
             let packed = s
@@ -155,25 +164,31 @@ impl BnnEngine {
                 bn_b: Arc::new(bn_b),
             });
         }
-        let mut fcs = Vec::with_capacity(cfg.fcs.len());
-        for s in &cfg.fcs {
+        let mut fcs = Vec::with_capacity(fblocks.len());
+        for s in &fblocks {
             let wt = wf.get(&format!("{}.w", s.name))?;
             ensure!(wt.shape == vec![s.dout, s.din],
-                    "{}: shape {:?}", s.name, wt.shape);
+                    "{}: shape {:?} (spec wants [{}, {}])",
+                    s.name, wt.shape, s.dout, s.din);
             let w = wt.as_f32()?;
-            let packed = Arc::new(pack_rows(&w, s.dout, s.din));
+            let packed = s
+                .binarized
+                .then(|| Arc::new(pack_rows(&w, s.dout, s.din)));
             let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
             let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
+            ensure!(bn_a.len() == s.dout && bn_b.len() == s.dout,
+                    "bn_{} length", s.name);
             fcs.push(FcLayer {
                 din: s.din,
                 dout: s.dout,
+                binarized: s.binarized,
                 w_float: Arc::new(w),
                 w_packed: packed,
                 bn_a: Arc::new(bn_a),
                 bn_b: Arc::new(bn_b),
             });
         }
-        Ok(Self { cfg, convs, fcs })
+        Ok(Self { spec, convs, fcs })
     }
 
     /// Convenience: load straight from a .bkw path.
@@ -182,15 +197,19 @@ impl BnnEngine {
         Self::from_weight_file(&wf)
     }
 
-    /// Full forward pass: normalized NCHW images -> logits [B, 10].
+    /// Full forward pass: normalized NCHW images -> logits
+    /// [B, classes].
     ///
     /// Convenience wrapper: compiles a throwaway [`super::plan::Plan`]
     /// sized for this batch.  Repeated callers should hold a
     /// plan/session themselves
-    /// (`engine.plan(kernel, max_batch).session()`), which is the
+    /// (`engine.plan(kernel, max_batch)?.session()`), which is the
     /// zero-allocation path.
     pub fn forward(&self, x: &Tensor, kernel: EngineKernel) -> Tensor {
-        let mut session = self.plan(kernel, x.dim(0)).session();
+        let mut session = self
+            .plan(kernel, x.dim(0))
+            .expect("batch must be non-empty (b >= 1)")
+            .session();
         session.run(x).clone()
     }
 
@@ -204,7 +223,10 @@ impl BnnEngine {
         x: &Tensor,
         kernel: EngineKernel,
     ) -> (Tensor, Vec<(String, f64)>) {
-        let mut session = self.plan(kernel, x.dim(0)).session();
+        let mut session = self
+            .plan(kernel, x.dim(0))
+            .expect("batch must be non-empty (b >= 1)")
+            .session();
         let (out, stages) = session.run_profiled(x);
         (out.clone(), stages)
     }
@@ -212,7 +234,10 @@ impl BnnEngine {
     /// Predicted class per image.
     pub fn predict(&self, x: &Tensor, kernel: EngineKernel) -> Vec<usize> {
         let b = x.dim(0);
-        let mut session = self.plan(kernel, b).session();
+        let mut session = self
+            .plan(kernel, b)
+            .expect("batch must be non-empty (b >= 1)")
+            .session();
         let logits = session.run(x);
         (0..b).map(|i| argmax(logits.row(i))).collect()
     }
@@ -232,8 +257,12 @@ impl BnnEngine {
         let n = images.dim(0);
         assert_eq!(labels.len(), n);
         let batch = batch.max(1).min(n.max(1));
-        let chw = IMAGE_C * IMAGE_HW * IMAGE_HW;
-        let mut session = self.plan(kernel, batch).session();
+        let (ic, ih, iw) = self.spec.input();
+        let chw = ic * ih * iw;
+        let mut session = self
+            .plan(kernel, batch)
+            .expect("batch must be non-empty (b >= 1)")
+            .session();
         let mut correct = 0usize;
         let mut done = 0usize;
         while done < n {
@@ -250,19 +279,27 @@ impl BnnEngine {
         correct as f32 / n as f32
     }
 
-    /// The ORIGINAL unfused layer-by-layer pipeline, kept verbatim as
-    /// the bit-exactness oracle for the compiled plan path (see
-    /// `tests/plan_session.rs`).  Allocates per layer; never use it for
+    /// The ORIGINAL unfused layer-by-layer pipeline, generalized to
+    /// walk the spec's weighted blocks, kept as the bit-exactness
+    /// oracle for the compiled plan path (see `tests/plan_session.rs`
+    /// and `tests/netspec.rs`).  Allocates per layer; never use it for
     /// serving.
+    ///
+    /// The `Sign` ops of the IR are not executed separately here: every
+    /// binarized conv/fc kernel binarizes its own input internally
+    /// (sign is idempotent on {-1,+1}), exactly as validation pairs
+    /// them.
     pub fn forward_reference(&self, x: &Tensor, kernel: EngineKernel)
                              -> Tensor {
-        assert_eq!(x.dim(1), IMAGE_C);
-        assert_eq!(x.dim(2), IMAGE_HW);
+        let (ic, ih, iw) = self.spec.input();
+        assert_eq!(x.dim(1), ic, "input channels");
+        assert_eq!(x.dim(2), ih, "input height");
+        assert_eq!(x.dim(3), iw, "input width");
         let mut scratch = ConvScratch::default();
         let mut h = x.clone();
         for layer in &self.convs {
             let (ck, w): (ConvKernel, ConvWeights) = if !layer.binarized {
-                // conv1: float input in every arm.
+                // Real-valued input in every arm.
                 (ConvKernel::FloatReal(kernel.float_impl()),
                  ConvWeights::Float(Arc::clone(&layer.w_float)))
             } else {
@@ -293,20 +330,27 @@ impl BnnEngine {
 
         for layer in &self.fcs {
             assert_eq!(h.dim(1), layer.din);
-            let (lk, w): (LinearKernel, ConvWeights) = match kernel {
-                EngineKernel::Xnor(imp) => (
-                    LinearKernel::Xnor(imp),
-                    ConvWeights::Packed(Arc::clone(&layer.w_packed)),
-                ),
-                _ => (
-                    LinearKernel::FloatBinarized(kernel.float_impl()),
-                    ConvWeights::Float(Arc::clone(&layer.w_float)),
-                ),
+            let (lk, w): (LinearKernel, ConvWeights) = if !layer.binarized {
+                (LinearKernel::FloatReal(kernel.float_impl()),
+                 ConvWeights::Float(Arc::clone(&layer.w_float)))
+            } else {
+                match kernel {
+                    EngineKernel::Xnor(imp) => (
+                        LinearKernel::Xnor(imp),
+                        ConvWeights::Packed(Arc::clone(
+                            layer.w_packed.as_ref().expect("packed weights"),
+                        )),
+                    ),
+                    _ => (
+                        LinearKernel::FloatBinarized(kernel.float_impl()),
+                        ConvWeights::Float(Arc::clone(&layer.w_float)),
+                    ),
+                }
             };
             h = linear(&h, &w, layer.dout, lk);
             bn_affine_rows(&mut h, &layer.bn_a, &layer.bn_b);
         }
-        assert_eq!(h.dim(1), NUM_CLASSES);
+        assert_eq!(h.dim(1), self.spec.classes());
         h
     }
 }

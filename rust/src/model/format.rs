@@ -1,24 +1,50 @@
-//! BKW1 weight-file format (mirror of python/compile/train.py).
+//! BKW weight-file formats (mirror of python/compile/train.py).
+//!
+//! Two wire versions share the tensor-record encoding:
 //!
 //! ```text
-//!     magic  b"BKW1"
-//!     u32le  n_tensors
-//!     n_tensors * {
-//!         u16le name_len, name (utf-8),
-//!         u8 dtype (0 = f32, 1 = u32),
-//!         u8 ndim, ndim * u32le dims,
-//!         data (little-endian, row-major)
-//!     }
+//!     BKW1:  magic b"BKW1", tensor section
+//!     BKW2:  magic b"BKW2", spec section, tensor section
+//!
+//!     spec section:
+//!         u32le  input_c, input_h, input_w, classes
+//!         u32le  n_ops
+//!         n_ops * { u8 opcode, fields }
+//!             0 = conv2d:   u32le cout, ksize, stride, pad; u8 binarized
+//!             1 = maxpool2
+//!             2 = batchnorm
+//!             3 = sign
+//!             4 = flatten
+//!             5 = linear:   u32le dout; u8 binarized
+//!
+//!     tensor section:
+//!         u32le  n_tensors
+//!         n_tensors * {
+//!             u16le name_len, name (utf-8),
+//!             u8 dtype (0 = f32, 1 = u32),
+//!             u8 ndim, ndim * u32le dims,
+//!             data (little-endian, row-major)
+//!         }
 //! ```
 //!
-//! Contains `meta.widths` (u32[9]) plus, per layer, the sign-binarized
-//! weight tensor and the folded BN affine (`bn_<layer>.a` / `.b`).
+//! BKW2 files carry their own [`NetSpec`], so the engine can serve ANY
+//! validated architecture; BKW1 files describe only the legacy CIFAR
+//! net and keep loading through [`NetSpec::from_widths`] over their
+//! `meta.widths` tensor (u32[9]).  Both store, per weighted layer, the
+//! sign-binarized weight tensor (`<layer>.w`) and the folded BN affine
+//! (`bn_<layer>.a` / `.b`) under the canonical names of
+//! [`NetSpec::layer_names`].
+//!
+//! Structural failures are typed [`FormatError`]s; the CLI wraps them
+//! in `anyhow` context (file path, tensor name) at the boundary.
 
 use std::collections::BTreeMap;
-use std::io::Read;
+use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{Context, Result};
+
+use super::spec::{LayerSpec, NetSpec, SpecError};
 
 /// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,7 +55,59 @@ pub enum Dtype {
     U32,
 }
 
-/// One named tensor from a BKW1 file.
+/// Typed BKW parse/write failures (see the module docs for the wire
+/// layout each variant polices).
+#[derive(Debug, thiserror::Error)]
+pub enum FormatError {
+    /// Magic bytes that are neither `BKW1` nor `BKW2`.
+    #[error("bad magic {0:?} (expected BKW1 or BKW2)")]
+    BadMagic([u8; 4]),
+    /// A tensor count past the sanity bound.
+    #[error("implausible tensor count {0}")]
+    TensorCount(usize),
+    /// A tensor name that is not UTF-8.
+    #[error("tensor name is not utf-8")]
+    BadName,
+    /// An unknown dtype byte.
+    #[error("unknown dtype {dtype} for tensor '{name}'")]
+    UnknownDtype {
+        /// Tensor being parsed.
+        name: String,
+        /// The offending dtype byte.
+        dtype: u8,
+    },
+    /// A rank past the sanity bound.
+    #[error("implausible ndim {0}")]
+    BadNdim(usize),
+    /// An element count past the sanity bound.
+    #[error("implausible element count {0}")]
+    ElementCount(usize),
+    /// An unknown layer opcode in a BKW2 spec section.
+    #[error("unknown layer opcode {0} in spec section")]
+    BadOpcode(u8),
+    /// A spec-section op count past the sanity bound.
+    #[error("implausible spec op count {0}")]
+    OpCount(usize),
+    /// A spec-section dimension (input, classes, or an op field) past
+    /// the sanity bound — kept small enough that the IR's shape
+    /// arithmetic can never overflow on crafted files.
+    #[error("implausible spec dimension {0}")]
+    SpecDim(usize),
+    /// The embedded spec failed [`NetSpec`] validation.
+    #[error("embedded spec is invalid: {0}")]
+    Spec(#[from] SpecError),
+    /// Underlying I/O failure (including truncation).
+    #[error("i/o: {0}")]
+    Io(#[from] std::io::Error),
+    /// A lookup for a tensor the file does not contain.
+    #[error("missing tensor '{0}'")]
+    MissingTensor(String),
+    /// A tensor accessed as the wrong dtype.
+    #[error("tensor is not {0}")]
+    DtypeMismatch(&'static str),
+}
+
+/// One named tensor from a BKW file.
 #[derive(Debug, Clone)]
 pub struct WeightTensor {
     /// Element type.
@@ -52,97 +130,287 @@ impl WeightTensor {
     }
 
     /// The elements as f32 (errors on non-f32 tensors).
-    pub fn as_f32(&self) -> Result<Vec<f32>> {
-        ensure!(self.dtype == Dtype::F32, "tensor is not f32");
+    pub fn as_f32(&self) -> Result<Vec<f32>, FormatError> {
+        if self.dtype != Dtype::F32 {
+            return Err(FormatError::DtypeMismatch("f32"));
+        }
         Ok(self.words.iter().map(|&w| f32::from_bits(w)).collect())
     }
 
     /// The raw words of a u32 tensor (errors on non-u32 tensors).
-    pub fn as_u32(&self) -> Result<&[u32]> {
-        ensure!(self.dtype == Dtype::U32, "tensor is not u32");
+    pub fn as_u32(&self) -> Result<&[u32], FormatError> {
+        if self.dtype != Dtype::U32 {
+            return Err(FormatError::DtypeMismatch("u32"));
+        }
         Ok(&self.words)
     }
 }
 
-/// A parsed BKW1 file.
+/// A parsed BKW1/BKW2 file.
 #[derive(Debug, Clone)]
 pub struct WeightFile {
     tensors: BTreeMap<String, WeightTensor>,
+    /// The embedded architecture (BKW2 only).
+    spec: Option<NetSpec>,
 }
 
-fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>, FormatError> {
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf)?;
     Ok(buf)
 }
 
-fn read_u16(r: &mut impl Read) -> Result<u16> {
+fn read_u16(r: &mut impl Read) -> Result<u16, FormatError> {
     let b = read_exact(r, 2)?;
     Ok(u16::from_le_bytes([b[0], b[1]]))
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
+fn read_u32(r: &mut impl Read) -> Result<u32, FormatError> {
     let b = read_exact(r, 4)?;
     Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
 }
 
+fn read_u8(r: &mut impl Read) -> Result<u8, FormatError> {
+    Ok(read_exact(r, 1)?[0])
+}
+
+/// BKW2 layer opcodes (shared with python/compile/train.py).
+const OP_CONV2D: u8 = 0;
+const OP_MAXPOOL2: u8 = 1;
+const OP_BATCHNORM: u8 = 2;
+const OP_SIGN: u8 = 3;
+const OP_FLATTEN: u8 = 4;
+const OP_LINEAR: u8 = 5;
+
+/// Sanity bound on every spec-section dimension: generous for real
+/// nets, small enough that validation's shape products (`c*h*w`,
+/// `cin*k*k`, ...) stay far from usize overflow on crafted files.
+const MAX_SPEC_DIM: usize = 1 << 20;
+
+fn read_dim(r: &mut impl Read) -> Result<usize, FormatError> {
+    let v = read_u32(r)? as usize;
+    if v > MAX_SPEC_DIM {
+        return Err(FormatError::SpecDim(v));
+    }
+    Ok(v)
+}
+
+fn read_spec(r: &mut impl Read) -> Result<NetSpec, FormatError> {
+    let c = read_dim(r)?;
+    let h = read_dim(r)?;
+    let w = read_dim(r)?;
+    let classes = read_dim(r)?;
+    let n_ops = read_u32(r)? as usize;
+    if n_ops > 10_000 {
+        return Err(FormatError::OpCount(n_ops));
+    }
+    let mut layers = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let opcode = read_u8(r)?;
+        layers.push(match opcode {
+            OP_CONV2D => {
+                let cout = read_dim(r)?;
+                let ksize = read_dim(r)?;
+                let stride = read_dim(r)?;
+                let pad = read_dim(r)?;
+                let binarized = read_u8(r)? != 0;
+                LayerSpec::Conv2d { cout, ksize, stride, pad, binarized }
+            }
+            OP_MAXPOOL2 => LayerSpec::MaxPool2,
+            OP_BATCHNORM => LayerSpec::BatchNorm,
+            OP_SIGN => LayerSpec::Sign,
+            OP_FLATTEN => LayerSpec::Flatten,
+            OP_LINEAR => {
+                let dout = read_dim(r)?;
+                let binarized = read_u8(r)? != 0;
+                LayerSpec::Linear { dout, binarized }
+            }
+            other => return Err(FormatError::BadOpcode(other)),
+        });
+    }
+    Ok(NetSpec::with_classes((c, h, w), classes, layers)?)
+}
+
+fn write_spec(w: &mut impl Write, spec: &NetSpec)
+              -> Result<(), FormatError> {
+    let (ic, ih, iw) = spec.input();
+    for v in [ic, ih, iw, spec.classes(), spec.layers().len()] {
+        w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    for op in spec.layers() {
+        match op {
+            LayerSpec::Conv2d { cout, ksize, stride, pad, binarized } => {
+                w.write_all(&[OP_CONV2D])?;
+                for v in [*cout, *ksize, *stride, *pad] {
+                    w.write_all(&(v as u32).to_le_bytes())?;
+                }
+                w.write_all(&[u8::from(*binarized)])?;
+            }
+            LayerSpec::MaxPool2 => w.write_all(&[OP_MAXPOOL2])?,
+            LayerSpec::BatchNorm => w.write_all(&[OP_BATCHNORM])?,
+            LayerSpec::Sign => w.write_all(&[OP_SIGN])?,
+            LayerSpec::Flatten => w.write_all(&[OP_FLATTEN])?,
+            LayerSpec::Linear { dout, binarized } => {
+                w.write_all(&[OP_LINEAR])?;
+                w.write_all(&(*dout as u32).to_le_bytes())?;
+                w.write_all(&[u8::from(*binarized)])?;
+            }
+        }
+    }
+    Ok(())
+}
+
 impl WeightFile {
-    /// Assemble a weight file from in-memory tensors — the synthetic-
-    /// model path used by `testing::synthetic_engine` and tests that
-    /// need a [`crate::model::BnnEngine`] without artifacts on disk.
+    /// Assemble a legacy (spec-less) weight file from in-memory tensors
+    /// — callers rely on the `meta.widths` tensor for the architecture,
+    /// exactly like a parsed BKW1 file.
     pub fn from_tensors(tensors: BTreeMap<String, WeightTensor>) -> Self {
-        Self { tensors }
+        Self { tensors, spec: None }
     }
 
-    /// Parse a BKW1 stream.
-    pub fn parse(mut r: impl Read) -> Result<Self> {
+    /// Assemble a weight file carrying its own architecture — the BKW2
+    /// path used by `testing::synthetic_engine_spec` and the writer.
+    pub fn from_tensors_with_spec(
+        tensors: BTreeMap<String, WeightTensor>,
+        spec: NetSpec,
+    ) -> Self {
+        Self { tensors, spec: Some(spec) }
+    }
+
+    /// Parse a BKW1 or BKW2 stream.
+    pub fn parse(mut r: impl Read) -> Result<Self, FormatError> {
         let magic = read_exact(&mut r, 4)?;
-        ensure!(&magic == b"BKW1", "bad magic {magic:?}");
+        let spec = match &magic[..] {
+            b"BKW1" => None,
+            b"BKW2" => Some(read_spec(&mut r)?),
+            _ => {
+                return Err(FormatError::BadMagic([
+                    magic[0], magic[1], magic[2], magic[3],
+                ]))
+            }
+        };
         let n = read_u32(&mut r)? as usize;
-        ensure!(n < 100_000, "implausible tensor count {n}");
+        if n >= 100_000 {
+            return Err(FormatError::TensorCount(n));
+        }
         let mut tensors = BTreeMap::new();
         for _ in 0..n {
             let name_len = read_u16(&mut r)? as usize;
             let name = String::from_utf8(read_exact(&mut r, name_len)?)
-                .context("tensor name not utf-8")?;
-            let dt = read_exact(&mut r, 1)?[0];
+                .map_err(|_| FormatError::BadName)?;
+            let dt = read_u8(&mut r)?;
             let dtype = match dt {
                 0 => Dtype::F32,
                 1 => Dtype::U32,
-                _ => bail!("unknown dtype {dt} for '{name}'"),
+                _ => {
+                    return Err(FormatError::UnknownDtype {
+                        name,
+                        dtype: dt,
+                    })
+                }
             };
-            let ndim = read_exact(&mut r, 1)?[0] as usize;
-            ensure!(ndim <= 8, "implausible ndim {ndim}");
+            let ndim = read_u8(&mut r)? as usize;
+            if ndim > 8 {
+                return Err(FormatError::BadNdim(ndim));
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 shape.push(read_u32(&mut r)? as usize);
             }
             let count: usize = shape.iter().product();
-            ensure!(count < 1 << 28, "implausible element count {count}");
-            let raw = read_exact(&mut r, count * 4)
-                .with_context(|| format!("data of '{name}'"))?;
+            if count >= 1 << 28 {
+                return Err(FormatError::ElementCount(count));
+            }
+            let raw = read_exact(&mut r, count * 4)?;
             let words = raw
                 .chunks_exact(4)
                 .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             tensors.insert(name, WeightTensor { dtype, shape, words });
         }
-        Ok(Self { tensors })
+        Ok(Self { tensors, spec })
     }
 
-    /// Load a BKW1 file from disk.
+    /// Serialize: BKW2 when the file carries a spec, BKW1 otherwise.
+    pub fn write_to(&self, mut w: impl Write) -> Result<(), FormatError> {
+        match &self.spec {
+            Some(spec) => {
+                w.write_all(b"BKW2")?;
+                write_spec(&mut w, spec)?;
+            }
+            None => w.write_all(b"BKW1")?,
+        }
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u16).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&[match t.dtype {
+                Dtype::F32 => 0u8,
+                Dtype::U32 => 1u8,
+            }])?;
+            w.write_all(&[t.shape.len() as u8])?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &word in &t.words {
+                w.write_all(&word.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to a byte vector (see [`WeightFile::write_to`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.write_to(&mut out)
+            .expect("writing to a Vec cannot fail");
+        out
+    }
+
+    /// Load a BKW file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let f = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
         Self::parse(std::io::BufReader::new(f))
+            .with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// Write a BKW file to disk (BKW2 iff a spec is embedded).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        self.write_to(std::io::BufWriter::new(f))
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// The embedded architecture, when the file is BKW2.
+    pub fn embedded_spec(&self) -> Option<&NetSpec> {
+        self.spec.as_ref()
+    }
+
+    /// The architecture this file describes: the embedded BKW2 spec,
+    /// or (BKW1) the legacy spec synthesized from `meta.widths`.
+    pub fn net_spec(&self) -> Result<NetSpec> {
+        match &self.spec {
+            Some(spec) => Ok(spec.clone()),
+            None => NetSpec::from_widths(&self.widths()?)
+                .context("synthesizing legacy spec from meta.widths"),
+        }
+    }
+
+    /// Wire version this file round-trips as (1 or 2).
+    pub fn version(&self) -> u8 {
+        if self.spec.is_some() { 2 } else { 1 }
     }
 
     /// Look one tensor up by name.
-    pub fn get(&self, name: &str) -> Result<&WeightTensor> {
+    pub fn get(&self, name: &str) -> Result<&WeightTensor, FormatError> {
         self.tensors
             .get(name)
-            .with_context(|| format!("missing tensor '{name}'"))
+            .ok_or_else(|| FormatError::MissingTensor(name.to_string()))
     }
 
     /// Every tensor name, sorted.
@@ -160,8 +428,8 @@ impl WeightFile {
         self.tensors.is_empty()
     }
 
-    /// The architecture widths vector (meta.widths).
-    pub fn widths(&self) -> Result<Vec<u32>> {
+    /// The legacy architecture widths vector (meta.widths).
+    pub fn widths(&self) -> Result<Vec<u32>, FormatError> {
         Ok(self.get("meta.widths")?.as_u32()?.to_vec())
     }
 }
@@ -203,6 +471,8 @@ mod tests {
     fn parse_sample() {
         let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
         assert_eq!(wf.len(), 2);
+        assert_eq!(wf.version(), 1);
+        assert!(wf.embedded_spec().is_none());
         assert_eq!(wf.get("meta.widths").unwrap().as_u32().unwrap(),
                    &[8, 16, 10]);
         let w = wf.get("conv1.w").unwrap();
@@ -214,13 +484,15 @@ mod tests {
     fn rejects_bad_magic() {
         let mut blob = sample_blob();
         blob[0] = b'X';
-        assert!(WeightFile::parse(&blob[..]).is_err());
+        assert!(matches!(WeightFile::parse(&blob[..]),
+                         Err(FormatError::BadMagic(_))));
     }
 
     #[test]
     fn rejects_truncated() {
         let blob = sample_blob();
-        assert!(WeightFile::parse(&blob[..blob.len() - 3]).is_err());
+        assert!(matches!(WeightFile::parse(&blob[..blob.len() - 3]),
+                         Err(FormatError::Io(_))));
     }
 
     #[test]
@@ -233,6 +505,64 @@ mod tests {
     #[test]
     fn missing_tensor_errors() {
         let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
-        assert!(wf.get("nope").is_err());
+        assert!(matches!(wf.get("nope"),
+                         Err(FormatError::MissingTensor(_))));
+    }
+
+    #[test]
+    fn bkw1_round_trips_through_writer() {
+        let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        let bytes = wf.to_bytes();
+        assert_eq!(&bytes[..4], b"BKW1");
+        let back = WeightFile::parse(&bytes[..]).unwrap();
+        assert_eq!(back.len(), wf.len());
+        assert_eq!(back.get("conv1.w").unwrap().as_f32().unwrap(),
+                   wf.get("conv1.w").unwrap().as_f32().unwrap());
+    }
+
+    #[test]
+    fn bkw2_embeds_and_round_trips_the_spec() {
+        let spec = NetSpec::builder((1, 4, 4))
+            .conv(2, 3)
+            .linear(3)
+            .build()
+            .unwrap();
+        let wf = WeightFile::from_tensors_with_spec(
+            BTreeMap::new(),
+            spec.clone(),
+        );
+        assert_eq!(wf.version(), 2);
+        let bytes = wf.to_bytes();
+        assert_eq!(&bytes[..4], b"BKW2");
+        let back = WeightFile::parse(&bytes[..]).unwrap();
+        assert_eq!(back.embedded_spec(), Some(&spec));
+        assert_eq!(back.net_spec().unwrap(), spec);
+    }
+
+    #[test]
+    fn bkw2_with_invalid_spec_is_rejected() {
+        // A structurally valid spec section describing an invalid net
+        // (no final linear): input 1x2x2, classes 5, ops [flatten].
+        let mut out = Vec::new();
+        out.extend(b"BKW2");
+        for v in [1u32, 2, 2, 5, 1] {
+            out.extend(v.to_le_bytes());
+        }
+        out.push(4); // flatten opcode
+        out.extend(0u32.to_le_bytes()); // zero tensors
+        assert!(matches!(WeightFile::parse(&out[..]),
+                         Err(FormatError::Spec(_))));
+    }
+
+    #[test]
+    fn bkw2_bad_opcode_is_rejected() {
+        let mut out = Vec::new();
+        out.extend(b"BKW2");
+        for v in [1u32, 2, 2, 5, 1] {
+            out.extend(v.to_le_bytes());
+        }
+        out.push(99); // unknown opcode
+        assert!(matches!(WeightFile::parse(&out[..]),
+                         Err(FormatError::BadOpcode(99))));
     }
 }

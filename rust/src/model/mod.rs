@@ -1,18 +1,23 @@
-//! The BNN model layer: architecture config, BKW1 weights, the native
-//! inference engine (the Table-2 "CPU" arm), and its compiled
-//! plan/session execution path.
+//! The BNN model layer: the [`NetSpec`] architecture IR, BKW1/BKW2
+//! weights, the native inference engine (the Table-2 "CPU" arm), and
+//! its compiled plan/session execution path.
 //!
-//! Serving flow: load a [`BnnEngine`], compile a [`Plan`] once per
-//! (kernel, max_batch), derive one [`Session`] per worker thread, and
-//! call [`Session::run`] per batch — zero heap allocation in steady
-//! state.
+//! Serving flow: describe (or load) a [`NetSpec`], load a
+//! [`BnnEngine`], compile a [`Plan`] once per (kernel, max_batch),
+//! derive one [`Session`] per worker thread, and call [`Session::run`]
+//! per batch — zero heap allocation in steady state.  The engine is
+//! architecture-generic: any spec the IR validates (arbitrary conv
+//! stacks, fc-only nets, non-square inputs, any class count) plans and
+//! runs on every kernel arm through this Plan/Session API.  (The HTTP
+//! front-end in `server`/`coordinator` still assumes the paper's
+//! 3x32x32/10-class request shape and guards for it at startup.)
 
 pub mod bnn;
-pub mod config;
 pub mod format;
 pub mod plan;
+pub mod spec;
 
 pub use bnn::{BnnEngine, EngineKernel};
-pub use config::{ConvSpec, FcSpec, ModelConfig};
-pub use format::{Dtype, WeightFile, WeightTensor};
+pub use format::{Dtype, FormatError, WeightFile, WeightTensor};
 pub use plan::{Plan, Session};
+pub use spec::{LayerSpec, NetSpec, NetSpecBuilder, Shape, SpecError};

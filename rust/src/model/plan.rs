@@ -1,23 +1,25 @@
 //! Compiled execution plans — the engine's zero-allocation hot path.
 //!
-//! The legacy `forward` re-dispatched the [`EngineKernel`] enum per
-//! layer per call, cloned its input, and allocated a fresh activation
-//! tensor for every op.  [`BnnEngine::plan`] instead lowers the network
+//! [`BnnEngine::plan`] lowers the engine's [`crate::model::NetSpec`]
 //! ONCE into a flat [`Op`] program with all kernel dispatch resolved at
 //! plan time, and [`Plan::session`] pairs that program with preallocated
 //! ping-pong activation buffers, im2col scratch, and packed-activation
 //! buffers sized for `max_batch` — so [`Session::run`] performs no heap
 //! allocation in steady state (pinned by `tests/plan_session.rs`).
+//! Lowering is architecture-generic: any validated spec (arbitrary conv
+//! stacks, fc-only nets, non-square inputs, any class count, any
+//! per-layer `binarized` pattern) compiles on every arm.
 //!
 //! Lowering per arm:
 //!
-//! * **Xnor** — conv1 runs float (`im2col` + blocked gemm); every
-//!   binarized conv becomes `encode` (fused im2col + bn + sign + pack,
-//!   the PREVIOUS layer's BatchNorm folded into the sign) + `xnor-gemm`
-//!   (+ `pool`); the conv→fc boundary and each fc→fc boundary become
-//!   fused `bn_sign_pack` epilogues that emit the next layer's
-//!   [`PackedMatrix`] directly — no bn'd float activation is ever
-//!   materialized past conv1.
+//! * **Xnor** — non-binarized layers run float (`im2col` + SIMD gemm;
+//!   a deferred BatchNorm materializes first when one is pending);
+//!   every binarized conv becomes `encode` (fused im2col + bn + sign +
+//!   pack, the PREVIOUS layer's BatchNorm folded into the sign) +
+//!   `xnor-gemm` (+ `pool`); a layer boundary feeding a binarized
+//!   consumer becomes a fused `bn_sign_pack` epilogue that emits the
+//!   next layer's [`PackedMatrix`] directly — no bn'd float activation
+//!   is ever materialized between binarized layers.
 //! * **Control / Optimized** — the paper's baselines stay unfused
 //!   (im2col+sign, float gemm, pool, bn as separate ops) but run
 //!   against the same reusable buffers.
@@ -41,10 +43,11 @@
 
 use std::sync::Arc;
 
-use crate::bitops::{xnor_gemm, xnor_gemm_pooled, XnorImpl};
+use crate::bitops::{pack_rows_from, xnor_gemm, xnor_gemm_pooled, XnorImpl};
 use crate::gemm::{gemm_f32, GemmImpl};
 use crate::nn::fuse::{bn_rows_from_gemm_f32, bn_rows_from_gemm_i32,
-                      bn_sign_pack_nchw, bn_sign_pack_rows_i32};
+                      bn_sign_pack_nchw, bn_sign_pack_rows_f32,
+                      bn_sign_pack_rows_i32};
 use crate::nn::im2col::{col2im_nchw_i32_into, col2im_nchw_into,
                         im2col_pack_bn, im2col_t_into, out_hw};
 use crate::nn::norm::bn_affine_nchw_slice;
@@ -55,7 +58,7 @@ use crate::utils::threadpool::ThreadPool;
 use crate::utils::Stopwatch;
 
 use super::bnn::{BnnEngine, EngineKernel};
-use super::config::{IMAGE_C, IMAGE_HW, NUM_CLASSES};
+use super::spec::SpecError;
 
 /// Per-image conv geometry, resolved at plan time.
 #[derive(Debug, Clone, Copy)]
@@ -104,32 +107,40 @@ enum Op {
     ConvGemmX { w: Arc<PackedMatrix>, g: ConvGeom, imp: XnorImpl },
     /// 2x2 max-pool into the other activation buffer (input dims given).
     Pool { c: usize, h: usize, w: usize },
-    /// In-place per-channel bn on the current activation (float arms).
+    /// In-place per-channel bn on the current activation (float arms,
+    /// or a deferred xnor-arm bn materializing before a non-binarized
+    /// consumer).
     BnConv { bn: Bn, c: usize, hw: usize },
     /// Flatten marker: the activation is henceforth rows [b, feat].
     /// Row-major NCHW already has (c, h, w) feature order — no data
     /// motion.
     Flatten { feat: usize },
     /// In-place sign over the current activation rows (float-arm fc
-    /// input binarization).
+    /// input binarization; copies the network input into the ping
+    /// buffer first when it is the direct source, e.g. fc-only nets).
     SignRows { k: usize },
-    /// Float fc gemm: activation rows [b, k] -> float gemm scratch
-    /// [d, b].
+    /// Float fc gemm: activation rows [b, k] (possibly the raw network
+    /// input of an fc-only net) -> float gemm scratch [d, b].
     FcGemmF { w: Arc<Vec<f32>>, d: usize, k: usize, imp: GemmImpl },
     /// Xnor fc gemm: packed rows [b, k] -> i32 gemm scratch [d, b].
     FcGemmX { w: Arc<PackedMatrix>, d: usize, k: usize, imp: XnorImpl },
-    /// Fused epilogue (xnor arm, conv->fc boundary): float NCHW
-    /// activation + bn -> packed rows [b, c*hw].
-    BnSignPackNchw { bn: Bn, c: usize, hw: usize },
-    /// Fused epilogue (xnor arm, fc->fc boundary): i32 gemm scratch
-    /// [d, b] + bn -> packed rows [b, d].
-    BnSignPackRows { bn: Bn, d: usize },
-    /// i32 gemm scratch [d, b] + bn -> float logits [b, d] (xnor arm
-    /// final layer).
-    BnRowsI { bn: Bn, d: usize },
+    /// Fused epilogue (xnor arm, image->binarized-fc boundary): float
+    /// NCHW activation (+ optional deferred bn) -> packed rows
+    /// [b, c*hw].  `bn: None` is the fc-only case: the raw input rows
+    /// are sign-packed directly.
+    SignPackImage { bn: Option<Bn>, c: usize, hw: usize },
+    /// Fused epilogue (xnor arm, fc->binarized-fc boundary): gemm
+    /// scratch [d, b] (`i32` from an xnor gemm, or `f32` from a
+    /// non-binarized fc when `from_f32`) + bn -> packed rows [b, d].
+    BnSignPackRows { bn: Bn, d: usize, from_f32: bool },
+    /// i32 gemm scratch [d, b] + bn -> float rows [b, d]; into the
+    /// logits tensor when `logits`, else into the other activation
+    /// buffer (xnor arm: final layer, or a non-binarized consumer
+    /// follows).
+    BnRowsI { bn: Bn, d: usize, logits: bool },
     /// f32 gemm scratch [d, b] + bn -> float rows [b, d]; into the
     /// logits tensor when `logits`, else into the other activation
-    /// buffer (float arms).
+    /// buffer.
     BnRowsF { bn: Bn, d: usize, logits: bool },
 }
 
@@ -146,8 +157,10 @@ struct BufSpec {
 pub(crate) struct PlanInner {
     kernel: EngineKernel,
     max_batch: usize,
-    image_c: usize,
-    image_hw: usize,
+    input_c: usize,
+    input_h: usize,
+    input_w: usize,
+    classes: usize,
     ops: Vec<Op>,
     names: Vec<String>,
     bufs: BufSpec,
@@ -174,6 +187,16 @@ impl Plan {
     /// sized for it).
     pub fn max_batch(&self) -> usize {
         self.inner.max_batch
+    }
+
+    /// Per-image input shape (C, H, W) the plan expects.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        (self.inner.input_c, self.inner.input_h, self.inner.input_w)
+    }
+
+    /// Output class count (logits are [B, classes]).
+    pub fn classes(&self) -> usize {
+        self.inner.classes
     }
 
     /// Number of lowered ops (one profiling stage each).
@@ -203,6 +226,27 @@ impl Plan {
             .collect()
     }
 
+    /// Per-buffer sizes a [`Session`] of this plan preallocates, as
+    /// `(name, element-or-word count, bytes)` — the `describe` CLI's
+    /// session-footprint table.  All entries are 4-byte elements
+    /// (f32 / i32 / u32 words).
+    pub fn buffer_sizes(&self) -> Vec<(&'static str, usize, usize)> {
+        let s = self.inner.bufs;
+        let out = self.inner.max_batch * self.inner.classes;
+        [
+            ("act_a (f32)", s.act),
+            ("act_b (f32)", s.act),
+            ("cols (f32)", s.cols),
+            ("packed (u32 words)", s.packed_words),
+            ("gemm_i32", s.gemm_i32),
+            ("gemm_f32", s.gemm_f32),
+            ("logits (f32)", out),
+        ]
+        .into_iter()
+        .map(|(n, e)| (n, e, e * 4))
+        .collect()
+    }
+
     /// Materialize an execution context: every buffer the op program
     /// needs, preallocated for `max_batch`.  `Session::run` then never
     /// allocates.
@@ -216,7 +260,10 @@ impl Plan {
             packed: PackedMatrix::with_word_capacity(s.packed_words),
             gemm_i32: vec![0; s.gemm_i32],
             gemm_f32: vec![0.0; s.gemm_f32],
-            out: Tensor::zeros(vec![self.inner.max_batch, NUM_CLASSES]),
+            out: Tensor::zeros(vec![
+                self.inner.max_batch,
+                self.inner.classes,
+            ]),
         }
     }
 }
@@ -224,7 +271,9 @@ impl Plan {
 impl BnnEngine {
     /// Lower the network into a flat op program for `kernel`, sized for
     /// batches up to `max_batch`.  All per-layer kernel dispatch happens
-    /// here, once; [`Session::run`] just walks the ops.
+    /// here, once; [`Session::run`] just walks the ops.  The only
+    /// fallible input is `max_batch` (the spec itself was validated at
+    /// engine construction), surfaced as a typed [`SpecError`].
     ///
     /// A `Plan` is an `Arc` around the compiled program: `Clone` is a
     /// refcount bump, and the plan is `Send + Sync`, so a replica pool
@@ -242,41 +291,47 @@ impl BnnEngine {
     ///     [8, 8, 8, 8, 8, 8, 16, 16, 10], 7);
     ///
     /// // 1. compile once ...
-    /// let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4);
+    /// let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4)?;
     /// // 2. ... mint a session (preallocated buffers) ...
     /// let mut session = plan.session();
     /// // 3. ... serve: zero steady-state allocation.
     /// let images = Tensor::zeros(vec![2, 3, 32, 32]);
     /// let logits = session.run(&images);
     /// assert_eq!(logits.shape(), &[2, 10]);
+    /// # Ok::<(), bitkernel::model::SpecError>(())
     /// ```
-    pub fn plan(&self, kernel: EngineKernel, max_batch: usize) -> Plan {
-        assert!(max_batch >= 1, "max_batch must be >= 1");
-        assert!(!self.convs.is_empty() && !self.fcs.is_empty(),
-                "cannot plan an empty network");
+    pub fn plan(&self, kernel: EngineKernel, max_batch: usize)
+                -> Result<Plan, SpecError> {
+        if max_batch == 0 {
+            return Err(SpecError::ZeroBatch);
+        }
         let mb = max_batch;
         let mut ops: Vec<Op> = Vec::new();
         let mut names: Vec<String> = Vec::new();
         let mut bufs = BufSpec::default();
 
         let is_xnor = matches!(kernel, EngineKernel::Xnor(_));
-        // Float gemm used wherever a float conv/fc runs: conv1 in every
-        // arm, everything on the Control/Optimized arms.  Control is the
-        // paper's naive baseline; the other arms get the widest float
-        // kernel (shared with `forward_reference` so the compiled path
-        // stays bit-identical to the oracle).
+        // Float gemm used wherever a float conv/fc runs: non-binarized
+        // layers on every arm, everything on the Control/Optimized
+        // arms.  Control is the paper's naive baseline; the other arms
+        // get the widest float kernel (shared with `forward_reference`
+        // so the compiled path stays bit-identical to the oracle).
         let float_imp = kernel.float_impl();
         // Largest thread count any resolved op asks for; > 0 means the
         // plan owns a persistent pool.
         let mut pool_threads = 0usize;
 
-        let (mut c, mut h, mut w) = (IMAGE_C, IMAGE_HW, IMAGE_HW);
-        // Xnor arm: each layer's bn is folded into its consumer's sign.
-        let mut pending_bn: Option<Bn> = None;
+        let (ic, ih, iw) = self.spec.input();
+        let (mut c, mut h, mut w) = (ic, ih, iw);
+        // Xnor arm: each layer's bn is deferred and folded into its
+        // consumer's sign — or materialized late (`BnConv`) when the
+        // consumer is not binarized.  The owner name rides along for
+        // the stage label.
+        let mut pending_bn: Option<(Bn, String)> = None;
 
         for (li, layer) in self.convs.iter().enumerate() {
             let p = &layer.params;
-            assert_eq!(c, p.cin, "conv{} input channels", li + 1);
+            debug_assert_eq!(c, p.cin, "conv{} input channels", li + 1);
             let (oh, ow) = out_hw(h, w, p.ksize, p.ksize, p.stride, p.pad);
             let g = ConvGeom {
                 cin: p.cin,
@@ -297,7 +352,10 @@ impl BnnEngine {
                 let EngineKernel::Xnor(imp) = kernel else { unreachable!() };
                 bufs.packed_words =
                     bufs.packed_words.max(n * k.div_ceil(32));
-                ops.push(Op::Encode { g, bn: pending_bn.take() });
+                ops.push(Op::Encode {
+                    g,
+                    bn: pending_bn.take().map(|(bn, _)| bn),
+                });
                 names.push(format!("{lname}:encode"));
                 bufs.gemm_i32 = bufs.gemm_i32.max(p.cout * n);
                 bufs.act = bufs.act.max(mb * p.cout * oh * ow);
@@ -314,8 +372,14 @@ impl BnnEngine {
                 });
                 names.push(xnor_gemm_stage_name(&lname, imp, rimp));
             } else {
-                debug_assert!(pending_bn.is_none(),
-                              "bn fold lost before conv{}", li + 1);
+                // Float path: every conv on the float arms, and
+                // non-binarized convs on the xnor arm — where a
+                // deferred bn must materialize first (a binarized
+                // consumer would have folded it into its sign).
+                if let Some((bn, owner)) = pending_bn.take() {
+                    ops.push(Op::BnConv { bn, c, hw: h * w });
+                    names.push(format!("{owner}:bn"));
+                }
                 let imp = float_imp;
                 bufs.cols = bufs.cols.max(n * k);
                 ops.push(Op::Im2col { g, sign: layer.binarized });
@@ -342,13 +406,13 @@ impl BnnEngine {
             }
             // The layer's BatchNorm (applied AFTER pooling, as in the
             // reference pipeline): materialized on the float arms,
-            // deferred into the next consumer's sign on the xnor arm.
+            // deferred into the next consumer on the xnor arm.
             let bn = Bn {
                 a: Arc::clone(&layer.bn_a),
                 b: Arc::clone(&layer.bn_b),
             };
             if is_xnor {
-                pending_bn = Some(bn);
+                pending_bn = Some((bn, lname));
             } else {
                 ops.push(Op::BnConv { bn, c, hw: h * w });
                 names.push(format!("{lname}:bn"));
@@ -356,16 +420,31 @@ impl BnnEngine {
         }
 
         let feat = c * h * w;
-        if is_xnor {
+        debug_assert!(!self.fcs.is_empty(), "validated spec has fcs");
+        let first_fc_binarized =
+            self.fcs.first().is_some_and(|f| f.binarized);
+        if is_xnor && first_fc_binarized {
+            // The flatten boundary feeds a binarized fc: emit its
+            // packed rows directly.  With convs the last conv's bn is
+            // pending and folds into the sign; without (fc-only nets)
+            // the raw input rows are sign-packed as-is.
             bufs.packed_words =
                 bufs.packed_words.max(mb * feat.div_ceil(32));
-            ops.push(Op::BnSignPackNchw {
-                bn: pending_bn.take().expect("final conv bn"),
-                c,
-                hw: h * w,
+            let bn = pending_bn.take().map(|(bn, _)| bn);
+            let fused_bn = bn.is_some();
+            ops.push(Op::SignPackImage { bn, c, hw: h * w });
+            names.push(if fused_bn {
+                "flatten:bn_sign_pack".to_string()
+            } else {
+                "flatten:sign_pack".to_string()
             });
-            names.push("flatten:bn_sign_pack".to_string());
         } else {
+            if let Some((bn, owner)) = pending_bn.take() {
+                // Xnor arm, but the first fc is not binarized: the
+                // deferred conv bn materializes.
+                ops.push(Op::BnConv { bn, c, hw: h * w });
+                names.push(format!("{owner}:bn"));
+            }
             ops.push(Op::Flatten { feat });
             names.push("flatten".to_string());
         }
@@ -373,49 +452,81 @@ impl BnnEngine {
         let mut kdim = feat;
         let nf = self.fcs.len();
         for (fi, fc) in self.fcs.iter().enumerate() {
-            assert_eq!(kdim, fc.din, "fc{} input width", fi + 1);
+            debug_assert_eq!(kdim, fc.din, "fc{} input width", fi + 1);
             let lname = format!("fc{}", fi + 1);
             let last = fi + 1 == nf;
+            // Does the next consumer want packed sign rows?
+            let next_binarized =
+                !last && is_xnor && self.fcs[fi + 1].binarized;
             let bn = Bn {
                 a: Arc::clone(&fc.bn_a),
                 b: Arc::clone(&fc.bn_b),
             };
-            match kernel {
-                EngineKernel::Xnor(imp) => {
-                    bufs.gemm_i32 = bufs.gemm_i32.max(fc.dout * mb);
-                    let rimp = plan_xnor_impl(imp, fc.dout, fc.din, mb);
-                    if let XnorImpl::Threaded(t) = rimp {
-                        pool_threads = pool_threads.max(t);
-                    }
-                    ops.push(Op::FcGemmX {
-                        w: Arc::clone(&fc.w_packed),
-                        d: fc.dout,
-                        k: fc.din,
-                        imp: rimp,
-                    });
-                    names.push(xnor_gemm_stage_name(&lname, imp, rimp));
-                    if last {
-                        ops.push(Op::BnRowsI { bn, d: fc.dout });
-                        names.push(format!("{lname}:bn+logits"));
-                    } else {
-                        bufs.packed_words = bufs
-                            .packed_words
-                            .max(mb * fc.dout.div_ceil(32));
-                        ops.push(Op::BnSignPackRows { bn, d: fc.dout });
-                        names.push(format!("{lname}:bn_sign_pack"));
-                    }
+            if is_xnor && fc.binarized {
+                let EngineKernel::Xnor(imp) = kernel else { unreachable!() };
+                bufs.gemm_i32 = bufs.gemm_i32.max(fc.dout * mb);
+                let rimp = plan_xnor_impl(imp, fc.dout, fc.din, mb);
+                if let XnorImpl::Threaded(t) = rimp {
+                    pool_threads = pool_threads.max(t);
                 }
-                _ => {
+                ops.push(Op::FcGemmX {
+                    w: Arc::clone(
+                        fc.w_packed.as_ref().expect("packed weights"),
+                    ),
+                    d: fc.dout,
+                    k: fc.din,
+                    imp: rimp,
+                });
+                names.push(xnor_gemm_stage_name(&lname, imp, rimp));
+                if next_binarized {
+                    bufs.packed_words = bufs
+                        .packed_words
+                        .max(mb * fc.dout.div_ceil(32));
+                    ops.push(Op::BnSignPackRows {
+                        bn,
+                        d: fc.dout,
+                        from_f32: false,
+                    });
+                    names.push(format!("{lname}:bn_sign_pack"));
+                } else {
+                    if !last {
+                        bufs.act = bufs.act.max(mb * fc.dout);
+                    }
+                    ops.push(Op::BnRowsI { bn, d: fc.dout, logits: last });
+                    names.push(if last {
+                        format!("{lname}:bn+logits")
+                    } else {
+                        format!("{lname}:bn")
+                    });
+                }
+            } else {
+                // Float-gemm fc: every fc on the float arms, and
+                // non-binarized fcs on the xnor arm (real-valued input
+                // rows, no sign).
+                if !is_xnor && fc.binarized {
+                    bufs.act = bufs.act.max(mb * fc.din);
                     ops.push(Op::SignRows { k: fc.din });
                     names.push(format!("{lname}:sign"));
-                    bufs.gemm_f32 = bufs.gemm_f32.max(fc.dout * mb);
-                    ops.push(Op::FcGemmF {
-                        w: Arc::clone(&fc.w_float),
+                }
+                bufs.gemm_f32 = bufs.gemm_f32.max(fc.dout * mb);
+                ops.push(Op::FcGemmF {
+                    w: Arc::clone(&fc.w_float),
+                    d: fc.dout,
+                    k: fc.din,
+                    imp: float_imp,
+                });
+                names.push(format!("{lname}:gemm"));
+                if next_binarized {
+                    bufs.packed_words = bufs
+                        .packed_words
+                        .max(mb * fc.dout.div_ceil(32));
+                    ops.push(Op::BnSignPackRows {
+                        bn,
                         d: fc.dout,
-                        k: fc.din,
-                        imp: float_imp,
+                        from_f32: true,
                     });
-                    names.push(format!("{lname}:gemm"));
+                    names.push(format!("{lname}:bn_sign_pack"));
+                } else {
                     if !last {
                         bufs.act = bufs.act.max(mb * fc.dout);
                     }
@@ -429,21 +540,23 @@ impl BnnEngine {
             }
             kdim = fc.dout;
         }
-        assert_eq!(kdim, NUM_CLASSES, "final fc width");
+        debug_assert_eq!(kdim, self.spec.classes(), "final fc width");
 
-        Plan {
+        Ok(Plan {
             inner: Arc::new(PlanInner {
                 kernel,
                 max_batch,
-                image_c: IMAGE_C,
-                image_hw: IMAGE_HW,
+                input_c: ic,
+                input_h: ih,
+                input_w: iw,
+                classes: self.spec.classes(),
                 ops,
                 names,
                 bufs,
                 pool: (pool_threads > 0)
                     .then(|| Arc::new(ThreadPool::new(pool_threads))),
             }),
-        }
+        })
     }
 }
 
@@ -481,8 +594,8 @@ fn xnor_gemm_stage_name(lname: &str, requested: XnorImpl,
 /// Which buffer holds the current float activation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Cur {
-    /// The caller's input images (read-only; consumed by the first op
-    /// without cloning).
+    /// The caller's input images (read-only; consumed by the first
+    /// float-reading op without cloning).
     Input,
     A,
     B,
@@ -504,7 +617,7 @@ pub struct Session {
     /// Gemm outputs, [D, N] row-major.
     gemm_i32: Vec<i32>,
     gemm_f32: Vec<f32>,
-    /// Logits [b, 10]; returned by reference from `run`.
+    /// Logits [b, classes]; returned by reference from `run`.
     out: Tensor,
 }
 
@@ -521,15 +634,16 @@ impl Session {
 
     fn check_images(&self, images: &Tensor) -> usize {
         assert_eq!(images.shape().len(), 4, "expected NCHW images");
-        assert_eq!(images.dim(1), self.plan.image_c, "image channels");
-        assert_eq!(images.dim(2), self.plan.image_hw, "image height");
-        assert_eq!(images.dim(3), self.plan.image_hw, "image width");
+        assert_eq!(images.dim(1), self.plan.input_c, "image channels");
+        assert_eq!(images.dim(2), self.plan.input_h, "image height");
+        assert_eq!(images.dim(3), self.plan.input_w, "image width");
         images.dim(0)
     }
 
-    /// Run inference on `images` ([B, 3, 32, 32] normalized, B <=
-    /// `max_batch`); returns the logits [B, 10] by reference into the
-    /// session's output buffer (valid until the next `run`).
+    /// Run inference on `images` ([B, C, H, W] normalized, matching the
+    /// plan's input shape, B <= `max_batch`); returns the logits
+    /// [B, classes] by reference into the session's output buffer
+    /// (valid until the next `run`).
     pub fn run(&mut self, images: &Tensor) -> &Tensor {
         let b = self.check_images(images);
         self.run_inner(images.data(), b, false);
@@ -537,7 +651,7 @@ impl Session {
     }
 
     /// [`Session::run`] over a borrowed raw image slice
-    /// (`data.len() == b * 3*32*32`) — the batch-view path `evaluate`
+    /// (`data.len() == b * C*H*W`) — the batch-view path `evaluate`
     /// uses to step through a dataset tensor without copying slices.
     pub fn run_images(&mut self, data: &[f32], b: usize) -> &Tensor {
         self.run_inner(data, b, false);
@@ -557,8 +671,8 @@ impl Session {
     /// (pointer, capacity) of every internal buffer — the allocation
     /// fingerprint `tests/plan_session.rs` uses to prove steady-state
     /// runs never reallocate.
-    pub fn buffer_signature(&self) -> [(usize, usize); 7] {
-        [
+    pub fn buffer_signature(&self) -> Vec<(usize, usize)> {
+        vec![
             (self.act_a.as_ptr() as usize, self.act_a.capacity()),
             (self.act_b.as_ptr() as usize, self.act_b.capacity()),
             (self.cols.as_ptr() as usize, self.cols.capacity()),
@@ -575,7 +689,7 @@ impl Session {
         assert!(b >= 1, "empty batch");
         assert!(b <= plan.max_batch,
                 "batch {b} exceeds plan max_batch {}", plan.max_batch);
-        let chw = plan.image_c * plan.image_hw * plan.image_hw;
+        let chw = plan.input_c * plan.input_h * plan.input_w;
         assert_eq!(x.len(), b * chw, "image data length");
 
         let mut stages: Vec<(String, f64)> = Vec::new();
@@ -669,24 +783,32 @@ impl Session {
                 }
                 Op::Flatten { feat } => {
                     // Row-major NCHW is already (c, h, w) feature order;
-                    // purely a logical reinterpretation.
-                    debug_assert!(!matches!(cur, Cur::Input));
-                    debug_assert!(b * feat <= self.act_a.len());
+                    // purely a logical reinterpretation.  `cur` may
+                    // still be the raw input (fc-only nets).
+                    debug_assert!(matches!(cur, Cur::Input)
+                                  || b * feat <= self.act_a.len());
                 }
                 Op::SignRows { k } => {
+                    let k = *k;
+                    if matches!(cur, Cur::Input) {
+                        // fc-only net: the raw input rows must land in
+                        // a mutable buffer before signing in place.
+                        self.act_a[..b * k].copy_from_slice(&x[..b * k]);
+                        cur = Cur::A;
+                    }
                     let act = match cur {
                         Cur::A => &mut self.act_a,
                         Cur::B => &mut self.act_b,
-                        Cur::Input => unreachable!("sign reads activations"),
+                        Cur::Input => unreachable!("handled above"),
                     };
                     sign_inplace(&mut act[..b * k]);
                 }
                 Op::FcGemmF { w, d, k, imp } => {
                     let (d, k) = (*d, *k);
                     let src: &[f32] = match cur {
+                        Cur::Input => x,
                         Cur::A => &self.act_a[..],
                         Cur::B => &self.act_b[..],
-                        Cur::Input => unreachable!("fc reads activations"),
                     };
                     gemm_f32(w, &src[..b * k],
                              &mut self.gemm_f32[..d * b], d, k, b, *imp);
@@ -705,31 +827,53 @@ impl Session {
                                           *imp),
                     }
                 }
-                Op::BnSignPackNchw { bn, c, hw } => {
+                Op::SignPackImage { bn, c, hw } => {
                     let (c, hw) = (*c, *hw);
                     let src: &[f32] = match cur {
+                        Cur::Input => x,
                         Cur::A => &self.act_a[..],
                         Cur::B => &self.act_b[..],
-                        Cur::Input => unreachable!("flatten reads activations"),
                     };
                     self.packed.reset(b, c * hw);
-                    bn_sign_pack_nchw(&src[..b * c * hw], b, c, hw,
-                                      &bn.a[..], &bn.b[..],
-                                      &mut self.packed);
+                    match bn {
+                        Some(bn) => bn_sign_pack_nchw(
+                            &src[..b * c * hw], b, c, hw, &bn.a[..],
+                            &bn.b[..], &mut self.packed,
+                        ),
+                        None => pack_rows_from(&src[..b * c * hw],
+                                               &mut self.packed),
+                    }
                 }
-                Op::BnSignPackRows { bn, d } => {
+                Op::BnSignPackRows { bn, d, from_f32 } => {
                     let d = *d;
                     self.packed.reset(b, d);
-                    bn_sign_pack_rows_i32(&self.gemm_i32[..d * b], d, b,
-                                          &bn.a[..], &bn.b[..],
-                                          &mut self.packed);
+                    if *from_f32 {
+                        bn_sign_pack_rows_f32(&self.gemm_f32[..d * b], d,
+                                              b, &bn.a[..], &bn.b[..],
+                                              &mut self.packed);
+                    } else {
+                        bn_sign_pack_rows_i32(&self.gemm_i32[..d * b], d,
+                                              b, &bn.a[..], &bn.b[..],
+                                              &mut self.packed);
+                    }
                 }
-                Op::BnRowsI { bn, d } => {
+                Op::BnRowsI { bn, d, logits } => {
                     let d = *d;
-                    self.out.reset(&[b, d]);
-                    bn_rows_from_gemm_i32(&self.gemm_i32[..d * b], d, b,
-                                          &bn.a[..], &bn.b[..],
-                                          self.out.data_mut());
+                    if *logits {
+                        self.out.reset(&[b, d]);
+                        bn_rows_from_gemm_i32(&self.gemm_i32[..d * b], d,
+                                              b, &bn.a[..], &bn.b[..],
+                                              self.out.data_mut());
+                    } else {
+                        let (dst, next) = match cur {
+                            Cur::A => (&mut self.act_b, Cur::B),
+                            _ => (&mut self.act_a, Cur::A),
+                        };
+                        bn_rows_from_gemm_i32(&self.gemm_i32[..d * b], d,
+                                              b, &bn.a[..], &bn.b[..],
+                                              &mut dst[..b * d]);
+                        cur = next;
+                    }
                 }
                 Op::BnRowsF { bn, d, logits } => {
                     let d = *d;
@@ -754,7 +898,7 @@ impl Session {
                 stages.push((name.clone(), sw.elapsed_secs()));
             }
         }
-        debug_assert_eq!(self.out.shape(), &[b, NUM_CLASSES]);
+        debug_assert_eq!(self.out.shape(), &[b, plan.classes]);
         stages
     }
 }

@@ -1,0 +1,1061 @@
+//! NetSpec — the typed architecture IR the whole engine plans from.
+//!
+//! The paper's kernel (xnor + bitcount) is architecture-agnostic; this
+//! module makes the *engine* agnostic too.  A [`NetSpec`] describes any
+//! binarized feed-forward network as an input shape plus an ordered
+//! list of [`LayerSpec`] ops (`Conv2d`, `MaxPool2`, `BatchNorm`,
+//! `Sign`, `Flatten`, `Linear`); construction validates the full shape
+//! arithmetic and op grammar up front and returns typed [`SpecError`]s,
+//! so everything downstream (weight loading, plan lowering,
+//! `forward_reference`, session buffer sizing) can walk the IR without
+//! re-checking it.
+//!
+//! # Op grammar
+//!
+//! The IR is a linear pipeline over one activation.  Validation
+//! enforces the block structure every lowering relies on:
+//!
+//! ```text
+//!     net      := conv_block*  Flatten  fc_block+
+//!     conv_block := [Sign] Conv2d [MaxPool2] BatchNorm
+//!     fc_block   := [Sign] Linear BatchNorm
+//! ```
+//!
+//! * `Sign` binarizes the activation; it appears exactly before every
+//!   `binarized` `Conv2d`/`Linear` (the flag and the op are
+//!   cross-checked — a binarized layer without a preceding `Sign`, or a
+//!   `Sign` feeding a non-binarized layer, is a [`SpecError`]).
+//! * Every weighted layer carries exactly one folded `BatchNorm`
+//!   affine (the weight format stores `bn_<layer>.a/.b` per layer);
+//!   for convs the 2x2 `MaxPool2` sits between the conv and its
+//!   BatchNorm, as in the reference pipeline.
+//! * `MaxPool2` requires even spatial dims; `Conv2d` output dims must
+//!   stay >= 1; `Linear` requires a `Flatten` first.
+//! * The net ends with the BatchNorm of its final `Linear`, whose
+//!   width is the class count.
+//!
+//! The canonical CIFAR net of the paper is one point in this space —
+//! [`NetSpec::from_widths`] synthesizes it from a legacy BKW1
+//! `meta.widths` vector, and BKW2 weight files embed their spec
+//! directly (see `model::format`).
+//!
+//! # Building specs
+//!
+//! [`NetSpec::builder`] is the ergonomic path — it inserts the
+//! `Sign`/`BatchNorm`/`Flatten` plumbing for you and binarizes every
+//! weighted layer after the first (the XNOR-Net convention: the input
+//! image stays real-valued):
+//!
+//! ```
+//! use bitkernel::model::NetSpec;
+//!
+//! let spec = NetSpec::builder((1, 28, 28))
+//!     .conv(16, 3)
+//!     .pool()
+//!     .conv(32, 3)
+//!     .pool()
+//!     .linear(64)
+//!     .linear(26)
+//!     .build()?;
+//! assert_eq!(spec.classes(), 26);
+//! # Ok::<(), bitkernel::model::SpecError>(())
+//! ```
+
+use crate::nn::im2col::out_hw;
+
+/// One op of the architecture IR.  See the module docs for the grammar
+/// validation enforces between ops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Square convolution (im2col + gemm).  `binarized` means the layer
+    /// consumes its input as {-1,+1} signs and is xnor-eligible; its
+    /// input channel count is derived from the incoming shape.
+    Conv2d {
+        /// Output channels.
+        cout: usize,
+        /// Square kernel side.
+        ksize: usize,
+        /// Stride (both dims).
+        stride: usize,
+        /// Zero padding (both dims).
+        pad: usize,
+        /// Consumes sign-binarized input (must be preceded by `Sign`).
+        binarized: bool,
+    },
+    /// 2x2 max-pool, stride 2 (requires even spatial dims).
+    MaxPool2,
+    /// Folded inference-time BatchNorm: per-channel (image domain) or
+    /// per-feature (rows domain) affine `y = a*x + b`, attributed to
+    /// the preceding weighted layer.
+    BatchNorm,
+    /// Activation binarization `sign(x)` (+1 iff `x >= 0`); must feed a
+    /// binarized `Conv2d`/`Linear`.
+    Sign,
+    /// NCHW -> rows reinterpretation (row-major: no data motion).
+    Flatten,
+    /// Fully-connected layer; input width is derived from the incoming
+    /// shape.
+    Linear {
+        /// Output width.
+        dout: usize,
+        /// Consumes sign-binarized input (must be preceded by `Sign`).
+        binarized: bool,
+    },
+}
+
+impl LayerSpec {
+    /// Short lowercase op name for errors and `describe` output.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            LayerSpec::Conv2d { .. } => "conv2d",
+            LayerSpec::MaxPool2 => "maxpool2",
+            LayerSpec::BatchNorm => "batchnorm",
+            LayerSpec::Sign => "sign",
+            LayerSpec::Flatten => "flatten",
+            LayerSpec::Linear { .. } => "linear",
+        }
+    }
+}
+
+/// Shape of the activation after an op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Image-domain NCHW activation (per-image dims).
+    Image {
+        /// Channels.
+        c: usize,
+        /// Height.
+        h: usize,
+        /// Width.
+        w: usize,
+    },
+    /// Flattened rows `[B, f]`.
+    Rows {
+        /// Feature width.
+        f: usize,
+    },
+}
+
+impl Shape {
+    /// Elements per image/row.
+    pub fn elems(&self) -> usize {
+        match *self {
+            Shape::Image { c, h, w } => c * h * w,
+            Shape::Rows { f } => f,
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Shape::Image { c, h, w } => write!(f, "{c}x{h}x{w}"),
+            Shape::Rows { f: width } => write!(f, "[{width}]"),
+        }
+    }
+}
+
+/// Typed validation failures from [`NetSpec`] construction.  Every
+/// variant names the offending op index so CLI errors point at the
+/// exact spot in the layer list.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SpecError {
+    /// Input shape with a zero dim.
+    #[error("input shape {0}x{1}x{2} has a zero dim")]
+    ZeroInput(usize, usize, usize),
+    /// A layer list with no ops at all.
+    #[error("network has no layers")]
+    Empty,
+    /// An op that needs an image-domain activation got rows (or ran
+    /// after `Flatten`).
+    #[error("op {index} ({op}): expects an image activation, found {found}")]
+    ExpectsImage {
+        /// Offending op index.
+        index: usize,
+        /// Offending op name.
+        op: &'static str,
+        /// The activation shape actually seen.
+        found: Shape,
+    },
+    /// `Linear` before any `Flatten`.
+    #[error("op {index} (linear): expects flattened rows — add a flatten op first")]
+    ExpectsRows {
+        /// Offending op index.
+        index: usize,
+    },
+    /// A conv with a zero dim or kernel/stride of zero.
+    #[error("op {index} (conv2d): cout {cout}, ksize {ksize}, stride {stride} must all be >= 1")]
+    BadConv {
+        /// Offending op index.
+        index: usize,
+        /// Declared output channels.
+        cout: usize,
+        /// Declared kernel side.
+        ksize: usize,
+        /// Declared stride.
+        stride: usize,
+    },
+    /// Conv geometry that yields an empty output plane.
+    #[error("op {index} (conv2d): kernel {ksize} stride {stride} pad {pad} yields an empty output for a {found} input")]
+    EmptyConvOutput {
+        /// Offending op index.
+        index: usize,
+        /// Declared kernel side.
+        ksize: usize,
+        /// Declared stride.
+        stride: usize,
+        /// Declared padding.
+        pad: usize,
+        /// Input shape at that op.
+        found: Shape,
+    },
+    /// `MaxPool2` over odd spatial dims.
+    #[error("op {index} (maxpool2): spatial dims {h}x{w} are not even")]
+    OddPool {
+        /// Offending op index.
+        index: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+    },
+    /// `MaxPool2` not directly between a `Conv2d` and its `BatchNorm`.
+    #[error("op {index} (maxpool2): must sit between a conv2d and its batchnorm")]
+    DanglingPool {
+        /// Offending op index.
+        index: usize,
+    },
+    /// `BatchNorm` with no preceding weighted layer to attach to.
+    #[error("op {index} (batchnorm): no preceding conv2d/linear to attach to")]
+    DanglingBatchNorm {
+        /// Offending op index.
+        index: usize,
+    },
+    /// A weighted layer (or `Sign`/`Flatten`/end-of-net) arrived while
+    /// the previous weighted layer still lacks its `BatchNorm`.
+    #[error("op {index}: '{layer}' still needs its batchnorm first")]
+    MissingBatchNorm {
+        /// Index of the op that arrived too early (or `layers.len()`
+        /// when the net simply ends without the BatchNorm).
+        index: usize,
+        /// Name of the weighted layer that lacks a BatchNorm.
+        layer: String,
+    },
+    /// A `Sign` op not consumed by a directly following binarized
+    /// weighted layer.
+    #[error("op {index} (sign): must directly feed a binarized conv2d/linear")]
+    DanglingSign {
+        /// Offending op index.
+        index: usize,
+    },
+    /// A binarized weighted layer without its `Sign`.
+    #[error("op {index} ({op}): binarized layers must be directly preceded by a sign op")]
+    UnsignedBinarized {
+        /// Offending op index.
+        index: usize,
+        /// Offending op name.
+        op: &'static str,
+    },
+    /// A `Linear` with zero width.
+    #[error("op {index} (linear): dout must be >= 1")]
+    BadLinear {
+        /// Offending op index.
+        index: usize,
+    },
+    /// The net does not end with a batchnorm'd `Linear`.
+    #[error("network must end with a linear layer (followed by its batchnorm)")]
+    NoFinalLinear,
+    /// Declared class count disagrees with the final linear width.
+    #[error("final linear width {dout} != declared class count {classes}")]
+    ClassMismatch {
+        /// Final linear width.
+        dout: usize,
+        /// Declared class count.
+        classes: usize,
+    },
+    /// A legacy BKW1 widths vector of the wrong shape.
+    #[error("legacy widths vector must be [c1..c6, f1, f2, classes] with c5 == c6; got {0}")]
+    LegacyWidths(String),
+    /// `plan` asked for a zero-sized batch.
+    #[error("max_batch must be >= 1")]
+    ZeroBatch,
+    /// Builder misuse, surfaced at `build()` (e.g. `.pool()` with no
+    /// preceding conv).
+    #[error("builder: {0}")]
+    Builder(String),
+}
+
+/// A validated architecture: input shape, class count, and the op list,
+/// plus the per-op output shapes computed during validation.
+///
+/// Construction ([`NetSpec::new`], [`NetSpec::builder`],
+/// [`NetSpec::from_widths`], or a BKW2 file read) is the ONLY way to
+/// obtain one, so holding a `NetSpec` is proof the architecture is
+/// well-formed — plan lowering and weight loading walk it without
+/// re-validating.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetSpec {
+    input: (usize, usize, usize),
+    classes: usize,
+    layers: Vec<LayerSpec>,
+    /// Shape AFTER each op (parallel to `layers`).
+    shapes: Vec<Shape>,
+}
+
+/// Internal per-weighted-layer view derived from the validated op list
+/// — the shape the engine loader and plan lowering actually walk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct ConvBlock {
+    /// Canonical weight-file key prefix (`conv1`, `conv2`, ...).
+    pub(crate) name: String,
+    pub(crate) cin: usize,
+    pub(crate) cout: usize,
+    pub(crate) ksize: usize,
+    pub(crate) stride: usize,
+    pub(crate) pad: usize,
+    /// 2x2 max-pool between this conv and its batchnorm.
+    pub(crate) pool: bool,
+    pub(crate) binarized: bool,
+}
+
+impl ConvBlock {
+    /// Gemm reduction length K = Cin * k * k.
+    pub(crate) fn k(&self) -> usize {
+        self.cin * self.ksize * self.ksize
+    }
+}
+
+/// Internal fully-connected view (see [`ConvBlock`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct FcBlock {
+    /// Canonical weight-file key prefix (`fc1`, `fc2`, ...).
+    pub(crate) name: String,
+    pub(crate) din: usize,
+    pub(crate) dout: usize,
+    pub(crate) binarized: bool,
+}
+
+impl NetSpec {
+    /// Validate `layers` against `input` (C, H, W) and build the spec.
+    /// The class count is the final linear width.
+    pub fn new(
+        input: (usize, usize, usize),
+        layers: Vec<LayerSpec>,
+    ) -> Result<Self, SpecError> {
+        let (ic, ih, iw) = input;
+        if ic == 0 || ih == 0 || iw == 0 {
+            return Err(SpecError::ZeroInput(ic, ih, iw));
+        }
+        if layers.is_empty() {
+            return Err(SpecError::Empty);
+        }
+
+        // Walked state: current shape, whether a Sign is waiting to be
+        // consumed, and which weighted layer still owes a BatchNorm.
+        let mut shape = Shape::Image { c: ic, h: ih, w: iw };
+        let mut shapes = Vec::with_capacity(layers.len());
+        let mut pending_sign = false;
+        // (display name, is_conv, pooled) of the bn-less weighted layer.
+        let mut awaiting_bn: Option<(String, bool, bool)> = None;
+        let mut last_linear_dout: Option<usize> = None;
+        let (mut nconv, mut nfc) = (0usize, 0usize);
+
+        for (index, op) in layers.iter().enumerate() {
+            match op {
+                LayerSpec::Conv2d { cout, ksize, stride, pad, binarized } => {
+                    if let Some((layer, _, _)) = awaiting_bn.take() {
+                        return Err(SpecError::MissingBatchNorm {
+                            index,
+                            layer,
+                        });
+                    }
+                    let Shape::Image { c: _, h, w } = shape else {
+                        return Err(SpecError::ExpectsImage {
+                            index,
+                            op: op.op_name(),
+                            found: shape,
+                        });
+                    };
+                    match (*binarized, pending_sign) {
+                        (true, false) => {
+                            return Err(SpecError::UnsignedBinarized {
+                                index,
+                                op: op.op_name(),
+                            })
+                        }
+                        (false, true) => {
+                            return Err(SpecError::DanglingSign {
+                                index: index - 1,
+                            })
+                        }
+                        _ => {}
+                    }
+                    pending_sign = false;
+                    if *cout == 0 || *ksize == 0 || *stride == 0 {
+                        return Err(SpecError::BadConv {
+                            index,
+                            cout: *cout,
+                            ksize: *ksize,
+                            stride: *stride,
+                        });
+                    }
+                    if h + 2 * pad < *ksize || w + 2 * pad < *ksize {
+                        return Err(SpecError::EmptyConvOutput {
+                            index,
+                            ksize: *ksize,
+                            stride: *stride,
+                            pad: *pad,
+                            found: shape,
+                        });
+                    }
+                    let (oh, ow) =
+                        out_hw(h, w, *ksize, *ksize, *stride, *pad);
+                    if oh == 0 || ow == 0 {
+                        return Err(SpecError::EmptyConvOutput {
+                            index,
+                            ksize: *ksize,
+                            stride: *stride,
+                            pad: *pad,
+                            found: shape,
+                        });
+                    }
+                    nconv += 1;
+                    shape = Shape::Image { c: *cout, h: oh, w: ow };
+                    awaiting_bn =
+                        Some((format!("conv{nconv}"), true, false));
+                }
+                LayerSpec::MaxPool2 => {
+                    if pending_sign {
+                        return Err(SpecError::DanglingSign {
+                            index: index - 1,
+                        });
+                    }
+                    // Only between a conv and that conv's batchnorm.
+                    match awaiting_bn.as_mut() {
+                        Some(slot) if slot.1 && !slot.2 => slot.2 = true,
+                        _ => {
+                            return Err(SpecError::DanglingPool { index })
+                        }
+                    }
+                    let Shape::Image { c, h, w } = shape else {
+                        return Err(SpecError::ExpectsImage {
+                            index,
+                            op: op.op_name(),
+                            found: shape,
+                        });
+                    };
+                    if h % 2 != 0 || w % 2 != 0 {
+                        return Err(SpecError::OddPool { index, h, w });
+                    }
+                    shape = Shape::Image { c, h: h / 2, w: w / 2 };
+                }
+                LayerSpec::BatchNorm => {
+                    if pending_sign {
+                        return Err(SpecError::DanglingSign {
+                            index: index - 1,
+                        });
+                    }
+                    if awaiting_bn.take().is_none() {
+                        return Err(SpecError::DanglingBatchNorm { index });
+                    }
+                }
+                LayerSpec::Sign => {
+                    if let Some((layer, _, _)) = awaiting_bn.take() {
+                        return Err(SpecError::MissingBatchNorm {
+                            index,
+                            layer,
+                        });
+                    }
+                    if pending_sign {
+                        return Err(SpecError::DanglingSign {
+                            index: index - 1,
+                        });
+                    }
+                    pending_sign = true;
+                }
+                LayerSpec::Flatten => {
+                    if pending_sign {
+                        return Err(SpecError::DanglingSign {
+                            index: index - 1,
+                        });
+                    }
+                    if let Some((layer, _, _)) = awaiting_bn.take() {
+                        return Err(SpecError::MissingBatchNorm {
+                            index,
+                            layer,
+                        });
+                    }
+                    let Shape::Image { c, h, w } = shape else {
+                        return Err(SpecError::ExpectsImage {
+                            index,
+                            op: op.op_name(),
+                            found: shape,
+                        });
+                    };
+                    shape = Shape::Rows { f: c * h * w };
+                }
+                LayerSpec::Linear { dout, binarized } => {
+                    if let Some((layer, _, _)) = awaiting_bn.take() {
+                        return Err(SpecError::MissingBatchNorm {
+                            index,
+                            layer,
+                        });
+                    }
+                    let Shape::Rows { .. } = shape else {
+                        return Err(SpecError::ExpectsRows { index });
+                    };
+                    match (*binarized, pending_sign) {
+                        (true, false) => {
+                            return Err(SpecError::UnsignedBinarized {
+                                index,
+                                op: op.op_name(),
+                            })
+                        }
+                        (false, true) => {
+                            return Err(SpecError::DanglingSign {
+                                index: index - 1,
+                            })
+                        }
+                        _ => {}
+                    }
+                    pending_sign = false;
+                    if *dout == 0 {
+                        return Err(SpecError::BadLinear { index });
+                    }
+                    nfc += 1;
+                    shape = Shape::Rows { f: *dout };
+                    awaiting_bn =
+                        Some((format!("fc{nfc}"), false, false));
+                    last_linear_dout = Some(*dout);
+                }
+            }
+            shapes.push(shape);
+        }
+        if pending_sign {
+            return Err(SpecError::DanglingSign {
+                index: layers.len() - 1,
+            });
+        }
+        if let Some((layer, _, _)) = awaiting_bn {
+            return Err(SpecError::MissingBatchNorm {
+                index: layers.len(),
+                layer,
+            });
+        }
+        // The walk above guarantees the net ends right after the final
+        // linear's batchnorm iff a linear exists at all; convs can't
+        // follow it (Flatten is one-way).
+        let Some(classes) = last_linear_dout else {
+            return Err(SpecError::NoFinalLinear);
+        };
+        if !matches!(layers.last(), Some(LayerSpec::BatchNorm)) {
+            return Err(SpecError::NoFinalLinear);
+        }
+        if !matches!(shape, Shape::Rows { .. }) {
+            return Err(SpecError::NoFinalLinear);
+        }
+        Ok(Self { input, classes, layers, shapes })
+    }
+
+    /// [`NetSpec::new`] plus a cross-check that the final linear width
+    /// equals `classes` — the constructor the BKW2 reader uses, since
+    /// the file carries the class count redundantly.
+    pub fn with_classes(
+        input: (usize, usize, usize),
+        classes: usize,
+        layers: Vec<LayerSpec>,
+    ) -> Result<Self, SpecError> {
+        let spec = Self::new(input, layers)?;
+        if spec.classes != classes {
+            return Err(SpecError::ClassMismatch {
+                dout: spec.classes,
+                classes,
+            });
+        }
+        Ok(spec)
+    }
+
+    /// Start an ergonomic builder from the input shape (C, H, W).
+    pub fn builder(input: (usize, usize, usize)) -> NetSpecBuilder {
+        NetSpecBuilder {
+            input,
+            layers: Vec::new(),
+            weighted: 0,
+            flattened: false,
+            error: None,
+        }
+    }
+
+    /// Synthesize the legacy CIFAR-net spec from a BKW1 `meta.widths`
+    /// vector `[c1..c6, f1, f2, classes]` — six 3x3/s1/p1 convs (the
+    /// first real-input, pools after conv2/4/6), three binarized fcs.
+    /// This is how BKW1 files keep loading unchanged: the spec they
+    /// never stored is rebuilt from the widths they did.
+    pub fn from_widths(widths: &[u32]) -> Result<Self, SpecError> {
+        if widths.len() != 9 {
+            return Err(SpecError::LegacyWidths(format!(
+                "{} entries (expected 9)",
+                widths.len()
+            )));
+        }
+        let w: Vec<usize> = widths.iter().map(|&x| x as usize).collect();
+        if w[4] != w[5] {
+            // python/compile/model.py derives fc1's input width from
+            // widths[4] while conv6's output is widths[5]; unequal
+            // values would silently disagree with the exporter.
+            return Err(SpecError::LegacyWidths(format!(
+                "c5 ({}) != c6 ({})",
+                w[4], w[5]
+            )));
+        }
+        let mut layers = Vec::new();
+        for (i, &cout) in w[..6].iter().enumerate() {
+            if i != 0 {
+                layers.push(LayerSpec::Sign);
+            }
+            layers.push(LayerSpec::Conv2d {
+                cout,
+                ksize: 3,
+                stride: 1,
+                pad: 1,
+                binarized: i != 0,
+            });
+            if i % 2 == 1 {
+                layers.push(LayerSpec::MaxPool2);
+            }
+            layers.push(LayerSpec::BatchNorm);
+        }
+        layers.push(LayerSpec::Flatten);
+        for &dout in &w[6..9] {
+            layers.push(LayerSpec::Sign);
+            layers.push(LayerSpec::Linear { dout, binarized: true });
+            layers.push(LayerSpec::BatchNorm);
+        }
+        Self::with_classes((3, 32, 32), w[8], layers)
+    }
+
+    /// Input shape (C, H, W).
+    pub fn input(&self) -> (usize, usize, usize) {
+        self.input
+    }
+
+    /// Output class count (the final linear width).
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// The validated op list, in execution order.
+    pub fn layers(&self) -> &[LayerSpec] {
+        &self.layers
+    }
+
+    /// Shape of the activation AFTER each op (parallel to
+    /// [`NetSpec::layers`]).
+    pub fn output_shapes(&self) -> &[Shape] {
+        &self.shapes
+    }
+
+    /// Canonical weight-file key prefix per op: `Some("conv<k>")` /
+    /// `Some("fc<k>")` for the k-th conv/linear, `Some("bn_<layer>")`
+    /// for each batchnorm (keyed to its owning weighted layer), `None`
+    /// for structural ops.  Both the rust loader and the python
+    /// exporter derive names this way, so they can never drift.
+    pub fn layer_names(&self) -> Vec<Option<String>> {
+        let (mut nconv, mut nfc) = (0usize, 0usize);
+        let mut owner = String::new();
+        self.layers
+            .iter()
+            .map(|op| match op {
+                LayerSpec::Conv2d { .. } => {
+                    nconv += 1;
+                    owner = format!("conv{nconv}");
+                    Some(owner.clone())
+                }
+                LayerSpec::Linear { .. } => {
+                    nfc += 1;
+                    owner = format!("fc{nfc}");
+                    Some(owner.clone())
+                }
+                LayerSpec::BatchNorm => Some(format!("bn_{owner}")),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total learnable parameter count (weights + folded BN affines).
+    pub fn param_count(&self) -> usize {
+        let (convs, fcs) = self.blocks();
+        let conv: usize = convs.iter().map(|s| s.cout * s.k()).sum();
+        let fc: usize = fcs.iter().map(|s| s.din * s.dout).sum();
+        let bn: usize = convs.iter().map(|s| 2 * s.cout).sum::<usize>()
+            + fcs.iter().map(|s| 2 * s.dout).sum::<usize>();
+        conv + fc + bn
+    }
+
+    /// The weighted-layer view the engine loader and plan lowering
+    /// walk: conv blocks (with their pool flags) and fc blocks, with
+    /// all derived dims (cin/din) resolved from the shape trace.
+    pub(crate) fn blocks(&self) -> (Vec<ConvBlock>, Vec<FcBlock>) {
+        let mut convs = Vec::new();
+        let mut fcs = Vec::new();
+        let (ic, ih, iw) = self.input;
+        let mut before = Shape::Image { c: ic, h: ih, w: iw };
+        for (op, after) in self.layers.iter().zip(&self.shapes) {
+            match op {
+                LayerSpec::Conv2d { cout, ksize, stride, pad, binarized } => {
+                    let Shape::Image { c, .. } = before else {
+                        unreachable!("validated spec");
+                    };
+                    convs.push(ConvBlock {
+                        name: format!("conv{}", convs.len() + 1),
+                        cin: c,
+                        cout: *cout,
+                        ksize: *ksize,
+                        stride: *stride,
+                        pad: *pad,
+                        pool: false,
+                        binarized: *binarized,
+                    });
+                }
+                LayerSpec::MaxPool2 => {
+                    convs
+                        .last_mut()
+                        .expect("validated spec: pool follows a conv")
+                        .pool = true;
+                }
+                LayerSpec::Linear { dout, binarized } => {
+                    let Shape::Rows { f } = before else {
+                        unreachable!("validated spec");
+                    };
+                    fcs.push(FcBlock {
+                        name: format!("fc{}", fcs.len() + 1),
+                        din: f,
+                        dout: *dout,
+                        binarized: *binarized,
+                    });
+                }
+                _ => {}
+            }
+            before = *after;
+        }
+        (convs, fcs)
+    }
+}
+
+/// Fluent constructor for [`NetSpec`] — inserts the `Sign` /
+/// `BatchNorm` / `Flatten` plumbing the grammar requires, and follows
+/// the XNOR-Net convention that the FIRST weighted layer keeps a
+/// real-valued input while every later one is binarized (override with
+/// the `*_opts` methods).  Errors (bad geometry, `.pool()` without a
+/// conv, no final linear) surface as typed [`SpecError`]s from
+/// [`NetSpecBuilder::build`], never panics.
+#[derive(Debug, Clone)]
+pub struct NetSpecBuilder {
+    input: (usize, usize, usize),
+    layers: Vec<LayerSpec>,
+    weighted: usize,
+    flattened: bool,
+    error: Option<SpecError>,
+}
+
+impl NetSpecBuilder {
+    /// Append a conv block (`ksize`/2 padding, stride 1); binarized iff
+    /// it is not the first weighted layer.
+    pub fn conv(self, cout: usize, ksize: usize) -> Self {
+        let binarized = self.weighted > 0;
+        self.conv_opts(cout, ksize, 1, ksize / 2, binarized)
+    }
+
+    /// Append a conv block with every knob explicit.
+    pub fn conv_opts(
+        mut self,
+        cout: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        binarized: bool,
+    ) -> Self {
+        if self.flattened && self.error.is_none() {
+            self.error = Some(SpecError::Builder(
+                "conv after a linear/flatten".to_string(),
+            ));
+        }
+        if binarized {
+            self.layers.push(LayerSpec::Sign);
+        }
+        self.layers.push(LayerSpec::Conv2d {
+            cout,
+            ksize,
+            stride,
+            pad,
+            binarized,
+        });
+        self.layers.push(LayerSpec::BatchNorm);
+        self.weighted += 1;
+        self
+    }
+
+    /// 2x2 max-pool after the last conv (before its batchnorm).
+    pub fn pool(mut self) -> Self {
+        // The conv block was pushed as [.., Conv2d, BatchNorm]; the
+        // pool sits between them.
+        let fits = self.layers.len() >= 2
+            && matches!(self.layers.last(), Some(LayerSpec::BatchNorm))
+            && matches!(
+                self.layers.get(self.layers.len() - 2),
+                Some(LayerSpec::Conv2d { .. })
+            );
+        if fits {
+            let at = self.layers.len() - 1;
+            self.layers.insert(at, LayerSpec::MaxPool2);
+        } else if self.error.is_none() {
+            self.error = Some(SpecError::Builder(
+                ".pool() must directly follow .conv()".to_string(),
+            ));
+        }
+        self
+    }
+
+    /// Append a fully-connected block (a `Flatten` is inserted first if
+    /// the net is still in the image domain); binarized iff it is not
+    /// the first weighted layer.
+    pub fn linear(self, dout: usize) -> Self {
+        let binarized = self.weighted > 0;
+        self.linear_opts(dout, binarized)
+    }
+
+    /// Append a fully-connected block with the binarization explicit.
+    pub fn linear_opts(mut self, dout: usize, binarized: bool) -> Self {
+        if !self.flattened {
+            self.layers.push(LayerSpec::Flatten);
+            self.flattened = true;
+        }
+        if binarized {
+            self.layers.push(LayerSpec::Sign);
+        }
+        self.layers.push(LayerSpec::Linear { dout, binarized });
+        self.layers.push(LayerSpec::BatchNorm);
+        self.weighted += 1;
+        self
+    }
+
+    /// Validate and produce the [`NetSpec`]; the class count is the
+    /// final linear width.
+    pub fn build(self) -> Result<NetSpec, SpecError> {
+        if let Some(e) = self.error {
+            return Err(e);
+        }
+        NetSpec::new(self.input, self.layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: [u32; 9] = [128, 128, 256, 256, 512, 512, 1024, 1024, 10];
+
+    #[test]
+    fn full_scale_matches_paper() {
+        let spec = NetSpec::from_widths(&FULL).unwrap();
+        let (convs, fcs) = spec.blocks();
+        assert_eq!(convs.len(), 6);
+        assert_eq!(fcs.len(), 3);
+        assert_eq!(convs[0].cin, 3);
+        assert!(!convs[0].binarized);
+        assert!(convs[1].binarized && convs[1].pool);
+        assert_eq!(convs[5].cout, 512);
+        assert_eq!(fcs[0].din, 512 * 4 * 4);
+        assert_eq!(fcs[2].dout, 10);
+        assert_eq!(spec.classes(), 10);
+        let p = spec.param_count();
+        assert!((13_000_000..16_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn small_scale() {
+        let spec = NetSpec::from_widths(&[32, 32, 64, 64, 128, 128, 256,
+                                          256, 10])
+            .unwrap();
+        let (convs, fcs) = spec.blocks();
+        assert_eq!(fcs[0].din, 128 * 16);
+        assert_eq!(fcs[1].din, 256);
+        assert_eq!(convs[2].k(), 32 * 9);
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(matches!(NetSpec::from_widths(&[1, 2, 3]),
+                         Err(SpecError::LegacyWidths(_))));
+        // c5 != c6 disagrees with the python exporter's fc1 width.
+        assert!(matches!(
+            NetSpec::from_widths(&[8, 8, 8, 8, 8, 16, 8, 8, 10]),
+            Err(SpecError::LegacyWidths(_))
+        ));
+    }
+
+    #[test]
+    fn builder_matches_from_widths() {
+        let built = NetSpec::builder((3, 32, 32))
+            .conv(4, 3)
+            .conv(4, 3)
+            .pool()
+            .conv(6, 3)
+            .conv(6, 3)
+            .pool()
+            .conv(8, 3)
+            .conv(8, 3)
+            .pool()
+            .linear(16)
+            .linear(12)
+            .linear(10)
+            .build()
+            .unwrap();
+        let legacy =
+            NetSpec::from_widths(&[4, 4, 6, 6, 8, 8, 16, 12, 10]).unwrap();
+        assert_eq!(built, legacy);
+    }
+
+    #[test]
+    fn builder_custom_shapes() {
+        let spec = NetSpec::builder((1, 28, 28))
+            .conv(16, 3)
+            .pool()
+            .conv(32, 3)
+            .pool()
+            .linear(64)
+            .linear(26)
+            .build()
+            .unwrap();
+        assert_eq!(spec.input(), (1, 28, 28));
+        assert_eq!(spec.classes(), 26);
+        let (convs, fcs) = spec.blocks();
+        assert_eq!(convs[1].cin, 16);
+        assert_eq!(fcs[0].din, 32 * 7 * 7);
+        assert_eq!(spec.output_shapes().last(),
+                   Some(&Shape::Rows { f: 26 }));
+    }
+
+    #[test]
+    fn fc_only_nets_build() {
+        let spec = NetSpec::builder((1, 8, 8))
+            .linear(32)
+            .linear(5)
+            .build()
+            .unwrap();
+        let (convs, fcs) = spec.blocks();
+        assert!(convs.is_empty());
+        assert_eq!(fcs[0].din, 64);
+        assert!(!fcs[0].binarized, "first weighted layer stays real");
+        assert!(fcs[1].binarized);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_specs() {
+        use LayerSpec::*;
+        let b = |l| NetSpec::new((3, 8, 8), l);
+        // binarized layer without a sign
+        assert!(matches!(
+            b(vec![Conv2d { cout: 4, ksize: 3, stride: 1, pad: 1,
+                            binarized: true },
+                   BatchNorm, Flatten, Sign,
+                   Linear { dout: 2, binarized: true }, BatchNorm]),
+            Err(SpecError::UnsignedBinarized { index: 0, .. })
+        ));
+        // sign feeding a non-binarized layer
+        assert!(matches!(
+            b(vec![Sign,
+                   Conv2d { cout: 4, ksize: 3, stride: 1, pad: 1,
+                            binarized: false },
+                   BatchNorm, Flatten, Sign,
+                   Linear { dout: 2, binarized: true }, BatchNorm]),
+            Err(SpecError::DanglingSign { index: 0 })
+        ));
+        // conv without its batchnorm
+        assert!(matches!(
+            b(vec![Conv2d { cout: 4, ksize: 3, stride: 1, pad: 1,
+                            binarized: false },
+                   Flatten, Sign,
+                   Linear { dout: 2, binarized: true }, BatchNorm]),
+            Err(SpecError::MissingBatchNorm { .. })
+        ));
+        // pool on odd dims
+        assert!(matches!(
+            NetSpec::new(
+                (3, 7, 7),
+                vec![Conv2d { cout: 4, ksize: 3, stride: 1, pad: 1,
+                              binarized: false },
+                     MaxPool2, BatchNorm, Flatten, Sign,
+                     Linear { dout: 2, binarized: true }, BatchNorm]
+            ),
+            Err(SpecError::OddPool { .. })
+        ));
+        // linear before flatten
+        assert!(matches!(
+            b(vec![Linear { dout: 2, binarized: false }, BatchNorm]),
+            Err(SpecError::ExpectsRows { index: 0 })
+        ));
+        // net not ending in a linear
+        assert!(matches!(
+            b(vec![Conv2d { cout: 4, ksize: 3, stride: 1, pad: 1,
+                            binarized: false },
+                   BatchNorm]),
+            Err(SpecError::NoFinalLinear)
+        ));
+        // empty conv output
+        assert!(matches!(
+            b(vec![Conv2d { cout: 4, ksize: 9, stride: 1, pad: 0,
+                            binarized: false },
+                   BatchNorm, Flatten, Sign,
+                   Linear { dout: 2, binarized: true }, BatchNorm]),
+            Err(SpecError::EmptyConvOutput { .. })
+        ));
+        // zero input dim
+        assert!(matches!(
+            NetSpec::new((0, 8, 8), vec![Flatten, Sign,
+                                         Linear { dout: 2,
+                                                  binarized: true },
+                                         BatchNorm]),
+            Err(SpecError::ZeroInput(..))
+        ));
+    }
+
+    #[test]
+    fn with_classes_cross_checks() {
+        use LayerSpec::*;
+        let layers = vec![Flatten,
+                          Linear { dout: 5, binarized: false },
+                          BatchNorm];
+        assert!(NetSpec::with_classes((1, 2, 2), 5, layers.clone()).is_ok());
+        assert!(matches!(
+            NetSpec::with_classes((1, 2, 2), 7, layers),
+            Err(SpecError::ClassMismatch { dout: 5, classes: 7 })
+        ));
+    }
+
+    #[test]
+    fn layer_names_are_canonical() {
+        let spec = NetSpec::builder((3, 8, 8))
+            .conv(4, 3)
+            .pool()
+            .linear(6)
+            .linear(2)
+            .build()
+            .unwrap();
+        let names = spec.layer_names();
+        let got: Vec<&str> = names
+            .iter()
+            .filter_map(|n| n.as_deref())
+            .collect();
+        assert_eq!(got, ["conv1", "bn_conv1", "fc1", "bn_fc1", "fc2",
+                         "bn_fc2"]);
+    }
+
+    #[test]
+    fn builder_pool_without_conv_errors() {
+        assert!(matches!(
+            NetSpec::builder((3, 8, 8)).pool().linear(2).build(),
+            Err(SpecError::Builder(_))
+        ));
+    }
+}

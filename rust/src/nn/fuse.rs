@@ -43,6 +43,29 @@ pub fn bn_sign_pack_rows_i32(gemm: &[i32], d: usize, b: usize,
     }
 }
 
+/// [`bn_sign_pack_rows_i32`] for f32 gemm output — the epilogue of a
+/// NON-binarized (real-input, float-gemm) fc layer whose consumer is
+/// binarized, e.g. fc1 of an fc-only net on the xnor arm.
+pub fn bn_sign_pack_rows_f32(gemm: &[f32], d: usize, b: usize,
+                             a: &[f32], bias: &[f32],
+                             out: &mut PackedMatrix) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(a.len(), d, "bn scale len");
+    assert_eq!(bias.len(), d, "bn shift len");
+    assert_eq!(out.rows, b, "packed rows");
+    assert_eq!(out.k, d, "packed k");
+    let kw = out.kw;
+    for bi in 0..b {
+        let mut bw =
+            BitWriter::new(&mut out.data[bi * kw..(bi + 1) * kw]);
+        for di in 0..d {
+            let v = a[di] * gemm[di * b + bi] + bias[di];
+            bw.push(u32::from(v >= 0.0));
+        }
+        bw.finish();
+    }
+}
+
 /// Xnor flatten epilogue: float NCHW activation (post-pool, PRE-bn) +
 /// per-channel affine -> packed sign rows [B, C*HW].  Row-major NCHW
 /// flattening is exactly the (c, h, w) feature order of fc1, so this
@@ -160,6 +183,24 @@ mod tests {
         let mut got_f = vec![0.0f32; b * d];
         bn_rows_from_gemm_f32(&gemm_f, d, b, &a, &bias, &mut got_f);
         assert_eq!(got_f, want);
+    }
+
+    #[test]
+    fn bn_sign_pack_rows_f32_matches_i32_twin() {
+        let mut rng = Rng::new(43);
+        for (d, b) in [(10, 1), (33, 3), (70, 5)] {
+            let gemm: Vec<i32> =
+                (0..d * b).map(|_| rng.below(41) as i32 - 20).collect();
+            let gemm_f: Vec<f32> = gemm.iter().map(|&v| v as f32).collect();
+            let a = rng.normal_vec(d);
+            let bias = rng.normal_vec(d);
+            let mut want = PackedMatrix::zeros(b, d);
+            bn_sign_pack_rows_i32(&gemm, d, b, &a, &bias, &mut want);
+            let mut got = PackedMatrix::zeros(b, d);
+            got.data.fill(0xDEAD_BEEF);
+            bn_sign_pack_rows_f32(&gemm_f, d, b, &a, &bias, &mut got);
+            assert_eq!(got, want, "d={d} b={b}");
+        }
     }
 
     #[test]

@@ -18,6 +18,10 @@ pub enum LinearKernel {
     Xnor(XnorImpl),
     /// Sign the activations, float gemm on {-1,+1}.
     FloatBinarized(GemmImpl),
+    /// No binarization at all: plain float gemm on the raw activations
+    /// (a NetSpec `Linear { binarized: false }` — e.g. the real-input
+    /// first layer of an fc-only net — runs this on every arm).
+    FloatReal(GemmImpl),
 }
 
 /// x: [B, K] -> [B, D].
@@ -50,6 +54,18 @@ pub fn linear(
             sign_inplace(xb.data_mut());
             let mut gemm_out = vec![0.0f32; d * b];
             gemm_f32(wf, xb.data(), &mut gemm_out, d, k, b, imp);
+            let mut out = vec![0.0f32; b * d];
+            for di in 0..d {
+                for bi in 0..b {
+                    out[bi * d + di] = gemm_out[di * b + bi];
+                }
+            }
+            Tensor::new(vec![b, d], out)
+        }
+        (LinearKernel::FloatReal(imp), ConvWeights::Float(wf)) => {
+            assert_eq!(wf.len(), d * k);
+            let mut gemm_out = vec![0.0f32; d * b];
+            gemm_f32(wf, x.data(), &mut gemm_out, d, k, b, imp);
             let mut out = vec![0.0f32; b * d];
             for di in 0..d {
                 for bi in 0..b {
@@ -104,6 +120,29 @@ mod tests {
             LinearKernel::Xnor(XnorImpl::Blocked),
         );
         assert_eq!(got_x.data(), &want[..]);
+    }
+
+    #[test]
+    fn float_real_skips_binarization() {
+        let (b, k, d) = (2, 9, 3);
+        let mut rng = Rng::new(3);
+        let xf = rng.normal_vec(b * k);
+        let wf = rng.normal_vec(d * k);
+        let x = Tensor::new(vec![b, k], xf.clone());
+        let got = linear(
+            &x,
+            &ConvWeights::float(wf.clone()),
+            d,
+            LinearKernel::FloatReal(GemmImpl::Naive),
+        );
+        for bi in 0..b {
+            for di in 0..d {
+                let want: f32 = (0..k)
+                    .map(|kk| xf[bi * k + kk] * wf[di * k + kk])
+                    .sum();
+                assert!((got.data()[bi * d + di] - want).abs() < 1e-4);
+            }
+        }
     }
 
     #[test]

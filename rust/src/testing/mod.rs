@@ -60,22 +60,16 @@ pub fn dim(rng: &mut Rng, hi: usize) -> usize {
     1 + rng.below(hi)
 }
 
-/// Build a [`crate::model::BnnEngine`] with random sign-binarized
-/// weights and random (signed!) folded-BN affines — no artifacts on
-/// disk needed.  `widths` follows the BKW1 `meta.widths` layout
-/// `[c1..c6, f1, f2, classes]`; the architecture requires
-/// `widths[4] == widths[5]` (conv6 width == the fc1 flatten width).
-///
-/// This is the oracle substrate for `tests/plan_session.rs`: small
-/// widths keep a full forward pass fast while exercising every layer
-/// kind (float conv1, binarized convs, pooling, all three fcs).
-pub fn synthetic_engine(widths: [u32; 9], seed: u64)
-                        -> crate::model::BnnEngine {
-    use crate::model::{BnnEngine, Dtype, WeightFile, WeightTensor};
+/// Assemble an in-memory BKW2 [`crate::model::WeightFile`] (spec
+/// embedded) for ANY validated [`crate::model::NetSpec`], with random
+/// sign-binarized weights and random (signed!) folded-BN affines — no
+/// artifacts on disk needed.  `tests/netspec.rs` writes these through
+/// the BKW2 serializer to pin the round trip.
+pub fn synthetic_weight_file(spec: &crate::model::NetSpec, seed: u64)
+                             -> crate::model::WeightFile {
+    use crate::model::{Dtype, WeightFile, WeightTensor};
     use std::collections::BTreeMap;
 
-    assert_eq!(widths[4], widths[5],
-               "conv5/conv6 widths must match the fc1 flatten width");
     let f32t = |vals: Vec<f32>, shape: Vec<usize>| WeightTensor {
         dtype: Dtype::F32,
         shape,
@@ -83,38 +77,60 @@ pub fn synthetic_engine(widths: [u32; 9], seed: u64)
     };
     let mut rng = Rng::new(seed);
     let mut tensors = BTreeMap::new();
-    tensors.insert(
-        "meta.widths".to_string(),
-        WeightTensor { dtype: Dtype::U32, shape: vec![9],
-                       words: widths.to_vec() },
-    );
-    let w: Vec<usize> = widths.iter().map(|&x| x as usize).collect();
-    let chans = [3usize, w[0], w[1], w[2], w[3], w[4], w[5]];
-    for i in 0..6 {
-        let (cin, cout) = (chans[i], chans[i + 1]);
-        let name = format!("conv{}", i + 1);
-        tensors.insert(format!("{name}.w"),
-                       f32t(rng.sign_vec(cout * cin * 9),
-                            vec![cout, cin, 3, 3]));
-        tensors.insert(format!("bn_{name}.a"),
-                       f32t(rng.normal_vec(cout), vec![cout]));
-        tensors.insert(format!("bn_{name}.b"),
-                       f32t(rng.normal_vec(cout), vec![cout]));
+    // The same derived-dim walk the engine loader uses — blocks()
+    // resolves cin/din and the canonical names from the validated
+    // shape trace, so the fixture generator cannot drift from it.
+    let (convs, fcs) = spec.blocks();
+    for s in &convs {
+        tensors.insert(
+            format!("{}.w", s.name),
+            f32t(rng.sign_vec(s.cout * s.k()),
+                 vec![s.cout, s.cin, s.ksize, s.ksize]),
+        );
+        tensors.insert(format!("bn_{}.a", s.name),
+                       f32t(rng.normal_vec(s.cout), vec![s.cout]));
+        tensors.insert(format!("bn_{}.b", s.name),
+                       f32t(rng.normal_vec(s.cout), vec![s.cout]));
     }
-    let dins = [w[4] * 16, w[6], w[7]]; // 16 = (32 / 2^3 pools)^2
-    let douts = [w[6], w[7], w[8]];
-    for i in 0..3 {
-        let name = format!("fc{}", i + 1);
-        tensors.insert(format!("{name}.w"),
-                       f32t(rng.sign_vec(douts[i] * dins[i]),
-                            vec![douts[i], dins[i]]));
-        tensors.insert(format!("bn_{name}.a"),
-                       f32t(rng.normal_vec(douts[i]), vec![douts[i]]));
-        tensors.insert(format!("bn_{name}.b"),
-                       f32t(rng.normal_vec(douts[i]), vec![douts[i]]));
+    for s in &fcs {
+        tensors.insert(
+            format!("{}.w", s.name),
+            f32t(rng.sign_vec(s.dout * s.din), vec![s.dout, s.din]),
+        );
+        tensors.insert(format!("bn_{}.a", s.name),
+                       f32t(rng.normal_vec(s.dout), vec![s.dout]));
+        tensors.insert(format!("bn_{}.b", s.name),
+                       f32t(rng.normal_vec(s.dout), vec![s.dout]));
     }
-    BnnEngine::from_weight_file(&WeightFile::from_tensors(tensors))
-        .expect("synthetic weight file")
+    WeightFile::from_tensors_with_spec(tensors, spec.clone())
+}
+
+/// Build a [`crate::model::BnnEngine`] for ANY validated
+/// [`crate::model::NetSpec`] from [`synthetic_weight_file`] tensors, so
+/// tests and benches can exercise arbitrary topologies: odd input
+/// shapes, any class count, fc-only nets, non-binarized layers
+/// anywhere.
+pub fn synthetic_engine_spec(spec: &crate::model::NetSpec, seed: u64)
+                             -> crate::model::BnnEngine {
+    crate::model::BnnEngine::from_weight_file(
+        &synthetic_weight_file(spec, seed),
+    )
+    .expect("synthetic weight file")
+}
+
+/// [`synthetic_engine_spec`] over the legacy CIFAR topology: `widths`
+/// follows the BKW1 `meta.widths` layout `[c1..c6, f1, f2, classes]`
+/// (requiring `widths[4] == widths[5]`, the conv6 width == the fc1
+/// flatten width).
+///
+/// This is the oracle substrate for `tests/plan_session.rs`: small
+/// widths keep a full forward pass fast while exercising every layer
+/// kind (float conv1, binarized convs, pooling, all three fcs).
+pub fn synthetic_engine(widths: [u32; 9], seed: u64)
+                        -> crate::model::BnnEngine {
+    let spec = crate::model::NetSpec::from_widths(&widths)
+        .expect("legacy widths");
+    synthetic_engine_spec(&spec, seed)
 }
 
 #[cfg(test)]

@@ -39,7 +39,7 @@ fn router_with_native_engine_classifies_correctly() {
     let ds = Dataset::load(dir.join("dataset_test.bin")).unwrap();
     let weights = dir.join("weights_small.bkw");
     let engine = BnnEngine::load(&weights).unwrap();
-    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 8);
+    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 8).unwrap();
     let router = Router::start(
         move |_replica| {
             Ok(Box::new(NativeBackend::from_plan(&plan)) as Box<dyn Backend>)
@@ -82,7 +82,7 @@ fn http_service_end_to_end() {
     let weights = dir.join("weights_small.bkw");
 
     let engine = BnnEngine::load(&weights).unwrap();
-    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 8);
+    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 8).unwrap();
     let mut routers = BTreeMap::new();
     routers.insert(
         "bnn".to_string(),
@@ -223,6 +223,7 @@ fn backend_construction_failure_is_synchronous() {
 fn replica_test_plan(max_batch: usize) -> bitkernel::model::Plan {
     synthetic_engine([8, 8, 8, 8, 8, 8, 16, 16, 10], 42)
         .plan(EngineKernel::Xnor(XnorImpl::Auto), max_batch)
+        .unwrap()
 }
 
 #[test]

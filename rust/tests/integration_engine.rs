@@ -79,7 +79,7 @@ fn accuracy_identical_across_arms() {
 fn full_scale_model_loads_and_runs() {
     let Some(dir) = artifacts() else { return };
     let engine = BnnEngine::load(dir.join("weights_full.bkw")).unwrap();
-    assert!(engine.cfg.param_count() > 13_000_000);
+    assert!(engine.spec.param_count() > 13_000_000);
     let x = Tensor::zeros(vec![1, 3, 32, 32]);
     let a = engine.forward(&x, EngineKernel::Xnor(XnorImpl::Blocked));
     let b = engine.forward(&x, EngineKernel::Optimized);

@@ -1,0 +1,362 @@
+//! NetSpec IR tests — these run WITHOUT artifacts, like
+//! `plan_session.rs`, so the architecture-generic path is covered in
+//! every environment.
+//!
+//! Pins the four IR contracts of the redesign:
+//! 1. BKW1 compatibility: a spec-less (legacy) weight file synthesizes
+//!    the exact spec `NetSpec::from_widths` builds, and produces
+//!    logits identical to the same tensors with the spec embedded.
+//! 2. BKW2 round trip: writer -> reader preserves the spec and the
+//!    tensors bit-for-bit, and the reloaded engine's logits match.
+//! 3. The acceptance topology (1x28x28 input, 2 convs, 26 classes)
+//!    builds, round-trips, plans on xnor/auto, and `Session::run`
+//!    matches `forward_reference` bit-exactly.
+//! 4. Randomized topologies (non-32 inputs, non-square images, != 10
+//!    classes, fc-only nets, non-binarized layers mid-net) stay
+//!    bit-identical to the unfused oracle on every Table-2 arm.
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::model::{
+    BnnEngine, EngineKernel, LayerSpec, NetSpec, SpecError, WeightFile,
+};
+use bitkernel::testing::{prop_assert, synthetic_engine_spec,
+                         synthetic_weight_file};
+use bitkernel::tensor::Tensor;
+use bitkernel::utils::Rng;
+
+fn arms() -> [EngineKernel; 4] {
+    [
+        EngineKernel::Xnor(XnorImpl::Auto),
+        EngineKernel::Xnor(XnorImpl::Blocked),
+        EngineKernel::Control,
+        EngineKernel::Optimized,
+    ]
+}
+
+fn images_for(spec: &NetSpec, rng: &mut Rng, b: usize) -> Tensor {
+    let (c, h, w) = spec.input();
+    Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w))
+}
+
+/// Compiled sessions must be bit-identical to the unfused oracle on
+/// every arm, across a couple of batch sizes.
+fn assert_plan_matches_reference(engine: &BnnEngine, tag: &str) {
+    let mut rng = Rng::new(0xBEEF ^ tag.len() as u64);
+    for kernel in arms() {
+        let mut session = engine
+            .plan(kernel, 3)
+            .unwrap_or_else(|e| panic!("{tag}: plan failed: {e}"))
+            .session();
+        for b in [1, 3] {
+            let x = images_for(&engine.spec, &mut rng, b);
+            let want = engine.forward_reference(&x, kernel);
+            let got = session.run(&x);
+            assert_eq!(got.shape(), want.shape(), "{tag} {kernel:?} b={b}");
+            assert_eq!(
+                got.max_abs_diff(&want),
+                0.0,
+                "{tag} {kernel:?} b={b}: plan diverged from oracle"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. BKW1 -> legacy-spec equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bkw1_loads_through_the_synthesized_legacy_spec() {
+    const WIDTHS: [u32; 9] = [4, 4, 6, 6, 8, 8, 16, 12, 10];
+    let spec = NetSpec::from_widths(&WIDTHS).unwrap();
+
+    // Strip the spec out of a synthetic BKW2 file and add meta.widths:
+    // exactly what a legacy exporter would have written.
+    let bkw2 = synthetic_weight_file(&spec, 91);
+    let mut tensors = std::collections::BTreeMap::new();
+    for name in bkw2.names() {
+        tensors.insert(name.to_string(), bkw2.get(name).unwrap().clone());
+    }
+    tensors.insert(
+        "meta.widths".to_string(),
+        bitkernel::model::WeightTensor {
+            dtype: bitkernel::model::Dtype::U32,
+            shape: vec![9],
+            words: WIDTHS.to_vec(),
+        },
+    );
+    let bkw1 = WeightFile::from_tensors(tensors);
+    assert_eq!(bkw1.version(), 1);
+
+    let legacy = BnnEngine::from_weight_file(&bkw1).unwrap();
+    assert_eq!(legacy.spec, spec, "synthesized spec drifted");
+
+    // Same tensors, spec embedded vs synthesized: identical logits.
+    let modern = BnnEngine::from_weight_file(&bkw2).unwrap();
+    let mut rng = Rng::new(17);
+    let x = images_for(&spec, &mut rng, 2);
+    for kernel in arms() {
+        let a = legacy.forward_reference(&x, kernel);
+        let b = modern.forward_reference(&x, kernel);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "{kernel:?}");
+    }
+    assert_plan_matches_reference(&legacy, "bkw1-legacy");
+}
+
+// ---------------------------------------------------------------------------
+// 2. BKW2 round trip through the writer/reader
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bkw2_round_trips_spec_and_tensors() {
+    let spec = NetSpec::builder((2, 12, 8)) // non-square on purpose
+        .conv(5, 3)
+        .pool()
+        .conv(7, 3)
+        .linear(11)
+        .linear(4)
+        .build()
+        .unwrap();
+    let wf = synthetic_weight_file(&spec, 55);
+    let bytes = wf.to_bytes();
+    assert_eq!(&bytes[..4], b"BKW2");
+
+    let back = WeightFile::parse(&bytes[..]).unwrap();
+    assert_eq!(back.version(), 2);
+    assert_eq!(back.embedded_spec(), Some(&spec));
+    assert_eq!(back.len(), wf.len());
+    for name in wf.names() {
+        let (a, b) = (wf.get(name).unwrap(), back.get(name).unwrap());
+        assert_eq!(a.shape, b.shape, "{name}");
+        assert_eq!(a.words, b.words, "{name}");
+    }
+
+    // The reloaded engine computes identical logits.
+    let before = BnnEngine::from_weight_file(&wf).unwrap();
+    let after = BnnEngine::from_weight_file(&back).unwrap();
+    let mut rng = Rng::new(5);
+    let x = images_for(&spec, &mut rng, 3);
+    for kernel in arms() {
+        assert_eq!(
+            before
+                .forward_reference(&x, kernel)
+                .max_abs_diff(&after.forward_reference(&x, kernel)),
+            0.0,
+            "{kernel:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. The acceptance topology
+// ---------------------------------------------------------------------------
+
+#[test]
+fn non_cifar_spec_builds_round_trips_and_serves() {
+    // 1x28x28 input, 2 convs, 26 classes — nothing CIFAR about it.
+    let spec = NetSpec::builder((1, 28, 28))
+        .conv(8, 3)
+        .pool()
+        .conv(12, 3)
+        .pool()
+        .linear(32)
+        .linear(26)
+        .build()
+        .unwrap();
+    assert_eq!(spec.classes(), 26);
+
+    // Round-trip the weights through BKW2 bytes.
+    let wf = synthetic_weight_file(&spec, 2026);
+    let back = WeightFile::parse(&wf.to_bytes()[..]).unwrap();
+    let engine = BnnEngine::from_weight_file(&back).unwrap();
+    assert_eq!(engine.spec, spec);
+
+    // Plans on the xnor/auto arm with fully resolved impls...
+    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4).unwrap();
+    assert_eq!(plan.input_shape(), (1, 28, 28));
+    assert_eq!(plan.classes(), 26);
+    assert!(plan.xnor_impls().iter().all(|i| *i != XnorImpl::Auto));
+    assert!(!plan.buffer_sizes().is_empty());
+
+    // ...and every arm matches the oracle bit-exactly.
+    assert_plan_matches_reference(&engine, "acceptance-28x28");
+
+    let mut rng = Rng::new(9);
+    let mut session = plan.session();
+    let x = images_for(&spec, &mut rng, 4);
+    assert_eq!(session.run(&x).shape(), &[4, 26]);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Randomized topologies
+// ---------------------------------------------------------------------------
+
+/// Draw a random-but-valid spec: conv nets over odd input shapes
+/// (non-square, non-32) or fc-only nets, with occasional non-binarized
+/// layers mid-net to exercise the float paths on the xnor arm.
+fn random_spec(rng: &mut Rng) -> NetSpec {
+    let fc_only = rng.below(4) == 0;
+    if fc_only {
+        let c = 1 + rng.below(3);
+        let h = 2 + rng.below(5);
+        let w = 2 + rng.below(5);
+        let mut b = NetSpec::builder((c, h, w));
+        b = b.linear(8 + rng.below(40)); // real-input first fc
+        if rng.below(2) == 0 {
+            // Mid-net non-binarized fc: float gemm on the xnor arm.
+            b = b.linear_opts(4 + rng.below(24), false);
+        } else {
+            b = b.linear(4 + rng.below(24));
+        }
+        return b.linear(2 + rng.below(25)).build().expect("fc-only spec");
+    }
+    let c = 1 + rng.below(3);
+    // Even dims so pools stay legal; non-square and never 32.
+    let h = 2 * (3 + rng.below(4)); // 6..12
+    let w = 2 * (3 + rng.below(4));
+    let mut b = NetSpec::builder((c, h, w));
+    let nconv = 1 + rng.below(3);
+    let mut pools = 0;
+    for i in 0..nconv {
+        let cout = 2 + rng.below(7);
+        let ksize = [1, 3][rng.below(2)];
+        if i > 0 && rng.below(4) == 0 {
+            // Non-binarized conv mid-net: the deferred bn must
+            // materialize on the xnor arm.
+            b = b.conv_opts(cout, ksize, 1, ksize / 2, false);
+        } else {
+            b = b.conv(cout, ksize);
+        }
+        // Pool only while both dims stay even (at most twice: 6/2=3).
+        if pools < 1 && rng.below(2) == 0 {
+            b = b.pool();
+            pools += 1;
+        }
+    }
+    if rng.below(2) == 0 {
+        b = b.linear(4 + rng.below(28));
+    }
+    b.linear(2 + rng.below(25)).build().expect("conv spec")
+}
+
+#[test]
+fn prop_random_topologies_bit_identical_to_oracle() {
+    prop_assert(0xA11CE, 10, |rng, case| {
+        let spec = random_spec(rng);
+        let engine = synthetic_engine_spec(&spec, 1000 + case as u64);
+        for kernel in arms() {
+            let mut session = engine
+                .plan(kernel, 3)
+                .map_err(|e| format!("case {case}: plan: {e}"))?
+                .session();
+            for b in [1, 3] {
+                let x = images_for(&spec, rng, b);
+                let want = engine.forward_reference(&x, kernel);
+                let got = session.run(&x);
+                if got.shape() != want.shape() {
+                    return Err(format!(
+                        "case {case} {kernel:?} b={b}: shape {:?} vs {:?} \
+                         (spec {spec:?})",
+                        got.shape(),
+                        want.shape()
+                    ));
+                }
+                let diff = got.max_abs_diff(&want);
+                if diff != 0.0 {
+                    return Err(format!(
+                        "case {case} {kernel:?} b={b}: |Δ| = {diff} \
+                         (spec {spec:?})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fc_only_net_serves_on_every_arm() {
+    // Explicit fc-only coverage (the random draw above hits it only
+    // probabilistically): raw input rows feed a real fc, then
+    // binarized fcs.
+    let spec = NetSpec::builder((3, 4, 4))
+        .linear(24)
+        .linear(16)
+        .linear(7)
+        .build()
+        .unwrap();
+    let engine = synthetic_engine_spec(&spec, 321);
+    assert_plan_matches_reference(&engine, "fc-only");
+}
+
+#[test]
+fn binarized_first_conv_is_allowed_and_bit_exact() {
+    // Built by hand (the builder keeps the first layer real): a Sign on
+    // the raw input feeding a binarized conv — the xnor arm encodes
+    // straight from the input tensor.
+    let spec = NetSpec::new(
+        (2, 6, 6),
+        vec![
+            LayerSpec::Sign,
+            LayerSpec::Conv2d { cout: 5, ksize: 3, stride: 1, pad: 1,
+                                binarized: true },
+            LayerSpec::BatchNorm,
+            LayerSpec::Flatten,
+            LayerSpec::Sign,
+            LayerSpec::Linear { dout: 4, binarized: true },
+            LayerSpec::BatchNorm,
+        ],
+    )
+    .unwrap();
+    let engine = synthetic_engine_spec(&spec, 77);
+    assert_plan_matches_reference(&engine, "binarized-first-conv");
+}
+
+#[test]
+fn mixed_binarization_fc_chain_is_bit_exact() {
+    // binarized fc -> non-binarized fc -> binarized fc: exercises the
+    // xnor arm's BnRows materialization AND the f32 bn_sign_pack
+    // re-entry into the packed domain.
+    let spec = NetSpec::builder((2, 4, 4))
+        .linear(20)
+        .linear(12)
+        .linear_opts(10, false)
+        .linear(5)
+        .build()
+        .unwrap();
+    let engine = synthetic_engine_spec(&spec, 88);
+    assert_plan_matches_reference(&engine, "mixed-fc-chain");
+}
+
+// ---------------------------------------------------------------------------
+// Typed errors at the API edge
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plan_rejects_zero_batch_with_typed_error() {
+    let spec = NetSpec::builder((1, 4, 4)).linear(3).build().unwrap();
+    let engine = synthetic_engine_spec(&spec, 1);
+    assert!(matches!(
+        engine.plan(EngineKernel::Control, 0),
+        Err(SpecError::ZeroBatch)
+    ));
+}
+
+#[test]
+fn session_shapes_follow_the_spec() {
+    let spec = NetSpec::builder((4, 10, 6))
+        .conv(6, 3)
+        .linear(9)
+        .build()
+        .unwrap();
+    let engine = synthetic_engine_spec(&spec, 3);
+    let plan = engine.plan(EngineKernel::Optimized, 2).unwrap();
+    let mut session = plan.session();
+    let mut rng = Rng::new(2);
+    let x = images_for(&spec, &mut rng, 2);
+    assert_eq!(session.run(&x).shape(), &[2, 9]);
+    let sig = session.buffer_signature();
+    let _ = session.run(&x);
+    assert_eq!(session.buffer_signature(), sig,
+               "steady-state reallocation on a custom topology");
+}

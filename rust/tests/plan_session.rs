@@ -48,7 +48,7 @@ fn prop_session_bit_identical_to_legacy_forward() {
     let engine = synthetic_engine(WIDTHS, 71);
     for kernel in arms() {
         let session =
-            RefCell::new(engine.plan(kernel, MAX_BATCH).session());
+            RefCell::new(engine.plan(kernel, MAX_BATCH).unwrap().session());
         prop_assert(72, 9, |rng, case| {
             // Odd batch sizes on purpose: 1, 3, and max_batch.
             let b = [1, 3, MAX_BATCH][case % 3];
@@ -83,7 +83,7 @@ fn consecutive_runs_do_not_contaminate() {
         EngineKernel::Control,
         EngineKernel::Optimized,
     ] {
-        let mut session = engine.plan(kernel, MAX_BATCH).session();
+        let mut session = engine.plan(kernel, MAX_BATCH).unwrap().session();
         let mut rng = Rng::new(9001);
         let x1 = images(&mut rng, MAX_BATCH);
         let x2 = images(&mut rng, 2);
@@ -92,7 +92,9 @@ fn consecutive_runs_do_not_contaminate() {
         let again = session.run(&x1).clone();
         assert_eq!(first, again, "{kernel:?}: state leaked across runs");
         // The interleaved small batch matches a fresh session too.
-        let fresh = engine.plan(kernel, MAX_BATCH).session().run(&x2).clone();
+        let fresh = engine.plan(kernel, MAX_BATCH).unwrap().session()
+            .run(&x2)
+            .clone();
         assert_eq!(mid, fresh, "{kernel:?}: stale buffer contents leaked");
     }
 }
@@ -103,7 +105,7 @@ fn batch_rows_match_single_image_runs() {
     let mut rng = Rng::new(5);
     let x = images(&mut rng, 3);
     let kernel = EngineKernel::Xnor(XnorImpl::Blocked);
-    let mut session = engine.plan(kernel, 3).session();
+    let mut session = engine.plan(kernel, 3).unwrap().session();
     let batch = session.run(&x).clone();
     let chw = CHW;
     for i in 0..3 {
@@ -118,7 +120,7 @@ fn batch_rows_match_single_image_runs() {
 fn steady_state_runs_never_reallocate() {
     let engine = synthetic_engine(WIDTHS, 74);
     for kernel in arms() {
-        let mut session = engine.plan(kernel, MAX_BATCH).session();
+        let mut session = engine.plan(kernel, MAX_BATCH).unwrap().session();
         let mut rng = Rng::new(4242);
         // Every buffer is preallocated at session creation: even the
         // FIRST run must leave the allocation fingerprint untouched.
@@ -150,13 +152,13 @@ fn wrappers_are_thin_shims_over_the_plan() {
 
     let (out, stages) = engine.forward_profiled(&x, kernel);
     assert_eq!(out, want);
-    assert_eq!(stages.len(), engine.plan(kernel, 3).num_ops());
+    assert_eq!(stages.len(), engine.plan(kernel, 3).unwrap().num_ops());
 }
 
 #[test]
 fn fused_epilogue_is_a_distinct_profiling_stage() {
     let engine = synthetic_engine(WIDTHS, 78);
-    let xnor = engine.plan(EngineKernel::Xnor(XnorImpl::Blocked), 2);
+    let xnor = engine.plan(EngineKernel::Xnor(XnorImpl::Blocked), 2).unwrap();
     let names = xnor.stage_names();
     for needle in ["conv1:im2col", "conv2:encode", "pool2",
                    "flatten:bn_sign_pack", "fc1:xnor-gemm",
@@ -168,7 +170,7 @@ fn fused_epilogue_is_a_distinct_profiling_stage() {
     // standalone bn op anywhere in its program.
     assert!(!names.iter().any(|n| n.ends_with(":bn")), "{names:?}");
 
-    let control = engine.plan(EngineKernel::Control, 2);
+    let control = engine.plan(EngineKernel::Control, 2).unwrap();
     let names = control.stage_names();
     for needle in ["conv1:bn", "conv2:im2col+sign", "flatten",
                    "fc1:sign", "fc3:bn+logits"] {
@@ -191,7 +193,7 @@ fn fused_epilogue_is_a_distinct_profiling_stage() {
 fn auto_plan_resolves_impls_and_stays_bit_identical() {
     let engine = synthetic_engine(WIDTHS, 79);
     let kernel = EngineKernel::Xnor(XnorImpl::Auto);
-    let plan = engine.plan(kernel, MAX_BATCH);
+    let plan = engine.plan(kernel, MAX_BATCH).unwrap();
 
     // Every xnor op resolved to a concrete impl at plan time...
     let impls = plan.xnor_impls();

@@ -4,6 +4,11 @@
 #   build (release) -> tests -> docs -> formatting -> clippy
 #   -> bench smoke runs
 #
+# The netspec suite pins the NetSpec IR: BKW1->legacy-spec
+# equivalence, BKW2 writer/reader round trips, and randomized
+# topologies bit-identical to the unfused oracle; the custom_net
+# example drives the same path end to end (builder -> BKW2 file ->
+# xnor/auto plan -> serve), all artifact-free.
 # The docs step denies rustdoc warnings, so missing public-item docs
 # (lib.rs sets #![warn(missing_docs)]) and broken intra-doc links fail
 # CI.  The profile smoke run exercises the compiled plan/session path
@@ -22,6 +27,12 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+echo "== spec IR: BKW round-trip + randomized-topology property tests"
+cargo test -q --test netspec
+
+echo "== example: custom_net (NetSpec end to end, artifact-free)"
+cargo run --release --example custom_net
 
 echo "== cargo doc --no-deps (rustdoc warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
