@@ -82,8 +82,10 @@ fn main() -> Result<()> {
     let mut t2 = Table::new("Per-class accuracy (xnor arm)",
                             &["class", "correct/total", "accuracy"]);
     for (c, [ok, total]) in per_class.iter().enumerate() {
+        // Class name from the weight file's label table (numeric for
+        // label-less files).
         t2.row(&[
-            bitkernel::server::CLASS_NAMES[c].to_string(),
+            engine.label_for(c),
             format!("{ok}/{total}"),
             format!("{:.1}%", 100.0 * *ok as f64 / (*total).max(1) as f64),
         ]);

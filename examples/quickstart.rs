@@ -15,7 +15,6 @@ use bitkernel::bitops::XnorImpl;
 use bitkernel::data::Dataset;
 use bitkernel::model::{BnnEngine, EngineKernel};
 use bitkernel::runtime::Runtime;
-use bitkernel::server::CLASS_NAMES;
 use bitkernel::utils::Stopwatch;
 
 fn main() -> Result<()> {
@@ -62,13 +61,16 @@ fn main() -> Result<()> {
     );
     let preds: Vec<Vec<usize>> =
         arms.iter().map(|&k| engine.predict(&x, k)).collect();
+    // Class names from the weight file's label table (numeric for
+    // label-less files).
+    let label = |c: usize| engine.label_for(c);
     for i in 0..n {
         table.row(&[
             format!("{i}"),
-            CLASS_NAMES[ds.labels[i] as usize].to_string(),
-            CLASS_NAMES[preds[0][i]].to_string(),
-            CLASS_NAMES[preds[1][i]].to_string(),
-            CLASS_NAMES[preds[2][i]].to_string(),
+            label(ds.labels[i] as usize),
+            label(preds[0][i]),
+            label(preds[1][i]),
+            label(preds[2][i]),
         ]);
     }
     table.print();

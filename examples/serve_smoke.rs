@@ -1,0 +1,207 @@
+//! Serve smoke gate: boot the HTTP service on port 0 over TWO
+//! synthetic weight files with different input shapes and class
+//! counts (one carrying a label table, one label-less), classify
+//! against each over real TCP, and assert 200s, per-model logits
+//! widths, and the label fallback — the ci.sh proof that a single
+//! `serve` process answers heterogeneous binarized nets end to end.
+//!
+//! Artifact-free: the weight files are written to a temp dir first,
+//! so this also exercises the BKW2 + trailing-labels disk round trip
+//! through `BnnEngine::load`.
+//!
+//! Run: `cargo run --release --example serve_smoke`
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, NativeBackend, Router, RouterConfig,
+};
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec};
+use bitkernel::server::{serve, ServeOptions, Service};
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::json::Json;
+
+fn start_router(engine: &BnnEngine) -> Result<Router> {
+    let plan = engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 4)?;
+    Router::start(
+        move |_replica| {
+            Ok(Box::new(NativeBackend::from_plan(&plan))
+                as Box<dyn Backend>)
+        },
+        RouterConfig {
+            queue_cap: 32,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(2),
+            },
+        },
+    )
+}
+
+fn main() -> Result<()> {
+    // --- two synthetic models on disk --------------------------------------
+    let dir = std::env::temp_dir().join("bitkernel_serve_smoke");
+    std::fs::create_dir_all(&dir)?;
+
+    // "shapes": paper-shaped 3x32x32/10 conv net WITH a label table.
+    let spec_a = NetSpec::builder((3, 32, 32))
+        .conv(8, 3)
+        .pool()
+        .linear(10)
+        .build()?;
+    let mut wf_a = synthetic_weight_file(&spec_a, 5);
+    let labels: Vec<String> =
+        (0..10).map(|i| format!("shape-{i}")).collect();
+    wf_a.set_labels(Some(labels.clone()));
+    let path_a = dir.join("shapes.bkw");
+    wf_a.save(&path_a)?;
+
+    // "letters": fc-heavy 1x28x28/26 net, label-less (numeric labels).
+    let spec_b = NetSpec::builder((1, 28, 28))
+        .linear(48)
+        .linear(26)
+        .build()?;
+    let path_b = dir.join("letters.bkw");
+    synthetic_weight_file(&spec_b, 6).save(&path_b)?;
+
+    // --- one service over both (the multi-`--model` serve path) ------------
+    let engine_a = BnnEngine::load(&path_a)?;
+    ensure!(engine_a.labels() == Some(&labels[..]),
+            "labels lost in the disk round trip");
+    let engine_b = BnnEngine::load(&path_b)?;
+    let mut routers = BTreeMap::new();
+    routers.insert("shapes".to_string(), start_router(&engine_a)?);
+    routers.insert("letters".to_string(), start_router(&engine_b)?);
+    let service = Arc::new(Service::new(routers, "shapes"));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let svc = Arc::clone(&service);
+    let stop2 = Arc::clone(&stop);
+    let server = std::thread::spawn(move || {
+        serve(
+            svc,
+            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            stop2,
+            Some(ready_tx),
+        )
+    });
+    let addr = ready_rx
+        .recv_timeout(Duration::from_secs(10))
+        .context("server never came up")?;
+    println!("serve_smoke: listening on {addr}");
+
+    // --- /models advertises both contracts ----------------------------------
+    let (status, body) = http_get(&addr, "/models")?;
+    ensure!(status == 200, "/models -> {status}");
+    ensure!(body.contains("\"shapes\"") && body.contains("\"letters\""),
+            "/models missing a model: {body}");
+    println!("serve_smoke: /models ok ({body})");
+
+    // --- classify each model with its own byte count ------------------------
+    for (model, elems, classes, labelled) in
+        [("shapes", 3 * 32 * 32, 10, true), ("letters", 28 * 28, 26, false)]
+    {
+        let px: Vec<u8> = (0..elems).map(|i| (i % 251) as u8).collect();
+        let (status, body) =
+            http_post(&addr, &format!("/classify?model={model}"), &px)?;
+        ensure!(status == 200, "{model}: {status} {body}");
+        let v = Json::parse(&body)
+            .map_err(|e| anyhow::anyhow!("{model} reply: {e}"))?;
+        let class = v
+            .get("class")
+            .and_then(Json::as_usize)
+            .context("reply missing class")?;
+        ensure!(class < classes, "{model}: class {class}");
+        let label = v
+            .get("label")
+            .and_then(Json::as_str)
+            .context("reply missing label")?;
+        let expected = if labelled {
+            format!("shape-{class}")
+        } else {
+            class.to_string() // numeric fallback for label-less models
+        };
+        ensure!(label == expected,
+                "{model}: label '{label}', expected '{expected}'");
+        let n_logits = v
+            .get("logits")
+            .and_then(Json::as_arr)
+            .map(<[Json]>::len);
+        ensure!(n_logits == Some(classes),
+                "{model}: logits {n_logits:?}");
+        println!(
+            "serve_smoke: {model} ({elems} bytes) -> 200, class {class} \
+             '{label}', {classes} logits ok"
+        );
+    }
+
+    // --- wrong-size body is a clean 400 -------------------------------------
+    let (status, body) =
+        http_post(&addr, "/classify?model=letters", &[0u8; 100])?;
+    ensure!(status == 400, "undersized body -> {status} {body}");
+    println!("serve_smoke: wrong-size body -> 400 ok");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap()?;
+    println!("serve_smoke: all green");
+    Ok(())
+}
+
+// --- tiny blocking HTTP client ---------------------------------------------
+
+fn http_get(addr: &std::net::SocketAddr, path: &str)
+            -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream,
+           "GET {path} HTTP/1.1\r\nHost: s\r\nConnection: close\r\n\r\n")?;
+    read_response(stream)
+}
+
+fn http_post(addr: &std::net::SocketAddr, path: &str, body: &[u8])
+             -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: s\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> Result<(u16, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_lowercase().strip_prefix("content-length:")
+        {
+            len = v.trim().parse()?;
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8(body)?))
+}

@@ -25,10 +25,18 @@ carries its own architecture):
         u8 ndim, ndim * u32le dims,
         data (little-endian, row-major)
     }
+    optional trailing labels section:
+        magic  b"LBLS"
+        u32le  n_labels (one per class, in class order)
+        n_labels * { u16le len, utf-8 bytes }
 (BKW1 is the same without the spec section.)  Exported tensor names:
 meta.widths (u32 [c1..c6, f1, f2, 10], kept for BKW1-era tooling),
 conv1.w .. conv6.w, fc1.w .. fc3.w (sign-binarized {-1,+1} f32) and
-bn_conv1.a/.b .. bn_fc3.a/.b (folded BN affine, f32).
+bn_conv1.a/.b .. bn_fc3.a/.b (folded BN affine, f32).  The labels
+section carries the ShapeSet-10 class names so the serving stack can
+answer with human-readable labels; readers that stop after the tensor
+section skip it for free, and label-less files serve with numeric
+labels.
 """
 
 from __future__ import annotations
@@ -217,10 +225,30 @@ def _write_spec(f, cfg: model.ModelConfig) -> None:
             f.write(struct.pack("<IB", *op[1:]))
 
 
+LABELS_MAGIC = b"LBLS"
+
+
+def _write_labels(f, labels) -> None:
+    f.write(LABELS_MAGIC)
+    f.write(struct.pack("<I", len(labels)))
+    for label in labels:
+        lb = label.encode("utf-8")
+        f.write(struct.pack("<H", len(lb)))
+        f.write(lb)
+
+
 def save_bkw(path: str, cfg: model.ModelConfig,
-             params: Dict[str, Any]) -> None:
+             params: Dict[str, Any], labels=None) -> None:
     """Export the inference float pytree (binarize_params/fold_bn output)
-    as BKW2: the NetSpec rides in the file, followed by the tensors."""
+    as BKW2: the NetSpec rides in the file, followed by the tensors and
+    a trailing labels section.  `labels` defaults to the ShapeSet-10
+    class names; pass a per-class list for other datasets, or [] to
+    write a label-less file (numeric labels at serve time)."""
+    if labels is None:
+        labels = dataset.CLASS_NAMES
+    if labels and len(labels) != model.NUM_CLASSES:
+        raise ValueError(
+            f"{len(labels)} labels for {model.NUM_CLASSES} classes")
     tensors: list[tuple[str, np.ndarray]] = []
     widths = np.asarray(cfg.widths + cfg.fc_widths, np.uint32)
     tensors.append(("meta.widths", widths))
@@ -242,6 +270,8 @@ def save_bkw(path: str, cfg: model.ModelConfig,
         f.write(struct.pack("<I", len(tensors)))
         for name, arr in tensors:
             _write_tensor(f, name, arr)
+        if labels:
+            _write_labels(f, labels)
 
 
 def _skip_spec(f) -> None:
@@ -258,25 +288,54 @@ def _skip_spec(f) -> None:
             raise ValueError(f"unknown opcode {opcode}")
 
 
+def _iter_tensor_records(f):
+    """Walk an open BKW stream: consume the magic (+ spec section) and
+    yield one (name, dtype_byte, dims, data_bytes) per tensor record,
+    leaving the stream positioned at the optional labels section.  The
+    single copy of the record-walking arithmetic, shared by load_bkw
+    and load_bkw_labels."""
+    magic = f.read(4)
+    assert magic in (b"BKW1", b"BKW2"), magic
+    if magic == b"BKW2":
+        _skip_spec(f)
+    (n,) = struct.unpack("<I", f.read(4))
+    for _ in range(n):
+        (ln,) = struct.unpack("<H", f.read(2))
+        name = f.read(ln).decode("utf-8")
+        dt, ndim = struct.unpack("<BB", f.read(2))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        count = int(np.prod(dims)) if ndim else 1
+        yield name, dt, dims, f.read(count * 4)
+
+
 def load_bkw(path: str) -> Dict[str, np.ndarray]:
-    """Read BKW1 or BKW2 back as {name: array} (tests / aot prep)."""
+    """Read BKW1 or BKW2 back as {name: array} (tests / aot prep).
+    Stops after the tensor section — a trailing labels section is
+    skipped for free; use load_bkw_labels for it."""
     out: Dict[str, np.ndarray] = {}
     with open(path, "rb") as f:
+        for name, dt, dims, data in _iter_tensor_records(f):
+            dtype = np.float32 if dt == DTYPE_F32 else np.uint32
+            out[name] = np.frombuffer(data, dtype).reshape(dims).copy()
+    return out
+
+
+def load_bkw_labels(path: str):
+    """The class-label table of a BKW file, or None when it carries
+    none (mirror of the rust reader's labels())."""
+    with open(path, "rb") as f:
+        for _record in _iter_tensor_records(f):
+            pass
         magic = f.read(4)
-        assert magic in (b"BKW1", b"BKW2"), magic
-        if magic == b"BKW2":
-            _skip_spec(f)
+        if not magic:
+            return None
+        assert magic == LABELS_MAGIC, magic
         (n,) = struct.unpack("<I", f.read(4))
+        labels = []
         for _ in range(n):
             (ln,) = struct.unpack("<H", f.read(2))
-            name = f.read(ln).decode("utf-8")
-            dt, ndim = struct.unpack("<BB", f.read(2))
-            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
-            dtype = np.float32 if dt == DTYPE_F32 else np.uint32
-            count = int(np.prod(dims)) if ndim else 1
-            out[name] = np.frombuffer(
-                f.read(count * 4), dtype).reshape(dims).copy()
-    return out
+            labels.append(f.read(ln).decode("utf-8"))
+        return labels
 
 
 def bkw_to_pytree(cfg: model.ModelConfig,

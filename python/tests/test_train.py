@@ -60,6 +60,20 @@ def test_bkw_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_bkw_labels_round_trip(tmp_path):
+    params = model.binarize_params(model.init_params(TINY, seed=4))
+    p = str(tmp_path / "w.bkw")
+    # Default export carries the ShapeSet-10 labels, trailing — so the
+    # tensor reader is oblivious to them.
+    train.save_bkw(p, TINY, params)
+    assert train.load_bkw_labels(p) == dataset.CLASS_NAMES
+    assert "meta.widths" in train.load_bkw(p)
+    # Explicit [] writes a label-less file (numeric labels at serve
+    # time).
+    train.save_bkw(p, TINY, params, labels=[])
+    assert train.load_bkw_labels(p) is None
+
+
 def test_clip_latents_only_touches_matrices():
     tp = {"conv": {"w": jnp.asarray([[3.0, -3.0]])},
           "bn": {"gamma": jnp.asarray([5.0]), "beta": jnp.asarray([-5.0])}}

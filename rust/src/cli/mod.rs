@@ -19,10 +19,15 @@ pub struct FlagSpec {
     pub help: &'static str,
 }
 
-/// Parsed arguments for one subcommand.
+/// Parsed arguments for one subcommand.  Value flags may repeat
+/// ([`Args::get_all`] sees every occurrence in order; [`Args::get`]
+/// the last one — the usual "later flags win" CLI convention).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
-    values: BTreeMap<String, String>,
+    /// Explicit occurrences per flag, in argv order.
+    values: BTreeMap<String, Vec<String>>,
+    /// Declared defaults (consulted when no explicit value was given).
+    defaults: BTreeMap<String, String>,
     switches: Vec<String>,
 }
 
@@ -52,7 +57,7 @@ impl Args {
         let mut out = Args::default();
         for s in specs {
             if let Some(d) = s.default {
-                out.values.insert(s.name.to_string(), d.to_string());
+                out.defaults.insert(s.name.to_string(), d.to_string());
             }
         }
         let mut i = 0;
@@ -70,7 +75,10 @@ impl Args {
                 let v = argv
                     .get(i)
                     .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
-                out.values.insert(name.to_string(), v.clone());
+                out.values
+                    .entry(name.to_string())
+                    .or_default()
+                    .push(v.clone());
             } else {
                 out.switches.push(name.to_string());
             }
@@ -79,9 +87,21 @@ impl Args {
         Ok(out)
     }
 
-    /// Value of a flag (explicit or declared default).
+    /// Value of a flag: the LAST explicit occurrence, else the
+    /// declared default.
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.values.get(name).map(String::as_str)
+        self.values
+            .get(name)
+            .and_then(|v| v.last())
+            .or_else(|| self.defaults.get(name))
+            .map(String::as_str)
+    }
+
+    /// Every explicit occurrence of a repeatable value flag, in argv
+    /// order (empty when the flag was never passed — defaults are NOT
+    /// synthesized here, so callers can tell "absent" apart).
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Value of a flag, or `default` when absent.
@@ -140,6 +160,21 @@ mod tests {
         assert_eq!(a.get_usize("batch", 0).unwrap(), 8);
         let a = Args::parse(&argv(&["--batch", "32"]), SPECS).unwrap();
         assert_eq!(a.get_usize("batch", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order_and_last_wins() {
+        let a = Args::parse(
+            &argv(&["--batch", "4", "--batch", "16"]),
+            SPECS,
+        )
+        .unwrap();
+        assert_eq!(a.get("batch"), Some("16"));
+        assert_eq!(a.get_all("batch"), &["4".to_string(), "16".into()]);
+        // Defaults never leak into get_all.
+        let a = Args::parse(&argv(&[]), SPECS).unwrap();
+        assert_eq!(a.get("batch"), Some("8"));
+        assert!(a.get_all("batch").is_empty());
     }
 
     #[test]

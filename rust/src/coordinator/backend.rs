@@ -11,9 +11,16 @@
 //! labels allocate nothing) and `infer` returns the logits by reference
 //! into backend-owned storage, so the native backend's inference step
 //! itself allocates nothing in steady state.  (The router's worker loop
-//! still allocates its padded input tensor and per-request reply rows —
-//! see `router.rs` — so the zero-alloc guarantee is scoped to
-//! `Session::run` inside `infer`.)
+//! reuses a per-replica padded batch tensor — see `router.rs` — so the
+//! zero-alloc guarantee is scoped to `Session::run` inside `infer`.)
+//!
+//! Every backend also publishes its **shape contract** —
+//! [`Backend::input_shape`], [`Backend::classes`], and optionally
+//! [`Backend::labels`] — which the [`super::Router`] captures at
+//! startup: submissions are validated against it, the padded batch
+//! tensor is sized from it, and the HTTP layer derives per-model
+//! request/reply schemas from it.  Nothing outside the model file
+//! hardwires an image geometry.
 
 use anyhow::Result;
 
@@ -23,8 +30,9 @@ use crate::runtime::LoadedModel;
 use crate::tensor::Tensor;
 
 /// A batched inference backend.  `infer` receives exactly
-/// `max_batch()` images ([B, 3, 32, 32] normalized) — the worker pads
-/// short batches — and returns logits [B, 10], valid until the next
+/// `max_batch()` images ([B, C, H, W] normalized, matching
+/// [`Backend::input_shape`]) — the worker pads short batches — and
+/// returns logits [B, [`Backend::classes`]], valid until the next
 /// `infer` call.
 ///
 /// NOT `Send`: PJRT handles contain thread-affine state (`Rc`, raw
@@ -36,6 +44,17 @@ pub trait Backend {
     fn name(&self) -> &str;
     /// Largest batch `infer` accepts (the worker pads up to it).
     fn max_batch(&self) -> usize;
+    /// Per-image input shape (C, H, W) `infer` expects — the model's
+    /// geometry, read off its plan/executable, never assumed.
+    fn input_shape(&self) -> (usize, usize, usize);
+    /// Number of output classes (`infer` returns [B, classes] logits).
+    fn classes(&self) -> usize;
+    /// Class-label table, when the model carries one (`labels()[c]`
+    /// names class `c`).  Default: none — replies fall back to numeric
+    /// labels.
+    fn labels(&self) -> Option<&[String]> {
+        None
+    }
     /// Run one padded batch; the returned logits borrow backend-owned
     /// storage and stay valid until the next call.
     fn infer(&mut self, images: &Tensor) -> Result<&Tensor>;
@@ -46,6 +65,9 @@ pub trait Backend {
 /// The engine itself is NOT retained — the plan shares its weights.
 pub struct NativeBackend {
     name: String,
+    input_shape: (usize, usize, usize),
+    classes: usize,
+    labels: Option<Vec<String>>,
     session: Session,
 }
 
@@ -55,13 +77,11 @@ impl NativeBackend {
     /// [`NativeBackend::from_plan`] per replica.
     pub fn new(engine: &BnnEngine, kernel: EngineKernel, batch: usize)
                -> Self {
-        Self {
-            name: format!("native/{}", kernel.name()),
-            session: engine
+        Self::from_plan(
+            &engine
                 .plan(kernel, batch)
-                .expect("batch >= 1 and spec validated at load")
-                .session(),
-        }
+                .expect("batch >= 1 and spec validated at load"),
+        )
     }
 
     /// Backend over an already-compiled, shared [`Plan`] — the
@@ -69,9 +89,14 @@ impl NativeBackend {
     /// once per replica, and each call mints a fresh [`Session`] (its
     /// own ping-pong/scratch buffers) from the SAME plan.  One compile,
     /// one weight set, one persistent thread pool, N sets of buffers.
+    /// The plan's shape contract (input shape, class count, labels)
+    /// rides along.
     pub fn from_plan(plan: &Plan) -> Self {
         Self {
             name: format!("native/{}", plan.kernel().name()),
+            input_shape: plan.input_shape(),
+            classes: plan.classes(),
+            labels: plan.labels().map(<[String]>::to_vec),
             session: plan.session(),
         }
     }
@@ -90,6 +115,18 @@ impl Backend for NativeBackend {
 
     fn max_batch(&self) -> usize {
         self.session.max_batch()
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.input_shape
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn labels(&self) -> Option<&[String]> {
+        self.labels.as_deref()
     }
 
     fn infer(&mut self, images: &Tensor) -> Result<&Tensor> {
@@ -124,6 +161,14 @@ impl Backend for PjrtBackend {
         self.model.batch
     }
 
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.model.input_shape()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.classes()
+    }
+
     fn infer(&mut self, images: &Tensor) -> Result<&Tensor> {
         self.last = self.model.infer(images)?;
         Ok(&self.last)
@@ -132,10 +177,17 @@ impl Backend for PjrtBackend {
 
 /// Test stub: logits[i][c] = image mean * (c == target) with an optional
 /// artificial delay, so tests can assert routing and batching without a
-/// model.
+/// model.  Shape-configurable: [`MockBackend::with_shape`] mocks any
+/// input geometry / class count (default: the paper's 3x32x32 / 10).
 pub struct MockBackend {
     /// Batch capacity reported by `max_batch`.
     pub batch: usize,
+    /// Per-image input shape (C, H, W) reported by `input_shape`.
+    pub shape: (usize, usize, usize),
+    /// Class count reported by `classes` (logit rows have this width).
+    pub classes: usize,
+    /// Optional label table reported by `labels`.
+    pub labels: Option<Vec<String>>,
     /// Artificial per-batch latency.
     pub delay: std::time::Duration,
     /// Number of `infer` calls (shared, so replicated-router tests can
@@ -147,10 +199,25 @@ pub struct MockBackend {
 
 impl MockBackend {
     /// A mock with `batch` capacity and `delay_ms` of artificial
-    /// latency per batch.
+    /// latency per batch, speaking the legacy 3x32x32/10-class shape.
     pub fn new(batch: usize, delay_ms: u64) -> Self {
+        Self::with_shape(batch, delay_ms, (3, 32, 32), 10)
+    }
+
+    /// A mock speaking an arbitrary shape contract: `shape` images in,
+    /// `classes` logits out.
+    pub fn with_shape(
+        batch: usize,
+        delay_ms: u64,
+        shape: (usize, usize, usize),
+        classes: usize,
+    ) -> Self {
+        assert!(classes >= 1, "need at least one class");
         Self {
             batch,
+            shape,
+            classes,
+            labels: None,
             delay: std::time::Duration::from_millis(delay_ms),
             calls: Default::default(),
             name: format!("mock/b{batch}"),
@@ -179,6 +246,18 @@ impl Backend for MockBackend {
         self.batch
     }
 
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn labels(&self) -> Option<&[String]> {
+        self.labels.as_deref()
+    }
+
     fn infer(&mut self, images: &Tensor) -> Result<&Tensor> {
         self.calls
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
@@ -187,16 +266,18 @@ impl Backend for MockBackend {
         }
         let b = images.dim(0);
         let chw = images.len() / b;
-        self.out.reset(&[b, 10]);
+        let nc = self.classes;
+        self.out.reset(&[b, nc]);
         self.out.data_mut().fill(0.0);
         for i in 0..b {
             let mean: f32 = images.data()[i * chw..(i + 1) * chw]
                 .iter()
                 .sum::<f32>()
                 / chw as f32;
-            // Deterministic "class": scaled mean bucketed into 0..10.
-            let cls = (((mean + 1.0) / 2.0 * 9.99) as usize).min(9);
-            self.out.data_mut()[i * 10 + cls] = 1.0 + mean.abs();
+            // Deterministic "class": scaled mean bucketed into 0..nc.
+            let cls = (((mean + 1.0) / 2.0 * (nc as f32 - 0.01)) as usize)
+                .min(nc - 1);
+            self.out.data_mut()[i * nc + cls] = 1.0 + mean.abs();
         }
         Ok(&self.out)
     }
@@ -215,6 +296,19 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(m.calls.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(a.shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn mock_backend_shape_configurable() {
+        let mut m = MockBackend::with_shape(2, 0, (1, 28, 28), 26);
+        assert_eq!(m.input_shape(), (1, 28, 28));
+        assert_eq!(m.classes(), 26);
+        assert!(m.labels().is_none());
+        let x = Tensor::full(vec![2, 1, 28, 28], 0.25);
+        let out = m.infer(&x).unwrap();
+        assert_eq!(out.shape(), &[2, 26]);
+        m.labels = Some(vec!["x".into(); 26]);
+        assert_eq!(m.labels().map(<[String]>::len), Some(26));
     }
 
     #[test]

@@ -1,12 +1,20 @@
-//! Dynamic batcher: max-size / max-delay batch formation.
+//! Dynamic batcher: max-size / max-delay batch formation, plus the
+//! reusable padded batch tensor replicas assemble requests into.
 //!
 //! One batcher thread owns the request queue.  A batch closes when
 //! `max_batch` requests are waiting, or `max_delay` has elapsed since
 //! the FIRST request of the batch arrived — the standard serving
 //! trade-off between throughput (big batches) and tail latency.
+//!
+//! [`BatchBuffer`] is the worker-side counterpart: one preallocated
+//! `[cap, C, H, W]` tensor per replica, sized from the backend's shape
+//! contract, refilled in place for every dispatched batch (only the
+//! stale padded tail is re-zeroed — no per-batch allocation).
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
 
 /// Batch-formation policy.
 #[derive(Debug, Clone, Copy)]
@@ -58,9 +66,93 @@ impl<T> DynamicBatcher<T> {
     }
 }
 
+/// A replica's reusable padded input tensor: `[cap, C, H, W]`,
+/// allocated once from the backend's shape contract and refilled in
+/// place per batch.  Rows `0..b` hold the batch's images; rows
+/// `b..cap` are the zero padding the backend contract requires.  Only
+/// rows made stale by a previous (larger) batch are re-zeroed.
+pub struct BatchBuffer {
+    tensor: Tensor,
+    chw: usize,
+    cap: usize,
+    /// Rows holding request data from the previous fill (everything
+    /// past them is already zero).
+    filled: usize,
+}
+
+impl BatchBuffer {
+    /// Allocate the padded tensor for `cap` images of `shape`
+    /// (C, H, W).
+    pub fn new(cap: usize, shape: (usize, usize, usize)) -> Self {
+        let (c, h, w) = shape;
+        Self {
+            tensor: Tensor::zeros(vec![cap, c, h, w]),
+            chw: c * h * w,
+            cap,
+            filled: 0,
+        }
+    }
+
+    /// Elements per image (`C*H*W`) — every row must have this length.
+    pub fn image_elems(&self) -> usize {
+        self.chw
+    }
+
+    /// Copy `rows` into rows `0..b`, zero the stale tail, and return
+    /// the padded tensor.  Panics if `rows` exceeds capacity or any
+    /// row has the wrong length (the router validated both upstream).
+    pub fn fill<'a>(
+        &mut self,
+        rows: impl ExactSizeIterator<Item = &'a [f32]>,
+    ) -> &Tensor {
+        let b = rows.len();
+        assert!(b <= self.cap, "batch {b} exceeds capacity {}", self.cap);
+        let data = self.tensor.data_mut();
+        for (i, row) in rows.enumerate() {
+            data[i * self.chw..(i + 1) * self.chw].copy_from_slice(row);
+        }
+        if self.filled > b {
+            data[b * self.chw..self.filled * self.chw].fill(0.0);
+        }
+        self.filled = b;
+        &self.tensor
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batch_buffer_reuses_and_zeroes_only_stale_tail() {
+        let mut buf = BatchBuffer::new(4, (1, 2, 2));
+        assert_eq!(buf.image_elems(), 4);
+        let a = vec![1.0f32; 4];
+        let b = vec![2.0f32; 4];
+        let ptr = {
+            let t = buf.fill([&a[..], &b[..]].into_iter());
+            assert_eq!(t.shape(), &[4, 1, 2, 2]);
+            assert_eq!(&t.data()[..8],
+                       &[1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+            assert!(t.data()[8..].iter().all(|&v| v == 0.0));
+            t.data().as_ptr() as usize
+        };
+        // A smaller follow-up batch must zero the now-stale row 1 and
+        // reuse the same allocation.
+        let c = vec![3.0f32; 4];
+        let t = buf.fill([&c[..]].into_iter());
+        assert_eq!(&t.data()[..4], &[3.0; 4]);
+        assert!(t.data()[4..].iter().all(|&v| v == 0.0));
+        assert_eq!(t.data().as_ptr() as usize, ptr, "buffer reallocated");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn batch_buffer_rejects_overfull_batches() {
+        let mut buf = BatchBuffer::new(1, (1, 1, 1));
+        let r = [0.0f32];
+        buf.fill([&r[..], &r[..]].into_iter());
+    }
 
     #[test]
     fn fills_to_max_batch_without_waiting() {

@@ -28,7 +28,7 @@ pub mod metrics;
 pub mod router;
 
 pub use backend::{Backend, MockBackend, NativeBackend, PjrtBackend};
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{BatchBuffer, BatcherConfig, DynamicBatcher};
 pub use metrics::{Metrics, MetricsSnapshot, ReplicaMetrics, ReplicaSnapshot};
 pub use router::{default_replicas, BackendFactory, InferReply, Router,
                  RouterConfig, SubmitError};

@@ -24,6 +24,16 @@
 //! request is batched, dispatched and answered before the threads are
 //! joined.  A serving deployment maps model names to routers (see
 //! `server/`).
+//!
+//! The router is **shape-generic**: at [`Router::start`] it captures
+//! the backends' shape contract ([`Backend::input_shape`] /
+//! [`Backend::classes`] / [`Backend::labels`]), validates every
+//! [`Router::submit`] against it (wrong-sized images are a typed
+//! [`SubmitError::WrongShape`], never a worker panic), and sizes each
+//! replica's reusable padded batch tensor from it.  A single process
+//! can therefore pool routers over heterogeneous models — a
+//! 3x32x32/10-class CNN next to a 1x28x28/26-class fc net — with no
+//! geometry hardwired anywhere on the request path.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
@@ -32,14 +42,10 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::nn::argmax;
-use crate::tensor::Tensor;
 
 use super::backend::Backend;
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::{BatchBuffer, BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
-
-/// Elements of one normalized CHW request image (3 * 32 * 32).
-pub const IMAGE_ELEMS: usize = 3 * 32 * 32;
 
 /// A completed inference.
 #[derive(Debug, Clone)]
@@ -59,6 +65,14 @@ pub struct InferReply {
 pub enum SubmitError {
     /// Admission queue at capacity — caller should retry/shed.
     QueueFull,
+    /// The image's element count does not match the model's input
+    /// shape (`C*H*W` — see [`Router::input_shape`]).
+    WrongShape {
+        /// Elements the model's input shape requires.
+        expected: usize,
+        /// Elements the submission carried.
+        got: usize,
+    },
     /// Router shut down.
     Shutdown,
 }
@@ -67,13 +81,17 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::QueueFull => write!(f, "queue full"),
+            SubmitError::WrongShape { expected, got } => write!(
+                f,
+                "image has {got} elements, model expects {expected}"
+            ),
             SubmitError::Shutdown => write!(f, "router shut down"),
         }
     }
 }
 
 struct Request {
-    /// Normalized CHW image (3*32*32 f32).
+    /// Normalized CHW image (`C*H*W` f32, validated at submit).
     image: Vec<f32>,
     submitted: Instant,
     reply_tx: mpsc::Sender<InferReply>,
@@ -124,6 +142,16 @@ impl Default for RouterConfig {
     }
 }
 
+/// What a replica reports once its backend is constructed: the
+/// metrics label plus the backend's full shape contract.
+struct ReplicaInfo {
+    name: String,
+    cap: usize,
+    shape: (usize, usize, usize),
+    classes: usize,
+    labels: Option<Vec<String>>,
+}
+
 /// A running pipeline: queue -> batcher -> replica pool.
 pub struct Router {
     tx: Option<mpsc::SyncSender<Request>>,
@@ -132,6 +160,10 @@ pub struct Router {
     workers: Vec<JoinHandle<()>>,
     backend_name: String,
     replicas: usize,
+    /// Shape contract captured from the backends at startup.
+    input_shape: (usize, usize, usize),
+    classes: usize,
+    labels: Option<Vec<String>>,
 }
 
 impl Router {
@@ -176,7 +208,7 @@ impl Router {
         let metrics = Arc::new(Metrics::with_replicas(replicas));
         let factory = Arc::new(factory);
         let (ready_tx, ready_rx) =
-            mpsc::channel::<anyhow::Result<(String, usize)>>();
+            mpsc::channel::<anyhow::Result<ReplicaInfo>>();
 
         // Per-replica dispatch channels are bounded to ONE queued batch:
         // enough to keep a replica busy back to back, small enough that
@@ -200,9 +232,14 @@ impl Router {
         drop(ready_tx);
 
         // Collect startup results; the smallest backend capacity bounds
-        // batch formation so every batch fits every replica.
+        // batch formation so every batch fits every replica, and every
+        // replica must publish the SAME shape contract (one factory,
+        // one model — a mismatch is a backend bug surfaced here, not a
+        // worker panic later).
         let mut backend_name = String::new();
         let mut min_cap = usize::MAX;
+        let mut contract: Option<((usize, usize, usize), usize)> = None;
+        let mut labels: Option<Vec<String>> = None;
         for _ in 0..replicas {
             let result = match ready_rx.recv() {
                 Ok(r) => r,
@@ -211,10 +248,27 @@ impl Router {
                     "replica worker died during startup"
                 )),
             };
+            let result = result.and_then(|info| {
+                match contract {
+                    None => contract = Some((info.shape, info.classes)),
+                    Some(c) if c != (info.shape, info.classes) => {
+                        anyhow::bail!(
+                            "replica shape contracts disagree: \
+                             {:?}/{} vs {:?}/{}",
+                            c.0, c.1, info.shape, info.classes
+                        )
+                    }
+                    Some(_) => {}
+                }
+                Ok(info)
+            });
             match result {
-                Ok((name, cap)) => {
-                    backend_name = name;
-                    min_cap = min_cap.min(cap);
+                Ok(info) => {
+                    backend_name = info.name;
+                    min_cap = min_cap.min(info.cap);
+                    if labels.is_none() {
+                        labels = info.labels;
+                    }
                 }
                 Err(e) => {
                     // Tear the pool down: dropping the dispatch channels
@@ -227,6 +281,8 @@ impl Router {
                 }
             }
         }
+        let (input_shape, classes) =
+            contract.expect("replicas >= 1 reported");
 
         let bcfg = BatcherConfig {
             // Never form batches larger than the smallest backend.
@@ -246,6 +302,9 @@ impl Router {
             workers,
             backend_name,
             replicas,
+            input_shape,
+            classes,
+            labels,
         })
     }
 
@@ -253,6 +312,37 @@ impl Router {
     /// factory, hence one label).
     pub fn backend_name(&self) -> &str {
         &self.backend_name
+    }
+
+    /// Per-image input shape (C, H, W) this router's model expects —
+    /// the shape contract captured from the backends at startup.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.input_shape
+    }
+
+    /// Elements of one request image (`C*H*W`) — the length
+    /// [`Router::submit`] validates against.
+    pub fn image_elems(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+
+    /// Number of output classes (reply logits have this length).
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// The model's class-label table, when it carries one
+    /// (`labels()[c]` names class `c`).
+    pub fn labels(&self) -> Option<&[String]> {
+        self.labels.as_deref()
+    }
+
+    /// Display name for `class`: the label table's entry, or the
+    /// numeric index for label-less models
+    /// ([`crate::model::label_for`]).
+    pub fn label_for(&self, class: usize) -> String {
+        crate::model::label_for(self.labels(), class)
     }
 
     /// Number of worker replicas in the pool.
@@ -265,27 +355,40 @@ impl Router {
         Arc::clone(&self.metrics)
     }
 
-    /// Non-blocking submit; returns the reply channel.
+    /// Non-blocking submit; returns the reply channel.  The image must
+    /// have exactly [`Router::image_elems`] elements (the model's
+    /// `C*H*W`) — anything else is a typed
+    /// [`SubmitError::WrongShape`], checked here at admission so a
+    /// malformed request can never reach (let alone panic) a worker.
     ///
     /// ```
     /// use bitkernel::coordinator::{Backend, MockBackend, Router,
-    ///                              RouterConfig};
+    ///                              RouterConfig, SubmitError};
     ///
     /// let router = Router::start(
     ///     |_replica| Ok(Box::new(MockBackend::new(4, 0))
     ///                   as Box<dyn Backend>),
     ///     RouterConfig { replicas: 2, ..RouterConfig::default() },
     /// ).unwrap();
-    /// let rx = router.submit(vec![0.5; 3 * 32 * 32]).unwrap();
+    /// assert_eq!(router.input_shape(), (3, 32, 32));
+    /// let rx = router.submit(vec![0.5; router.image_elems()]).unwrap();
     /// let reply = rx.recv().unwrap();
-    /// assert_eq!(reply.logits.len(), 10);
+    /// assert_eq!(reply.logits.len(), router.classes());
+    /// assert!(matches!(router.submit(vec![0.5; 7]),
+    ///                  Err(SubmitError::WrongShape { .. })));
     /// router.shutdown();
     /// ```
     pub fn submit(
         &self,
         image_chw: Vec<f32>,
     ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
-        assert_eq!(image_chw.len(), IMAGE_ELEMS, "image element count");
+        let expected = self.image_elems();
+        if image_chw.len() != expected {
+            return Err(SubmitError::WrongShape {
+                expected,
+                got: image_chw.len(),
+            });
+        }
         let tx = self.tx.as_ref().ok_or(SubmitError::Shutdown)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request {
@@ -345,11 +448,17 @@ fn replica_loop(
     factory: &BackendFactory,
     brx: mpsc::Receiver<Batch>,
     m: &Metrics,
-    ready_tx: mpsc::Sender<anyhow::Result<(String, usize)>>,
+    ready_tx: mpsc::Sender<anyhow::Result<ReplicaInfo>>,
 ) {
     let mut backend = match factory(replica) {
         Ok(b) => {
-            let _ = ready_tx.send(Ok((b.name().to_string(), b.max_batch())));
+            let _ = ready_tx.send(Ok(ReplicaInfo {
+                name: b.name().to_string(),
+                cap: b.max_batch(),
+                shape: b.input_shape(),
+                classes: b.classes(),
+                labels: b.labels().map(<[String]>::to_vec),
+            }));
             b
         }
         Err(e) => {
@@ -359,19 +468,17 @@ fn replica_loop(
     };
     drop(ready_tx);
     let cap = backend.max_batch();
+    // The replica's reusable padded input tensor, sized from the
+    // backend's shape contract — refilled in place per batch, so the
+    // dispatch hot path allocates nothing for image data.
+    let mut buffer = BatchBuffer::new(cap, backend.input_shape());
     let rm = &m.replicas[replica];
     while let Ok(batch) = brx.recv() {
         let Batch { formed, reqs } = batch;
         let b = reqs.len();
-        // Assemble the (padded) image tensor.
-        let mut data = vec![0.0f32; cap * IMAGE_ELEMS];
-        for (i, r) in reqs.iter().enumerate() {
-            data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS]
-                .copy_from_slice(&r.image);
-        }
-        let images = Tensor::new(vec![cap, 3, 32, 32], data);
+        let images = buffer.fill(reqs.iter().map(|r| &r.image[..]));
         let infer_sw = Instant::now();
-        let result = backend.infer(&images);
+        let result = backend.infer(images);
         let infer_us = infer_sw.elapsed().as_micros() as u64;
         rm.batches.fetch_add(1, Ordering::Relaxed);
         rm.requests.fetch_add(b as u64, Ordering::Relaxed);
@@ -495,7 +602,7 @@ mod tests {
     use std::time::Duration;
 
     fn image(v: f32) -> Vec<f32> {
-        vec![v; IMAGE_ELEMS]
+        vec![v; 3 * 32 * 32]
     }
 
     #[test]
@@ -616,6 +723,48 @@ mod tests {
         assert!(snap.replicas.iter().all(|r| r.inflight == 0));
         assert!(snap.replicas.iter().all(|r| r.busy_us > 0
                 || r.requests == 0));
+    }
+
+    #[test]
+    fn captures_backend_shape_contract() {
+        let router = Router::start(
+            |_| {
+                let mut b = MockBackend::with_shape(4, 0, (1, 28, 28), 26);
+                b.labels = Some((b'a'..=b'z')
+                    .map(|c| (c as char).to_string())
+                    .collect());
+                Ok(Box::new(b) as Box<dyn Backend>)
+            },
+            RouterConfig { replicas: 2, ..RouterConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(router.input_shape(), (1, 28, 28));
+        assert_eq!(router.image_elems(), 28 * 28);
+        assert_eq!(router.classes(), 26);
+        assert_eq!(router.labels().map(<[String]>::len), Some(26));
+        let reply = router.submit_wait(vec![0.9; 28 * 28]).unwrap();
+        assert_eq!(reply.logits.len(), 26);
+        router.shutdown();
+    }
+
+    #[test]
+    fn wrong_shape_submit_is_typed_and_harmless() {
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::with_shape(4, 0, (2, 5, 7), 3))
+                   as Box<dyn Backend>),
+            RouterConfig { replicas: 1, ..RouterConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            router.submit(vec![0.0; 71]).err(),
+            Some(SubmitError::WrongShape { expected: 70, got: 71 })
+        );
+        assert!(router.submit(Vec::new()).is_err());
+        // The pool is untouched: a correct submit still round-trips.
+        let reply = router.submit_wait(vec![0.5; 70]).unwrap();
+        assert_eq!(reply.logits.len(), 3);
+        assert_eq!(router.metrics().snapshot().completed, 1);
+        router.shutdown();
     }
 
     #[test]

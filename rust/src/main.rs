@@ -22,7 +22,7 @@ use bitkernel::coordinator::{
 use bitkernel::data::Dataset;
 use bitkernel::model::{BnnEngine, EngineKernel};
 use bitkernel::runtime::Runtime;
-use bitkernel::server::{serve, ServeOptions, Service, CLASS_NAMES};
+use bitkernel::server::{serve, ServeOptions, Service};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -126,6 +126,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                    help: "native-{xnor,control,optimized} or pjrt-{xnor,control,optimized}" },
         FlagSpec { name: "weights", takes_value: true, default: Some("small"),
                    help: "weight set: small (trained) or full" },
+        FlagSpec { name: "model", takes_value: true, default: None,
+                   help: "serve a weight file as <name>=<path.bkw> \
+                          (repeatable — heterogeneous shapes/classes \
+                          welcome; first one is the default model; \
+                          native backends only; overrides --weights)" },
         FlagSpec { name: "batch", takes_value: true, default: Some("8"),
                    help: "max dynamic batch size" },
         FlagSpec { name: "max-delay-ms", takes_value: true, default: Some("5"),
@@ -162,10 +167,57 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         },
     };
 
-    let router = start_backend(&artifacts, &backend, &weights, batch, cfg)?;
-    let mut routers = BTreeMap::new();
-    routers.insert("bnn".to_string(), router);
-    let service = Arc::new(Service::new(routers, "bnn"));
+    // Two ways to populate the model table: repeated `--model
+    // name=path.bkw` (heterogeneous shapes/classes behind one port), or
+    // the legacy single-model `--backend`/`--weights` pair as "bnn".
+    let model_flags = args.get_all("model");
+    let (routers, default_model) = if model_flags.is_empty() {
+        let router =
+            start_backend(&artifacts, &backend, &weights, batch, cfg)?;
+        let mut routers = BTreeMap::new();
+        routers.insert("bnn".to_string(), router);
+        (routers, "bnn".to_string())
+    } else {
+        let Some(kernel_name) = backend.strip_prefix("native-") else {
+            bail!(
+                "--model serves through the native engine; \
+                 got --backend {backend} (pjrt models go through \
+                 --weights and the artifact manifest)"
+            );
+        };
+        let kernel = parse_kernel(kernel_name)?;
+        let mut routers = BTreeMap::new();
+        let mut default_model = String::new();
+        for spec in model_flags {
+            let Some((name, path)) = spec.split_once('=') else {
+                bail!("--model wants <name>=<path.bkw>, got '{spec}'");
+            };
+            anyhow::ensure!(!name.is_empty(), "--model name is empty");
+            anyhow::ensure!(
+                !routers.contains_key(name),
+                "duplicate model name '{name}'"
+            );
+            let engine = BnnEngine::load(path)
+                .with_context(|| format!("loading model '{name}'"))?;
+            // Compile once; each replica mints its own session.  Every
+            // validated NetSpec serves — no shape gatekeeping here.
+            let plan = engine.plan(kernel, batch)?;
+            let router = Router::start(
+                move |_replica| {
+                    Ok(Box::new(NativeBackend::from_plan(&plan))
+                        as Box<dyn Backend>)
+                },
+                cfg,
+            )
+            .with_context(|| format!("starting model '{name}'"))?;
+            if default_model.is_empty() {
+                default_model = name.to_string();
+            }
+            routers.insert(name.to_string(), router);
+        }
+        (routers, default_model)
+    };
+    let service = Arc::new(Service::new(routers, &default_model));
     let stop = Arc::new(AtomicBool::new(false));
     serve(
         service,
@@ -198,20 +250,9 @@ fn start_backend(
             let manifest = bitkernel::runtime::Manifest::load(&artifacts)?;
             let path = manifest.weight_file(&weights_name)?;
             let engine = BnnEngine::load(path)?;
-            // The HTTP front-end (routes, batcher padding, pixel
-            // normalization) is still fixed to 3x32x32/10-class
-            // requests; fail at startup with a clear message instead
-            // of panicking a replica worker on the first batch.
-            // Custom NetSpec architectures serve through the
-            // Plan/Session API (see examples/custom_net.rs).
-            anyhow::ensure!(
-                engine.spec.input() == (3, 32, 32)
-                    && engine.spec.classes() == 10,
-                "the HTTP service expects a 3x32x32/10-class model, but \
-                 '{weights_name}' describes input {:?} with {} classes",
-                engine.spec.input(),
-                engine.spec.classes()
-            );
+            // Any validated NetSpec serves: the router captures the
+            // plan's shape contract and the HTTP layer derives the
+            // request schema from it.
             let plan = engine.plan(kernel, batch)?;
             Router::start(
                 move |_replica| {
@@ -278,6 +319,9 @@ fn cmd_classify(argv: &[String]) -> Result<()> {
     let x = ds.normalized(lo, lo + n);
     let preds = engine.predict(&x, kernel);
     println!("kernel: {}", kernel.name());
+    // Class names from the weight file's label table; label-less
+    // files print numeric classes.
+    let label = |c: usize| engine.label_for(c);
     let mut correct = 0;
     for (i, p) in preds.iter().enumerate() {
         let truth = ds.labels[lo + i] as usize;
@@ -288,8 +332,8 @@ fn cmd_classify(argv: &[String]) -> Result<()> {
         println!(
             "image {:>5}  pred {:<13} truth {:<13} {}",
             lo + i,
-            CLASS_NAMES[*p],
-            CLASS_NAMES[truth],
+            label(*p),
+            label(truth),
             mark
         );
     }
@@ -402,6 +446,12 @@ fn cmd_describe(argv: &[String]) -> Result<()> {
         spec.param_count(),
         wf.len()
     );
+    match wf.labels() {
+        Some(labels) => {
+            println!("labels: {}", labels.join(", "));
+        }
+        None => println!("labels: (none — numeric classes)"),
+    }
 
     println!("\nops ({}):", spec.layers().len());
     let names = spec.layer_names();

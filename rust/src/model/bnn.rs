@@ -43,6 +43,18 @@ use crate::tensor::{PackedMatrix, Tensor};
 use super::format::WeightFile;
 use super::spec::NetSpec;
 
+/// Display name for `class` under an optional label table: the
+/// table's entry when it has one, else the numeric class index as a
+/// string.  The ONE fallback policy every surface shares (HTTP
+/// replies, the classify/describe CLI, the examples) — change it
+/// here, nowhere else.
+pub fn label_for(labels: Option<&[String]>, class: usize) -> String {
+    labels
+        .and_then(|l| l.get(class))
+        .cloned()
+        .unwrap_or_else(|| class.to_string())
+}
+
 /// Which Table-2 arm to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKernel {
@@ -120,6 +132,10 @@ pub struct BnnEngine {
     /// The architecture IR: embedded in the weight file (BKW2) or
     /// synthesized from its legacy widths vector (BKW1).
     pub spec: NetSpec,
+    /// Class-label table from the weight file's trailing labels
+    /// section, when present (`labels[c]` names class `c`).  `Arc`d so
+    /// compiled plans can carry it without copying.
+    pub(crate) labels: Option<Arc<Vec<String>>>,
     pub(crate) convs: Vec<ConvLayer>,
     pub(crate) fcs: Vec<FcLayer>,
 }
@@ -131,6 +147,21 @@ impl BnnEngine {
     /// ([`NetSpec::layer_names`]).
     pub fn from_weight_file(wf: &WeightFile) -> Result<Self> {
         let spec = wf.net_spec()?;
+        let labels = match wf.labels() {
+            Some(l) => {
+                // BKW2 files were already checked at parse time; this
+                // also covers BKW1 files (spec synthesized after the
+                // labels were read) and in-memory assembly.
+                ensure!(
+                    l.len() == spec.classes(),
+                    "label table has {} entries for {} classes",
+                    l.len(),
+                    spec.classes()
+                );
+                Some(Arc::new(l.to_vec()))
+            }
+            None => None,
+        };
         let (cblocks, fblocks) = spec.blocks();
         let mut convs = Vec::with_capacity(cblocks.len());
         for s in &cblocks {
@@ -188,13 +219,25 @@ impl BnnEngine {
                 bn_b: Arc::new(bn_b),
             });
         }
-        Ok(Self { spec, convs, fcs })
+        Ok(Self { spec, labels, convs, fcs })
     }
 
     /// Convenience: load straight from a .bkw path.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         let wf = WeightFile::load(&path).context("loading weight file")?;
         Self::from_weight_file(&wf)
+    }
+
+    /// The class-label table from the weight file, when it carried one
+    /// (`labels()[c]` names class `c`; label-less files serve with
+    /// numeric labels).
+    pub fn labels(&self) -> Option<&[String]> {
+        self.labels.as_ref().map(|l| &l[..])
+    }
+
+    /// [`label_for`] over this engine's label table.
+    pub fn label_for(&self, class: usize) -> String {
+        label_for(self.labels(), class)
     }
 
     /// Full forward pass: normalized NCHW images -> logits
@@ -381,5 +424,14 @@ mod tests {
         }
         assert_eq!(EngineKernel::Control.name(), "control");
         assert_eq!(EngineKernel::Optimized.name(), "optimized");
+    }
+
+    #[test]
+    fn label_for_falls_back_to_numeric() {
+        let table = vec!["circle".to_string(), "square".into()];
+        assert_eq!(label_for(Some(&table), 1), "square");
+        // Out-of-range and label-less both fall back numerically.
+        assert_eq!(label_for(Some(&table), 7), "7");
+        assert_eq!(label_for(None, 3), "3");
     }
 }

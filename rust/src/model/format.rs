@@ -3,8 +3,9 @@
 //! Two wire versions share the tensor-record encoding:
 //!
 //! ```text
-//!     BKW1:  magic b"BKW1", tensor section
+//!     BKW1:  magic b"BKW1", tensor section [, labels section]
 //!     BKW2:  magic b"BKW2", spec section, tensor section
+//!                           [, labels section]
 //!
 //!     spec section:
 //!         u32le  input_c, input_h, input_w, classes
@@ -25,6 +26,11 @@
 //!             u8 ndim, ndim * u32le dims,
 //!             data (little-endian, row-major)
 //!         }
+//!
+//!     labels section (optional, trailing):
+//!         magic b"LBLS"
+//!         u32le  n_labels         (one per class, in class order)
+//!         n_labels * { u16le len, utf-8 bytes }
 //! ```
 //!
 //! BKW2 files carry their own [`NetSpec`], so the engine can serve ANY
@@ -34,6 +40,12 @@
 //! sign-binarized weight tensor (`<layer>.w`) and the folded BN affine
 //! (`bn_<layer>.a` / `.b`) under the canonical names of
 //! [`NetSpec::layer_names`].
+//!
+//! The labels section is strictly optional and strictly trailing:
+//! readers that stop after the tensor section (BKW1-era tooling, the
+//! python `load_bkw`) skip it for free, and files without it serve
+//! with numeric class labels.  When present alongside an embedded
+//! spec, its entry count must equal the spec's class count.
 //!
 //! Structural failures are typed [`FormatError`]s; the CLI wraps them
 //! in `anyhow` context (file path, tensor name) at the boundary.
@@ -105,6 +117,36 @@ pub enum FormatError {
     /// A tensor accessed as the wrong dtype.
     #[error("tensor is not {0}")]
     DtypeMismatch(&'static str),
+    /// Trailing bytes after the tensor section that are not a labels
+    /// section.
+    #[error("bad trailing-section magic {0:?} (expected LBLS)")]
+    BadLabelMagic([u8; 4]),
+    /// A label-count past the sanity bound.
+    #[error("implausible label count {0}")]
+    LabelCount(usize),
+    /// A label that is not UTF-8.
+    #[error("label {0} is not utf-8")]
+    BadLabel(usize),
+    /// A label longer than the u16 wire length field can carry.
+    #[error("label {index} is {len} bytes (the wire limit is 65535)")]
+    LabelTooLong {
+        /// Index of the offending label.
+        index: usize,
+        /// Its encoded byte length.
+        len: usize,
+    },
+    /// Bytes after the end of the labels section.
+    #[error("trailing bytes after the labels section")]
+    TrailingBytes,
+    /// A labels section whose entry count disagrees with the embedded
+    /// spec's class count.
+    #[error("labels section has {labels} entries but the spec declares {classes} classes")]
+    LabelClassMismatch {
+        /// Entries in the labels section.
+        labels: usize,
+        /// Class count of the embedded spec.
+        classes: usize,
+    },
 }
 
 /// One named tensor from a BKW file.
@@ -152,6 +194,8 @@ pub struct WeightFile {
     tensors: BTreeMap<String, WeightTensor>,
     /// The embedded architecture (BKW2 only).
     spec: Option<NetSpec>,
+    /// The optional class-label table (trailing labels section).
+    labels: Option<Vec<String>>,
 }
 
 fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>, FormatError> {
@@ -231,6 +275,71 @@ fn read_spec(r: &mut impl Read) -> Result<NetSpec, FormatError> {
     Ok(NetSpec::with_classes((c, h, w), classes, layers)?)
 }
 
+/// Magic of the optional trailing labels section.
+const LABELS_MAGIC: &[u8; 4] = b"LBLS";
+
+/// Sanity bound on the label-table entry count (a class count far past
+/// any real classifier, small enough to reject corrupt counts).
+const MAX_LABELS: usize = 1 << 16;
+
+/// After the tensor section: EOF means no labels; anything else must
+/// be a complete `LBLS` section.
+fn read_labels(r: &mut impl Read)
+               -> Result<Option<Vec<String>>, FormatError> {
+    // Distinguish clean EOF (no trailing section) from a truncated or
+    // foreign trailer: a zero-byte first read is EOF; a short magic is
+    // an I/O error; four non-LBLS bytes are a typed failure.
+    let mut magic = [0u8; 4];
+    let first = r.read(&mut magic)?;
+    if first == 0 {
+        return Ok(None);
+    }
+    if first < 4 {
+        r.read_exact(&mut magic[first..])?;
+    }
+    if &magic != LABELS_MAGIC {
+        return Err(FormatError::BadLabelMagic(magic));
+    }
+    let n = read_u32(r)? as usize;
+    if n > MAX_LABELS {
+        return Err(FormatError::LabelCount(n));
+    }
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let len = read_u16(r)? as usize;
+        let bytes = read_exact(r, len)?;
+        labels.push(String::from_utf8(bytes)
+            .map_err(|_| FormatError::BadLabel(i))?);
+    }
+    // The labels section is the file's last: anything after it is
+    // corruption (a zero-length read is the only acceptable outcome).
+    if r.read(&mut [0u8; 1])? != 0 {
+        return Err(FormatError::TrailingBytes);
+    }
+    Ok(Some(labels))
+}
+
+fn write_labels(w: &mut impl Write, labels: &[String])
+                -> Result<(), FormatError> {
+    // Enforce the wire limits the reader polices, so a writable table
+    // is always a re-parsable one (no silent `as u16`/`as u32`
+    // truncation producing a corrupt trailer).
+    if labels.len() > MAX_LABELS {
+        return Err(FormatError::LabelCount(labels.len()));
+    }
+    w.write_all(LABELS_MAGIC)?;
+    w.write_all(&(labels.len() as u32).to_le_bytes())?;
+    for (index, label) in labels.iter().enumerate() {
+        let lb = label.as_bytes();
+        let len: u16 = lb.len().try_into().map_err(|_| {
+            FormatError::LabelTooLong { index, len: lb.len() }
+        })?;
+        w.write_all(&len.to_le_bytes())?;
+        w.write_all(lb)?;
+    }
+    Ok(())
+}
+
 fn write_spec(w: &mut impl Write, spec: &NetSpec)
               -> Result<(), FormatError> {
     let (ic, ih, iw) = spec.input();
@@ -265,7 +374,7 @@ impl WeightFile {
     /// — callers rely on the `meta.widths` tensor for the architecture,
     /// exactly like a parsed BKW1 file.
     pub fn from_tensors(tensors: BTreeMap<String, WeightTensor>) -> Self {
-        Self { tensors, spec: None }
+        Self { tensors, spec: None, labels: None }
     }
 
     /// Assemble a weight file carrying its own architecture — the BKW2
@@ -274,7 +383,7 @@ impl WeightFile {
         tensors: BTreeMap<String, WeightTensor>,
         spec: NetSpec,
     ) -> Self {
-        Self { tensors, spec: Some(spec) }
+        Self { tensors, spec: Some(spec), labels: None }
     }
 
     /// Parse a BKW1 or BKW2 stream.
@@ -328,11 +437,34 @@ impl WeightFile {
                 .collect();
             tensors.insert(name, WeightTensor { dtype, shape, words });
         }
-        Ok(Self { tensors, spec })
+        let labels = read_labels(&mut r)?;
+        if let (Some(labels), Some(spec)) = (&labels, &spec) {
+            if labels.len() != spec.classes() {
+                return Err(FormatError::LabelClassMismatch {
+                    labels: labels.len(),
+                    classes: spec.classes(),
+                });
+            }
+        }
+        Ok(Self { tensors, spec, labels })
     }
 
     /// Serialize: BKW2 when the file carries a spec, BKW1 otherwise.
+    /// A non-empty label table rides as the trailing labels section of
+    /// either version (an empty table writes nothing — the label-less
+    /// file, mirroring python's `labels=[]`).  Everything written here
+    /// re-parses: a table whose entry count disagrees with the
+    /// embedded spec's class count is refused with the same
+    /// [`FormatError::LabelClassMismatch`] the reader would raise.
     pub fn write_to(&self, mut w: impl Write) -> Result<(), FormatError> {
+        if let (Some(labels), Some(spec)) = (&self.labels, &self.spec) {
+            if !labels.is_empty() && labels.len() != spec.classes() {
+                return Err(FormatError::LabelClassMismatch {
+                    labels: labels.len(),
+                    classes: spec.classes(),
+                });
+            }
+        }
         match &self.spec {
             Some(spec) => {
                 w.write_all(b"BKW2")?;
@@ -357,14 +489,24 @@ impl WeightFile {
                 w.write_all(&word.to_le_bytes())?;
             }
         }
+        if let Some(labels) = self.labels.as_deref() {
+            if !labels.is_empty() {
+                write_labels(&mut w, labels)?;
+            }
+        }
         Ok(())
     }
 
     /// Serialize to a byte vector (see [`WeightFile::write_to`]).
+    /// Panics on a label table the wire format cannot carry or that
+    /// disagrees with the spec's class count (use
+    /// [`WeightFile::write_to`] for the typed error).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        self.write_to(&mut out)
-            .expect("writing to a Vec cannot fail");
+        self.write_to(&mut out).expect(
+            "in-memory serialization (only label-table validation can \
+             fail here)",
+        );
         out
     }
 
@@ -389,6 +531,21 @@ impl WeightFile {
     /// The embedded architecture, when the file is BKW2.
     pub fn embedded_spec(&self) -> Option<&NetSpec> {
         self.spec.as_ref()
+    }
+
+    /// The class-label table, when the file carries one (label-less
+    /// files serve with numeric labels).
+    pub fn labels(&self) -> Option<&[String]> {
+        self.labels.as_deref()
+    }
+
+    /// Attach (or clear) the class-label table written as the trailing
+    /// labels section; entry `i` names class `i`.  An empty table is
+    /// equivalent to `None` at write time (no section is emitted); a
+    /// non-empty table must have one entry per class or
+    /// [`WeightFile::write_to`] refuses it.
+    pub fn set_labels(&mut self, labels: Option<Vec<String>>) {
+        self.labels = labels;
     }
 
     /// The architecture this file describes: the embedded BKW2 spec,
@@ -552,6 +709,118 @@ mod tests {
         out.extend(0u32.to_le_bytes()); // zero tensors
         assert!(matches!(WeightFile::parse(&out[..]),
                          Err(FormatError::Spec(_))));
+    }
+
+    #[test]
+    fn labels_round_trip_and_default_to_none() {
+        let spec = NetSpec::builder((1, 4, 4))
+            .conv(2, 3)
+            .linear(3)
+            .build()
+            .unwrap();
+        let mut wf = WeightFile::from_tensors_with_spec(
+            BTreeMap::new(),
+            spec.clone(),
+        );
+        assert!(wf.labels().is_none());
+        wf.set_labels(Some(vec![
+            "ant".into(), "bee".into(), "cat".into(),
+        ]));
+        let back = WeightFile::parse(&wf.to_bytes()[..]).unwrap();
+        assert_eq!(back.labels(),
+                   Some(&["ant".to_string(), "bee".into(),
+                          "cat".into()][..]));
+        assert_eq!(back.embedded_spec(), Some(&spec));
+        // Label-less files still round-trip with no trailing section.
+        wf.set_labels(None);
+        let bytes = wf.to_bytes();
+        assert!(!bytes.windows(4).any(|w| w == b"LBLS"));
+        assert!(WeightFile::parse(&bytes[..])
+            .unwrap()
+            .labels()
+            .is_none());
+    }
+
+    #[test]
+    fn labels_on_bkw1_round_trip() {
+        let mut wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        wf.set_labels(Some(vec!["a".into(), "b".into()]));
+        let back = WeightFile::parse(&wf.to_bytes()[..]).unwrap();
+        assert_eq!(back.version(), 1);
+        assert_eq!(back.labels().map(<[String]>::len), Some(2));
+    }
+
+    #[test]
+    fn label_count_must_match_spec_classes() {
+        let spec = NetSpec::builder((1, 4, 4))
+            .linear(3)
+            .build()
+            .unwrap();
+        let mut wf = WeightFile::from_tensors_with_spec(
+            BTreeMap::new(),
+            spec,
+        );
+        // The WRITER refuses a mismatched table (save never produces
+        // a file the stack cannot load back)...
+        wf.set_labels(Some(vec!["only-one".into()]));
+        assert!(matches!(
+            wf.write_to(&mut Vec::new()),
+            Err(FormatError::LabelClassMismatch { labels: 1, classes: 3 })
+        ));
+        // ... an EMPTY table is the label-less file ...
+        wf.set_labels(Some(Vec::new()));
+        let bytes = wf.to_bytes();
+        assert!(!bytes.windows(4).any(|w| w == b"LBLS"));
+        assert!(WeightFile::parse(&bytes[..])
+            .unwrap()
+            .labels()
+            .is_none());
+        // ... and the READER still rejects a mismatched section from a
+        // foreign writer (hand-crafted trailer on the same file).
+        let mut crafted = bytes;
+        crafted.extend(b"LBLS");
+        crafted.extend(1u32.to_le_bytes());
+        crafted.extend(3u16.to_le_bytes());
+        crafted.extend(b"one");
+        assert!(matches!(
+            WeightFile::parse(&crafted[..]),
+            Err(FormatError::LabelClassMismatch { labels: 1, classes: 3 })
+        ));
+    }
+
+    #[test]
+    fn bad_trailing_magic_is_rejected() {
+        let mut blob = sample_blob();
+        blob.extend(b"JUNK");
+        assert!(matches!(WeightFile::parse(&blob[..]),
+                         Err(FormatError::BadLabelMagic(_))));
+        // A truncated trailer is an I/O error, not a silent pass.
+        let mut blob = sample_blob();
+        blob.extend(b"LB");
+        assert!(matches!(WeightFile::parse(&blob[..]),
+                         Err(FormatError::Io(_))));
+    }
+
+    #[test]
+    fn bytes_after_labels_section_are_rejected() {
+        let mut wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        wf.set_labels(Some(vec!["a".into(), "b".into()]));
+        let mut blob = wf.to_bytes();
+        assert!(WeightFile::parse(&blob[..]).is_ok());
+        blob.push(0);
+        assert!(matches!(WeightFile::parse(&blob[..]),
+                         Err(FormatError::TrailingBytes)));
+    }
+
+    #[test]
+    fn oversized_labels_fail_to_write_instead_of_corrupting() {
+        let mut wf = WeightFile::parse(&sample_blob()[..]).unwrap();
+        wf.set_labels(Some(vec!["x".repeat(70_000), "b".into()]));
+        let mut out = Vec::new();
+        assert!(matches!(
+            wf.write_to(&mut out),
+            Err(FormatError::LabelTooLong { index: 0, len: 70_000 })
+        ));
     }
 
     #[test]

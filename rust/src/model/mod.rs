@@ -8,16 +8,17 @@
 //! per batch — zero heap allocation in steady state.  The engine is
 //! architecture-generic: any spec the IR validates (arbitrary conv
 //! stacks, fc-only nets, non-square inputs, any class count) plans and
-//! runs on every kernel arm through this Plan/Session API.  (The HTTP
-//! front-end in `server`/`coordinator` still assumes the paper's
-//! 3x32x32/10-class request shape and guards for it at startup.)
+//! runs on every kernel arm through this Plan/Session API — and the
+//! HTTP front-end in `server`/`coordinator` is equally generic, since
+//! it reads every model's shape contract off its compiled [`Plan`]
+//! ([`Plan::input_shape`] / [`Plan::classes`] / [`Plan::labels`]).
 
 pub mod bnn;
 pub mod format;
 pub mod plan;
 pub mod spec;
 
-pub use bnn::{BnnEngine, EngineKernel};
+pub use bnn::{label_for, BnnEngine, EngineKernel};
 pub use format::{Dtype, FormatError, WeightFile, WeightTensor};
 pub use plan::{Plan, Session};
 pub use spec::{LayerSpec, NetSpec, NetSpecBuilder, Shape, SpecError};

@@ -161,6 +161,7 @@ pub(crate) struct PlanInner {
     input_h: usize,
     input_w: usize,
     classes: usize,
+    labels: Option<Arc<Vec<String>>>,
     ops: Vec<Op>,
     names: Vec<String>,
     bufs: BufSpec,
@@ -197,6 +198,13 @@ impl Plan {
     /// Output class count (logits are [B, classes]).
     pub fn classes(&self) -> usize {
         self.inner.classes
+    }
+
+    /// Class-label table from the weight file, when it carried one
+    /// (`labels()[c]` names class `c`) — flows through
+    /// `coordinator::Backend::labels` to the HTTP reply schema.
+    pub fn labels(&self) -> Option<&[String]> {
+        self.inner.labels.as_ref().map(|l| &l[..])
     }
 
     /// Number of lowered ops (one profiling stage each).
@@ -550,6 +558,7 @@ impl BnnEngine {
                 input_h: ih,
                 input_w: iw,
                 classes: self.spec.classes(),
+                labels: self.labels.clone(),
                 ops,
                 names,
                 bufs,

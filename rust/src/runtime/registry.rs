@@ -38,6 +38,17 @@ pub struct LoadedModel {
 }
 
 impl LoadedModel {
+    /// Per-image input shape (C, H, W) the executable was lowered for
+    /// (from the manifest's image parameter, [batch, C, H, W]).
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        (self.image_shape[1], self.image_shape[2], self.image_shape[3])
+    }
+
+    /// Output class count (logits are [batch, classes]).
+    pub fn classes(&self) -> usize {
+        self.output_shape[1]
+    }
+
     /// Run one batch: normalized NCHW images -> logits [batch, 10].
     pub fn infer(&self, images: &Tensor) -> Result<Tensor> {
         ensure!(

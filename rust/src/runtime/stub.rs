@@ -38,6 +38,17 @@ pub struct LoadedModel {
 }
 
 impl LoadedModel {
+    /// Per-image input shape (C, H, W) — unreachable: this stub type
+    /// cannot be constructed (its only producer always errors).
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        unreachable!("stub LoadedModel is unconstructible")
+    }
+
+    /// Output class count (logits are [batch, classes]).
+    pub fn classes(&self) -> usize {
+        self.output_shape[1]
+    }
+
     /// Always errors (built without `pjrt`).
     pub fn infer(&self, _images: &Tensor) -> Result<Tensor> {
         bail!(UNAVAILABLE)

@@ -1,12 +1,16 @@
 //! Minimal HTTP/1.1 front-end for the serving coordinator.
 //!
-//! Routes:
+//! Routes (shape-generic: every model's request/reply schema derives
+//! from its own shape contract — see `GET /models`):
 //! * `GET  /healthz`           — liveness
-//! * `GET  /models`            — JSON list of served models
+//! * `GET  /models`            — JSON list of served models with each
+//!   one's input shape, byte count, class count, and label table
 //! * `GET  /metrics`           — Prometheus-style counters (per model)
-//! * `POST /classify?model=m`  — body: 3072 raw HWC uint8 pixels
-//!   (32x32x3) or JSON `{"pixels": [..3072 ints..]}`; responds JSON
-//!   `{"class": c, "label": name, "latency_us": t}`
+//! * `POST /classify?model=m`  — body: the target model's `C*H*W` raw
+//!   HWC uint8 pixels or JSON `{"pixels": [..C*H*W numbers..]}`;
+//!   responds JSON `{"model", "class", "label", "latency_us", ...}`
+//!   (label falls back to the numeric class index for label-less
+//!   models)
 //!
 //! Built directly on std::net (offline: no hyper/tokio); one handler
 //! thread per connection from a fixed accept pool, keep-alive supported.
@@ -18,4 +22,4 @@ pub mod http;
 pub mod service;
 
 pub use http::{HttpRequest, HttpResponse};
-pub use service::{serve, ServeOptions, Service, CLASS_NAMES};
+pub use service::{serve, ServeOptions, Service};

@@ -1,4 +1,13 @@
 //! The serving service: model-name -> Router dispatch + HTTP plumbing.
+//!
+//! Fully shape-generic: every route derives its request/reply schema
+//! from the target router's captured shape contract
+//! ([`Router::input_shape`] / [`Router::classes`] /
+//! [`Router::labels`]), so one endpoint serves heterogeneous models —
+//! each model's classify body is `C*H*W` bytes (or a same-length JSON
+//! pixel array), and replies carry the model's own label table when
+//! the weight file embeds one (numeric labels otherwise).  No image
+//! geometry is hardwired anywhere in this module.
 
 use std::collections::BTreeMap;
 use std::io::BufReader;
@@ -15,15 +24,9 @@ use crate::{log_error, log_info};
 
 use super::http::{HttpRequest, HttpResponse};
 
-/// ShapeSet-10 class labels, indexed by class id.
-pub const CLASS_NAMES: [&str; 10] = [
-    "circle", "square", "triangle", "cross", "ring",
-    "h-stripe", "v-stripe", "checker", "dot-grid", "diag-gradient",
-];
-
-const IMAGE_BYTES: usize = 32 * 32 * 3;
-
-/// A named collection of routers behind one HTTP endpoint.
+/// A named collection of routers behind one HTTP endpoint.  The
+/// routers may speak entirely different shapes: dispatch is by model
+/// name, and each request is decoded against its target's contract.
 pub struct Service {
     routers: BTreeMap<String, Router>,
     default_model: String,
@@ -47,21 +50,23 @@ impl Service {
         self.routers.get(name)
     }
 
-    /// Dispatch one parsed request.
-    pub fn handle(&self, req: &HttpRequest) -> HttpResponse {
+    /// Dispatch one parsed request.  Takes the request by value: the
+    /// classify path owns the body and normalizes straight out of it,
+    /// so large-input models never pay the raw-byte clone the old
+    /// borrowing path made before decoding.
+    pub fn handle(&self, req: HttpRequest) -> HttpResponse {
+        // classify consumes the request, so it is routed before the
+        // borrowing match below.
+        if req.method == "POST" && req.path == "/classify" {
+            return self.classify(req);
+        }
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
             ("GET", "/models") => {
                 let names: Vec<Json> = self
                     .routers
                     .iter()
-                    .map(|(name, r)| {
-                        Json::obj(vec![
-                            ("name", Json::Str(name.clone())),
-                            ("backend",
-                             Json::Str(r.backend_name().to_string())),
-                        ])
-                    })
+                    .map(|(name, r)| model_descriptor(name, r))
                     .collect();
                 HttpResponse::json(200, Json::Arr(names).to_string())
             }
@@ -77,7 +82,6 @@ impl Service {
                 }
                 HttpResponse::text(200, out)
             }
-            ("POST", "/classify") => self.classify(req),
             ("GET", _) | ("POST", _) => {
                 HttpResponse::text(404, "not found\n")
             }
@@ -85,7 +89,7 @@ impl Service {
         }
     }
 
-    fn classify(&self, req: &HttpRequest) -> HttpResponse {
+    fn classify(&self, req: HttpRequest) -> HttpResponse {
         let model = req
             .query
             .get("model")
@@ -97,8 +101,9 @@ impl Service {
                 format!("{{\"error\":\"unknown model '{model}'\"}}"),
             );
         };
-        let pixels = match decode_pixels(req) {
-            Ok(p) => p,
+        let (c, h, w) = router.input_shape();
+        let image = match decode_image(req, c, h, w) {
+            Ok(i) => i,
             Err(e) => {
                 return HttpResponse::json(
                     400,
@@ -106,13 +111,14 @@ impl Service {
                 )
             }
         };
-        let image = normalize_batch(&pixels, 1, 32, 32, 3);
-        match router.submit_wait(image.into_data()) {
+        match router.submit_wait(image) {
             Ok(reply) => {
+                // Label-less models answer with numeric labels.
+                let label = router.label_for(reply.class);
                 let body = Json::obj(vec![
+                    ("model", Json::Str(model)),
                     ("class", Json::Num(reply.class as f64)),
-                    ("label",
-                     Json::Str(CLASS_NAMES[reply.class].to_string())),
+                    ("label", Json::Str(label)),
                     ("latency_us", Json::Num(reply.total_us as f64)),
                     ("queue_us", Json::Num(reply.queue_us as f64)),
                     (
@@ -132,6 +138,12 @@ impl Service {
                 429,
                 "{\"error\":\"queue full\"}".into(),
             ),
+            // Unreachable (the image was sized from the router's own
+            // contract), but kept total: a shape error is the client's
+            // fault, never a 500.
+            Err(e @ SubmitError::WrongShape { .. }) => {
+                HttpResponse::json(400, format!("{{\"error\":\"{e}\"}}"))
+            }
             Err(SubmitError::Shutdown) => HttpResponse::json(
                 503,
                 "{\"error\":\"shutting down\"}".into(),
@@ -140,8 +152,42 @@ impl Service {
     }
 }
 
-/// Accept raw 3072-byte bodies or JSON {"pixels": [...]}.
-fn decode_pixels(req: &HttpRequest) -> Result<Vec<u8>> {
+/// One `/models` entry: the model's full shape contract, so clients
+/// can size request bodies without out-of-band knowledge.
+fn model_descriptor(name: &str, r: &Router) -> Json {
+    let (c, h, w) = r.input_shape();
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("backend", Json::Str(r.backend_name().to_string())),
+        (
+            "input_shape",
+            Json::Arr(
+                [c, h, w].iter().map(|&d| Json::Num(d as f64)).collect(),
+            ),
+        ),
+        ("image_bytes", Json::Num((c * h * w) as f64)),
+        ("classes", Json::Num(r.classes() as f64)),
+        (
+            "labels",
+            match r.labels() {
+                Some(l) => Json::Arr(
+                    l.iter().map(|s| Json::Str(s.clone())).collect(),
+                ),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Decode one classify body into a normalized CHW image for a
+/// `(c, h, w)` model: either exactly `c*h*w` raw HWC uint8 bytes
+/// (normalized straight out of the owned request buffer — no
+/// intermediate byte clone), or JSON `{"pixels": [...]}` with
+/// `c*h*w` numbers in [0, 255] (fractional values allowed).  Both
+/// normalize as `x / 127.5 - 1`, matching the training pipeline.
+fn decode_image(req: HttpRequest, c: usize, h: usize, w: usize)
+                -> Result<Vec<f32>> {
+    let elems = c * h * w;
     let ct = req
         .headers
         .get("content-type")
@@ -154,20 +200,23 @@ fn decode_pixels(req: &HttpRequest) -> Result<Vec<u8>> {
             .get("pixels")
             .and_then(|p| p.as_arr())
             .context("missing 'pixels' array")?;
-        anyhow::ensure!(arr.len() == IMAGE_BYTES,
-                        "expected {IMAGE_BYTES} pixels, got {}", arr.len());
-        arr.iter()
-            .map(|x| {
-                let n = x.as_f64().context("pixel not a number")?;
-                anyhow::ensure!((0.0..=255.0).contains(&n), "pixel range");
-                Ok(n as u8)
-            })
-            .collect()
+        anyhow::ensure!(arr.len() == elems,
+                        "expected {elems} pixels for this model's \
+                         {c}x{h}x{w} input, got {}", arr.len());
+        // HWC pixel order (like the raw encoding) -> normalized CHW.
+        let mut out = vec![0.0f32; elems];
+        for (i, x) in arr.iter().enumerate() {
+            let n = x.as_f64().context("pixel not a number")?;
+            anyhow::ensure!((0.0..=255.0).contains(&n), "pixel range");
+            let (y, xx, ch) = (i / (w * c), (i / c) % w, i % c);
+            out[(ch * h + y) * w + xx] = n as f32 / 127.5 - 1.0;
+        }
+        Ok(out)
     } else {
-        anyhow::ensure!(req.body.len() == IMAGE_BYTES,
-                        "expected {IMAGE_BYTES} body bytes, got {}",
-                        req.body.len());
-        Ok(req.body.clone())
+        anyhow::ensure!(req.body.len() == elems,
+                        "expected {elems} body bytes for this model's \
+                         {c}x{h}x{w} input, got {}", req.body.len());
+        Ok(normalize_batch(&req.body, 1, h, w, c).into_data())
     }
 }
 
@@ -234,7 +283,7 @@ fn handle_connection(stream: TcpStream, service: &Service) -> Result<()> {
             return Ok(()); // clean close
         };
         let keep_alive = req.wants_keep_alive();
-        let resp = service.handle(&req);
+        let resp = service.handle(req);
         resp.write(&mut writer, keep_alive)?;
         if !keep_alive {
             return Ok(());
@@ -249,14 +298,32 @@ mod tests {
     use crate::coordinator::backend as bitkernel_backend;
     use std::collections::BTreeMap;
 
+    /// Two heterogeneous models behind one service: "mock" speaks the
+    /// legacy 3x32x32/10 shape and carries labels; "tiny" is a
+    /// label-less 1x4x4/3 model.
     fn mock_service() -> Service {
         let mut routers = BTreeMap::new();
         routers.insert(
             "mock".to_string(),
             Router::start(
-                |_| Ok(Box::new(MockBackend::new(4, 0))
-                       as Box<dyn bitkernel_backend::Backend>),
+                |_| {
+                    let mut b = MockBackend::new(4, 0);
+                    b.labels = Some(
+                        (0..10).map(|i| format!("shape-{i}")).collect(),
+                    );
+                    Ok(Box::new(b)
+                        as Box<dyn bitkernel_backend::Backend>)
+                },
                 RouterConfig { replicas: 2, ..RouterConfig::default() },
+            )
+            .unwrap(),
+        );
+        routers.insert(
+            "tiny".to_string(),
+            Router::start(
+                |_| Ok(Box::new(MockBackend::with_shape(4, 0, (1, 4, 4), 3))
+                       as Box<dyn bitkernel_backend::Backend>),
+                RouterConfig { replicas: 1, ..RouterConfig::default() },
             )
             .unwrap(),
         );
@@ -273,20 +340,53 @@ mod tests {
         }
     }
 
+    fn post(model: Option<&str>, body: Vec<u8>) -> HttpRequest {
+        let mut query = BTreeMap::new();
+        if let Some(m) = model {
+            query.insert("model".into(), m.into());
+        }
+        HttpRequest {
+            method: "POST".into(),
+            path: "/classify".into(),
+            query,
+            headers: BTreeMap::new(),
+            body,
+        }
+    }
+
     #[test]
-    fn healthz_and_models() {
+    fn healthz_and_models_report_shape_contracts() {
         let svc = mock_service();
-        assert_eq!(svc.handle(&get("/healthz")).status, 200);
-        let resp = svc.handle(&get("/models"));
+        assert_eq!(svc.handle(get("/healthz")).status, 200);
+        let resp = svc.handle(get("/models"));
         assert_eq!(resp.status, 200);
         let body = String::from_utf8(resp.body).unwrap();
-        assert!(body.contains("mock"));
+        let v = Json::parse(&body).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let by_name = |n: &str| {
+            arr.iter()
+                .find(|m| m.get("name").unwrap().as_str() == Some(n))
+                .unwrap()
+        };
+        let mock = by_name("mock");
+        assert_eq!(mock.get("image_bytes").unwrap().as_usize(),
+                   Some(3 * 32 * 32));
+        assert_eq!(mock.get("classes").unwrap().as_usize(), Some(10));
+        assert_eq!(
+            mock.get("labels").unwrap().as_arr().map(<[Json]>::len),
+            Some(10)
+        );
+        let tiny = by_name("tiny");
+        assert_eq!(tiny.get("image_bytes").unwrap().as_usize(), Some(16));
+        assert_eq!(tiny.get("classes").unwrap().as_usize(), Some(3));
+        assert_eq!(tiny.get("labels"), Some(&Json::Null));
     }
 
     #[test]
     fn metrics_labelled_per_model() {
         let svc = mock_service();
-        let resp = svc.handle(&get("/metrics"));
+        let resp = svc.handle(get("/metrics"));
         let body = String::from_utf8(resp.body).unwrap();
         assert!(body.contains("bitkernel_requests_submitted{model=\"mock\"}"),
                 "{body}");
@@ -298,60 +398,69 @@ mod tests {
     }
 
     #[test]
-    fn classify_raw_body() {
+    fn classify_raw_body_uses_model_labels() {
         let svc = mock_service();
-        let req = HttpRequest {
-            method: "POST".into(),
-            path: "/classify".into(),
-            query: BTreeMap::new(),
-            headers: BTreeMap::new(),
-            body: vec![200u8; IMAGE_BYTES],
-        };
-        let resp = svc.handle(&req);
+        let resp = svc.handle(post(None, vec![200u8; 3 * 32 * 32]));
         assert_eq!(resp.status, 200, "{}",
                    String::from_utf8_lossy(&resp.body));
         let body = String::from_utf8(resp.body).unwrap();
-        assert!(body.contains("\"class\""));
-        assert!(body.contains("\"label\""));
+        let v = Json::parse(&body).unwrap();
+        let class = v.get("class").unwrap().as_usize().unwrap();
+        assert_eq!(v.get("label").unwrap().as_str(),
+                   Some(format!("shape-{class}").as_str()));
+        assert_eq!(v.get("model").unwrap().as_str(), Some("mock"));
+    }
+
+    #[test]
+    fn classify_each_model_by_its_own_byte_count() {
+        let svc = mock_service();
+        // 16 bytes hit "tiny"; its label falls back to the numeric
+        // class index (no label table).
+        let resp = svc.handle(post(Some("tiny"), vec![10u8; 16]));
+        assert_eq!(resp.status, 200, "{}",
+                   String::from_utf8_lossy(&resp.body));
+        let v = Json::parse(
+            &String::from_utf8(resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("logits").unwrap().as_arr().map(<[Json]>::len),
+                   Some(3));
+        let class = v.get("class").unwrap().as_usize().unwrap();
+        assert_eq!(v.get("label").unwrap().as_str(),
+                   Some(class.to_string().as_str()));
+        // The SAME 16-byte body against the 3072-byte default is a 400
+        // naming both counts, not a panic.
+        let resp = svc.handle(post(None, vec![10u8; 16]));
+        assert_eq!(resp.status, 400);
+        let err = String::from_utf8(resp.body).unwrap();
+        assert!(err.contains("3072"), "{err}");
     }
 
     #[test]
     fn classify_json_body() {
         let svc = mock_service();
         let pixels: Vec<String> =
-            (0..IMAGE_BYTES).map(|i| (i % 256).to_string()).collect();
+            (0..16).map(|i| (i * 16 % 256).to_string()).collect();
         let mut headers = BTreeMap::new();
         headers.insert("content-type".into(), "application/json".into());
-        let req = HttpRequest {
-            method: "POST".into(),
-            path: "/classify".into(),
-            query: BTreeMap::new(),
-            headers,
-            body: format!("{{\"pixels\":[{}]}}", pixels.join(","))
-                .into_bytes(),
-        };
-        assert_eq!(svc.handle(&req).status, 200);
+        let mut req = post(Some("tiny"),
+                           format!("{{\"pixels\":[{}]}}",
+                                   pixels.join(",")).into_bytes());
+        req.headers = headers;
+        assert_eq!(svc.handle(req).status, 200);
     }
 
     #[test]
     fn classify_rejects_bad_sizes_and_unknown_model() {
         let svc = mock_service();
-        let mut req = HttpRequest {
-            method: "POST".into(),
-            path: "/classify".into(),
-            query: BTreeMap::new(),
-            headers: BTreeMap::new(),
-            body: vec![0u8; 10],
-        };
-        assert_eq!(svc.handle(&req).status, 400);
-        req.body = vec![0u8; IMAGE_BYTES];
-        req.query.insert("model".into(), "nope".into());
-        assert_eq!(svc.handle(&req).status, 404);
+        assert_eq!(svc.handle(post(None, vec![0u8; 10])).status, 400);
+        assert_eq!(
+            svc.handle(post(Some("nope"), vec![0u8; 3 * 32 * 32])).status,
+            404
+        );
     }
 
     #[test]
     fn unknown_path_404() {
         let svc = mock_service();
-        assert_eq!(svc.handle(&get("/nope")).status, 404);
+        assert_eq!(svc.handle(get("/nope")).status, 404);
     }
 }

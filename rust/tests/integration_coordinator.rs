@@ -186,6 +186,12 @@ fn failing_backend_drops_requests_and_counts_rejections() {
         fn max_batch(&self) -> usize {
             4
         }
+        fn input_shape(&self) -> (usize, usize, usize) {
+            (3, 32, 32)
+        }
+        fn classes(&self) -> usize {
+            10
+        }
         fn infer(
             &mut self,
             _images: &bitkernel::tensor::Tensor,

@@ -1,0 +1,287 @@
+//! Shape-generic serving tests: one HTTP endpoint over heterogeneous
+//! models (different input shapes AND class counts), with replies
+//! pinned bit-identical to `forward_reference`, plus randomized-shape
+//! submit/body validation (wrong sizes are typed errors / 4xx, never a
+//! worker panic).  Everything runs on synthetic engines — no
+//! artifacts needed.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, MockBackend, NativeBackend, Router,
+    RouterConfig, SubmitError,
+};
+use bitkernel::data::normalize_batch;
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec};
+use bitkernel::server::{serve, ServeOptions, HttpRequest, Service};
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::json::Json;
+use bitkernel::utils::Rng;
+
+const KERNEL: EngineKernel = EngineKernel::Xnor(XnorImpl::Auto);
+
+/// Synthetic engine for `spec`, optionally with a label table riding
+/// in the weight file.
+fn engine_for(spec: &NetSpec, seed: u64, labels: Option<Vec<String>>)
+              -> BnnEngine {
+    let mut wf = synthetic_weight_file(spec, seed);
+    wf.set_labels(labels);
+    BnnEngine::from_weight_file(&wf).expect("synthetic weight file")
+}
+
+fn router_for(engine: &BnnEngine, max_batch: usize) -> Router {
+    let plan = engine.plan(KERNEL, max_batch).unwrap();
+    Router::start(
+        move |_replica| {
+            Ok(Box::new(NativeBackend::from_plan(&plan))
+                as Box<dyn Backend>)
+        },
+        RouterConfig {
+            queue_cap: 64,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch,
+                max_delay: Duration::from_millis(2),
+            },
+        },
+    )
+    .unwrap()
+}
+
+/// Deterministic fake image bytes for one (c, h, w) model.
+fn pixels(c: usize, h: usize, w: usize, salt: usize) -> Vec<u8> {
+    (0..c * h * w).map(|i| ((i * 31 + salt * 7) % 256) as u8).collect()
+}
+
+#[test]
+fn one_endpoint_serves_heterogeneous_models_bit_identical() {
+    // Model A: the paper-shaped 3x32x32/10-class conv net, WITH labels.
+    let spec_a = NetSpec::builder((3, 32, 32))
+        .conv(8, 3)
+        .pool()
+        .linear(10)
+        .build()
+        .unwrap();
+    let labels_a: Vec<String> =
+        (0..10).map(|i| format!("shape-{i}")).collect();
+    let engine_a = engine_for(&spec_a, 11, Some(labels_a.clone()));
+    // Model B: an fc-heavy 1x28x28/26-class net, label-less.
+    let spec_b = NetSpec::builder((1, 28, 28))
+        .linear(32)
+        .linear(26)
+        .build()
+        .unwrap();
+    let engine_b = engine_for(&spec_b, 22, None);
+
+    let mut routers = BTreeMap::new();
+    routers.insert("shapes".to_string(), router_for(&engine_a, 4));
+    routers.insert("letters".to_string(), router_for(&engine_b, 4));
+    let service = Arc::new(Service::new(routers, "shapes"));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let svc2 = Arc::clone(&service);
+    let server = std::thread::spawn(move || {
+        serve(
+            svc2,
+            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            stop2,
+            Some(ready_tx),
+        )
+        .unwrap();
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+    // /models advertises both shape contracts.
+    let (status, models) = http_get(&addr, "/models");
+    assert_eq!(status, 200);
+    let v = Json::parse(&models).unwrap();
+    let arr = v.as_arr().unwrap();
+    assert_eq!(arr.len(), 2);
+    let by_name = |n: &str| {
+        arr.iter()
+            .find(|m| m.get("name").unwrap().as_str() == Some(n))
+            .unwrap()
+    };
+    let shapes = by_name("shapes");
+    assert_eq!(shapes.get("image_bytes").unwrap().as_usize(),
+               Some(3 * 32 * 32));
+    assert_eq!(shapes.get("classes").unwrap().as_usize(), Some(10));
+    assert_eq!(
+        shapes.get("labels").unwrap().as_arr().map(<[Json]>::len),
+        Some(10)
+    );
+    let letters = by_name("letters");
+    assert_eq!(letters.get("image_bytes").unwrap().as_usize(),
+               Some(28 * 28));
+    assert_eq!(letters.get("classes").unwrap().as_usize(), Some(26));
+    assert_eq!(letters.get("labels"), Some(&Json::Null));
+
+    // Classify against both, pinning each reply bit-identical to the
+    // unfused oracle on the same normalized input.
+    for (model, engine, (c, h, w), labels) in [
+        ("shapes", &engine_a, (3usize, 32usize, 32usize),
+         Some(&labels_a)),
+        ("letters", &engine_b, (1, 28, 28), None),
+    ] {
+        for salt in 0..3 {
+            let px = pixels(c, h, w, salt);
+            let x = normalize_batch(&px, 1, h, w, c);
+            let reference = engine.forward_reference(&x, KERNEL);
+            let (status, body) =
+                http_post(&addr, &format!("/classify?model={model}"), &px);
+            assert_eq!(status, 200, "{model}: {body}");
+            let v = Json::parse(&body).unwrap();
+            assert_eq!(v.get("model").unwrap().as_str(), Some(model));
+            let logits: Vec<f32> = v
+                .get("logits")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|j| j.as_f64().unwrap() as f32)
+                .collect();
+            assert_eq!(logits.len(), reference.dim(1));
+            for (i, (&got, &want)) in
+                logits.iter().zip(reference.data()).enumerate()
+            {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{model} salt {salt} logit {i}: {got} vs {want} — \
+                     the HTTP path must be bit-identical to \
+                     forward_reference"
+                );
+            }
+            let class = v.get("class").unwrap().as_usize().unwrap();
+            let expect_label = match labels {
+                Some(l) => l[class].clone(),
+                None => class.to_string(),
+            };
+            assert_eq!(v.get("label").unwrap().as_str(),
+                       Some(expect_label.as_str()));
+        }
+    }
+
+    // Wrong-size bodies are 400s naming the expected count; the wrong
+    // model's byte count never reaches a worker.
+    let (status, body) =
+        http_post(&addr, "/classify?model=letters", &pixels(3, 32, 32, 0));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("784"), "{body}");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn randomized_shapes_validate_submits_and_bodies() {
+    let mut rng = Rng::new(99);
+    for case in 0..8usize {
+        let c = 1 + rng.below(4);
+        let h = 3 + rng.below(14);
+        let w = 3 + rng.below(14);
+        let classes = 2 + rng.below(30);
+        let router = Router::start(
+            move |_| {
+                Ok(Box::new(MockBackend::with_shape(
+                    4, 0, (c, h, w), classes,
+                )) as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 16,
+                replicas: 1,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let elems = c * h * w;
+        assert_eq!(router.image_elems(), elems, "case {case}");
+
+        // Wrong-size submits are typed errors at admission...
+        for bad in [0usize, elems - 1, elems + 1, elems * 2] {
+            assert_eq!(
+                router.submit(vec![0.0; bad]).err(),
+                Some(SubmitError::WrongShape { expected: elems, got: bad }),
+                "case {case} ({c}x{h}x{w}), bad len {bad}"
+            );
+        }
+        // ... and a correct submit afterwards still round-trips (no
+        // worker saw — let alone panicked on — the malformed ones).
+        let reply = router.submit_wait(vec![0.1; elems]).unwrap();
+        assert_eq!(reply.logits.len(), classes, "case {case}");
+
+        // Same contract at the HTTP layer: wrong byte counts are 400s.
+        let mut routers = BTreeMap::new();
+        routers.insert("m".to_string(), router);
+        let svc = Service::new(routers, "m");
+        let post = |body: Vec<u8>| HttpRequest {
+            method: "POST".into(),
+            path: "/classify".into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body,
+        };
+        assert_eq!(svc.handle(post(vec![7u8; elems + 1])).status, 400,
+                   "case {case}");
+        assert_eq!(svc.handle(post(vec![7u8; elems])).status, 200,
+                   "case {case}");
+    }
+}
+
+// --- tiny test HTTP client -------------------------------------------------
+
+fn http_get(addr: &std::net::SocketAddr, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream,
+           "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    read_response(stream)
+}
+
+fn http_post(addr: &std::net::SocketAddr, path: &str, body: &[u8])
+             -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    stream.write_all(body).unwrap();
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> (u16, String) {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 =
+        status_line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_lowercase().strip_prefix("content-length:")
+        {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}

@@ -22,6 +22,14 @@ set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
+echo "== shape-generic guard: no hardwired image-geometry constants"
+# The serving path derives every geometry from the model's shape
+# contract; reintroducing a global image constant regresses that.
+if grep -rnE "IMAGE_ELEMS|IMAGE_BYTES" src; then
+    echo "hardwired image-geometry constant reintroduced in rust/src" >&2
+    exit 1
+fi
+
 echo "== cargo build --release"
 cargo build --release
 
@@ -31,8 +39,18 @@ cargo test -q
 echo "== spec IR: BKW round-trip + randomized-topology property tests"
 cargo test -q --test netspec
 
+echo "== shape-generic serving: heterogeneous models + submit validation"
+cargo test -q --test serving
+
 echo "== example: custom_net (NetSpec end to end, artifact-free)"
 cargo run --release --example custom_net
+
+echo "== serve smoke: two heterogeneous models behind one port"
+# Boots the HTTP service on port 0 over two synthetic weight files
+# with different input shapes and class counts, classifies against
+# each over TCP (curl-equivalent), and asserts 200s + the label
+# fallback for label-less files.  Artifact-free.
+cargo run --release --example serve_smoke
 
 echo "== cargo doc --no-deps (rustdoc warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
