@@ -3,11 +3,11 @@
 #   make ci        — tier-1 gate: build + tests + docs + fmt + clippy
 #                    + smoke runs
 #   make bench     — kernel ablation -> BENCH_2.json (per-impl GiOP/s
-#                    for the Table-2 layer shapes) and the replica
-#                    batching sweep (--quick) -> BENCH_3.json; run
-#                    `cargo bench --bench batching -- --json
-#                    ../BENCH_3.json` without --quick for full-fidelity
-#                    serving numbers
+#                    for the Table-2 layer shapes), the replica
+#                    batching sweep (--quick) -> BENCH_3.json, and the
+#                    reload-under-load run (--quick, request loss must
+#                    be 0) -> BENCH_6.json; drop --quick on any of them
+#                    for full-fidelity numbers
 #   make docs      — API docs only, rustdoc warnings denied
 #   make artifacts — python AOT pipeline -> rust/artifacts (needs jax)
 
@@ -19,6 +19,7 @@ ci:
 bench:
 	cd rust && cargo bench --bench ablation -- --json ../BENCH_2.json
 	cd rust && cargo bench --bench batching -- --quick --json ../BENCH_3.json
+	cd rust && cargo bench --bench lifecycle -- --quick --json ../BENCH_6.json
 
 docs:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,179 @@
+//! Lifecycle smoke gate: boot an EMPTY admin-enabled server on port 0,
+//! then drive the whole model lifecycle over real TCP with the same
+//! tiny client the `bitkernel mount/reload/unmount` subcommands use —
+//! mount a synthetic BKW file, classify (bit-identical to
+//! `forward_reference`), rewrite the weights and reload (generation
+//! bump, new bits), unmount, and assert the name 404s everywhere.
+//! The ci.sh proof that the admin API edits a live server end to end.
+//!
+//! Artifact-free: the weight file is written to a temp dir first.
+//!
+//! Run: `cargo run --release --example lifecycle_smoke`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{BatcherConfig, RouterConfig};
+use bitkernel::data::normalize_batch;
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec};
+use bitkernel::server::{
+    http_call, serve, ModelRegistry, RegistryConfig, ServeOptions,
+    Service,
+};
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::json::Json;
+
+const KERNEL: EngineKernel = EngineKernel::Xnor(XnorImpl::Auto);
+
+/// The reference logits generation `seed` must serve for `px`.
+fn oracle(spec: &NetSpec, seed: u64, px: &[u8]) -> Result<Vec<f32>> {
+    let (c, h, w) = spec.input();
+    let engine =
+        BnnEngine::from_weight_file(&synthetic_weight_file(spec, seed))?;
+    Ok(engine
+        .forward_reference(&normalize_batch(px, 1, h, w, c), KERNEL)
+        .data()
+        .to_vec())
+}
+
+fn parse(body: &[u8]) -> Result<Json> {
+    Json::parse(std::str::from_utf8(body).context("reply utf-8")?)
+        .context("reply json")
+}
+
+fn generation_of(body: &[u8]) -> Result<u64> {
+    Ok(parse(body)?
+        .get("generation")
+        .and_then(Json::as_f64)
+        .context("missing generation")? as u64)
+}
+
+/// Classify and check the reply is bit-identical to `want`.
+fn classify_check(
+    addr: &str,
+    px: &[u8],
+    want: &[f32],
+    ctx: &str,
+) -> Result<u64> {
+    let (status, body) =
+        http_call(addr, "POST", "/classify?model=demo", px)?;
+    ensure!(status == 200, "{ctx}: classify -> HTTP {status}");
+    let v = parse(&body)?;
+    let logits: Vec<f32> = v
+        .get("logits")
+        .and_then(|l| l.as_arr())
+        .context("missing logits")?
+        .iter()
+        .map(|j| j.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect();
+    ensure!(logits.len() == want.len(), "{ctx}: logit count");
+    for (i, (g, w)) in logits.iter().zip(want).enumerate() {
+        ensure!(
+            g.to_bits() == w.to_bits(),
+            "{ctx}: logit {i} not bit-identical ({g} vs {w})"
+        );
+    }
+    generation_of(&body)
+}
+
+fn main() -> Result<()> {
+    // --- one synthetic model on disk ---------------------------------------
+    let dir = std::env::temp_dir().join("bitkernel_lifecycle_smoke");
+    std::fs::create_dir_all(&dir)?;
+    let spec = NetSpec::builder((1, 8, 8)).conv(4, 3).linear(5).build()?;
+    let path = dir.join("demo.bkw");
+    synthetic_weight_file(&spec, 1).save(&path)?;
+    let px: Vec<u8> =
+        (0..8 * 8).map(|i| ((i * 31 + 7) % 256) as u8).collect();
+
+    // --- boot an EMPTY admin server on port 0 ------------------------------
+    let registry = ModelRegistry::new(RegistryConfig {
+        kernel: KERNEL,
+        max_batch: 4,
+        router: RouterConfig {
+            queue_cap: 32,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(2),
+            },
+        },
+        max_resident: 0,
+    });
+    let service = Arc::new(Service::with_registry(registry, None, true));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let server = std::thread::spawn(move || {
+        serve(
+            service,
+            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            stop2,
+            Some(ready_tx),
+        )
+    });
+    let addr = ready_rx
+        .recv_timeout(Duration::from_secs(10))
+        .context("server did not come up")?
+        .to_string();
+    println!("server up on {addr} with zero models");
+    let (status, body) = http_call(&addr, "GET", "/models", b"")?;
+    ensure!(status == 200
+                && parse(&body)?.as_arr().map(<[Json]>::len) == Some(0),
+            "expected an empty model list");
+
+    // --- mount over HTTP ---------------------------------------------------
+    let body = Json::obj(vec![
+        ("name", Json::Str("demo".into())),
+        ("path", Json::Str(path.display().to_string())),
+    ])
+    .to_string();
+    let (status, reply) =
+        http_call(&addr, "POST", "/models?wait=1", body.as_bytes())?;
+    ensure!(status == 201, "mount -> HTTP {status}: {}",
+            String::from_utf8_lossy(&reply));
+    let g1 = generation_of(&reply)?;
+    println!("mounted demo (generation {g1})");
+
+    let gen = classify_check(&addr, &px, &oracle(&spec, 1, &px)?,
+                             "generation 1")?;
+    ensure!(gen == g1, "reply generation {gen}, mounted {g1}");
+    println!("classify: bit-identical to generation {g1}");
+
+    // --- reload from rewritten weights -------------------------------------
+    synthetic_weight_file(&spec, 2).save(&path)?;
+    let (status, reply) =
+        http_call(&addr, "PUT", "/models/demo?wait=1", b"")?;
+    ensure!(status == 200, "reload -> HTTP {status}: {}",
+            String::from_utf8_lossy(&reply));
+    let g2 = generation_of(&reply)?;
+    ensure!(g2 > g1, "reload must bump the generation ({g2} vs {g1})");
+    let gen = classify_check(&addr, &px, &oracle(&spec, 2, &px)?,
+                             "generation 2")?;
+    ensure!(gen == g2, "reply generation {gen}, reloaded {g2}");
+    println!("reloaded demo (generation {g2}), replies track the swap");
+
+    // --- unmount -> clean 404s ---------------------------------------------
+    let (status, _) = http_call(&addr, "DELETE", "/models/demo", b"")?;
+    ensure!(status == 200, "unmount -> HTTP {status}");
+    let (status, _) = http_call(&addr, "GET", "/models/demo", b"")?;
+    ensure!(status == 404, "status after unmount -> HTTP {status}");
+    let (status, _) =
+        http_call(&addr, "POST", "/classify?model=demo", &px)?;
+    ensure!(status == 404, "classify after unmount -> HTTP {status}");
+    let (status, body) = http_call(&addr, "GET", "/models", b"")?;
+    ensure!(status == 200
+                && parse(&body)?.as_arr().map(<[Json]>::len) == Some(0),
+            "model list must be empty again");
+    println!("unmounted demo; every route 404s the name");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("lifecycle smoke passed");
+    Ok(())
+}

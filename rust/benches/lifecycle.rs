@@ -1,0 +1,283 @@
+//! `cargo bench --bench lifecycle` — reload-under-load measurement.
+//!
+//! Two phases against one registry-mounted synthetic model:
+//!
+//! 1. **steady** — closed-loop hammer with no lifecycle churn: the
+//!    baseline requests/s and latency through `router_for`.
+//! 2. **reload** — the same hammer while the driver reloads the model
+//!    from freshly rewritten weights in a loop.  Each request pins its
+//!    generation's router, the swap retires the old pipeline through
+//!    the lossless drain, and the row records the p99 cost of living
+//!    through it.
+//!
+//! The acceptance gate is **request-loss == 0 in both phases** — a
+//! reload may never drop a request — enforced with an assert, so `make
+//! ci`'s smoke run fails loudly on a regression.
+//!
+//! Flags:
+//! * `--quick`        — tiny request counts (the CI smoke run)
+//! * `--json <path>`  — write the phase rows as JSON (`make bench`
+//!   emits BENCH_6.json this way)
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitkernel::benchkit::Table;
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{BatcherConfig, RouterConfig, SubmitError};
+use bitkernel::model::{EngineKernel, NetSpec};
+use bitkernel::server::{ModelRegistry, ModelState, RegistryConfig};
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::json::Json;
+use bitkernel::utils::timer::{mean, percentile};
+use bitkernel::utils::{Rng, Stopwatch};
+
+const MODEL: &str = "bench";
+
+fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
+
+fn spec() -> NetSpec {
+    NetSpec::builder((3, 16, 16))
+        .conv(16, 3)
+        .pool()
+        .linear(10)
+        .build()
+        .unwrap()
+}
+
+fn write_model(path: &Path, seed: u64) {
+    synthetic_weight_file(&spec(), seed).save(path).unwrap();
+}
+
+/// Closed-loop hammer: `clients` threads race through `requests`
+/// submissions, each resolving the model through the registry (pinning
+/// that request's generation) exactly like the HTTP layer.  Returns
+/// (wall seconds, latencies ms, lost requests).  QueueFull is retried
+/// — a closed loop measures service time, not its own shed load; any
+/// other failure counts as LOST.
+fn drive(
+    registry: &Arc<ModelRegistry>,
+    images: &[Vec<f32>],
+    requests: usize,
+    clients: usize,
+) -> (f64, Vec<f64>, usize) {
+    let next = Arc::new(AtomicUsize::new(0));
+    let lost = Arc::new(AtomicUsize::new(0));
+    let sw = Stopwatch::start();
+    let lat: Vec<f64> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let next = Arc::clone(&next);
+            let lost = Arc::clone(&lost);
+            handles.push(s.spawn(move || {
+                let mut lat = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= requests {
+                        return lat;
+                    }
+                    let img = images[i % images.len()].clone();
+                    let sw = Stopwatch::start();
+                    let Ok((router, _generation)) =
+                        registry.router_for(MODEL)
+                    else {
+                        lost.fetch_add(1, Ordering::SeqCst);
+                        continue;
+                    };
+                    loop {
+                        match router.submit_wait(img.clone()) {
+                            Ok(_) => {
+                                lat.push(sw.elapsed_ms());
+                                break;
+                            }
+                            Err(SubmitError::QueueFull) => {
+                                std::thread::yield_now();
+                            }
+                            Err(_) => {
+                                lost.fetch_add(1, Ordering::SeqCst);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    (sw.elapsed_secs(), lat, lost.load(Ordering::SeqCst))
+}
+
+struct PhaseRow {
+    phase: &'static str,
+    requests: usize,
+    clients: usize,
+    lost: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    reloads: usize,
+    reload_mean_ms: f64,
+}
+
+impl PhaseRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::Str(self.phase.to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("req_per_s", Json::Num(self.req_per_s)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("reloads", Json::Num(self.reloads as f64)),
+            ("reload_mean_ms", Json::Num(self.reload_mean_ms)),
+        ])
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let json_path = arg("--json");
+    let (requests, clients, reloads) =
+        if quick { (96, 4, 3) } else { (768, 8, 8) };
+
+    let dir = std::env::temp_dir().join(format!(
+        "bk-bench-lifecycle-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.bkw");
+    write_model(&path, 1);
+
+    let registry = ModelRegistry::new(RegistryConfig {
+        kernel: EngineKernel::Xnor(XnorImpl::Auto),
+        max_batch: 8,
+        router: RouterConfig {
+            queue_cap: 1024,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+            },
+        },
+        max_resident: 0,
+    });
+    let entry = registry.mount(MODEL, &path, false).unwrap();
+    let st = entry.wait_settled(Duration::from_secs(60));
+    assert_eq!(st.state, ModelState::Ready, "{:?}", st.error);
+
+    let mut rng = Rng::new(7);
+    let images: Vec<Vec<f32>> =
+        (0..16).map(|_| rng.normal_vec(3 * 16 * 16)).collect();
+
+    // --- phase 1: steady state ---------------------------------------------
+    let (wall, lat, lost) = drive(&registry, &images, requests, clients);
+    let steady = PhaseRow {
+        phase: "steady",
+        requests,
+        clients,
+        lost,
+        req_per_s: requests as f64 / wall,
+        p50_ms: percentile(&lat, 0.5),
+        p99_ms: percentile(&lat, 0.99),
+        reloads: 0,
+        reload_mean_ms: 0.0,
+    };
+
+    // --- phase 2: the same hammer under a reload loop ----------------------
+    let stop_reloads = AtomicBool::new(false);
+    let (reload_ms, (wall, lat, lost)) = std::thread::scope(|s| {
+        let reg = Arc::clone(&registry);
+        let reload_path = path.clone();
+        let stop = &stop_reloads;
+        let reloader = s.spawn(move || {
+            let mut times = Vec::new();
+            for i in 0..reloads {
+                // Always run the first reload (so the phase measures
+                // at least one swap) even if the hammer raced past.
+                if i > 0 && stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                write_model(&reload_path, 2 + i as u64);
+                let sw = Stopwatch::start();
+                let entry = reg.reload(MODEL).unwrap();
+                let st = entry.wait_settled(Duration::from_secs(60));
+                assert_eq!(st.state, ModelState::Ready, "{:?}", st.error);
+                times.push(sw.elapsed_ms());
+            }
+            times
+        });
+        let out = drive(&registry, &images, requests, clients);
+        stop_reloads.store(true, Ordering::Relaxed);
+        (reloader.join().unwrap(), out)
+    });
+    let reload = PhaseRow {
+        phase: "reload",
+        requests,
+        clients,
+        lost,
+        req_per_s: requests as f64 / wall,
+        p50_ms: percentile(&lat, 0.5),
+        p99_ms: percentile(&lat, 0.99),
+        reloads: reload_ms.len(),
+        reload_mean_ms: if reload_ms.is_empty() {
+            0.0
+        } else {
+            mean(&reload_ms)
+        },
+    };
+    assert!(
+        reload.reloads > 0,
+        "phase 2 finished before a single reload — raise the request \
+         count"
+    );
+
+    let rows = [steady, reload];
+    let mut table = Table::new(
+        &format!(
+            "Reload under load ({requests} req, {clients} clients, \
+             2 replicas, synthetic 3x16x16 conv net)"
+        ),
+        &["phase", "req/s", "p50 ms", "p99 ms", "lost", "reloads",
+          "reload mean ms"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.phase.to_string(),
+            format!("{:.0}", r.req_per_s),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{}", r.lost),
+            format!("{}", r.reloads),
+            format!("{:.1}", r.reload_mean_ms),
+        ]);
+    }
+    table.print();
+
+    if let Some(p) = json_path {
+        let json =
+            Json::Arr(rows.iter().map(PhaseRow::to_json).collect());
+        std::fs::write(&p, json.to_string()).unwrap();
+        println!("wrote {p}");
+    }
+
+    // Acceptance: the swap discipline must not shed a single request,
+    // with or without churn.
+    for r in &rows {
+        assert_eq!(
+            r.lost, 0,
+            "phase '{}' lost {} requests — reload/drain must be \
+             lossless",
+            r.phase, r.lost
+        );
+    }
+    println!(
+        "acceptance: 0 lost requests across {} reloads under load",
+        rows[1].reloads
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -125,6 +125,20 @@ impl Args {
     }
 }
 
+/// Peel one leading positional argument (a bare word before any
+/// `--flag`) off `argv`, returning it and the remaining arguments.
+/// Subcommands with an optional positional operand (`describe [spec]`,
+/// `mount <name>=<path>`, `unmount <name>`, ...) call this before
+/// [`Args::parse`], which itself accepts no positionals.
+pub fn take_positional(argv: &[String]) -> (Option<String>, Vec<String>) {
+    match argv.first() {
+        Some(a) if !a.starts_with("--") => {
+            (Some(a.clone()), argv[1..].to_vec())
+        }
+        _ => (None, argv.to_vec()),
+    }
+}
+
 /// Render a --help block for a subcommand.
 pub fn render_help(cmd: &str, about: &str, specs: &[FlagSpec]) -> String {
     let mut out = format!("bitkernel {cmd} — {about}\n\nflags:\n");
@@ -195,6 +209,20 @@ mod tests {
         let a = Args::parse(&argv(&["--batch", "x"]), SPECS).unwrap();
         assert!(matches!(a.get_usize("batch", 0),
                          Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn take_positional_peels_only_a_leading_bare_word() {
+        let (pos, rest) =
+            take_positional(&argv(&["name=path", "--batch", "4"]));
+        assert_eq!(pos.as_deref(), Some("name=path"));
+        assert_eq!(rest, argv(&["--batch", "4"]));
+        let (pos, rest) = take_positional(&argv(&["--batch", "4"]));
+        assert_eq!(pos, None);
+        assert_eq!(rest, argv(&["--batch", "4"]));
+        let (pos, rest) = take_positional(&[]);
+        assert_eq!(pos, None);
+        assert!(rest.is_empty());
     }
 
     #[test]

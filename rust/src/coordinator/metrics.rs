@@ -205,6 +205,18 @@ impl Metrics {
         self.render_prometheus_labeled("")
     }
 
+    /// Render one exposition line: `name{labels} value` (`labels` may
+    /// be empty).  For registry-level series (mounted-model gauge,
+    /// per-model mount epoch) that live outside any one router's
+    /// [`Metrics`].
+    pub fn render_series(name: &str, labels: &str, value: u64) -> String {
+        if labels.is_empty() {
+            format!("{name} {value}\n")
+        } else {
+            format!("{name}{{{labels}}} {value}\n")
+        }
+    }
+
     /// Prometheus-style exposition with `extra` (e.g. `model="bnn"`,
     /// may be empty) merged into every line's label set.  Per-replica
     /// lines additionally carry a `replica="<id>"` label — merging

@@ -34,6 +34,15 @@
 //! can therefore pool routers over heterogeneous models — a
 //! 3x32x32/10-class CNN next to a 1x28x28/26-class fc net — with no
 //! geometry hardwired anywhere on the request path.
+//!
+//! **Retiring a shared router.**  `Drop` runs the same drain as
+//! [`Router::shutdown`], which makes `Arc<Router>` the hot-swap
+//! primitive the model registry (`server/registry.rs`) builds on: the
+//! registry publishes `Arc<Router>` handles, every in-flight request
+//! holds a clone, and a reload/unmount simply swaps the published
+//! handle and lets the *last* clone's drop drain the old
+//! pipeline — accepted requests are answered by whichever generation
+//! admitted them, and no request is ever dropped mid-swap.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;

@@ -2,27 +2,34 @@
 //!
 //! Subcommands:
 //! * `serve`    — run the HTTP inference service
+//! * `mount`    — mount a model on a running server (admin API client)
+//! * `unmount`  — unmount a model on a running server
+//! * `reload`   — reload a mounted model from its weight path
 //! * `classify` — classify test-set images from the command line
 //! * `eval`     — accuracy of a weight file over the test split
 //! * `describe` — print a weight file's NetSpec, plan, and buffers
 //! * `inspect`  — summarize the artifact manifest
 //! * `selftest` — verify the three Table-2 arms agree end-to-end
 
-use std::collections::BTreeMap;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use bitkernel::bitops::XnorImpl;
-use bitkernel::cli::{render_help, Args, FlagSpec};
+use bitkernel::cli::{render_help, take_positional, Args, FlagSpec};
 use bitkernel::coordinator::{
-    Backend, BatcherConfig, NativeBackend, PjrtBackend, Router, RouterConfig,
+    Backend, BatcherConfig, NativeBackend, PjrtBackend, Router,
+    RouterConfig,
 };
 use bitkernel::data::Dataset;
 use bitkernel::model::{BnnEngine, EngineKernel};
 use bitkernel::runtime::Runtime;
-use bitkernel::server::{serve, ServeOptions, Service};
+use bitkernel::server::{
+    http_call, serve, ModelRegistry, ModelState, RegistryConfig,
+    ServeOptions, Service,
+};
+use bitkernel::utils::json::Json;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -44,6 +51,9 @@ fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "serve" => cmd_serve(rest),
+        "mount" => cmd_mount(rest),
+        "unmount" => cmd_unmount(rest),
+        "reload" => cmd_reload(rest),
         "classify" => cmd_classify(rest),
         "eval" => cmd_eval(rest),
         "describe" => cmd_describe(rest),
@@ -63,6 +73,9 @@ fn print_usage() {
          usage: bitkernel <subcommand> [flags]\n\n\
          subcommands:\n\
          \x20 serve     run the HTTP inference service\n\
+         \x20 mount     mount a model on a running server (--admin)\n\
+         \x20 unmount   unmount a model on a running server\n\
+         \x20 reload    reload a mounted model from its weight path\n\
          \x20 classify  classify test-set images\n\
          \x20 eval      accuracy over the test split\n\
          \x20 describe  print a weight file's NetSpec, plan + buffers\n\
@@ -142,6 +155,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                           (0 = one per core, capped at 8)" },
         FlagSpec { name: "threads", takes_value: true, default: Some("4"),
                    help: "HTTP handler threads" },
+        FlagSpec { name: "admin", takes_value: false, default: None,
+                   help: "enable the mutating admin API (POST/PUT/DELETE \
+                          /models) for live mount/reload/unmount" },
+        FlagSpec { name: "lazy", takes_value: false, default: None,
+                   help: "mount --model entries cold: map weights now, \
+                          compile on first request" },
+        FlagSpec { name: "max-resident", takes_value: true,
+                   default: Some("0"),
+                   help: "LRU-demote compiled pipelines beyond this many \
+                          models (0 = unlimited)" },
         COMMON[1].clone(),
     ];
     let args = Args::parse(argv, &specs)?;
@@ -167,57 +190,71 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         },
     };
 
-    // Two ways to populate the model table: repeated `--model
+    // Two ways to populate the registry: repeated `--model
     // name=path.bkw` (heterogeneous shapes/classes behind one port), or
     // the legacy single-model `--backend`/`--weights` pair as "bnn".
+    // With --admin the set stays editable over HTTP afterwards.
     let model_flags = args.get_all("model");
-    let (routers, default_model) = if model_flags.is_empty() {
+    let kernel = match backend.strip_prefix("native-") {
+        Some(k) => parse_kernel(k)?,
+        None if model_flags.is_empty() => {
+            // Legacy pjrt path: the kernel only matters for models
+            // mounted later over the admin API.
+            EngineKernel::Xnor(XnorImpl::Auto)
+        }
+        None => bail!(
+            "--model serves through the native engine; \
+             got --backend {backend} (pjrt models go through \
+             --weights and the artifact manifest)"
+        ),
+    };
+    let registry = ModelRegistry::new(RegistryConfig {
+        kernel,
+        max_batch: batch,
+        router: cfg,
+        max_resident: args.get_usize("max-resident", 0)?,
+    });
+    let default_model = if model_flags.is_empty() {
         let router =
             start_backend(&artifacts, &backend, &weights, batch, cfg)?;
-        let mut routers = BTreeMap::new();
-        routers.insert("bnn".to_string(), router);
-        (routers, "bnn".to_string())
+        registry
+            .insert_router("bnn", router)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        "bnn".to_string()
     } else {
-        let Some(kernel_name) = backend.strip_prefix("native-") else {
-            bail!(
-                "--model serves through the native engine; \
-                 got --backend {backend} (pjrt models go through \
-                 --weights and the artifact manifest)"
-            );
-        };
-        let kernel = parse_kernel(kernel_name)?;
-        let mut routers = BTreeMap::new();
-        let mut default_model = String::new();
+        let lazy = args.has("lazy");
+        let mut entries = Vec::new();
         for spec in model_flags {
             let Some((name, path)) = spec.split_once('=') else {
                 bail!("--model wants <name>=<path.bkw>, got '{spec}'");
             };
             anyhow::ensure!(!name.is_empty(), "--model name is empty");
-            anyhow::ensure!(
-                !routers.contains_key(name),
-                "duplicate model name '{name}'"
-            );
-            let engine = BnnEngine::load(path)
-                .with_context(|| format!("loading model '{name}'"))?;
-            // Compile once; each replica mints its own session.  Every
-            // validated NetSpec serves — no shape gatekeeping here.
-            let plan = engine.plan(kernel, batch)?;
-            let router = Router::start(
-                move |_replica| {
-                    Ok(Box::new(NativeBackend::from_plan(&plan))
-                        as Box<dyn Backend>)
-                },
-                cfg,
-            )
-            .with_context(|| format!("starting model '{name}'"))?;
-            if default_model.is_empty() {
-                default_model = name.to_string();
-            }
-            routers.insert(name.to_string(), router);
+            let entry = registry
+                .mount(name, path, lazy)
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .with_context(|| format!("mounting model '{name}'"))?;
+            entries.push(entry);
         }
-        (routers, default_model)
+        // The builds run off-thread; surface startup failures here so
+        // `serve` fails fast exactly like the pre-registry loader.
+        for entry in &entries {
+            let st =
+                entry.wait_settled(std::time::Duration::from_secs(300));
+            if st.state == ModelState::Failed {
+                bail!(
+                    "loading model '{}': {}",
+                    entry.name(),
+                    st.error.unwrap_or_else(|| "build failed".into())
+                );
+            }
+        }
+        entries[0].name().to_string()
     };
-    let service = Arc::new(Service::new(routers, &default_model));
+    let service = Arc::new(Service::with_registry(
+        registry,
+        Some(default_model),
+        args.has("admin"),
+    ));
     let stop = Arc::new(AtomicBool::new(false));
     serve(
         service,
@@ -283,6 +320,145 @@ fn start_backend(
         }
         other => bail!("unknown backend '{other}'"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// mount / unmount / reload — admin API clients
+// ---------------------------------------------------------------------------
+
+/// Flags shared by the three admin-client subcommands.
+const ADMIN_CLIENT: [FlagSpec; 3] = [
+    FlagSpec { name: "addr", takes_value: true,
+               default: Some("127.0.0.1:8080"),
+               help: "server address (needs serve --admin)" },
+    FlagSpec { name: "no-wait", takes_value: false, default: None,
+               help: "return 202 immediately instead of waiting for \
+                      the build (poll GET /models/<name>)" },
+    FlagSpec { name: "help", takes_value: false, default: None,
+               help: "show this help" },
+];
+
+/// Issue one admin call and surface the server's JSON verbatim; any
+/// status >= 300 becomes a non-zero exit.
+fn admin_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<()> {
+    let (status, reply) = http_call(addr, method, path, body)?;
+    println!("{}", String::from_utf8_lossy(&reply).trim_end());
+    anyhow::ensure!(
+        status < 300,
+        "{method} {path} -> HTTP {status}"
+    );
+    Ok(())
+}
+
+/// `bitkernel mount <name>=<path.bkw> [--addr a] [--lazy] [--no-wait]`
+fn cmd_mount(argv: &[String]) -> Result<()> {
+    let (pos, flags) = take_positional(argv);
+    let specs = [
+        ADMIN_CLIENT[0].clone(),
+        FlagSpec { name: "lazy", takes_value: false, default: None,
+                   help: "map weights now, compile on first request" },
+        ADMIN_CLIENT[1].clone(),
+        ADMIN_CLIENT[2].clone(),
+    ];
+    let args = Args::parse(&flags, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help(
+            "mount",
+            "mount a model on a running server \
+             (usage: bitkernel mount <name>=<path.bkw>)",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let Some(spec) = pos else {
+        bail!("mount wants a positional <name>=<path.bkw>");
+    };
+    let Some((name, path)) = spec.split_once('=') else {
+        bail!("mount wants <name>=<path.bkw>, got '{spec}'");
+    };
+    anyhow::ensure!(!name.is_empty(), "model name is empty");
+    // The server resolves the path from ITS working directory — send
+    // an absolute path so `bitkernel mount m=./local.bkw` just works.
+    let path = std::fs::canonicalize(path)
+        .with_context(|| format!("resolving weight path '{path}'"))?;
+    let body = Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("path", Json::Str(path.display().to_string())),
+        ("lazy", Json::Bool(args.has("lazy"))),
+    ])
+    .to_string();
+    let route =
+        if args.has("no-wait") { "/models" } else { "/models?wait=1" };
+    admin_call(
+        args.get_or("addr", "127.0.0.1:8080"),
+        "POST",
+        route,
+        body.as_bytes(),
+    )
+}
+
+/// `bitkernel unmount <name> [--addr a]`
+fn cmd_unmount(argv: &[String]) -> Result<()> {
+    let (pos, flags) = take_positional(argv);
+    let specs = [ADMIN_CLIENT[0].clone(), ADMIN_CLIENT[2].clone()];
+    let args = Args::parse(&flags, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help(
+            "unmount",
+            "unmount a model on a running server \
+             (usage: bitkernel unmount <name>)",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let Some(name) = pos else {
+        bail!("unmount wants a positional <name>");
+    };
+    admin_call(
+        args.get_or("addr", "127.0.0.1:8080"),
+        "DELETE",
+        &format!("/models/{name}"),
+        b"",
+    )
+}
+
+/// `bitkernel reload <name> [--addr a] [--no-wait]`
+fn cmd_reload(argv: &[String]) -> Result<()> {
+    let (pos, flags) = take_positional(argv);
+    let specs = [
+        ADMIN_CLIENT[0].clone(),
+        ADMIN_CLIENT[1].clone(),
+        ADMIN_CLIENT[2].clone(),
+    ];
+    let args = Args::parse(&flags, &specs)?;
+    if args.has("help") {
+        print!("{}", render_help(
+            "reload",
+            "reload a mounted model from its weight path \
+             (usage: bitkernel reload <name>)",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let Some(name) = pos else {
+        bail!("reload wants a positional <name>");
+    };
+    let route = if args.has("no-wait") {
+        format!("/models/{name}")
+    } else {
+        format!("/models/{name}?wait=1")
+    };
+    admin_call(
+        args.get_or("addr", "127.0.0.1:8080"),
+        "PUT",
+        &route,
+        b"",
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -390,12 +566,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 /// the per-session buffer footprint.
 fn cmd_describe(argv: &[String]) -> Result<()> {
     // One optional positional: the weight-file path.
-    let (file, flags): (Option<String>, Vec<String>) = match argv.first() {
-        Some(a) if !a.starts_with("--") => {
-            (Some(a.clone()), argv[1..].to_vec())
-        }
-        _ => (None, argv.to_vec()),
-    };
+    let (file, flags) = take_positional(argv);
     let specs = [
         COMMON[0].clone(),
         FlagSpec { name: "weights", takes_value: true, default: None,

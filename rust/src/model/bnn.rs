@@ -228,6 +228,16 @@ impl BnnEngine {
         Self::from_weight_file(&wf)
     }
 
+    /// Convenience: load from a .bkw path through a read-only file
+    /// mapping ([`WeightFile::open_mmap`]) — the registry's mount path.
+    /// Building the engine packs/copies what inference needs, so the
+    /// mapping itself may drop afterwards.
+    pub fn load_mmap(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let wf =
+            WeightFile::open_mmap(&path).context("mapping weight file")?;
+        Self::from_weight_file(&wf)
+    }
+
     /// The class-label table from the weight file, when it carried one
     /// (`labels()[c]` names class `c`; label-less files serve with
     /// numeric labels).

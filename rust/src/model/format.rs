@@ -47,15 +47,28 @@
 //! with numeric class labels.  When present alongside an embedded
 //! spec, its entry count must equal the spec's class count.
 //!
+//! **Two load paths share one parser.**  The parser walks an abstract
+//! byte source: [`WeightFile::parse`] streams a reader section by
+//! section (tensor payloads decode chunkwise — no whole-file buffer is
+//! ever built), and [`WeightFile::open_mmap`] walks a read-only file
+//! mapping, in which case tensor payloads *borrow* the mapping
+//! ([`WeightTensor::words`] hands out the mapped words zero-copy on
+//! little-endian hosts).  Short input on either path is the typed
+//! [`FormatError::Truncated`] naming the wire section being decoded
+//! and the byte counts involved.
+//!
 //! Structural failures are typed [`FormatError`]s; the CLI wraps them
 //! in `anyhow` context (file path, tensor name) at the boundary.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::mmap::Mmap;
 use super::spec::{LayerSpec, NetSpec, SpecError};
 
 /// Element type of a stored tensor.
@@ -108,7 +121,19 @@ pub enum FormatError {
     /// The embedded spec failed [`NetSpec`] validation.
     #[error("embedded spec is invalid: {0}")]
     Spec(#[from] SpecError),
-    /// Underlying I/O failure (including truncation).
+    /// The input ended inside a wire section: `needed` bytes were
+    /// required to finish decoding `section`, only `got` arrived.
+    #[error("truncated {section}: needed {needed} bytes, got {got}")]
+    Truncated {
+        /// The wire section being decoded when the input ran out.
+        section: &'static str,
+        /// Bytes the current read required.
+        needed: usize,
+        /// Bytes that actually arrived.
+        got: usize,
+    },
+    /// Underlying I/O failure (truncation is the typed
+    /// [`FormatError::Truncated`], not this).
     #[error("i/o: {0}")]
     Io(#[from] std::io::Error),
     /// A lookup for a tensor the file does not contain.
@@ -149,6 +174,19 @@ pub enum FormatError {
     },
 }
 
+/// Where a tensor's words live: on the heap (streamed parse,
+/// in-memory assembly) or inside a shared file mapping (zero-copy —
+/// the `open_mmap` path).
+#[derive(Debug, Clone)]
+enum TensorWords {
+    Owned(Vec<u32>),
+    Mapped {
+        map: Arc<Mmap>,
+        byte_off: usize,
+        words: usize,
+    },
+}
+
 /// One named tensor from a BKW file.
 #[derive(Debug, Clone)]
 pub struct WeightTensor {
@@ -156,11 +194,22 @@ pub struct WeightTensor {
     pub dtype: Dtype,
     /// Dimension sizes.
     pub shape: Vec<usize>,
-    /// Raw little-endian words; reinterpret per `dtype`.
-    pub words: Vec<u32>,
+    words: TensorWords,
 }
 
 impl WeightTensor {
+    /// Assemble a tensor from heap-owned little-endian words
+    /// (reinterpreted per `dtype`).  The word count must equal the
+    /// shape's element count.
+    pub fn owned(dtype: Dtype, shape: Vec<usize>, words: Vec<u32>) -> Self {
+        assert_eq!(
+            words.len(),
+            shape.iter().product::<usize>(),
+            "word count must match the shape's element count"
+        );
+        Self { dtype, shape, words: TensorWords::Owned(words) }
+    }
+
     /// Total element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
@@ -171,20 +220,65 @@ impl WeightTensor {
         self.len() == 0
     }
 
+    /// Whether the words live in a file mapping (the
+    /// [`WeightFile::open_mmap`] path) rather than on the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.words, TensorWords::Mapped { .. })
+    }
+
+    /// The raw little-endian words.  Owned tensors borrow their heap
+    /// buffer; mapped tensors borrow the file mapping directly when
+    /// the platform allows it (little-endian target, 4-byte-aligned
+    /// payload — the common case) and otherwise decode into a fresh
+    /// vector.
+    pub fn words(&self) -> Cow<'_, [u32]> {
+        match &self.words {
+            TensorWords::Owned(v) => Cow::Borrowed(v),
+            TensorWords::Mapped { map, byte_off, words } => {
+                let bytes =
+                    &map.as_slice()[*byte_off..*byte_off + words * 4];
+                if cfg!(target_endian = "little")
+                    && bytes.as_ptr().align_offset(4) == 0
+                {
+                    // SAFETY: the range is in bounds, 4-byte aligned,
+                    // u32 has no invalid bit patterns, and the mapping
+                    // is immutable for the borrow's lifetime.
+                    Cow::Borrowed(unsafe {
+                        std::slice::from_raw_parts(
+                            bytes.as_ptr().cast::<u32>(),
+                            *words,
+                        )
+                    })
+                } else {
+                    Cow::Owned(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| {
+                                u32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                            })
+                            .collect(),
+                    )
+                }
+            }
+        }
+    }
+
     /// The elements as f32 (errors on non-f32 tensors).
     pub fn as_f32(&self) -> Result<Vec<f32>, FormatError> {
         if self.dtype != Dtype::F32 {
             return Err(FormatError::DtypeMismatch("f32"));
         }
-        Ok(self.words.iter().map(|&w| f32::from_bits(w)).collect())
+        Ok(self.words().iter().map(|&w| f32::from_bits(w)).collect())
     }
 
     /// The raw words of a u32 tensor (errors on non-u32 tensors).
-    pub fn as_u32(&self) -> Result<&[u32], FormatError> {
+    /// Borrowed zero-copy where storage allows — see
+    /// [`WeightTensor::words`].
+    pub fn as_u32(&self) -> Result<Cow<'_, [u32]>, FormatError> {
         if self.dtype != Dtype::U32 {
             return Err(FormatError::DtypeMismatch("u32"));
         }
-        Ok(&self.words)
+        Ok(self.words())
     }
 }
 
@@ -198,24 +292,232 @@ pub struct WeightFile {
     labels: Option<Vec<String>>,
 }
 
-fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>, FormatError> {
-    let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf)?;
-    Ok(buf)
+// ---------------------------------------------------------------------------
+// Byte sources: one parser body, two storage strategies
+// ---------------------------------------------------------------------------
+
+/// The byte source the parser walks: a streaming reader
+/// ([`WeightFile::parse`]) or an mmap'd range
+/// ([`WeightFile::open_mmap`]).  Each source tracks the wire section
+/// currently being decoded so short input surfaces as
+/// [`FormatError::Truncated`] naming it.
+trait ByteSource {
+    /// Label subsequent reads as decoding `section`.
+    fn enter(&mut self, section: &'static str);
+
+    /// Read exactly `n` bytes (small fixed-size fields).
+    fn take(&mut self, n: usize) -> Result<Vec<u8>, FormatError>;
+
+    /// Consume `words * 4` bytes of tensor payload as word storage —
+    /// owned for streams, borrowed from the map for mmap.
+    fn payload(&mut self, words: usize) -> Result<TensorWords, FormatError>;
+
+    /// Read 4 magic bytes, or `None` on clean EOF at a section
+    /// boundary (a partial magic is [`FormatError::Truncated`]).
+    fn magic4(&mut self) -> Result<Option<[u8; 4]>, FormatError>;
+
+    /// Error with [`FormatError::TrailingBytes`] unless the source is
+    /// exhausted.
+    fn expect_end(&mut self) -> Result<(), FormatError>;
 }
 
-fn read_u16(r: &mut impl Read) -> Result<u16, FormatError> {
-    let b = read_exact(r, 2)?;
+/// Streaming source over any reader; decodes section by section with a
+/// bounded chunk buffer (no whole-file allocation).
+struct StreamSource<R: Read> {
+    r: R,
+    section: &'static str,
+}
+
+impl<R: Read> StreamSource<R> {
+    fn new(r: R) -> Self {
+        Self { r, section: "magic" }
+    }
+
+    /// `read_exact` with byte accounting: EOF mid-field becomes the
+    /// typed truncation error instead of a generic short-read.
+    fn fill(&mut self, buf: &mut [u8], needed: usize, already: usize)
+            -> Result<(), FormatError> {
+        let mut got = 0;
+        while got < buf.len() {
+            match self.r.read(&mut buf[got..]) {
+                Ok(0) => {
+                    return Err(FormatError::Truncated {
+                        section: self.section,
+                        needed,
+                        got: already + got,
+                    })
+                }
+                Ok(k) => got += k,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(FormatError::Io(e)),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read> ByteSource for StreamSource<R> {
+    fn enter(&mut self, section: &'static str) {
+        self.section = section;
+    }
+
+    fn take(&mut self, n: usize) -> Result<Vec<u8>, FormatError> {
+        let mut buf = vec![0u8; n];
+        self.fill_owned(&mut buf, n)?;
+        Ok(buf)
+    }
+
+    fn payload(&mut self, words: usize) -> Result<TensorWords, FormatError> {
+        // Decode chunkwise straight into the word vector: the peak
+        // transient is one chunk, not a second full-size byte buffer.
+        let needed = words * 4;
+        let mut out = Vec::with_capacity(words);
+        let mut chunk = [0u8; 16 * 1024];
+        let mut done = 0usize;
+        while done < needed {
+            let want = (needed - done).min(chunk.len());
+            self.fill(&mut chunk[..want], needed, done)?;
+            out.extend(chunk[..want].chunks_exact(4).map(|c| {
+                u32::from_le_bytes([c[0], c[1], c[2], c[3]])
+            }));
+            done += want;
+        }
+        Ok(TensorWords::Owned(out))
+    }
+
+    fn magic4(&mut self) -> Result<Option<[u8; 4]>, FormatError> {
+        // A zero-byte first read is clean EOF (no trailing section);
+        // a partial magic is truncation.
+        let mut magic = [0u8; 4];
+        let first = loop {
+            match self.r.read(&mut magic) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(FormatError::Io(e)),
+            }
+        };
+        if first == 0 {
+            return Ok(None);
+        }
+        if first < 4 {
+            self.fill_owned(&mut magic[first..], 4)
+                .map_err(|e| match e {
+                    FormatError::Truncated { section, got, .. } => {
+                        FormatError::Truncated {
+                            section,
+                            needed: 4,
+                            got: first + got,
+                        }
+                    }
+                    other => other,
+                })?;
+        }
+        Ok(Some(magic))
+    }
+
+    fn expect_end(&mut self) -> Result<(), FormatError> {
+        let mut probe = [0u8; 1];
+        loop {
+            match self.r.read(&mut probe) {
+                Ok(0) => return Ok(()),
+                Ok(_) => return Err(FormatError::TrailingBytes),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(FormatError::Io(e)),
+            }
+        }
+    }
+}
+
+impl<R: Read> StreamSource<R> {
+    /// [`StreamSource::fill`] for reads starting a fresh field.
+    fn fill_owned(&mut self, buf: &mut [u8], needed: usize)
+                  -> Result<(), FormatError> {
+        self.fill(buf, needed, 0)
+    }
+}
+
+/// Source over a shared file mapping; tensor payloads are recorded as
+/// (offset, length) references into it — zero copy.
+struct MapSource {
+    map: Arc<Mmap>,
+    pos: usize,
+    section: &'static str,
+}
+
+impl MapSource {
+    fn new(map: Arc<Mmap>) -> Self {
+        Self { map, pos: 0, section: "magic" }
+    }
+
+    fn remaining(&self) -> usize {
+        self.map.len() - self.pos
+    }
+
+    fn advance(&mut self, n: usize) -> Result<usize, FormatError> {
+        if self.remaining() < n {
+            return Err(FormatError::Truncated {
+                section: self.section,
+                needed: n,
+                got: self.remaining(),
+            });
+        }
+        let at = self.pos;
+        self.pos += n;
+        Ok(at)
+    }
+}
+
+impl ByteSource for MapSource {
+    fn enter(&mut self, section: &'static str) {
+        self.section = section;
+    }
+
+    fn take(&mut self, n: usize) -> Result<Vec<u8>, FormatError> {
+        let at = self.advance(n)?;
+        Ok(self.map.as_slice()[at..at + n].to_vec())
+    }
+
+    fn payload(&mut self, words: usize) -> Result<TensorWords, FormatError> {
+        let at = self.advance(words * 4)?;
+        Ok(TensorWords::Mapped {
+            map: Arc::clone(&self.map),
+            byte_off: at,
+            words,
+        })
+    }
+
+    fn magic4(&mut self) -> Result<Option<[u8; 4]>, FormatError> {
+        if self.remaining() == 0 {
+            return Ok(None);
+        }
+        let b = self.take(4)?;
+        Ok(Some([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn expect_end(&mut self) -> Result<(), FormatError> {
+        if self.remaining() != 0 {
+            return Err(FormatError::TrailingBytes);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared parser body
+// ---------------------------------------------------------------------------
+
+fn read_u16(s: &mut impl ByteSource) -> Result<u16, FormatError> {
+    let b = s.take(2)?;
     Ok(u16::from_le_bytes([b[0], b[1]]))
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32, FormatError> {
-    let b = read_exact(r, 4)?;
+fn read_u32(s: &mut impl ByteSource) -> Result<u32, FormatError> {
+    let b = s.take(4)?;
     Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
 }
 
-fn read_u8(r: &mut impl Read) -> Result<u8, FormatError> {
-    Ok(read_exact(r, 1)?[0])
+fn read_u8(s: &mut impl ByteSource) -> Result<u8, FormatError> {
+    Ok(s.take(1)?[0])
 }
 
 /// BKW2 layer opcodes (shared with python/compile/train.py).
@@ -231,33 +533,33 @@ const OP_LINEAR: u8 = 5;
 /// `cin*k*k`, ...) stay far from usize overflow on crafted files.
 const MAX_SPEC_DIM: usize = 1 << 20;
 
-fn read_dim(r: &mut impl Read) -> Result<usize, FormatError> {
-    let v = read_u32(r)? as usize;
+fn read_dim(s: &mut impl ByteSource) -> Result<usize, FormatError> {
+    let v = read_u32(s)? as usize;
     if v > MAX_SPEC_DIM {
         return Err(FormatError::SpecDim(v));
     }
     Ok(v)
 }
 
-fn read_spec(r: &mut impl Read) -> Result<NetSpec, FormatError> {
-    let c = read_dim(r)?;
-    let h = read_dim(r)?;
-    let w = read_dim(r)?;
-    let classes = read_dim(r)?;
-    let n_ops = read_u32(r)? as usize;
+fn read_spec(s: &mut impl ByteSource) -> Result<NetSpec, FormatError> {
+    let c = read_dim(s)?;
+    let h = read_dim(s)?;
+    let w = read_dim(s)?;
+    let classes = read_dim(s)?;
+    let n_ops = read_u32(s)? as usize;
     if n_ops > 10_000 {
         return Err(FormatError::OpCount(n_ops));
     }
     let mut layers = Vec::with_capacity(n_ops);
     for _ in 0..n_ops {
-        let opcode = read_u8(r)?;
+        let opcode = read_u8(s)?;
         layers.push(match opcode {
             OP_CONV2D => {
-                let cout = read_dim(r)?;
-                let ksize = read_dim(r)?;
-                let stride = read_dim(r)?;
-                let pad = read_dim(r)?;
-                let binarized = read_u8(r)? != 0;
+                let cout = read_dim(s)?;
+                let ksize = read_dim(s)?;
+                let stride = read_dim(s)?;
+                let pad = read_dim(s)?;
+                let binarized = read_u8(s)? != 0;
                 LayerSpec::Conv2d { cout, ksize, stride, pad, binarized }
             }
             OP_MAXPOOL2 => LayerSpec::MaxPool2,
@@ -265,8 +567,8 @@ fn read_spec(r: &mut impl Read) -> Result<NetSpec, FormatError> {
             OP_SIGN => LayerSpec::Sign,
             OP_FLATTEN => LayerSpec::Flatten,
             OP_LINEAR => {
-                let dout = read_dim(r)?;
-                let binarized = read_u8(r)? != 0;
+                let dout = read_dim(s)?;
+                let binarized = read_u8(s)? != 0;
                 LayerSpec::Linear { dout, binarized }
             }
             other => return Err(FormatError::BadOpcode(other)),
@@ -283,40 +585,93 @@ const LABELS_MAGIC: &[u8; 4] = b"LBLS";
 const MAX_LABELS: usize = 1 << 16;
 
 /// After the tensor section: EOF means no labels; anything else must
-/// be a complete `LBLS` section.
-fn read_labels(r: &mut impl Read)
+/// be a complete `LBLS` section ending the file.
+fn read_labels(s: &mut impl ByteSource)
                -> Result<Option<Vec<String>>, FormatError> {
-    // Distinguish clean EOF (no trailing section) from a truncated or
-    // foreign trailer: a zero-byte first read is EOF; a short magic is
-    // an I/O error; four non-LBLS bytes are a typed failure.
-    let mut magic = [0u8; 4];
-    let first = r.read(&mut magic)?;
-    if first == 0 {
+    s.enter("labels section");
+    let Some(magic) = s.magic4()? else {
         return Ok(None);
-    }
-    if first < 4 {
-        r.read_exact(&mut magic[first..])?;
-    }
+    };
     if &magic != LABELS_MAGIC {
         return Err(FormatError::BadLabelMagic(magic));
     }
-    let n = read_u32(r)? as usize;
+    let n = read_u32(s)? as usize;
     if n > MAX_LABELS {
         return Err(FormatError::LabelCount(n));
     }
     let mut labels = Vec::with_capacity(n);
     for i in 0..n {
-        let len = read_u16(r)? as usize;
-        let bytes = read_exact(r, len)?;
+        let len = read_u16(s)? as usize;
+        let bytes = s.take(len)?;
         labels.push(String::from_utf8(bytes)
             .map_err(|_| FormatError::BadLabel(i))?);
     }
     // The labels section is the file's last: anything after it is
-    // corruption (a zero-length read is the only acceptable outcome).
-    if r.read(&mut [0u8; 1])? != 0 {
-        return Err(FormatError::TrailingBytes);
-    }
+    // corruption.
+    s.expect_end()?;
     Ok(Some(labels))
+}
+
+fn parse_from(s: &mut impl ByteSource) -> Result<WeightFile, FormatError> {
+    s.enter("magic");
+    let magic = s.take(4)?;
+    let spec = match &magic[..] {
+        b"BKW1" => None,
+        b"BKW2" => {
+            s.enter("spec section");
+            Some(read_spec(s)?)
+        }
+        _ => {
+            return Err(FormatError::BadMagic([
+                magic[0], magic[1], magic[2], magic[3],
+            ]))
+        }
+    };
+    s.enter("tensor table");
+    let n = read_u32(s)? as usize;
+    if n >= 100_000 {
+        return Err(FormatError::TensorCount(n));
+    }
+    let mut tensors = BTreeMap::new();
+    for _ in 0..n {
+        s.enter("tensor header");
+        let name_len = read_u16(s)? as usize;
+        let name = String::from_utf8(s.take(name_len)?)
+            .map_err(|_| FormatError::BadName)?;
+        let dt = read_u8(s)?;
+        let dtype = match dt {
+            0 => Dtype::F32,
+            1 => Dtype::U32,
+            _ => {
+                return Err(FormatError::UnknownDtype { name, dtype: dt })
+            }
+        };
+        let ndim = read_u8(s)? as usize;
+        if ndim > 8 {
+            return Err(FormatError::BadNdim(ndim));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(s)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        if count >= 1 << 28 {
+            return Err(FormatError::ElementCount(count));
+        }
+        s.enter("tensor data");
+        let words = s.payload(count)?;
+        tensors.insert(name, WeightTensor { dtype, shape, words });
+    }
+    let labels = read_labels(s)?;
+    if let (Some(labels), Some(spec)) = (&labels, &spec) {
+        if labels.len() != spec.classes() {
+            return Err(FormatError::LabelClassMismatch {
+                labels: labels.len(),
+                classes: spec.classes(),
+            });
+        }
+    }
+    Ok(WeightFile { tensors, spec, labels })
 }
 
 fn write_labels(w: &mut impl Write, labels: &[String])
@@ -386,67 +741,36 @@ impl WeightFile {
         Self { tensors, spec: Some(spec), labels: None }
     }
 
-    /// Parse a BKW1 or BKW2 stream.
-    pub fn parse(mut r: impl Read) -> Result<Self, FormatError> {
-        let magic = read_exact(&mut r, 4)?;
-        let spec = match &magic[..] {
-            b"BKW1" => None,
-            b"BKW2" => Some(read_spec(&mut r)?),
-            _ => {
-                return Err(FormatError::BadMagic([
-                    magic[0], magic[1], magic[2], magic[3],
-                ]))
-            }
-        };
-        let n = read_u32(&mut r)? as usize;
-        if n >= 100_000 {
-            return Err(FormatError::TensorCount(n));
-        }
-        let mut tensors = BTreeMap::new();
-        for _ in 0..n {
-            let name_len = read_u16(&mut r)? as usize;
-            let name = String::from_utf8(read_exact(&mut r, name_len)?)
-                .map_err(|_| FormatError::BadName)?;
-            let dt = read_u8(&mut r)?;
-            let dtype = match dt {
-                0 => Dtype::F32,
-                1 => Dtype::U32,
-                _ => {
-                    return Err(FormatError::UnknownDtype {
-                        name,
-                        dtype: dt,
-                    })
-                }
-            };
-            let ndim = read_u8(&mut r)? as usize;
-            if ndim > 8 {
-                return Err(FormatError::BadNdim(ndim));
-            }
-            let mut shape = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                shape.push(read_u32(&mut r)? as usize);
-            }
-            let count: usize = shape.iter().product();
-            if count >= 1 << 28 {
-                return Err(FormatError::ElementCount(count));
-            }
-            let raw = read_exact(&mut r, count * 4)?;
-            let words = raw
-                .chunks_exact(4)
-                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            tensors.insert(name, WeightTensor { dtype, shape, words });
-        }
-        let labels = read_labels(&mut r)?;
-        if let (Some(labels), Some(spec)) = (&labels, &spec) {
-            if labels.len() != spec.classes() {
-                return Err(FormatError::LabelClassMismatch {
-                    labels: labels.len(),
-                    classes: spec.classes(),
-                });
-            }
-        }
-        Ok(Self { tensors, spec, labels })
+    /// Parse a BKW1 or BKW2 stream, section by section (tensor
+    /// payloads decode chunkwise; no whole-file buffer is built).
+    pub fn parse(r: impl Read) -> Result<Self, FormatError> {
+        parse_from(&mut StreamSource::new(r))
+    }
+
+    /// Parse an already-mapped buffer; tensor payloads borrow `map`
+    /// zero-copy (see [`WeightTensor::words`]).
+    pub fn parse_mapped(map: Arc<Mmap>) -> Result<Self, FormatError> {
+        parse_from(&mut MapSource::new(map))
+    }
+
+    /// Open a BKW file through a read-only memory mapping: tensor
+    /// payloads reference the mapping instead of being copied onto the
+    /// heap, so a cold model costs address space (plus the small
+    /// header/spec/label structures), not resident memory, until its
+    /// pages are touched.  The registry's mount path loads every model
+    /// this way.
+    pub fn open_mmap(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let map = Mmap::open(path)
+            .with_context(|| format!("map {}", path.display()))?;
+        Self::parse_mapped(Arc::new(map))
+            .with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// Whether any tensor borrows a file mapping (the
+    /// [`WeightFile::open_mmap`] path).
+    pub fn is_mapped(&self) -> bool {
+        self.tensors.values().any(WeightTensor::is_mapped)
     }
 
     /// Serialize: BKW2 when the file carries a spec, BKW1 otherwise.
@@ -485,7 +809,7 @@ impl WeightFile {
             for &d in &t.shape {
                 w.write_all(&(d as u32).to_le_bytes())?;
             }
-            for &word in &t.words {
+            for &word in t.words().iter() {
                 w.write_all(&word.to_le_bytes())?;
             }
         }
@@ -510,7 +834,8 @@ impl WeightFile {
         out
     }
 
-    /// Load a BKW file from disk.
+    /// Load a BKW file from disk (streaming — see
+    /// [`WeightFile::open_mmap`] for the zero-copy path).
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let f = std::fs::File::open(path)
@@ -587,7 +912,7 @@ impl WeightFile {
 
     /// The legacy architecture widths vector (meta.widths).
     pub fn widths(&self) -> Result<Vec<u32>, FormatError> {
-        Ok(self.get("meta.widths")?.as_u32()?.to_vec())
+        Ok(self.get("meta.widths")?.as_u32()?.into_owned())
     }
 }
 
@@ -624,13 +949,27 @@ mod tests {
         out
     }
 
+    /// Write `bytes` to a temp file and hand the path to `f`.
+    fn with_temp_file<T>(tag: &str, bytes: &[u8],
+                         f: impl FnOnce(&std::path::Path) -> T) -> T {
+        let dir = std::env::temp_dir()
+            .join(format!("bk-fmt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("file.bkw");
+        std::fs::write(&path, bytes).unwrap();
+        let out = f(&path);
+        std::fs::remove_dir_all(&dir).ok();
+        out
+    }
+
     #[test]
     fn parse_sample() {
         let wf = WeightFile::parse(&sample_blob()[..]).unwrap();
         assert_eq!(wf.len(), 2);
         assert_eq!(wf.version(), 1);
         assert!(wf.embedded_spec().is_none());
-        assert_eq!(wf.get("meta.widths").unwrap().as_u32().unwrap(),
+        assert!(!wf.is_mapped());
+        assert_eq!(&*wf.get("meta.widths").unwrap().as_u32().unwrap(),
                    &[8, 16, 10]);
         let w = wf.get("conv1.w").unwrap();
         assert_eq!(w.shape, vec![2, 2]);
@@ -646,10 +985,65 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn rejects_truncated_with_section_and_counts() {
         let blob = sample_blob();
-        assert!(matches!(WeightFile::parse(&blob[..blob.len() - 3]),
-                         Err(FormatError::Io(_))));
+        // Cut inside the last tensor's payload: the error names the
+        // section and how many bytes of the 16-byte field arrived.
+        match WeightFile::parse(&blob[..blob.len() - 3]) {
+            Err(FormatError::Truncated { section, needed, got }) => {
+                assert_eq!(section, "tensor data");
+                assert_eq!(needed, 16);
+                assert_eq!(got, 13);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // Cut inside the magic itself.
+        assert!(matches!(
+            WeightFile::parse(&blob[..2]),
+            Err(FormatError::Truncated { section: "magic", .. })
+        ));
+        // The mmap path reports the same typed error.
+        with_temp_file("trunc", &blob[..blob.len() - 3], |path| {
+            match WeightFile::open_mmap(path)
+                .unwrap_err()
+                .downcast::<FormatError>()
+                .unwrap()
+            {
+                FormatError::Truncated { section, needed, got } => {
+                    assert_eq!(section, "tensor data");
+                    assert_eq!(needed, 16);
+                    assert_eq!(got, 13);
+                }
+                other => panic!("expected Truncated, got {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn open_mmap_round_trips_zero_copy() {
+        let blob = sample_blob();
+        with_temp_file("mmap", &blob, |path| {
+            let mapped = WeightFile::open_mmap(path).unwrap();
+            assert!(mapped.is_mapped());
+            assert!(mapped.get("conv1.w").unwrap().is_mapped());
+            let streamed = WeightFile::parse(&blob[..]).unwrap();
+            // Identical content through both storage strategies.
+            assert_eq!(mapped.len(), streamed.len());
+            for name in streamed.names() {
+                let (a, b) =
+                    (mapped.get(name).unwrap(), streamed.get(name).unwrap());
+                assert_eq!(a.shape, b.shape, "{name}");
+                assert_eq!(a.words(), b.words(), "{name}");
+            }
+            assert_eq!(
+                mapped.get("conv1.w").unwrap().as_f32().unwrap(),
+                vec![1.0, -1.0, 1.0, 1.0]
+            );
+            assert_eq!(&*mapped.get("meta.widths").unwrap().as_u32().unwrap(),
+                       &[8, 16, 10]);
+            // And the writer re-serializes mapped tensors byte-exact.
+            assert_eq!(mapped.to_bytes(), blob);
+        });
     }
 
     #[test]
@@ -794,11 +1188,14 @@ mod tests {
         blob.extend(b"JUNK");
         assert!(matches!(WeightFile::parse(&blob[..]),
                          Err(FormatError::BadLabelMagic(_))));
-        // A truncated trailer is an I/O error, not a silent pass.
+        // A truncated trailer is the typed truncation error naming the
+        // labels section, not a silent pass.
         let mut blob = sample_blob();
         blob.extend(b"LB");
-        assert!(matches!(WeightFile::parse(&blob[..]),
-                         Err(FormatError::Io(_))));
+        assert!(matches!(
+            WeightFile::parse(&blob[..]),
+            Err(FormatError::Truncated { section: "labels section", .. })
+        ));
     }
 
     #[test]
@@ -810,6 +1207,16 @@ mod tests {
         blob.push(0);
         assert!(matches!(WeightFile::parse(&blob[..]),
                          Err(FormatError::TrailingBytes)));
+        // Same on the mmap path.
+        with_temp_file("trail", &blob, |path| {
+            assert!(matches!(
+                WeightFile::open_mmap(path)
+                    .unwrap_err()
+                    .downcast::<FormatError>()
+                    .unwrap(),
+                FormatError::TrailingBytes
+            ));
+        });
     }
 
     #[test]

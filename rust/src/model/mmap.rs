@@ -1,0 +1,220 @@
+//! Read-only memory-mapped file buffers (zero-copy weight loading).
+//!
+//! [`Mmap::open`] maps a whole file `PROT_READ`/`MAP_PRIVATE`.  The
+//! container carries no `libc` crate, so the two syscalls used are
+//! declared inline on unix; every other platform — and any file the
+//! kernel refuses to map — falls back to a plain heap read, so callers
+//! never need a platform branch.
+//!
+//! The mapping is immutable and page-cache backed: a
+//! [`WeightFile`](super::WeightFile) opened through
+//! [`WeightFile::open_mmap`](super::WeightFile::open_mmap) costs
+//! address space, not resident heap, until its pages are touched — the
+//! property the model registry's cold-mount path relies on to keep
+//! hundreds of unmounted-but-ready models cheap.
+
+use std::io;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // Values shared by every unix the toolchain targets here (linux,
+    // macOS): PROT_READ = 0x1, MAP_PRIVATE = 0x2.
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: isize,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+enum Backing {
+    /// A live kernel mapping (unmapped on drop).
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap fallback: non-unix targets, empty files, or a refused map.
+    Heap(Vec<u8>),
+}
+
+/// An immutable byte buffer backed by a file mapping (with a heap
+/// fallback).  Dereferences to `&[u8]`.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// SAFETY: the mapping is PROT_READ and never written after `open`;
+// the fallback is an owned Vec that is never mutated.  Only shared
+// references to the bytes are ever handed out.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only.  Falls back to reading the file onto the
+    /// heap when mapping is unavailable (non-unix, empty file, or the
+    /// kernel refusing the map), so the result is always usable.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        let path = path.as_ref();
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len() as usize;
+            if len == 0 {
+                return Ok(Self { backing: Backing::Heap(Vec::new()) });
+            }
+            // SAFETY: the fd is open and `len` is the file's current
+            // size; closing the fd after mmap keeps the mapping live
+            // (POSIX), so the File may drop at the end of this scope.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1; on it, fall through to the heap
+            // read below rather than failing the load.
+            if ptr as usize != usize::MAX && !ptr.is_null() {
+                return Ok(Self {
+                    backing: Backing::Mapped { ptr: ptr as *const u8, len },
+                });
+            }
+        }
+        Ok(Self { backing: Backing::Heap(std::fs::read(path)?) })
+    }
+
+    /// The mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            // SAFETY: ptr/len came from a successful mmap that lives
+            // until Drop, and the mapping is never mutated.
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Heap(v) => v,
+        }
+    }
+
+    /// Length of the buffer in bytes.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the bytes live in a kernel mapping (false: heap
+    /// fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Heap(_) => false,
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            // SAFETY: exactly the region mmap returned, unmapped once.
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_a_file_round_trip() {
+        let dir = std::env::temp_dir()
+            .join(format!("bk-mmap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.len(), payload.len());
+        assert_eq!(&map[..], &payload[..]);
+        drop(map);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_file_is_fine() {
+        let dir = std::env::temp_dir()
+            .join(format!("bk-mmap-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert!(!map.is_mapped());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open("/definitely/not/here.bin").is_err());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let dir = std::env::temp_dir()
+            .join(format!("bk-mmap-thr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let map = std::sync::Arc::new(Mmap::open(&path).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&map);
+                std::thread::spawn(move || {
+                    m.iter().map(|&b| b as usize).sum::<usize>()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -15,10 +15,12 @@
 
 pub mod bnn;
 pub mod format;
+pub mod mmap;
 pub mod plan;
 pub mod spec;
 
 pub use bnn::{label_for, BnnEngine, EngineKernel};
 pub use format::{Dtype, FormatError, WeightFile, WeightTensor};
+pub use mmap::Mmap;
 pub use plan::{Plan, Session};
 pub use spec::{LayerSpec, NetSpec, NetSpecBuilder, Shape, SpecError};

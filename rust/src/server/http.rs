@@ -117,9 +117,13 @@ impl HttpResponse {
     fn reason(&self) -> &'static str {
         match self.status {
             200 => "OK",
+            201 => "Created",
+            202 => "Accepted",
             400 => "Bad Request",
+            403 => "Forbidden",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            409 => "Conflict",
             429 => "Too Many Requests",
             503 => "Service Unavailable",
             _ => "Internal Server Error",
@@ -141,6 +145,63 @@ impl HttpResponse {
         w.flush()?;
         Ok(())
     }
+}
+
+/// Minimal blocking HTTP/1.1 client call: one request, one response,
+/// connection closed.  Returns `(status, body)`.  This is what the
+/// `bitkernel mount`/`unmount`/`reload` CLI subcommands and the
+/// lifecycle smoke example speak to the admin API with — deliberately
+/// tiny (no keep-alive, no chunked bodies, 30 s timeouts) so the CLI
+/// needs no client dependency.
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("reading status")?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .with_context(|| format!("bad status line '{status_line}'"))?
+        .parse()
+        .context("bad status code")?;
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        ensure!(reader.read_line(&mut line)? > 0, "eof in headers");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    ensure!(len <= 16 << 20, "response too large ({len} bytes)");
+    let mut out = vec![0u8; len];
+    reader.read_exact(&mut out).context("reading body")?;
+    Ok((status, out))
 }
 
 #[cfg(test)]

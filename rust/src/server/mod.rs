@@ -3,23 +3,43 @@
 //! Routes (shape-generic: every model's request/reply schema derives
 //! from its own shape contract — see `GET /models`):
 //! * `GET  /healthz`           — liveness
-//! * `GET  /models`            — JSON list of served models with each
-//!   one's input shape, byte count, class count, and label table
-//! * `GET  /metrics`           — Prometheus-style counters (per model)
+//! * `GET  /models`            — JSON list of mounted models: lifecycle
+//!   state, weight generation, residency, and each one's input shape,
+//!   byte count, class count, and label table
+//! * `GET  /models/{name}`     — the same descriptor for one model
+//! * `GET  /metrics`           — Prometheus-style counters (per model,
+//!   plus the registry's mounted-models gauge and mount epochs)
 //! * `POST /classify?model=m`  — body: the target model's `C*H*W` raw
 //!   HWC uint8 pixels or JSON `{"pixels": [..C*H*W numbers..]}`;
-//!   responds JSON `{"model", "class", "label", "latency_us", ...}`
-//!   (label falls back to the numeric class index for label-less
-//!   models)
+//!   responds JSON `{"model", "generation", "class", "label",
+//!   "latency_us", ...}` (label falls back to the numeric class index
+//!   for label-less models)
+//!
+//! With the admin API enabled (`serve --admin`), the model set is
+//! editable while traffic is in flight:
+//! * `POST   /models`          — mount `{"name","path","lazy"?}`
+//! * `PUT    /models/{name}`   — reload from the mounted path
+//! * `DELETE /models/{name}`   — unmount (drain, then retire)
+//!
+//! Mutating verbs run builds off-thread and answer `202`; append
+//! `?wait=1` for synchronous semantics.  Without `--admin` they are
+//! `403` and the set is frozen.
 //!
 //! Built directly on std::net (offline: no hyper/tokio); one handler
-//! thread per connection from a fixed accept pool, keep-alive supported.
-//! Behind each model name sits a replicated
-//! [`Router`](crate::coordinator::Router); see `docs/SERVING.md` for
-//! the ops guide (routes, knobs, backpressure, metrics).
+//! thread per connection from a fixed accept pool, keep-alive
+//! supported.  Behind each model name the [`ModelRegistry`] publishes
+//! a replicated [`Router`](crate::coordinator::Router) behind a
+//! hot-swap `Arc` handle; see `docs/SERVING.md` for the ops guide
+//! (routes, knobs, backpressure, metrics, lifecycle) and
+//! `docs/ARCHITECTURE.md` for the swap/drain design.
 
 pub mod http;
+pub mod registry;
 pub mod service;
 
-pub use http::{HttpRequest, HttpResponse};
+pub use http::{http_call, HttpRequest, HttpResponse};
+pub use registry::{
+    ModelContract, ModelEntry, ModelRegistry, ModelState, ModelStatus,
+    RegistryConfig, RegistryError,
+};
 pub use service::{serve, ServeOptions, Service};

@@ -1,0 +1,973 @@
+//! Dynamic model registry: the live `name -> Router` set behind a
+//! hot-swap handle, with mount / reload / unmount lifecycle.
+//!
+//! PR 3 gave routers a lossless drain ([`Router::shutdown`] and the
+//! identical `Drop` path) and PR 5 gave every model a typed shape
+//! contract; this module turns the static map `Service` used to own
+//! into a **lifecycle subsystem**:
+//!
+//! ```text
+//!                     mount (off-thread build)
+//!        absent ───────────────────────────────▶ loading
+//!                                                  │ build ok
+//!            ┌──── failed ◀── build error ─────────┤
+//!            │ reload                              ▼
+//!            └────────────▶ loading ──swap──▶   ready ──┐
+//!                            (old router        ▲       │ unmount
+//!                             keeps serving)    └───────┘    │
+//!                                                  draining ─┴─▶ absent
+//! ```
+//!
+//! **Swap discipline.**  The registry publishes each model's pipeline
+//! as an `Arc<Router>`.  `router_for` hands a clone to every request,
+//! so a reload can atomically replace the published handle while
+//! admitted requests keep their generation's router alive; the retired
+//! router is parked on a detached drain thread that waits for the last
+//! clone to drop, at which point `Router`'s `Drop` runs the PR-3 drain
+//! (every accepted request answered, threads joined).  No request is
+//! ever dropped or answered by the wrong generation — the property
+//! `tests/lifecycle.rs` hammers.
+//!
+//! **Generations.**  A global epoch counter stamps every (re)read of a
+//! model's weights from disk.  Lazy resident builds and LRU
+//! evict/rebuild cycles reuse the already-mapped weights, so they do
+//! NOT bump the generation: same weights, same logits, same epoch.
+//!
+//! **Cold models are cheap.**  Mounting with `lazy = true` maps the
+//! BKW file ([`WeightFile::open_mmap`] — address space, not resident
+//! heap) and records the shape contract, deferring Plan compilation
+//! and replica spawn to the first request.  With
+//! [`RegistryConfig::max_resident`] set, the registry LRU-demotes
+//! resident models back to this cold state, so a node can keep far
+//! more mounted models than it has memory for compiled pipelines —
+//! the deployment-density payoff of 1-bit weights.
+//!
+//! Lock order (must never be reversed): `models` map → per-model
+//! `slot` → `lru` list.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::bitops::XnorImpl;
+use crate::coordinator::{
+    Backend, Metrics, NativeBackend, Router, RouterConfig,
+};
+use crate::model::{BnnEngine, EngineKernel, WeightFile};
+
+/// Lifecycle state of one mounted model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelState {
+    /// A build is in flight: initial mount, reload, or a lazy model
+    /// compiling on first request.  During a *reload* the previous
+    /// router keeps serving.
+    Loading,
+    /// Serving (or, for a cold lazy model, ready to build on demand).
+    Ready,
+    /// Unmounted; the old pipeline is draining and the name is gone
+    /// from the map.
+    Draining,
+    /// The (initial or only) build failed; requests get the stored
+    /// error until the model is unmounted or successfully reloaded.
+    Failed,
+}
+
+impl ModelState {
+    /// Wire label used by the admin API (`loading | ready | draining |
+    /// failed`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelState::Loading => "loading",
+            ModelState::Ready => "ready",
+            ModelState::Draining => "draining",
+            ModelState::Failed => "failed",
+        }
+    }
+}
+
+/// How the registry builds pipelines for mounted models.
+#[derive(Debug, Clone, Copy)]
+pub struct RegistryConfig {
+    /// Kernel arm every mounted model compiles against.
+    pub kernel: EngineKernel,
+    /// Max batch per compiled plan.
+    pub max_batch: usize,
+    /// Router sizing (queue, replicas, batch policy) per model.
+    pub router: RouterConfig,
+    /// Upper bound on models with a *resident* (compiled) pipeline;
+    /// beyond it the least-recently-used resident model is demoted to
+    /// cold (weights stay mapped, router drains).  `0` = unlimited.
+    pub max_resident: usize,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self {
+            kernel: EngineKernel::Xnor(XnorImpl::Auto),
+            max_batch: 8,
+            router: RouterConfig::default(),
+            max_resident: 0,
+        }
+    }
+}
+
+/// Typed registry failures; the HTTP layer maps each to a status code.
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    /// Mounting a name that is already mounted (unmount or reload it).
+    #[error("model '{0}' is already mounted")]
+    AlreadyMounted(String),
+    /// The name is not mounted.
+    #[error("unknown model '{0}'")]
+    NotFound(String),
+    /// Reloading a model that was registered without a weight path
+    /// (e.g. a pre-built router handed to [`ModelRegistry::insert_router`]).
+    #[error("model '{0}' has no weight path to reload from")]
+    NotReloadable(String),
+    /// A mount/reload build for this model is already in flight.
+    #[error("model '{0}' is already loading")]
+    ReloadInProgress(String),
+    /// The model's build failed; the stored error explains why.
+    #[error("model '{name}' failed to load: {error}")]
+    Failed {
+        /// The model.
+        name: String,
+        /// The stored build error.
+        error: String,
+    },
+    /// A build did not settle within the wait bound.
+    #[error("timed out waiting for model '{0}' to load")]
+    LoadTimeout(String),
+    /// A model name outside `[A-Za-z0-9._-]+`.
+    #[error("bad model name '{0}' (use letters, digits, '.', '_', '-')")]
+    BadName(String),
+}
+
+/// The shape contract a mounted model serves (known from the weight
+/// file even before a pipeline is built).
+#[derive(Debug, Clone)]
+pub struct ModelContract {
+    /// Per-image input shape (C, H, W).
+    pub input_shape: (usize, usize, usize),
+    /// Number of output classes.
+    pub classes: usize,
+    /// Class-label table, when the weight file carries one.
+    pub labels: Option<Vec<String>>,
+    /// Backend label (e.g. `native/xnor/auto`).
+    pub backend: String,
+}
+
+impl ModelContract {
+    /// Bytes one raw image body must carry (`C * H * W`).
+    pub fn image_bytes(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+}
+
+/// A point-in-time view of one mounted model, for `GET /models`.
+#[derive(Debug, Clone)]
+pub struct ModelStatus {
+    /// Mount name.
+    pub name: String,
+    /// Lifecycle state.
+    pub state: ModelState,
+    /// The most recent build error, if any (a `failed` model's cause,
+    /// or — state `ready` — a reload that failed and was rolled back).
+    pub error: Option<String>,
+    /// Weight generation: bumped each time the weights are (re)read
+    /// from disk, 0 while the first load is still in flight.
+    pub generation: u64,
+    /// Whether a compiled pipeline is live (false: cold/lazy model).
+    pub resident: bool,
+    /// Whether the model has a weight path to reload from.
+    pub reloadable: bool,
+    /// The shape contract, once known.
+    pub contract: Option<ModelContract>,
+}
+
+/// Mutable lifecycle state of one model (behind [`ModelEntry::slot`]).
+struct Slot {
+    state: ModelState,
+    error: Option<String>,
+    router: Option<Arc<Router>>,
+    weights: Option<Arc<WeightFile>>,
+    generation: u64,
+    contract: Option<ModelContract>,
+}
+
+/// One mounted model: immutable identity plus the locked [`Slot`].
+pub struct ModelEntry {
+    name: String,
+    path: Option<PathBuf>,
+    slot: Mutex<Slot>,
+    cond: Condvar,
+}
+
+impl ModelEntry {
+    /// The mount name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn status_of(&self, slot: &Slot) -> ModelStatus {
+        ModelStatus {
+            name: self.name.clone(),
+            state: slot.state,
+            error: slot.error.clone(),
+            generation: slot.generation,
+            resident: slot.router.is_some(),
+            reloadable: self.path.is_some(),
+            contract: slot.contract.clone(),
+        }
+    }
+
+    /// Current lifecycle snapshot.
+    pub fn status(&self) -> ModelStatus {
+        self.status_of(&self.slot.lock().unwrap())
+    }
+
+    /// Block until the in-flight build (if any) settles — state leaves
+    /// `loading` — or `timeout` passes; returns the snapshot either
+    /// way.  After a *reload*, a settled state of `ready` with
+    /// `error = Some(..)` means the reload failed and the previous
+    /// generation kept serving.
+    pub fn wait_settled(&self, timeout: Duration) -> ModelStatus {
+        let guard = self.slot.lock().unwrap();
+        let (slot, _timed_out) = self
+            .cond
+            .wait_timeout_while(guard, timeout, |s| {
+                s.state == ModelState::Loading
+            })
+            .unwrap();
+        self.status_of(&slot)
+    }
+}
+
+/// The live model set: mount, reload, unmount, resolve — see the
+/// module docs for the lifecycle and locking discipline.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Global weight-read epoch (generation source).
+    epoch: AtomicU64,
+    /// Resident-model recency, least-recent first.
+    lru: Mutex<Vec<String>>,
+}
+
+/// How long [`ModelRegistry::router_for`] waits for an in-flight build
+/// before giving up with [`RegistryError::LoadTimeout`].
+const BUILD_WAIT: Duration = Duration::from_secs(30);
+
+impl ModelRegistry {
+    /// An empty registry serving no models.
+    pub fn new(cfg: RegistryConfig) -> Arc<Self> {
+        Arc::new(Self {
+            cfg,
+            models: RwLock::new(BTreeMap::new()),
+            epoch: AtomicU64::new(0),
+            lru: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The build configuration.
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    fn next_generation(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn validate_name(name: &str) -> Result<(), RegistryError> {
+        let ok = !name.is_empty()
+            && name.len() <= 128
+            && name.chars().all(|c| {
+                c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')
+            });
+        if ok {
+            Ok(())
+        } else {
+            Err(RegistryError::BadName(name.to_string()))
+        }
+    }
+
+    /// Register a pre-built router under `name` (immediately `ready`).
+    /// Such models have no weight path, so they cannot be reloaded —
+    /// this is the bridge for the legacy `serve --backend` path and
+    /// for tests that build routers by hand.
+    pub fn insert_router(&self, name: &str, router: Router)
+                         -> Result<(), RegistryError> {
+        Self::validate_name(name)?;
+        let mut models = self.models.write().unwrap();
+        if models.contains_key(name) {
+            return Err(RegistryError::AlreadyMounted(name.to_string()));
+        }
+        let contract = ModelContract {
+            input_shape: router.input_shape(),
+            classes: router.classes(),
+            labels: router.labels().map(<[String]>::to_vec),
+            backend: router.backend_name().to_string(),
+        };
+        models.insert(
+            name.to_string(),
+            Arc::new(ModelEntry {
+                name: name.to_string(),
+                path: None,
+                slot: Mutex::new(Slot {
+                    state: ModelState::Ready,
+                    error: None,
+                    router: Some(Arc::new(router)),
+                    weights: None,
+                    generation: self.next_generation(),
+                    contract: Some(contract),
+                }),
+                cond: Condvar::new(),
+            }),
+        );
+        drop(models);
+        self.touch_lru(name);
+        Ok(())
+    }
+
+    /// Mount `name` from a BKW file at `path`.  Registers the entry as
+    /// `loading` and returns immediately; the weight read (and, unless
+    /// `lazy`, the Plan build and replica spawn) happens on a detached
+    /// builder thread so in-flight traffic never blocks.  Callers that
+    /// want synchronous semantics follow with
+    /// [`ModelEntry::wait_settled`].
+    pub fn mount(
+        self: &Arc<Self>,
+        name: &str,
+        path: impl Into<PathBuf>,
+        lazy: bool,
+    ) -> Result<Arc<ModelEntry>, RegistryError> {
+        Self::validate_name(name)?;
+        let path = path.into();
+        let entry = {
+            let mut models = self.models.write().unwrap();
+            if models.contains_key(name) {
+                return Err(RegistryError::AlreadyMounted(
+                    name.to_string(),
+                ));
+            }
+            let entry = Arc::new(ModelEntry {
+                name: name.to_string(),
+                path: Some(path.clone()),
+                slot: Mutex::new(Slot {
+                    state: ModelState::Loading,
+                    error: None,
+                    router: None,
+                    weights: None,
+                    generation: 0,
+                    contract: None,
+                }),
+                cond: Condvar::new(),
+            });
+            models.insert(name.to_string(), Arc::clone(&entry));
+            entry
+        };
+        let reg = Arc::clone(self);
+        let e = Arc::clone(&entry);
+        spawn_named(&format!("bk-mount-{name}"), move || {
+            reg.run_initial_build(&e, &path, lazy);
+        });
+        Ok(entry)
+    }
+
+    /// The builder body behind [`ModelRegistry::mount`].
+    fn run_initial_build(
+        self: &Arc<Self>,
+        entry: &Arc<ModelEntry>,
+        path: &std::path::Path,
+        lazy: bool,
+    ) {
+        let built = if lazy {
+            // Cold mount: map the weights and read the contract off
+            // them; no Plan, no replicas, until the first request.
+            WeightFile::open_mmap(path).and_then(|wf| {
+                let spec = wf.net_spec()?;
+                let contract = ModelContract {
+                    input_shape: spec.input(),
+                    classes: spec.classes(),
+                    labels: wf.labels().map(<[String]>::to_vec),
+                    backend: format!("native/{}", self.cfg.kernel.name()),
+                };
+                Ok((None, Arc::new(wf), contract))
+            })
+        } else {
+            self.build_pipeline(path, None)
+                .map(|(r, wf, c)| (Some(r), wf, c))
+        };
+        let mut slot = entry.slot.lock().unwrap();
+        match built {
+            Ok((router, weights, contract)) => {
+                let resident = router.is_some();
+                slot.router = router;
+                slot.weights = Some(weights);
+                slot.contract = Some(contract);
+                slot.generation = self.next_generation();
+                slot.state = ModelState::Ready;
+                slot.error = None;
+                entry.cond.notify_all();
+                drop(slot);
+                if resident {
+                    self.touch_lru(&entry.name);
+                    self.evict_lru(&entry.name);
+                }
+            }
+            Err(e) => {
+                slot.state = ModelState::Failed;
+                slot.error = Some(format!("{e:#}"));
+                entry.cond.notify_all();
+            }
+        }
+    }
+
+    /// Reload `name` from its weight path: build the new generation
+    /// off-thread while the current router keeps serving, then
+    /// atomically swap and retire the old pipeline (drained by its
+    /// last `Arc` reference — zero dropped requests).  On a failed
+    /// build the previous generation keeps serving and the error is
+    /// stored on the entry.  Returns the entry for
+    /// [`ModelEntry::wait_settled`].
+    pub fn reload(
+        self: &Arc<Self>,
+        name: &str,
+    ) -> Result<Arc<ModelEntry>, RegistryError> {
+        let entry = self.entry(name)?;
+        let Some(path) = entry.path.clone() else {
+            return Err(RegistryError::NotReloadable(name.to_string()));
+        };
+        {
+            let mut slot = entry.slot.lock().unwrap();
+            if slot.state == ModelState::Loading {
+                return Err(RegistryError::ReloadInProgress(
+                    name.to_string(),
+                ));
+            }
+            if slot.state == ModelState::Draining {
+                return Err(RegistryError::NotFound(name.to_string()));
+            }
+            slot.state = ModelState::Loading;
+            slot.error = None;
+        }
+        let reg = Arc::clone(self);
+        let e = Arc::clone(&entry);
+        spawn_named(&format!("bk-reload-{name}"), move || {
+            // Always re-read from disk: a reload IS a new generation.
+            let built = reg.build_pipeline(&path, None);
+            let mut slot = e.slot.lock().unwrap();
+            match built {
+                Ok((router, weights, contract)) => {
+                    let old = slot.router.replace(router);
+                    slot.weights = Some(weights);
+                    slot.contract = Some(contract);
+                    slot.generation = reg.next_generation();
+                    slot.state = ModelState::Ready;
+                    e.cond.notify_all();
+                    drop(slot);
+                    if let Some(old) = old {
+                        retire(old);
+                    }
+                    reg.touch_lru(&e.name);
+                    reg.evict_lru(&e.name);
+                }
+                Err(err) => {
+                    // Roll back: the old generation (if any) keeps
+                    // serving; only a model with no live router is
+                    // `failed`.
+                    slot.state = if slot.router.is_some() {
+                        ModelState::Ready
+                    } else {
+                        ModelState::Failed
+                    };
+                    slot.error = Some(format!("{err:#}"));
+                    e.cond.notify_all();
+                }
+            }
+        });
+        Ok(entry)
+    }
+
+    /// Unmount `name`: remove it from the map (new lookups 404
+    /// immediately), mark it `draining`, and retire its pipeline.
+    /// Requests already holding the router finish normally.
+    pub fn unmount(&self, name: &str) -> Result<(), RegistryError> {
+        let entry = {
+            let mut models = self.models.write().unwrap();
+            models
+                .remove(name)
+                .ok_or_else(|| RegistryError::NotFound(name.to_string()))?
+        };
+        let old = {
+            let mut slot = entry.slot.lock().unwrap();
+            slot.state = ModelState::Draining;
+            slot.weights = None;
+            entry.cond.notify_all();
+            slot.router.take()
+        };
+        if let Some(old) = old {
+            retire(old);
+        }
+        self.lru.lock().unwrap().retain(|n| n != name);
+        Ok(())
+    }
+
+    /// Resolve `name` to its live pipeline and weight generation,
+    /// building a cold (lazy or LRU-demoted) model's pipeline on the
+    /// spot.  Blocks up to [`BUILD_WAIT`] behind an in-flight initial
+    /// build; a reload never blocks resolution, because the old router
+    /// stays published until the swap.
+    pub fn router_for(
+        self: &Arc<Self>,
+        name: &str,
+    ) -> Result<(Arc<Router>, u64), RegistryError> {
+        let entry = self.entry(name)?;
+        let mut slot = entry.slot.lock().unwrap();
+        loop {
+            // A live router serves regardless of a concurrent reload.
+            if let Some(router) = &slot.router {
+                let out = (Arc::clone(router), slot.generation);
+                drop(slot);
+                self.touch_lru(name);
+                return Ok(out);
+            }
+            match slot.state {
+                ModelState::Draining => {
+                    return Err(RegistryError::NotFound(name.to_string()))
+                }
+                ModelState::Failed => {
+                    return Err(RegistryError::Failed {
+                        name: name.to_string(),
+                        error: slot
+                            .error
+                            .clone()
+                            .unwrap_or_else(|| "unknown error".into()),
+                    })
+                }
+                ModelState::Loading => {
+                    let (guard, res) = entry
+                        .cond
+                        .wait_timeout(slot, BUILD_WAIT)
+                        .unwrap();
+                    slot = guard;
+                    if res.timed_out() && slot.router.is_none() {
+                        return Err(RegistryError::LoadTimeout(
+                            name.to_string(),
+                        ));
+                    }
+                }
+                ModelState::Ready => {
+                    // Cold model: build the pipeline here, under a
+                    // `loading` guard so concurrent requests wait on
+                    // the condvar instead of duplicating the build.
+                    let Some(weights) = slot.weights.clone() else {
+                        return Err(RegistryError::Failed {
+                            name: name.to_string(),
+                            error: "no pipeline and no weights".into(),
+                        });
+                    };
+                    slot.state = ModelState::Loading;
+                    drop(slot);
+                    // Same weights, same logits: the generation does
+                    // NOT change on a resident (re)build.
+                    let built =
+                        self.build_pipeline(std::path::Path::new(""),
+                                            Some(weights));
+                    slot = entry.slot.lock().unwrap();
+                    match built {
+                        Ok((router, weights, contract)) => {
+                            slot.router = Some(router);
+                            slot.weights = Some(weights);
+                            slot.contract = Some(contract);
+                            slot.state = ModelState::Ready;
+                            entry.cond.notify_all();
+                            drop(slot);
+                            self.evict_lru(name);
+                            slot = entry.slot.lock().unwrap();
+                        }
+                        Err(e) => {
+                            slot.state = ModelState::Failed;
+                            slot.error = Some(format!("{e:#}"));
+                            entry.cond.notify_all();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Snapshot every mounted model, sorted by name.
+    pub fn list(&self) -> Vec<ModelStatus> {
+        self.models
+            .read()
+            .unwrap()
+            .values()
+            .map(|e| e.status())
+            .collect()
+    }
+
+    /// The status of one model.
+    pub fn status(&self, name: &str)
+                  -> Result<ModelStatus, RegistryError> {
+        Ok(self.entry(name)?.status())
+    }
+
+    /// Number of mounted models.
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    /// Whether no models are mounted.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Prometheus exposition for the whole registry: the
+    /// `bitkernel_models_mounted` gauge, a per-model
+    /// `bitkernel_mount_epoch` counter, and every *live* router's
+    /// series labelled `model="<name>"`.  Series for unmounted models
+    /// vanish with their entries — metrics GC by construction, no
+    /// stale labels.
+    pub fn render_prometheus(&self) -> String {
+        let models = self.models.read().unwrap();
+        let mut out = Metrics::render_series(
+            "bitkernel_models_mounted",
+            "",
+            models.len() as u64,
+        );
+        for (name, entry) in models.iter() {
+            let label = format!("model=\"{name}\"");
+            let (generation, router) = {
+                let slot = entry.slot.lock().unwrap();
+                (slot.generation, slot.router.clone())
+            };
+            out.push_str(&Metrics::render_series(
+                "bitkernel_mount_epoch",
+                &label,
+                generation,
+            ));
+            if let Some(router) = router {
+                out.push_str(
+                    &router.metrics().render_prometheus_labeled(&label),
+                );
+            }
+        }
+        out
+    }
+
+    fn entry(&self, name: &str) -> Result<Arc<ModelEntry>, RegistryError> {
+        self.models
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RegistryError::NotFound(name.to_string()))
+    }
+
+    /// Move `name` to the most-recent end of the LRU list.
+    fn touch_lru(&self, name: &str) {
+        let mut lru = self.lru.lock().unwrap();
+        lru.retain(|n| n != name);
+        lru.push(name.to_string());
+    }
+
+    /// Demote least-recently-used resident models to cold until the
+    /// resident count fits [`RegistryConfig::max_resident`], never
+    /// touching `keep` (the model just built).  Demotion drops the
+    /// compiled pipeline (retired through the usual drain) but keeps
+    /// the mapped weights and contract: the model stays `ready` and
+    /// rebuilds on its next request at the SAME generation.
+    fn evict_lru(&self, keep: &str) {
+        if self.cfg.max_resident == 0 {
+            return;
+        }
+        loop {
+            let entries: Vec<Arc<ModelEntry>> = {
+                let models = self.models.read().unwrap();
+                models.values().cloned().collect()
+            };
+            let resident = entries
+                .iter()
+                .filter(|e| e.slot.lock().unwrap().router.is_some())
+                .count();
+            if resident <= self.cfg.max_resident {
+                return;
+            }
+            let order = self.lru.lock().unwrap().clone();
+            let victim = order.iter().find_map(|name| {
+                if name == keep {
+                    return None;
+                }
+                let entry = entries.iter().find(|e| &e.name == name)?;
+                let slot = entry.slot.lock().unwrap();
+                (slot.state == ModelState::Ready
+                    && slot.router.is_some()
+                    && slot.weights.is_some())
+                .then(|| Arc::clone(entry))
+            });
+            let Some(entry) = victim else { return };
+            let old = {
+                let mut slot = entry.slot.lock().unwrap();
+                // Re-check under the lock: a racing request may have
+                // touched it, but demotion stays correct either way
+                // (the model rebuilds on demand).
+                if slot.state != ModelState::Ready {
+                    continue;
+                }
+                slot.router.take()
+            };
+            self.lru.lock().unwrap().retain(|n| n != entry.name());
+            if let Some(old) = old {
+                retire(old);
+            }
+        }
+    }
+
+    /// Read weights (unless already mapped), compile a Plan, and spin
+    /// up a replica pool — the one build path mount, reload, and lazy
+    /// resolution all share.
+    fn build_pipeline(
+        &self,
+        path: &std::path::Path,
+        weights: Option<Arc<WeightFile>>,
+    ) -> anyhow::Result<(Arc<Router>, Arc<WeightFile>, ModelContract)> {
+        let weights = match weights {
+            Some(w) => w,
+            None => Arc::new(WeightFile::open_mmap(path)?),
+        };
+        let engine = BnnEngine::from_weight_file(&weights)?;
+        let plan = engine.plan(self.cfg.kernel, self.cfg.max_batch)?;
+        let router = Router::start(
+            move |_replica| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
+            },
+            self.cfg.router,
+        )?;
+        let contract = ModelContract {
+            input_shape: router.input_shape(),
+            classes: router.classes(),
+            labels: router.labels().map(<[String]>::to_vec),
+            backend: router.backend_name().to_string(),
+        };
+        Ok((Arc::new(router), weights, contract))
+    }
+}
+
+/// Park a retired router on a detached drain thread: wait until every
+/// in-flight request has dropped its clone, then drop the last
+/// reference so `Router`'s `Drop` runs the lossless PR-3 drain.
+/// Handler threads never pay the join.
+fn retire(router: Arc<Router>) {
+    spawn_named("bk-drain", move || {
+        while Arc::strong_count(&router) > 1 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        drop(router);
+    });
+}
+
+/// Detached `thread::Builder::spawn` with a name.  A refused spawn
+/// (thread exhaustion) is swallowed: a lost builder settles through
+/// `router_for`'s load timeout, and a lost drain thread merely delays
+/// a retired router's join — neither can drop an accepted request.
+fn spawn_named(name: &str, f: impl FnOnce() + Send + 'static) {
+    let _ = std::thread::Builder::new().name(name.to_string()).spawn(f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, MockBackend};
+    use crate::testing::synthetic_weight_file;
+    use crate::model::NetSpec;
+
+    fn test_cfg() -> RegistryConfig {
+        RegistryConfig {
+            max_batch: 4,
+            router: RouterConfig {
+                queue_cap: 32,
+                replicas: 1,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+            ..RegistryConfig::default()
+        }
+    }
+
+    fn write_model(dir: &std::path::Path, file: &str, seed: u64)
+                   -> std::path::PathBuf {
+        let spec = NetSpec::builder((1, 4, 4))
+            .conv(2, 3)
+            .linear(3)
+            .build()
+            .unwrap();
+        let wf = synthetic_weight_file(&spec, seed);
+        let path = dir.join(file);
+        wf.save(&path).unwrap();
+        path
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bk-reg-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn mount_resolve_reload_unmount() {
+        let dir = temp_dir("cycle");
+        let path = write_model(&dir, "m.bkw", 3);
+        let reg = ModelRegistry::new(test_cfg());
+
+        let entry = reg.mount("m", &path, false).unwrap();
+        let st = entry.wait_settled(Duration::from_secs(30));
+        assert_eq!(st.state, ModelState::Ready, "{:?}", st.error);
+        assert!(st.resident);
+        assert!(st.reloadable);
+        let gen1 = st.generation;
+        assert!(gen1 > 0);
+
+        let (router, gen) = reg.router_for("m").unwrap();
+        assert_eq!(gen, gen1);
+        let reply =
+            router.submit_wait(vec![0.5; router.image_elems()]).unwrap();
+        assert_eq!(reply.logits.len(), 3);
+        drop(router);
+
+        let entry = reg.reload("m").unwrap();
+        let st = entry.wait_settled(Duration::from_secs(30));
+        assert_eq!(st.state, ModelState::Ready, "{:?}", st.error);
+        assert!(st.error.is_none());
+        assert!(st.generation > gen1);
+
+        reg.unmount("m").unwrap();
+        assert!(matches!(reg.router_for("m"),
+                         Err(RegistryError::NotFound(_))));
+        assert!(reg.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lazy_mount_builds_on_first_request_same_generation() {
+        let dir = temp_dir("lazy");
+        let path = write_model(&dir, "m.bkw", 5);
+        let reg = ModelRegistry::new(test_cfg());
+        let entry = reg.mount("m", &path, true).unwrap();
+        let st = entry.wait_settled(Duration::from_secs(30));
+        assert_eq!(st.state, ModelState::Ready, "{:?}", st.error);
+        assert!(!st.resident, "lazy mount must stay cold");
+        let contract = st.contract.expect("contract known while cold");
+        assert_eq!(contract.input_shape, (1, 4, 4));
+        assert_eq!(contract.classes, 3);
+
+        let (router, gen) = reg.router_for("m").unwrap();
+        assert_eq!(gen, st.generation,
+                   "resident build must not bump the generation");
+        assert_eq!(router.image_elems(), 16);
+        assert!(reg.status("m").unwrap().resident);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_mount_reports_error_and_404s_nothing() {
+        let reg = ModelRegistry::new(test_cfg());
+        let entry = reg.mount("bad", "/no/such/file.bkw", false).unwrap();
+        let st = entry.wait_settled(Duration::from_secs(30));
+        assert_eq!(st.state, ModelState::Failed);
+        assert!(st.error.is_some());
+        assert!(matches!(reg.router_for("bad"),
+                         Err(RegistryError::Failed { .. })));
+        // A failed model is still mounted (visible, unmountable).
+        assert_eq!(reg.len(), 1);
+        reg.unmount("bad").unwrap();
+    }
+
+    #[test]
+    fn duplicate_names_and_bad_names_are_typed_errors() {
+        let reg = ModelRegistry::new(test_cfg());
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
+            test_cfg().router,
+        )
+        .unwrap();
+        reg.insert_router("m", router).unwrap();
+        assert!(matches!(reg.mount("m", "/x.bkw", false),
+                         Err(RegistryError::AlreadyMounted(_))));
+        assert!(matches!(reg.mount("bad name!", "/x.bkw", false),
+                         Err(RegistryError::BadName(_))));
+        assert!(matches!(reg.reload("m"),
+                         Err(RegistryError::NotReloadable(_))));
+        assert!(matches!(reg.unmount("ghost"),
+                         Err(RegistryError::NotFound(_))));
+    }
+
+    #[test]
+    fn lru_demotes_but_keeps_models_servable() {
+        let dir = temp_dir("lru");
+        let pa = write_model(&dir, "a.bkw", 7);
+        let pb = write_model(&dir, "b.bkw", 8);
+        let mut cfg = test_cfg();
+        cfg.max_resident = 1;
+        let reg = ModelRegistry::new(cfg);
+        for (n, p) in [("a", &pa), ("b", &pb)] {
+            let e = reg.mount(n, p, false).unwrap();
+            assert_eq!(e.wait_settled(Duration::from_secs(30)).state,
+                       ModelState::Ready);
+        }
+        // Mounting b evicts a (the only other resident model); the
+        // eviction runs on b's builder thread just after the ready
+        // notify, so poll briefly.
+        let settle = std::time::Instant::now();
+        while reg.status("a").unwrap().resident
+            && settle.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!reg.status("a").unwrap().resident);
+        assert!(reg.status("b").unwrap().resident);
+        // a still serves — it rebuilds on demand at the same generation.
+        let gen_a = reg.status("a").unwrap().generation;
+        let (router, gen) = reg.router_for("a").unwrap();
+        assert_eq!(gen, gen_a);
+        let reply =
+            router.submit_wait(vec![0.1; router.image_elems()]).unwrap();
+        assert_eq!(reply.logits.len(), 3);
+        drop(router);
+        // ... and now b is the demoted one.
+        let settle = std::time::Instant::now();
+        while reg.status("b").unwrap().resident
+            && settle.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!reg.status("b").unwrap().resident);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prometheus_series_vanish_on_unmount() {
+        let reg = ModelRegistry::new(test_cfg());
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
+            test_cfg().router,
+        )
+        .unwrap();
+        reg.insert_router("gone-soon", router).unwrap();
+        let text = reg.render_prometheus();
+        assert!(text.contains("bitkernel_models_mounted 1"), "{text}");
+        assert!(text.contains("model=\"gone-soon\""), "{text}");
+        reg.unmount("gone-soon").unwrap();
+        let text = reg.render_prometheus();
+        assert!(text.contains("bitkernel_models_mounted 0"), "{text}");
+        assert!(!text.contains("gone-soon"),
+                "stale series must be GC'd: {text}");
+    }
+}

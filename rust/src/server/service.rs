@@ -1,19 +1,40 @@
-//! The serving service: model-name -> Router dispatch + HTTP plumbing.
+//! The serving service: registry-backed model dispatch + HTTP plumbing.
 //!
 //! Fully shape-generic: every route derives its request/reply schema
-//! from the target router's captured shape contract
+//! from the target model's captured shape contract
 //! ([`Router::input_shape`] / [`Router::classes`] /
 //! [`Router::labels`]), so one endpoint serves heterogeneous models —
 //! each model's classify body is `C*H*W` bytes (or a same-length JSON
 //! pixel array), and replies carry the model's own label table when
 //! the weight file embeds one (numeric labels otherwise).  No image
 //! geometry is hardwired anywhere in this module.
+//!
+//! The model set is **dynamic**: it lives in a
+//! [`ModelRegistry`](super::registry::ModelRegistry) rather than a
+//! frozen map, and (when the service is started with the admin API
+//! enabled) can be edited over HTTP while `/classify` traffic is in
+//! flight:
+//!
+//! ```text
+//!     POST   /models             mount  {"name","path","lazy"?}
+//!     PUT    /models/{name}      reload from the mounted path
+//!     DELETE /models/{name}      unmount (drain, then retire)
+//!     GET    /models/{name}      lifecycle state + shape contract
+//!     GET    /models             all of the above, for every model
+//! ```
+//!
+//! Mutating verbs answer `202 Accepted` immediately (the build runs
+//! off-thread); append `?wait=1` for synchronous semantics (`201`/`200`
+//! once ready, `500` carrying the build error on failure).  Without
+//! `--admin` the mutating verbs are `403` and the registry is
+//! effectively frozen — the pre-PR-6 behavior.
 
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -23,31 +44,64 @@ use crate::utils::json::Json;
 use crate::{log_error, log_info};
 
 use super::http::{HttpRequest, HttpResponse};
+use super::registry::{
+    ModelRegistry, ModelState, ModelStatus, RegistryConfig, RegistryError,
+};
 
-/// A named collection of routers behind one HTTP endpoint.  The
-/// routers may speak entirely different shapes: dispatch is by model
-/// name, and each request is decoded against its target's contract.
+/// How long `?wait=1` admin calls block for a build to settle.
+const ADMIN_WAIT: Duration = Duration::from_secs(60);
+
+/// The HTTP front end over a dynamic [`ModelRegistry`].  Dispatch is
+/// by model name; each request is decoded against its target's
+/// contract.
 pub struct Service {
-    routers: BTreeMap<String, Router>,
-    default_model: String,
+    registry: Arc<ModelRegistry>,
+    default_model: Option<String>,
+    admin: bool,
 }
 
 impl Service {
-    /// Build a service over named routers; `default_model` answers
-    /// `/classify` requests that carry no `?model=` parameter.
+    /// Build a service over pre-built named routers; `default_model`
+    /// answers `/classify` requests that carry no `?model=` parameter.
+    /// The model set is frozen (admin API disabled) — the bridge for
+    /// callers predating the registry.
     pub fn new(routers: BTreeMap<String, Router>, default_model: &str) -> Self {
-        assert!(routers.contains_key(default_model), "unknown default model");
-        Self { routers, default_model: default_model.to_string() }
+        assert!(
+            routers.contains_key(default_model),
+            "unknown default model"
+        );
+        let registry = ModelRegistry::new(RegistryConfig::default());
+        for (name, router) in routers {
+            registry
+                .insert_router(&name, router)
+                .expect("fresh registry cannot hold duplicates");
+        }
+        Self {
+            registry,
+            default_model: Some(default_model.to_string()),
+            admin: false,
+        }
     }
 
-    /// Names of every served model.
+    /// Build a service over a live registry.  `default_model` (if any)
+    /// answers `/classify` requests with no `?model=`; `admin` enables
+    /// the mutating admin verbs.
+    pub fn with_registry(
+        registry: Arc<ModelRegistry>,
+        default_model: Option<String>,
+        admin: bool,
+    ) -> Self {
+        Self { registry, default_model, admin }
+    }
+
+    /// The registry behind this service.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Names of every mounted model.
     pub fn models(&self) -> Vec<String> {
-        self.routers.keys().cloned().collect()
-    }
-
-    /// The router serving `name`, if any.
-    pub fn router(&self, name: &str) -> Option<&Router> {
-        self.routers.get(name)
+        self.registry.list().into_iter().map(|s| s.name).collect()
     }
 
     /// Dispatch one parsed request.  Takes the request by value: the
@@ -60,27 +114,25 @@ impl Service {
         if req.method == "POST" && req.path == "/classify" {
             return self.classify(req);
         }
+        if req.method == "POST" && req.path == "/models" {
+            return self.admin_mount(&req);
+        }
+        if let Some(name) = req.path.strip_prefix("/models/") {
+            return self.model_route(&req, name);
+        }
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
             ("GET", "/models") => {
-                let names: Vec<Json> = self
-                    .routers
+                let entries: Vec<Json> = self
+                    .registry
+                    .list()
                     .iter()
-                    .map(|(name, r)| model_descriptor(name, r))
+                    .map(status_descriptor)
                     .collect();
-                HttpResponse::json(200, Json::Arr(names).to_string())
+                HttpResponse::json(200, Json::Arr(entries).to_string())
             }
             ("GET", "/metrics") => {
-                let mut out = String::new();
-                for (name, r) in &self.routers {
-                    // Label merging happens in the renderer so
-                    // per-replica lines (which already carry a
-                    // `replica` label) stay well-formed.
-                    out.push_str(&r.metrics().render_prometheus_labeled(
-                        &format!("model=\"{name}\""),
-                    ));
-                }
-                HttpResponse::text(200, out)
+                HttpResponse::text(200, self.registry.render_prometheus())
             }
             ("GET", _) | ("POST", _) => {
                 HttpResponse::text(404, "not found\n")
@@ -89,27 +141,158 @@ impl Service {
         }
     }
 
-    fn classify(&self, req: HttpRequest) -> HttpResponse {
-        let model = req
-            .query
-            .get("model")
-            .cloned()
-            .unwrap_or_else(|| self.default_model.clone());
-        let Some(router) = self.routers.get(&model) else {
+    /// `POST /models`: mount a model from a JSON body
+    /// `{"name": ..., "path": ..., "lazy": bool?}`.
+    fn admin_mount(&self, req: &HttpRequest) -> HttpResponse {
+        if let Some(denied) = self.admin_gate() {
+            return denied;
+        }
+        let parsed = (|| -> Result<(String, String, bool)> {
+            let text =
+                std::str::from_utf8(&req.body).context("body utf-8")?;
+            let v = Json::parse(text).context("body json")?;
+            let name = v
+                .get("name")
+                .and_then(Json::as_str)
+                .context("missing 'name'")?
+                .to_string();
+            let path = v
+                .get("path")
+                .and_then(Json::as_str)
+                .context("missing 'path'")?
+                .to_string();
+            let lazy = v
+                .get("lazy")
+                .and_then(Json::as_bool)
+                .unwrap_or(false);
+            Ok((name, path, lazy))
+        })();
+        let (name, path, lazy) = match parsed {
+            Ok(p) => p,
+            Err(e) => return err_json(400, &format!("{e:#}")),
+        };
+        let entry = match self.registry.mount(&name, path, lazy) {
+            Ok(e) => e,
+            Err(e) => return registry_err(&e),
+        };
+        if !wants_wait(req) {
             return HttpResponse::json(
-                404,
-                format!("{{\"error\":\"unknown model '{model}'\"}}"),
+                202,
+                status_descriptor(&entry.status()).to_string(),
             );
+        }
+        let st = entry.wait_settled(ADMIN_WAIT);
+        match st.state {
+            ModelState::Failed => err_json(
+                500,
+                st.error.as_deref().unwrap_or("build failed"),
+            ),
+            ModelState::Loading => HttpResponse::json(
+                202,
+                status_descriptor(&st).to_string(),
+            ),
+            _ => HttpResponse::json(
+                201,
+                status_descriptor(&st).to_string(),
+            ),
+        }
+    }
+
+    /// `GET | PUT | DELETE /models/{name}`.
+    fn model_route(&self, req: &HttpRequest, name: &str) -> HttpResponse {
+        match req.method.as_str() {
+            "GET" => match self.registry.status(name) {
+                Ok(st) => HttpResponse::json(
+                    200,
+                    status_descriptor(&st).to_string(),
+                ),
+                Err(e) => registry_err(&e),
+            },
+            "PUT" => {
+                if let Some(denied) = self.admin_gate() {
+                    return denied;
+                }
+                let entry = match self.registry.reload(name) {
+                    Ok(e) => e,
+                    Err(e) => return registry_err(&e),
+                };
+                if !wants_wait(req) {
+                    return HttpResponse::json(
+                        202,
+                        status_descriptor(&entry.status()).to_string(),
+                    );
+                }
+                let st = entry.wait_settled(ADMIN_WAIT);
+                // A reload that failed rolls back to `ready` on the old
+                // generation with the error recorded — surface it.
+                if let Some(error) = &st.error {
+                    return err_json(500, error);
+                }
+                if st.state == ModelState::Loading {
+                    return HttpResponse::json(
+                        202,
+                        status_descriptor(&st).to_string(),
+                    );
+                }
+                HttpResponse::json(200, status_descriptor(&st).to_string())
+            }
+            "DELETE" => {
+                if let Some(denied) = self.admin_gate() {
+                    return denied;
+                }
+                match self.registry.unmount(name) {
+                    Ok(()) => HttpResponse::json(
+                        200,
+                        Json::obj(vec![(
+                            "unmounted",
+                            Json::Str(name.to_string()),
+                        )])
+                        .to_string(),
+                    ),
+                    Err(e) => registry_err(&e),
+                }
+            }
+            _ => HttpResponse::text(405, "method not allowed\n"),
+        }
+    }
+
+    /// `None` when admin verbs are allowed, the 403 otherwise.
+    fn admin_gate(&self) -> Option<HttpResponse> {
+        if self.admin {
+            None
+        } else {
+            Some(err_json(
+                403,
+                "admin API disabled (start serve with --admin)",
+            ))
+        }
+    }
+
+    fn classify(&self, req: HttpRequest) -> HttpResponse {
+        let model = match req.query.get("model").cloned() {
+            Some(m) => m,
+            None => match &self.default_model {
+                Some(m) => m.clone(),
+                None => {
+                    return err_json(
+                        404,
+                        "no default model (pass ?model=<name>)",
+                    )
+                }
+            },
+        };
+        // Resolving first pins this request's (router, generation):
+        // a concurrent reload swaps the registry's handle but cannot
+        // invalidate ours — the retired router drains only after the
+        // last in-flight clone drops.
+        let (router, generation) = match self.registry.router_for(&model) {
+            Ok(r) => r,
+            Err(e) => return registry_err(&e),
         };
         let (c, h, w) = router.input_shape();
         let image = match decode_image(req, c, h, w) {
             Ok(i) => i,
-            Err(e) => {
-                return HttpResponse::json(
-                    400,
-                    format!("{{\"error\":\"{e}\"}}"),
-                )
-            }
+            Err(e) => return err_json(400, &format!("{e:#}")),
         };
         match router.submit_wait(image) {
             Ok(reply) => {
@@ -117,6 +300,7 @@ impl Service {
                 let label = router.label_for(reply.class);
                 let body = Json::obj(vec![
                     ("model", Json::Str(model)),
+                    ("generation", Json::Num(generation as f64)),
                     ("class", Json::Num(reply.class as f64)),
                     ("label", Json::Str(label)),
                     ("latency_us", Json::Num(reply.total_us as f64)),
@@ -134,49 +318,90 @@ impl Service {
                 ]);
                 HttpResponse::json(200, body.to_string())
             }
-            Err(SubmitError::QueueFull) => HttpResponse::json(
-                429,
-                "{\"error\":\"queue full\"}".into(),
-            ),
+            Err(SubmitError::QueueFull) => err_json(429, "queue full"),
             // Unreachable (the image was sized from the router's own
             // contract), but kept total: a shape error is the client's
             // fault, never a 500.
             Err(e @ SubmitError::WrongShape { .. }) => {
-                HttpResponse::json(400, format!("{{\"error\":\"{e}\"}}"))
+                err_json(400, &e.to_string())
             }
-            Err(SubmitError::Shutdown) => HttpResponse::json(
-                503,
-                "{\"error\":\"shutting down\"}".into(),
-            ),
+            Err(SubmitError::Shutdown) => err_json(503, "shutting down"),
         }
     }
 }
 
-/// One `/models` entry: the model's full shape contract, so clients
-/// can size request bodies without out-of-band knowledge.
-fn model_descriptor(name: &str, r: &Router) -> Json {
-    let (c, h, w) = r.input_shape();
-    Json::obj(vec![
-        ("name", Json::Str(name.to_string())),
-        ("backend", Json::Str(r.backend_name().to_string())),
+/// `{"error": msg}` with proper JSON escaping.
+fn err_json(status: u16, msg: &str) -> HttpResponse {
+    HttpResponse::json(
+        status,
+        Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string(),
+    )
+}
+
+/// Map a typed registry failure to its HTTP status.
+fn registry_err(e: &RegistryError) -> HttpResponse {
+    let status = match e {
+        RegistryError::NotFound(_) => 404,
+        RegistryError::BadName(_) => 400,
+        RegistryError::AlreadyMounted(_)
+        | RegistryError::NotReloadable(_)
+        | RegistryError::ReloadInProgress(_) => 409,
+        RegistryError::Failed { .. } | RegistryError::LoadTimeout(_) => 503,
+    };
+    err_json(status, &e.to_string())
+}
+
+/// Whether an admin call asked for synchronous (`?wait=1`) semantics.
+fn wants_wait(req: &HttpRequest) -> bool {
+    matches!(
+        req.query.get("wait").map(String::as_str),
+        Some("1") | Some("true")
+    )
+}
+
+/// One `/models` entry: lifecycle state plus (once known) the model's
+/// full shape contract, so clients can size request bodies without
+/// out-of-band knowledge.
+fn status_descriptor(st: &ModelStatus) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(st.name.clone())),
+        ("state", Json::Str(st.state.as_str().to_string())),
+        ("generation", Json::Num(st.generation as f64)),
+        ("resident", Json::Bool(st.resident)),
+        ("reloadable", Json::Bool(st.reloadable)),
         (
+            "error",
+            match &st.error {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        ),
+    ];
+    if let Some(contract) = &st.contract {
+        let (c, h, w) = contract.input_shape;
+        fields.push(("backend", Json::Str(contract.backend.clone())));
+        fields.push((
             "input_shape",
             Json::Arr(
                 [c, h, w].iter().map(|&d| Json::Num(d as f64)).collect(),
             ),
-        ),
-        ("image_bytes", Json::Num((c * h * w) as f64)),
-        ("classes", Json::Num(r.classes() as f64)),
-        (
+        ));
+        fields.push((
+            "image_bytes",
+            Json::Num(contract.image_bytes() as f64),
+        ));
+        fields.push(("classes", Json::Num(contract.classes as f64)));
+        fields.push((
             "labels",
-            match r.labels() {
+            match &contract.labels {
                 Some(l) => Json::Arr(
                     l.iter().map(|s| Json::Str(s.clone())).collect(),
                 ),
                 None => Json::Null,
             },
-        ),
-    ])
+        ));
+    }
+    Json::obj(fields)
 }
 
 /// Decode one classify body into a normalized CHW image for a
@@ -377,6 +602,9 @@ mod tests {
             mock.get("labels").unwrap().as_arr().map(<[Json]>::len),
             Some(10)
         );
+        assert_eq!(mock.get("state").unwrap().as_str(), Some("ready"));
+        assert_eq!(mock.get("resident").unwrap().as_bool(), Some(true));
+        assert_eq!(mock.get("reloadable").unwrap().as_bool(), Some(false));
         let tiny = by_name("tiny");
         assert_eq!(tiny.get("image_bytes").unwrap().as_usize(), Some(16));
         assert_eq!(tiny.get("classes").unwrap().as_usize(), Some(3));
@@ -388,6 +616,9 @@ mod tests {
         let svc = mock_service();
         let resp = svc.handle(get("/metrics"));
         let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("bitkernel_models_mounted 2"), "{body}");
+        assert!(body.contains("bitkernel_mount_epoch{model=\"mock\"}"),
+                "{body}");
         assert!(body.contains("bitkernel_requests_submitted{model=\"mock\"}"),
                 "{body}");
         // Per-replica series carry both labels, well-formed.
@@ -409,6 +640,8 @@ mod tests {
         assert_eq!(v.get("label").unwrap().as_str(),
                    Some(format!("shape-{class}").as_str()));
         assert_eq!(v.get("model").unwrap().as_str(), Some("mock"));
+        // Every classify reply names the generation that answered it.
+        assert!(v.get("generation").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]
@@ -462,5 +695,56 @@ mod tests {
     fn unknown_path_404() {
         let svc = mock_service();
         assert_eq!(svc.handle(get("/nope")).status, 404);
+    }
+
+    #[test]
+    fn admin_verbs_are_403_when_disabled_get_allowed() {
+        // Service::new freezes the model set: GETs work, mutations 403.
+        let svc = mock_service();
+        let resp = svc.handle(get("/models/mock"));
+        assert_eq!(resp.status, 200);
+        let v = Json::parse(&String::from_utf8(resp.body).unwrap())
+            .unwrap();
+        assert_eq!(v.get("state").unwrap().as_str(), Some("ready"));
+
+        let mut req = get("/models/mock");
+        req.method = "PUT".into();
+        assert_eq!(svc.handle(req).status, 403);
+        let mut req = get("/models/mock");
+        req.method = "DELETE".into();
+        assert_eq!(svc.handle(req).status, 403);
+        let mut req = get("/models");
+        req.method = "POST".into();
+        req.body = b"{\"name\":\"x\",\"path\":\"/x.bkw\"}".to_vec();
+        assert_eq!(svc.handle(req).status, 403);
+        // The frozen set still serves.
+        assert_eq!(svc.handle(post(Some("mock"),
+                                   vec![1u8; 3 * 32 * 32])).status, 200);
+    }
+
+    #[test]
+    fn no_default_model_is_a_404_with_hint() {
+        let svc = Service::with_registry(
+            ModelRegistry::new(RegistryConfig::default()),
+            None,
+            true,
+        );
+        let resp = svc.handle(post(None, vec![0u8; 4]));
+        assert_eq!(resp.status, 404);
+        assert!(String::from_utf8(resp.body)
+            .unwrap()
+            .contains("no default model"));
+        // Mount with a malformed body is a 400, unknown names 404.
+        let mut req = get("/models");
+        req.method = "POST".into();
+        req.body = b"not json".to_vec();
+        assert_eq!(svc.handle(req).status, 400);
+        assert_eq!(svc.handle(get("/models/ghost")).status, 404);
+        let mut req = get("/models/ghost");
+        req.method = "PUT".into();
+        assert_eq!(svc.handle(req).status, 404);
+        let mut req = get("/models/ghost");
+        req.method = "DELETE".into();
+        assert_eq!(svc.handle(req).status, 404);
     }
 }

@@ -70,10 +70,12 @@ pub fn synthetic_weight_file(spec: &crate::model::NetSpec, seed: u64)
     use crate::model::{Dtype, WeightFile, WeightTensor};
     use std::collections::BTreeMap;
 
-    let f32t = |vals: Vec<f32>, shape: Vec<usize>| WeightTensor {
-        dtype: Dtype::F32,
-        shape,
-        words: vals.iter().map(|v| v.to_bits()).collect(),
+    let f32t = |vals: Vec<f32>, shape: Vec<usize>| {
+        WeightTensor::owned(
+            Dtype::F32,
+            shape,
+            vals.iter().map(|v| v.to_bits()).collect(),
+        )
     };
     let mut rng = Rng::new(seed);
     let mut tensors = BTreeMap::new();

@@ -1,0 +1,602 @@
+//! Model-lifecycle tests: mount / reload / unmount over the admin API
+//! while `/classify` traffic is in flight.  The invariant under test is
+//! the registry's swap discipline — every reply is answered by exactly
+//! one weight generation and is bit-identical to that generation's
+//! `forward_reference`; a reload or unmount never drops a request or
+//! lets one straddle generations.  Everything runs on synthetic BKW
+//! files in a temp dir — no artifacts needed.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{BatcherConfig, RouterConfig};
+use bitkernel::data::normalize_batch;
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec};
+use bitkernel::server::{
+    http_call, serve, ModelRegistry, RegistryConfig, ServeOptions, Service,
+};
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::json::Json;
+
+const KERNEL: EngineKernel = EngineKernel::Xnor(XnorImpl::Auto);
+
+// --- fixtures --------------------------------------------------------------
+
+/// Fresh per-test temp dir (removed best-effort on success).
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bk-life-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The conv-net under lifecycle churn: 1x4x4 input, 3 classes.
+fn spec_conv() -> NetSpec {
+    NetSpec::builder((1, 4, 4)).conv(2, 3).linear(3).build().unwrap()
+}
+
+/// A heterogeneous second model: 1x5x5 input, 4 classes, fc-only.
+fn spec_fc() -> NetSpec {
+    NetSpec::builder((1, 5, 5)).linear(4).build().unwrap()
+}
+
+/// Write `seed`'s synthetic weights for `spec` as a BKW file.
+fn write_model(path: &Path, spec: &NetSpec, seed: u64) {
+    synthetic_weight_file(spec, seed).save(path).unwrap();
+}
+
+/// Deterministic fake image bytes for `spec`.
+fn pixels(spec: &NetSpec, salt: usize) -> Vec<u8> {
+    let (c, h, w) = spec.input();
+    (0..c * h * w).map(|i| ((i * 31 + salt * 7) % 256) as u8).collect()
+}
+
+/// Bit-exactness oracle: the logits generation `seed` must answer
+/// `px` with, straight from the unfused reference path.
+fn oracle(spec: &NetSpec, seed: u64, px: &[u8]) -> Vec<f32> {
+    let (c, h, w) = spec.input();
+    let engine =
+        BnnEngine::from_weight_file(&synthetic_weight_file(spec, seed))
+            .unwrap();
+    engine
+        .forward_reference(&normalize_batch(px, 1, h, w, c), KERNEL)
+        .data()
+        .to_vec()
+}
+
+fn registry(max_resident: usize) -> Arc<ModelRegistry> {
+    ModelRegistry::new(RegistryConfig {
+        kernel: KERNEL,
+        max_batch: 4,
+        router: RouterConfig {
+            queue_cap: 256,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+            },
+        },
+        max_resident,
+    })
+}
+
+// --- tiny server + client harness ------------------------------------------
+
+struct TestServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// Boot an admin-enabled server over `registry` on a free port.
+fn boot(registry: Arc<ModelRegistry>) -> TestServer {
+    let service =
+        Arc::new(Service::with_registry(registry, None, true));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || {
+        serve(
+            service,
+            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 4 },
+            stop2,
+            Some(ready_tx),
+        )
+        .unwrap();
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    TestServer { addr: addr.to_string(), stop, handle }
+}
+
+impl TestServer {
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.join().unwrap();
+    }
+}
+
+fn json(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).unwrap()).unwrap()
+}
+
+/// `POST /models` body for one mount.
+fn mount_body(name: &str, path: &Path, lazy: bool) -> Vec<u8> {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("path", Json::Str(path.display().to_string())),
+        ("lazy", Json::Bool(lazy)),
+    ])
+    .to_string()
+    .into_bytes()
+}
+
+/// Mount over the admin API with `?wait=1`, returning the settled
+/// descriptor.
+fn mount_wait(addr: &str, name: &str, path: &Path, lazy: bool) -> Json {
+    let (status, body) = http_call(
+        addr,
+        "POST",
+        "/models?wait=1",
+        &mount_body(name, path, lazy),
+    )
+    .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&body));
+    json(&body)
+}
+
+/// One classify call; returns `(status, body)`.
+fn classify(addr: &str, model: &str, px: &[u8]) -> (u16, Vec<u8>) {
+    http_call(addr, "POST", &format!("/classify?model={model}"), px)
+        .unwrap()
+}
+
+/// Parse a classify reply into `(generation, logits)`.
+fn reply_logits(body: &[u8]) -> (u64, Vec<f32>) {
+    let v = json(body);
+    let generation =
+        v.get("generation").unwrap().as_f64().unwrap() as u64;
+    let logits = v
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.as_f64().unwrap() as f32)
+        .collect();
+    (generation, logits)
+}
+
+fn assert_bit_identical(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: logit count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{ctx}: logit {i} ({g} vs {w}) — replies must be \
+             bit-identical to their generation's forward_reference"
+        );
+    }
+}
+
+/// Poll `GET /models/{name}` until `pred` holds on the descriptor.
+fn poll_status(addr: &str, name: &str, what: &str,
+               pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, body) =
+            http_call(addr, "GET", &format!("/models/{name}"), b"")
+                .unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = json(&body);
+        if pred(&v) {
+            return v;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {name}: {what} (last: {v})"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// --- scenarios -------------------------------------------------------------
+
+#[test]
+fn admin_mount_reload_unmount_roundtrip() {
+    let dir = temp_dir("roundtrip");
+    let conv = spec_conv();
+    let fc = spec_fc();
+    let conv_path = dir.join("conv.bkw");
+    write_model(&conv_path, &conv, 1);
+    let srv = boot(registry(0));
+    let addr = &srv.addr;
+
+    // Mount synchronously: 201 with the full shape contract.
+    let st = mount_wait(addr, "conv", &conv_path, false);
+    assert_eq!(st.get("state").unwrap().as_str(), Some("ready"));
+    assert_eq!(st.get("resident").unwrap().as_bool(), Some(true));
+    assert_eq!(st.get("reloadable").unwrap().as_bool(), Some(true));
+    assert_eq!(st.get("image_bytes").unwrap().as_usize(), Some(16));
+    assert_eq!(st.get("classes").unwrap().as_usize(), Some(3));
+    let g1 = st.get("generation").unwrap().as_f64().unwrap() as u64;
+    assert!(g1 >= 1);
+
+    // Serve generation 1 bit-identically.
+    let px = pixels(&conv, 0);
+    let (status, body) = classify(addr, "conv", &px);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let (gen, logits) = reply_logits(&body);
+    assert_eq!(gen, g1);
+    assert_bit_identical(&logits, &oracle(&conv, 1, &px), "gen 1");
+
+    // Reload from new on-disk weights: new generation, new logits.
+    write_model(&conv_path, &conv, 2);
+    let (status, body) =
+        http_call(addr, "PUT", "/models/conv?wait=1", b"").unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let g2 = json(&body).get("generation").unwrap().as_f64().unwrap()
+        as u64;
+    assert!(g2 > g1, "reload must mint a new generation");
+    let (status, body) = classify(addr, "conv", &px);
+    assert_eq!(status, 200);
+    let (gen, logits) = reply_logits(&body);
+    assert_eq!(gen, g2);
+    assert_bit_identical(&logits, &oracle(&conv, 2, &px), "gen 2");
+
+    // Async mount of a second (heterogeneous) model: 202, then poll
+    // GET /models/{name} to readiness.
+    let fc_path = dir.join("fc.bkw");
+    write_model(&fc_path, &fc, 9);
+    let (status, body) = http_call(
+        addr,
+        "POST",
+        "/models",
+        &mount_body("fc", &fc_path, false),
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    poll_status(addr, "fc", "ready", |v| {
+        v.get("state").unwrap().as_str() == Some("ready")
+    });
+    let px_fc = pixels(&fc, 3);
+    let (status, body) = classify(addr, "fc", &px_fc);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let (_, logits) = reply_logits(&body);
+    assert_bit_identical(&logits, &oracle(&fc, 9, &px_fc), "fc");
+
+    // Typed admin errors: duplicate mount 409, unknown reload 404,
+    // bad name 400.
+    let (status, _) = http_call(
+        addr,
+        "POST",
+        "/models?wait=1",
+        &mount_body("conv", &conv_path, false),
+    )
+    .unwrap();
+    assert_eq!(status, 409);
+    let (status, _) =
+        http_call(addr, "PUT", "/models/ghost?wait=1", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_call(
+        addr,
+        "POST",
+        "/models?wait=1",
+        &mount_body("no/slash", &conv_path, false),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+
+    // A mount from a bad path fails synchronously (500) and is
+    // visible as `failed` until unmounted.
+    let (status, body) = http_call(
+        addr,
+        "POST",
+        "/models?wait=1",
+        &mount_body("broken", &dir.join("missing.bkw"), false),
+    )
+    .unwrap();
+    assert_eq!(status, 500, "{}", String::from_utf8_lossy(&body));
+    let st = poll_status(addr, "broken", "failed", |v| {
+        v.get("state").unwrap().as_str() == Some("failed")
+    });
+    assert!(st.get("error").unwrap().as_str().is_some());
+    let (status, body) = classify(addr, "broken", &px);
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    let (status, _) =
+        http_call(addr, "DELETE", "/models/broken", b"").unwrap();
+    assert_eq!(status, 200);
+
+    // Unmount: 200, then every route 404s the name.
+    let (status, body) =
+        http_call(addr, "DELETE", "/models/conv", b"").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(json(&body).get("unmounted").unwrap().as_str(),
+               Some("conv"));
+    let (status, _) =
+        http_call(addr, "GET", "/models/conv", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = classify(addr, "conv", &px);
+    assert_eq!(status, 404);
+    let (status, body) = http_call(addr, "GET", "/models", b"").unwrap();
+    assert_eq!(status, 200);
+    let names: Vec<String> = json(&body)
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["fc".to_string()]);
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reload_under_hammer_is_lossless_and_generation_exact() {
+    let dir = temp_dir("hammer");
+    let conv = spec_conv();
+    let fc = spec_fc();
+    let hot_path = dir.join("hot.bkw");
+    let side_path = dir.join("side.bkw");
+    write_model(&hot_path, &conv, 100);
+    write_model(&side_path, &fc, 200);
+    let srv = boot(registry(0));
+    let addr = srv.addr.clone();
+
+    // Two models mounted over the admin API; "hot" gets churned.
+    let st = mount_wait(&addr, "hot", &hot_path, false);
+    let g0 = st.get("generation").unwrap().as_f64().unwrap() as u64;
+    mount_wait(&addr, "side", &side_path, false);
+
+    // generation -> the seed whose weights that generation serves.
+    let mut gen_seed = std::collections::BTreeMap::new();
+    gen_seed.insert(g0, 100u64);
+
+    // Hammer /classify?model=hot from 4 closed-loop clients.  EVERY
+    // reply must be a 200 — a reload may never drop or bounce one.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for tid in 0..4usize {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let conv = conv.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut replies = Vec::new();
+            let mut n = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let salt = (tid * 3 + n) % 4;
+                n += 1;
+                let px = pixels(&conv, salt);
+                let (status, body) = classify(&addr, "hot", &px);
+                assert_eq!(
+                    status, 200,
+                    "reload dropped a request: {}",
+                    String::from_utf8_lossy(&body)
+                );
+                let (generation, logits) = reply_logits(&body);
+                replies.push((generation, salt, logits));
+            }
+            replies
+        }));
+    }
+
+    // Reload "hot" five times from fresh on-disk weights while the
+    // hammer runs; record which seed each generation serves.
+    for i in 1..=5u64 {
+        let seed = 100 + i;
+        write_model(&hot_path, &conv, seed);
+        let (status, body) =
+            http_call(&addr, "PUT", "/models/hot?wait=1", b"").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let g = json(&body).get("generation").unwrap().as_f64().unwrap()
+            as u64;
+        gen_seed.insert(g, seed);
+        // The untouched model keeps serving its own weights throughout.
+        let px = pixels(&fc, 1);
+        let (status, body) = classify(&addr, "side", &px);
+        assert_eq!(status, 200);
+        let (_, logits) = reply_logits(&body);
+        assert_bit_identical(&logits, &oracle(&fc, 200, &px), "side");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let replies: Vec<(u64, usize, Vec<f32>)> = clients
+        .into_iter()
+        .flat_map(|c| c.join().unwrap())
+        .collect();
+    assert!(!replies.is_empty());
+
+    // Every reply came from a known generation and is bit-identical
+    // to THAT generation's reference — no torn or mixed-weight reply.
+    let mut oracles: std::collections::BTreeMap<(u64, usize), Vec<f32>> =
+        std::collections::BTreeMap::new();
+    let mut gens_seen = std::collections::BTreeSet::new();
+    for (generation, salt, logits) in &replies {
+        let seed = *gen_seed.get(generation).unwrap_or_else(|| {
+            panic!("reply from unknown generation {generation}")
+        });
+        gens_seen.insert(*generation);
+        let want = oracles
+            .entry((seed, *salt))
+            .or_insert_with(|| oracle(&conv, seed, &pixels(&conv, *salt)));
+        assert_bit_identical(
+            logits,
+            want,
+            &format!("gen {generation} (seed {seed}) salt {salt}"),
+        );
+    }
+    println!(
+        "hammer: {} replies across generations {:?}",
+        replies.len(),
+        gens_seen
+    );
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unmount_under_traffic_drains_cleanly_to_404() {
+    let dir = temp_dir("unmount");
+    let conv = spec_conv();
+    let path = dir.join("u.bkw");
+    write_model(&path, &conv, 7);
+    let srv = boot(registry(0));
+    let addr = srv.addr.clone();
+    mount_wait(&addr, "u", &path, false);
+
+    // Clients tolerate exactly two outcomes: a bit-identical 200 (the
+    // request held the router before the unmount) or a clean 404
+    // (admitted after) — never a 5xx, a hang, or wrong logits.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for tid in 0..3usize {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let conv = conv.clone();
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut gone) = (0usize, 0usize);
+            let mut n = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let salt = (tid + n) % 3;
+                n += 1;
+                let px = pixels(&conv, salt);
+                let (status, body) = classify(&addr, "u", &px);
+                match status {
+                    200 => {
+                        let (_, logits) = reply_logits(&body);
+                        assert_bit_identical(
+                            &logits,
+                            &oracle(&conv, 7, &px),
+                            "pre-unmount",
+                        );
+                        ok += 1;
+                    }
+                    404 => gone += 1,
+                    other => panic!(
+                        "unmount produced HTTP {other}: {}",
+                        String::from_utf8_lossy(&body)
+                    ),
+                }
+            }
+            (ok, gone)
+        }));
+    }
+
+    std::thread::sleep(Duration::from_millis(150));
+    let (status, _) =
+        http_call(&addr, "DELETE", "/models/u", b"").unwrap();
+    assert_eq!(status, 200);
+    // New lookups 404 immediately after the map removal.
+    let (status, _) = classify(&addr, "u", &pixels(&conv, 0));
+    assert_eq!(status, 404);
+    std::thread::sleep(Duration::from_millis(50));
+    stop.store(true, Ordering::Relaxed);
+    let mut ok = 0usize;
+    for c in clients {
+        let (o, _gone) = c.join().unwrap();
+        ok += o;
+    }
+    assert!(ok > 0, "no traffic was served before the unmount");
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lazy_mount_stays_cold_until_first_request_same_generation() {
+    let dir = temp_dir("lazy");
+    let conv = spec_conv();
+    let path = dir.join("l.bkw");
+    write_model(&path, &conv, 42);
+    let srv = boot(registry(0));
+    let addr = &srv.addr;
+
+    // Lazy mount: weights mapped, contract known, NO pipeline yet.
+    let st = mount_wait(addr, "l", &path, true);
+    assert_eq!(st.get("state").unwrap().as_str(), Some("ready"));
+    assert_eq!(st.get("resident").unwrap().as_bool(), Some(false));
+    assert_eq!(st.get("image_bytes").unwrap().as_usize(), Some(16));
+    let g = st.get("generation").unwrap().as_f64().unwrap() as u64;
+    assert!(g >= 1, "a lazy mount still reads weights from disk");
+
+    // First request compiles in-line; the generation does NOT change
+    // (same mapped weights, same logits).
+    let px = pixels(&conv, 1);
+    let (status, body) = classify(addr, "l", &px);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let (gen, logits) = reply_logits(&body);
+    assert_eq!(gen, g, "a lazy build is not a new generation");
+    assert_bit_identical(&logits, &oracle(&conv, 42, &px), "lazy");
+    let st = poll_status(addr, "l", "resident", |v| {
+        v.get("resident").unwrap().as_bool() == Some(true)
+    });
+    assert_eq!(st.get("generation").unwrap().as_f64().unwrap() as u64, g);
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lru_demotion_keeps_models_servable_and_metrics_gc_on_unmount() {
+    let dir = temp_dir("lru");
+    let conv = spec_conv();
+    let fc = spec_fc();
+    let a_path = dir.join("a.bkw");
+    let b_path = dir.join("b.bkw");
+    write_model(&a_path, &conv, 3);
+    write_model(&b_path, &fc, 4);
+    // At most ONE resident pipeline: mounting "b" demotes "a" to cold.
+    let srv = boot(registry(1));
+    let addr = &srv.addr;
+    let st = mount_wait(addr, "a", &a_path, false);
+    let ga = st.get("generation").unwrap().as_f64().unwrap() as u64;
+    mount_wait(addr, "b", &b_path, false);
+    poll_status(addr, "a", "demoted", |v| {
+        v.get("resident").unwrap().as_bool() == Some(false)
+            && v.get("state").unwrap().as_str() == Some("ready")
+    });
+
+    // The demoted model rebuilds on demand — same generation, same
+    // bits — and its rebuild in turn demotes "b".
+    let px = pixels(&conv, 2);
+    let (status, body) = classify(addr, "a", &px);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let (gen, logits) = reply_logits(&body);
+    assert_eq!(gen, ga, "an LRU rebuild is not a new generation");
+    assert_bit_identical(&logits, &oracle(&conv, 3, &px), "rebuilt a");
+    poll_status(addr, "b", "demoted", |v| {
+        v.get("resident").unwrap().as_bool() == Some(false)
+    });
+
+    // Metrics cover exactly the mounted set, and GC with it.
+    let (status, body) = http_call(addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(status, 200);
+    let metrics = String::from_utf8(body).unwrap();
+    assert!(metrics.contains("bitkernel_models_mounted 2"), "{metrics}");
+    assert!(metrics.contains("bitkernel_mount_epoch{model=\"a\"}"),
+            "{metrics}");
+    assert!(metrics.contains("bitkernel_mount_epoch{model=\"b\"}"),
+            "{metrics}");
+    for name in ["a", "b"] {
+        let (status, _) = http_call(
+            addr, "DELETE", &format!("/models/{name}"), b"",
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+    }
+    let (_, body) = http_call(addr, "GET", "/metrics", b"").unwrap();
+    let metrics = String::from_utf8(body).unwrap();
+    assert!(metrics.contains("bitkernel_models_mounted 0"), "{metrics}");
+    assert!(!metrics.contains("model=\"a\""),
+            "unmounted series must vanish: {metrics}");
+    assert!(!metrics.contains("model=\"b\""),
+            "unmounted series must vanish: {metrics}");
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

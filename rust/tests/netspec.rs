@@ -79,11 +79,11 @@ fn bkw1_loads_through_the_synthesized_legacy_spec() {
     }
     tensors.insert(
         "meta.widths".to_string(),
-        bitkernel::model::WeightTensor {
-            dtype: bitkernel::model::Dtype::U32,
-            shape: vec![9],
-            words: WIDTHS.to_vec(),
-        },
+        bitkernel::model::WeightTensor::owned(
+            bitkernel::model::Dtype::U32,
+            vec![9],
+            WIDTHS.to_vec(),
+        ),
     );
     let bkw1 = WeightFile::from_tensors(tensors);
     assert_eq!(bkw1.version(), 1);
@@ -128,7 +128,7 @@ fn bkw2_round_trips_spec_and_tensors() {
     for name in wf.names() {
         let (a, b) = (wf.get(name).unwrap(), back.get(name).unwrap());
         assert_eq!(a.shape, b.shape, "{name}");
-        assert_eq!(a.words, b.words, "{name}");
+        assert_eq!(a.words(), b.words(), "{name}");
     }
 
     // The reloaded engine computes identical logits.

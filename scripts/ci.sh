@@ -42,6 +42,13 @@ cargo test -q --test netspec
 echo "== shape-generic serving: heterogeneous models + submit validation"
 cargo test -q --test serving
 
+echo "== model lifecycle: mount/reload/unmount under live traffic"
+# Admin-API roundtrip, reload-under-hammer (every reply bit-identical
+# to its generation's forward_reference, zero drops), unmount under
+# traffic draining to clean 404s, lazy mounts, LRU demotion, metrics
+# GC.  Artifact-free.
+cargo test -q --test lifecycle
+
 echo "== example: custom_net (NetSpec end to end, artifact-free)"
 cargo run --release --example custom_net
 
@@ -51,6 +58,12 @@ echo "== serve smoke: two heterogeneous models behind one port"
 # each over TCP (curl-equivalent), and asserts 200s + the label
 # fallback for label-less files.  Artifact-free.
 cargo run --release --example serve_smoke
+
+echo "== lifecycle smoke: admin API edits a live server end to end"
+# Boots an EMPTY admin server on port 0, mounts a synthetic model over
+# HTTP, classifies (bit-identical), reloads (generation bump), and
+# unmounts (clean 404s).  Artifact-free.
+cargo run --release --example lifecycle_smoke
 
 echo "== cargo doc --no-deps (rustdoc warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -69,5 +82,8 @@ cargo bench --bench profile -- --reps 1
 
 echo "== bench smoke: replica batching (--quick)"
 cargo bench --bench batching -- --quick
+
+echo "== bench smoke: reload under load (--quick; asserts 0 lost)"
+cargo bench --bench lifecycle -- --quick
 
 echo "ci.sh: all green"
