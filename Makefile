@@ -4,10 +4,12 @@
 #                    + smoke runs
 #   make bench     — kernel ablation -> BENCH_2.json (per-impl GiOP/s
 #                    for the Table-2 layer shapes), the replica
-#                    batching sweep (--quick) -> BENCH_3.json, and the
+#                    batching sweep (--quick) -> BENCH_3.json, the
 #                    reload-under-load run (--quick, request loss must
-#                    be 0) -> BENCH_6.json; drop --quick on any of them
-#                    for full-fidelity numbers
+#                    be 0) -> BENCH_6.json, and the panic-injection run
+#                    (--quick, request loss must be 0) -> BENCH_7.json;
+#                    drop --quick on any of them for full-fidelity
+#                    numbers
 #   make docs      — API docs only, rustdoc warnings denied
 #   make artifacts — python AOT pipeline -> rust/artifacts (needs jax)
 
@@ -20,6 +22,7 @@ bench:
 	cd rust && cargo bench --bench ablation -- --json ../BENCH_2.json
 	cd rust && cargo bench --bench batching -- --quick --json ../BENCH_3.json
 	cd rust && cargo bench --bench lifecycle -- --quick --json ../BENCH_6.json
+	cd rust && cargo bench --bench chaos -- --quick --json ../BENCH_7.json
 
 docs:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

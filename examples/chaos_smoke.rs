@@ -1,0 +1,200 @@
+//! Chaos smoke gate: boot the HTTP service on port 0 with a live
+//! [`FaultPlan`] installed, then prove the failure contract over real
+//! TCP — the ci.sh drill for supervision, deadlines, and recovery:
+//!
+//! 1. with an injected per-batch delay, `/classify` still answers 200
+//!    bit-identical to `forward_reference`;
+//! 2. `?timeout_ms=1` under that delay is a clean `504` (the deadline
+//!    is end-to-end, not a client-side timer);
+//! 3. an armed replica panic surfaces as a typed `500` ("replica
+//!    panicked"), never a hang or a dropped connection;
+//! 4. the pool respawns (`bitkernel_replica_restarts` climbs on
+//!    `/metrics`) and post-recovery replies are again 200 and
+//!    bit-identical.
+//!
+//! Artifact-free: runs against a synthetic engine.
+//!
+//! Run: `cargo run --release --example chaos_smoke`
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, NativeBackend, Router, RouterConfig,
+};
+use bitkernel::data::normalize_batch;
+use bitkernel::model::EngineKernel;
+use bitkernel::server::{http_call, serve, ServeOptions, Service};
+use bitkernel::testing::chaos::FaultPlan;
+use bitkernel::testing::synthetic_engine;
+use bitkernel::utils::json::Json;
+
+const KERNEL: EngineKernel = EngineKernel::Xnor(XnorImpl::Auto);
+
+/// Classify `px` and, on 200, check the logits against `want`
+/// bit-for-bit.  Returns the HTTP status and body either way.
+fn classify(addr: &str, path: &str, px: &[u8], want: &[f32])
+            -> Result<(u16, String)> {
+    let (status, body) = http_call(addr, "POST", path, px)?;
+    let body = String::from_utf8_lossy(&body).into_owned();
+    if status == 200 {
+        let v = Json::parse(&body).context("reply json")?;
+        let logits: Vec<f32> = v
+            .get("logits")
+            .and_then(|l| l.as_arr())
+            .context("missing logits")?
+            .iter()
+            .map(|j| j.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect();
+        ensure!(logits.len() == want.len(), "logit count");
+        for (i, (g, w)) in logits.iter().zip(want).enumerate() {
+            ensure!(
+                g.to_bits() == w.to_bits(),
+                "logit {i} not bit-identical ({g} vs {w}) — chaos must \
+                 never corrupt a surviving reply"
+            );
+        }
+    }
+    Ok((status, body))
+}
+
+/// Sum of every `bitkernel_replica_restarts` sample on `/metrics`.
+fn total_restarts(addr: &str) -> Result<u64> {
+    let (status, body) = http_call(addr, "GET", "/metrics", b"")?;
+    ensure!(status == 200, "/metrics -> {status}");
+    Ok(String::from_utf8_lossy(&body)
+        .lines()
+        .filter(|l| l.starts_with("bitkernel_replica_restarts"))
+        .filter_map(|l| l.rsplit(' ').next()?.parse::<u64>().ok())
+        .sum())
+}
+
+fn main() -> Result<()> {
+    // A live fault plan for the whole process: every batch is delayed
+    // a little (so deadlines have something to race) and panics are
+    // armed on demand below.  `serve` deployments get the same effect
+    // from BITKERNEL_CHAOS.
+    let guard =
+        FaultPlan::new().delay(Duration::from_millis(10)).install();
+
+    let engine = synthetic_engine([8, 8, 8, 8, 8, 8, 16, 16, 10], 3);
+    let plan = engine.plan(KERNEL, 4)?;
+    let router = Router::start(
+        move |_replica| {
+            Ok(Box::new(NativeBackend::from_plan(&plan))
+                as Box<dyn Backend>)
+        },
+        RouterConfig {
+            queue_cap: 64,
+            replicas: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+            },
+        },
+    )?;
+    let mut routers = BTreeMap::new();
+    routers.insert("demo".to_string(), router);
+    let service = Arc::new(Service::new(routers, "demo"));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let server = std::thread::spawn(move || {
+        serve(
+            service,
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 2,
+                ..ServeOptions::default()
+            },
+            stop2,
+            Some(ready_tx),
+        )
+    });
+    let addr = ready_rx
+        .recv_timeout(Duration::from_secs(10))
+        .context("server never came up")?
+        .to_string();
+    println!("chaos_smoke: listening on {addr} (10ms injected delay)");
+
+    let px: Vec<u8> =
+        (0..3 * 32 * 32).map(|i| ((i * 31 + 7) % 256) as u8).collect();
+    let want = engine
+        .forward_reference(&normalize_batch(&px, 1, 32, 32, 3), KERNEL)
+        .data()
+        .to_vec();
+
+    // 1. Delayed but healthy: 200 and bit-identical.
+    let (status, body) =
+        classify(&addr, "/classify?model=demo", &px, &want)?;
+    ensure!(status == 200, "baseline classify -> {status} {body}");
+    println!("chaos_smoke: delayed classify -> 200, bit-identical");
+
+    // 2. A 1ms end-to-end deadline cannot survive a 10ms injected
+    //    delay: typed 504, not a hang.
+    let (status, body) =
+        classify(&addr, "/classify?model=demo&timeout_ms=1", &px, &want)?;
+    ensure!(status == 504, "deadline classify -> {status} {body}");
+    ensure!(body.contains("deadline"), "504 body: {body}");
+    println!("chaos_smoke: timeout_ms=1 -> 504 '{body}'");
+
+    // 3. Arm a panic on both replicas: the next classifies surface a
+    //    typed 500 (and never hang), while supervision respawns.
+    guard.plan().arm_panic(0);
+    guard.plan().arm_panic(1);
+    let mut panics_seen = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while panics_seen < 2 {
+        ensure!(
+            Instant::now() < deadline,
+            "armed panics never surfaced ({panics_seen} seen)"
+        );
+        let (status, body) =
+            classify(&addr, "/classify?model=demo", &px, &want)?;
+        match status {
+            200 => {}
+            500 => {
+                ensure!(body.contains("panicked"), "500 body: {body}");
+                panics_seen += 1;
+                println!("chaos_smoke: injected panic -> 500 '{body}'");
+            }
+            // Both replicas briefly mid-respawn: the circuit answers
+            // typed 503s until one rejoins.
+            503 => std::thread::sleep(Duration::from_millis(10)),
+            other => bail!("unexpected HTTP {other}: {body}"),
+        }
+    }
+
+    // 4. Recovery: restart counters climb and replies go green again.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let restarts = total_restarts(&addr)?;
+        if restarts >= 2 {
+            println!(
+                "chaos_smoke: /metrics shows {restarts} replica restarts"
+            );
+            break;
+        }
+        ensure!(
+            Instant::now() < deadline,
+            "replicas never respawned (restarts = {restarts})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (status, body) =
+        classify(&addr, "/classify?model=demo", &px, &want)?;
+    ensure!(status == 200, "post-recovery classify -> {status} {body}");
+    println!("chaos_smoke: post-recovery classify -> 200, bit-identical");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap()?;
+    drop(guard);
+    println!("chaos_smoke: all green");
+    Ok(())
+}

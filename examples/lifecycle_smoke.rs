@@ -111,7 +111,11 @@ fn main() -> Result<()> {
     let server = std::thread::spawn(move || {
         serve(
             service,
-            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 2,
+                ..ServeOptions::default()
+            },
             stop2,
             Some(ready_tx),
         )

@@ -115,7 +115,11 @@ fn main() -> Result<()> {
     let server = std::thread::spawn(move || {
         serve(
             svc2,
-            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 8 },
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 8,
+                ..ServeOptions::default()
+            },
             stop2,
             Some(ready_tx),
         )

@@ -66,7 +66,9 @@ fn drive(
                             Err(e) => {
                                 assert_eq!(
                                     e,
-                                    bitkernel::coordinator::SubmitError::QueueFull,
+                                    bitkernel::coordinator::RequestError::Rejected(
+                                        bitkernel::coordinator::SubmitError::QueueFull,
+                                    ),
                                     "{e}"
                                 );
                                 std::thread::yield_now();

@@ -1,0 +1,291 @@
+//! `cargo bench --bench chaos` — fault-injection measurement: what do
+//! replica panics cost the survivors?
+//!
+//! Two phases against one 4-replica router over a synthetic BNN:
+//!
+//! 1. **steady** — closed-loop hammer, no faults: the baseline
+//!    requests/s and latency.
+//! 2. **inject** — the same hammer while a driver thread arms a
+//!    replica panic round-robin every few hundred batches' worth of
+//!    wall time.  Panicked requests come back as typed errors and are
+//!    retried by the closed loop (like QueueFull, they are the
+//!    harness's own injected load); the row records the p99 cost of
+//!    living through the respawns.
+//!
+//! The acceptance gate is **request-loss == 0 in both phases** — every
+//! request ends in a reply or a typed, retryable error; a hang or an
+//! untyped failure counts as LOST and fails the assert — so `make
+//! ci`'s smoke run fails loudly on a supervision regression.
+//!
+//! Flags:
+//! * `--quick`        — tiny request counts (the CI smoke run)
+//! * `--json <path>`  — write the phase rows as JSON (`make bench`
+//!   emits BENCH_7.json this way)
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitkernel::benchkit::Table;
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, NativeBackend, ReplyError, RequestError,
+    Router, RouterConfig, SubmitError,
+};
+use bitkernel::model::EngineKernel;
+use bitkernel::testing::chaos::FaultPlan;
+use bitkernel::testing::synthetic_engine;
+use bitkernel::utils::json::Json;
+use bitkernel::utils::timer::percentile;
+use bitkernel::utils::{Rng, Stopwatch};
+
+const REPLICAS: usize = 4;
+
+fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
+
+/// Closed-loop hammer.  QueueFull and typed panic errors are retried —
+/// both are the bench's own shed/injected load, and the measurement is
+/// the service time the survivors see.  ANY other failure counts as
+/// LOST.  Returns (wall secs, latencies ms, lost, panic replies seen).
+fn drive(
+    router: &Router,
+    images: &[Vec<f32>],
+    requests: usize,
+    clients: usize,
+) -> (f64, Vec<f64>, usize, usize) {
+    let next = Arc::new(AtomicUsize::new(0));
+    let lost = Arc::new(AtomicUsize::new(0));
+    let panics = Arc::new(AtomicUsize::new(0));
+    let sw = Stopwatch::start();
+    let lat: Vec<f64> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let next = Arc::clone(&next);
+            let lost = Arc::clone(&lost);
+            let panics = Arc::clone(&panics);
+            handles.push(s.spawn(move || {
+                let mut lat = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= requests {
+                        return lat;
+                    }
+                    let img = images[i % images.len()].clone();
+                    let sw = Stopwatch::start();
+                    loop {
+                        match router.submit_wait(img.clone()) {
+                            Ok(_) => {
+                                lat.push(sw.elapsed_ms());
+                                break;
+                            }
+                            Err(RequestError::Rejected(
+                                SubmitError::QueueFull,
+                            )) => std::thread::yield_now(),
+                            Err(RequestError::Failed(
+                                ReplyError::ReplicaPanicked { .. },
+                            )) => {
+                                panics.fetch_add(1, Ordering::SeqCst);
+                                std::thread::sleep(
+                                    Duration::from_millis(1),
+                                );
+                            }
+                            Err(_) => {
+                                lost.fetch_add(1, Ordering::SeqCst);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    (
+        sw.elapsed_secs(),
+        lat,
+        lost.load(Ordering::SeqCst),
+        panics.load(Ordering::SeqCst),
+    )
+}
+
+struct PhaseRow {
+    phase: &'static str,
+    requests: usize,
+    clients: usize,
+    lost: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    panic_replies: usize,
+    restarts: u64,
+}
+
+impl PhaseRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::Str(self.phase.to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("req_per_s", Json::Num(self.req_per_s)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("panic_replies", Json::Num(self.panic_replies as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
+        ])
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let json_path = arg("--json");
+    let (requests, clients, injections) =
+        if quick { (96, 4, 2) } else { (768, 8, 6) };
+
+    let engine = synthetic_engine([8, 8, 8, 8, 8, 8, 16, 16, 10], 17);
+    let plan = engine
+        .plan(EngineKernel::Xnor(XnorImpl::Auto), 4)
+        .unwrap();
+    let router = Arc::new(
+        Router::start(
+            move |_replica| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 1024,
+                replicas: REPLICAS,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap(),
+    );
+    let mut rng = Rng::new(7);
+    let images: Vec<Vec<f32>> =
+        (0..16).map(|_| rng.normal_vec(3 * 32 * 32)).collect();
+
+    // --- phase 1: steady state (no plan installed) --------------------------
+    let (wall, lat, lost, panic_replies) =
+        drive(&router, &images, requests, clients);
+    let steady = PhaseRow {
+        phase: "steady",
+        requests,
+        clients,
+        lost,
+        req_per_s: requests as f64 / wall,
+        p50_ms: percentile(&lat, 0.5),
+        p99_ms: percentile(&lat, 0.99),
+        panic_replies,
+        restarts: 0,
+    };
+    assert_eq!(
+        steady.panic_replies, 0,
+        "no plan is installed — steady phase must see zero panics"
+    );
+
+    // --- phase 2: the same hammer under round-robin replica panics ----------
+    let guard = FaultPlan::new().install();
+    let stop_faults = AtomicBool::new(false);
+    let (fired, (wall, lat, lost, panic_replies)) =
+        std::thread::scope(|s| {
+            let plan = Arc::clone(guard.plan());
+            let stop = &stop_faults;
+            let injector = s.spawn(move || {
+                let mut fired = 0usize;
+                for i in 0..injections {
+                    // Always fire the first fault (so the phase
+                    // measures at least one respawn) even if the
+                    // hammer raced past.
+                    if i > 0 && stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    plan.arm_panic(i % REPLICAS);
+                    fired += 1;
+                    std::thread::sleep(Duration::from_millis(150));
+                }
+                fired
+            });
+            let out = drive(&router, &images, requests, clients);
+            stop_faults.store(true, Ordering::Relaxed);
+            (injector.join().unwrap(), out)
+        });
+    // Let any armed-but-unfired fault and the last respawn settle
+    // before reading the restart counters.
+    let sw = Stopwatch::start();
+    while router.healthy_replicas() < REPLICAS
+        && sw.elapsed_secs() < 30.0
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        router.healthy_replicas(),
+        REPLICAS,
+        "pool never converged back to {REPLICAS} replicas"
+    );
+    let snap = router.metrics().snapshot();
+    let inject = PhaseRow {
+        phase: "inject",
+        requests,
+        clients,
+        lost,
+        req_per_s: requests as f64 / wall,
+        p50_ms: percentile(&lat, 0.5),
+        p99_ms: percentile(&lat, 0.99),
+        panic_replies,
+        restarts: snap.replicas.iter().map(|r| r.restarts).sum(),
+    };
+    drop(guard);
+    assert!(fired > 0, "the injector must arm at least one fault");
+
+    let rows = [steady, inject];
+    let mut table = Table::new(
+        &format!(
+            "Panic injection under load ({requests} req, {clients} \
+             clients, {REPLICAS} replicas, synthetic 3x32x32 conv net, \
+             {fired} armed faults)"
+        ),
+        &["phase", "req/s", "p50 ms", "p99 ms", "lost",
+          "panic replies", "restarts"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.phase.to_string(),
+            format!("{:.0}", r.req_per_s),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{}", r.lost),
+            format!("{}", r.panic_replies),
+            format!("{}", r.restarts),
+        ]);
+    }
+    table.print();
+
+    if let Some(p) = json_path {
+        let json =
+            Json::Arr(rows.iter().map(PhaseRow::to_json).collect());
+        std::fs::write(&p, json.to_string()).unwrap();
+        println!("wrote {p}");
+    }
+
+    // Acceptance: supervision must not lose a single request — every
+    // submission ends in a reply or a typed, retryable error, faults
+    // or no faults.
+    for r in &rows {
+        assert_eq!(
+            r.lost, 0,
+            "phase '{}' lost {} requests — supervision must keep every \
+             reply typed",
+            r.phase, r.lost
+        );
+    }
+    println!(
+        "acceptance: 0 lost requests across {} injected faults \
+         ({} panic replies, {} restarts)",
+        fired, rows[1].panic_replies, rows[1].restarts
+    );
+}

@@ -26,7 +26,9 @@ use std::time::Duration;
 
 use bitkernel::benchkit::Table;
 use bitkernel::bitops::XnorImpl;
-use bitkernel::coordinator::{BatcherConfig, RouterConfig, SubmitError};
+use bitkernel::coordinator::{
+    BatcherConfig, RequestError, RouterConfig, SubmitError,
+};
 use bitkernel::model::{EngineKernel, NetSpec};
 use bitkernel::server::{ModelRegistry, ModelState, RegistryConfig};
 use bitkernel::testing::synthetic_weight_file;
@@ -94,7 +96,9 @@ fn drive(
                                 lat.push(sw.elapsed_ms());
                                 break;
                             }
-                            Err(SubmitError::QueueFull) => {
+                            Err(RequestError::Rejected(
+                                SubmitError::QueueFull,
+                            )) => {
                                 std::thread::yield_now();
                             }
                             Err(_) => {

@@ -87,6 +87,13 @@ pub struct ReplicaMetrics {
     pub busy_us: AtomicU64,
     /// Per-batch `Backend::infer` wall time.
     pub infer_latency: Histogram,
+    /// Times this replica's backend was rebuilt after a panic
+    /// (supervision — `bitkernel_replica_restarts`).
+    pub restarts: AtomicU64,
+    /// Gauge (0/1): the replica is currently down, mid-respawn.  The
+    /// dispatcher deprioritizes restarting replicas; every replica
+    /// restarting at once opens the router's circuit.
+    pub restarting: AtomicU64,
 }
 
 /// All coordinator counters.  `default()` builds a router-wide-only
@@ -105,6 +112,16 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Requests carried by formed batches.
     pub batched_requests: AtomicU64,
+    /// Requests answered `DeadlineExceeded` by a replica WITHOUT
+    /// running inference (their deadline passed while queued).
+    pub deadline_expired: AtomicU64,
+    /// Replica panics caught by the supervision wrapper (each one
+    /// triggers a respawn).
+    pub panics: AtomicU64,
+    /// Panicked batches whose single member was individually
+    /// identified as the poison (`ReplyError::ReplicaPanicked {
+    /// quarantined: true }`).
+    pub quarantined: AtomicU64,
     /// Submit -> batch-formation latency.
     pub queue_latency: Histogram,
     /// Submit -> reply latency.
@@ -128,6 +145,10 @@ pub struct ReplicaSnapshot {
     pub infer_p50_us: u64,
     /// p99 per-batch inference latency, µs.
     pub infer_p99_us: u64,
+    /// Times this replica's backend was rebuilt after a panic.
+    pub restarts: u64,
+    /// Whether the replica is currently down, mid-respawn.
+    pub restarting: bool,
 }
 
 /// A point-in-time copy for reporting.
@@ -139,6 +160,12 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Requests shed (queue-full rejections + backend failures).
     pub rejected: u64,
+    /// Requests answered `DeadlineExceeded` without inference.
+    pub deadline_expired: u64,
+    /// Replica panics caught by the supervision wrapper.
+    pub panics: u64,
+    /// Quarantined single-request panicked batches.
+    pub quarantined: u64,
     /// Batches formed.
     pub batches: u64,
     /// Mean requests per formed batch.
@@ -173,6 +200,9 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches == 0 {
                 0.0
@@ -195,6 +225,8 @@ impl Metrics {
                     busy_us: r.busy_us.load(Ordering::Relaxed),
                     infer_p50_us: r.infer_latency.quantile_us(0.5),
                     infer_p99_us: r.infer_latency.quantile_us(0.99),
+                    restarts: r.restarts.load(Ordering::Relaxed),
+                    restarting: r.restarting.load(Ordering::Relaxed) != 0,
                 })
                 .collect(),
         }
@@ -237,6 +269,9 @@ impl Metrics {
             "bitkernel_requests_submitted{l} {}\n\
              bitkernel_requests_completed{l} {}\n\
              bitkernel_requests_rejected{l} {}\n\
+             bitkernel_requests_deadline_expired{l} {}\n\
+             bitkernel_replica_panics{l} {}\n\
+             bitkernel_requests_quarantined{l} {}\n\
              bitkernel_batches_total{l} {}\n\
              bitkernel_batch_size_mean{l} {:.3}\n\
              bitkernel_queue_latency_mean_us{l} {:.1}\n\
@@ -247,6 +282,9 @@ impl Metrics {
             s.submitted,
             s.completed,
             s.rejected,
+            s.deadline_expired,
+            s.panics,
+            s.quarantined,
             s.batches,
             s.mean_batch_size,
             s.queue_mean_us,
@@ -263,13 +301,17 @@ impl Metrics {
                  bitkernel_replica_inflight{rl} {}\n\
                  bitkernel_replica_busy_us{rl} {}\n\
                  bitkernel_replica_infer_p50_us{rl} {}\n\
-                 bitkernel_replica_infer_p99_us{rl} {}\n",
+                 bitkernel_replica_infer_p99_us{rl} {}\n\
+                 bitkernel_replica_restarts{rl} {}\n\
+                 bitkernel_replica_restarting{rl} {}\n",
                 r.batches,
                 r.requests,
                 r.inflight,
                 r.busy_us,
                 r.infer_p50_us,
                 r.infer_p99_us,
+                r.restarts,
+                u64::from(r.restarting),
             ));
         }
         out
@@ -335,5 +377,34 @@ mod tests {
         assert!(labelled.contains("bitkernel_batches_total{model=\"bnn\"} 0"),
                 "{labelled}");
         assert!(!labelled.contains("}{"), "{labelled}");
+    }
+
+    #[test]
+    fn supervision_counters_surface_everywhere() {
+        let m = Metrics::with_replicas(2);
+        m.panics.store(3, Ordering::Relaxed);
+        m.quarantined.store(1, Ordering::Relaxed);
+        m.deadline_expired.store(7, Ordering::Relaxed);
+        m.replicas[0].restarts.store(3, Ordering::Relaxed);
+        m.replicas[1].restarting.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.panics, 3);
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.deadline_expired, 7);
+        assert_eq!(s.replicas[0].restarts, 3);
+        assert!(!s.replicas[0].restarting);
+        assert!(s.replicas[1].restarting);
+        let text = m.render_prometheus_labeled("model=\"bnn\"");
+        assert!(text.contains(
+            "bitkernel_replica_restarts{model=\"bnn\",replica=\"0\"} 3"
+        ), "{text}");
+        assert!(text.contains(
+            "bitkernel_replica_restarting{model=\"bnn\",replica=\"1\"} 1"
+        ), "{text}");
+        assert!(text.contains(
+            "bitkernel_requests_deadline_expired{model=\"bnn\"} 7"
+        ), "{text}");
+        assert!(text.contains("bitkernel_replica_panics{model=\"bnn\"} 3"),
+                "{text}");
     }
 }

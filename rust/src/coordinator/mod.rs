@@ -30,5 +30,6 @@ pub mod router;
 pub use backend::{Backend, MockBackend, NativeBackend, PjrtBackend};
 pub use batcher::{BatchBuffer, BatcherConfig, DynamicBatcher};
 pub use metrics::{Metrics, MetricsSnapshot, ReplicaMetrics, ReplicaSnapshot};
-pub use router::{default_replicas, BackendFactory, InferReply, Router,
-                 RouterConfig, SubmitError};
+pub use router::{default_replicas, BackendFactory, InferReply, ReplyError,
+                 RequestError, Router, RouterConfig, SubmitError,
+                 SubmitOptions};

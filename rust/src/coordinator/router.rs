@@ -35,6 +35,27 @@
 //! 3x32x32/10-class CNN next to a 1x28x28/26-class fc net — with no
 //! geometry hardwired anywhere on the request path.
 //!
+//! **Supervision.**  Each replica's batch execution runs under
+//! `catch_unwind`: a panicking backend fails that batch's replies with
+//! a typed [`ReplyError::ReplicaPanicked`] (a caller NEVER observes a
+//! hung `recv()`), and the worker thread survives — it rebuilds its
+//! backend from the shared factory with capped exponential backoff and
+//! rejoins the rotation.  Every reply channel therefore resolves to
+//! `Result<InferReply, ReplyError>`: `Ok` for a classification, a
+//! typed error for a panic, a backend failure, a missed deadline, or
+//! shutdown.  Restart counts are exported per replica
+//! (`bitkernel_replica_restarts`), and while a replica is mid-respawn
+//! the dispatcher deprioritizes it; with EVERY replica down the
+//! router reports [`Router::circuit_open`], which the serving layer
+//! maps to `503 + Retry-After`.
+//!
+//! **Deadlines.**  [`SubmitOptions::deadline`] rides with the request
+//! through the queue and the batcher; a replica answers requests whose
+//! deadline already passed with [`ReplyError::DeadlineExceeded`]
+//! WITHOUT running inference, and
+//! [`Router::submit_wait_deadline`] bounds the caller-side wait the
+//! same way — an end-to-end latency contract, not a client-side timer.
+//!
 //! **Retiring a shared router.**  `Drop` runs the same drain as
 //! [`Router::shutdown`], which makes `Arc<Router>` the hot-swap
 //! primitive the model registry (`server/registry.rs`) builds on: the
@@ -48,7 +69,7 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::nn::argmax;
 
@@ -99,11 +120,93 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+/// Why an ACCEPTED request failed.  Every accepted request resolves —
+/// with a reply or with one of these; a hung reply `recv()` is a bug
+/// (pinned by `rust/tests/chaos.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplyError {
+    /// The replica executing this request's batch panicked.  The
+    /// replica respawns; the request does NOT auto-retry (it may have
+    /// CAUSED the panic).
+    ReplicaPanicked {
+        /// True when this request was the only member of the panicked
+        /// batch — i.e. it is individually identified as the poison
+        /// and should be quarantined, not retried.
+        quarantined: bool,
+    },
+    /// The backend returned an error (no panic; the replica keeps
+    /// running with the same backend).
+    BackendFailed(String),
+    /// The request's deadline passed before a reply was produced; if
+    /// it expired while still queued, inference was skipped entirely.
+    DeadlineExceeded,
+    /// The router shut down before answering.
+    Shutdown,
+}
+
+impl std::fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyError::ReplicaPanicked { quarantined: true } => {
+                write!(f, "replica panicked; request quarantined")
+            }
+            ReplyError::ReplicaPanicked { quarantined: false } => {
+                write!(f, "replica panicked while serving this batch")
+            }
+            ReplyError::BackendFailed(e) => {
+                write!(f, "inference failed: {e}")
+            }
+            ReplyError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ReplyError::Shutdown => write!(f, "router shut down"),
+        }
+    }
+}
+
+/// Everything [`Router::submit_wait_deadline`] can fail with: the
+/// submission was never accepted ([`RequestError::Rejected`]) or it
+/// was accepted and then failed ([`RequestError::Failed`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// Not admitted — see [`SubmitError`]; nothing was queued.
+    Rejected(SubmitError),
+    /// Admitted but not answered with a reply — see [`ReplyError`].
+    Failed(ReplyError),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Rejected(e) => write!(f, "{e}"),
+            RequestError::Failed(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+/// Per-request submission options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// End-to-end deadline.  Rides with the request through the queue
+    /// and the batcher: a replica answers an already-expired request
+    /// with [`ReplyError::DeadlineExceeded`] WITHOUT running
+    /// inference, and [`Router::submit_wait_deadline`] stops waiting
+    /// at the same instant.  `None` waits indefinitely.
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitOptions {
+    /// Options with a deadline of `timeout` from now.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        Self { deadline: Some(Instant::now() + timeout) }
+    }
+}
+
 struct Request {
     /// Normalized CHW image (`C*H*W` f32, validated at submit).
     image: Vec<f32>,
     submitted: Instant,
-    reply_tx: mpsc::Sender<InferReply>,
+    /// End-to-end deadline ([`SubmitOptions::deadline`]).
+    deadline: Option<Instant>,
+    reply_tx: mpsc::Sender<Result<InferReply, ReplyError>>,
 }
 
 /// A formed batch in flight from the batcher to a replica.
@@ -114,9 +217,19 @@ struct Batch {
 }
 
 /// A backend constructor, called once per replica (with the replica
-/// index) inside that replica's worker thread.
+/// index) inside that replica's worker thread — and again on the same
+/// thread whenever a panicked replica respawns.
 pub type BackendFactory =
     dyn Fn(usize) -> anyhow::Result<Box<dyn Backend>> + Send + Sync;
+
+/// First delay between respawn attempts after a replica panic; doubles
+/// per failed attempt up to [`RESPAWN_BACKOFF_CAP`].  A succeeding
+/// factory (the common case — native backends share a compiled plan)
+/// respawns on the first attempt with no sleep at all.
+const RESPAWN_BACKOFF_BASE: Duration = Duration::from_millis(10);
+/// Ceiling for the respawn backoff.  Also bounds how long a draining
+/// router can wait on a replica stuck in backoff.
+const RESPAWN_BACKOFF_CAP: Duration = Duration::from_secs(1);
 
 /// Default replica count: one worker per core the host exposes, capped
 /// at 8 (large gemm ops inside a native replica already fan out on the
@@ -180,7 +293,9 @@ impl Router {
     /// INSIDE their worker threads via `factory` (PJRT handles are not
     /// `Send`), called once per replica with the replica index.
     /// Construction errors on any replica are surfaced synchronously
-    /// and tear the whole pool down.
+    /// and tear the whole pool down.  The factory is retained for the
+    /// router's lifetime: a replica that panics mid-batch rebuilds its
+    /// backend through it (same thread, capped exponential backoff).
     ///
     /// For the native engine, compile the plan ONCE outside and let
     /// every call mint a session from it:
@@ -359,6 +474,27 @@ impl Router {
         self.replicas
     }
 
+    /// Replicas currently serving: the pool size minus replicas
+    /// mid-respawn after a panic.  Converges back to
+    /// [`Router::replicas`] once every respawn lands.
+    pub fn healthy_replicas(&self) -> usize {
+        let restarting: u64 = self
+            .metrics
+            .replicas
+            .iter()
+            .map(|r| r.restarting.load(Ordering::Relaxed))
+            .sum();
+        self.replicas.saturating_sub(restarting as usize)
+    }
+
+    /// Circuit breaker: true while EVERY replica is down mid-respawn.
+    /// Submissions still enqueue (the pool recovers with backoff
+    /// bounded by ~1s), but latency-sensitive callers — the HTTP layer
+    /// maps this to `503 + Retry-After` — should shed instead.
+    pub fn circuit_open(&self) -> bool {
+        self.healthy_replicas() == 0
+    }
+
     /// Shared handle to the router's counters.
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
@@ -369,6 +505,8 @@ impl Router {
     /// `C*H*W`) — anything else is a typed
     /// [`SubmitError::WrongShape`], checked here at admission so a
     /// malformed request can never reach (let alone panic) a worker.
+    /// The reply channel ALWAYS resolves for an accepted request:
+    /// `Ok(reply)` or a typed [`ReplyError`] — never a hang.
     ///
     /// ```
     /// use bitkernel::coordinator::{Backend, MockBackend, Router,
@@ -381,7 +519,7 @@ impl Router {
     /// ).unwrap();
     /// assert_eq!(router.input_shape(), (3, 32, 32));
     /// let rx = router.submit(vec![0.5; router.image_elems()]).unwrap();
-    /// let reply = rx.recv().unwrap();
+    /// let reply = rx.recv().unwrap().unwrap();
     /// assert_eq!(reply.logits.len(), router.classes());
     /// assert!(matches!(router.submit(vec![0.5; 7]),
     ///                  Err(SubmitError::WrongShape { .. })));
@@ -390,7 +528,18 @@ impl Router {
     pub fn submit(
         &self,
         image_chw: Vec<f32>,
-    ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
+    ) -> Result<mpsc::Receiver<Result<InferReply, ReplyError>>, SubmitError>
+    {
+        self.submit_with(image_chw, SubmitOptions::default())
+    }
+
+    /// [`Router::submit`] with per-request [`SubmitOptions`] (deadline).
+    pub fn submit_with(
+        &self,
+        image_chw: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<mpsc::Receiver<Result<InferReply, ReplyError>>, SubmitError>
+    {
         let expected = self.image_elems();
         if image_chw.len() != expected {
             return Err(SubmitError::WrongShape {
@@ -403,6 +552,7 @@ impl Router {
         let req = Request {
             image: image_chw,
             submitted: Instant::now(),
+            deadline: opts.deadline,
             reply_tx,
         };
         match tx.try_send(req) {
@@ -420,10 +570,51 @@ impl Router {
         }
     }
 
-    /// Submit and block for the reply.
-    pub fn submit_wait(&self, image_chw: Vec<f32>) -> Result<InferReply, SubmitError> {
-        let rx = self.submit(image_chw)?;
-        rx.recv().map_err(|_| SubmitError::Shutdown)
+    /// Submit and block for the reply (no deadline).
+    pub fn submit_wait(
+        &self,
+        image_chw: Vec<f32>,
+    ) -> Result<InferReply, RequestError> {
+        self.submit_wait_deadline(image_chw, SubmitOptions::default())
+    }
+
+    /// Submit and block for the reply, bounded by `opts.deadline`: the
+    /// request carries the deadline through the pipeline (an expired
+    /// request is answered without running inference) AND the wait
+    /// itself stops at the deadline with
+    /// [`ReplyError::DeadlineExceeded`] — the end-to-end contract
+    /// behind `/classify?timeout_ms=`.
+    pub fn submit_wait_deadline(
+        &self,
+        image_chw: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<InferReply, RequestError> {
+        let rx = self
+            .submit_with(image_chw, opts)
+            .map_err(RequestError::Rejected)?;
+        let reply = match opts.deadline {
+            None => rx.recv().map_err(|_| {
+                RequestError::Failed(ReplyError::Shutdown)
+            })?,
+            Some(deadline) => {
+                let remaining =
+                    deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(remaining) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        return Err(RequestError::Failed(
+                            ReplyError::DeadlineExceeded,
+                        ))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(RequestError::Failed(
+                            ReplyError::Shutdown,
+                        ))
+                    }
+                }
+            }
+        };
+        reply.map_err(RequestError::Failed)
     }
 
     /// Graceful drain: stop admissions, let the batcher flush every
@@ -451,7 +642,10 @@ impl Drop for Router {
 }
 
 /// One replica worker: construct the backend, report readiness, then
-/// execute dispatched batches until the batcher hangs up.
+/// execute dispatched batches until the batcher hangs up.  A panic
+/// inside batch execution does NOT kill the worker: the batch's
+/// replies fail typed and the backend is rebuilt from the factory
+/// ([`respawn`]) before the next batch.
 fn replica_loop(
     replica: usize,
     factory: &BackendFactory,
@@ -476,50 +670,208 @@ fn replica_loop(
         }
     };
     drop(ready_tx);
-    let cap = backend.max_batch();
     // The replica's reusable padded input tensor, sized from the
     // backend's shape contract — refilled in place per batch, so the
     // dispatch hot path allocates nothing for image data.
-    let mut buffer = BatchBuffer::new(cap, backend.input_shape());
-    let rm = &m.replicas[replica];
+    let mut buffer =
+        BatchBuffer::new(backend.max_batch(), backend.input_shape());
+    let mut batch_seq: u64 = 0;
     while let Ok(batch) = brx.recv() {
-        let Batch { formed, reqs } = batch;
-        let b = reqs.len();
-        let images = buffer.fill(reqs.iter().map(|r| &r.image[..]));
-        let infer_sw = Instant::now();
-        let result = backend.infer(images);
-        let infer_us = infer_sw.elapsed().as_micros() as u64;
-        rm.batches.fetch_add(1, Ordering::Relaxed);
-        rm.requests.fetch_add(b as u64, Ordering::Relaxed);
-        rm.busy_us.fetch_add(infer_us, Ordering::Relaxed);
-        rm.infer_latency.record_us(infer_us);
-        match result {
-            Ok(logits) => {
-                let done = Instant::now();
-                for (i, r) in reqs.into_iter().enumerate() {
-                    let row = logits.row(i).to_vec();
-                    let reply = InferReply {
-                        class: argmax(&row),
-                        logits: row,
-                        queue_us: (formed - r.submitted).as_micros() as u64,
-                        total_us: (done - r.submitted).as_micros() as u64,
-                    };
-                    m.total_latency.record_us(reply.total_us);
-                    m.completed.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply_tx.send(reply);
+        batch_seq += 1;
+        let poisoned =
+            run_batch(&mut *backend, &mut buffer, batch, replica,
+                      batch_seq, m);
+        if poisoned {
+            match respawn(replica, factory, &brx, m) {
+                Some(b) => {
+                    buffer = BatchBuffer::new(
+                        b.max_batch(),
+                        b.input_shape(),
+                    );
+                    backend = b;
                 }
-            }
-            Err(e) => {
-                crate::log_error!(
-                    "replica {replica} inference failed: {e:#}"
-                );
-                // Drop the requests; their reply channels disconnect,
-                // which callers observe as an error.
-                m.rejected.fetch_add(b as u64, Ordering::Relaxed);
+                // The router is draining; nothing left to serve.
+                None => return,
             }
         }
-        rm.inflight.fetch_sub(b as u64, Ordering::Relaxed);
     }
+}
+
+/// Execute one dispatched batch on `backend`.  Expired requests are
+/// answered [`ReplyError::DeadlineExceeded`] without inference; the
+/// rest run under `catch_unwind` so a panicking backend fails its
+/// replies typed instead of hanging them.  Returns `true` when the
+/// panic poisoned the backend (the caller must respawn it).
+fn run_batch(
+    backend: &mut dyn Backend,
+    buffer: &mut BatchBuffer,
+    batch: Batch,
+    replica: usize,
+    batch_seq: u64,
+    m: &Metrics,
+) -> bool {
+    let rm = &m.replicas[replica];
+    let Batch { formed, reqs } = batch;
+    let total = reqs.len() as u64;
+    // Deadline gate: a request already past its deadline is answered
+    // typed here, before any inference work happens on its behalf.
+    let now = Instant::now();
+    let (live, expired): (Vec<Request>, Vec<Request>) = reqs
+        .into_iter()
+        .partition(|r| !r.deadline.is_some_and(|d| now >= d));
+    if !expired.is_empty() {
+        m.deadline_expired
+            .fetch_add(expired.len() as u64, Ordering::Relaxed);
+        for r in expired {
+            let _ = r.reply_tx.send(Err(ReplyError::DeadlineExceeded));
+        }
+    }
+    if live.is_empty() {
+        rm.inflight.fetch_sub(total, Ordering::Relaxed);
+        return false;
+    }
+    let b = live.len();
+    let infer_sw = Instant::now();
+    // AssertUnwindSafe: on panic both `backend` and `buffer` are
+    // discarded and rebuilt by the caller, so any state a panic left
+    // half-written is never observed.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> anyhow::Result<Vec<Vec<f32>>> {
+            crate::testing::chaos::before_infer(replica, batch_seq);
+            let images = buffer.fill(live.iter().map(|r| &r.image[..]));
+            let logits = backend.infer(images)?;
+            Ok((0..b).map(|i| logits.row(i).to_vec()).collect())
+        },
+    ));
+    let infer_us = infer_sw.elapsed().as_micros() as u64;
+    rm.batches.fetch_add(1, Ordering::Relaxed);
+    rm.requests.fetch_add(b as u64, Ordering::Relaxed);
+    rm.busy_us.fetch_add(infer_us, Ordering::Relaxed);
+    rm.infer_latency.record_us(infer_us);
+    let poisoned = match outcome {
+        Ok(Ok(rows)) => {
+            let done = Instant::now();
+            for (r, row) in live.into_iter().zip(rows) {
+                let reply = InferReply {
+                    class: argmax(&row),
+                    logits: row,
+                    queue_us: (formed - r.submitted).as_micros() as u64,
+                    total_us: (done - r.submitted).as_micros() as u64,
+                };
+                m.total_latency.record_us(reply.total_us);
+                m.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = r.reply_tx.send(Ok(reply));
+            }
+            false
+        }
+        Ok(Err(e)) => {
+            crate::log_error!(
+                "replica {replica} inference failed: {e:#}"
+            );
+            m.rejected.fetch_add(b as u64, Ordering::Relaxed);
+            let msg = format!("{e:#}");
+            for r in live {
+                let _ = r
+                    .reply_tx
+                    .send(Err(ReplyError::BackendFailed(msg.clone())));
+            }
+            false
+        }
+        Err(_) => {
+            // With exactly one request in the panicked batch, that
+            // request IS the identified poison: mark it quarantined so
+            // callers know not to retry it.
+            let quarantined = b == 1;
+            crate::log_error!(
+                "replica {replica} panicked on batch {batch_seq} \
+                 ({b} requests); respawning"
+            );
+            m.panics.fetch_add(1, Ordering::Relaxed);
+            if quarantined {
+                m.quarantined.fetch_add(1, Ordering::Relaxed);
+            }
+            m.rejected.fetch_add(b as u64, Ordering::Relaxed);
+            for r in live {
+                let _ = r
+                    .reply_tx
+                    .send(Err(ReplyError::ReplicaPanicked { quarantined }));
+            }
+            true
+        }
+    };
+    rm.inflight.fetch_sub(total, Ordering::Relaxed);
+    poisoned
+}
+
+/// Rebuild a panicked replica's backend from the shared factory with
+/// capped exponential backoff ([`RESPAWN_BACKOFF_BASE`] doubling up to
+/// [`RESPAWN_BACKOFF_CAP`]).  Batches dispatched while the replica is
+/// down are answered typed (never left hanging) between attempts.
+/// Returns `None` when the router started draining (dispatch channel
+/// disconnected) — the worker should exit instead of respawning.
+fn respawn(
+    replica: usize,
+    factory: &BackendFactory,
+    brx: &mpsc::Receiver<Batch>,
+    m: &Metrics,
+) -> Option<Box<dyn Backend>> {
+    let rm = &m.replicas[replica];
+    rm.restarting.store(1, Ordering::Relaxed);
+    let mut delay = RESPAWN_BACKOFF_BASE;
+    loop {
+        // Fail over anything queued on this replica while it is down.
+        loop {
+            match brx.try_recv() {
+                Ok(batch) => fail_batch(batch, replica, m),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    rm.restarting.store(0, Ordering::Relaxed);
+                    return None;
+                }
+            }
+        }
+        // The factory may itself fail or panic (e.g. injected
+        // weight-read faults) — stay in the backoff loop.
+        let attempt = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| factory(replica)),
+        );
+        match attempt {
+            Ok(Ok(backend)) => {
+                rm.restarts.fetch_add(1, Ordering::Relaxed);
+                rm.restarting.store(0, Ordering::Relaxed);
+                crate::log_info!("replica {replica} respawned");
+                return Some(backend);
+            }
+            Ok(Err(e)) => {
+                crate::log_error!(
+                    "replica {replica} respawn failed: {e:#}; \
+                     retrying in {delay:?}"
+                );
+            }
+            Err(_) => {
+                crate::log_error!(
+                    "replica {replica} factory panicked during \
+                     respawn; retrying in {delay:?}"
+                );
+            }
+        }
+        std::thread::sleep(delay);
+        delay = (delay * 2).min(RESPAWN_BACKOFF_CAP);
+    }
+}
+
+/// Answer every request of a batch dispatched to a down replica with a
+/// typed error (and release its in-flight accounting).
+fn fail_batch(batch: Batch, replica: usize, m: &Metrics) {
+    let rm = &m.replicas[replica];
+    let n = batch.reqs.len() as u64;
+    m.rejected.fetch_add(n, Ordering::Relaxed);
+    for r in batch.reqs {
+        let _ = r
+            .reply_tx
+            .send(Err(ReplyError::ReplicaPanicked { quarantined: false }));
+    }
+    rm.inflight.fetch_sub(n, Ordering::Relaxed);
 }
 
 /// The batcher thread: form batches, dispatch each to the least-loaded
@@ -545,11 +897,12 @@ fn batcher_loop(
     }
 }
 
-/// Least-loaded dispatch: try replicas in ascending in-flight order
-/// without blocking; if every dispatch slot is full, block on the
-/// least-loaded live replica (which stalls the batcher and, in turn,
-/// fills the admission queue — the backpressure path).  Replicas whose
-/// worker died are retired from the rotation.
+/// Least-loaded dispatch: try replicas in ascending (restarting,
+/// in-flight) order without blocking — a replica mid-respawn sorts
+/// last, so batches prefer healthy workers; if every dispatch slot is
+/// full, block on the best-ranked live replica (which stalls the
+/// batcher and, in turn, fills the admission queue — the backpressure
+/// path).  Replicas whose worker died are retired from the rotation.
 fn dispatch(
     mut batch: Batch,
     batch_txs: &mut [Option<mpsc::SyncSender<Batch>>],
@@ -561,12 +914,21 @@ fn dispatch(
             .filter(|&r| batch_txs[r].is_some())
             .collect();
         if order.is_empty() {
-            // Every replica died: shed the batch (reply channels drop).
+            // Every replica died: shed the batch typed (the supervised
+            // loop makes this unreachable in practice, but a dropped
+            // reply channel must never be the failure mode).
             m.rejected.fetch_add(b, Ordering::Relaxed);
+            for r in batch.reqs {
+                let _ = r.reply_tx.send(Err(ReplyError::Shutdown));
+            }
             return;
         }
         order.sort_by_key(|&r| {
-            m.replicas[r].inflight.load(Ordering::Relaxed)
+            let rm = &m.replicas[r];
+            (
+                rm.restarting.load(Ordering::Relaxed),
+                rm.inflight.load(Ordering::Relaxed),
+            )
         });
         // Pass 1: non-blocking, in load order.
         for &r in &order {
@@ -585,7 +947,9 @@ fn dispatch(
                 }
             }
         }
-        // Pass 2: every slot full — block on the least-loaded replica.
+        // Pass 2: every slot full — block on the best-ranked replica.
+        // A restarting replica still consumes its slot between respawn
+        // attempts (answering typed), so this cannot hang forever.
         let r = order[0];
         if batch_txs[r].is_none() {
             continue; // retired during pass 1; recompute the order
@@ -607,7 +971,8 @@ fn dispatch(
 mod tests {
     use super::*;
     use crate::coordinator::backend::MockBackend;
-    use std::sync::atomic::AtomicUsize;
+    use crate::tensor::Tensor;
+    use std::sync::atomic::{AtomicBool, AtomicUsize};
     use std::time::Duration;
 
     fn image(v: f32) -> Vec<f32> {
@@ -661,7 +1026,7 @@ mod tests {
             .map(|_| router.submit(image(0.0)).unwrap())
             .collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         // All 8 should have ridden one or two batches, not 8 singles.
         let n = calls.load(Ordering::SeqCst);
@@ -718,7 +1083,7 @@ mod tests {
             .map(|_| router.submit(image(0.0)).unwrap())
             .collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let snap = router.metrics().snapshot();
         assert_eq!(snap.completed, 16);
@@ -813,5 +1178,164 @@ mod tests {
         );
         assert!(r.is_err());
         assert!(format!("{:#}", r.err().unwrap()).contains("refused"));
+    }
+
+    /// A backend that panics on `infer` while `armed` is set, else
+    /// delegates to a [`MockBackend`] — the unit-level stand-in for
+    /// the chaos harness (`testing::chaos` drives the integration
+    /// suite in `rust/tests/chaos.rs`).
+    struct PanicBackend {
+        inner: MockBackend,
+        armed: Arc<AtomicBool>,
+    }
+
+    impl Backend for PanicBackend {
+        fn name(&self) -> &str {
+            self.inner.name()
+        }
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+        fn input_shape(&self) -> (usize, usize, usize) {
+            self.inner.input_shape()
+        }
+        fn classes(&self) -> usize {
+            self.inner.classes()
+        }
+        fn infer(&mut self, images: &Tensor) -> anyhow::Result<&Tensor> {
+            if self.armed.swap(false, Ordering::SeqCst) {
+                panic!("injected test panic");
+            }
+            self.inner.infer(images)
+        }
+    }
+
+    #[test]
+    fn panicking_replica_replies_typed_and_respawns() {
+        let armed = Arc::new(AtomicBool::new(true));
+        let armed2 = Arc::clone(&armed);
+        let router = Router::start(
+            move |_| {
+                Ok(Box::new(PanicBackend {
+                    inner: MockBackend::new(4, 0),
+                    armed: Arc::clone(&armed2),
+                }) as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 16,
+                replicas: 1,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        // First request rides the armed batch: typed panic error, and
+        // as the sole batch member it is quarantined.
+        let err = router.submit_wait(image(0.2)).unwrap_err();
+        assert_eq!(
+            err,
+            RequestError::Failed(ReplyError::ReplicaPanicked {
+                quarantined: true
+            })
+        );
+        // The worker survived and respawned: the next request succeeds
+        // on the SAME replica thread.
+        let reply = router.submit_wait(image(0.9)).unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        let snap = router.metrics().snapshot();
+        assert_eq!(snap.panics, 1);
+        assert_eq!(snap.quarantined, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(
+            snap.replicas.iter().map(|r| r.restarts).sum::<u64>(),
+            1
+        );
+        assert_eq!(router.healthy_replicas(), 1);
+        assert!(!router.circuit_open());
+        router.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_skip_inference() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = Arc::clone(&calls);
+        let router = Router::start(
+            move |_| {
+                Ok(Box::new(MockBackend::with_calls(
+                    1,
+                    10,
+                    Arc::clone(&calls2),
+                )) as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 16,
+                replicas: 1,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        // An already-expired deadline: the replica answers typed
+        // without calling the backend.
+        let rx = router
+            .submit_with(
+                image(0.0),
+                SubmitOptions { deadline: Some(Instant::now()) },
+            )
+            .unwrap();
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(ReplyError::DeadlineExceeded)
+        ));
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+        assert_eq!(router.metrics().snapshot().deadline_expired, 1);
+        // A live deadline still classifies.
+        let reply = router
+            .submit_wait_deadline(
+                image(0.5),
+                SubmitOptions::with_timeout(Duration::from_secs(10)),
+            )
+            .unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_deadline_bounds_the_wait() {
+        // Slow backend, short deadline: the caller is released at the
+        // deadline with a typed error — no hung recv.
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::new(1, 200)) as Box<dyn Backend>),
+            RouterConfig {
+                queue_cap: 16,
+                replicas: 1,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let err = router
+            .submit_wait_deadline(
+                image(0.0),
+                SubmitOptions::with_timeout(Duration::from_millis(20)),
+            )
+            .unwrap_err();
+        assert_eq!(
+            err,
+            RequestError::Failed(ReplyError::DeadlineExceeded)
+        );
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "waited past the deadline: {:?}",
+            t0.elapsed()
+        );
+        router.shutdown();
     }
 }

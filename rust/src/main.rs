@@ -26,7 +26,7 @@ use bitkernel::data::Dataset;
 use bitkernel::model::{BnnEngine, EngineKernel};
 use bitkernel::runtime::Runtime;
 use bitkernel::server::{
-    http_call, serve, ModelRegistry, ModelState, RegistryConfig,
+    http_call_retry, serve, ModelRegistry, ModelState, RegistryConfig,
     ServeOptions, Service,
 };
 use bitkernel::utils::json::Json;
@@ -155,6 +155,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                           (0 = one per core, capped at 8)" },
         FlagSpec { name: "threads", takes_value: true, default: Some("4"),
                    help: "HTTP handler threads" },
+        FlagSpec { name: "max-connections", takes_value: true,
+                   default: Some("256"),
+                   help: "open-connection cap (accepts past it answer \
+                          503 + Retry-After and close)" },
         FlagSpec { name: "admin", takes_value: false, default: None,
                    help: "enable the mutating admin API (POST/PUT/DELETE \
                           /models) for live mount/reload/unmount" },
@@ -171,6 +175,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if args.has("help") {
         print!("{}", render_help("serve", "run the HTTP service", &specs));
         return Ok(());
+    }
+    // Fault-injection drills: BITKERNEL_CHAOS holds a FaultPlan spec
+    // (e.g. 'panic=0@3;delay_ms=20;fail_reads=1'), installed for the
+    // process lifetime so chaos harnesses can exercise a real binary.
+    if let Ok(spec) = std::env::var("BITKERNEL_CHAOS") {
+        if !spec.trim().is_empty() {
+            let plan = bitkernel::testing::chaos::FaultPlan::from_env(&spec)
+                .context("parsing BITKERNEL_CHAOS")?;
+            std::mem::forget(plan.install());
+            bitkernel::log_warn!("chaos fault plan installed: '{spec}'");
+        }
     }
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let backend = args.get_or("backend", "native-xnor").to_string();
@@ -261,6 +276,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         &ServeOptions {
             addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
             threads: args.get_usize("threads", 4)?,
+            max_connections: args.get_usize("max-connections", 256)?,
         },
         stop,
         None,
@@ -327,26 +343,32 @@ fn start_backend(
 // ---------------------------------------------------------------------------
 
 /// Flags shared by the three admin-client subcommands.
-const ADMIN_CLIENT: [FlagSpec; 3] = [
+const ADMIN_CLIENT: [FlagSpec; 4] = [
     FlagSpec { name: "addr", takes_value: true,
                default: Some("127.0.0.1:8080"),
                help: "server address (needs serve --admin)" },
     FlagSpec { name: "no-wait", takes_value: false, default: None,
                help: "return 202 immediately instead of waiting for \
                       the build (poll GET /models/<name>)" },
+    FlagSpec { name: "retries", takes_value: true, default: Some("3"),
+               help: "retries (jittered backoff) when the server is \
+                      unreachable — e.g. still starting up" },
     FlagSpec { name: "help", takes_value: false, default: None,
                help: "show this help" },
 ];
 
 /// Issue one admin call and surface the server's JSON verbatim; any
-/// status >= 300 becomes a non-zero exit.
+/// status >= 300 becomes a non-zero exit.  Transient transport errors
+/// (server still binding, connection dropped) are retried with
+/// jittered backoff up to `retries` times.
 fn admin_call(
     addr: &str,
     method: &str,
     path: &str,
     body: &[u8],
+    retries: usize,
 ) -> Result<()> {
-    let (status, reply) = http_call(addr, method, path, body)?;
+    let (status, reply) = http_call_retry(addr, method, path, body, retries)?;
     println!("{}", String::from_utf8_lossy(&reply).trim_end());
     anyhow::ensure!(
         status < 300,
@@ -364,6 +386,7 @@ fn cmd_mount(argv: &[String]) -> Result<()> {
                    help: "map weights now, compile on first request" },
         ADMIN_CLIENT[1].clone(),
         ADMIN_CLIENT[2].clone(),
+        ADMIN_CLIENT[3].clone(),
     ];
     let args = Args::parse(&flags, &specs)?;
     if args.has("help") {
@@ -399,13 +422,18 @@ fn cmd_mount(argv: &[String]) -> Result<()> {
         "POST",
         route,
         body.as_bytes(),
+        args.get_usize("retries", 3)?,
     )
 }
 
 /// `bitkernel unmount <name> [--addr a]`
 fn cmd_unmount(argv: &[String]) -> Result<()> {
     let (pos, flags) = take_positional(argv);
-    let specs = [ADMIN_CLIENT[0].clone(), ADMIN_CLIENT[2].clone()];
+    let specs = [
+        ADMIN_CLIENT[0].clone(),
+        ADMIN_CLIENT[2].clone(),
+        ADMIN_CLIENT[3].clone(),
+    ];
     let args = Args::parse(&flags, &specs)?;
     if args.has("help") {
         print!("{}", render_help(
@@ -424,6 +452,7 @@ fn cmd_unmount(argv: &[String]) -> Result<()> {
         "DELETE",
         &format!("/models/{name}"),
         b"",
+        args.get_usize("retries", 3)?,
     )
 }
 
@@ -434,6 +463,7 @@ fn cmd_reload(argv: &[String]) -> Result<()> {
         ADMIN_CLIENT[0].clone(),
         ADMIN_CLIENT[1].clone(),
         ADMIN_CLIENT[2].clone(),
+        ADMIN_CLIENT[3].clone(),
     ];
     let args = Args::parse(&flags, &specs)?;
     if args.has("help") {
@@ -458,6 +488,7 @@ fn cmd_reload(argv: &[String]) -> Result<()> {
         "PUT",
         &route,
         b"",
+        args.get_usize("retries", 3)?,
     )
 }
 

@@ -1,10 +1,42 @@
 //! HTTP/1.1 message parsing and serialization (request side minimal,
 //! enough for the coordinator's API surface).
+//!
+//! The parser is **bounded**: request/header lines are capped at
+//! [`MAX_HEADER_LINE`] bytes and a request at [`MAX_HEADERS`] headers,
+//! so a hostile peer streaming an endless header line cannot grow an
+//! unbounded buffer.  Framing the server does not speak
+//! (`Transfer-Encoding`) is rejected BEFORE any body bytes are read —
+//! and the serve loop closes (never reuses) a connection after any
+//! parse error, so unconsumed framing can't poison the next request.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 
 use anyhow::{bail, ensure, Context, Result};
+
+/// Longest accepted request/header line, in bytes (CRLF included).
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Most headers accepted on one request.
+pub const MAX_HEADERS: usize = 100;
+
+/// `read_line` with a hard byte cap.  Returns `Ok(None)` on EOF before
+/// any byte, an error when the line exceeds `max` bytes.
+fn read_line_bounded(
+    reader: &mut BufReader<impl Read>,
+    max: usize,
+) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(max as u64 + 1)
+        .read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    ensure!(buf.len() <= max, "header line over {max} bytes");
+    let line = String::from_utf8(buf).context("non-utf8 header line")?;
+    Ok(Some(line))
+}
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -19,20 +51,23 @@ pub struct HttpRequest {
     pub headers: BTreeMap<String, String>,
     /// Raw request body.
     pub body: Vec<u8>,
+    /// Protocol version from the request line (`HTTP/1.0` or
+    /// `HTTP/1.1`) — decides the keep-alive default.
+    pub version: String,
 }
 
 impl HttpRequest {
     /// Read one request from a buffered stream.  Returns Ok(None) on a
     /// cleanly closed connection (EOF before any bytes).
     pub fn read(reader: &mut BufReader<impl Read>) -> Result<Option<Self>> {
-        let mut line = String::new();
-        if reader.read_line(&mut line)? == 0 {
+        let Some(line) = read_line_bounded(reader, MAX_HEADER_LINE)?
+        else {
             return Ok(None);
-        }
+        };
         let mut parts = line.trim_end().split(' ');
         let method = parts.next().unwrap_or("").to_uppercase();
         let target = parts.next().context("missing request target")?;
-        let version = parts.next().unwrap_or("");
+        let version = parts.next().unwrap_or("").to_string();
         ensure!(version.starts_with("HTTP/1."), "bad version '{version}'");
         ensure!(!method.is_empty(), "empty method");
 
@@ -48,16 +83,27 @@ impl HttpRequest {
 
         let mut headers = BTreeMap::new();
         loop {
-            let mut h = String::new();
-            ensure!(reader.read_line(&mut h)? > 0, "eof in headers");
+            let h = read_line_bounded(reader, MAX_HEADER_LINE)?
+                .context("eof in headers")?;
             let h = h.trim_end();
             if h.is_empty() {
                 break;
             }
+            ensure!(
+                headers.len() < MAX_HEADERS,
+                "more than {MAX_HEADERS} headers"
+            );
             let (k, v) = h.split_once(':').context("bad header line")?;
             headers.insert(k.trim().to_lowercase(), v.trim().to_string());
         }
 
+        // Framing we don't speak is rejected BEFORE touching the body:
+        // reading a content-length body off a chunked request would
+        // leave the chunk framing on the stream and poison keep-alive
+        // reuse for whatever the connection handler does next.
+        if let Some(te) = headers.get("transfer-encoding") {
+            bail!("transfer-encoding '{te}' not supported");
+        }
         let len: usize = headers
             .get("content-length")
             .map(|v| v.parse().context("bad content-length"))
@@ -66,21 +112,19 @@ impl HttpRequest {
         ensure!(len <= 16 << 20, "body too large ({len} bytes)");
         let mut body = vec![0u8; len];
         reader.read_exact(&mut body).context("reading body")?;
-        if headers.get("transfer-encoding").map(|s| s.as_str())
-            == Some("chunked")
-        {
-            bail!("chunked bodies not supported");
-        }
-        Ok(Some(Self { method, path, query, headers, body }))
+        Ok(Some(Self { method, path, query, headers, body, version }))
     }
 
-    /// Whether the client wants the connection kept open (HTTP/1.1
-    /// default unless `Connection: close`).
+    /// Whether the client wants the connection kept open.  An explicit
+    /// `Connection: close`/`keep-alive` header wins; otherwise the
+    /// protocol default applies — keep-alive for HTTP/1.1, close for
+    /// HTTP/1.0.
     pub fn wants_keep_alive(&self) -> bool {
-        self.headers
-            .get("connection")
-            .map(|v| !v.eq_ignore_ascii_case("close"))
-            .unwrap_or(true) // HTTP/1.1 default
+        match self.headers.get("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.version != "HTTP/1.0",
+        }
     }
 }
 
@@ -91,6 +135,9 @@ pub struct HttpResponse {
     pub status: u16,
     /// Content-Type header value.
     pub content_type: String,
+    /// Extra headers (name, value) emitted verbatim after the standard
+    /// set — e.g. `Retry-After` on 503/504.
+    pub headers: Vec<(String, String)>,
     /// Response body bytes.
     pub body: Vec<u8>,
 }
@@ -101,6 +148,7 @@ impl HttpResponse {
         Self {
             status,
             content_type: "application/json".into(),
+            headers: Vec::new(),
             body: body.into_bytes(),
         }
     }
@@ -110,8 +158,19 @@ impl HttpResponse {
         Self {
             status,
             content_type: "text/plain; charset=utf-8".into(),
+            headers: Vec::new(),
             body: body.into().into_bytes(),
         }
+    }
+
+    /// Append one extra response header.
+    pub fn with_header(
+        mut self,
+        name: impl Into<String>,
+        value: impl Into<String>,
+    ) -> Self {
+        self.headers.push((name.into(), value.into()));
+        self
     }
 
     fn reason(&self) -> &'static str {
@@ -125,7 +184,9 @@ impl HttpResponse {
             405 => "Method Not Allowed",
             409 => "Conflict",
             429 => "Too Many Requests",
+            500 => "Internal Server Error",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Internal Server Error",
         }
     }
@@ -134,13 +195,17 @@ impl HttpResponse {
     pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             self.reason(),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         )?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.write_all(&self.body)?;
         w.flush()?;
         Ok(())
@@ -152,7 +217,8 @@ impl HttpResponse {
 /// `bitkernel mount`/`unmount`/`reload` CLI subcommands and the
 /// lifecycle smoke example speak to the admin API with — deliberately
 /// tiny (no keep-alive, no chunked bodies, 30 s timeouts) so the CLI
-/// needs no client dependency.
+/// needs no client dependency.  For transient-failure tolerance see
+/// [`http_call_retry`].
 pub fn http_call(
     addr: &str,
     method: &str,
@@ -204,6 +270,68 @@ pub fn http_call(
     Ok((status, out))
 }
 
+/// Whether an [`http_call`] failure is worth retrying: a transient
+/// transport error (server not up yet, connection dropped, timeout) as
+/// opposed to a protocol or caller error.
+fn retryable(err: &anyhow::Error) -> bool {
+    use std::io::ErrorKind;
+    err.chain().any(|cause| {
+        cause.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                ErrorKind::ConnectionRefused
+                    | ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::NotConnected
+                    | ErrorKind::TimedOut
+                    | ErrorKind::WouldBlock
+            )
+        })
+    })
+}
+
+/// [`http_call`] with up to `retries` retries on transient transport
+/// errors (connection refused/reset, timeout), sleeping a jittered
+/// exponential backoff between attempts (50ms doubling to a 2s cap,
+/// jittered to 50–100% so concurrent clients don't retry in
+/// lockstep).  Non-transient errors and HTTP error statuses are
+/// returned immediately — a `500` is an answer, not a network fault.
+pub fn http_call_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    retries: usize,
+) -> Result<(u16, Vec<u8>)> {
+    use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+    let seed = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64)
+        .unwrap_or(0)
+        | 1;
+    let mut rng = crate::utils::Rng::new(seed);
+    let mut delay = Duration::from_millis(50);
+    let mut attempt = 0;
+    loop {
+        match http_call(addr, method, path, body) {
+            Ok(r) => return Ok(r),
+            Err(e) if attempt < retries && retryable(&e) => {
+                attempt += 1;
+                let jittered =
+                    delay.mul_f64(0.5 + 0.5 * rng.next_f32() as f64);
+                crate::log_warn!(
+                    "{method} {path}: {e:#}; \
+                     retry {attempt}/{retries} in {jittered:?}"
+                );
+                std::thread::sleep(jittered);
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +349,7 @@ mod tests {
         assert_eq!(r.path, "/classify");
         assert_eq!(r.query.get("model").map(String::as_str), Some("bnn"));
         assert_eq!(r.query.get("x").map(String::as_str), Some("1"));
+        assert_eq!(r.version, "HTTP/1.1");
         assert!(r.wants_keep_alive());
     }
 
@@ -240,6 +369,19 @@ mod tests {
     }
 
     #[test]
+    fn http10_defaults_to_close() {
+        let r = parse("GET / HTTP/1.0\r\nHost: a\r\n\r\n");
+        assert_eq!(r.version, "HTTP/1.0");
+        assert!(!r.wants_keep_alive(), "1.0 default must be close");
+        // An explicit keep-alive opt-in still wins on 1.0...
+        let r = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(r.wants_keep_alive());
+        // ...and an explicit close on 1.1.
+        let r = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!r.wants_keep_alive());
+    }
+
+    #[test]
     fn rejects_bad_version_and_huge_body() {
         assert!(HttpRequest::read(&mut BufReader::new(
             &b"GET / SPDY/99\r\n\r\n"[..]
@@ -252,6 +394,65 @@ mod tests {
     }
 
     #[test]
+    fn rejects_chunked_before_reading_the_body() {
+        // The chunked rejection must fire BEFORE the content-length
+        // body read: a combined request errors on transfer-encoding,
+        // not on body framing.
+        let raw = "POST /c HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\
+                   Content-Length: 5\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        let err = HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("transfer-encoding"),
+            "{err:#}"
+        );
+        // Casing and variants are rejected too.
+        let raw = "POST /c HTTP/1.1\r\nTransfer-Encoding: GZIP\r\n\r\n";
+        assert!(HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .is_err());
+    }
+
+    #[test]
+    fn bounds_header_line_length() {
+        let raw = format!(
+            "GET / HTTP/1.1\r\nx-big: {}\r\n\r\n",
+            "a".repeat(MAX_HEADER_LINE + 10)
+        );
+        let err = HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("header line over"), "{err:#}");
+        // An endless REQUEST line (no newline at all) is bounded too.
+        let raw = "G".repeat(MAX_HEADER_LINE * 4);
+        assert!(HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .is_err());
+    }
+
+    #[test]
+    fn bounds_header_count() {
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 5) {
+            raw.push_str(&format!("x-h{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        let err = HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("headers"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_bad_content_length_and_eof_mid_body() {
+        let raw = "POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n";
+        let err = HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("content-length"), "{err:#}");
+        // Advertised 10 bytes, stream ends after 3.
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        let err = HttpRequest::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("reading body"), "{err:#}");
+    }
+
+    #[test]
     fn response_roundtrip() {
         let resp = HttpResponse::json(200, "{\"ok\":true}".into());
         let mut buf = Vec::new();
@@ -260,5 +461,63 @@ mod tests {
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(s.contains("Content-Length: 11"));
         assert!(s.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn extra_headers_and_504_reason() {
+        let resp = HttpResponse::json(503, "{}".into())
+            .with_header("Retry-After", "1");
+        let mut buf = Vec::new();
+        resp.write(&mut buf, false).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\r\nRetry-After: 1\r\n"), "{s}");
+        assert!(s.contains("Connection: close"), "{s}");
+        assert!(s.ends_with("\r\n\r\n{}"), "{s}");
+        let resp = HttpResponse::json(504, "{}".into());
+        let mut buf = Vec::new();
+        resp.write(&mut buf, false).unwrap();
+        assert!(String::from_utf8(buf)
+            .unwrap()
+            .starts_with("HTTP/1.1 504 Gateway Timeout\r\n"));
+    }
+
+    #[test]
+    fn retry_reaches_a_delayed_start_server() {
+        use std::net::TcpListener;
+        // Reserve a free port, release it, and only bind the server
+        // there after a delay — the first attempts see
+        // ConnectionRefused and must be retried to succeed.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            let listener = TcpListener::bind(&addr2).unwrap();
+            let (mut s, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let req = HttpRequest::read(&mut reader).unwrap().unwrap();
+            assert_eq!(req.method, "GET");
+            HttpResponse::text(200, "late but here")
+                .write(&mut s, false)
+                .unwrap();
+        });
+        let (status, body) =
+            http_call_retry(&addr, "GET", "/x", b"", 8).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"late but here");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn zero_retries_fails_fast_on_refused() {
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = std::time::Instant::now();
+        assert!(http_call_retry(&addr, "GET", "/", b"", 0).is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
     }
 }

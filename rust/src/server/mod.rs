@@ -37,7 +37,7 @@ pub mod http;
 pub mod registry;
 pub mod service;
 
-pub use http::{http_call, HttpRequest, HttpResponse};
+pub use http::{http_call, http_call_retry, HttpRequest, HttpResponse};
 pub use registry::{
     ModelContract, ModelEntry, ModelRegistry, ModelState, ModelStatus,
     RegistryConfig, RegistryError,

@@ -184,6 +184,11 @@ pub struct ModelStatus {
     pub resident: bool,
     /// Whether the model has a weight path to reload from.
     pub reloadable: bool,
+    /// Whether the model's circuit is open: every replica of the live
+    /// router is mid-respawn, so classify traffic is being shed with
+    /// `503` until at least one replica recovers.  Always false for a
+    /// cold model (no live router).
+    pub circuit_open: bool,
     /// The shape contract, once known.
     pub contract: Option<ModelContract>,
 }
@@ -220,6 +225,10 @@ impl ModelEntry {
             generation: slot.generation,
             resident: slot.router.is_some(),
             reloadable: self.path.is_some(),
+            circuit_open: slot
+                .router
+                .as_ref()
+                .is_some_and(|r| r.circuit_open()),
             contract: slot.contract.clone(),
         }
     }
@@ -387,7 +396,7 @@ impl ModelRegistry {
         let built = if lazy {
             // Cold mount: map the weights and read the contract off
             // them; no Plan, no replicas, until the first request.
-            WeightFile::open_mmap(path).and_then(|wf| {
+            open_weights(path).and_then(|wf| {
                 let spec = wf.net_spec()?;
                 let contract = ModelContract {
                     input_shape: spec.input(),
@@ -737,7 +746,7 @@ impl ModelRegistry {
     ) -> anyhow::Result<(Arc<Router>, Arc<WeightFile>, ModelContract)> {
         let weights = match weights {
             Some(w) => w,
-            None => Arc::new(WeightFile::open_mmap(path)?),
+            None => Arc::new(open_weights(path)?),
         };
         let engine = BnnEngine::from_weight_file(&weights)?;
         let plan = engine.plan(self.cfg.kernel, self.cfg.max_batch)?;
@@ -756,6 +765,20 @@ impl ModelRegistry {
         };
         Ok((Arc::new(router), weights, contract))
     }
+}
+
+/// [`WeightFile::open_mmap`] behind the fault-injection hook: the
+/// registry's single choke point for weight reads, so a chaos
+/// [`FaultPlan`](crate::testing::chaos::FaultPlan) with
+/// `fail_weight_reads` makes mount / reload / lazy-build paths fail in
+/// a controlled, typed way.
+fn open_weights(path: &std::path::Path) -> anyhow::Result<WeightFile> {
+    anyhow::ensure!(
+        !crate::testing::chaos::weight_read_fault(),
+        "chaos: injected weight-read failure for {}",
+        path.display()
+    );
+    WeightFile::open_mmap(path)
 }
 
 /// Park a retired router on a detached drain thread: wait until every

@@ -32,13 +32,15 @@
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Router, SubmitError};
+use crate::coordinator::{
+    ReplyError, RequestError, Router, SubmitError, SubmitOptions,
+};
 use crate::data::normalize_batch;
 use crate::utils::json::Json;
 use crate::{log_error, log_info};
@@ -50,6 +52,10 @@ use super::registry::{
 
 /// How long `?wait=1` admin calls block for a build to settle.
 const ADMIN_WAIT: Duration = Duration::from_secs(60);
+
+/// Server-side cap on a client-requested `?timeout_ms=`: whatever the
+/// client asks for, no request occupies the pipeline longer than this.
+const MAX_TIMEOUT_MS: u64 = 60_000;
 
 /// The HTTP front end over a dynamic [`ModelRegistry`].  Dispatch is
 /// by model name; each request is decoded against its target's
@@ -289,12 +295,33 @@ impl Service {
             Ok(r) => r,
             Err(e) => return registry_err(&e),
         };
+        // Circuit open: every replica of this model is mid-respawn.
+        // Shed at the door with a retry hint instead of queueing into
+        // a pool that cannot currently drain.
+        if router.circuit_open() {
+            return err_json(503, "all replicas restarting")
+                .with_header("Retry-After", "1");
+        }
+        let opts = match req.query.get("timeout_ms") {
+            Some(v) => match v.parse::<u64>() {
+                Ok(ms) => SubmitOptions::with_timeout(
+                    Duration::from_millis(ms.min(MAX_TIMEOUT_MS)),
+                ),
+                Err(_) => {
+                    return err_json(
+                        400,
+                        "bad timeout_ms (want integer milliseconds)",
+                    )
+                }
+            },
+            None => SubmitOptions::default(),
+        };
         let (c, h, w) = router.input_shape();
         let image = match decode_image(req, c, h, w) {
             Ok(i) => i,
             Err(e) => return err_json(400, &format!("{e:#}")),
         };
-        match router.submit_wait(image) {
+        match router.submit_wait_deadline(image, opts) {
             Ok(reply) => {
                 // Label-less models answer with numeric labels.
                 let label = router.label_for(reply.class);
@@ -318,14 +345,25 @@ impl Service {
                 ]);
                 HttpResponse::json(200, body.to_string())
             }
-            Err(SubmitError::QueueFull) => err_json(429, "queue full"),
+            Err(RequestError::Rejected(SubmitError::QueueFull)) => {
+                err_json(429, "queue full")
+            }
             // Unreachable (the image was sized from the router's own
             // contract), but kept total: a shape error is the client's
             // fault, never a 500.
-            Err(e @ SubmitError::WrongShape { .. }) => {
-                err_json(400, &e.to_string())
+            Err(RequestError::Rejected(e @ SubmitError::WrongShape {
+                ..
+            })) => err_json(400, &e.to_string()),
+            Err(RequestError::Rejected(SubmitError::Shutdown))
+            | Err(RequestError::Failed(ReplyError::Shutdown)) => {
+                err_json(503, "shutting down")
             }
-            Err(SubmitError::Shutdown) => err_json(503, "shutting down"),
+            Err(RequestError::Failed(ReplyError::DeadlineExceeded)) => {
+                err_json(504, "deadline exceeded")
+            }
+            // Replica panic / backend failure: the request is lost but
+            // typed — the supervisor is already respawning the replica.
+            Err(RequestError::Failed(e)) => err_json(500, &e.to_string()),
         }
     }
 }
@@ -369,6 +407,7 @@ fn status_descriptor(st: &ModelStatus) -> Json {
         ("generation", Json::Num(st.generation as f64)),
         ("resident", Json::Bool(st.resident)),
         ("reloadable", Json::Bool(st.reloadable)),
+        ("circuit_open", Json::Bool(st.circuit_open)),
         (
             "error",
             match &st.error {
@@ -452,11 +491,29 @@ pub struct ServeOptions {
     pub addr: String,
     /// Connection-handler threads.
     pub threads: usize,
+    /// Open-connection cap: accepts past this are answered `503` with
+    /// a `Retry-After` hint and closed immediately, keeping the
+    /// handler pool responsive for the connections already admitted.
+    pub max_connections: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:8080".into(), threads: 4 }
+        Self {
+            addr: "127.0.0.1:8080".into(),
+            threads: 4,
+            max_connections: 256,
+        }
+    }
+}
+
+/// RAII decrement of the serve loop's open-connection count — runs on
+/// normal return AND on unwind out of a handler.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -477,11 +534,25 @@ pub fn serve(
         let _ = tx.send(addr);
     }
     let pool = crate::utils::threadpool::ThreadPool::new(opts.threads);
+    let active = Arc::new(AtomicUsize::new(0));
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
+                if active.load(Ordering::Relaxed) >= opts.max_connections {
+                    // Shed at the door, without occupying a pool slot.
+                    let _ = HttpResponse::text(
+                        503,
+                        "server at connection capacity\n",
+                    )
+                    .with_header("Retry-After", "1")
+                    .write(&mut stream, false);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::Relaxed);
+                let guard = ConnGuard(Arc::clone(&active));
                 let svc = Arc::clone(&service);
                 pool.execute(move || {
+                    let _guard = guard;
                     if let Err(e) = handle_connection(stream, &svc) {
                         crate::log_debug!("connection error: {e:#}");
                     }
@@ -504,8 +575,17 @@ fn handle_connection(stream: TcpStream, service: &Service) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     loop {
-        let Some(req) = HttpRequest::read(&mut reader)? else {
-            return Ok(()); // clean close
+        let req = match HttpRequest::read(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()), // clean close
+            Err(e) => {
+                // A parse/framing error leaves unknown bytes on the
+                // stream, so the connection cannot be reused: answer a
+                // best-effort 400 and close.
+                let _ = err_json(400, &format!("{e:#}"))
+                    .write(&mut writer, false);
+                return Err(e);
+            }
         };
         let keep_alive = req.wants_keep_alive();
         let resp = service.handle(req);
@@ -562,6 +642,7 @@ mod tests {
             query: BTreeMap::new(),
             headers: BTreeMap::new(),
             body: vec![],
+            version: "HTTP/1.1".into(),
         }
     }
 
@@ -576,6 +657,7 @@ mod tests {
             query,
             headers: BTreeMap::new(),
             body,
+            version: "HTTP/1.1".into(),
         }
     }
 
@@ -605,6 +687,8 @@ mod tests {
         assert_eq!(mock.get("state").unwrap().as_str(), Some("ready"));
         assert_eq!(mock.get("resident").unwrap().as_bool(), Some(true));
         assert_eq!(mock.get("reloadable").unwrap().as_bool(), Some(false));
+        assert_eq!(mock.get("circuit_open").unwrap().as_bool(),
+                   Some(false));
         let tiny = by_name("tiny");
         assert_eq!(tiny.get("image_bytes").unwrap().as_usize(), Some(16));
         assert_eq!(tiny.get("classes").unwrap().as_usize(), Some(3));
@@ -695,6 +779,39 @@ mod tests {
     fn unknown_path_404() {
         let svc = mock_service();
         assert_eq!(svc.handle(get("/nope")).status, 404);
+    }
+
+    #[test]
+    fn classify_timeout_ms_maps_to_504_and_bad_values_to_400() {
+        let svc = mock_service();
+        let mut req = post(None, vec![1u8; 3 * 32 * 32]);
+        req.query.insert("timeout_ms".into(), "soon".into());
+        assert_eq!(svc.handle(req).status, 400);
+
+        // A model slow enough (200ms per batch) that a 1ms deadline
+        // always expires before inference answers.
+        let mut routers = BTreeMap::new();
+        routers.insert(
+            "slow".to_string(),
+            Router::start(
+                |_| Ok(Box::new(MockBackend::new(4, 200))
+                       as Box<dyn bitkernel_backend::Backend>),
+                RouterConfig { replicas: 1, ..RouterConfig::default() },
+            )
+            .unwrap(),
+        );
+        let svc = Service::new(routers, "slow");
+        let mut req = post(None, vec![1u8; 3 * 32 * 32]);
+        req.query.insert("timeout_ms".into(), "1".into());
+        let resp = svc.handle(req);
+        assert_eq!(resp.status, 504, "{}",
+                   String::from_utf8_lossy(&resp.body));
+        // The same model with a generous budget still answers 200.
+        let mut req = post(None, vec![1u8; 3 * 32 * 32]);
+        req.query.insert("timeout_ms".into(), "10000".into());
+        let resp = svc.handle(req);
+        assert_eq!(resp.status, 200, "{}",
+                   String::from_utf8_lossy(&resp.body));
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Fault-injection harness (offline substrate for a chaos-mesh /
+//! failpoint crate): a process-global, explicitly installed
+//! [`FaultPlan`] that the serving pipeline consults at a few
+//! well-chosen choke points.
+//!
+//! Hooks (no-ops — one relaxed atomic load — unless a plan is
+//! installed):
+//!
+//! * [`before_infer`] — called by each replica worker just before
+//!   `Backend::infer`; can delay the batch ([`FaultPlan::delay`]) or
+//!   panic the replica ([`FaultPlan::panic_on`] /
+//!   [`FaultPlan::arm_panic`]), which exercises the router's
+//!   catch_unwind supervision and respawn path;
+//! * [`weight_read_fault`] — consulted by the model registry before
+//!   opening a weight file; [`FaultPlan::fail_weight_reads`] makes the
+//!   next N opens fail, which exercises mount/respawn error paths.
+//!
+//! Installation is scoped: [`FaultPlan::install`] returns a
+//! [`ChaosGuard`] that uninstalls on drop AND holds a process-wide
+//! install lock, so concurrent `#[test]`s that each install a plan
+//! serialize instead of contaminating each other.  The `serve` CLI
+//! installs a plan for the process lifetime from the
+//! `BITKERNEL_CHAOS` environment variable ([`FaultPlan::from_env`]) —
+//! e.g. `BITKERNEL_CHAOS='panic=0@3;delay_ms=20;fail_reads=2'` — which
+//! is how `examples/chaos_smoke.rs`-style drills run against a real
+//! server binary.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock};
+use std::time::Duration;
+
+/// Fast path: is ANY plan installed?  Keeps the request-path cost of
+/// an idle harness to one relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// The installed plan (present iff `ENABLED`).
+static ACTIVE: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+/// Serializes installs across threads/tests; held by [`ChaosGuard`].
+static INSTALL: Mutex<()> = Mutex::new(());
+
+/// A set of faults to inject, built with the fluent methods or parsed
+/// from `BITKERNEL_CHAOS` ([`FaultPlan::from_env`]), then activated
+/// with [`FaultPlan::install`].
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// One-shot scheduled panics: replica `r` panics when it reaches
+    /// batch sequence number >= `n` (1-based, per-replica).
+    scheduled: Mutex<Vec<(usize, u64)>>,
+    /// One-shot armed panics: replica `r` panics on its next batch.
+    armed: Mutex<Vec<usize>>,
+    /// Artificial delay before every `Backend::infer`.
+    delay: Option<Duration>,
+    /// Fail the next N weight-file opens seen by the registry.
+    fail_reads: AtomicU64,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing until faults are added).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a one-shot panic: replica `replica` panics when its
+    /// per-replica batch counter reaches `batch` (1-based; `>=` so the
+    /// fault cannot be skipped over).
+    pub fn panic_on(self, replica: usize, batch: u64) -> Self {
+        self.scheduled
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push((replica, batch));
+        self
+    }
+
+    /// Delay every inference by `d` (keeps batches in flight long
+    /// enough for tests to race deadlines and panics against them).
+    pub fn delay(mut self, d: Duration) -> Self {
+        self.delay = Some(d);
+        self
+    }
+
+    /// Make the next `n` weight-file opens fail with an injected
+    /// error (mount/lazy-build/respawn error paths).
+    pub fn fail_weight_reads(self, n: u64) -> Self {
+        self.fail_reads.store(n, Ordering::Relaxed);
+        self
+    }
+
+    /// Arm a one-shot panic on `replica`'s NEXT batch — callable
+    /// after install (e.g. from a bench driver thread injecting a
+    /// panic every second).
+    pub fn arm_panic(&self, replica: usize) {
+        self.armed
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(replica);
+    }
+
+    /// Parse a plan from the `BITKERNEL_CHAOS` grammar:
+    /// `;`-separated directives, each `panic=<replica>@<batch>`,
+    /// `delay_ms=<n>`, or `fail_reads=<n>` (repeatable `panic=`).
+    pub fn from_env(spec: &str) -> anyhow::Result<Self> {
+        let mut plan = Self::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("chaos directive '{part}' is not key=value")
+            })?;
+            match key {
+                "panic" => {
+                    let (r, b) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "chaos panic '{val}' is not <replica>@<batch>"
+                        )
+                    })?;
+                    plan = plan.panic_on(r.parse()?, b.parse()?);
+                }
+                "delay_ms" => {
+                    plan = plan
+                        .delay(Duration::from_millis(val.parse()?));
+                }
+                "fail_reads" => {
+                    plan = plan.fail_weight_reads(val.parse()?);
+                }
+                _ => anyhow::bail!("unknown chaos directive '{key}'"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Install this plan process-wide, returning a guard that
+    /// uninstalls it on drop.  Blocks while another plan is installed
+    /// (tests running in parallel serialize here instead of injecting
+    /// faults into each other's routers).
+    pub fn install(self) -> ChaosGuard {
+        let lock = INSTALL
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let plan = Arc::new(self);
+        *ACTIVE.write().unwrap_or_else(PoisonError::into_inner) =
+            Some(Arc::clone(&plan));
+        ENABLED.store(true, Ordering::SeqCst);
+        ChaosGuard { plan, _lock: lock }
+    }
+
+    /// Execute the infer-side faults for (`replica`, `batch_seq`).
+    fn fire_before_infer(&self, replica: usize, batch_seq: u64) {
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        let armed = {
+            let mut armed = self
+                .armed
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            match armed.iter().position(|&r| r == replica) {
+                Some(i) => {
+                    armed.swap_remove(i);
+                    true
+                }
+                None => false,
+            }
+        };
+        let scheduled = {
+            let mut sched = self
+                .scheduled
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            match sched
+                .iter()
+                .position(|&(r, b)| r == replica && batch_seq >= b)
+            {
+                Some(i) => {
+                    sched.swap_remove(i);
+                    true
+                }
+                None => false,
+            }
+        };
+        if armed || scheduled {
+            panic!(
+                "chaos: injected panic on replica {replica} \
+                 batch {batch_seq}"
+            );
+        }
+    }
+}
+
+/// Scope of an installed [`FaultPlan`]: uninstalls on drop and holds
+/// the process-wide install lock for its lifetime.
+pub struct ChaosGuard {
+    plan: Arc<FaultPlan>,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl ChaosGuard {
+    /// The installed plan — e.g. to [`FaultPlan::arm_panic`] more
+    /// faults while the plan is live.
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        *ACTIVE.write().unwrap_or_else(PoisonError::into_inner) = None;
+    }
+}
+
+/// The currently installed plan, if any.
+fn active() -> Option<Arc<FaultPlan>> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    ACTIVE
+        .read()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone()
+}
+
+/// Replica-worker hook, called just before `Backend::infer` with the
+/// replica id and that replica's 1-based batch sequence number.  May
+/// sleep (injected delay) or panic (injected replica fault); a no-op
+/// unless a [`FaultPlan`] is installed.
+pub fn before_infer(replica: usize, batch_seq: u64) {
+    if let Some(plan) = active() {
+        plan.fire_before_infer(replica, batch_seq);
+    }
+}
+
+/// Registry hook, consulted before opening a weight file.  Returns
+/// `true` when the open should fail (consuming one injected fault);
+/// always `false` with no plan installed.
+pub fn weight_read_fault() -> bool {
+    match active() {
+        Some(plan) => plan
+            .fail_reads
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                n.checked_sub(1)
+            })
+            .is_ok(),
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hooks_are_noops_without_a_plan() {
+        // Hold the install lock so no parallel test's plan is active,
+        // then check the hooks are inert: no panic, no weight faults.
+        let _lock =
+            INSTALL.lock().unwrap_or_else(PoisonError::into_inner);
+        before_infer(0, 1);
+        assert!(!weight_read_fault());
+    }
+
+    #[test]
+    fn env_grammar_round_trips() {
+        let plan = FaultPlan::from_env(
+            "panic=1@3; delay_ms=5;fail_reads=2;panic=0@9",
+        )
+        .unwrap();
+        assert_eq!(plan.delay, Some(Duration::from_millis(5)));
+        assert_eq!(plan.fail_reads.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            *plan.scheduled.lock().unwrap(),
+            vec![(1, 3), (0, 9)]
+        );
+        assert!(FaultPlan::from_env("panic=oops").is_err());
+        assert!(FaultPlan::from_env("warp=9").is_err());
+        assert!(FaultPlan::from_env("").unwrap().delay.is_none());
+    }
+
+    #[test]
+    fn install_scopes_faults_and_guard_uninstalls() {
+        let guard = FaultPlan::new().fail_weight_reads(2).install();
+        assert!(weight_read_fault());
+        assert!(weight_read_fault());
+        assert!(!weight_read_fault(), "budget exhausted");
+        drop(guard);
+        assert!(!weight_read_fault(), "uninstalled");
+    }
+
+    #[test]
+    fn scheduled_and_armed_panics_fire_once() {
+        let guard = FaultPlan::new().panic_on(1, 2).install();
+        before_infer(0, 2); // other replica: no fault
+        before_infer(1, 1); // before the scheduled batch
+        let caught = std::panic::catch_unwind(|| before_infer(1, 5));
+        assert!(caught.is_err(), ">= semantics: late batch still fires");
+        before_infer(1, 6); // one-shot: consumed
+        guard.plan().arm_panic(0);
+        let caught = std::panic::catch_unwind(|| before_infer(0, 7));
+        assert!(caught.is_err());
+        before_infer(0, 8); // armed fault consumed
+    }
+}

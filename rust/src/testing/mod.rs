@@ -6,6 +6,11 @@
 //! needs (bit-packing round trips, kernel equivalences, batcher
 //! invariants).
 
+/// Fault-injection harness for the serving pipeline (installable
+/// `FaultPlan`: scheduled replica panics, inference delays, weight-read
+/// faults) — see `rust/tests/chaos.rs`.
+pub mod chaos;
+
 use crate::utils::Rng;
 
 /// Outcome of a property check.

@@ -1,0 +1,291 @@
+//! Chaos suite: fault-injection drills against the real serving
+//! pipeline (native engine, replicated router, registry).
+//!
+//! The acceptance property, end to end: under injected replica panics
+//! and inference delays, EVERY client gets either a correct reply or a
+//! typed error within its deadline — zero hangs, zero silent drops —
+//! the pool converges back to full replica strength, and every reply
+//! that does arrive is bit-identical to `forward_reference`.
+//!
+//! Each test installs a `FaultPlan`; the install guard serializes the
+//! tests against each other (process-global harness), so no test sees
+//! another's faults.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, MockBackend, NativeBackend, ReplyError,
+    RequestError, Router, RouterConfig, SubmitError, SubmitOptions,
+};
+use bitkernel::data::normalize_batch;
+use bitkernel::model::{EngineKernel, NetSpec};
+use bitkernel::server::{ModelRegistry, ModelState, RegistryConfig};
+use bitkernel::testing::chaos::FaultPlan;
+use bitkernel::testing::{synthetic_engine, synthetic_weight_file};
+
+const KERNEL: EngineKernel = EngineKernel::Xnor(XnorImpl::Auto);
+
+/// Deterministic fake image bytes (same generator as tests/serving.rs).
+fn pixels(salt: usize) -> Vec<u8> {
+    (0..3 * 32 * 32).map(|i| ((i * 31 + salt * 7) % 256) as u8).collect()
+}
+
+#[test]
+fn hammered_router_survives_injected_panics_without_hangs() {
+    let engine = synthetic_engine([8, 8, 8, 8, 8, 8, 16, 16, 10], 42);
+    let plan = engine.plan(KERNEL, 4).unwrap();
+
+    // Per-image oracle through the unfused reference path: surviving
+    // replies must be bit-identical to it, panics notwithstanding.
+    let n_salts = 8usize;
+    let oracles: Vec<Vec<f32>> = (0..n_salts)
+        .map(|s| {
+            let x = normalize_batch(&pixels(s), 1, 32, 32, 3);
+            engine.forward_reference(&x, KERNEL).data().to_vec()
+        })
+        .collect();
+    let images: Vec<Vec<f32>> = (0..n_salts)
+        .map(|s| normalize_batch(&pixels(s), 1, 32, 32, 3).into_data())
+        .collect();
+
+    // Two scheduled one-shot panics plus a small per-batch delay that
+    // keeps batches in flight long enough for clients to pile up
+    // behind the faults.
+    let guard = FaultPlan::new()
+        .delay(Duration::from_millis(2))
+        .panic_on(1, 2)
+        .panic_on(3, 4)
+        .install();
+
+    let router = Arc::new(
+        Router::start(
+            move |_replica| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 256,
+                replicas: 4,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap(),
+    );
+
+    let clients = 8usize;
+    let per_client = 30usize;
+    let ok = Arc::new(AtomicUsize::new(0));
+    let panicked = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let router = Arc::clone(&router);
+        let images = images.clone();
+        let oracles = oracles.clone();
+        let ok = Arc::clone(&ok);
+        let panicked = Arc::clone(&panicked);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let salt = (t * per_client + i) % images.len();
+                loop {
+                    match router.submit_wait_deadline(
+                        images[salt].clone(),
+                        SubmitOptions::with_timeout(Duration::from_secs(
+                            30,
+                        )),
+                    ) {
+                        Ok(reply) => {
+                            assert_eq!(
+                                reply.logits.len(),
+                                oracles[salt].len()
+                            );
+                            for (j, (&got, &want)) in reply
+                                .logits
+                                .iter()
+                                .zip(&oracles[salt])
+                                .enumerate()
+                            {
+                                assert_eq!(
+                                    got.to_bits(),
+                                    want.to_bits(),
+                                    "salt {salt} logit {j}: {got} vs \
+                                     {want} — chaos must never corrupt \
+                                     a surviving reply"
+                                );
+                            }
+                            ok.fetch_add(1, Ordering::SeqCst);
+                            break;
+                        }
+                        Err(RequestError::Rejected(
+                            SubmitError::QueueFull,
+                        )) => std::thread::yield_now(),
+                        Err(RequestError::Failed(
+                            ReplyError::ReplicaPanicked { .. },
+                        )) => {
+                            panicked.fetch_add(1, Ordering::SeqCst);
+                            break;
+                        }
+                        // DeadlineExceeded here would mean a hung
+                        // request — the exact bug supervision exists
+                        // to prevent — so it fails the test, as does
+                        // any other error.
+                        Err(e) => {
+                            panic!("client {t} request {i}: {e}")
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Accounting closes: every request ended in a reply or a typed
+    // panic error, within its deadline.
+    let ok = ok.load(Ordering::SeqCst);
+    let panicked = panicked.load(Ordering::SeqCst);
+    assert_eq!(ok + panicked, clients * per_client);
+    assert!(panicked >= 1, "the scheduled panics must strand requests");
+
+    // The pool converges back to full replica strength.
+    let t0 = Instant::now();
+    while router.healthy_replicas() < 4 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "pool never recovered to 4 healthy replicas"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(!router.circuit_open());
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.panics, 2, "exactly the two scheduled faults");
+    let restarts: u64 = snap.replicas.iter().map(|r| r.restarts).sum();
+    assert_eq!(restarts, 2, "every panic respawns exactly once");
+    assert_eq!(snap.completed, ok as u64);
+    drop(guard);
+}
+
+#[test]
+fn circuit_opens_while_every_replica_restarts_then_recloses() {
+    // The factory refuses to rebuild while `factory_down` holds, so
+    // panicked replicas stay in their backoff loop — that is the
+    // all-replicas-restarting state the circuit breaker reports.
+    let factory_down = Arc::new(AtomicBool::new(false));
+    let down = Arc::clone(&factory_down);
+    let router = Arc::new(
+        Router::start(
+            move |_replica| {
+                anyhow::ensure!(
+                    !down.load(Ordering::SeqCst),
+                    "chaos: factory down"
+                );
+                Ok(Box::new(MockBackend::new(2, 0)) as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 16,
+                replicas: 2,
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(router.healthy_replicas(), 2);
+    assert!(!router.circuit_open());
+
+    let guard = FaultPlan::new().install();
+    factory_down.store(true, Ordering::SeqCst);
+    guard.plan().arm_panic(0);
+    guard.plan().arm_panic(1);
+    // One request per replica trips both armed faults; each comes back
+    // as a typed error, not a hang.
+    for i in 0..2 {
+        let err = router
+            .submit_wait(vec![0.0; 3 * 32 * 32])
+            .expect_err("armed fault must strand the request");
+        assert!(
+            matches!(
+                err,
+                RequestError::Failed(ReplyError::ReplicaPanicked { .. })
+            ),
+            "request {i}: {err}"
+        );
+    }
+    // Both replicas are now looping on the dead factory.
+    let t0 = Instant::now();
+    while !router.circuit_open() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "circuit never opened with every replica down"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(router.healthy_replicas(), 0);
+
+    // Restore the factory: the backoff loop respawns both replicas and
+    // the circuit recloses without any external intervention.
+    factory_down.store(false, Ordering::SeqCst);
+    let t0 = Instant::now();
+    while router.healthy_replicas() < 2 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "pool never recovered after the factory came back"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(!router.circuit_open());
+    let reply = router.submit_wait(vec![0.25; 3 * 32 * 32]).unwrap();
+    assert_eq!(reply.logits.len(), 10);
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.panics, 2);
+    assert_eq!(
+        snap.replicas.iter().map(|r| r.restarts).sum::<u64>(),
+        2
+    );
+    drop(guard);
+}
+
+#[test]
+fn injected_weight_read_faults_fail_mounts_typed_then_recover() {
+    let dir = std::env::temp_dir()
+        .join(format!("bk-chaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = NetSpec::builder((1, 4, 4))
+        .conv(2, 3)
+        .linear(3)
+        .build()
+        .unwrap();
+    let path = dir.join("m.bkw");
+    synthetic_weight_file(&spec, 9).save(&path).unwrap();
+
+    let guard = FaultPlan::new().fail_weight_reads(1).install();
+    let reg = ModelRegistry::new(RegistryConfig::default());
+    let entry = reg.mount("m", &path, false).unwrap();
+    let st = entry.wait_settled(Duration::from_secs(30));
+    assert_eq!(st.state, ModelState::Failed);
+    assert!(
+        st.error.as_deref().unwrap_or("").contains("chaos"),
+        "the injected failure must be the stored, typed error: {:?}",
+        st.error
+    );
+
+    // The fault budget is spent: remounting the same file succeeds.
+    reg.unmount("m").unwrap();
+    let entry = reg.mount("m", &path, false).unwrap();
+    let st = entry.wait_settled(Duration::from_secs(30));
+    assert_eq!(st.state, ModelState::Ready, "{:?}", st.error);
+    let (router, _generation) = reg.router_for("m").unwrap();
+    let reply =
+        router.submit_wait(vec![0.5; router.image_elems()]).unwrap();
+    assert_eq!(reply.logits.len(), 3);
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}

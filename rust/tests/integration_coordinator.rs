@@ -64,7 +64,7 @@ fn router_with_native_engine_classifies_correctly() {
         })
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let reply = rx.recv().unwrap();
+        let reply = rx.recv().unwrap().unwrap();
         if reply.class == ds.labels[i] as usize {
             correct += 1;
         }
@@ -104,7 +104,11 @@ fn http_service_end_to_end() {
     let server = std::thread::spawn(move || {
         serve(
             svc2,
-            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 2,
+                ..ServeOptions::default()
+            },
             stop2,
             Some(ready_tx),
         )
@@ -159,7 +163,12 @@ fn service_supports_multiple_models() {
     let stop2 = Arc::clone(&stop);
     let svc2 = Arc::clone(&service);
     let server = std::thread::spawn(move || {
-        serve(svc2, &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+        serve(svc2,
+              &ServeOptions {
+                  addr: "127.0.0.1:0".into(),
+                  threads: 2,
+                  ..ServeOptions::default()
+              },
               stop2, Some(ready_tx)).unwrap();
     });
     let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
@@ -176,7 +185,7 @@ fn service_supports_multiple_models() {
 }
 
 #[test]
-fn failing_backend_drops_requests_and_counts_rejections() {
+fn failing_backend_answers_typed_errors_and_counts_rejections() {
     /// Backend that errors on every batch (failure injection).
     struct FailingBackend;
     impl Backend for FailingBackend {
@@ -205,11 +214,24 @@ fn failing_backend_drops_requests_and_counts_rejections() {
     )
     .unwrap();
     let rx = router.submit(vec![0.0; 3 * 32 * 32]).unwrap();
-    // The reply channel must disconnect (request dropped), not hang.
-    assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+    // The failure must arrive as a TYPED reply (never a hang, never a
+    // bare disconnect): a backend error is not a panic, so the replica
+    // survives without a respawn.
+    match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+        Err(bitkernel::coordinator::ReplyError::BackendFailed(msg)) => {
+            assert!(msg.contains("injected fault"), "{msg}");
+        }
+        other => panic!("expected BackendFailed, got {other:?}"),
+    }
     let snap = router.metrics().snapshot();
     assert_eq!(snap.rejected, 1);
     assert_eq!(snap.completed, 0);
+    assert_eq!(snap.panics, 0, "a backend error is not a panic");
+    assert_eq!(
+        snap.replicas.iter().map(|r| r.restarts).sum::<u64>(),
+        0,
+        "a backend error must not trigger a respawn"
+    );
 }
 
 #[test]
@@ -260,8 +282,10 @@ fn replies_bit_identical_for_1_and_4_replicas() {
             .iter()
             .map(|img| router.submit(img.clone()).unwrap())
             .collect();
-        let out: Vec<Vec<f32>> =
-            rxs.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+        let out: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().logits)
+            .collect();
         router.shutdown();
         out
     };
@@ -306,7 +330,8 @@ fn shutdown_drains_every_accepted_request() {
     for (i, rx) in rxs.into_iter().enumerate() {
         let reply = rx
             .recv_timeout(Duration::from_secs(5))
-            .unwrap_or_else(|e| panic!("request {i} lost in drain: {e}"));
+            .unwrap_or_else(|e| panic!("request {i} lost in drain: {e}"))
+            .unwrap_or_else(|e| panic!("request {i} failed in drain: {e}"));
         assert_eq!(reply.logits.len(), 10);
     }
     let snap = metrics.snapshot();
@@ -348,7 +373,7 @@ fn saturated_admission_queue_surfaces_queue_full() {
                            queue_cap=2 must shed load");
     // Every accepted request still completes.
     for rx in kept {
-        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
     }
     let snap = router.metrics().snapshot();
     assert_eq!(snap.rejected, rejected);

@@ -102,7 +102,11 @@ fn boot(registry: Arc<ModelRegistry>) -> TestServer {
     let handle = std::thread::spawn(move || {
         serve(
             service,
-            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 4 },
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 4,
+                ..ServeOptions::default()
+            },
             stop2,
             Some(ready_tx),
         )

@@ -91,7 +91,11 @@ fn one_endpoint_serves_heterogeneous_models_bit_identical() {
     let server = std::thread::spawn(move || {
         serve(
             svc2,
-            &ServeOptions { addr: "127.0.0.1:0".into(), threads: 2 },
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 2,
+                ..ServeOptions::default()
+            },
             stop2,
             Some(ready_tx),
         )
@@ -231,6 +235,7 @@ fn randomized_shapes_validate_submits_and_bodies() {
             query: BTreeMap::new(),
             headers: BTreeMap::new(),
             body,
+            version: "HTTP/1.1".into(),
         };
         assert_eq!(svc.handle(post(vec![7u8; elems + 1])).status, 400,
                    "case {case}");

@@ -65,6 +65,19 @@ echo "== lifecycle smoke: admin API edits a live server end to end"
 # unmounts (clean 404s).  Artifact-free.
 cargo run --release --example lifecycle_smoke
 
+echo "== chaos: replica supervision, deadlines, fault injection"
+# Hammers a 4-replica router under injected panics/delays: every
+# client gets a reply or a typed error within its deadline (zero
+# hangs), survivors stay bit-identical to forward_reference, and the
+# pool converges back to full strength.  Artifact-free.
+cargo test -q --test chaos
+
+echo "== chaos smoke: injected faults over real TCP"
+# Boots the HTTP service with a live fault plan: delayed classify
+# stays bit-identical, timeout_ms races the delay to a typed 504,
+# armed panics surface as typed 500s, and /metrics shows the respawns.
+cargo run --release --example chaos_smoke
+
 echo "== cargo doc --no-deps (rustdoc warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
@@ -85,5 +98,8 @@ cargo bench --bench batching -- --quick
 
 echo "== bench smoke: reload under load (--quick; asserts 0 lost)"
 cargo bench --bench lifecycle -- --quick
+
+echo "== bench smoke: panic injection under load (--quick; asserts 0 lost)"
+cargo bench --bench chaos -- --quick
 
 echo "ci.sh: all green"
