@@ -3,7 +3,8 @@
 #   make ci        — tier-1 gate: build + tests + docs + fmt + clippy
 #                    + smoke runs
 #   make bench     — kernel ablation -> BENCH_2.json (per-impl GiOP/s
-#                    for the Table-2 layer shapes), the replica
+#                    for the Table-2 layer shapes, plus the
+#                    quantization-scheme ablation table), the replica
 #                    batching sweep (--quick) -> BENCH_3.json, the
 #                    reload-under-load run (--quick, request loss must
 #                    be 0) -> BENCH_6.json, and the panic-injection run

@@ -142,6 +142,55 @@ def binarize_params(params: Dict[str, Any]) -> Dict[str, Any]:
             for k, v in params.items()}
 
 
+def _per_channel_mean_abs(w: jax.Array) -> jax.Array:
+    """E|w| per output channel (axis 0) — XNOR-Net's optimal scale."""
+    return jnp.abs(w.reshape(w.shape[0], -1)).mean(axis=1)
+
+
+def alpha_params(cfg: ModelConfig, params: Dict[str, Any]) -> Dict[str, Any]:
+    """Latent floats -> the xnor_alpha scheme's export pytree.
+
+    Every binarized layer carries sign(w) plus a per-output-channel
+    scale alpha = E|w| (Rastegari et al. 2016: the L2-optimal scalar
+    for approximating w by alpha * sign(w)).  Non-binarized layers
+    (conv1) keep plain sign(w), matching binarize_params.
+    """
+    alpha_layers = ({s.name for s in cfg.conv_specs if s.binarized}
+                    | {s.name for s in cfg.fc_specs})
+    out: Dict[str, Any] = {}
+    for k, v in params.items():
+        if "w" not in v:
+            out[k] = dict(v)
+        elif k in alpha_layers:
+            out[k] = {"w": sign(v["w"]),
+                      "alpha": _per_channel_mean_abs(v["w"])}
+        else:
+            out[k] = {"w": sign(v["w"])}
+    return out
+
+
+def ternarize_params(params: Dict[str, Any],
+                     delta_scale: float = 0.7) -> Dict[str, Any]:
+    """Latent floats -> {-1, 0, +1} ternary weights (TWN thresholding).
+
+    Per output channel, weights inside (-delta, +delta) with
+    delta = delta_scale * E|w| become exact 0.0; the rest keep their
+    sign — Li & Liu 2016's threshold heuristic.  BN affines untouched.
+    """
+    out: Dict[str, Any] = {}
+    for k, v in params.items():
+        if "w" not in v:
+            out[k] = dict(v)
+            continue
+        w = v["w"]
+        delta = delta_scale * _per_channel_mean_abs(w)
+        d = delta.reshape((-1,) + (1,) * (w.ndim - 1))
+        out[k] = {"w": jnp.where(
+            w > d, 1.0, jnp.where(w < -d, -1.0, 0.0)
+        ).astype(jnp.float32)}
+    return out
+
+
 def pack_params(cfg: ModelConfig, params: Dict[str, Any]) -> Dict[str, Any]:
     """Float params -> the xnor variant's packed-weight pytree.
 

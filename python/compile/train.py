@@ -18,6 +18,9 @@ carries its own architecture):
         3 = sign
         4 = flatten
         5 = linear:   u32le dout; u8 binarized
+        6 = scheme:   u32le scheme code (SCHEMES; emitted first, only
+                      for non-default schemes — default-scheme files
+                      stay byte-identical to pre-scheme ones)
     u32le  n_tensors
     n_tensors * {
         u16le name_len, name (utf-8),
@@ -190,15 +193,29 @@ OP_BATCHNORM = 2
 OP_SIGN = 3
 OP_FLATTEN = 4
 OP_LINEAR = 5
+OP_SCHEME = 6
+
+# Quantization-scheme wire codes (mirror of QuantScheme::wire_byte).
+SCHEMES = {
+    "sign_sign": 0,
+    "xnor_alpha": 1,
+    "binary_weight": 2,
+    "ternary_weight": 3,
+}
+DEFAULT_SCHEME = "sign_sign"
 
 
-def spec_ops(cfg: model.ModelConfig) -> list:
+def spec_ops(cfg: model.ModelConfig,
+             scheme: str = DEFAULT_SCHEME) -> list:
     """ModelConfig -> the canonical NetSpec op list of the rust IR:
     [Sign]? Conv2d [MaxPool2] BatchNorm per conv, Flatten, then
-    Sign Linear BatchNorm per fc (all fcs are binarized)."""
+    [Sign] Linear BatchNorm per fc (all fcs are binarized).  Under
+    binary_weight (real activations) the grammar inverts: no Sign ops
+    anywhere — only the weights are binarized."""
+    signs = scheme != "binary_weight"
     ops: list = []
     for s in cfg.conv_specs:
-        if s.binarized:
+        if s.binarized and signs:
             ops.append((OP_SIGN,))
         ops.append((OP_CONV2D, s.cout, s.ksize, s.stride, s.pad,
                     1 if s.binarized else 0))
@@ -207,16 +224,23 @@ def spec_ops(cfg: model.ModelConfig) -> list:
         ops.append((OP_BATCHNORM,))
     ops.append((OP_FLATTEN,))
     for s in cfg.fc_specs:
-        ops.append((OP_SIGN,))
+        if signs:
+            ops.append((OP_SIGN,))
         ops.append((OP_LINEAR, s.dout, 1))
         ops.append((OP_BATCHNORM,))
     return ops
 
 
-def _write_spec(f, cfg: model.ModelConfig) -> None:
-    ops = spec_ops(cfg)
+def _write_spec(f, cfg: model.ModelConfig,
+                scheme: str = DEFAULT_SCHEME) -> None:
+    code = SCHEMES[scheme]
+    ops = spec_ops(cfg, scheme)
+    extra = 0 if code == 0 else 1
     f.write(struct.pack("<5I", model.IMAGE_C, model.IMAGE_HW,
-                        model.IMAGE_HW, model.NUM_CLASSES, len(ops)))
+                        model.IMAGE_HW, model.NUM_CLASSES,
+                        len(ops) + extra))
+    if extra:
+        f.write(struct.pack("<BI", OP_SCHEME, code))
     for op in ops:
         f.write(struct.pack("<B", op[0]))
         if op[0] == OP_CONV2D:
@@ -238,35 +262,40 @@ def _write_labels(f, labels) -> None:
 
 
 def save_bkw(path: str, cfg: model.ModelConfig,
-             params: Dict[str, Any], labels=None) -> None:
-    """Export the inference float pytree (binarize_params/fold_bn output)
-    as BKW2: the NetSpec rides in the file, followed by the tensors and
-    a trailing labels section.  `labels` defaults to the ShapeSet-10
+             params: Dict[str, Any], labels=None,
+             scheme: str = DEFAULT_SCHEME) -> None:
+    """Export the inference float pytree (binarize_params/fold_bn output,
+    or alpha_params / ternarize_params for the non-default schemes) as
+    BKW2: the NetSpec rides in the file, followed by the tensors and a
+    trailing labels section.  `labels` defaults to the ShapeSet-10
     class names; pass a per-class list for other datasets, or [] to
-    write a label-less file (numeric labels at serve time)."""
+    write a label-less file (numeric labels at serve time).  Layers
+    whose pytree entry carries an "alpha" (alpha_params output) export
+    it as `<layer>.alpha`; the xnor_alpha scheme requires one per
+    binarized layer."""
     if labels is None:
         labels = dataset.CLASS_NAMES
     if labels and len(labels) != model.NUM_CLASSES:
         raise ValueError(
             f"{len(labels)} labels for {model.NUM_CLASSES} classes")
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme '{scheme}' "
+                         f"(one of {sorted(SCHEMES)})")
     tensors: list[tuple[str, np.ndarray]] = []
     widths = np.asarray(cfg.widths + cfg.fc_widths, np.uint32)
     tensors.append(("meta.widths", widths))
-    for s in cfg.conv_specs:
+    for s in list(cfg.conv_specs) + list(cfg.fc_specs):
         tensors.append((f"{s.name}.w", np.asarray(params[s.name]["w"])))
-        tensors.append((f"bn_{s.name}.a",
-                        np.asarray(params[f"bn_{s.name}"]["a"])))
-        tensors.append((f"bn_{s.name}.b",
-                        np.asarray(params[f"bn_{s.name}"]["b"])))
-    for s in cfg.fc_specs:
-        tensors.append((f"{s.name}.w", np.asarray(params[s.name]["w"])))
+        if "alpha" in params[s.name]:
+            tensors.append((f"{s.name}.alpha",
+                            np.asarray(params[s.name]["alpha"])))
         tensors.append((f"bn_{s.name}.a",
                         np.asarray(params[f"bn_{s.name}"]["a"])))
         tensors.append((f"bn_{s.name}.b",
                         np.asarray(params[f"bn_{s.name}"]["b"])))
     with open(path, "wb") as f:
         f.write(b"BKW2")
-        _write_spec(f, cfg)
+        _write_spec(f, cfg, scheme)
         f.write(struct.pack("<I", len(tensors)))
         for name, arr in tensors:
             _write_tensor(f, name, arr)
@@ -283,6 +312,8 @@ def _skip_spec(f) -> None:
             f.read(17)  # 4 u32 + u8
         elif opcode == OP_LINEAR:
             f.read(5)   # u32 + u8
+        elif opcode == OP_SCHEME:
+            f.read(4)   # u32 scheme code
         elif opcode not in (OP_MAXPOOL2, OP_BATCHNORM, OP_SIGN,
                             OP_FLATTEN):
             raise ValueError(f"unknown opcode {opcode}")
@@ -336,6 +367,29 @@ def load_bkw_labels(path: str):
             (ln,) = struct.unpack("<H", f.read(2))
             labels.append(f.read(ln).decode("utf-8"))
         return labels
+
+
+def load_bkw_scheme(path: str) -> str:
+    """The quantization-scheme name a BKW file declares (sign_sign for
+    BKW1 files and scheme-less BKW2 files — mirror of the rust
+    reader's default)."""
+    names = {v: k for k, v in SCHEMES.items()}
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic in (b"BKW1", b"BKW2"), magic
+        if magic == b"BKW1":
+            return DEFAULT_SCHEME
+        _c, _h, _w, _classes, n_ops = struct.unpack("<5I", f.read(20))
+        for _ in range(n_ops):
+            (opcode,) = struct.unpack("<B", f.read(1))
+            if opcode == OP_SCHEME:
+                (code,) = struct.unpack("<I", f.read(4))
+                return names[code]
+            if opcode == OP_CONV2D:
+                f.read(17)
+            elif opcode == OP_LINEAR:
+                f.read(5)
+        return DEFAULT_SCHEME
 
 
 def bkw_to_pytree(cfg: model.ModelConfig,

@@ -7,6 +7,11 @@ outputs — they compute the same binarized network with different kernels.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r "
+           "python/requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import binconv, pack, ref

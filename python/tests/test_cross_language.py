@@ -5,12 +5,24 @@ BKD1 formats.  These tests pin the python side of each convention to
 golden values that rust/src/bitops/pack.rs::tests::golden_cross_language
 and rust/src/data/bkd.rs pin identically — if either side drifts, one of
 the twins fails.
+
+The per-scheme fixture tests at the bottom go further: for every
+quantization scheme they regenerate a tiny integer-exact BKW2 model +
+expected logits and compare byte-for-byte against the checked-in
+goldens under rust/tests/fixtures/, which the rust side
+(tests/scheme_conformance.rs) loads and pins bit-identical through
+every kernel arm.  Run this file as a script to (re)write the goldens.
 """
+
+import io
+import pathlib
+import struct
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
-from compile import dataset
+from compile import dataset, train
 from compile.kernels import ref
 
 
@@ -68,3 +80,164 @@ def test_xnor_formula_golden():
     xp = jnp.asarray([[b]], jnp.uint32)
     out = np.asarray(ref.xnor_gemm_packed_ref(wp, xp, 32))
     assert out.tolist() == [[-32]]
+
+
+# ---------------------------------------------------------------------------
+# per-scheme BKW2 fixtures (rust twin: tests/scheme_conformance.rs)
+# ---------------------------------------------------------------------------
+#
+# A tiny fc-only net (70 -> 9 -> 4, batch 2) whose every value is an
+# integer or a power-of-two scale of one, so both languages compute the
+# exact same f32 bit patterns regardless of summation order.  The input
+# and parameter formulas below are integer arithmetic mirrored verbatim
+# by the rust loader test — the .bkw file carries the parameters, the
+# .logits sidecar carries the expected output bits in hex.
+
+FIXTURE_DIR = (pathlib.Path(__file__).resolve().parents[2]
+               / "rust" / "tests" / "fixtures")
+FX_K, FX_D1, FX_CLASSES, FX_BATCH = 70, 9, 4, 2
+
+
+def _fx_input():
+    """Deterministic small-int batch: x[b,i] = ((7i + 3(b+1)) % 11) - 5."""
+    x = np.empty((FX_BATCH, FX_K), np.float32)
+    for b in range(FX_BATCH):
+        for i in range(FX_K):
+            x[b, i] = ((7 * i + 3 * (b + 1)) % 11) - 5
+    return x
+
+
+def _fx_sign_weight(d, k):
+    """{-1,+1} weight matrix from an integer hash of the index."""
+    w = np.empty((d, k), np.float32)
+    for di in range(d):
+        for ki in range(k):
+            w[di, ki] = 1.0 if ((31 * di + 17 * ki) % 5) % 2 == 0 else -1.0
+    return w
+
+
+def _fx_ternary_weight(d, k):
+    """{-1,0,+1} weight matrix from an integer hash of the index."""
+    w = np.empty((d, k), np.float32)
+    for di in range(d):
+        for ki in range(k):
+            w[di, ki] = ((31 * di + 17 * ki) % 3) - 1
+    return w
+
+
+def _fx_bn(d):
+    """Power-of-two scales, small-int shifts: exact in f32."""
+    a = np.asarray([2.0 ** ((di % 3) - 1) for di in range(d)], np.float32)
+    b = np.asarray([float((di % 7) - 3) for di in range(d)], np.float32)
+    return a, b
+
+
+def _fx_alpha(d):
+    """Power-of-two per-channel scales (0.5 or 2.0): exact in f32."""
+    return np.asarray([2.0 ** (2 * (di % 2) - 1) for di in range(d)],
+                      np.float32)
+
+
+def _fx_layers(scheme):
+    """[(w, alpha_or_None, bn_a, bn_b)] for the two fc layers."""
+    make_w = (_fx_ternary_weight if scheme == "ternary_weight"
+              else _fx_sign_weight)
+    layers = []
+    for d, k in ((FX_D1, FX_K), (FX_CLASSES, FX_D1)):
+        alpha = _fx_alpha(d) if scheme == "xnor_alpha" else None
+        a, b = _fx_bn(d)
+        layers.append((make_w(d, k), alpha, a, b))
+    return layers
+
+
+def _fx_bytes(scheme):
+    """The complete BKW2 fixture file for one scheme (no labels)."""
+    code = train.SCHEMES[scheme]
+    signs = scheme != "binary_weight"
+    ops = [(train.OP_FLATTEN,)]
+    for dout in (FX_D1, FX_CLASSES):
+        if signs:
+            ops.append((train.OP_SIGN,))
+        ops.append((train.OP_LINEAR, dout, 1))
+        ops.append((train.OP_BATCHNORM,))
+    f = io.BytesIO()
+    f.write(b"BKW2")
+    f.write(struct.pack("<5I", 1, 1, FX_K, FX_CLASSES,
+                        len(ops) + (1 if code else 0)))
+    if code:
+        f.write(struct.pack("<BI", train.OP_SCHEME, code))
+    for op in ops:
+        f.write(struct.pack("<B", op[0]))
+        if op[0] == train.OP_LINEAR:
+            f.write(struct.pack("<IB", *op[1:]))
+    layers = _fx_layers(scheme)
+    n_tensors = sum(3 + (lay[1] is not None) for lay in layers)
+    f.write(struct.pack("<I", n_tensors))
+    for fi, (w, alpha, a, b) in enumerate(layers, start=1):
+        train._write_tensor(f, f"fc{fi}.w", w)
+        if alpha is not None:
+            train._write_tensor(f, f"fc{fi}.alpha", alpha)
+        train._write_tensor(f, f"bn_fc{fi}.a", a)
+        train._write_tensor(f, f"bn_fc{fi}.b", b)
+    return f.getvalue()
+
+
+def _fx_logits(scheme):
+    """Numpy forward pass; every intermediate is exact in f32."""
+    signs = scheme != "binary_weight"
+    h = _fx_input()
+    for w, alpha, a, b in _fx_layers(scheme):
+        s = np.where(h >= 0, 1.0, -1.0).astype(np.float32) if signs else h
+        g = (s @ w.T).astype(np.float32)
+        if alpha is not None:
+            g = alpha * g
+        h = a * g + b
+    return h.astype(np.float32)
+
+
+def _fx_logits_hex(scheme):
+    """One line per batch row: space-separated u32 hex of the f32 bits."""
+    bits = _fx_logits(scheme).view(np.uint32)
+    return "".join(" ".join(f"{v:08x}" for v in row) + "\n" for row in bits)
+
+
+@pytest.mark.parametrize("scheme", sorted(train.SCHEMES))
+def test_scheme_fixture_goldens_are_current(scheme):
+    """Checked-in rust/tests/fixtures/* match what this file generates.
+
+    On mismatch, regenerate with
+        python python/tests/test_cross_language.py
+    and re-run the rust side (cargo test --test scheme_conformance).
+    """
+    bkw = FIXTURE_DIR / f"scheme_{scheme}.bkw"
+    logits = FIXTURE_DIR / f"scheme_{scheme}.logits"
+    assert bkw.is_file() and logits.is_file(), \
+        f"missing fixture for {scheme}; regenerate (see docstring)"
+    assert bkw.read_bytes() == _fx_bytes(scheme), scheme
+    assert logits.read_text() == _fx_logits_hex(scheme), scheme
+
+
+def test_scheme_fixture_logits_are_integer_scaled():
+    """Sanity: 4*logits is an exact integer for every scheme (so the
+    bit-identity claim does not rest on rounding luck)."""
+    for scheme in train.SCHEMES:
+        q = _fx_logits(scheme) * 4.0
+        assert (q == np.round(q)).all(), scheme
+
+
+def test_scheme_fixture_declares_its_scheme(tmp_path):
+    """load_bkw_scheme round-trips the scheme byte of every fixture."""
+    for scheme in train.SCHEMES:
+        p = tmp_path / f"{scheme}.bkw"
+        p.write_bytes(_fx_bytes(scheme))
+        assert train.load_bkw_scheme(str(p)) == scheme
+
+
+if __name__ == "__main__":
+    FIXTURE_DIR.mkdir(parents=True, exist_ok=True)
+    for _scheme in sorted(train.SCHEMES):
+        (FIXTURE_DIR / f"scheme_{_scheme}.bkw").write_bytes(
+            _fx_bytes(_scheme))
+        (FIXTURE_DIR / f"scheme_{_scheme}.logits").write_text(
+            _fx_logits_hex(_scheme))
+        print(f"wrote scheme_{_scheme}.bkw / .logits")

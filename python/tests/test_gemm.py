@@ -3,6 +3,11 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r "
+           "python/requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.gemm import gemm_f32

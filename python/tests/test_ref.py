@@ -9,6 +9,11 @@ anchored to something real.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r "
+           "python/requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

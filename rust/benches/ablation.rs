@@ -13,8 +13,10 @@ use bitkernel::benchkit::{bench, Table};
 use bitkernel::bitops::{pack_rows, pack_rows_from, simd_tier, xnor_gemm,
                         XnorImpl};
 use bitkernel::gemm::{gemm_blocked, gemm_naive, gemm_simd};
+use bitkernel::model::{EngineKernel, NetSpec, QuantScheme};
 use bitkernel::nn::fuse::bn_sign_pack_rows_i32;
-use bitkernel::tensor::PackedMatrix;
+use bitkernel::tensor::{PackedMatrix, Tensor};
+use bitkernel::testing::synthetic_engine_spec;
 use bitkernel::utils::Rng;
 
 /// Table-2 layer gemm shapes, plus the small-D acceptance shape for the
@@ -193,6 +195,46 @@ fn main() {
             format!("{:.4}", mu.mean_s() * 1e3),
             format!("{:.4}", mf.mean_s() * 1e3),
             format!("{:.2}x", mu.mean_s() / mf.mean_s()),
+        ]);
+    }
+    table.print();
+
+    // --- quantization-scheme ablation (plan/session end to end) ----------------
+    // One topology lowered under each scheme, batch-8 forward on the
+    // Auto plan: sign_sign is the baseline; xnor_alpha adds the α
+    // multiply to the epilogues, ternary_weight popcounts a second
+    // weight plane, binary_weight runs the float gemm arm outright.
+    let mut table = Table::new(
+        "quantization-scheme ablation (batch-8 forward, ms; vs sign_sign)",
+        &["scheme", "ms", "vs sign_sign"],
+    );
+    let mut base_ms = None;
+    for scheme in QuantScheme::ALL {
+        let spec = NetSpec::builder((3, 16, 16))
+            .conv(16, 3)
+            .pool()
+            .conv(24, 3)
+            .linear(64)
+            .linear(10)
+            .scheme(scheme)
+            .build()
+            .expect("scheme ablation spec");
+        let engine = synthetic_engine_spec(&spec, 77);
+        let mut session = engine
+            .plan(EngineKernel::Xnor(XnorImpl::Auto), 8)
+            .expect("scheme ablation plan")
+            .session();
+        let x = Tensor::new(vec![8, 3, 16, 16],
+                            rng.normal_vec(8 * 3 * 16 * 16));
+        let m = bench(scheme.name(), budget, min_iters, 1.0, || {
+            let _ = session.run(&x);
+        });
+        let ms = m.mean_s();
+        let base = *base_ms.get_or_insert(ms);
+        table.row(&[
+            scheme.name().to_string(),
+            format!("{:.3}", ms * 1e3),
+            format!("{:.2}x", ms / base),
         ]);
     }
     table.print();

@@ -19,4 +19,5 @@ pub mod xnor;
 
 pub use pack::{pack_rows, pack_rows_from, pack_slice};
 pub use simd::{avx2_available, simd_tier};
-pub use xnor::{xnor_gemm, xnor_gemm_pooled, XnorImpl};
+pub use xnor::{ternary_gemm, ternary_gemm_pooled, xnor_gemm,
+               xnor_gemm_pooled, XnorImpl};

@@ -499,6 +499,67 @@ pub fn xnor_gemm_pooled(
     }
 }
 
+/// Combine the two plane gemms into the ternary dot products.
+///
+/// With `pos[i,j] = +1` iff `w[i,j] > 0` (else `-1`) and
+/// `neg[i,j] = +1` iff `w[i,j] < 0`, each element contributes
+/// `(p - n) / 2 ∈ {-1, 0, +1}` — exactly the ternary weight — so
+/// `<w_i, x_j> = (<pos_i, x_j> - <neg_i, x_j>) / 2`, and the
+/// difference is always even (each element contributes ±2 or 0).
+/// Integer arithmetic: bit-identical across every impl by
+/// construction.
+#[inline]
+fn ternary_combine(out: &mut [i32], scratch: &[i32]) {
+    for (o, &s) in out.iter_mut().zip(scratch.iter()) {
+        *o = (*o - s) / 2;
+    }
+}
+
+/// Two-plane ternary gemm: `out[i * x.rows + j] = <w_i, x_j>` exactly,
+/// for ternary weights `{-1, 0, +1}` packed as a positive plane
+/// (`bit 1` iff `w > 0`) and a negative plane (`bit 1` iff `w < 0`).
+///
+/// Runs [`xnor_gemm`] once per plane (`scratch` holds the negative
+/// plane's gemm; same length as `out`) and combines.  `Auto` resolves
+/// once so both planes run the same impl.
+pub fn ternary_gemm(
+    pos: &PackedMatrix,
+    neg: &PackedMatrix,
+    x: &PackedMatrix,
+    out: &mut [i32],
+    scratch: &mut [i32],
+    imp: XnorImpl,
+) {
+    assert_eq!(pos.rows, neg.rows, "plane row mismatch");
+    assert_eq!(pos.k, neg.k, "plane k mismatch");
+    assert_eq!(scratch.len(), out.len(), "scratch size");
+    let imp = imp.resolve(pos.rows, pos.k, x.rows);
+    xnor_gemm(pos, x, out, imp);
+    xnor_gemm(neg, x, scratch, imp);
+    ternary_combine(out, scratch);
+}
+
+/// [`ternary_gemm`] with `Threaded` work running on `pool`'s
+/// persistent workers (see [`xnor_gemm_pooled`]).  Bit-identical to
+/// [`ternary_gemm`] for every impl.
+pub fn ternary_gemm_pooled(
+    pos: &PackedMatrix,
+    neg: &PackedMatrix,
+    x: &PackedMatrix,
+    out: &mut [i32],
+    scratch: &mut [i32],
+    imp: XnorImpl,
+    pool: &ThreadPool,
+) {
+    assert_eq!(pos.rows, neg.rows, "plane row mismatch");
+    assert_eq!(pos.k, neg.k, "plane k mismatch");
+    assert_eq!(scratch.len(), out.len(), "scratch size");
+    let imp = imp.resolve(pos.rows, pos.k, x.rows);
+    xnor_gemm_pooled(pos, x, out, imp, pool);
+    xnor_gemm_pooled(neg, x, scratch, imp, pool);
+    ternary_combine(out, scratch);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -662,6 +723,46 @@ mod tests {
         let w = PackedMatrix::zeros(1, 32);
         let x = PackedMatrix::zeros(1, 64);
         xnor_gemm(&w, &x, &mut [0], XnorImpl::Scalar);
+    }
+
+    #[test]
+    fn ternary_matches_dense_dot() {
+        let mut rng = Rng::new(77);
+        let pool = ThreadPool::new(3);
+        for (d, k, n) in [(1, 1, 1), (3, 31, 5), (4, 33, 7), (5, 70, 9)] {
+            // ternary weights in {-1, 0, +1}, sign activations
+            let wm: Vec<f32> =
+                (0..d * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let xm = rng.sign_vec(n * k);
+            let pos: Vec<f32> = wm
+                .iter()
+                .map(|&v| if v > 0.0 { 1.0 } else { -1.0 })
+                .collect();
+            let negv: Vec<f32> = wm
+                .iter()
+                .map(|&v| if v < 0.0 { 1.0 } else { -1.0 })
+                .collect();
+            let pp = pack_rows(&pos, d, k);
+            let np = pack_rows(&negv, d, k);
+            let x = pack_rows(&xm, n, k);
+            let mut want = vec![0i32; d * n];
+            for i in 0..d {
+                for j in 0..n {
+                    want[i * n + j] = dense_dot(&wm[i * k..(i + 1) * k],
+                                                &xm[j * k..(j + 1) * k]);
+                }
+            }
+            for imp in all_impls() {
+                let mut got = vec![0i32; d * n];
+                let mut scratch = vec![0i32; d * n];
+                ternary_gemm(&pp, &np, &x, &mut got, &mut scratch, imp);
+                assert_eq!(got, want, "impl {imp:?} d={d} k={k} n={n}");
+                got.fill(0);
+                ternary_gemm_pooled(&pp, &np, &x, &mut got, &mut scratch,
+                                    imp, &pool);
+                assert_eq!(got, want, "pooled {imp:?} d={d} k={k} n={n}");
+            }
+        }
     }
 
     #[test]

@@ -648,6 +648,7 @@ fn cmd_describe(argv: &[String]) -> Result<()> {
         spec.param_count(),
         wf.len()
     );
+    println!("scheme: {}", spec.scheme().name());
     match wf.labels() {
         Some(labels) => {
             println!("labels: {}", labels.join(", "));

@@ -112,7 +112,14 @@ pub(crate) struct ConvLayer {
     pub(crate) pool: bool,
     pub(crate) binarized: bool,
     pub(crate) w_float: Arc<Vec<f32>>,
+    /// Packed sign plane (sign-sign/α schemes), or the POSITIVE plane
+    /// (`bit 1` iff `w > 0`) of a ternary layer.
     pub(crate) w_packed: Option<Arc<PackedMatrix>>,
+    /// Ternary NEGATIVE plane (`bit 1` iff `w < 0`); `Some` exactly for
+    /// binarized layers of a ternary-scheme net.
+    pub(crate) w_packed_neg: Option<Arc<PackedMatrix>>,
+    /// Per-output-channel α = E|w| (XNOR-Net schemes only).
+    pub(crate) alpha: Option<Arc<Vec<f32>>>,
     pub(crate) bn_a: Arc<Vec<f32>>,
     pub(crate) bn_b: Arc<Vec<f32>>,
 }
@@ -122,9 +129,77 @@ pub(crate) struct FcLayer {
     pub(crate) dout: usize,
     pub(crate) binarized: bool,
     pub(crate) w_float: Arc<Vec<f32>>,
+    /// See [`ConvLayer::w_packed`].
     pub(crate) w_packed: Option<Arc<PackedMatrix>>,
+    /// See [`ConvLayer::w_packed_neg`].
+    pub(crate) w_packed_neg: Option<Arc<PackedMatrix>>,
+    /// See [`ConvLayer::alpha`].
+    pub(crate) alpha: Option<Arc<Vec<f32>>>,
     pub(crate) bn_a: Arc<Vec<f32>>,
     pub(crate) bn_b: Arc<Vec<f32>>,
+}
+
+/// Pack one ternary bit-plane: `bit 1` where the predicate hits (+1),
+/// `bit 0` (−1) elsewhere — so `(<pos,x> - <neg,x>) / 2` recovers the
+/// exact ternary dot product (see [`crate::bitops::ternary_gemm`]).
+fn pack_plane(w: &[f32], rows: usize, k: usize, positive: bool)
+              -> PackedMatrix {
+    let plane: Vec<f32> = w
+        .iter()
+        .map(|&v| {
+            let hit = if positive { v > 0.0 } else { v < 0.0 };
+            if hit { 1.0 } else { -1.0 }
+        })
+        .collect();
+    pack_rows(&plane, rows, k)
+}
+
+/// How a binarized layer's weights are packed + scaled under `scheme`:
+/// `(w_packed, w_packed_neg, wants_alpha)`.
+fn pack_for_scheme(
+    scheme: crate::model::spec::QuantScheme,
+    w: &[f32],
+    rows: usize,
+    k: usize,
+) -> (Option<Arc<PackedMatrix>>, Option<Arc<PackedMatrix>>) {
+    if !scheme.signs_activations() {
+        // Real-activation schemes run the float gemm arm unpacked.
+        (None, None)
+    } else if scheme.is_ternary() {
+        (Some(Arc::new(pack_plane(w, rows, k, true))),
+         Some(Arc::new(pack_plane(w, rows, k, false))))
+    } else {
+        (Some(Arc::new(pack_rows(w, rows, k))), None)
+    }
+}
+
+/// In-place per-channel NCHW multiply `y = alpha[c] * x` (multiply
+/// only — no `+ 0.0`, which would flip `-0.0` to `+0.0` and break
+/// bit-identity with the fused α epilogues).
+fn scale_channels_nchw(t: &mut Tensor, alpha: &[f32]) {
+    let (b, c) = (t.dim(0), t.dim(1));
+    let hw = t.dim(2) * t.dim(3);
+    assert_eq!(alpha.len(), c, "alpha len");
+    let data = t.data_mut();
+    for bi in 0..b {
+        for ci in 0..c {
+            let sc = alpha[ci];
+            for v in &mut data[(bi * c + ci) * hw..][..hw] {
+                *v *= sc;
+            }
+        }
+    }
+}
+
+/// In-place per-feature rows multiply `y = alpha[f] * x`.
+fn scale_rows(t: &mut Tensor, alpha: &[f32]) {
+    let d = t.dim(1);
+    assert_eq!(alpha.len(), d, "alpha len");
+    for row in t.data_mut().chunks_exact_mut(d) {
+        for (v, &sc) in row.iter_mut().zip(alpha) {
+            *v *= sc;
+        }
+    }
 }
 
 /// A loaded, ready-to-run BNN.
@@ -162,6 +237,7 @@ impl BnnEngine {
             }
             None => None,
         };
+        let scheme = spec.scheme();
         let (cblocks, fblocks) = spec.blocks();
         let mut convs = Vec::with_capacity(cblocks.len());
         for s in &cblocks {
@@ -172,9 +248,18 @@ impl BnnEngine {
                 s.name, wt.shape, s.cout, s.cin, s.ksize, s.ksize
             );
             let w = wt.as_f32()?; // row-major [D, C, k, k] == [D, K]
-            let packed = s
-                .binarized
-                .then(|| Arc::new(pack_rows(&w, s.cout, s.k())));
+            let (packed, packed_neg) = if s.binarized {
+                pack_for_scheme(scheme, &w, s.cout, s.k())
+            } else {
+                (None, None)
+            };
+            let alpha = if s.binarized && scheme.has_alpha() {
+                let a = wf.get(&format!("{}.alpha", s.name))?.as_f32()?;
+                ensure!(a.len() == s.cout, "{}.alpha length", s.name);
+                Some(Arc::new(a))
+            } else {
+                None
+            };
             let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
             let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
             ensure!(bn_a.len() == s.cout && bn_b.len() == s.cout,
@@ -191,6 +276,8 @@ impl BnnEngine {
                 binarized: s.binarized,
                 w_float: Arc::new(w),
                 w_packed: packed,
+                w_packed_neg: packed_neg,
+                alpha,
                 bn_a: Arc::new(bn_a),
                 bn_b: Arc::new(bn_b),
             });
@@ -202,9 +289,18 @@ impl BnnEngine {
                     "{}: shape {:?} (spec wants [{}, {}])",
                     s.name, wt.shape, s.dout, s.din);
             let w = wt.as_f32()?;
-            let packed = s
-                .binarized
-                .then(|| Arc::new(pack_rows(&w, s.dout, s.din)));
+            let (packed, packed_neg) = if s.binarized {
+                pack_for_scheme(scheme, &w, s.dout, s.din)
+            } else {
+                (None, None)
+            };
+            let alpha = if s.binarized && scheme.has_alpha() {
+                let a = wf.get(&format!("{}.alpha", s.name))?.as_f32()?;
+                ensure!(a.len() == s.dout, "{}.alpha length", s.name);
+                Some(Arc::new(a))
+            } else {
+                None
+            };
             let bn_a = wf.get(&format!("bn_{}.a", s.name))?.as_f32()?;
             let bn_b = wf.get(&format!("bn_{}.b", s.name))?.as_f32()?;
             ensure!(bn_a.len() == s.dout && bn_b.len() == s.dout,
@@ -215,6 +311,8 @@ impl BnnEngine {
                 binarized: s.binarized,
                 w_float: Arc::new(w),
                 w_packed: packed,
+                w_packed_neg: packed_neg,
+                alpha,
                 bn_a: Arc::new(bn_a),
                 bn_b: Arc::new(bn_b),
             });
@@ -342,18 +440,35 @@ impl BnnEngine {
     /// binarized conv/fc kernel binarizes its own input internally
     /// (sign is idempotent on {-1,+1}), exactly as validation pairs
     /// them.
+    ///
+    /// Scheme-aware, per [`NetSpec::scheme`]: schemes whose
+    /// activations stay real-valued run every layer on the float-real
+    /// arm (their binarized weights are already ±1 in the file);
+    /// ternary layers run sign-then-float-gemm on EVERY arm — the
+    /// ternary weights × sign activations product is exact small
+    /// integers in f32, so any gemm order matches the two-plane
+    /// popcount path bit for bit; α layers multiply the
+    /// per-output-channel scale in right after the gemm (before pool
+    /// and bn), mirroring the fused epilogues.
     pub fn forward_reference(&self, x: &Tensor, kernel: EngineKernel)
                              -> Tensor {
         let (ic, ih, iw) = self.spec.input();
         assert_eq!(x.dim(1), ic, "input channels");
         assert_eq!(x.dim(2), ih, "input height");
         assert_eq!(x.dim(3), iw, "input width");
+        let scheme = self.spec.scheme();
+        let signs = scheme.signs_activations();
         let mut scratch = ConvScratch::default();
         let mut h = x.clone();
         for layer in &self.convs {
-            let (ck, w): (ConvKernel, ConvWeights) = if !layer.binarized {
+            let (ck, w): (ConvKernel, ConvWeights) = if !layer.binarized
+                || !signs
+            {
                 // Real-valued input in every arm.
                 (ConvKernel::FloatReal(kernel.float_impl()),
+                 ConvWeights::Float(Arc::clone(&layer.w_float)))
+            } else if scheme.is_ternary() {
+                (ConvKernel::FloatBinarized(kernel.float_impl()),
                  ConvWeights::Float(Arc::clone(&layer.w_float)))
             } else {
                 match kernel {
@@ -370,6 +485,9 @@ impl BnnEngine {
                 }
             };
             h = conv2d(&h, &w, &layer.params, ck, &mut scratch);
+            if let Some(alpha) = &layer.alpha {
+                scale_channels_nchw(&mut h, alpha);
+            }
             if layer.pool {
                 h = maxpool2(&h);
             }
@@ -383,8 +501,13 @@ impl BnnEngine {
 
         for layer in &self.fcs {
             assert_eq!(h.dim(1), layer.din);
-            let (lk, w): (LinearKernel, ConvWeights) = if !layer.binarized {
+            let (lk, w): (LinearKernel, ConvWeights) = if !layer.binarized
+                || !signs
+            {
                 (LinearKernel::FloatReal(kernel.float_impl()),
+                 ConvWeights::Float(Arc::clone(&layer.w_float)))
+            } else if scheme.is_ternary() {
+                (LinearKernel::FloatBinarized(kernel.float_impl()),
                  ConvWeights::Float(Arc::clone(&layer.w_float)))
             } else {
                 match kernel {
@@ -401,6 +524,9 @@ impl BnnEngine {
                 }
             };
             h = linear(&h, &w, layer.dout, lk);
+            if let Some(alpha) = &layer.alpha {
+                scale_rows(&mut h, alpha);
+            }
             bn_affine_rows(&mut h, &layer.bn_a, &layer.bn_b);
         }
         assert_eq!(h.dim(1), self.spec.classes());

@@ -17,6 +17,12 @@
 //!             3 = sign
 //!             4 = flatten
 //!             5 = linear:   u32le dout; u8 binarized
+//!             6 = scheme:   u32le scheme wire byte (see
+//!                           `QuantScheme::wire_byte`) — at most one,
+//!                           emitted FIRST and only for non-default
+//!                           schemes, so every pre-scheme file (and
+//!                           every default-scheme writer) stays
+//!                           byte-identical and loads as `sign_sign`
 //!
 //!     tensor section:
 //!         u32le  n_tensors
@@ -69,7 +75,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::mmap::Mmap;
-use super::spec::{LayerSpec, NetSpec, SpecError};
+use super::spec::{LayerSpec, NetSpec, QuantScheme, SpecError};
 
 /// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,6 +116,13 @@ pub enum FormatError {
     /// An unknown layer opcode in a BKW2 spec section.
     #[error("unknown layer opcode {0} in spec section")]
     BadOpcode(u8),
+    /// A scheme op whose wire value names no known quantization
+    /// scheme.
+    #[error("unknown quantization scheme {0} in spec section")]
+    BadScheme(u32),
+    /// More than one scheme op in a spec section.
+    #[error("duplicate scheme op in spec section")]
+    DuplicateScheme,
     /// A spec-section op count past the sanity bound.
     #[error("implausible spec op count {0}")]
     OpCount(usize),
@@ -527,6 +540,7 @@ const OP_BATCHNORM: u8 = 2;
 const OP_SIGN: u8 = 3;
 const OP_FLATTEN: u8 = 4;
 const OP_LINEAR: u8 = 5;
+const OP_SCHEME: u8 = 6;
 
 /// Sanity bound on every spec-section dimension: generous for real
 /// nets, small enough that validation's shape products (`c*h*w`,
@@ -551,8 +565,20 @@ fn read_spec(s: &mut impl ByteSource) -> Result<NetSpec, FormatError> {
         return Err(FormatError::OpCount(n_ops));
     }
     let mut layers = Vec::with_capacity(n_ops);
+    let mut scheme: Option<QuantScheme> = None;
     for _ in 0..n_ops {
         let opcode = read_u8(s)?;
+        if opcode == OP_SCHEME {
+            let v = read_u32(s)?;
+            let parsed = u8::try_from(v)
+                .ok()
+                .and_then(QuantScheme::from_wire_byte)
+                .ok_or(FormatError::BadScheme(v))?;
+            if scheme.replace(parsed).is_some() {
+                return Err(FormatError::DuplicateScheme);
+            }
+            continue;
+        }
         layers.push(match opcode {
             OP_CONV2D => {
                 let cout = read_dim(s)?;
@@ -574,7 +600,12 @@ fn read_spec(s: &mut impl ByteSource) -> Result<NetSpec, FormatError> {
             other => return Err(FormatError::BadOpcode(other)),
         });
     }
-    Ok(NetSpec::with_classes((c, h, w), classes, layers)?)
+    Ok(NetSpec::with_classes_scheme(
+        (c, h, w),
+        classes,
+        layers,
+        scheme.unwrap_or_default(),
+    )?)
 }
 
 /// Magic of the optional trailing labels section.
@@ -698,8 +729,19 @@ fn write_labels(w: &mut impl Write, labels: &[String])
 fn write_spec(w: &mut impl Write, spec: &NetSpec)
               -> Result<(), FormatError> {
     let (ic, ih, iw) = spec.input();
-    for v in [ic, ih, iw, spec.classes(), spec.layers().len()] {
+    // Non-default schemes cost one extra op, emitted first; the
+    // default writes nothing so default-scheme files stay
+    // byte-identical to pre-scheme ones.
+    let scheme_ops = usize::from(!spec.scheme().is_default());
+    let n_ops = spec.layers().len() + scheme_ops;
+    for v in [ic, ih, iw, spec.classes(), n_ops] {
         w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    if scheme_ops > 0 {
+        w.write_all(&[OP_SCHEME])?;
+        w.write_all(
+            &u32::from(spec.scheme().wire_byte()).to_le_bytes(),
+        )?;
     }
     for op in spec.layers() {
         match op {
@@ -1088,6 +1130,90 @@ mod tests {
         let back = WeightFile::parse(&bytes[..]).unwrap();
         assert_eq!(back.embedded_spec(), Some(&spec));
         assert_eq!(back.net_spec().unwrap(), spec);
+    }
+
+    #[test]
+    fn bkw2_scheme_round_trips_every_scheme() {
+        for scheme in QuantScheme::ALL {
+            let spec = NetSpec::builder((1, 4, 4))
+                .conv(2, 3)
+                .linear(3)
+                .scheme(scheme)
+                .build()
+                .unwrap();
+            let wf = WeightFile::from_tensors_with_spec(
+                BTreeMap::new(),
+                spec.clone(),
+            );
+            let back = WeightFile::parse(&wf.to_bytes()[..]).unwrap();
+            assert_eq!(back.embedded_spec(), Some(&spec), "{scheme}");
+            assert_eq!(
+                back.net_spec().unwrap().scheme(),
+                scheme,
+                "{scheme}"
+            );
+        }
+    }
+
+    #[test]
+    fn default_scheme_writes_no_scheme_op() {
+        // The default scheme adds zero bytes, so pre-scheme readers
+        // (and files) stay compatible: a non-default spec costs
+        // exactly one scheme op (1 opcode + 4 payload bytes) more.
+        let build = |scheme| {
+            let spec = NetSpec::builder((1, 4, 4))
+                .conv(2, 3)
+                .linear(3)
+                .scheme(scheme)
+                .build()
+                .unwrap();
+            WeightFile::from_tensors_with_spec(BTreeMap::new(), spec)
+                .to_bytes()
+        };
+        let default_bytes = build(QuantScheme::default());
+        for scheme in QuantScheme::ALL {
+            let bytes = build(scheme);
+            if scheme.is_default() {
+                assert_eq!(bytes, default_bytes);
+            } else {
+                assert_eq!(bytes.len(), default_bytes.len() + 5,
+                           "{scheme}");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_and_duplicate_scheme_ops_are_rejected() {
+        // BKW2, input 1x4x4, classes 3, ops [scheme, linear].
+        let craft = |scheme_payloads: &[u32]| {
+            let mut out = Vec::new();
+            out.extend(b"BKW2");
+            let n_ops = scheme_payloads.len() + 1;
+            for v in [1u32, 4, 4, 3, n_ops as u32] {
+                out.extend(v.to_le_bytes());
+            }
+            for &p in scheme_payloads {
+                out.push(6); // scheme opcode
+                out.extend(p.to_le_bytes());
+            }
+            out.push(5); // linear opcode
+            out.extend(3u32.to_le_bytes());
+            out.push(0); // not binarized
+            out.extend(0u32.to_le_bytes()); // zero tensors
+            out
+        };
+        // A known scheme parses ...
+        let wf = WeightFile::parse(&craft(&[1])[..]).unwrap();
+        assert_eq!(
+            wf.net_spec().unwrap().scheme(),
+            QuantScheme::from_wire_byte(1).unwrap()
+        );
+        // ... an unknown value is the typed error ...
+        assert!(matches!(WeightFile::parse(&craft(&[99])[..]),
+                         Err(FormatError::BadScheme(99))));
+        // ... and a second scheme op is corruption.
+        assert!(matches!(WeightFile::parse(&craft(&[1, 1])[..]),
+                         Err(FormatError::DuplicateScheme)));
     }
 
     #[test]

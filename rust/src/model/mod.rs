@@ -23,4 +23,5 @@ pub use bnn::{label_for, BnnEngine, EngineKernel};
 pub use format::{Dtype, FormatError, WeightFile, WeightTensor};
 pub use mmap::Mmap;
 pub use plan::{Plan, Session};
-pub use spec::{LayerSpec, NetSpec, NetSpecBuilder, Shape, SpecError};
+pub use spec::{LayerSpec, NetSpec, NetSpecBuilder, QuantScheme, Shape,
+               SpecError};

@@ -28,6 +28,15 @@
 //! [`BnnEngine::forward_reference`]: fused ops perform the same f32
 //! multiply-adds in the same order and only skip materialization.
 //!
+//! Lowering is also scheme-aware ([`crate::model::QuantScheme`]):
+//! α-scheme layers multiply their per-output-channel scale into the
+//! gemm epilogues (col2im / `bn_sign_pack` / bn-rows), ternary layers
+//! swap the xnor gemm for the two-plane
+//! [`crate::bitops::ternary_gemm`], and real-activation schemes lower
+//! every layer down the float arm (their binarized weights are already
+//! ±1 in the file).  `rust/tests/scheme_conformance.rs` pins every
+//! scheme × kernel arm × topology cell against the oracle.
+//!
 //! A [`Plan`] holds `Arc`s of the engine's weight/BN buffers, so it is
 //! self-contained: the engine may be dropped, plans may be shared, and
 //! each worker thread derives its own [`Session`].
@@ -43,11 +52,15 @@
 
 use std::sync::Arc;
 
-use crate::bitops::{pack_rows_from, xnor_gemm, xnor_gemm_pooled, XnorImpl};
+use crate::bitops::{pack_rows_from, ternary_gemm, ternary_gemm_pooled,
+                    xnor_gemm, xnor_gemm_pooled, XnorImpl};
 use crate::gemm::{gemm_f32, GemmImpl};
-use crate::nn::fuse::{bn_rows_from_gemm_f32, bn_rows_from_gemm_i32,
+use crate::nn::fuse::{alpha_col2im_nchw, alpha_col2im_nchw_i32,
+                      bn_rows_from_gemm_f32, bn_rows_from_gemm_f32_alpha,
+                      bn_rows_from_gemm_i32, bn_rows_from_gemm_i32_alpha,
                       bn_sign_pack_nchw, bn_sign_pack_rows_f32,
-                      bn_sign_pack_rows_i32};
+                      bn_sign_pack_rows_f32_alpha, bn_sign_pack_rows_i32,
+                      bn_sign_pack_rows_i32_alpha};
 use crate::nn::im2col::{col2im_nchw_i32_into, col2im_nchw_into,
                         im2col_pack_bn, im2col_t_into, out_hw};
 use crate::nn::norm::bn_affine_nchw_slice;
@@ -58,7 +71,7 @@ use crate::utils::threadpool::ThreadPool;
 use crate::utils::Stopwatch;
 
 use super::bnn::{BnnEngine, EngineKernel};
-use super::spec::SpecError;
+use super::spec::{QuantScheme, SpecError};
 
 /// Per-image conv geometry, resolved at plan time.
 #[derive(Debug, Clone, Copy)]
@@ -100,11 +113,32 @@ enum Op {
     /// layer's bn affine into the sign when present (xnor arm).
     Encode { g: ConvGeom, bn: Option<Bn> },
     /// Float gemm over the column scratch + col2im into the other
-    /// activation buffer.
-    ConvGemmF { w: Arc<Vec<f32>>, g: ConvGeom, imp: GemmImpl },
+    /// activation buffer (`alpha`: per-output-channel scale folded
+    /// into the col2im pass — α-scheme layers on the float arms).
+    ConvGemmF {
+        w: Arc<Vec<f32>>,
+        g: ConvGeom,
+        imp: GemmImpl,
+        alpha: Option<Arc<Vec<f32>>>,
+    },
     /// Xnor gemm over the packed scratch + col2im into the other
-    /// activation buffer.
-    ConvGemmX { w: Arc<PackedMatrix>, g: ConvGeom, imp: XnorImpl },
+    /// activation buffer (`alpha` as in [`Op::ConvGemmF`], folded into
+    /// the i32 -> f32 col2im pass).
+    ConvGemmX {
+        w: Arc<PackedMatrix>,
+        g: ConvGeom,
+        imp: XnorImpl,
+        alpha: Option<Arc<Vec<f32>>>,
+    },
+    /// Two-plane ternary gemm over the packed scratch (positive plane
+    /// into the i32 gemm buffer, negative plane into its twin,
+    /// combined in place) + col2im into the other activation buffer.
+    ConvGemmT {
+        pos: Arc<PackedMatrix>,
+        neg: Arc<PackedMatrix>,
+        g: ConvGeom,
+        imp: XnorImpl,
+    },
     /// 2x2 max-pool into the other activation buffer (input dims given).
     Pool { c: usize, h: usize, w: usize },
     /// In-place per-channel bn on the current activation (float arms,
@@ -124,6 +158,15 @@ enum Op {
     FcGemmF { w: Arc<Vec<f32>>, d: usize, k: usize, imp: GemmImpl },
     /// Xnor fc gemm: packed rows [b, k] -> i32 gemm scratch [d, b].
     FcGemmX { w: Arc<PackedMatrix>, d: usize, k: usize, imp: XnorImpl },
+    /// Two-plane ternary fc gemm: packed rows [b, k] -> i32 gemm
+    /// scratch [d, b] (negative plane via the twin scratch).
+    FcGemmT {
+        pos: Arc<PackedMatrix>,
+        neg: Arc<PackedMatrix>,
+        d: usize,
+        k: usize,
+        imp: XnorImpl,
+    },
     /// Fused epilogue (xnor arm, image->binarized-fc boundary): float
     /// NCHW activation (+ optional deferred bn) -> packed rows
     /// [b, c*hw].  `bn: None` is the fc-only case: the raw input rows
@@ -131,17 +174,33 @@ enum Op {
     SignPackImage { bn: Option<Bn>, c: usize, hw: usize },
     /// Fused epilogue (xnor arm, fc->binarized-fc boundary): gemm
     /// scratch [d, b] (`i32` from an xnor gemm, or `f32` from a
-    /// non-binarized fc when `from_f32`) + bn -> packed rows [b, d].
-    BnSignPackRows { bn: Bn, d: usize, from_f32: bool },
-    /// i32 gemm scratch [d, b] + bn -> float rows [b, d]; into the
-    /// logits tensor when `logits`, else into the other activation
-    /// buffer (xnor arm: final layer, or a non-binarized consumer
-    /// follows).
-    BnRowsI { bn: Bn, d: usize, logits: bool },
-    /// f32 gemm scratch [d, b] + bn -> float rows [b, d]; into the
-    /// logits tensor when `logits`, else into the other activation
-    /// buffer.
-    BnRowsF { bn: Bn, d: usize, logits: bool },
+    /// non-binarized fc when `from_f32`) + optional α scale + bn ->
+    /// packed rows [b, d].
+    BnSignPackRows {
+        bn: Bn,
+        d: usize,
+        from_f32: bool,
+        alpha: Option<Arc<Vec<f32>>>,
+    },
+    /// i32 gemm scratch [d, b] + optional α scale + bn -> float rows
+    /// [b, d]; into the logits tensor when `logits`, else into the
+    /// other activation buffer (xnor arm: final layer, or a
+    /// non-binarized consumer follows).
+    BnRowsI {
+        bn: Bn,
+        d: usize,
+        logits: bool,
+        alpha: Option<Arc<Vec<f32>>>,
+    },
+    /// f32 gemm scratch [d, b] + optional α scale + bn -> float rows
+    /// [b, d]; into the logits tensor when `logits`, else into the
+    /// other activation buffer.
+    BnRowsF {
+        bn: Bn,
+        d: usize,
+        logits: bool,
+        alpha: Option<Arc<Vec<f32>>>,
+    },
 }
 
 /// Buffer sizes (elements / u32 words) required at `max_batch`.
@@ -151,11 +210,15 @@ struct BufSpec {
     cols: usize,
     packed_words: usize,
     gemm_i32: usize,
+    /// Twin i32 gemm scratch for the negative plane of ternary ops
+    /// (zero on every other scheme — the buffer is not allocated).
+    gemm_i32b: usize,
     gemm_f32: usize,
 }
 
 pub(crate) struct PlanInner {
     kernel: EngineKernel,
+    scheme: QuantScheme,
     max_batch: usize,
     input_c: usize,
     input_h: usize,
@@ -182,6 +245,12 @@ impl Plan {
     /// The kernel arm this plan was compiled for.
     pub fn kernel(&self) -> EngineKernel {
         self.inner.kernel
+    }
+
+    /// The quantization scheme the source spec declared (serving
+    /// surfaces it in `/models` descriptors via `scheme().name()`).
+    pub fn scheme(&self) -> QuantScheme {
+        self.inner.scheme
     }
 
     /// Largest batch any session of this plan accepts (buffers are
@@ -226,9 +295,10 @@ impl Plan {
             .ops
             .iter()
             .filter_map(|op| match op {
-                Op::ConvGemmX { imp, .. } | Op::FcGemmX { imp, .. } => {
-                    Some(*imp)
-                }
+                Op::ConvGemmX { imp, .. }
+                | Op::FcGemmX { imp, .. }
+                | Op::ConvGemmT { imp, .. }
+                | Op::FcGemmT { imp, .. } => Some(*imp),
                 _ => None,
             })
             .collect()
@@ -247,6 +317,7 @@ impl Plan {
             ("cols (f32)", s.cols),
             ("packed (u32 words)", s.packed_words),
             ("gemm_i32", s.gemm_i32),
+            ("gemm_i32b", s.gemm_i32b),
             ("gemm_f32", s.gemm_f32),
             ("logits (f32)", out),
         ]
@@ -267,6 +338,7 @@ impl Plan {
             cols: vec![0.0; s.cols],
             packed: PackedMatrix::with_word_capacity(s.packed_words),
             gemm_i32: vec![0; s.gemm_i32],
+            gemm_i32b: vec![0; s.gemm_i32b],
             gemm_f32: vec![0.0; s.gemm_f32],
             out: Tensor::zeros(vec![
                 self.inner.max_batch,
@@ -319,6 +391,11 @@ impl BnnEngine {
         let mut bufs = BufSpec::default();
 
         let is_xnor = matches!(kernel, EngineKernel::Xnor(_));
+        let scheme = self.spec.scheme();
+        // Real-activation schemes never sign activations: every layer
+        // lowers down the float arm even under `Xnor` kernels (the
+        // binarized weights are already ±1 floats in the file).
+        let signs = scheme.signs_activations();
         // Float gemm used wherever a float conv/fc runs: non-binarized
         // layers on every arm, everything on the Control/Optimized
         // arms.  Control is the paper's naive baseline; the other arms
@@ -356,7 +433,7 @@ impl BnnEngine {
             let k = g.k();
             let lname = format!("conv{}", li + 1);
 
-            if is_xnor && layer.binarized {
+            if is_xnor && layer.binarized && signs {
                 let EngineKernel::Xnor(imp) = kernel else { unreachable!() };
                 bufs.packed_words =
                     bufs.packed_words.max(n * k.div_ceil(32));
@@ -371,14 +448,41 @@ impl BnnEngine {
                 if let XnorImpl::Threaded(t) = rimp {
                     pool_threads = pool_threads.max(t);
                 }
-                ops.push(Op::ConvGemmX {
-                    w: Arc::clone(
-                        layer.w_packed.as_ref().expect("packed weights"),
-                    ),
-                    g,
-                    imp: rimp,
-                });
-                names.push(xnor_gemm_stage_name(&lname, imp, rimp));
+                match &layer.w_packed_neg {
+                    Some(neg) => {
+                        bufs.gemm_i32b = bufs.gemm_i32b.max(p.cout * n);
+                        ops.push(Op::ConvGemmT {
+                            pos: Arc::clone(
+                                layer
+                                    .w_packed
+                                    .as_ref()
+                                    .expect("packed weights"),
+                            ),
+                            neg: Arc::clone(neg),
+                            g,
+                            imp: rimp,
+                        });
+                        names.push(ternary_gemm_stage_name(
+                            &lname, imp, rimp,
+                        ));
+                    }
+                    None => {
+                        ops.push(Op::ConvGemmX {
+                            w: Arc::clone(
+                                layer
+                                    .w_packed
+                                    .as_ref()
+                                    .expect("packed weights"),
+                            ),
+                            g,
+                            imp: rimp,
+                            alpha: layer.alpha.clone(),
+                        });
+                        names.push(xnor_gemm_stage_name(
+                            &lname, imp, rimp,
+                        ));
+                    }
+                }
             } else {
                 // Float path: every conv on the float arms, and
                 // non-binarized convs on the xnor arm — where a
@@ -390,8 +494,9 @@ impl BnnEngine {
                 }
                 let imp = float_imp;
                 bufs.cols = bufs.cols.max(n * k);
-                ops.push(Op::Im2col { g, sign: layer.binarized });
-                names.push(if layer.binarized {
+                let sign = layer.binarized && signs;
+                ops.push(Op::Im2col { g, sign });
+                names.push(if sign {
                     format!("{lname}:im2col+sign")
                 } else {
                     format!("{lname}:im2col")
@@ -402,6 +507,7 @@ impl BnnEngine {
                     w: Arc::clone(&layer.w_float),
                     g,
                     imp,
+                    alpha: layer.alpha.clone(),
                 });
                 names.push(format!("{lname}:gemm"));
             }
@@ -431,7 +537,7 @@ impl BnnEngine {
         debug_assert!(!self.fcs.is_empty(), "validated spec has fcs");
         let first_fc_binarized =
             self.fcs.first().is_some_and(|f| f.binarized);
-        if is_xnor && first_fc_binarized {
+        if is_xnor && first_fc_binarized && signs {
             // The flatten boundary feeds a binarized fc: emit its
             // packed rows directly.  With convs the last conv's bn is
             // pending and folds into the sign; without (fc-only nets)
@@ -465,53 +571,87 @@ impl BnnEngine {
             let last = fi + 1 == nf;
             // Does the next consumer want packed sign rows?
             let next_binarized =
-                !last && is_xnor && self.fcs[fi + 1].binarized;
+                !last && is_xnor && self.fcs[fi + 1].binarized && signs;
             let bn = Bn {
                 a: Arc::clone(&fc.bn_a),
                 b: Arc::clone(&fc.bn_b),
             };
-            if is_xnor && fc.binarized {
+            if is_xnor && fc.binarized && signs {
                 let EngineKernel::Xnor(imp) = kernel else { unreachable!() };
                 bufs.gemm_i32 = bufs.gemm_i32.max(fc.dout * mb);
                 let rimp = plan_xnor_impl(imp, fc.dout, fc.din, mb);
                 if let XnorImpl::Threaded(t) = rimp {
                     pool_threads = pool_threads.max(t);
                 }
-                ops.push(Op::FcGemmX {
-                    w: Arc::clone(
-                        fc.w_packed.as_ref().expect("packed weights"),
-                    ),
-                    d: fc.dout,
-                    k: fc.din,
-                    imp: rimp,
-                });
-                names.push(xnor_gemm_stage_name(&lname, imp, rimp));
+                match &fc.w_packed_neg {
+                    Some(neg) => {
+                        bufs.gemm_i32b =
+                            bufs.gemm_i32b.max(fc.dout * mb);
+                        ops.push(Op::FcGemmT {
+                            pos: Arc::clone(
+                                fc.w_packed
+                                    .as_ref()
+                                    .expect("packed weights"),
+                            ),
+                            neg: Arc::clone(neg),
+                            d: fc.dout,
+                            k: fc.din,
+                            imp: rimp,
+                        });
+                        names.push(ternary_gemm_stage_name(
+                            &lname, imp, rimp,
+                        ));
+                    }
+                    None => {
+                        ops.push(Op::FcGemmX {
+                            w: Arc::clone(
+                                fc.w_packed
+                                    .as_ref()
+                                    .expect("packed weights"),
+                            ),
+                            d: fc.dout,
+                            k: fc.din,
+                            imp: rimp,
+                        });
+                        names.push(xnor_gemm_stage_name(
+                            &lname, imp, rimp,
+                        ));
+                    }
+                }
                 if next_binarized {
                     bufs.packed_words = bufs
                         .packed_words
                         .max(mb * fc.dout.div_ceil(32));
+                    let alpha = fc.alpha.clone();
+                    let has_alpha = alpha.is_some();
                     ops.push(Op::BnSignPackRows {
                         bn,
                         d: fc.dout,
                         from_f32: false,
+                        alpha,
                     });
-                    names.push(format!("{lname}:bn_sign_pack"));
+                    names.push(bn_pack_stage_name(&lname, has_alpha));
                 } else {
                     if !last {
                         bufs.act = bufs.act.max(mb * fc.dout);
                     }
-                    ops.push(Op::BnRowsI { bn, d: fc.dout, logits: last });
-                    names.push(if last {
-                        format!("{lname}:bn+logits")
-                    } else {
-                        format!("{lname}:bn")
+                    let alpha = fc.alpha.clone();
+                    let has_alpha = alpha.is_some();
+                    ops.push(Op::BnRowsI {
+                        bn,
+                        d: fc.dout,
+                        logits: last,
+                        alpha,
                     });
+                    names.push(bn_rows_stage_name(
+                        &lname, has_alpha, last,
+                    ));
                 }
             } else {
                 // Float-gemm fc: every fc on the float arms, and
                 // non-binarized fcs on the xnor arm (real-valued input
                 // rows, no sign).
-                if !is_xnor && fc.binarized {
+                if !is_xnor && fc.binarized && signs {
                     bufs.act = bufs.act.max(mb * fc.din);
                     ops.push(Op::SignRows { k: fc.din });
                     names.push(format!("{lname}:sign"));
@@ -528,22 +668,30 @@ impl BnnEngine {
                     bufs.packed_words = bufs
                         .packed_words
                         .max(mb * fc.dout.div_ceil(32));
+                    let alpha = fc.alpha.clone();
+                    let has_alpha = alpha.is_some();
                     ops.push(Op::BnSignPackRows {
                         bn,
                         d: fc.dout,
                         from_f32: true,
+                        alpha,
                     });
-                    names.push(format!("{lname}:bn_sign_pack"));
+                    names.push(bn_pack_stage_name(&lname, has_alpha));
                 } else {
                     if !last {
                         bufs.act = bufs.act.max(mb * fc.dout);
                     }
-                    ops.push(Op::BnRowsF { bn, d: fc.dout, logits: last });
-                    names.push(if last {
-                        format!("{lname}:bn+logits")
-                    } else {
-                        format!("{lname}:bn")
+                    let alpha = fc.alpha.clone();
+                    let has_alpha = alpha.is_some();
+                    ops.push(Op::BnRowsF {
+                        bn,
+                        d: fc.dout,
+                        logits: last,
+                        alpha,
                     });
+                    names.push(bn_rows_stage_name(
+                        &lname, has_alpha, last,
+                    ));
                 }
             }
             kdim = fc.dout;
@@ -553,6 +701,7 @@ impl BnnEngine {
         Ok(Plan {
             inner: Arc::new(PlanInner {
                 kernel,
+                scheme,
                 max_batch,
                 input_c: ic,
                 input_h: ih,
@@ -600,6 +749,38 @@ fn xnor_gemm_stage_name(lname: &str, requested: XnorImpl,
     }
 }
 
+/// Stage name for a two-plane ternary gemm op; like
+/// [`xnor_gemm_stage_name`], `Auto` records the resolved impl.
+fn ternary_gemm_stage_name(lname: &str, requested: XnorImpl,
+                           resolved: XnorImpl) -> String {
+    if requested == XnorImpl::Auto {
+        format!("{lname}:ternary-gemm[{}]", resolved.name())
+    } else {
+        format!("{lname}:ternary-gemm")
+    }
+}
+
+/// Stage name for a fused bn+sign+pack epilogue, prefixed with `alpha_`
+/// when a per-channel α scale is folded in.
+fn bn_pack_stage_name(lname: &str, alpha: bool) -> String {
+    if alpha {
+        format!("{lname}:alpha_bn_sign_pack")
+    } else {
+        format!("{lname}:bn_sign_pack")
+    }
+}
+
+/// Stage name for a bn-rows epilogue (optionally α-scaled, optionally
+/// writing the logits tensor).
+fn bn_rows_stage_name(lname: &str, alpha: bool, last: bool) -> String {
+    match (alpha, last) {
+        (true, true) => format!("{lname}:alpha+bn+logits"),
+        (true, false) => format!("{lname}:alpha+bn"),
+        (false, true) => format!("{lname}:bn+logits"),
+        (false, false) => format!("{lname}:bn"),
+    }
+}
+
 /// Which buffer holds the current float activation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Cur {
@@ -625,6 +806,8 @@ pub struct Session {
     packed: PackedMatrix,
     /// Gemm outputs, [D, N] row-major.
     gemm_i32: Vec<i32>,
+    /// Negative-plane scratch for ternary gemms (empty otherwise).
+    gemm_i32b: Vec<i32>,
     gemm_f32: Vec<f32>,
     /// Logits [b, classes]; returned by reference from `run`.
     out: Tensor,
@@ -687,6 +870,7 @@ impl Session {
             (self.cols.as_ptr() as usize, self.cols.capacity()),
             (self.packed.data.as_ptr() as usize, self.packed.word_capacity()),
             (self.gemm_i32.as_ptr() as usize, self.gemm_i32.capacity()),
+            (self.gemm_i32b.as_ptr() as usize, self.gemm_i32b.capacity()),
             (self.gemm_f32.as_ptr() as usize, self.gemm_f32.capacity()),
             (self.out.data().as_ptr() as usize, self.out.capacity()),
         ]
@@ -737,7 +921,7 @@ impl Session {
                                    g.h, g.w, g.ksize, g.ksize, g.stride,
                                    g.pad, bn_ref, &mut self.packed);
                 }
-                Op::ConvGemmF { w, g, imp } => {
+                Op::ConvGemmF { w, g, imp, alpha } => {
                     let n = b * g.oh * g.ow;
                     let (d, k) = (g.cout, g.k());
                     gemm_f32(w, &self.cols[..n * k],
@@ -746,11 +930,19 @@ impl Session {
                         Cur::A => (&mut self.act_b, Cur::B),
                         _ => (&mut self.act_a, Cur::A),
                     };
-                    col2im_nchw_into(&self.gemm_f32[..d * n], b, d, g.oh,
-                                     g.ow, &mut dst[..d * n]);
+                    match alpha {
+                        Some(al) => alpha_col2im_nchw(
+                            &self.gemm_f32[..d * n], b, d, g.oh, g.ow,
+                            al, &mut dst[..d * n],
+                        ),
+                        None => col2im_nchw_into(
+                            &self.gemm_f32[..d * n], b, d, g.oh, g.ow,
+                            &mut dst[..d * n],
+                        ),
+                    }
                     cur = next;
                 }
-                Op::ConvGemmX { w, g, imp } => {
+                Op::ConvGemmX { w, g, imp, alpha } => {
                     let n = b * g.oh * g.ow;
                     let d = g.cout;
                     match plan.pool.as_deref() {
@@ -761,6 +953,37 @@ impl Session {
                         None => xnor_gemm(w, &self.packed,
                                           &mut self.gemm_i32[..d * n],
                                           *imp),
+                    }
+                    let (dst, next) = match cur {
+                        Cur::A => (&mut self.act_b, Cur::B),
+                        _ => (&mut self.act_a, Cur::A),
+                    };
+                    match alpha {
+                        Some(al) => alpha_col2im_nchw_i32(
+                            &self.gemm_i32[..d * n], b, d, g.oh, g.ow,
+                            al, &mut dst[..d * n],
+                        ),
+                        None => col2im_nchw_i32_into(
+                            &self.gemm_i32[..d * n], b, d, g.oh, g.ow,
+                            &mut dst[..d * n],
+                        ),
+                    }
+                    cur = next;
+                }
+                Op::ConvGemmT { pos, neg, g, imp } => {
+                    let n = b * g.oh * g.ow;
+                    let d = g.cout;
+                    match plan.pool.as_deref() {
+                        Some(pool) => ternary_gemm_pooled(
+                            pos, neg, &self.packed,
+                            &mut self.gemm_i32[..d * n],
+                            &mut self.gemm_i32b[..d * n], *imp, pool,
+                        ),
+                        None => ternary_gemm(
+                            pos, neg, &self.packed,
+                            &mut self.gemm_i32[..d * n],
+                            &mut self.gemm_i32b[..d * n], *imp,
+                        ),
                     }
                     let (dst, next) = match cur {
                         Cur::A => (&mut self.act_b, Cur::B),
@@ -836,6 +1059,23 @@ impl Session {
                                           *imp),
                     }
                 }
+                Op::FcGemmT { pos, neg, d, k, imp } => {
+                    let d = *d;
+                    debug_assert_eq!(self.packed.rows, b);
+                    debug_assert_eq!(self.packed.k, *k);
+                    match plan.pool.as_deref() {
+                        Some(pool) => ternary_gemm_pooled(
+                            pos, neg, &self.packed,
+                            &mut self.gemm_i32[..d * b],
+                            &mut self.gemm_i32b[..d * b], *imp, pool,
+                        ),
+                        None => ternary_gemm(
+                            pos, neg, &self.packed,
+                            &mut self.gemm_i32[..d * b],
+                            &mut self.gemm_i32b[..d * b], *imp,
+                        ),
+                    }
+                }
                 Op::SignPackImage { bn, c, hw } => {
                     let (c, hw) = (*c, *hw);
                     let src: &[f32] = match cur {
@@ -853,53 +1093,74 @@ impl Session {
                                                &mut self.packed),
                     }
                 }
-                Op::BnSignPackRows { bn, d, from_f32 } => {
+                Op::BnSignPackRows { bn, d, from_f32, alpha } => {
                     let d = *d;
                     self.packed.reset(b, d);
-                    if *from_f32 {
-                        bn_sign_pack_rows_f32(&self.gemm_f32[..d * b], d,
-                                              b, &bn.a[..], &bn.b[..],
-                                              &mut self.packed);
-                    } else {
-                        bn_sign_pack_rows_i32(&self.gemm_i32[..d * b], d,
-                                              b, &bn.a[..], &bn.b[..],
-                                              &mut self.packed);
+                    match (*from_f32, alpha) {
+                        (true, Some(al)) => bn_sign_pack_rows_f32_alpha(
+                            &self.gemm_f32[..d * b], d, b, al, &bn.a[..],
+                            &bn.b[..], &mut self.packed,
+                        ),
+                        (true, None) => bn_sign_pack_rows_f32(
+                            &self.gemm_f32[..d * b], d, b, &bn.a[..],
+                            &bn.b[..], &mut self.packed,
+                        ),
+                        (false, Some(al)) => bn_sign_pack_rows_i32_alpha(
+                            &self.gemm_i32[..d * b], d, b, al, &bn.a[..],
+                            &bn.b[..], &mut self.packed,
+                        ),
+                        (false, None) => bn_sign_pack_rows_i32(
+                            &self.gemm_i32[..d * b], d, b, &bn.a[..],
+                            &bn.b[..], &mut self.packed,
+                        ),
                     }
                 }
-                Op::BnRowsI { bn, d, logits } => {
+                Op::BnRowsI { bn, d, logits, alpha } => {
                     let d = *d;
-                    if *logits {
+                    let dst: &mut [f32] = if *logits {
                         self.out.reset(&[b, d]);
-                        bn_rows_from_gemm_i32(&self.gemm_i32[..d * b], d,
-                                              b, &bn.a[..], &bn.b[..],
-                                              self.out.data_mut());
+                        self.out.data_mut()
                     } else {
                         let (dst, next) = match cur {
                             Cur::A => (&mut self.act_b, Cur::B),
                             _ => (&mut self.act_a, Cur::A),
                         };
-                        bn_rows_from_gemm_i32(&self.gemm_i32[..d * b], d,
-                                              b, &bn.a[..], &bn.b[..],
-                                              &mut dst[..b * d]);
                         cur = next;
+                        &mut dst[..b * d]
+                    };
+                    match alpha {
+                        Some(al) => bn_rows_from_gemm_i32_alpha(
+                            &self.gemm_i32[..d * b], d, b, al, &bn.a[..],
+                            &bn.b[..], dst,
+                        ),
+                        None => bn_rows_from_gemm_i32(
+                            &self.gemm_i32[..d * b], d, b, &bn.a[..],
+                            &bn.b[..], dst,
+                        ),
                     }
                 }
-                Op::BnRowsF { bn, d, logits } => {
+                Op::BnRowsF { bn, d, logits, alpha } => {
                     let d = *d;
-                    if *logits {
+                    let dst: &mut [f32] = if *logits {
                         self.out.reset(&[b, d]);
-                        bn_rows_from_gemm_f32(&self.gemm_f32[..d * b], d, b,
-                                              &bn.a[..], &bn.b[..],
-                                              self.out.data_mut());
+                        self.out.data_mut()
                     } else {
                         let (dst, next) = match cur {
                             Cur::A => (&mut self.act_b, Cur::B),
                             _ => (&mut self.act_a, Cur::A),
                         };
-                        bn_rows_from_gemm_f32(&self.gemm_f32[..d * b], d, b,
-                                              &bn.a[..], &bn.b[..],
-                                              &mut dst[..b * d]);
                         cur = next;
+                        &mut dst[..b * d]
+                    };
+                    match alpha {
+                        Some(al) => bn_rows_from_gemm_f32_alpha(
+                            &self.gemm_f32[..d * b], d, b, al, &bn.a[..],
+                            &bn.b[..], dst,
+                        ),
+                        None => bn_rows_from_gemm_f32(
+                            &self.gemm_f32[..d * b], d, b, &bn.a[..],
+                            &bn.b[..], dst,
+                        ),
                     }
                 }
             }

@@ -63,6 +63,99 @@
 
 use crate::nn::im2col::out_hw;
 
+/// Net-level quantization scheme: which domain the weighted layers'
+/// operands live in and which epilogue the fused plan runs.  One scheme
+/// governs the whole net (per the related-work model families); the
+/// per-layer `binarized` flags still pick WHICH layers quantize.
+///
+/// Every `match` on this enum lives in this module, `model/plan.rs`,
+/// `model/bnn.rs`, or `nn/fuse.rs` (enforced by a ci.sh grep gate);
+/// everything else goes through the helper predicates below.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantScheme {
+    /// sign(w)·sign(a) — the source paper's scheme and the BKW1/legacy
+    /// default: both operands packed, pure xnor+popcount gemm.
+    #[default]
+    SignSign,
+    /// XNOR-Net (Rastegari et al.): sign·sign gemm plus a
+    /// per-output-channel f32 scale α = E|w| multiplied into the
+    /// epilogue after the popcount.
+    XnorAlpha,
+    /// Binary-weight network (Courbariaux et al. line): sign-binarized
+    /// weights, real-valued activations — runs on the float gemm arm.
+    BinaryWeight,
+    /// Ternary weights {-1, 0, +1} packed as two bit-planes,
+    /// popcounted over both and combined; activations stay signs.
+    TernaryWeight,
+}
+
+impl QuantScheme {
+    /// Every scheme, for conformance-matrix enumeration.
+    pub const ALL: [QuantScheme; 4] = [
+        QuantScheme::SignSign,
+        QuantScheme::XnorAlpha,
+        QuantScheme::BinaryWeight,
+        QuantScheme::TernaryWeight,
+    ];
+
+    /// Canonical lowercase name (BKW2 metadata, `describe`, `/models`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantScheme::SignSign => "sign_sign",
+            QuantScheme::XnorAlpha => "xnor_alpha",
+            QuantScheme::BinaryWeight => "binary_weight",
+            QuantScheme::TernaryWeight => "ternary_weight",
+        }
+    }
+
+    /// Stable BKW2 wire value (pinned by conformance tests).
+    pub fn wire_byte(&self) -> u8 {
+        match self {
+            QuantScheme::SignSign => 0,
+            QuantScheme::XnorAlpha => 1,
+            QuantScheme::BinaryWeight => 2,
+            QuantScheme::TernaryWeight => 3,
+        }
+    }
+
+    /// Inverse of [`QuantScheme::wire_byte`] (`None` for unknown
+    /// values — the reader surfaces those as a typed format error).
+    pub fn from_wire_byte(v: u8) -> Option<Self> {
+        Self::ALL.into_iter().find(|s| s.wire_byte() == v)
+    }
+
+    /// Whether binarized layers consume sign-binarized ACTIVATIONS
+    /// (false only for [`QuantScheme::BinaryWeight`], whose activations
+    /// stay real-valued — its grammar carries no `Sign` ops).
+    pub fn signs_activations(&self) -> bool {
+        !matches!(self, QuantScheme::BinaryWeight)
+    }
+
+    /// Whether binarized layers carry a per-output-channel α tensor
+    /// (`<layer>.alpha` in the weight file).
+    pub fn has_alpha(&self) -> bool {
+        matches!(self, QuantScheme::XnorAlpha)
+    }
+
+    /// Whether binarized weights are ternary (two packed bit-planes).
+    pub fn is_ternary(&self) -> bool {
+        matches!(self, QuantScheme::TernaryWeight)
+    }
+
+    /// Whether this is the legacy default ([`QuantScheme::SignSign`]);
+    /// BKW2 files omit the scheme section for the default, so legacy
+    /// bytes stay valid and new writers stay byte-identical on it.
+    pub fn is_default(&self) -> bool {
+        matches!(self, QuantScheme::SignSign)
+    }
+}
+
+impl std::fmt::Display for QuantScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// One op of the architecture IR.  See the module docs for the grammar
 /// validation enforces between ops.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -297,6 +390,7 @@ pub enum SpecError {
 pub struct NetSpec {
     input: (usize, usize, usize),
     classes: usize,
+    scheme: QuantScheme,
     layers: Vec<LayerSpec>,
     /// Shape AFTER each op (parallel to `layers`).
     shapes: Vec<Shape>,
@@ -336,11 +430,25 @@ pub(crate) struct FcBlock {
 }
 
 impl NetSpec {
-    /// Validate `layers` against `input` (C, H, W) and build the spec.
+    /// Validate `layers` against `input` (C, H, W) and build the spec
+    /// with the legacy default scheme ([`QuantScheme::SignSign`]).
     /// The class count is the final linear width.
     pub fn new(
         input: (usize, usize, usize),
         layers: Vec<LayerSpec>,
+    ) -> Result<Self, SpecError> {
+        Self::new_with_scheme(input, layers, QuantScheme::SignSign)
+    }
+
+    /// [`NetSpec::new`] under an explicit [`QuantScheme`].  Validation
+    /// is scheme-aware: schemes whose activations stay real-valued
+    /// (see [`QuantScheme::signs_activations`]) forbid `Sign` ops —
+    /// there is nothing for them to feed — while the binarized flags
+    /// still mark which layers quantize their weights.
+    pub fn new_with_scheme(
+        input: (usize, usize, usize),
+        layers: Vec<LayerSpec>,
+        scheme: QuantScheme,
     ) -> Result<Self, SpecError> {
         let (ic, ih, iw) = input;
         if ic == 0 || ih == 0 || iw == 0 {
@@ -352,6 +460,10 @@ impl NetSpec {
 
         // Walked state: current shape, whether a Sign is waiting to be
         // consumed, and which weighted layer still owes a BatchNorm.
+        // Under schemes with real activations a `Sign` can never be
+        // consumed, so the (binarized-and-signed, pending_sign)
+        // cross-checks below flag it as dangling.
+        let signs = scheme.signs_activations();
         let mut shape = Shape::Image { c: ic, h: ih, w: iw };
         let mut shapes = Vec::with_capacity(layers.len());
         let mut pending_sign = false;
@@ -376,7 +488,7 @@ impl NetSpec {
                             found: shape,
                         });
                     };
-                    match (*binarized, pending_sign) {
+                    match (*binarized && signs, pending_sign) {
                         (true, false) => {
                             return Err(SpecError::UnsignedBinarized {
                                 index,
@@ -504,7 +616,7 @@ impl NetSpec {
                     let Shape::Rows { .. } = shape else {
                         return Err(SpecError::ExpectsRows { index });
                     };
-                    match (*binarized, pending_sign) {
+                    match (*binarized && signs, pending_sign) {
                         (true, false) => {
                             return Err(SpecError::UnsignedBinarized {
                                 index,
@@ -554,7 +666,7 @@ impl NetSpec {
         if !matches!(shape, Shape::Rows { .. }) {
             return Err(SpecError::NoFinalLinear);
         }
-        Ok(Self { input, classes, layers, shapes })
+        Ok(Self { input, classes, scheme, layers, shapes })
     }
 
     /// [`NetSpec::new`] plus a cross-check that the final linear width
@@ -565,7 +677,20 @@ impl NetSpec {
         classes: usize,
         layers: Vec<LayerSpec>,
     ) -> Result<Self, SpecError> {
-        let spec = Self::new(input, layers)?;
+        Self::with_classes_scheme(input, classes, layers,
+                                  QuantScheme::SignSign)
+    }
+
+    /// [`NetSpec::with_classes`] under an explicit [`QuantScheme`] —
+    /// the constructor the BKW2 reader uses when the file carries a
+    /// scheme section.
+    pub fn with_classes_scheme(
+        input: (usize, usize, usize),
+        classes: usize,
+        layers: Vec<LayerSpec>,
+        scheme: QuantScheme,
+    ) -> Result<Self, SpecError> {
+        let spec = Self::new_with_scheme(input, layers, scheme)?;
         if spec.classes != classes {
             return Err(SpecError::ClassMismatch {
                 dout: spec.classes,
@@ -582,6 +707,7 @@ impl NetSpec {
             layers: Vec::new(),
             weighted: 0,
             flattened: false,
+            scheme: QuantScheme::SignSign,
             error: None,
         }
     }
@@ -644,6 +770,11 @@ impl NetSpec {
         self.classes
     }
 
+    /// The net-level quantization scheme.
+    pub fn scheme(&self) -> QuantScheme {
+        self.scheme
+    }
+
     /// The validated op list, in execution order.
     pub fn layers(&self) -> &[LayerSpec] {
         &self.layers
@@ -689,7 +820,13 @@ impl NetSpec {
         let fc: usize = fcs.iter().map(|s| s.din * s.dout).sum();
         let bn: usize = convs.iter().map(|s| 2 * s.cout).sum::<usize>()
             + fcs.iter().map(|s| 2 * s.dout).sum::<usize>();
-        conv + fc + bn
+        let alpha: usize = if self.scheme.has_alpha() {
+            convs.iter().filter(|s| s.binarized).map(|s| s.cout).sum::<usize>()
+                + fcs.iter().filter(|s| s.binarized).map(|s| s.dout).sum::<usize>()
+        } else {
+            0
+        };
+        conv + fc + bn + alpha
     }
 
     /// The weighted-layer view the engine loader and plan lowering
@@ -755,6 +892,7 @@ pub struct NetSpecBuilder {
     layers: Vec<LayerSpec>,
     weighted: usize,
     flattened: bool,
+    scheme: QuantScheme,
     error: Option<SpecError>,
 }
 
@@ -839,13 +977,31 @@ impl NetSpecBuilder {
         self
     }
 
+    /// Select the net-level [`QuantScheme`] (default
+    /// [`QuantScheme::SignSign`]).  May be called at any point in the
+    /// chain: the builder's `Sign` plumbing is reconciled at
+    /// [`NetSpecBuilder::build`], so schemes with real-valued
+    /// activations simply drop the `Sign` ops the grammar no longer
+    /// wants.
+    pub fn scheme(mut self, scheme: QuantScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
     /// Validate and produce the [`NetSpec`]; the class count is the
     /// final linear width.
     pub fn build(self) -> Result<NetSpec, SpecError> {
         if let Some(e) = self.error {
             return Err(e);
         }
-        NetSpec::new(self.input, self.layers)
+        let mut layers = self.layers;
+        if !self.scheme.signs_activations() {
+            // The builder emits Sign ops only directly before binarized
+            // weighted layers, so dropping them all yields exactly the
+            // sign-free grammar these schemes validate against.
+            layers.retain(|l| !matches!(l, LayerSpec::Sign));
+        }
+        NetSpec::new_with_scheme(self.input, layers, self.scheme)
     }
 }
 
@@ -1057,5 +1213,108 @@ mod tests {
             NetSpec::builder((3, 8, 8)).pool().linear(2).build(),
             Err(SpecError::Builder(_))
         ));
+    }
+
+    #[test]
+    fn scheme_names_and_wire_bytes_are_pinned() {
+        let want = [("sign_sign", 0u8), ("xnor_alpha", 1),
+                    ("binary_weight", 2), ("ternary_weight", 3)];
+        assert_eq!(QuantScheme::ALL.len(), want.len());
+        for (s, (name, byte)) in QuantScheme::ALL.iter().zip(want) {
+            assert_eq!(s.name(), name);
+            assert_eq!(s.wire_byte(), byte);
+            assert_eq!(QuantScheme::from_wire_byte(byte), Some(*s));
+        }
+        assert_eq!(QuantScheme::from_wire_byte(4), None);
+        assert_eq!(QuantScheme::default(), QuantScheme::SignSign);
+        assert!(QuantScheme::SignSign.is_default());
+        assert!(!QuantScheme::XnorAlpha.is_default());
+    }
+
+    #[test]
+    fn default_constructors_stay_sign_sign() {
+        let spec = NetSpec::from_widths(&FULL).unwrap();
+        assert_eq!(spec.scheme(), QuantScheme::SignSign);
+        let spec = NetSpec::builder((1, 8, 8)).linear(5).build().unwrap();
+        assert_eq!(spec.scheme(), QuantScheme::SignSign);
+    }
+
+    #[test]
+    fn builder_selects_schemes() {
+        for scheme in QuantScheme::ALL {
+            let spec = NetSpec::builder((3, 8, 8))
+                .conv(4, 3)
+                .pool()
+                .conv(4, 3)
+                .linear(6)
+                .linear(2)
+                .scheme(scheme)
+                .build()
+                .unwrap();
+            assert_eq!(spec.scheme(), scheme);
+            let n_signs = spec
+                .layers()
+                .iter()
+                .filter(|l| matches!(l, LayerSpec::Sign))
+                .count();
+            // conv2, fc1, fc2 are binarized: three signs under
+            // sign-consuming schemes, none under binary_weight.
+            if scheme.signs_activations() {
+                assert_eq!(n_signs, 3, "{scheme}");
+            } else {
+                assert_eq!(n_signs, 0, "{scheme}");
+            }
+            // binarized flags are scheme-independent
+            let (convs, fcs) = spec.blocks();
+            assert!(!convs[0].binarized && convs[1].binarized);
+            assert!(fcs[0].binarized && fcs[1].binarized);
+        }
+    }
+
+    #[test]
+    fn binary_weight_grammar_forbids_sign_ops() {
+        use LayerSpec::*;
+        // a Sign can never be consumed when activations stay real
+        assert!(matches!(
+            NetSpec::new_with_scheme(
+                (1, 2, 2),
+                vec![Flatten, Sign, Linear { dout: 2, binarized: true },
+                     BatchNorm],
+                QuantScheme::BinaryWeight,
+            ),
+            Err(SpecError::DanglingSign { index: 1 })
+        ));
+        // ...and a binarized layer needs no Sign under binary_weight
+        let spec = NetSpec::new_with_scheme(
+            (1, 2, 2),
+            vec![Flatten, Linear { dout: 2, binarized: true }, BatchNorm],
+            QuantScheme::BinaryWeight,
+        )
+        .unwrap();
+        assert_eq!(spec.scheme(), QuantScheme::BinaryWeight);
+        // ...but still needs one under every sign-consuming scheme
+        assert!(matches!(
+            NetSpec::new_with_scheme(
+                (1, 2, 2),
+                vec![Flatten, Linear { dout: 2, binarized: true },
+                     BatchNorm],
+                QuantScheme::TernaryWeight,
+            ),
+            Err(SpecError::UnsignedBinarized { index: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn alpha_counts_as_parameters() {
+        let base = NetSpec::builder((1, 8, 8)).linear(6).linear(2).build()
+            .unwrap();
+        let with_alpha = NetSpec::builder((1, 8, 8))
+            .linear(6)
+            .linear(2)
+            .scheme(QuantScheme::XnorAlpha)
+            .build()
+            .unwrap();
+        // only fc2 is binarized -> 2 extra alpha scalars
+        assert_eq!(with_alpha.param_count(), base.param_count() + 2);
     }
 }

@@ -124,6 +124,139 @@ pub fn bn_rows_from_gemm_f32(gemm: &[f32], d: usize, b: usize,
     }
 }
 
+/// [`bn_sign_pack_rows_i32`] with the XNOR-Net per-output-channel α
+/// multiplied in AFTER the popcount, BEFORE the bn affine:
+/// `y = a * (alpha * g) + b`.  The reference path scales the gemm
+/// output then applies bn — the same two f32 ops in the same order —
+/// so fused and unfused stay bit-identical.
+pub fn bn_sign_pack_rows_i32_alpha(gemm: &[i32], d: usize, b: usize,
+                                   alpha: &[f32], a: &[f32],
+                                   bias: &[f32], out: &mut PackedMatrix) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(alpha.len(), d, "alpha len");
+    assert_eq!(a.len(), d, "bn scale len");
+    assert_eq!(bias.len(), d, "bn shift len");
+    assert_eq!(out.rows, b, "packed rows");
+    assert_eq!(out.k, d, "packed k");
+    let kw = out.kw;
+    for bi in 0..b {
+        let mut bw =
+            BitWriter::new(&mut out.data[bi * kw..(bi + 1) * kw]);
+        for di in 0..d {
+            let v = a[di] * (alpha[di] * gemm[di * b + bi] as f32)
+                + bias[di];
+            bw.push(u32::from(v >= 0.0));
+        }
+        bw.finish();
+    }
+}
+
+/// [`bn_sign_pack_rows_i32_alpha`] for f32 gemm output.
+pub fn bn_sign_pack_rows_f32_alpha(gemm: &[f32], d: usize, b: usize,
+                                   alpha: &[f32], a: &[f32],
+                                   bias: &[f32], out: &mut PackedMatrix) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(alpha.len(), d, "alpha len");
+    assert_eq!(a.len(), d, "bn scale len");
+    assert_eq!(bias.len(), d, "bn shift len");
+    assert_eq!(out.rows, b, "packed rows");
+    assert_eq!(out.k, d, "packed k");
+    let kw = out.kw;
+    for bi in 0..b {
+        let mut bw =
+            BitWriter::new(&mut out.data[bi * kw..(bi + 1) * kw]);
+        for di in 0..d {
+            let v = a[di] * (alpha[di] * gemm[di * b + bi]) + bias[di];
+            bw.push(u32::from(v >= 0.0));
+        }
+        bw.finish();
+    }
+}
+
+/// [`bn_rows_from_gemm_i32`] with the α scale folded in:
+/// `y = a * (alpha * g) + b` (the final-logits epilogue of an
+/// α-scaled fc layer).
+pub fn bn_rows_from_gemm_i32_alpha(gemm: &[i32], d: usize, b: usize,
+                                   alpha: &[f32], a: &[f32],
+                                   bias: &[f32], out: &mut [f32]) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(out.len(), b * d, "output len");
+    assert_eq!(alpha.len(), d);
+    assert_eq!(a.len(), d);
+    assert_eq!(bias.len(), d);
+    for di in 0..d {
+        let (sc, ac, bc) = (alpha[di], a[di], bias[di]);
+        for bi in 0..b {
+            out[bi * d + di] = ac * (sc * gemm[di * b + bi] as f32) + bc;
+        }
+    }
+}
+
+/// [`bn_rows_from_gemm_i32_alpha`] for float gemm output.
+pub fn bn_rows_from_gemm_f32_alpha(gemm: &[f32], d: usize, b: usize,
+                                   alpha: &[f32], a: &[f32],
+                                   bias: &[f32], out: &mut [f32]) {
+    assert_eq!(gemm.len(), d * b, "gemm len");
+    assert_eq!(out.len(), b * d, "output len");
+    assert_eq!(alpha.len(), d);
+    assert_eq!(a.len(), d);
+    assert_eq!(bias.len(), d);
+    for di in 0..d {
+        let (sc, ac, bc) = (alpha[di], a[di], bias[di]);
+        for bi in 0..b {
+            out[bi * d + di] = ac * (sc * gemm[di * b + bi]) + bc;
+        }
+    }
+}
+
+/// col2im fused with the i32 -> f32 conversion AND the per-output-
+/// channel α scale (`y = alpha[d] * g`; multiply only — an `+ 0.0`
+/// affine would turn `-0.0` into `+0.0` and break bit-identity with
+/// the reference's plain scale).  Layout mirrors
+/// [`crate::nn::im2col::col2im_nchw_i32_into`].
+pub fn alpha_col2im_nchw_i32(gemm: &[i32], b: usize, d: usize,
+                             oh: usize, ow: usize, alpha: &[f32],
+                             out: &mut [f32]) {
+    let n = b * oh * ow;
+    assert_eq!(gemm.len(), d * n, "gemm len");
+    assert_eq!(out.len(), d * n, "output len");
+    assert_eq!(alpha.len(), d, "alpha len");
+    let hw = oh * ow;
+    for di in 0..d {
+        let sc = alpha[di];
+        let src = &gemm[di * n..(di + 1) * n];
+        for bi in 0..b {
+            let dst = &mut out[(bi * d + di) * hw..][..hw];
+            for (o, &v) in dst.iter_mut().zip(&src[bi * hw..(bi + 1) * hw])
+            {
+                *o = sc * v as f32;
+            }
+        }
+    }
+}
+
+/// [`alpha_col2im_nchw_i32`] for float gemm output (the α conv
+/// epilogue of the Control/Optimized arms).
+pub fn alpha_col2im_nchw(gemm: &[f32], b: usize, d: usize, oh: usize,
+                         ow: usize, alpha: &[f32], out: &mut [f32]) {
+    let n = b * oh * ow;
+    assert_eq!(gemm.len(), d * n, "gemm len");
+    assert_eq!(out.len(), d * n, "output len");
+    assert_eq!(alpha.len(), d, "alpha len");
+    let hw = oh * ow;
+    for di in 0..d {
+        let sc = alpha[di];
+        let src = &gemm[di * n..(di + 1) * n];
+        for bi in 0..b {
+            let dst = &mut out[(bi * d + di) * hw..][..hw];
+            for (o, &v) in dst.iter_mut().zip(&src[bi * hw..(bi + 1) * hw])
+            {
+                *o = sc * v;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +333,87 @@ mod tests {
             got.data.fill(0xDEAD_BEEF);
             bn_sign_pack_rows_f32(&gemm_f, d, b, &a, &bias, &mut got);
             assert_eq!(got, want, "d={d} b={b}");
+        }
+    }
+
+    #[test]
+    fn alpha_epilogues_match_unfused_scale_then_bn() {
+        let mut rng = Rng::new(44);
+        for (d, b) in [(10, 1), (33, 3), (64, 8), (70, 5)] {
+            let gemm: Vec<i32> =
+                (0..d * b).map(|_| rng.below(41) as i32 - 20).collect();
+            let alpha: Vec<f32> =
+                rng.normal_vec(d).iter().map(|v| v.abs()).collect();
+            let a = rng.normal_vec(d);
+            let bias = rng.normal_vec(d);
+            // unfused oracle: transpose + scale, then bn, then pack —
+            // the forward_reference data flow for an α-scaled layer.
+            let mut rows = vec![0.0f32; b * d];
+            for di in 0..d {
+                for bi in 0..b {
+                    rows[bi * d + di] =
+                        alpha[di] * gemm[di * b + bi] as f32;
+                }
+            }
+            let mut t = Tensor::new(vec![b, d], rows);
+            bn_affine_rows(&mut t, &a, &bias);
+            let want_rows = t.data().to_vec();
+            let want_packed = pack_rows(t.data(), b, d);
+
+            let mut got = PackedMatrix::zeros(b, d);
+            got.data.fill(0xDEAD_BEEF);
+            bn_sign_pack_rows_i32_alpha(&gemm, d, b, &alpha, &a, &bias,
+                                        &mut got);
+            assert_eq!(got, want_packed, "i32 pack d={d} b={b}");
+
+            let gemm_f: Vec<f32> =
+                gemm.iter().map(|&v| v as f32).collect();
+            got.data.fill(0xDEAD_BEEF);
+            bn_sign_pack_rows_f32_alpha(&gemm_f, d, b, &alpha, &a, &bias,
+                                        &mut got);
+            assert_eq!(got, want_packed, "f32 pack d={d} b={b}");
+
+            let mut got_rows = vec![7.5f32; b * d];
+            bn_rows_from_gemm_i32_alpha(&gemm, d, b, &alpha, &a, &bias,
+                                        &mut got_rows);
+            assert_eq!(got_rows, want_rows, "i32 rows d={d} b={b}");
+            got_rows.fill(7.5);
+            bn_rows_from_gemm_f32_alpha(&gemm_f, d, b, &alpha, &a, &bias,
+                                        &mut got_rows);
+            assert_eq!(got_rows, want_rows, "f32 rows d={d} b={b}");
+        }
+    }
+
+    #[test]
+    fn alpha_col2im_matches_scale_after_col2im() {
+        use crate::nn::im2col::col2im_nchw_i32;
+        let mut rng = Rng::new(45);
+        for (b, d, oh, ow) in [(1, 3, 2, 2), (2, 5, 3, 4), (3, 1, 1, 7)] {
+            let n = b * oh * ow;
+            let gemm: Vec<i32> =
+                (0..d * n).map(|_| rng.below(61) as i32 - 30).collect();
+            let alpha: Vec<f32> =
+                rng.normal_vec(d).iter().map(|v| v.abs()).collect();
+            // oracle: plain col2im, then per-channel multiply
+            let t = col2im_nchw_i32(&gemm, b, d, oh, ow);
+            let mut want = t.data().to_vec();
+            let hw = oh * ow;
+            for bi in 0..b {
+                for di in 0..d {
+                    for v in &mut want[(bi * d + di) * hw..][..hw] {
+                        *v *= alpha[di];
+                    }
+                }
+            }
+            let mut got = vec![9.0f32; d * n];
+            alpha_col2im_nchw_i32(&gemm, b, d, oh, ow, &alpha, &mut got);
+            assert_eq!(got, want, "i32 b={b} d={d}");
+
+            let gemm_f: Vec<f32> =
+                gemm.iter().map(|&v| v as f32).collect();
+            got.fill(9.0);
+            alpha_col2im_nchw(&gemm_f, b, d, oh, ow, &alpha, &mut got);
+            assert_eq!(got, want, "f32 b={b} d={d}");
         }
     }
 

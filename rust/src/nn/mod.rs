@@ -19,9 +19,12 @@ pub mod ops;
 pub mod pool;
 
 pub use conv::{conv2d, ConvKernel};
-pub use fuse::{bn_rows_from_gemm_f32, bn_rows_from_gemm_i32,
+pub use fuse::{alpha_col2im_nchw, alpha_col2im_nchw_i32,
+               bn_rows_from_gemm_f32, bn_rows_from_gemm_f32_alpha,
+               bn_rows_from_gemm_i32, bn_rows_from_gemm_i32_alpha,
                bn_sign_pack_nchw, bn_sign_pack_rows_f32,
-               bn_sign_pack_rows_i32};
+               bn_sign_pack_rows_f32_alpha, bn_sign_pack_rows_i32,
+               bn_sign_pack_rows_i32_alpha};
 pub use im2col::{col2im_nchw, im2col_t, out_hw};
 pub use linear::linear;
 pub use norm::{bn_affine_nchw, bn_affine_rows};

@@ -157,6 +157,10 @@ pub struct ModelContract {
     pub labels: Option<Vec<String>>,
     /// Backend label (e.g. `native/xnor/auto`).
     pub backend: String,
+    /// Quantization scheme name (`sign_sign`, `xnor_alpha`, ...), when
+    /// known from the weight file (hand-registered routers carry
+    /// none).
+    pub scheme: Option<String>,
 }
 
 impl ModelContract {
@@ -319,6 +323,7 @@ impl ModelRegistry {
             classes: router.classes(),
             labels: router.labels().map(<[String]>::to_vec),
             backend: router.backend_name().to_string(),
+            scheme: None,
         };
         models.insert(
             name.to_string(),
@@ -403,6 +408,7 @@ impl ModelRegistry {
                     classes: spec.classes(),
                     labels: wf.labels().map(<[String]>::to_vec),
                     backend: format!("native/{}", self.cfg.kernel.name()),
+                    scheme: Some(spec.scheme().name().to_string()),
                 };
                 Ok((None, Arc::new(wf), contract))
             })
@@ -750,6 +756,7 @@ impl ModelRegistry {
         };
         let engine = BnnEngine::from_weight_file(&weights)?;
         let plan = engine.plan(self.cfg.kernel, self.cfg.max_batch)?;
+        let scheme = Some(plan.scheme().name().to_string());
         let router = Router::start(
             move |_replica| {
                 Ok(Box::new(NativeBackend::from_plan(&plan))
@@ -762,6 +769,7 @@ impl ModelRegistry {
             classes: router.classes(),
             labels: router.labels().map(<[String]>::to_vec),
             backend: router.backend_name().to_string(),
+            scheme,
         };
         Ok((Arc::new(router), weights, contract))
     }

@@ -431,6 +431,13 @@ fn status_descriptor(st: &ModelStatus) -> Json {
         ));
         fields.push(("classes", Json::Num(contract.classes as f64)));
         fields.push((
+            "scheme",
+            match &contract.scheme {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        ));
+        fields.push((
             "labels",
             match &contract.labels {
                 Some(l) => Json::Arr(

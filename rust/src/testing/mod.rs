@@ -67,9 +67,13 @@ pub fn dim(rng: &mut Rng, hi: usize) -> usize {
 
 /// Assemble an in-memory BKW2 [`crate::model::WeightFile`] (spec
 /// embedded) for ANY validated [`crate::model::NetSpec`], with random
-/// sign-binarized weights and random (signed!) folded-BN affines — no
-/// artifacts on disk needed.  `tests/netspec.rs` writes these through
-/// the BKW2 serializer to pin the round trip.
+/// scheme-appropriate weights (sign-binarized ±1, or {-1, 0, +1} for
+/// ternary-scheme specs), random (signed!) folded-BN affines, and —
+/// for α-carrying schemes — a positive per-output-channel `.alpha`
+/// tensor per binarized layer.  No artifacts on disk needed.
+/// `tests/netspec.rs` writes these through the BKW2 serializer to pin
+/// the round trip; `tests/scheme_conformance.rs` drives every scheme
+/// through it.
 pub fn synthetic_weight_file(spec: &crate::model::NetSpec, seed: u64)
                              -> crate::model::WeightFile {
     use crate::model::{Dtype, WeightFile, WeightTensor};
@@ -82,6 +86,20 @@ pub fn synthetic_weight_file(spec: &crate::model::NetSpec, seed: u64)
             vals.iter().map(|v| v.to_bits()).collect(),
         )
     };
+    let scheme = spec.scheme();
+    let ternary = scheme.is_ternary();
+    let wvals = move |rng: &mut Rng, n: usize| -> Vec<f32> {
+        if ternary {
+            (0..n).map(|_| rng.below(3) as f32 - 1.0).collect()
+        } else {
+            rng.sign_vec(n)
+        }
+    };
+    // Strictly positive per-channel scales (the semantic analogue of
+    // XNOR-Net's E|w|; exact value is irrelevant to bit-identity).
+    let avals = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        rng.normal_vec(n).iter().map(|v| v.abs() + 0.5).collect()
+    };
     let mut rng = Rng::new(seed);
     let mut tensors = BTreeMap::new();
     // The same derived-dim walk the engine loader uses — blocks()
@@ -91,23 +109,31 @@ pub fn synthetic_weight_file(spec: &crate::model::NetSpec, seed: u64)
     for s in &convs {
         tensors.insert(
             format!("{}.w", s.name),
-            f32t(rng.sign_vec(s.cout * s.k()),
+            f32t(wvals(&mut rng, s.cout * s.k()),
                  vec![s.cout, s.cin, s.ksize, s.ksize]),
         );
         tensors.insert(format!("bn_{}.a", s.name),
                        f32t(rng.normal_vec(s.cout), vec![s.cout]));
         tensors.insert(format!("bn_{}.b", s.name),
                        f32t(rng.normal_vec(s.cout), vec![s.cout]));
+        if s.binarized && scheme.has_alpha() {
+            tensors.insert(format!("{}.alpha", s.name),
+                           f32t(avals(&mut rng, s.cout), vec![s.cout]));
+        }
     }
     for s in &fcs {
         tensors.insert(
             format!("{}.w", s.name),
-            f32t(rng.sign_vec(s.dout * s.din), vec![s.dout, s.din]),
+            f32t(wvals(&mut rng, s.dout * s.din), vec![s.dout, s.din]),
         );
         tensors.insert(format!("bn_{}.a", s.name),
                        f32t(rng.normal_vec(s.dout), vec![s.dout]));
         tensors.insert(format!("bn_{}.b", s.name),
                        f32t(rng.normal_vec(s.dout), vec![s.dout]));
+        if s.binarized && scheme.has_alpha() {
+            tensors.insert(format!("{}.alpha", s.name),
+                           f32t(avals(&mut rng, s.dout), vec![s.dout]));
+        }
     }
     WeightFile::from_tensors_with_spec(tensors, spec.clone())
 }

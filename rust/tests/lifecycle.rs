@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 use bitkernel::bitops::XnorImpl;
 use bitkernel::coordinator::{BatcherConfig, RouterConfig};
 use bitkernel::data::normalize_batch;
-use bitkernel::model::{BnnEngine, EngineKernel, NetSpec};
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec, QuantScheme};
 use bitkernel::server::{
     http_call, serve, ModelRegistry, RegistryConfig, ServeOptions, Service,
 };
@@ -435,6 +435,124 @@ fn reload_under_hammer_is_lossless_and_generation_exact() {
     }
     println!(
         "hammer: {} replies across generations {:?}",
+        replies.len(),
+        gens_seen
+    );
+
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scheme_reload_under_traffic_is_lossless_and_scheme_exact() {
+    // Hot-reload a mounted model across QUANTIZATION SCHEMES
+    // (sign_sign -> xnor_alpha -> back) under closed-loop traffic.
+    // Same topology, different lowering: every reply must still be
+    // answered by exactly one generation, bit-identical to THAT
+    // generation's scheme-aware forward_reference, with zero drops,
+    // and /models must report the live scheme after each swap.
+    let dir = temp_dir("scheme");
+    let sign = spec_conv();
+    let alpha = NetSpec::builder((1, 4, 4))
+        .conv(2, 3)
+        .linear(3)
+        .scheme(QuantScheme::XnorAlpha)
+        .build()
+        .unwrap();
+    let path = dir.join("s.bkw");
+    write_model(&path, &sign, 300);
+    let srv = boot(registry(0));
+    let addr = srv.addr.clone();
+
+    let st = mount_wait(&addr, "s", &path, false);
+    assert_eq!(st.get("scheme").unwrap().as_str(), Some("sign_sign"));
+    let g0 = st.get("generation").unwrap().as_f64().unwrap() as u64;
+
+    // generation -> (spec-with-scheme, seed) it serves.
+    let mut gen_model = std::collections::BTreeMap::new();
+    gen_model.insert(g0, (sign.clone(), 300u64));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for tid in 0..3usize {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let sign = sign.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut replies = Vec::new();
+            let mut n = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let salt = (tid * 5 + n) % 4;
+                n += 1;
+                // Both schemes share the input contract, so the same
+                // pixels are valid across every generation.
+                let px = pixels(&sign, salt);
+                let (status, body) = classify(&addr, "s", &px);
+                assert_eq!(
+                    status, 200,
+                    "scheme reload dropped a request: {}",
+                    String::from_utf8_lossy(&body)
+                );
+                let (generation, logits) = reply_logits(&body);
+                replies.push((generation, salt, logits));
+            }
+            replies
+        }));
+    }
+
+    // Swap scheme on every reload while the hammer runs.
+    for (i, spec) in
+        [(1u64, &alpha), (2, &sign), (3, &alpha)]
+    {
+        let seed = 300 + i;
+        write_model(&path, spec, seed);
+        let (status, body) =
+            http_call(&addr, "PUT", "/models/s?wait=1", b"").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let g = json(&body).get("generation").unwrap().as_f64().unwrap()
+            as u64;
+        gen_model.insert(g, (spec.clone(), seed));
+        let st = poll_status(&addr, "s", "scheme swap", |v| {
+            v.get("generation").unwrap().as_f64().unwrap() as u64 == g
+        });
+        assert_eq!(
+            st.get("scheme").unwrap().as_str(),
+            Some(spec.scheme().name()),
+            "status must report the live generation's scheme"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let replies: Vec<(u64, usize, Vec<f32>)> = clients
+        .into_iter()
+        .flat_map(|c| c.join().unwrap())
+        .collect();
+    assert!(!replies.is_empty());
+
+    // Every reply is bit-identical to ITS generation's scheme-aware
+    // oracle — no reply computed under a half-swapped scheme.
+    let mut oracles: std::collections::BTreeMap<(u64, usize), Vec<f32>> =
+        std::collections::BTreeMap::new();
+    let mut gens_seen = std::collections::BTreeSet::new();
+    for (generation, salt, logits) in &replies {
+        let (spec, seed) = gen_model.get(generation).unwrap_or_else(|| {
+            panic!("reply from unknown generation {generation}")
+        });
+        gens_seen.insert(*generation);
+        let want = oracles
+            .entry((*seed, *salt))
+            .or_insert_with(|| oracle(spec, *seed, &pixels(spec, *salt)));
+        assert_bit_identical(
+            logits,
+            want,
+            &format!(
+                "gen {generation} ({} seed {seed}) salt {salt}",
+                spec.scheme().name()
+            ),
+        );
+    }
+    println!(
+        "scheme hammer: {} replies across generations {:?}",
         replies.len(),
         gens_seen
     );

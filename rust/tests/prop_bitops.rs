@@ -1,10 +1,10 @@
 //! Property tests (testing::prop harness) on the bit-level invariants
 //! the paper's whole speedup argument rests on.
 
-use bitkernel::bitops::{pack_rows, xnor_gemm, XnorImpl};
+use bitkernel::bitops::{pack_rows, ternary_gemm, xnor_gemm, XnorImpl};
 use bitkernel::gemm::{gemm_naive, gemm_blocked};
-use bitkernel::nn::{im2col_t, out_hw};
-use bitkernel::tensor::Tensor;
+use bitkernel::nn::{bn_sign_pack_rows_i32_alpha, im2col_t, out_hw};
+use bitkernel::tensor::{PackedMatrix, Tensor};
 use bitkernel::testing::{dim, prop_assert};
 use bitkernel::utils::Rng;
 
@@ -97,6 +97,103 @@ fn prop_all_impls_bit_identical_to_scalar_on_ragged_shapes() {
                 return Err(format!(
                     "{imp:?} diverges from Scalar at d={d} k={k} n={n}"
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ternary_gemm_equals_dense_and_scalar_on_ragged_shapes() {
+    // Two-plane ternary popcount: dense {-1,0,+1}·{-1,+1} ground truth
+    // on the Scalar arm, then every impl differentially against Scalar
+    // — same ragged K grid and odd D/N as the binary fuzz above.
+    const KS: [usize; 6] = [1, 31, 32, 33, 255, 257];
+    let impls = fuzz_impls();
+    prop_assert(17, 48, |rng: &mut Rng, case| {
+        let k = KS[case % KS.len()];
+        let d = 1 + 2 * rng.below(5); // odd in 1..=9
+        let n = 1 + 2 * rng.below(5);
+        let wm: Vec<f32> =
+            (0..d * k).map(|_| rng.below(3) as f32 - 1.0).collect();
+        let xm = rng.sign_vec(n * k);
+        // The two planes exactly as model/bnn.rs packs them: pos is
+        // +1 where w > 0, neg is +1 where w < 0 (zeros hit neither).
+        let plane = |positive: bool| {
+            let vals: Vec<f32> = wm
+                .iter()
+                .map(|&v| {
+                    let hit = if positive { v > 0.0 } else { v < 0.0 };
+                    if hit { 1.0 } else { -1.0 }
+                })
+                .collect();
+            pack_rows(&vals, d, k)
+        };
+        let (pos, neg) = (plane(true), plane(false));
+        let x = pack_rows(&xm, n, k);
+        let mut want = vec![0i32; d * n];
+        let mut scratch = vec![0i32; d * n];
+        ternary_gemm(&pos, &neg, &x, &mut want, &mut scratch,
+                     XnorImpl::Scalar);
+        for i in 0..d {
+            for j in 0..n {
+                let dot: i32 = wm[i * k..(i + 1) * k]
+                    .iter()
+                    .zip(&xm[j * k..(j + 1) * k])
+                    .map(|(w, x)| (w * x) as i32)
+                    .sum();
+                if want[i * n + j] != dot {
+                    return Err(format!(
+                        "Scalar ({i},{j}) d={d} k={k} n={n}: {} vs {dot}",
+                        want[i * n + j]
+                    ));
+                }
+            }
+        }
+        for &imp in &impls {
+            let mut got = vec![i32::MIN; d * n];
+            ternary_gemm(&pos, &neg, &x, &mut got, &mut scratch, imp);
+            if got != want {
+                return Err(format!(
+                    "{imp:?} ternary diverges from Scalar at d={d} k={k} \
+                     n={n}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alpha_bn_sign_pack_matches_unfused_rows() {
+    // The α-scaled re-encode epilogue: the fused word-building path
+    // (BitWriter, incl. word-boundary tails at d = 255/257) must place
+    // exactly the bit sign(a*(α*g)+b) computes elementwise.
+    const DS: [usize; 6] = [1, 31, 32, 33, 255, 257];
+    prop_assert(18, 36, |rng: &mut Rng, case| {
+        let d = DS[case % DS.len()];
+        let b = 1 + 2 * rng.below(4); // odd in 1..=7
+        let gemm: Vec<i32> =
+            (0..d * b).map(|_| rng.below(201) as i32 - 100).collect();
+        let alpha: Vec<f32> =
+            (0..d).map(|_| rng.uniform(0.25, 4.0)).collect();
+        let a = rng.normal_vec(d);
+        let bias = rng.normal_vec(d);
+        let mut fused = PackedMatrix::zeros(b, d);
+        bn_sign_pack_rows_i32_alpha(&gemm, d, b, &alpha, &a, &bias,
+                                    &mut fused);
+        for bi in 0..b {
+            for di in 0..d {
+                let v = a[di] * (alpha[di] * gemm[di * b + bi] as f32)
+                    + bias[di];
+                let want = if v >= 0.0 { 1.0 } else { -1.0 };
+                if fused.get(bi, di) != want {
+                    return Err(format!(
+                        "(b={bi},d={di}) of d={d} b={b}: packed {} vs \
+                         sign({v})",
+                        fused.get(bi, di)
+                    ));
+                }
             }
         }
         Ok(())

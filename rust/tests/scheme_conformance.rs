@@ -1,0 +1,387 @@
+//! Quantization-scheme conformance matrix — the pinning test for the
+//! scheme axis (sign·sign, XNOR α-scaling, binary-weight, ternary).
+//!
+//! Every cell of scheme × kernel implementation × topology must be
+//! bit-identical (f32 bit patterns, not epsilon-close) to the
+//! scheme-aware unfused oracle `BnnEngine::forward_reference`:
+//!
+//! * schemes:    all of [`QuantScheme::ALL`]
+//! * kernels:    Scalar / Wide / Simd / Blocked2x4 / Threaded(2) / Auto
+//!               on the packed arm, plus the Control and Optimized
+//!               float arms
+//! * topologies: fc-only, mixed binarization, non-square conv stacks,
+//!               ragged K/D/N, plus a randomized draw
+//!
+//! On top of the matrix: BKW2 round-trips the scheme in both
+//! directions, legacy (scheme-less) files load as the sign·sign
+//! default, the wire bytes are pinned so the python exporter cannot
+//! drift, and the python-generated fixtures under tests/fixtures/ are
+//! pinned bit-for-bit (the python twin is
+//! python/tests/test_cross_language.py).
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::model::{
+    BnnEngine, EngineKernel, LayerSpec, NetSpec, QuantScheme, WeightFile,
+};
+use bitkernel::testing::{prop_assert, synthetic_engine_spec,
+                         synthetic_weight_file};
+use bitkernel::tensor::Tensor;
+use bitkernel::utils::Rng;
+
+/// The kernel axis: every packed tier that resolves differently, plus
+/// the two float Table-2 arms.
+fn kernels() -> [EngineKernel; 8] {
+    [
+        EngineKernel::Xnor(XnorImpl::Scalar),
+        EngineKernel::Xnor(XnorImpl::Wide),
+        EngineKernel::Xnor(XnorImpl::Simd),
+        EngineKernel::Xnor(XnorImpl::Blocked2x4),
+        EngineKernel::Xnor(XnorImpl::Threaded(2)),
+        EngineKernel::Xnor(XnorImpl::Auto),
+        EngineKernel::Control,
+        EngineKernel::Optimized,
+    ]
+}
+
+fn images_for(spec: &NetSpec, rng: &mut Rng, b: usize) -> Tensor {
+    let (c, h, w) = spec.input();
+    Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w))
+}
+
+/// f32 bit patterns — the matrix asserts BIT identity, so that an
+/// epilogue emitting -0.0 where the oracle emits +0.0 still fails.
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// One matrix cell: compiled sessions on every kernel, two batch
+/// sizes, bit-identical to the scheme-aware oracle.
+fn assert_cell(engine: &BnnEngine, tag: &str) {
+    let mut rng = Rng::new(0x5CEE ^ tag.len() as u64);
+    for kernel in kernels() {
+        let mut session = engine
+            .plan(kernel, 3)
+            .unwrap_or_else(|e| panic!("{tag}: plan failed: {e}"))
+            .session();
+        for b in [1, 3] {
+            let x = images_for(&engine.spec, &mut rng, b);
+            let want = engine.forward_reference(&x, kernel);
+            let got = session.run(&x);
+            assert_eq!(got.shape(), want.shape(), "{tag} {kernel:?} b={b}");
+            assert_eq!(
+                bits(got),
+                bits(&want),
+                "{tag} {kernel:?} b={b}: plan diverged from oracle"
+            );
+        }
+    }
+}
+
+/// The fixed-topology axis, built fresh for each scheme.  The builder
+/// drops `Sign` ops automatically under real-activation schemes, so
+/// the same chains are valid for all four.
+fn topologies(scheme: QuantScheme) -> Vec<(&'static str, NetSpec)> {
+    vec![
+        (
+            // Ragged flatten width (70 = 2 words + 6 bits), real first
+            // fc feeding a binarized one.
+            "fc-only",
+            NetSpec::builder((1, 1, 70))
+                .linear(9)
+                .linear(4)
+                .scheme(scheme)
+                .build()
+                .expect("fc-only"),
+        ),
+        (
+            // Non-binarized fc mid-chain: the plan leaves and re-enters
+            // the scheme's packed/scaled domain.
+            "fc-mixed",
+            NetSpec::builder((2, 4, 4))
+                .linear(20)
+                .linear_opts(12, false)
+                .linear(5)
+                .scheme(scheme)
+                .build()
+                .expect("fc-mixed"),
+        ),
+        (
+            // Non-square conv stack with a pool, ragged class count.
+            "conv-nonsquare",
+            NetSpec::builder((2, 10, 6))
+                .conv(5, 3)
+                .pool()
+                .conv(7, 3)
+                .linear(11)
+                .linear(4)
+                .scheme(scheme)
+                .build()
+                .expect("conv-nonsquare"),
+        ),
+        (
+            // Odd input dims, 1x1 then 3x3 convs, ragged D/N.
+            "conv-ragged",
+            NetSpec::builder((3, 7, 9))
+                .conv(4, 1)
+                .conv(6, 3)
+                .linear(33)
+                .linear(3)
+                .scheme(scheme)
+                .build()
+                .expect("conv-ragged"),
+        ),
+    ]
+}
+
+/// The python fixture topology (fc-only, EVERY fc binarized — the
+/// builder can't express a binarized first layer, so built by hand).
+fn fixture_spec(scheme: QuantScheme) -> NetSpec {
+    let mut layers = vec![LayerSpec::Flatten];
+    for dout in [9usize, 4] {
+        if scheme.signs_activations() {
+            layers.push(LayerSpec::Sign);
+        }
+        layers.push(LayerSpec::Linear { dout, binarized: true });
+        layers.push(LayerSpec::BatchNorm);
+    }
+    NetSpec::new_with_scheme((1, 1, 70), layers, scheme)
+        .expect("fixture spec")
+}
+
+// ---------------------------------------------------------------------------
+// the matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matrix_every_scheme_kernel_topology_is_bit_identical() {
+    for scheme in QuantScheme::ALL {
+        for (name, spec) in topologies(scheme) {
+            assert_eq!(spec.scheme(), scheme, "{name}");
+            let seed = 0x9C00 + u64::from(scheme.wire_byte());
+            let engine = synthetic_engine_spec(&spec, seed);
+            assert_cell(&engine, &format!("{}/{}", scheme.name(), name));
+        }
+    }
+}
+
+#[test]
+fn matrix_fixture_topology_all_layers_binarized() {
+    for scheme in QuantScheme::ALL {
+        let engine = synthetic_engine_spec(&fixture_spec(scheme), 4242);
+        assert_cell(&engine, &format!("{}/fixture", scheme.name()));
+    }
+}
+
+#[test]
+fn prop_matrix_random_topologies_bit_identical() {
+    prop_assert(0x5CEEA11, 8, |rng, case| {
+        let scheme = QuantScheme::ALL[rng.below(4)];
+        let spec = random_spec(rng, scheme);
+        let engine = synthetic_engine_spec(&spec, 7000 + case as u64);
+        for kernel in kernels() {
+            let mut session = engine
+                .plan(kernel, 2)
+                .map_err(|e| format!("case {case}: plan: {e}"))?
+                .session();
+            for b in [1, 2] {
+                let x = images_for(&spec, rng, b);
+                let want = engine.forward_reference(&x, kernel);
+                let got = session.run(&x);
+                if bits(got) != bits(&want) {
+                    return Err(format!(
+                        "case {case} {} {kernel:?} b={b}: plan \
+                         diverged from oracle (spec {spec:?})",
+                        scheme.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random-but-valid spec under a scheme: conv nets over odd shapes or
+/// fc-only nets, occasional non-binarized layers mid-net (the
+/// tests/netspec.rs draw, scheme-parameterized).
+fn random_spec(rng: &mut Rng, scheme: QuantScheme) -> NetSpec {
+    if rng.below(3) == 0 {
+        let c = 1 + rng.below(3);
+        let h = 2 + rng.below(5);
+        let w = 2 + rng.below(5);
+        let mut b = NetSpec::builder((c, h, w)).linear(6 + rng.below(30));
+        b = if rng.below(2) == 0 {
+            b.linear_opts(4 + rng.below(20), false)
+        } else {
+            b.linear(4 + rng.below(20))
+        };
+        return b
+            .linear(2 + rng.below(15))
+            .scheme(scheme)
+            .build()
+            .expect("fc-only random spec");
+    }
+    let c = 1 + rng.below(3);
+    let h = 2 * (3 + rng.below(3));
+    let w = 2 * (3 + rng.below(3));
+    let mut b = NetSpec::builder((c, h, w));
+    let nconv = 1 + rng.below(2);
+    for i in 0..nconv {
+        let cout = 2 + rng.below(6);
+        let ksize = [1, 3][rng.below(2)];
+        b = if i > 0 && rng.below(4) == 0 {
+            b.conv_opts(cout, ksize, 1, ksize / 2, false)
+        } else {
+            b.conv(cout, ksize)
+        };
+    }
+    if rng.below(2) == 0 {
+        b = b.pool();
+    }
+    b.linear(2 + rng.below(15))
+        .scheme(scheme)
+        .build()
+        .expect("conv random spec")
+}
+
+// ---------------------------------------------------------------------------
+// BKW2 scheme round trip + legacy default
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bkw2_round_trips_scheme_and_logits_for_every_scheme() {
+    for scheme in QuantScheme::ALL {
+        let (_, spec) = topologies(scheme).remove(2); // conv-nonsquare
+        let wf = synthetic_weight_file(&spec, 808);
+        let back = WeightFile::parse(&wf.to_bytes()[..])
+            .unwrap_or_else(|e| panic!("{}: parse: {e}", scheme.name()));
+        let embedded = back.embedded_spec().expect("BKW2 carries its spec");
+        assert_eq!(embedded.scheme(), scheme);
+        assert_eq!(embedded, &spec);
+
+        let before = BnnEngine::from_weight_file(&wf).unwrap();
+        let after = BnnEngine::from_weight_file(&back).unwrap();
+        let mut rng = Rng::new(11);
+        let x = images_for(&spec, &mut rng, 2);
+        for kernel in [EngineKernel::Xnor(XnorImpl::Auto),
+                       EngineKernel::Control] {
+            assert_eq!(
+                bits(&before.forward_reference(&x, kernel)),
+                bits(&after.forward_reference(&x, kernel)),
+                "{} {kernel:?}",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn legacy_scheme_less_files_load_as_the_default() {
+    // A default-scheme spec writes no scheme op, and what it writes
+    // reads back as the default — i.e. pre-scheme BKW2 files (and
+    // BKW1, covered in tests/netspec.rs) keep loading unchanged.
+    let spec = NetSpec::builder((1, 4, 4)).linear(6).linear(3).build()
+        .unwrap();
+    assert!(spec.scheme().is_default());
+    let bytes = synthetic_weight_file(&spec, 5).to_bytes();
+    let back = WeightFile::parse(&bytes[..]).unwrap();
+    assert!(back.embedded_spec().unwrap().scheme().is_default());
+}
+
+#[test]
+fn scheme_wire_bytes_and_names_are_pinned() {
+    // The cross-language contract: python's train.SCHEMES dict must
+    // agree byte-for-byte and name-for-name.  Changing either side is
+    // a format break, not a refactor.
+    let names: Vec<&str> =
+        QuantScheme::ALL.iter().map(|s| s.name()).collect();
+    assert_eq!(
+        names,
+        ["sign_sign", "xnor_alpha", "binary_weight", "ternary_weight"]
+    );
+    for (i, scheme) in QuantScheme::ALL.into_iter().enumerate() {
+        assert_eq!(scheme.wire_byte(), i as u8);
+        assert_eq!(QuantScheme::from_wire_byte(i as u8), Some(scheme));
+    }
+    assert_eq!(QuantScheme::from_wire_byte(4), None);
+}
+
+#[test]
+fn plans_report_their_scheme_and_resolve_auto() {
+    for scheme in QuantScheme::ALL {
+        let engine = synthetic_engine_spec(&fixture_spec(scheme), 31);
+        let plan =
+            engine.plan(EngineKernel::Xnor(XnorImpl::Auto), 2).unwrap();
+        assert_eq!(plan.scheme(), scheme);
+        assert!(
+            plan.xnor_impls().iter().all(|i| *i != XnorImpl::Auto),
+            "{}: Auto must resolve at plan time",
+            scheme.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// python-generated cross-language fixtures
+// ---------------------------------------------------------------------------
+
+/// The fixture input, mirroring _fx_input in
+/// python/tests/test_cross_language.py: x[b,i] = ((7i + 3(b+1)) % 11) - 5.
+fn fixture_input() -> Tensor {
+    const K: usize = 70;
+    const B: usize = 2;
+    let mut data = Vec::with_capacity(B * K);
+    for b in 0..B {
+        for i in 0..K {
+            data.push(((7 * i + 3 * (b + 1)) % 11) as f32 - 5.0);
+        }
+    }
+    Tensor::new(vec![B, 1, 1, K], data)
+}
+
+/// Parse a .logits sidecar: one line per batch row of space-separated
+/// u32 hex f32 bit patterns.
+fn read_logits_bits(path: &str) -> Vec<u32> {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{path}: {e} (regenerate with \
+            `python python/tests/test_cross_language.py`)"))
+        .split_whitespace()
+        .map(|t| u32::from_str_radix(t, 16)
+            .unwrap_or_else(|e| panic!("{path}: bad hex '{t}': {e}")))
+        .collect()
+}
+
+#[test]
+fn python_fixtures_pin_every_scheme_bit_identical() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures");
+    for scheme in QuantScheme::ALL {
+        let name = scheme.name();
+        let raw = std::fs::read(format!("{dir}/scheme_{name}.bkw"))
+            .unwrap_or_else(|e| panic!("scheme_{name}.bkw: {e} \
+                (regenerate with \
+                `python python/tests/test_cross_language.py`)"));
+        let wf = WeightFile::parse(&raw[..])
+            .unwrap_or_else(|e| panic!("scheme_{name}.bkw: {e}"));
+        let engine = BnnEngine::from_weight_file(&wf)
+            .unwrap_or_else(|e| panic!("scheme_{name}.bkw: {e}"));
+        assert_eq!(engine.spec.scheme(), scheme);
+        assert_eq!(engine.spec, fixture_spec(scheme));
+
+        let want = read_logits_bits(&format!("{dir}/scheme_{name}.logits"));
+        assert_eq!(want.len(), 2 * 4, "{name}: sidecar shape");
+        let x = fixture_input();
+        for kernel in kernels() {
+            let oracle = engine.forward_reference(&x, kernel);
+            assert_eq!(
+                bits(&oracle),
+                want,
+                "{name} {kernel:?}: oracle diverged from python logits"
+            );
+            let mut session = engine.plan(kernel, 2).unwrap().session();
+            assert_eq!(
+                bits(session.run(&x)),
+                want,
+                "{name} {kernel:?}: plan diverged from python logits"
+            );
+        }
+    }
+}

@@ -30,6 +30,18 @@ if grep -rnE "IMAGE_ELEMS|IMAGE_BYTES" src; then
     exit 1
 fi
 
+echo "== scheme containment: QuantScheme variants only in the lowering files"
+# Every match on a QuantScheme variant lives in model/spec.rs,
+# model/plan.rs, model/bnn.rs, or nn/fuse.rs; the rest of the tree
+# goes through the helper predicates (name/wire_byte/signs_activations/
+# has_alpha/is_ternary/is_default) so a new scheme cannot silently
+# half-propagate through format/serving/CLI code.
+if grep -rnE "QuantScheme::(SignSign|XnorAlpha|BinaryWeight|TernaryWeight)" src \
+    | grep -vE "^src/(model/(spec|plan|bnn)|nn/fuse)\.rs:"; then
+    echo "QuantScheme variant used outside spec/plan/bnn/fuse" >&2
+    exit 1
+fi
+
 echo "== cargo build --release"
 cargo build --release
 
@@ -38,6 +50,14 @@ cargo test -q
 
 echo "== spec IR: BKW round-trip + randomized-topology property tests"
 cargo test -q --test netspec
+
+echo "== scheme conformance: scheme x kernel x topology matrix"
+# Every quantization scheme (sign_sign, xnor_alpha, binary_weight,
+# ternary_weight) on every kernel arm and a topology sweep, each cell
+# bit-identical to the scheme-aware oracle; BKW2 scheme round trip,
+# legacy default, pinned wire bytes, and the python-generated fixture
+# goldens under tests/fixtures (twin: python/tests/test_cross_language.py).
+cargo test -q --test scheme_conformance
 
 echo "== shape-generic serving: heterogeneous models + submit validation"
 cargo test -q --test serving
