@@ -7,10 +7,14 @@
 #                    quantization-scheme ablation table), the replica
 #                    batching sweep (--quick) -> BENCH_3.json, the
 #                    reload-under-load run (--quick, request loss must
-#                    be 0) -> BENCH_6.json, and the panic-injection run
-#                    (--quick, request loss must be 0) -> BENCH_7.json;
-#                    drop --quick on any of them for full-fidelity
-#                    numbers
+#                    be 0) -> BENCH_6.json, the panic-injection run
+#                    (--quick, request loss must be 0) -> BENCH_7.json,
+#                    and the front-end load sweep (blocking vs
+#                    --event-loop, p50/p99/p999 + req/s) ->
+#                    BENCH_9.json; drop --quick on any of them for
+#                    full-fidelity numbers (the full serve_load grid
+#                    climbs to 10k connections — raise `ulimit -n`
+#                    past ~25k first)
 #   make docs      — API docs only, rustdoc warnings denied
 #   make artifacts — python AOT pipeline -> rust/artifacts (needs jax)
 
@@ -24,6 +28,7 @@ bench:
 	cd rust && cargo bench --bench batching -- --quick --json ../BENCH_3.json
 	cd rust && cargo bench --bench lifecycle -- --quick --json ../BENCH_6.json
 	cd rust && cargo bench --bench chaos -- --quick --json ../BENCH_7.json
+	cd rust && cargo bench --bench serve_load -- --quick --json ../BENCH_9.json
 
 docs:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

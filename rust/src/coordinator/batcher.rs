@@ -1,10 +1,24 @@
-//! Dynamic batcher: max-size / max-delay batch formation, plus the
-//! reusable padded batch tensor replicas assemble requests into.
+//! Batch formation: the fixed max-size / max-delay batcher, its
+//! continuous (replica-aware) successor, and the reusable padded batch
+//! tensor replicas assemble requests into.
 //!
-//! One batcher thread owns the request queue.  A batch closes when
-//! `max_batch` requests are waiting, or `max_delay` has elapsed since
-//! the FIRST request of the batch arrived — the standard serving
-//! trade-off between throughput (big batches) and tail latency.
+//! One batcher thread owns the request queue.  With the fixed policy
+//! ([`DynamicBatcher`]) a batch closes when `max_batch` requests are
+//! waiting, or `max_delay` has elapsed since the FIRST request of the
+//! batch arrived — the standard serving trade-off between throughput
+//! (big batches) and tail latency.  Its weakness under load: once a
+//! batch closes, the batcher blocks handing it to a replica slot, and
+//! requests arriving during that wait cannot join it even though no
+//! replica has started executing it yet.
+//!
+//! [`ContinuousBatcher`] removes that gap.  It keeps a batch **open
+//! while every replica is busy**, admitting queued requests into it
+//! (up to `max_batch`) right until the instant a replica frees — at
+//! which point the batch dispatches immediately.  When replicas are
+//! idle it degrades to exactly the fixed policy (`max_batch` /
+//! `max_delay`), so low-load latency is unchanged; deadline,
+//! backpressure, drain, and supervision semantics all live outside the
+//! formation policy and are untouched.
 //!
 //! [`BatchBuffer`] is the worker-side counterpart: one preallocated
 //! `[cap, C, H, W]` tensor per replica, sized from the backend's shape
@@ -63,6 +77,149 @@ impl<T> DynamicBatcher<T> {
             }
         }
         Some(batch)
+    }
+}
+
+/// Continuous batch formation: like [`DynamicBatcher`], but batch
+/// closure is driven by replica availability, not only by size/delay.
+///
+/// The caller supplies a `replica_free` probe (any replica idle and
+/// able to take a batch right now?).  Policy per call:
+///
+/// * **Batch full** — hand off immediately; the caller's blocking
+///   slot send already wakes the moment a replica frees, so full
+///   batches need no probe.
+/// * **Partial batch, a replica free** — dispatch when the delay
+///   window has expired or the batch ever had to wait for a replica
+///   (`starved`); otherwise hold the window open exactly like the
+///   fixed batcher so low-load batches still coalesce.
+/// * **Partial batch, every replica busy** — keep admitting arrivals
+///   into the open batch (up to `max_batch`) instead of closing it;
+///   the batch goes out the instant a replica frees.  Requests beyond
+///   `max_batch` stay in the bounded admission queue, so backpressure
+///   ([`SubmitError::QueueFull`]) is exactly as before.
+///
+/// Drain semantics match [`DynamicBatcher`]: once all senders are
+/// gone the pending batch (and then every still-buffered request) is
+/// flushed before `next_batch` returns `None`, so shutdown never
+/// drops an admitted request.
+///
+/// [`SubmitError::QueueFull`]: crate::coordinator::SubmitError::QueueFull
+pub struct ContinuousBatcher<T> {
+    rx: mpsc::Receiver<T>,
+    cfg: BatcherConfig,
+    pending: Vec<T>,
+    first_at: Instant,
+    /// The open batch observed an all-busy pool at least once; the
+    /// moment a replica frees it should go out without waiting out
+    /// the delay window.
+    starved: bool,
+    disconnected: bool,
+}
+
+/// Poll granularity while waiting for a replica to free (the probe is
+/// a function, not a waitable handle).  Half a millisecond keeps the
+/// added dispatch latency an order of magnitude under the default
+/// 5 ms delay window while the batcher thread stays >99% asleep.
+const FREE_POLL: Duration = Duration::from_micros(500);
+
+impl<T> ContinuousBatcher<T> {
+    /// Wrap a request receiver with a continuous-formation policy.
+    pub fn new(rx: mpsc::Receiver<T>, cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Self {
+            rx,
+            cfg,
+            pending: Vec::with_capacity(cfg.max_batch),
+            first_at: Instant::now(),
+            starved: false,
+            disconnected: false,
+        }
+    }
+
+    fn take(&mut self) -> Vec<T> {
+        self.starved = false;
+        std::mem::replace(
+            &mut self.pending,
+            Vec::with_capacity(self.cfg.max_batch),
+        )
+    }
+
+    fn push(&mut self, item: T) {
+        if self.pending.is_empty() {
+            self.first_at = Instant::now();
+        }
+        self.pending.push(item);
+    }
+
+    /// Top up the open batch from the queue without blocking.
+    fn drain_ready(&mut self) {
+        while self.pending.len() < self.cfg.max_batch {
+            match self.rx.try_recv() {
+                Ok(item) => self.push(item),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.disconnected = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Block until a batch should be dispatched; `None` once all
+    /// senders are gone and every buffered request has been flushed.
+    pub fn next_batch(
+        &mut self,
+        replica_free: impl Fn() -> bool,
+    ) -> Option<Vec<T>> {
+        loop {
+            if self.pending.is_empty() {
+                // Block for the batch's first element.
+                match self.rx.recv() {
+                    Ok(item) => self.push(item),
+                    Err(_) => return None,
+                }
+            }
+            self.drain_ready();
+            if self.pending.len() >= self.cfg.max_batch || self.disconnected
+            {
+                // A full batch hands off immediately — the caller's
+                // blocking slot send wakes the moment a replica
+                // frees, which is as continuous as a full batch can
+                // get.  Disconnect is the shutdown flush.
+                return Some(self.take());
+            }
+            let expired = self.first_at.elapsed() >= self.cfg.max_delay;
+            if replica_free() {
+                if expired || self.starved {
+                    return Some(self.take());
+                }
+                // Idle pool inside the delay window: coalesce exactly
+                // like the fixed batcher.
+                let deadline = self.first_at + self.cfg.max_delay;
+                let wait = deadline
+                    .saturating_duration_since(Instant::now())
+                    .min(FREE_POLL);
+                match self.rx.recv_timeout(wait) {
+                    Ok(item) => self.push(item),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.disconnected = true;
+                    }
+                }
+            } else {
+                // Every replica busy: the continuous part.  Keep the
+                // batch open and admit arrivals until one frees.
+                self.starved = true;
+                match self.rx.recv_timeout(FREE_POLL) {
+                    Ok(item) => self.push(item),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.disconnected = true;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -228,5 +385,117 @@ mod tests {
         );
         assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn continuous_matches_fixed_when_replicas_idle() {
+        // With a free replica and no starvation, the continuous policy
+        // is the fixed one: full batches go out without waiting...
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let mut b = ContinuousBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_delay: Duration::from_secs(5) },
+        );
+        assert_eq!(b.next_batch(|| true).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch(|| true).unwrap(), vec![4, 5, 6, 7]);
+        // ...and a partial batch waits out the delay window.
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let mut b = ContinuousBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(10),
+            },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch(|| true).unwrap(), vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+        drop(tx);
+        assert!(b.next_batch(|| true).is_none());
+    }
+
+    #[test]
+    fn continuous_admits_arrivals_while_replicas_busy() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        // A replica frees 50ms in; requests trickling during the busy
+        // period must all ride the SAME batch even though the 5ms
+        // delay window expires long before dispatch.
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        let free = Arc::new(AtomicBool::new(false));
+        let free2 = Arc::clone(&free);
+        let sender = std::thread::spawn(move || {
+            for i in 1..4 {
+                std::thread::sleep(Duration::from_millis(10));
+                tx.send(i).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(10));
+            free2.store(true, Ordering::SeqCst);
+            tx // keep the channel alive past the assertion
+        });
+        let mut b = ContinuousBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(5),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch(|| free.load(Ordering::SeqCst)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(35),
+            "must have held the batch open until the replica freed"
+        );
+        drop(sender.join().unwrap());
+        assert!(b.next_batch(|| true).is_none());
+    }
+
+    #[test]
+    fn continuous_starved_batch_dispatches_the_instant_a_replica_frees() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // The probe flips to free on its 3rd call; a starved batch
+        // must not then wait out its (already long-expired) window.
+        let (tx, rx) = mpsc::channel();
+        tx.send(9).unwrap();
+        let mut b = ContinuousBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_secs(10),
+            },
+        );
+        let calls = AtomicUsize::new(0);
+        let batch = b
+            .next_batch(|| calls.fetch_add(1, Ordering::SeqCst) >= 2)
+            .unwrap();
+        assert_eq!(batch, vec![9]);
+        drop(tx);
+    }
+
+    #[test]
+    fn continuous_flushes_everything_on_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut b = ContinuousBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 2, max_delay: Duration::from_secs(1) },
+        );
+        // Even with every replica busy forever, shutdown drains: no
+        // admitted request may be stranded.
+        let mut got = Vec::new();
+        while let Some(batch) = b.next_batch(|| false) {
+            assert!(batch.len() <= 2);
+            got.extend(batch);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
     }
 }

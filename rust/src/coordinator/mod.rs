@@ -10,10 +10,13 @@
 //!               (native Session or PJRT executable)  -> response
 //! ```
 //!
-//! The batcher implements the classic max-size/max-delay policy: a batch
-//! closes when `max_batch` requests are waiting or the oldest request
-//! has waited `max_delay`, whichever comes first.  Each closed batch is
-//! dispatched to the replica with the fewest in-flight requests; on the
+//! The batcher forms batches **continuously**: with idle replicas it
+//! follows the classic max-size/max-delay policy (a batch closes when
+//! `max_batch` requests are waiting or the oldest has waited
+//! `max_delay`); with every replica busy it keeps the batch open,
+//! admitting queued requests until the instant a replica frees, then
+//! dispatches at once.  Each batch goes to the replica with the fewest
+//! in-flight requests; on the
 //! native arm every replica is a [`model::Session`](crate::model::Session)
 //! minted from ONE shared compiled [`Plan`](crate::model::Plan), so the
 //! pool pays one compile and N buffer sets.  `benches/batching.rs`
@@ -28,7 +31,9 @@ pub mod metrics;
 pub mod router;
 
 pub use backend::{Backend, MockBackend, NativeBackend, PjrtBackend};
-pub use batcher::{BatchBuffer, BatcherConfig, DynamicBatcher};
+pub use batcher::{
+    BatchBuffer, BatcherConfig, ContinuousBatcher, DynamicBatcher,
+};
 pub use metrics::{Metrics, MetricsSnapshot, ReplicaMetrics, ReplicaSnapshot};
 pub use router::{default_replicas, BackendFactory, InferReply, ReplyError,
                  RequestError, Router, RouterConfig, SubmitError,

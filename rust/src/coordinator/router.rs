@@ -15,12 +15,16 @@
 //!         replica 0..N worker threads -> per-request reply channels
 //! ```
 //!
-//! The batcher forms max-size/max-delay batches and hands each one to
-//! the replica with the fewest in-flight requests (tracked in
-//! [`Metrics::replicas`]).  Per-replica dispatch channels are bounded
-//! to one queued batch, so when every replica is saturated the
-//! admission queue fills and callers see `QueueFull` — backpressure is
-//! preserved end to end.  [`Router::shutdown`] drains: every accepted
+//! The batcher forms batches **continuously**
+//! ([`super::batcher::ContinuousBatcher`]): under load — every replica
+//! busy — an open batch keeps admitting queued requests right until
+//! the instant a replica frees, then dispatches immediately; with idle
+//! replicas it degrades to the classic max-size/max-delay policy.
+//! Each batch goes to the replica with the fewest in-flight requests
+//! (tracked in [`Metrics::replicas`]).  Per-replica dispatch channels
+//! are bounded to one queued batch, so when every replica is saturated
+//! the admission queue fills and callers see `QueueFull` —
+//! backpressure is preserved end to end.  [`Router::shutdown`] drains: every accepted
 //! request is batched, dispatched and answered before the threads are
 //! joined.  A serving deployment maps model names to routers (see
 //! `server/`).
@@ -74,7 +78,7 @@ use std::time::{Duration, Instant};
 use crate::nn::argmax;
 
 use super::backend::Backend;
-use super::batcher::{BatchBuffer, BatcherConfig, DynamicBatcher};
+use super::batcher::{BatchBuffer, BatcherConfig, ContinuousBatcher};
 use super::metrics::Metrics;
 
 /// A completed inference.
@@ -200,13 +204,39 @@ impl SubmitOptions {
     }
 }
 
+/// How a request's answer travels back to its submitter.  The channel
+/// arm serves the blocking front end (`submit_wait*` recv's on it);
+/// the callback arm serves the event-loop front end, which cannot
+/// block a reactor thread on a recv — the replica worker invokes the
+/// callback directly when the batch resolves.  Either way the answer
+/// is delivered from the same code paths, so supervision ("every
+/// accepted request resolves, typed") covers both identically.
+enum Responder {
+    Channel(mpsc::Sender<Result<InferReply, ReplyError>>),
+    Callback(Box<dyn FnOnce(Result<InferReply, ReplyError>) + Send>),
+}
+
+impl Responder {
+    /// Deliver the answer.  A hung-up channel receiver is fine (the
+    /// waiter gave up); a callback must not panic — it runs on a
+    /// replica worker thread outside the `catch_unwind` fence.
+    fn send(self, result: Result<InferReply, ReplyError>) {
+        match self {
+            Responder::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            Responder::Callback(f) => f(result),
+        }
+    }
+}
+
 struct Request {
     /// Normalized CHW image (`C*H*W` f32, validated at submit).
     image: Vec<f32>,
     submitted: Instant,
     /// End-to-end deadline ([`SubmitOptions::deadline`]).
     deadline: Option<Instant>,
-    reply_tx: mpsc::Sender<Result<InferReply, ReplyError>>,
+    responder: Responder,
 }
 
 /// A formed batch in flight from the batcher to a replica.
@@ -540,6 +570,42 @@ impl Router {
         opts: SubmitOptions,
     ) -> Result<mpsc::Receiver<Result<InferReply, ReplyError>>, SubmitError>
     {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.enqueue(image_chw, opts, Responder::Channel(reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::submit_with`], answered by invoking `reply` instead
+    /// of a channel — the submission path for the event-loop front
+    /// end, whose reactor threads must never block on a reply recv.
+    ///
+    /// Same admission contract as [`Router::submit`] (shape
+    /// validation, `QueueFull` backpressure), and the same resolution
+    /// guarantee: once this returns `Ok`, `reply` WILL be invoked
+    /// exactly once — with a reply or a typed [`ReplyError`] — from a
+    /// replica worker (or drain path) thread.  The callback must be
+    /// cheap and panic-free; it runs on the serving hot path.
+    ///
+    /// Note the caller-side difference from
+    /// [`Router::submit_wait_deadline`]: an expired deadline is still
+    /// answered typed ([`ReplyError::DeadlineExceeded`]), but delivery
+    /// happens when the pipeline reaches the request, not at the
+    /// deadline instant itself.
+    pub fn submit_callback(
+        &self,
+        image_chw: Vec<f32>,
+        opts: SubmitOptions,
+        reply: impl FnOnce(Result<InferReply, ReplyError>) + Send + 'static,
+    ) -> Result<(), SubmitError> {
+        self.enqueue(image_chw, opts, Responder::Callback(Box::new(reply)))
+    }
+
+    fn enqueue(
+        &self,
+        image_chw: Vec<f32>,
+        opts: SubmitOptions,
+        responder: Responder,
+    ) -> Result<(), SubmitError> {
         let expected = self.image_elems();
         if image_chw.len() != expected {
             return Err(SubmitError::WrongShape {
@@ -548,17 +614,16 @@ impl Router {
             });
         }
         let tx = self.tx.as_ref().ok_or(SubmitError::Shutdown)?;
-        let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request {
             image: image_chw,
             submitted: Instant::now(),
             deadline: opts.deadline,
-            reply_tx,
+            responder,
         };
         match tx.try_send(req) {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(reply_rx)
+                Ok(())
             }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -723,7 +788,7 @@ fn run_batch(
         m.deadline_expired
             .fetch_add(expired.len() as u64, Ordering::Relaxed);
         for r in expired {
-            let _ = r.reply_tx.send(Err(ReplyError::DeadlineExceeded));
+            r.responder.send(Err(ReplyError::DeadlineExceeded));
         }
     }
     if live.is_empty() {
@@ -760,7 +825,7 @@ fn run_batch(
                 };
                 m.total_latency.record_us(reply.total_us);
                 m.completed.fetch_add(1, Ordering::Relaxed);
-                let _ = r.reply_tx.send(Ok(reply));
+                r.responder.send(Ok(reply));
             }
             false
         }
@@ -771,8 +836,7 @@ fn run_batch(
             m.rejected.fetch_add(b as u64, Ordering::Relaxed);
             let msg = format!("{e:#}");
             for r in live {
-                let _ = r
-                    .reply_tx
+                r.responder
                     .send(Err(ReplyError::BackendFailed(msg.clone())));
             }
             false
@@ -792,8 +856,7 @@ fn run_batch(
             }
             m.rejected.fetch_add(b as u64, Ordering::Relaxed);
             for r in live {
-                let _ = r
-                    .reply_tx
+                r.responder
                     .send(Err(ReplyError::ReplicaPanicked { quarantined }));
             }
             true
@@ -867,24 +930,39 @@ fn fail_batch(batch: Batch, replica: usize, m: &Metrics) {
     let n = batch.reqs.len() as u64;
     m.rejected.fetch_add(n, Ordering::Relaxed);
     for r in batch.reqs {
-        let _ = r
-            .reply_tx
+        r.responder
             .send(Err(ReplyError::ReplicaPanicked { quarantined: false }));
     }
     rm.inflight.fetch_sub(n, Ordering::Relaxed);
 }
 
-/// The batcher thread: form batches, dispatch each to the least-loaded
-/// replica.  Exits (dropping the dispatch channels, which drains the
-/// workers) when every submitter hung up and the queue is empty.
+/// The batcher thread: form batches continuously, dispatch each to the
+/// least-loaded replica.  Exits (dropping the dispatch channels, which
+/// drains the workers) when every submitter hung up and the queue is
+/// empty.
+///
+/// The continuous policy needs a replica-availability probe: a replica
+/// counts as free when it is alive (dispatch slot not retired), not
+/// mid-respawn, and has NOTHING in flight — its slot is empty and its
+/// backend idle, so a batch handed to it starts executing immediately.
 fn batcher_loop(
     rx: mpsc::Receiver<Request>,
     bcfg: BatcherConfig,
     mut batch_txs: Vec<Option<mpsc::SyncSender<Batch>>>,
     m: &Metrics,
 ) {
-    let batcher = DynamicBatcher::new(rx, bcfg);
-    while let Some(reqs) = batcher.next_batch() {
+    let mut batcher = ContinuousBatcher::new(rx, bcfg);
+    loop {
+        let alive: Vec<bool> =
+            batch_txs.iter().map(Option::is_some).collect();
+        let free = || {
+            alive.iter().enumerate().any(|(r, &ok)| {
+                let rm = &m.replicas[r];
+                ok && rm.restarting.load(Ordering::Relaxed) == 0
+                    && rm.inflight.load(Ordering::Relaxed) == 0
+            })
+        };
+        let Some(reqs) = batcher.next_batch(free) else { break };
         let formed = Instant::now();
         let b = reqs.len();
         m.batches.fetch_add(1, Ordering::Relaxed);
@@ -919,7 +997,7 @@ fn dispatch(
             // reply channel must never be the failure mode).
             m.rejected.fetch_add(b, Ordering::Relaxed);
             for r in batch.reqs {
-                let _ = r.reply_tx.send(Err(ReplyError::Shutdown));
+                r.responder.send(Err(ReplyError::Shutdown));
             }
             return;
         }
@@ -1301,6 +1379,47 @@ mod tests {
             )
             .unwrap();
         assert_eq!(reply.logits.len(), 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn submit_callback_resolves_without_a_channel() {
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
+            RouterConfig::default(),
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        router
+            .submit_callback(
+                image(0.9),
+                SubmitOptions::default(),
+                move |r| tx.send(r).unwrap(),
+            )
+            .unwrap();
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        // Wrong shape is rejected synchronously; the callback is
+        // never invoked.
+        let res = router.submit_callback(
+            vec![0.0; 7],
+            SubmitOptions::default(),
+            |_| panic!("must not be called"),
+        );
+        assert!(matches!(res, Err(SubmitError::WrongShape { .. })));
+        // An expired deadline resolves the callback typed.
+        let (tx, rx) = mpsc::channel();
+        router
+            .submit_callback(
+                image(0.1),
+                SubmitOptions { deadline: Some(Instant::now()) },
+                move |r| tx.send(r).unwrap(),
+            )
+            .unwrap();
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(ReplyError::DeadlineExceeded)
+        ));
         router.shutdown();
     }
 

@@ -159,6 +159,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                    default: Some("256"),
                    help: "open-connection cap (accepts past it answer \
                           503 + Retry-After and close)" },
+        FlagSpec { name: "idle-timeout-ms", takes_value: true,
+                   default: Some("30000"),
+                   help: "close connections idle longer than this \
+                          (both front ends)" },
+        FlagSpec { name: "event-loop", takes_value: false, default: None,
+                   help: "serve with the non-blocking epoll front end \
+                          (linux; scales past the handler pool)" },
+        FlagSpec { name: "io-threads", takes_value: true,
+                   default: Some("1"),
+                   help: "reactor threads for --event-loop" },
         FlagSpec { name: "admin", takes_value: false, default: None,
                    help: "enable the mutating admin API (POST/PUT/DELETE \
                           /models) for live mount/reload/unmount" },
@@ -277,6 +287,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
             threads: args.get_usize("threads", 4)?,
             max_connections: args.get_usize("max-connections", 256)?,
+            idle_timeout: std::time::Duration::from_millis(
+                args.get_usize("idle-timeout-ms", 30_000)? as u64,
+            ),
+            event_loop: args.has("event-loop"),
+            io_threads: args.get_usize("io-threads", 1)?,
         },
         stop,
         None,

@@ -1,0 +1,1128 @@
+//! Non-blocking epoll front end (`serve --event-loop`).
+//!
+//! The blocking front end parks one pool thread per open connection;
+//! past a few hundred keep-alive clients the pool is the bottleneck
+//! long before the model is.  This module serves every connection
+//! from one or a few **reactor** threads instead:
+//!
+//! ```text
+//!   listener ──accept──▶ reactor 0 ──round-robin──▶ reactor 1..N
+//!                         │  epoll_wait (edge-triggered)
+//!                         ▼
+//!      per-connection state machine
+//!        ReadHead ─▶ ReadBody ─▶ dispatch ─▶ Write ─▶ ReadHead…
+//!                                  │
+//!            classify ─▶ Router::submit_callback (continuous batch)
+//!            other     ─▶ auxiliary thread pool (admin may block)
+//!                                  │
+//!            completion queue + waker ─▶ reactor writes response
+//! ```
+//!
+//! Design notes:
+//!
+//! * **No dependencies.**  The four epoll syscalls are declared
+//!   inline (same discipline as `model/mmap.rs`); the waker is a
+//!   `UnixStream` pair, the slab and timer wheel are hand-rolled.
+//! * **Edge-triggered.**  Each socket is registered once with
+//!   `EPOLLIN | EPOLLOUT | EPOLLET | EPOLLRDHUP`; readiness is
+//!   tracked in the connection (`writable`) and every read/write
+//!   drains until `WouldBlock`, as ET requires.
+//! * **One request in flight per connection.**  Pipelined requests
+//!   queue in the read buffer and are answered strictly in order —
+//!   same observable semantics as the blocking front end.
+//! * **The reactor never blocks.**  Classify dispatches through
+//!   [`Service::classify_async`] (resolved by a replica worker);
+//!   every other route — admin `?wait=1` can legally block for a
+//!   minute — runs on a small auxiliary pool.  Either way the
+//!   response comes back through a completion queue and the waker.
+//! * **Bounded.**  `--max-connections` is enforced at accept (503 +
+//!   `Retry-After`), buffers are capped by the shared HTTP parsing
+//!   limits, and a lazy timer wheel closes connections idle past
+//!   `--idle-timeout-ms`.
+//!
+//! The [`Epoll`] wrapper is public: `benches/serve_load.rs` reuses it
+//! to multiplex thousands of client connections from one thread.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::utils::threadpool::ThreadPool;
+use crate::{log_debug, log_error, log_info};
+
+use super::http::{HttpHead, HttpResponse, MAX_BODY};
+use super::service::{ServeOptions, Service};
+
+/// `EPOLLIN`: the fd has bytes to read.
+pub const EV_IN: u32 = 0x001;
+/// `EPOLLOUT`: the fd accepts writes again.
+pub const EV_OUT: u32 = 0x004;
+/// `EPOLLERR`: error condition (always reported, never requested).
+pub const EV_ERR: u32 = 0x008;
+/// `EPOLLHUP`: hangup (always reported, never requested).
+pub const EV_HUP: u32 = 0x010;
+/// `EPOLLRDHUP`: peer shut down its write half.
+pub const EV_RDHUP: u32 = 0x2000;
+/// `EPOLLET`: edge-triggered delivery.
+pub const EV_ET: u32 = 1 << 31;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    /// Mirrors the kernel's `struct epoll_event`.  The kernel packs
+    /// it on x86-64 only; everywhere else natural alignment applies.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub token: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut EpollEvent,
+        ) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// Most events drained per `epoll_wait` call.
+const WAIT_BATCH: usize = 512;
+
+/// A thin owned epoll instance.  Register fds with a caller-chosen
+/// `u64` token; [`Epoll::wait`] reports `(events, token)` pairs.
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    /// Create a close-on-exec epoll instance.
+    pub fn new() -> Result<Self> {
+        // SAFETY: plain syscall, no pointers.
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        anyhow::ensure!(
+            fd >= 0,
+            "epoll_create1: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: RawFd, events: u32,
+           token: u64) -> Result<()> {
+        let mut ev = sys::EpollEvent { events, token };
+        // SAFETY: `ev` outlives the call; the kernel copies it.
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        anyhow::ensure!(
+            rc == 0,
+            "epoll_ctl: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(())
+    }
+
+    /// Register `fd` for `events`, delivered with `token`.
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change the registered interest set for `fd`.
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64)
+                  -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Deregister `fd` (closing an fd deregisters it implicitly; this
+    /// is for keeping an fd open but silent).
+    pub fn del(&self, fd: RawFd) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block up to `timeout_ms` (`-1` = forever) and fill `out` with
+    /// `(events, token)` pairs.  A signal interruption reports zero
+    /// events rather than an error.
+    pub fn wait(&self, out: &mut Vec<(u32, u64)>, timeout_ms: i32)
+                -> Result<usize> {
+        out.clear();
+        let mut buf =
+            [sys::EpollEvent { events: 0, token: 0 }; WAIT_BATCH];
+        // SAFETY: `buf` has WAIT_BATCH writable slots.
+        let n = unsafe {
+            sys::epoll_wait(
+                self.fd,
+                buf.as_mut_ptr(),
+                WAIT_BATCH as std::os::raw::c_int,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            anyhow::bail!("epoll_wait: {e}");
+        }
+        for ev in &buf[..n as usize] {
+            // Field copies (not references) are fine on packed types.
+            let events = ev.events;
+            let token = ev.token;
+            out.push((events, token));
+        }
+        Ok(n as usize)
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        // SAFETY: fd came from epoll_create1 and is closed only here.
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// Token carried by the listening socket.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Token carried by the reactor's waker pipe.
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+/// Pack a slab index and generation into an epoll token.
+fn conn_token(idx: usize, gen: u64) -> u64 {
+    ((gen & 0xffff_ffff) << 32) | idx as u64
+}
+
+/// Unpack [`conn_token`].
+fn split_token(token: u64) -> (usize, u64) {
+    ((token & 0xffff_ffff) as usize, token >> 32)
+}
+
+/// Per-connection parse state.
+enum ConnState {
+    /// Accumulating request head bytes.
+    ReadHead,
+    /// Head parsed; waiting for `body_len` body bytes.
+    ReadBody { head: HttpHead, body_len: usize },
+}
+
+/// One connection owned by a reactor.
+struct Conn {
+    stream: TcpStream,
+    gen: u64,
+    state: ConnState,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    written: usize,
+    /// Last kernel-reported writability; cleared on `WouldBlock`,
+    /// set again by `EPOLLOUT` (edge-triggered contract).
+    writable: bool,
+    /// An async request is outstanding; parsing is paused until its
+    /// completion lands (responses stay in request order).
+    inflight: bool,
+    /// Keep-alive decision of the request currently in flight.
+    resp_keep_alive: bool,
+    /// Close once `write_buf` drains (error or `Connection: close`).
+    close_after_write: bool,
+    /// Peer shut down its write half (`EPOLLRDHUP` / read 0).
+    peer_closed: bool,
+    /// Refreshed on every byte received and every completion.
+    last_activity: Instant,
+    /// Requests dispatched on this connection.
+    served: u64,
+}
+
+/// Generation-checked connection slab.  Tokens from a previous tenant
+/// of a slot fail the generation check instead of touching the new
+/// connection (classic ABA protection).
+struct Slab {
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    next_gen: u64,
+}
+
+impl Slab {
+    fn new() -> Self {
+        Self { conns: Vec::new(), free: Vec::new(), next_gen: 0 }
+    }
+
+    fn insert(&mut self, mut conn: Conn) -> (usize, u64) {
+        self.next_gen = (self.next_gen + 1) & 0xffff_ffff;
+        let gen = self.next_gen;
+        conn.gen = gen;
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.conns[i] = Some(conn);
+                i
+            }
+            None => {
+                self.conns.push(Some(conn));
+                self.conns.len() - 1
+            }
+        };
+        (idx, gen)
+    }
+
+    fn get_mut(&mut self, idx: usize) -> Option<&mut Conn> {
+        self.conns.get_mut(idx).and_then(Option::as_mut)
+    }
+
+    fn get_checked(&mut self, idx: usize, gen: u64)
+                   -> Option<&mut Conn> {
+        self.get_mut(idx).filter(|c| c.gen == gen)
+    }
+
+    fn remove(&mut self, idx: usize) -> Option<Conn> {
+        let conn = self.conns.get_mut(idx).and_then(Option::take);
+        if conn.is_some() {
+            self.free.push(idx);
+        }
+        conn
+    }
+
+    fn len(&self) -> usize {
+        self.conns.len() - self.free.len()
+    }
+}
+
+/// Lazy hashed timer wheel for idle timeouts.  Entries fire at slot
+/// granularity; stale entries (the connection saw activity since
+/// insertion) are re-filed at their true deadline instead of closed,
+/// so refreshing a timer is free.
+struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>,
+    granularity: Duration,
+    cursor: usize,
+    cursor_time: Instant,
+}
+
+impl TimerWheel {
+    fn new(idle_timeout: Duration, now: Instant) -> Self {
+        let granularity = std::cmp::max(
+            idle_timeout / 32,
+            Duration::from_millis(10),
+        );
+        Self {
+            slots: vec![Vec::new(); 64],
+            granularity,
+            cursor: 0,
+            cursor_time: now,
+        }
+    }
+
+    /// File `(idx, gen)` to fire at or shortly after `deadline`.
+    fn insert(&mut self, idx: usize, gen: u64, deadline: Instant) {
+        let ticks = deadline
+            .saturating_duration_since(self.cursor_time)
+            .as_nanos()
+            / self.granularity.as_nanos().max(1);
+        let off = (ticks as usize).clamp(1, self.slots.len() - 1);
+        let slot = (self.cursor + off) % self.slots.len();
+        self.slots[slot].push((idx, gen));
+    }
+
+    /// How long `epoll_wait` may sleep before the next tick is due.
+    fn until_tick(&self, now: Instant) -> Duration {
+        (self.cursor_time + self.granularity)
+            .saturating_duration_since(now)
+    }
+
+    /// Advance the cursor up to `now`, appending everything due to
+    /// `due`.
+    fn tick(&mut self, now: Instant, due: &mut Vec<(usize, u64)>) {
+        while now >= self.cursor_time + self.granularity {
+            self.cursor = (self.cursor + 1) % self.slots.len();
+            self.cursor_time += self.granularity;
+            due.append(&mut self.slots[self.cursor]);
+        }
+    }
+}
+
+/// The cross-thread half of a reactor: completion queue, injected
+/// connections (from the accepting reactor), and the waker that pops
+/// `epoll_wait`.
+struct ReactorShared {
+    completions: Mutex<Vec<(u64, HttpResponse)>>,
+    injected: Mutex<VecDeque<TcpStream>>,
+    /// Write half of the waker pair (non-blocking: a full pipe means
+    /// a wake is already pending, which is all we need).
+    waker: UnixStream,
+}
+
+impl ReactorShared {
+    fn wake(&self) {
+        let _ = (&self.waker).write(&[1u8]);
+    }
+
+    fn complete(&self, token: u64, resp: HttpResponse) {
+        self.completions.lock().unwrap().push((token, resp));
+        self.wake();
+    }
+
+    fn inject(&self, stream: TcpStream) {
+        self.injected.lock().unwrap().push_back(stream);
+        self.wake();
+    }
+}
+
+/// One reactor thread: an epoll instance plus every connection it
+/// owns.  Reactor 0 additionally owns the listener and hands accepted
+/// sockets round-robin to the full reactor set (itself included).
+struct Reactor {
+    epoll: Epoll,
+    slab: Slab,
+    wheel: TimerWheel,
+    shared: Arc<ReactorShared>,
+    waker_rx: UnixStream,
+    service: Arc<Service>,
+    pool: Arc<ThreadPool>,
+    stop: Arc<AtomicBool>,
+    /// Open connections across ALL reactors (the accept-side cap).
+    active: Arc<AtomicUsize>,
+    idle_timeout: Duration,
+    max_connections: usize,
+    /// Reactor 0 only.
+    listener: Option<TcpListener>,
+    /// Reactor 0 only: every reactor's shared half, for round-robin.
+    peers: Vec<Arc<ReactorShared>>,
+    next_rr: usize,
+}
+
+impl Reactor {
+    fn new(
+        shared: Arc<ReactorShared>,
+        waker_rx: UnixStream,
+        service: Arc<Service>,
+        pool: Arc<ThreadPool>,
+        stop: Arc<AtomicBool>,
+        active: Arc<AtomicUsize>,
+        opts: &ServeOptions,
+    ) -> Result<Self> {
+        let epoll = Epoll::new()?;
+        waker_rx.set_nonblocking(true)?;
+        epoll.add(
+            waker_rx.as_raw_fd(),
+            EV_IN | EV_ET,
+            TOKEN_WAKER,
+        )?;
+        Ok(Self {
+            epoll,
+            slab: Slab::new(),
+            wheel: TimerWheel::new(opts.idle_timeout, Instant::now()),
+            shared,
+            waker_rx,
+            service,
+            pool,
+            stop,
+            active,
+            idle_timeout: opts.idle_timeout,
+            max_connections: opts.max_connections,
+            listener: None,
+            peers: Vec::new(),
+            next_rr: 0,
+        })
+    }
+
+    /// Main loop: wait, handle events, drain queues, tick timers.
+    fn run(&mut self) {
+        let mut events: Vec<(u32, u64)> = Vec::new();
+        let mut due: Vec<(usize, u64)> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            let now = Instant::now();
+            let wait = self
+                .wheel
+                .until_tick(now)
+                .min(Duration::from_millis(200));
+            let timeout_ms = wait.as_millis() as i32;
+            if let Err(e) = self.epoll.wait(&mut events, timeout_ms) {
+                log_error!("reactor: {e:#}");
+                break;
+            }
+            for &(ev, token) in &events {
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    _ => self.conn_event(token, ev),
+                }
+            }
+            self.drain_injected();
+            self.drain_completions();
+            let now = Instant::now();
+            due.clear();
+            self.wheel.tick(now, &mut due);
+            for &(idx, gen) in &due {
+                self.timer_fire(idx, gen, now);
+            }
+        }
+    }
+
+    /// Accept until `WouldBlock`; shed over the global cap; hand the
+    /// rest round-robin to the reactor set.
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match self.listener.as_ref() {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((mut stream, _peer)) => {
+                    let m = self.service.http_metrics();
+                    if self.active.load(Ordering::Relaxed)
+                        >= self.max_connections
+                    {
+                        m.rejected_over_limit
+                            .fetch_add(1, Ordering::Relaxed);
+                        // Accepted sockets are blocking by default;
+                        // this small write is best-effort.
+                        let _ = HttpResponse::text(
+                            503,
+                            "server at connection capacity\n",
+                        )
+                        .with_header("Retry-After", "1")
+                        .write(&mut stream, false);
+                        continue;
+                    }
+                    m.accepts.fetch_add(1, Ordering::Relaxed);
+                    m.connections.fetch_add(1, Ordering::Relaxed);
+                    self.active.fetch_add(1, Ordering::Relaxed);
+                    let target = self.next_rr % self.peers.len().max(1);
+                    self.next_rr = self.next_rr.wrapping_add(1);
+                    if target == 0 {
+                        self.install(stream);
+                    } else {
+                        self.peers[target].inject(stream);
+                    }
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::WouldBlock =>
+                {
+                    return
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log_error!("accept: {e}");
+                    self.stop.store(true, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Take ownership of a connection: nonblocking, slab slot, epoll
+    /// registration, idle timer.
+    fn install(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.release_counts();
+            return;
+        }
+        let now = Instant::now();
+        let fd = stream.as_raw_fd();
+        let (idx, gen) = self.slab.insert(Conn {
+            stream,
+            gen: 0,
+            state: ConnState::ReadHead,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            written: 0,
+            writable: true,
+            inflight: false,
+            resp_keep_alive: true,
+            close_after_write: false,
+            peer_closed: false,
+            last_activity: now,
+            served: 0,
+        });
+        let interest = EV_IN | EV_OUT | EV_ET | EV_RDHUP;
+        if self
+            .epoll
+            .add(fd, interest, conn_token(idx, gen))
+            .is_err()
+        {
+            self.slab.remove(idx);
+            self.release_counts();
+            return;
+        }
+        self.wheel.insert(idx, gen, now + self.idle_timeout);
+    }
+
+    /// Decrement the open-connection count and gauge (used when a
+    /// connection dies before or after living in the slab).
+    fn release_counts(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.service
+            .http_metrics()
+            .connections
+            .fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.waker_rx).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drain_injected(&mut self) {
+        loop {
+            let stream =
+                self.shared.injected.lock().unwrap().pop_front();
+            match stream {
+                Some(s) => self.install(s),
+                None => return,
+            }
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        let completions = std::mem::take(
+            &mut *self.shared.completions.lock().unwrap(),
+        );
+        for (token, resp) in completions {
+            let (idx, gen) = split_token(token);
+            let Some(conn) = self.slab.get_checked(idx, gen) else {
+                // The connection died while the request was in
+                // flight; the generation check drops the orphan.
+                continue;
+            };
+            let keep = conn.resp_keep_alive && !conn.peer_closed;
+            conn.write_buf.extend_from_slice(&resp.to_bytes(keep));
+            conn.inflight = false;
+            conn.last_activity = Instant::now();
+            if !keep {
+                conn.close_after_write = true;
+            }
+            self.flush_write(idx);
+            if self
+                .slab
+                .get_mut(idx)
+                .is_some_and(|c| !c.close_after_write)
+            {
+                // Pipelined bytes may already hold the next request
+                // (in the buffer, or parked in the kernel if the
+                // in-flight cap paused reading) — resume the drain.
+                self.on_readable(idx);
+            }
+        }
+    }
+
+    /// One epoll event on a connection token.
+    fn conn_event(&mut self, token: u64, ev: u32) {
+        let (idx, gen) = split_token(token);
+        let Some(conn) = self.slab.get_checked(idx, gen) else {
+            return;
+        };
+        if ev & (EV_ERR | EV_HUP) != 0 {
+            self.close(idx);
+            return;
+        }
+        if ev & EV_OUT != 0 {
+            conn.writable = true;
+        }
+        if ev & EV_RDHUP != 0 {
+            conn.peer_closed = true;
+        }
+        if ev & EV_IN != 0 {
+            self.on_readable(idx);
+        } else if ev & EV_RDHUP != 0 {
+            // Half-close with no data: finish what is pending, close
+            // the rest.
+            self.maybe_close_half_open(idx);
+        }
+        if self.slab.get_mut(idx).is_some() {
+            self.flush_write(idx);
+        }
+    }
+
+    /// A peer that half-closed and has nothing outstanding (no
+    /// in-flight request, nothing to write) is done.
+    fn maybe_close_half_open(&mut self, idx: usize) {
+        let Some(conn) = self.slab.get_mut(idx) else { return };
+        if conn.peer_closed
+            && !conn.inflight
+            && conn.write_buf.is_empty()
+        {
+            self.close(idx);
+        }
+    }
+
+    /// Drain the socket (edge-triggered: until `WouldBlock`), then
+    /// advance the parser.
+    fn on_readable(&mut self, idx: usize) {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            let Some(conn) = self.slab.get_mut(idx) else { return };
+            if conn.close_after_write {
+                // Discarding input; stop pulling bytes — the close
+                // lands once the error response flushes.
+                return;
+            }
+            if conn.inflight
+                && conn.read_buf.len() >= MAX_BODY + 16 * 1024
+            {
+                // A peer pipelining faster than its requests resolve
+                // cannot grow the buffer without bound: stop reading
+                // (bytes back up in the kernel) until the in-flight
+                // request completes — the completion path resumes
+                // the drain, which ET alone would not.
+                break;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.read_buf.extend_from_slice(&chunk[..n]);
+                    conn.last_activity = Instant::now();
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log_debug!("read: {e}");
+                    self.close(idx);
+                    return;
+                }
+            }
+        }
+        self.advance(idx);
+        self.maybe_close_half_open(idx);
+    }
+
+    /// Run the parse state machine over the read buffer until it
+    /// needs more bytes, a request dispatches (one in flight at a
+    /// time), or the connection errors out.
+    fn advance(&mut self, idx: usize) {
+        loop {
+            let Some(conn) = self.slab.get_mut(idx) else { return };
+            if conn.inflight || conn.close_after_write {
+                return;
+            }
+            match &conn.state {
+                ConnState::ReadHead => {
+                    match HttpHead::parse(&conn.read_buf) {
+                        Err(e) => {
+                            self.error_close(idx, &format!("{e:#}"));
+                            return;
+                        }
+                        Ok(None) => {
+                            // Incomplete head; a half-closed peer can
+                            // never finish it.
+                            if conn.peer_closed {
+                                self.close(idx);
+                            }
+                            return;
+                        }
+                        Ok(Some((head, consumed))) => {
+                            conn.read_buf.drain(..consumed);
+                            match head.body_len() {
+                                Ok(body_len) => {
+                                    conn.state = ConnState::ReadBody {
+                                        head,
+                                        body_len,
+                                    };
+                                }
+                                Err(e) => {
+                                    self.error_close(
+                                        idx,
+                                        &format!("{e:#}"),
+                                    );
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                }
+                ConnState::ReadBody { body_len, .. } => {
+                    let body_len = *body_len;
+                    if conn.read_buf.len() < body_len {
+                        // Mid-body disconnect: the request can never
+                        // complete, so nothing ever reaches a
+                        // replica — just fold the connection.
+                        if conn.peer_closed {
+                            self.close(idx);
+                        }
+                        return;
+                    }
+                    let rest = conn.read_buf.split_off(body_len);
+                    let body = std::mem::replace(
+                        &mut conn.read_buf,
+                        rest,
+                    );
+                    let state = std::mem::replace(
+                        &mut conn.state,
+                        ConnState::ReadHead,
+                    );
+                    let ConnState::ReadBody { head, .. } = state
+                    else {
+                        unreachable!("matched ReadBody above");
+                    };
+                    self.dispatch(idx, head, body);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Hand one complete request to the service.  Classify goes
+    /// through the router's callback path (resolved by a replica
+    /// worker); everything else may block (admin `?wait=1`) and runs
+    /// on the auxiliary pool.  Both resolve through the completion
+    /// queue, keyed by this connection's generation token.
+    fn dispatch(&mut self, idx: usize, head: HttpHead, body: Vec<u8>) {
+        let Some(conn) = self.slab.get_mut(idx) else { return };
+        let gen = conn.gen;
+        if conn.served > 0 {
+            self.service
+                .http_metrics()
+                .keepalive_reuses
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        conn.served += 1;
+        conn.resp_keep_alive = head.wants_keep_alive();
+        conn.inflight = true;
+        let token = conn_token(idx, gen);
+        let shared = Arc::clone(&self.shared);
+        if head.method == "POST" && head.path == "/classify" {
+            let content_type =
+                head.headers.get("content-type").map(String::as_str);
+            self.service.classify_async(
+                &head.query,
+                content_type,
+                &body,
+                move |resp| shared.complete(token, resp),
+            );
+        } else {
+            let service = Arc::clone(&self.service);
+            let req = head.into_request(body);
+            self.pool.execute(move || {
+                let resp = service.handle(req);
+                shared.complete(token, resp);
+            });
+        }
+    }
+
+    /// Queue a 400, discard buffered input, close after the flush —
+    /// a framing error leaves unknown bytes on the stream, so the
+    /// connection cannot be reused (same rule as the blocking path).
+    fn error_close(&mut self, idx: usize, msg: &str) {
+        let Some(conn) = self.slab.get_mut(idx) else { return };
+        let resp = HttpResponse::json(
+            400,
+            crate::utils::json::Json::obj(vec![(
+                "error",
+                crate::utils::json::Json::Str(msg.to_string()),
+            )])
+            .to_string(),
+        );
+        conn.write_buf.extend_from_slice(&resp.to_bytes(false));
+        conn.read_buf.clear();
+        conn.close_after_write = true;
+        self.flush_write(idx);
+    }
+
+    /// Push buffered response bytes while the socket accepts them;
+    /// on `WouldBlock` the `EPOLLOUT` edge resumes the flush.
+    fn flush_write(&mut self, idx: usize) {
+        loop {
+            let Some(conn) = self.slab.get_mut(idx) else { return };
+            if conn.write_buf.is_empty() {
+                break;
+            }
+            if !conn.writable {
+                return; // wait for EPOLLOUT
+            }
+            if conn.written == conn.write_buf.len() {
+                conn.write_buf.clear();
+                conn.written = 0;
+                break;
+            }
+            match conn.stream.write(&conn.write_buf[conn.written..]) {
+                Ok(0) => {
+                    self.close(idx);
+                    return;
+                }
+                Ok(n) => conn.written += n,
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::WouldBlock =>
+                {
+                    conn.writable = false;
+                    return;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log_debug!("write: {e}");
+                    self.close(idx);
+                    return;
+                }
+            }
+        }
+        let Some(conn) = self.slab.get_mut(idx) else { return };
+        if conn.close_after_write && conn.write_buf.is_empty() {
+            self.close(idx);
+        }
+    }
+
+    /// A timer-wheel entry came due.  Stale entries (activity since
+    /// filing, or a request in flight) are re-filed at their true
+    /// deadline; genuinely idle connections close.
+    fn timer_fire(&mut self, idx: usize, gen: u64, now: Instant) {
+        let Some(conn) = self.slab.get_checked(idx, gen) else {
+            return;
+        };
+        let deadline = conn.last_activity + self.idle_timeout;
+        if conn.inflight {
+            self.wheel.insert(idx, gen, now + self.idle_timeout);
+        } else if now >= deadline {
+            log_debug!("closing idle connection");
+            self.close(idx);
+        } else {
+            self.wheel.insert(idx, gen, deadline);
+        }
+    }
+
+    /// Remove and drop a connection (dropping the stream closes the
+    /// fd, which also deregisters it from epoll).
+    fn close(&mut self, idx: usize) {
+        if self.slab.remove(idx).is_some() {
+            self.release_counts();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        // Release the accounting for every connection still open at
+        // shutdown so the gauge reads 0 after the front end exits.
+        for idx in 0..self.slab.conns.len() {
+            self.close(idx);
+        }
+    }
+}
+
+/// Serve with the epoll front end until `stop` flips true.  Reactor 0
+/// runs on the calling thread and owns the listener; `--io-threads`
+/// minus one additional reactors run on their own threads and receive
+/// accepted connections round-robin.
+pub(super) fn serve_event_loop(
+    service: Arc<Service>,
+    opts: &ServeOptions,
+    stop: Arc<AtomicBool>,
+    ready_tx: Option<mpsc::Sender<SocketAddr>>,
+) -> Result<()> {
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("bind {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let reactors = opts.io_threads.max(1);
+    log_info!(
+        "serving on http://{addr} (event loop, {reactors} reactor(s), \
+         models: {:?})",
+        service.models()
+    );
+    if let Some(tx) = ready_tx {
+        let _ = tx.send(addr);
+    }
+    let pool = Arc::new(ThreadPool::new(opts.threads.max(1)));
+    let active = Arc::new(AtomicUsize::new(0));
+
+    let mut shareds = Vec::with_capacity(reactors);
+    let mut waker_rxs = Vec::with_capacity(reactors);
+    for _ in 0..reactors {
+        let (rx, tx) = UnixStream::pair().context("waker pair")?;
+        tx.set_nonblocking(true)?;
+        shareds.push(Arc::new(ReactorShared {
+            completions: Mutex::new(Vec::new()),
+            injected: Mutex::new(VecDeque::new()),
+            waker: tx,
+        }));
+        waker_rxs.push(rx);
+    }
+
+    let mut handles = Vec::new();
+    for (r, rx) in waker_rxs.drain(1..).enumerate() {
+        let mut reactor = Reactor::new(
+            Arc::clone(&shareds[r + 1]),
+            rx,
+            Arc::clone(&service),
+            Arc::clone(&pool),
+            Arc::clone(&stop),
+            Arc::clone(&active),
+            opts,
+        )?;
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("reactor-{}", r + 1))
+                .spawn(move || reactor.run())
+                .context("spawn reactor")?,
+        );
+    }
+
+    let mut r0 = Reactor::new(
+        Arc::clone(&shareds[0]),
+        waker_rxs.pop().expect("reactor 0 waker"),
+        Arc::clone(&service),
+        pool,
+        Arc::clone(&stop),
+        active,
+        opts,
+    )?;
+    r0.epoll.add(
+        listener.as_raw_fd(),
+        EV_IN | EV_ET,
+        TOKEN_LISTENER,
+    )?;
+    r0.listener = Some(listener);
+    r0.peers = shareds.clone();
+    r0.run();
+    drop(r0);
+
+    // Reactor 0 exiting (external stop or accept failure) takes the
+    // whole front end down.
+    stop.store(true, Ordering::Relaxed);
+    for s in &shareds {
+        s.wake();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_roundtrip_protects_generations() {
+        let t = conn_token(42, 7);
+        assert_eq!(split_token(t), (42, 7));
+        let t2 = conn_token(42, 8);
+        assert_ne!(t, t2, "new tenant must invalidate old tokens");
+        assert_ne!(t, TOKEN_LISTENER);
+        assert_ne!(t, TOKEN_WAKER);
+    }
+
+    #[test]
+    fn epoll_reports_readiness_edges() {
+        let ep = Epoll::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        ep.add(a.as_raw_fd(), EV_IN | EV_ET, 99).unwrap();
+        let mut events = Vec::new();
+        // Nothing written yet: no event inside a short wait.
+        ep.wait(&mut events, 20).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+        (&b).write_all(&[1u8]).unwrap();
+        ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        let (ev, token) = events[0];
+        assert_eq!(token, 99);
+        assert_ne!(ev & EV_IN, 0);
+        // Edge-triggered: without a new write (or a drain), the same
+        // edge is not reported twice.
+        ep.wait(&mut events, 20).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+    }
+
+    #[test]
+    fn slab_generations_invalidate_removed_slots() {
+        // Direct slab surgery without sockets: use a dummy pair.
+        let mk = || {
+            let (s, _keep) = {
+                let l = std::net::TcpListener::bind("127.0.0.1:0")
+                    .unwrap();
+                let addr = l.local_addr().unwrap();
+                let c = TcpStream::connect(addr).unwrap();
+                let (srv, _) = l.accept().unwrap();
+                (srv, c)
+            };
+            Conn {
+                stream: s,
+                gen: 0,
+                state: ConnState::ReadHead,
+                read_buf: Vec::new(),
+                write_buf: Vec::new(),
+                written: 0,
+                writable: true,
+                inflight: false,
+                resp_keep_alive: true,
+                close_after_write: false,
+                peer_closed: false,
+                last_activity: Instant::now(),
+                served: 0,
+            }
+        };
+        let mut slab = Slab::new();
+        let (idx, gen) = slab.insert(mk());
+        assert!(slab.get_checked(idx, gen).is_some());
+        slab.remove(idx);
+        assert!(slab.get_checked(idx, gen).is_none());
+        // The slot is reused with a fresh generation; the old token
+        // still fails.
+        let (idx2, gen2) = slab.insert(mk());
+        assert_eq!(idx2, idx, "freelist reuses the slot");
+        assert_ne!(gen2, gen);
+        assert!(slab.get_checked(idx, gen).is_none());
+        assert!(slab.get_checked(idx2, gen2).is_some());
+        assert_eq!(slab.len(), 1);
+    }
+
+    #[test]
+    fn timer_wheel_fires_at_deadline_and_not_before() {
+        let t0 = Instant::now();
+        let mut wheel =
+            TimerWheel::new(Duration::from_millis(320), t0);
+        // granularity = max(320/32, 10) = 10ms
+        wheel.insert(3, 1, t0 + Duration::from_millis(100));
+        let mut due = Vec::new();
+        wheel.tick(t0 + Duration::from_millis(50), &mut due);
+        assert!(due.is_empty(), "fired {:?} early", due);
+        wheel.tick(t0 + Duration::from_millis(200), &mut due);
+        assert_eq!(due, vec![(3, 1)]);
+        // Far deadlines cap at the wheel span and simply re-file on
+        // fire (lazy): filing works without panicking.
+        wheel.insert(4, 2, t0 + Duration::from_secs(3600));
+        due.clear();
+        wheel.tick(t0 + Duration::from_secs(1), &mut due);
+        assert_eq!(due, vec![(4, 2)]);
+    }
+}

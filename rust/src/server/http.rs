@@ -2,12 +2,23 @@
 //! enough for the coordinator's API surface).
 //!
 //! The parser is **bounded**: request/header lines are capped at
-//! [`MAX_HEADER_LINE`] bytes and a request at [`MAX_HEADERS`] headers,
-//! so a hostile peer streaming an endless header line cannot grow an
-//! unbounded buffer.  Framing the server does not speak
-//! (`Transfer-Encoding`) is rejected BEFORE any body bytes are read —
-//! and the serve loop closes (never reuses) a connection after any
-//! parse error, so unconsumed framing can't poison the next request.
+//! [`MAX_HEADER_LINE`] bytes, a request at [`MAX_HEADERS`] headers and
+//! [`MAX_BODY`] body bytes, so a hostile peer streaming an endless
+//! header line cannot grow an unbounded buffer.  Framing the server
+//! does not speak (`Transfer-Encoding`) is rejected BEFORE any body
+//! bytes are read — and both front ends close (never reuse) a
+//! connection after any parse error, so unconsumed framing can't
+//! poison the next request.
+//!
+//! Two entry points share the same grammar and bounds:
+//!
+//! * [`HttpRequest::read`] — pull parsing from a blocking
+//!   `BufReader` (the thread-per-connection front end),
+//! * [`HttpHead::parse`] — push parsing over whatever bytes have
+//!   arrived so far (the epoll front end, which owns many connections
+//!   per thread and must never block on a slow peer).  It returns
+//!   `Ok(None)` for an incomplete head, so a reactor can retry on the
+//!   next readiness event without re-scanning state.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -18,6 +29,58 @@ use anyhow::{bail, ensure, Context, Result};
 pub const MAX_HEADER_LINE: usize = 8 * 1024;
 /// Most headers accepted on one request.
 pub const MAX_HEADERS: usize = 100;
+/// Largest accepted request body, in bytes.
+pub const MAX_BODY: usize = 16 << 20;
+
+/// Parse a request line (`GET /p?q HTTP/1.1`, already newline-trimmed)
+/// into its components — shared by the blocking and incremental
+/// parsers so the two front ends accept exactly the same grammar.
+#[allow(clippy::type_complexity)]
+fn parse_request_line(
+    line: &str,
+) -> Result<(String, String, BTreeMap<String, String>, String)> {
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().context("missing request target")?;
+    let version = parts.next().unwrap_or("").to_string();
+    ensure!(version.starts_with("HTTP/1."), "bad version '{version}'");
+    ensure!(!method.is_empty(), "empty method");
+
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q),
+        None => (target.to_string(), ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(k.to_string(), v.to_string());
+    }
+    Ok((method, path, query, version))
+}
+
+/// Parse one `Name: value` header line (newline-trimmed, non-empty)
+/// into `headers`, enforcing the [`MAX_HEADERS`] cap.
+fn parse_header_line(
+    line: &str,
+    headers: &mut BTreeMap<String, String>,
+) -> Result<()> {
+    ensure!(headers.len() < MAX_HEADERS, "more than {MAX_HEADERS} headers");
+    let (k, v) = line.split_once(':').context("bad header line")?;
+    headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+    Ok(())
+}
+
+/// Keep-alive decision shared by [`HttpRequest`] and [`HttpHead`]: an
+/// explicit `Connection: close`/`keep-alive` header wins; otherwise
+/// the protocol default applies — keep-alive for HTTP/1.1, close for
+/// HTTP/1.0.
+fn keep_alive_for(headers: &BTreeMap<String, String>, version: &str) -> bool {
+    match headers.get("connection") {
+        Some(v) if v.eq_ignore_ascii_case("close") => false,
+        Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+        _ => version != "HTTP/1.0",
+    }
+}
 
 /// `read_line` with a hard byte cap.  Returns `Ok(None)` on EOF before
 /// any byte, an error when the line exceeds `max` bytes.
@@ -64,22 +127,8 @@ impl HttpRequest {
         else {
             return Ok(None);
         };
-        let mut parts = line.trim_end().split(' ');
-        let method = parts.next().unwrap_or("").to_uppercase();
-        let target = parts.next().context("missing request target")?;
-        let version = parts.next().unwrap_or("").to_string();
-        ensure!(version.starts_with("HTTP/1."), "bad version '{version}'");
-        ensure!(!method.is_empty(), "empty method");
-
-        let (path, query_str) = match target.split_once('?') {
-            Some((p, q)) => (p.to_string(), q),
-            None => (target.to_string(), ""),
-        };
-        let mut query = BTreeMap::new();
-        for pair in query_str.split('&').filter(|s| !s.is_empty()) {
-            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
-            query.insert(k.to_string(), v.to_string());
-        }
+        let (method, path, query, version) =
+            parse_request_line(line.trim_end())?;
 
         let mut headers = BTreeMap::new();
         loop {
@@ -89,30 +138,18 @@ impl HttpRequest {
             if h.is_empty() {
                 break;
             }
-            ensure!(
-                headers.len() < MAX_HEADERS,
-                "more than {MAX_HEADERS} headers"
-            );
-            let (k, v) = h.split_once(':').context("bad header line")?;
-            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+            parse_header_line(h, &mut headers)?;
         }
 
+        let head = HttpHead { method, path, query, headers, version };
         // Framing we don't speak is rejected BEFORE touching the body:
         // reading a content-length body off a chunked request would
         // leave the chunk framing on the stream and poison keep-alive
         // reuse for whatever the connection handler does next.
-        if let Some(te) = headers.get("transfer-encoding") {
-            bail!("transfer-encoding '{te}' not supported");
-        }
-        let len: usize = headers
-            .get("content-length")
-            .map(|v| v.parse().context("bad content-length"))
-            .transpose()?
-            .unwrap_or(0);
-        ensure!(len <= 16 << 20, "body too large ({len} bytes)");
+        let len = head.body_len()?;
         let mut body = vec![0u8; len];
         reader.read_exact(&mut body).context("reading body")?;
-        Ok(Some(Self { method, path, query, headers, body, version }))
+        Ok(Some(head.into_request(body)))
     }
 
     /// Whether the client wants the connection kept open.  An explicit
@@ -120,10 +157,115 @@ impl HttpRequest {
     /// protocol default applies — keep-alive for HTTP/1.1, close for
     /// HTTP/1.0.
     pub fn wants_keep_alive(&self) -> bool {
-        match self.headers.get("connection") {
-            Some(v) if v.eq_ignore_ascii_case("close") => false,
-            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
-            _ => self.version != "HTTP/1.0",
+        keep_alive_for(&self.headers, &self.version)
+    }
+}
+
+/// A parsed request head (request line + headers) whose body has not
+/// been read yet — the incremental-parse form used by the event-loop
+/// front end, which receives bytes in arbitrary chunks and must not
+/// block waiting for the rest of a message.
+#[derive(Debug, Clone)]
+pub struct HttpHead {
+    /// Uppercased request method.
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Parsed query parameters.
+    pub query: BTreeMap<String, String>,
+    /// Headers with lowercased names.
+    pub headers: BTreeMap<String, String>,
+    /// Protocol version from the request line.
+    pub version: String,
+}
+
+/// Scan the next newline-terminated line out of `buf[*pos..]`,
+/// advancing `pos` past it.  `Ok(None)` when the buffer holds no
+/// complete line yet; an error once the (partial) line already exceeds
+/// the [`MAX_HEADER_LINE`] cap, so a trickling peer cannot grow the
+/// buffer without bound.
+fn next_line<'a>(buf: &'a [u8], pos: &mut usize) -> Result<Option<&'a str>> {
+    let rest = &buf[*pos..];
+    match rest.iter().position(|&b| b == b'\n') {
+        Some(i) => {
+            ensure!(
+                i + 1 <= MAX_HEADER_LINE,
+                "header line over {MAX_HEADER_LINE} bytes"
+            );
+            let line = std::str::from_utf8(&rest[..i])
+                .context("non-utf8 header line")?;
+            *pos += i + 1;
+            Ok(Some(line.trim_end()))
+        }
+        None => {
+            ensure!(
+                rest.len() < MAX_HEADER_LINE,
+                "header line over {MAX_HEADER_LINE} bytes"
+            );
+            Ok(None)
+        }
+    }
+}
+
+impl HttpHead {
+    /// Try to parse a complete request head out of `buf`.  Returns
+    /// `Ok(Some((head, consumed)))` once the blank line ending the
+    /// head has arrived (`consumed` = bytes of `buf` the head spans,
+    /// so the body starts at `buf[consumed..]`), `Ok(None)` while the
+    /// head is still incomplete, and an error for malformed or
+    /// over-limit input — same grammar and caps as
+    /// [`HttpRequest::read`].
+    pub fn parse(buf: &[u8]) -> Result<Option<(Self, usize)>> {
+        let mut pos = 0usize;
+        let Some(line) = next_line(buf, &mut pos)? else {
+            return Ok(None);
+        };
+        let (method, path, query, version) = parse_request_line(line)?;
+        let mut headers = BTreeMap::new();
+        loop {
+            let Some(line) = next_line(buf, &mut pos)? else {
+                return Ok(None);
+            };
+            if line.is_empty() {
+                let head = Self { method, path, query, headers, version };
+                return Ok(Some((head, pos)));
+            }
+            parse_header_line(line, &mut headers)?;
+        }
+    }
+
+    /// Body length this head advertises, validated: rejects
+    /// `Transfer-Encoding` framing (which the server does not speak)
+    /// before any body byte is consumed, and bodies over [`MAX_BODY`].
+    pub fn body_len(&self) -> Result<usize> {
+        if let Some(te) = self.headers.get("transfer-encoding") {
+            bail!("transfer-encoding '{te}' not supported");
+        }
+        let len: usize = self
+            .headers
+            .get("content-length")
+            .map(|v| v.parse().context("bad content-length"))
+            .transpose()?
+            .unwrap_or(0);
+        ensure!(len <= MAX_BODY, "body too large ({len} bytes)");
+        Ok(len)
+    }
+
+    /// Whether the client wants the connection kept open (same rules
+    /// as [`HttpRequest::wants_keep_alive`]).
+    pub fn wants_keep_alive(&self) -> bool {
+        keep_alive_for(&self.headers, &self.version)
+    }
+
+    /// Attach a body, producing the full [`HttpRequest`].
+    pub fn into_request(self, body: Vec<u8>) -> HttpRequest {
+        HttpRequest {
+            method: self.method,
+            path: self.path,
+            query: self.query,
+            headers: self.headers,
+            body,
+            version: self.version,
         }
     }
 }
@@ -193,22 +335,33 @@ impl HttpResponse {
 
     /// Serialize status line, headers, and body to `w`.
     pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> Result<()> {
-        write!(
-            w,
+        w.write_all(&self.to_bytes(keep_alive))?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Serialize the full wire form to an owned buffer — what the
+    /// non-blocking front end appends to a connection's write buffer
+    /// (it cannot use blocking [`HttpResponse::write`]).
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
+        use std::fmt::Write as _;
+        let mut head = String::with_capacity(128);
+        let _ = write!(
+            head,
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             self.reason(),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
-        )?;
+        );
         for (name, value) in &self.headers {
-            write!(w, "{name}: {value}\r\n")?;
+            let _ = write!(head, "{name}: {value}\r\n");
         }
-        w.write_all(b"\r\n")?;
-        w.write_all(&self.body)?;
-        w.flush()?;
-        Ok(())
+        head.push_str("\r\n");
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
     }
 }
 
@@ -218,20 +371,34 @@ impl HttpResponse {
 /// lifecycle smoke example speak to the admin API with — deliberately
 /// tiny (no keep-alive, no chunked bodies, 30 s timeouts) so the CLI
 /// needs no client dependency.  For transient-failure tolerance see
-/// [`http_call_retry`].
+/// [`http_call_retry`]; for a caller-chosen timeout see
+/// [`http_call_timeout`].
 pub fn http_call(
     addr: &str,
     method: &str,
     path: &str,
     body: &[u8],
 ) -> Result<(u16, Vec<u8>)> {
+    let timeout = std::time::Duration::from_secs(30);
+    http_call_timeout(addr, method, path, body, timeout)
+}
+
+/// [`http_call`] with a caller-chosen socket read/write timeout
+/// instead of the hardcoded 30 s — test harnesses racing a server's
+/// idle-timeout knob need a client bound tighter than the default.
+pub fn http_call_timeout(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: std::time::Duration,
+) -> Result<(u16, Vec<u8>)> {
     use std::net::TcpStream;
-    use std::time::Duration;
 
     let mut stream = TcpStream::connect(addr)
         .with_context(|| format!("connect {addr}"))?;
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
     write!(
         stream,
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
@@ -479,6 +646,68 @@ mod tests {
         assert!(String::from_utf8(buf)
             .unwrap()
             .starts_with("HTTP/1.1 504 Gateway Timeout\r\n"));
+    }
+
+    #[test]
+    fn head_parse_incremental_matches_blocking() {
+        let raw = b"POST /classify?model=bnn HTTP/1.1\r\nHost: a\r\n\
+                    Content-Length: 5\r\n\r\nhello";
+        // Every prefix short of the blank line is "incomplete", never
+        // an error — the reactor keeps the buffer and retries.
+        let head_end = raw.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        for cut in 0..head_end {
+            assert!(
+                HttpHead::parse(&raw[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes must be incomplete"
+            );
+        }
+        let (head, consumed) = HttpHead::parse(raw).unwrap().unwrap();
+        assert_eq!(consumed, head_end);
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.path, "/classify");
+        assert_eq!(head.query.get("model").map(String::as_str), Some("bnn"));
+        assert_eq!(head.body_len().unwrap(), 5);
+        assert!(head.wants_keep_alive());
+        let req = head.into_request(raw[consumed..].to_vec());
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn head_parse_enforces_the_same_bounds() {
+        // Endless request line with no newline: bounded even before a
+        // complete line exists.
+        let raw = vec![b'G'; MAX_HEADER_LINE + 1];
+        assert!(HttpHead::parse(&raw).is_err());
+        // Header-count cap.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 5) {
+            raw.push_str(&format!("x-h{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        assert!(HttpHead::parse(raw.as_bytes()).is_err());
+        // Transfer-encoding rejected at body_len, bad version at parse.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        let (head, _) = HttpHead::parse(raw).unwrap().unwrap();
+        assert!(head.body_len().is_err());
+        assert!(HttpHead::parse(b"GET / SPDY/99\r\n\r\n").is_err());
+        // Oversized advertised body.
+        let raw = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        let (head, _) = HttpHead::parse(raw.as_bytes()).unwrap().unwrap();
+        assert!(head.body_len().is_err());
+    }
+
+    #[test]
+    fn head_parse_pipelined_requests_consume_exactly_one() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let (head, consumed) = HttpHead::parse(raw).unwrap().unwrap();
+        assert_eq!(head.path, "/a");
+        let (head2, consumed2) =
+            HttpHead::parse(&raw[consumed..]).unwrap().unwrap();
+        assert_eq!(head2.path, "/b");
+        assert_eq!(consumed + consumed2, raw.len());
     }
 
     #[test]

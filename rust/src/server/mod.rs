@@ -25,21 +25,39 @@
 //! `?wait=1` for synchronous semantics.  Without `--admin` they are
 //! `403` and the set is frozen.
 //!
-//! Built directly on std::net (offline: no hyper/tokio); one handler
-//! thread per connection from a fixed accept pool, keep-alive
-//! supported.  Behind each model name the [`ModelRegistry`] publishes
+//! Built directly on std::net (offline: no hyper/tokio), with TWO
+//! interchangeable front ends behind one [`serve`] entry point:
+//!
+//! * **Blocking** (default): one handler thread per connection from a
+//!   fixed accept pool, keep-alive supported.  Simple, debuggable,
+//!   fine up to a few hundred concurrent connections.
+//! * **Event loop** (`--event-loop`, linux): an epoll reactor (or
+//!   `--io-threads` of them) owns every connection non-blocking; see
+//!   [`eventloop`] for the state machine and `benches/serve_load.rs`
+//!   for the p50/p99/p999 comparison between the two.
+//!
+//! Behind each model name the [`ModelRegistry`] publishes
 //! a replicated [`Router`](crate::coordinator::Router) behind a
 //! hot-swap `Arc` handle; see `docs/SERVING.md` for the ops guide
 //! (routes, knobs, backpressure, metrics, lifecycle) and
 //! `docs/ARCHITECTURE.md` for the swap/drain design.
 
+#[cfg(target_os = "linux")]
+pub mod eventloop;
 pub mod http;
 pub mod registry;
 pub mod service;
 
-pub use http::{http_call, http_call_retry, HttpRequest, HttpResponse};
+#[cfg(target_os = "linux")]
+pub use eventloop::{
+    Epoll, EV_ERR, EV_ET, EV_HUP, EV_IN, EV_OUT, EV_RDHUP,
+};
+pub use http::{
+    http_call, http_call_retry, http_call_timeout, HttpHead,
+    HttpRequest, HttpResponse,
+};
 pub use registry::{
     ModelContract, ModelEntry, ModelRegistry, ModelState, ModelStatus,
     RegistryConfig, RegistryError,
 };
-pub use service::{serve, ServeOptions, Service};
+pub use service::{serve, HttpMetrics, ServeOptions, Service};

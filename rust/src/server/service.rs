@@ -32,14 +32,15 @@
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{
-    ReplyError, RequestError, Router, SubmitError, SubmitOptions,
+    InferReply, Metrics, ReplyError, RequestError, Router, SubmitError,
+    SubmitOptions,
 };
 use crate::data::normalize_batch;
 use crate::utils::json::Json;
@@ -57,6 +58,49 @@ const ADMIN_WAIT: Duration = Duration::from_secs(60);
 /// client asks for, no request occupies the pipeline longer than this.
 const MAX_TIMEOUT_MS: u64 = 60_000;
 
+/// Front-end connection counters, shared by whichever front end
+/// (blocking pool or epoll event loop) the process runs, and rendered
+/// on `/metrics` next to the per-model series.
+#[derive(Debug, Default)]
+pub struct HttpMetrics {
+    /// Currently open connections (gauge).
+    pub connections: AtomicU64,
+    /// Connections accepted since start.
+    pub accepts: AtomicU64,
+    /// Connections shed at the door over `max_connections`.
+    pub rejected_over_limit: AtomicU64,
+    /// Requests served on an already-used keep-alive connection
+    /// (the second request onward counts as one reuse each).
+    pub keepalive_reuses: AtomicU64,
+}
+
+impl HttpMetrics {
+    /// Prometheus-style exposition of the front-end series.
+    pub fn render(&self) -> String {
+        let mut out = Metrics::render_series(
+            "bitkernel_http_connections",
+            "",
+            self.connections.load(Ordering::Relaxed),
+        );
+        out.push_str(&Metrics::render_series(
+            "bitkernel_http_accepts_total",
+            "",
+            self.accepts.load(Ordering::Relaxed),
+        ));
+        out.push_str(&Metrics::render_series(
+            "bitkernel_http_rejected_over_limit_total",
+            "",
+            self.rejected_over_limit.load(Ordering::Relaxed),
+        ));
+        out.push_str(&Metrics::render_series(
+            "bitkernel_http_keepalive_reuses_total",
+            "",
+            self.keepalive_reuses.load(Ordering::Relaxed),
+        ));
+        out
+    }
+}
+
 /// The HTTP front end over a dynamic [`ModelRegistry`].  Dispatch is
 /// by model name; each request is decoded against its target's
 /// contract.
@@ -64,6 +108,7 @@ pub struct Service {
     registry: Arc<ModelRegistry>,
     default_model: Option<String>,
     admin: bool,
+    http_metrics: Arc<HttpMetrics>,
 }
 
 impl Service {
@@ -86,6 +131,7 @@ impl Service {
             registry,
             default_model: Some(default_model.to_string()),
             admin: false,
+            http_metrics: Arc::new(HttpMetrics::default()),
         }
     }
 
@@ -97,12 +143,23 @@ impl Service {
         default_model: Option<String>,
         admin: bool,
     ) -> Self {
-        Self { registry, default_model, admin }
+        Self {
+            registry,
+            default_model,
+            admin,
+            http_metrics: Arc::new(HttpMetrics::default()),
+        }
     }
 
     /// The registry behind this service.
     pub fn registry(&self) -> &Arc<ModelRegistry> {
         &self.registry
+    }
+
+    /// Front-end connection counters (shared by every front end that
+    /// serves this service).
+    pub fn http_metrics(&self) -> &Arc<HttpMetrics> {
+        &self.http_metrics
     }
 
     /// Names of every mounted model.
@@ -111,9 +168,8 @@ impl Service {
     }
 
     /// Dispatch one parsed request.  Takes the request by value: the
-    /// classify path owns the body and normalizes straight out of it,
-    /// so large-input models never pay the raw-byte clone the old
-    /// borrowing path made before decoding.
+    /// classify path normalizes straight out of the body buffer, so
+    /// large-input models never pay an intermediate raw-byte clone.
     pub fn handle(&self, req: HttpRequest) -> HttpResponse {
         // classify consumes the request, so it is routed before the
         // borrowing match below.
@@ -138,7 +194,9 @@ impl Service {
                 HttpResponse::json(200, Json::Arr(entries).to_string())
             }
             ("GET", "/metrics") => {
-                HttpResponse::text(200, self.registry.render_prometheus())
+                let mut body = self.registry.render_prometheus();
+                body.push_str(&self.http_metrics.render());
+                HttpResponse::text(200, body)
             }
             ("GET", _) | ("POST", _) => {
                 HttpResponse::text(404, "not found\n")
@@ -275,15 +333,89 @@ impl Service {
     }
 
     fn classify(&self, req: HttpRequest) -> HttpResponse {
-        let model = match req.query.get("model").cloned() {
+        let content_type =
+            req.headers.get("content-type").map(String::as_str);
+        let prepared =
+            self.prepare_classify(&req.query, content_type, &req.body);
+        let p = match prepared {
+            Ok(p) => p,
+            Err(resp) => return resp,
+        };
+        let PreparedClassify { model, router, generation, opts, image } = p;
+        let result = router.submit_wait_deadline(image, opts);
+        classify_response(&model, generation, &router, result)
+    }
+
+    /// Validate and dispatch one classify request WITHOUT blocking on
+    /// the reply — the event-loop front end's submission path.
+    /// `respond` runs exactly once with the final response: inline on
+    /// the calling thread for validation/admission failures, from a
+    /// replica worker thread once inference resolves otherwise (so it
+    /// must not block and must not panic).
+    pub fn classify_async(
+        &self,
+        query: &BTreeMap<String, String>,
+        content_type: Option<&str>,
+        body: &[u8],
+        respond: impl FnOnce(HttpResponse) + Send + 'static,
+    ) {
+        let p = match self.prepare_classify(query, content_type, body) {
+            Ok(p) => p,
+            Err(resp) => {
+                respond(resp);
+                return;
+            }
+        };
+        let PreparedClassify { model, router, generation, opts, image } = p;
+        // One-shot slot: `submit_callback` may fail synchronously
+        // AFTER the closure has taken ownership of `respond` (the
+        // queue-full path drops the request, closure included), so
+        // both resolution paths draw from the same Option.
+        let slot = Arc::new(std::sync::Mutex::new(Some(respond)));
+        let cb_slot = Arc::clone(&slot);
+        let cb_router = Arc::clone(&router);
+        let cb_model = model.clone();
+        let submitted = router.submit_callback(image, opts, move |result| {
+            if let Some(f) = cb_slot.lock().unwrap().take() {
+                f(classify_response(
+                    &cb_model,
+                    generation,
+                    &cb_router,
+                    result.map_err(RequestError::Failed),
+                ));
+            }
+        });
+        if let Err(e) = submitted {
+            if let Some(f) = slot.lock().unwrap().take() {
+                f(classify_response(
+                    &model,
+                    generation,
+                    &router,
+                    Err(RequestError::Rejected(e)),
+                ));
+            }
+        }
+    }
+
+    /// Shared classify admission: resolve the model, pin its
+    /// `(router, generation)`, parse options, and decode the body
+    /// against the model's contract.  `Err` is the ready-to-send
+    /// rejection response.
+    fn prepare_classify(
+        &self,
+        query: &BTreeMap<String, String>,
+        content_type: Option<&str>,
+        body: &[u8],
+    ) -> Result<PreparedClassify, HttpResponse> {
+        let model = match query.get("model").cloned() {
             Some(m) => m,
             None => match &self.default_model {
                 Some(m) => m.clone(),
                 None => {
-                    return err_json(
+                    return Err(err_json(
                         404,
                         "no default model (pass ?model=<name>)",
-                    )
+                    ))
                 }
             },
         };
@@ -293,78 +425,99 @@ impl Service {
         // last in-flight clone drops.
         let (router, generation) = match self.registry.router_for(&model) {
             Ok(r) => r,
-            Err(e) => return registry_err(&e),
+            Err(e) => return Err(registry_err(&e)),
         };
         // Circuit open: every replica of this model is mid-respawn.
         // Shed at the door with a retry hint instead of queueing into
         // a pool that cannot currently drain.
         if router.circuit_open() {
-            return err_json(503, "all replicas restarting")
-                .with_header("Retry-After", "1");
+            return Err(err_json(503, "all replicas restarting")
+                .with_header("Retry-After", "1"));
         }
-        let opts = match req.query.get("timeout_ms") {
+        let opts = match query.get("timeout_ms") {
             Some(v) => match v.parse::<u64>() {
                 Ok(ms) => SubmitOptions::with_timeout(
                     Duration::from_millis(ms.min(MAX_TIMEOUT_MS)),
                 ),
                 Err(_) => {
-                    return err_json(
+                    return Err(err_json(
                         400,
                         "bad timeout_ms (want integer milliseconds)",
-                    )
+                    ))
                 }
             },
             None => SubmitOptions::default(),
         };
         let (c, h, w) = router.input_shape();
-        let image = match decode_image(req, c, h, w) {
+        let image = match decode_image(body, content_type, c, h, w) {
             Ok(i) => i,
-            Err(e) => return err_json(400, &format!("{e:#}")),
+            Err(e) => return Err(err_json(400, &format!("{e:#}"))),
         };
-        match router.submit_wait_deadline(image, opts) {
-            Ok(reply) => {
-                // Label-less models answer with numeric labels.
-                let label = router.label_for(reply.class);
-                let body = Json::obj(vec![
-                    ("model", Json::Str(model)),
-                    ("generation", Json::Num(generation as f64)),
-                    ("class", Json::Num(reply.class as f64)),
-                    ("label", Json::Str(label)),
-                    ("latency_us", Json::Num(reply.total_us as f64)),
-                    ("queue_us", Json::Num(reply.queue_us as f64)),
-                    (
-                        "logits",
-                        Json::Arr(
-                            reply
-                                .logits
-                                .iter()
-                                .map(|&v| Json::Num(v as f64))
-                                .collect(),
-                        ),
+        Ok(PreparedClassify { model, router, generation, opts, image })
+    }
+}
+
+/// One classify request past admission: everything dispatch needs.
+struct PreparedClassify {
+    model: String,
+    router: Arc<Router>,
+    generation: u64,
+    opts: SubmitOptions,
+    image: Vec<f32>,
+}
+
+/// Map one dispatch outcome to its classify HTTP response — shared by
+/// the blocking and event-loop paths so status mapping cannot drift
+/// between front ends.
+fn classify_response(
+    model: &str,
+    generation: u64,
+    router: &Router,
+    result: Result<InferReply, RequestError>,
+) -> HttpResponse {
+    match result {
+        Ok(reply) => {
+            // Label-less models answer with numeric labels.
+            let label = router.label_for(reply.class);
+            let body = Json::obj(vec![
+                ("model", Json::Str(model.to_string())),
+                ("generation", Json::Num(generation as f64)),
+                ("class", Json::Num(reply.class as f64)),
+                ("label", Json::Str(label)),
+                ("latency_us", Json::Num(reply.total_us as f64)),
+                ("queue_us", Json::Num(reply.queue_us as f64)),
+                (
+                    "logits",
+                    Json::Arr(
+                        reply
+                            .logits
+                            .iter()
+                            .map(|&v| Json::Num(v as f64))
+                            .collect(),
                     ),
-                ]);
-                HttpResponse::json(200, body.to_string())
-            }
-            Err(RequestError::Rejected(SubmitError::QueueFull)) => {
-                err_json(429, "queue full")
-            }
-            // Unreachable (the image was sized from the router's own
-            // contract), but kept total: a shape error is the client's
-            // fault, never a 500.
-            Err(RequestError::Rejected(e @ SubmitError::WrongShape {
-                ..
-            })) => err_json(400, &e.to_string()),
-            Err(RequestError::Rejected(SubmitError::Shutdown))
-            | Err(RequestError::Failed(ReplyError::Shutdown)) => {
-                err_json(503, "shutting down")
-            }
-            Err(RequestError::Failed(ReplyError::DeadlineExceeded)) => {
-                err_json(504, "deadline exceeded")
-            }
-            // Replica panic / backend failure: the request is lost but
-            // typed — the supervisor is already respawning the replica.
-            Err(RequestError::Failed(e)) => err_json(500, &e.to_string()),
+                ),
+            ]);
+            HttpResponse::json(200, body.to_string())
         }
+        Err(RequestError::Rejected(SubmitError::QueueFull)) => {
+            err_json(429, "queue full")
+        }
+        // Unreachable (the image was sized from the router's own
+        // contract), but kept total: a shape error is the client's
+        // fault, never a 500.
+        Err(RequestError::Rejected(e @ SubmitError::WrongShape {
+            ..
+        })) => err_json(400, &e.to_string()),
+        Err(RequestError::Rejected(SubmitError::Shutdown))
+        | Err(RequestError::Failed(ReplyError::Shutdown)) => {
+            err_json(503, "shutting down")
+        }
+        Err(RequestError::Failed(ReplyError::DeadlineExceeded)) => {
+            err_json(504, "deadline exceeded")
+        }
+        // Replica panic / backend failure: the request is lost but
+        // typed — the supervisor is already respawning the replica.
+        Err(RequestError::Failed(e)) => err_json(500, &e.to_string()),
     }
 }
 
@@ -451,21 +604,23 @@ fn status_descriptor(st: &ModelStatus) -> Json {
 }
 
 /// Decode one classify body into a normalized CHW image for a
-/// `(c, h, w)` model: either exactly `c*h*w` raw HWC uint8 bytes
-/// (normalized straight out of the owned request buffer — no
-/// intermediate byte clone), or JSON `{"pixels": [...]}` with
-/// `c*h*w` numbers in [0, 255] (fractional values allowed).  Both
-/// normalize as `x / 127.5 - 1`, matching the training pipeline.
-fn decode_image(req: HttpRequest, c: usize, h: usize, w: usize)
-                -> Result<Vec<f32>> {
+/// `(c, h, w)` model: either exactly `c*h*w` raw HWC uint8 bytes, or
+/// JSON `{"pixels": [...]}` with `c*h*w` numbers in [0, 255]
+/// (fractional values allowed).  Both normalize as `x / 127.5 - 1`,
+/// matching the training pipeline.  Borrows the body so the event
+/// loop normalizes straight out of its connection buffer — the only
+/// copy is the normalized f32 image itself.
+fn decode_image(
+    body: &[u8],
+    content_type: Option<&str>,
+    c: usize,
+    h: usize,
+    w: usize,
+) -> Result<Vec<f32>> {
     let elems = c * h * w;
-    let ct = req
-        .headers
-        .get("content-type")
-        .map(String::as_str)
-        .unwrap_or("application/octet-stream");
+    let ct = content_type.unwrap_or("application/octet-stream");
     if ct.starts_with("application/json") {
-        let text = std::str::from_utf8(&req.body).context("body utf-8")?;
+        let text = std::str::from_utf8(body).context("body utf-8")?;
         let v = Json::parse(text).context("body json")?;
         let arr = v
             .get("pixels")
@@ -484,10 +639,10 @@ fn decode_image(req: HttpRequest, c: usize, h: usize, w: usize)
         }
         Ok(out)
     } else {
-        anyhow::ensure!(req.body.len() == elems,
+        anyhow::ensure!(body.len() == elems,
                         "expected {elems} body bytes for this model's \
-                         {c}x{h}x{w} input, got {}", req.body.len());
-        Ok(normalize_batch(&req.body, 1, h, w, c).into_data())
+                         {c}x{h}x{w} input, got {}", body.len());
+        Ok(normalize_batch(body, 1, h, w, c).into_data())
     }
 }
 
@@ -496,12 +651,24 @@ fn decode_image(req: HttpRequest, c: usize, h: usize, w: usize)
 pub struct ServeOptions {
     /// Bind address (`host:port`; port 0 picks a free port).
     pub addr: String,
-    /// Connection-handler threads.
+    /// Connection-handler threads (blocking front end) — the
+    /// event-loop front end sizes its auxiliary pool from this too.
     pub threads: usize,
     /// Open-connection cap: accepts past this are answered `503` with
     /// a `Retry-After` hint and closed immediately, keeping the
     /// handler pool responsive for the connections already admitted.
     pub max_connections: usize,
+    /// Close a connection that has sat idle (no bytes of a new
+    /// request) longer than this.  `serve --idle-timeout-ms`; shared
+    /// by both front ends.
+    pub idle_timeout: Duration,
+    /// Serve with the epoll event-loop front end instead of the
+    /// blocking thread-per-connection pool (`serve --event-loop`).
+    /// Linux-only; elsewhere it logs a warning and falls back.
+    pub event_loop: bool,
+    /// Reactor threads for the event-loop front end
+    /// (`serve --io-threads`).
+    pub io_threads: usize,
 }
 
 impl Default for ServeOptions {
@@ -510,28 +677,48 @@ impl Default for ServeOptions {
             addr: "127.0.0.1:8080".into(),
             threads: 4,
             max_connections: 256,
+            idle_timeout: Duration::from_secs(30),
+            event_loop: false,
+            io_threads: 1,
         }
     }
 }
 
-/// RAII decrement of the serve loop's open-connection count — runs on
-/// normal return AND on unwind out of a handler.
-struct ConnGuard(Arc<AtomicUsize>);
+/// RAII decrement of the serve loop's open-connection count (and the
+/// exported gauge) — runs on normal return AND on unwind out of a
+/// handler.
+struct ConnGuard {
+    active: Arc<AtomicUsize>,
+    metrics: Arc<HttpMetrics>,
+}
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::Relaxed);
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.connections.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-/// Run the accept loop until `stop` flips true.  Returns the bound
-/// address (useful with port 0 in tests).
+/// Run the accept loop until `stop` flips true.  Dispatches to the
+/// epoll event-loop front end when `opts.event_loop` is set; the
+/// default is the blocking thread-per-connection pool below.
 pub fn serve(
     service: Arc<Service>,
     opts: &ServeOptions,
     stop: Arc<AtomicBool>,
     ready_tx: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
 ) -> Result<()> {
+    if opts.event_loop {
+        #[cfg(target_os = "linux")]
+        return super::eventloop::serve_event_loop(
+            service, opts, stop, ready_tx,
+        );
+        #[cfg(not(target_os = "linux"))]
+        crate::log_warn!(
+            "--event-loop needs epoll (linux); \
+             falling back to the blocking front end"
+        );
+    }
     let listener = TcpListener::bind(&opts.addr)
         .with_context(|| format!("bind {}", opts.addr))?;
     let addr = listener.local_addr()?;
@@ -542,11 +729,15 @@ pub fn serve(
     }
     let pool = crate::utils::threadpool::ThreadPool::new(opts.threads);
     let active = Arc::new(AtomicUsize::new(0));
+    let http_m = Arc::clone(&service.http_metrics);
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((mut stream, _peer)) => {
                 if active.load(Ordering::Relaxed) >= opts.max_connections {
                     // Shed at the door, without occupying a pool slot.
+                    http_m
+                        .rejected_over_limit
+                        .fetch_add(1, Ordering::Relaxed);
                     let _ = HttpResponse::text(
                         503,
                         "server at connection capacity\n",
@@ -556,11 +747,17 @@ pub fn serve(
                     continue;
                 }
                 active.fetch_add(1, Ordering::Relaxed);
-                let guard = ConnGuard(Arc::clone(&active));
+                http_m.accepts.fetch_add(1, Ordering::Relaxed);
+                http_m.connections.fetch_add(1, Ordering::Relaxed);
+                let guard = ConnGuard {
+                    active: Arc::clone(&active),
+                    metrics: Arc::clone(&http_m),
+                };
                 let svc = Arc::clone(&service);
+                let idle = opts.idle_timeout;
                 pool.execute(move || {
                     let _guard = guard;
-                    if let Err(e) = handle_connection(stream, &svc) {
+                    if let Err(e) = handle_connection(stream, &svc, idle) {
                         crate::log_debug!("connection error: {e:#}");
                     }
                 });
@@ -577,10 +774,15 @@ pub fn serve(
     Ok(())
 }
 
-fn handle_connection(stream: TcpStream, service: &Service) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+fn handle_connection(
+    stream: TcpStream,
+    service: &Service,
+    idle_timeout: Duration,
+) -> Result<()> {
+    stream.set_read_timeout(Some(idle_timeout))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    let mut served: u64 = 0;
     loop {
         let req = match HttpRequest::read(&mut reader) {
             Ok(Some(req)) => req,
@@ -594,6 +796,13 @@ fn handle_connection(stream: TcpStream, service: &Service) -> Result<()> {
                 return Err(e);
             }
         };
+        if served > 0 {
+            service
+                .http_metrics
+                .keepalive_reuses
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        served += 1;
         let keep_alive = req.wants_keep_alive();
         let resp = service.handle(req);
         resp.write(&mut writer, keep_alive)?;
@@ -870,5 +1079,58 @@ mod tests {
         let mut req = get("/models/ghost");
         req.method = "DELETE".into();
         assert_eq!(svc.handle(req).status, 404);
+    }
+
+    #[test]
+    fn classify_async_resolves_exactly_once() {
+        let svc = mock_service();
+        // Happy path: the callback delivers the same 200 the blocking
+        // path would.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let body = vec![200u8; 3 * 32 * 32];
+        svc.classify_async(&BTreeMap::new(), None, &body, move |resp| {
+            let _ = tx.send(resp);
+        });
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(resp.status, 200, "{}",
+                   String::from_utf8_lossy(&resp.body));
+        let v = Json::parse(
+            &String::from_utf8(resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("mock"));
+        // Validation failure resolves inline (and exactly once): a
+        // wrong-sized body never reaches the router.
+        let (tx, rx) = std::sync::mpsc::channel();
+        svc.classify_async(&BTreeMap::new(), None, &[0u8; 4], move |r| {
+            let _ = tx.send(r.status);
+        });
+        assert_eq!(rx.try_recv(), Ok(400));
+        assert!(rx.try_recv().is_err(), "callback ran twice");
+        // Unknown model: typed 404 through the same callback.
+        let mut q = BTreeMap::new();
+        q.insert("model".to_string(), "ghost".to_string());
+        let (tx, rx) = std::sync::mpsc::channel();
+        svc.classify_async(&q, None, &[0u8; 4], move |r| {
+            let _ = tx.send(r.status);
+        });
+        assert_eq!(rx.try_recv(), Ok(404));
+    }
+
+    #[test]
+    fn metrics_include_front_end_series() {
+        let svc = mock_service();
+        svc.http_metrics().accepts.fetch_add(3, Ordering::Relaxed);
+        svc.http_metrics().connections.fetch_add(1, Ordering::Relaxed);
+        svc.http_metrics()
+            .keepalive_reuses
+            .fetch_add(2, Ordering::Relaxed);
+        let body =
+            String::from_utf8(svc.handle(get("/metrics")).body).unwrap();
+        assert!(body.contains("bitkernel_http_connections 1"), "{body}");
+        assert!(body.contains("bitkernel_http_accepts_total 3"),
+                "{body}");
+        assert!(body.contains("bitkernel_http_rejected_over_limit_total 0"),
+                "{body}");
+        assert!(body.contains("bitkernel_http_keepalive_reuses_total 2"),
+                "{body}");
     }
 }

@@ -1,0 +1,359 @@
+//! Acceptance suite for the epoll event-loop front end
+//! (`serve --event-loop`): bit-identity with `forward_reference` over
+//! real TCP, deadline mapping, reactor liveness under slow requests,
+//! connection caps, and sustained concurrent keep-alive traffic.
+//! Linux-only (epoll).
+#![cfg(target_os = "linux")]
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::coordinator::{
+    Backend, BatcherConfig, MockBackend, NativeBackend, Router,
+    RouterConfig,
+};
+use bitkernel::data::normalize_batch;
+use bitkernel::model::{BnnEngine, EngineKernel, NetSpec};
+use bitkernel::server::{serve, ServeOptions, Service};
+use bitkernel::testing::synthetic_weight_file;
+use bitkernel::utils::json::Json;
+
+const KERNEL: EngineKernel = EngineKernel::Xnor(XnorImpl::Auto);
+
+/// Spawn `service` behind the event-loop front end; returns the bound
+/// address, stop flag, and the server thread.
+fn spawn_event_loop(
+    service: Arc<Service>,
+    max_connections: usize,
+    io_threads: usize,
+) -> (
+    std::net::SocketAddr,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<()>,
+) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let server = std::thread::spawn(move || {
+        serve(
+            service,
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 2,
+                max_connections,
+                idle_timeout: Duration::from_secs(10),
+                event_loop: true,
+                io_threads,
+            },
+            stop2,
+            Some(ready_tx),
+        )
+        .unwrap();
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    (addr, stop, server)
+}
+
+/// A mock 3x32x32/10 service with per-batch `latency_ms`.
+fn mock_service(latency_ms: u64) -> Arc<Service> {
+    let mut routers = BTreeMap::new();
+    routers.insert(
+        "m".to_string(),
+        Router::start(
+            move |_| {
+                Ok(Box::new(MockBackend::new(8, latency_ms))
+                    as Box<dyn Backend>)
+            },
+            RouterConfig { replicas: 2, ..RouterConfig::default() },
+        )
+        .unwrap(),
+    );
+    Arc::new(Service::new(routers, "m"))
+}
+
+fn http_get(addr: &std::net::SocketAddr, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream,
+           "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    read_one_response(&mut BufReader::new(stream))
+}
+
+fn http_post(addr: &std::net::SocketAddr, path: &str, body: &[u8])
+             -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    stream.write_all(body).unwrap();
+    read_one_response(&mut BufReader::new(stream))
+}
+
+/// One framed response; the reader stays positioned for the next
+/// keep-alive reply.
+fn read_one_response(
+    reader: &mut BufReader<TcpStream>,
+) -> (u16, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 =
+        status_line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_lowercase().strip_prefix("content-length:")
+        {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+#[test]
+fn event_loop_is_bit_identical_to_forward_reference() {
+    // A real compiled engine, not a mock: the event-loop path must
+    // produce byte-for-byte the same logits as the unfused oracle.
+    let spec = NetSpec::builder((3, 32, 32))
+        .conv(8, 3)
+        .pool()
+        .linear(10)
+        .build()
+        .unwrap();
+    let wf = synthetic_weight_file(&spec, 41);
+    let engine = BnnEngine::from_weight_file(&wf).unwrap();
+    let plan = engine.plan(KERNEL, 4).unwrap();
+    let mut routers = BTreeMap::new();
+    routers.insert(
+        "net".to_string(),
+        Router::start(
+            move |_| {
+                Ok(Box::new(NativeBackend::from_plan(&plan))
+                    as Box<dyn Backend>)
+            },
+            RouterConfig {
+                queue_cap: 64,
+                replicas: 2,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(2),
+                },
+            },
+        )
+        .unwrap(),
+    );
+    let service = Arc::new(Service::new(routers, "net"));
+    let (addr, stop, server) =
+        spawn_event_loop(service, 256, 2);
+
+    // The discovery surface works over the event loop too.
+    let (status, models) = http_get(&addr, "/models");
+    assert_eq!(status, 200);
+    let v = Json::parse(&models).unwrap();
+    assert_eq!(v.as_arr().unwrap().len(), 1);
+
+    for salt in 0..4usize {
+        let px: Vec<u8> = (0..3 * 32 * 32)
+            .map(|i| ((i * 31 + salt * 7) % 256) as u8)
+            .collect();
+        let x = normalize_batch(&px, 1, 32, 32, 3);
+        let reference = engine.forward_reference(&x, KERNEL);
+        let (status, body) = http_post(&addr, "/classify", &px);
+        assert_eq!(status, 200, "salt {salt}: {body}");
+        let v = Json::parse(&body).unwrap();
+        let logits: Vec<f32> = v
+            .get("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_f64().unwrap() as f32)
+            .collect();
+        for (i, (&got, &want)) in
+            logits.iter().zip(reference.data()).enumerate()
+        {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "salt {salt} logit {i}: the event-loop path must be \
+                 bit-identical to forward_reference"
+            );
+        }
+    }
+
+    // Wrong byte counts are still typed 400s, not parser wedges.
+    let (status, body) = http_post(&addr, "/classify", &[1u8; 16]);
+    assert_eq!(status, 400, "{body}");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn deadlines_map_to_504_and_generous_budgets_answer() {
+    let (addr, stop, server) =
+        spawn_event_loop(mock_service(200), 64, 1);
+    let img = vec![3u8; 3 * 32 * 32];
+    let (status, body) =
+        http_post(&addr, "/classify?timeout_ms=1", &img);
+    assert_eq!(status, 504, "{body}");
+    assert!(body.contains("deadline"), "{body}");
+    let (status, body) =
+        http_post(&addr, "/classify?timeout_ms=10000", &img);
+    assert_eq!(status, 200, "{body}");
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn slow_inference_never_blocks_the_reactor() {
+    // One classify against a 1.5 s-per-batch model is in flight;
+    // /healthz and the (403) admin surface on other connections must
+    // answer immediately — the reactor never waits on a replica.
+    let (addr, stop, server) =
+        spawn_event_loop(mock_service(1_500), 64, 1);
+    let mut slow = TcpStream::connect(addr).unwrap();
+    let img = vec![5u8; 3 * 32 * 32];
+    write!(
+        slow,
+        "POST /classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        img.len()
+    )
+    .unwrap();
+    slow.write_all(&img).unwrap();
+    // Give the request time to reach the replica.
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    let (status, _) = http_get(&addr, "/healthz");
+    assert_eq!(status, 200);
+    let mut put = TcpStream::connect(addr).unwrap();
+    write!(put, "PUT /models/m HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let (status, _) =
+        read_one_response(&mut BufReader::new(put));
+    assert_eq!(status, 403, "admin disabled answers typed");
+    assert!(
+        t0.elapsed() < Duration::from_millis(1_000),
+        "fast routes stalled {:?} behind a slow classify",
+        t0.elapsed()
+    );
+    // The slow request itself still resolves.
+    let (status, body) =
+        read_one_response(&mut BufReader::new(slow));
+    assert_eq!(status, 200, "{body}");
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn over_limit_connections_shed_503_with_retry_after() {
+    let service = mock_service(0);
+    let (addr, stop, server) =
+        spawn_event_loop(Arc::clone(&service), 4, 1);
+    // Fill the cap with keep-alive connections that have each proven
+    // themselves with one request.
+    let img = vec![2u8; 3 * 32 * 32];
+    let mut held = Vec::new();
+    for _ in 0..4 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "POST /classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+            img.len()
+        )
+        .unwrap();
+        s.write_all(&img).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let (status, _) = read_one_response(&mut reader);
+        assert_eq!(status, 200);
+        held.push((s, reader));
+    }
+    // The fifth is shed at the door with a retry hint.
+    let mut extra = TcpStream::connect(addr).unwrap();
+    write!(extra, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    extra
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut raw = String::new();
+    let _ = extra.read_to_string(&mut raw);
+    assert!(raw.starts_with("HTTP/1.1 503"), "{raw}");
+    assert!(raw.contains("Retry-After"), "{raw}");
+    assert!(
+        service
+            .http_metrics()
+            .rejected_over_limit
+            .load(Ordering::Relaxed)
+            >= 1
+    );
+    // The held connections are still serviceable.
+    let (s, reader) = &mut held[0];
+    write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let (status, _) = read_one_response(reader);
+    assert_eq!(status, 200);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}
+
+#[test]
+fn sustains_concurrent_keepalive_connections_without_loss() {
+    const CONNS: usize = 96;
+    const REQS: usize = 4;
+    let service = mock_service(0);
+    let (addr, stop, server) =
+        spawn_event_loop(Arc::clone(&service), 512, 2);
+    // Open every connection up front (all concurrently registered),
+    // then round-robin requests over the set so keep-alive reuse and
+    // the reactors' slabs are genuinely exercised.
+    let mut conns: Vec<(TcpStream, BufReader<TcpStream>)> = (0..CONNS)
+        .map(|_| {
+            let s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(30)))
+                .unwrap();
+            let r = BufReader::new(s.try_clone().unwrap());
+            (s, r)
+        })
+        .collect();
+    let img = vec![6u8; 3 * 32 * 32];
+    let mut ok = 0usize;
+    for round in 0..REQS {
+        for (s, reader) in conns.iter_mut() {
+            write!(
+                s,
+                "POST /classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+                img.len()
+            )
+            .unwrap();
+            s.write_all(&img).unwrap();
+            let (status, body) = read_one_response(reader);
+            assert_eq!(status, 200, "round {round}: {body}");
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, CONNS * REQS, "no request may be lost");
+    let m = service.http_metrics();
+    assert!(
+        m.accepts.load(Ordering::Relaxed) >= CONNS as u64,
+        "every connection accept counted"
+    );
+    assert!(
+        m.keepalive_reuses.load(Ordering::Relaxed)
+            >= (CONNS * (REQS - 1)) as u64,
+        "reuses counted per keep-alive request"
+    );
+    drop(conns);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+}

@@ -4,6 +4,10 @@
 //! submit/body validation (wrong sizes are typed errors / 4xx, never a
 //! worker panic).  Everything runs on synthetic engines — no
 //! artifacts needed.
+//!
+//! The adversarial suite at the bottom (slowloris, pipelining,
+//! mid-body disconnect) runs against BOTH front ends — the blocking
+//! pool and, on linux, the epoll event loop — over real TCP.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -244,6 +248,204 @@ fn randomized_shapes_validate_submits_and_bodies() {
     }
 }
 
+// --- adversarial clients, against both front ends --------------------------
+
+/// Front ends worth running an adversarial client against: the
+/// blocking pool everywhere, plus the epoll event loop on linux.
+fn front_ends() -> Vec<bool> {
+    if cfg!(target_os = "linux") {
+        vec![false, true]
+    } else {
+        vec![false]
+    }
+}
+
+/// Spawn a mock-backed server (3x32x32/10 model "m", default) with
+/// the chosen front end and idle timeout.  Returns the bound address,
+/// the stop flag, the server join handle, and the service (for
+/// metrics assertions).
+fn spawn_mock_server(
+    event_loop: bool,
+    idle_ms: u64,
+) -> (
+    std::net::SocketAddr,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<()>,
+    Arc<Service>,
+) {
+    let mut routers = BTreeMap::new();
+    routers.insert(
+        "m".to_string(),
+        Router::start(
+            |_| Ok(Box::new(MockBackend::new(8, 0)) as Box<dyn Backend>),
+            RouterConfig { replicas: 2, ..RouterConfig::default() },
+        )
+        .unwrap(),
+    );
+    let service = Arc::new(Service::new(routers, "m"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let stop2 = Arc::clone(&stop);
+    let svc2 = Arc::clone(&service);
+    let server = std::thread::spawn(move || {
+        serve(
+            svc2,
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                threads: 2,
+                idle_timeout: Duration::from_millis(idle_ms),
+                event_loop,
+                io_threads: 2,
+                ..ServeOptions::default()
+            },
+            stop2,
+            Some(ready_tx),
+        )
+        .unwrap();
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    (addr, stop, server, service)
+}
+
+/// Read until the server closes the connection (returning whatever it
+/// sent first, e.g. a best-effort 400).  Panics if the socket is
+/// still open after ~5 s.
+fn read_until_close(stream: &TcpStream) -> Vec<u8> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut got = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match (&*stream).read(&mut buf) {
+            Ok(0) => return got,
+            Ok(n) => got.extend_from_slice(&buf[..n]),
+            Err(e) => panic!(
+                "server kept the connection open past the idle \
+                 timeout: {e} (read so far: {} bytes)",
+                got.len()
+            ),
+        }
+    }
+}
+
+#[test]
+fn slowloris_header_trickle_is_closed_and_pool_stays_healthy() {
+    for event_loop in front_ends() {
+        let (addr, stop, server, _svc) =
+            spawn_mock_server(event_loop, 200);
+        // Three trickling peers in parallel: each sends a partial
+        // header line and then goes quiet past the idle timeout.
+        let streams: Vec<TcpStream> = (0..3)
+            .map(|_| {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(b"GET /healthz HTTP/1.1\r\nHost: tr")
+                    .unwrap();
+                s
+            })
+            .collect();
+        for s in &streams {
+            // The server must hang up on its own (no bytes were ever
+            // a complete request, so no response is required —
+            // the blocking path may send a best-effort 400).
+            let _ = read_until_close(s);
+        }
+        // The pool was never occupied by the tricklers: a well-formed
+        // request still answers instantly.
+        let (status, _) = http_get(&addr, "/healthz");
+        assert_eq!(status, 200, "event_loop={event_loop}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+}
+
+#[test]
+fn pipelined_requests_answer_in_order_on_one_connection() {
+    for event_loop in front_ends() {
+        let (addr, stop, server, svc) =
+            spawn_mock_server(event_loop, 5_000);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        // Two classifies and a healthz, written back-to-back before
+        // reading anything.
+        let body = vec![7u8; 3 * 32 * 32];
+        let mut burst = Vec::new();
+        for _ in 0..2 {
+            burst.extend_from_slice(
+                format!(
+                    "POST /classify HTTP/1.1\r\nHost: t\r\n\
+                     Content-Length: {}\r\n\r\n",
+                    body.len()
+                )
+                .as_bytes(),
+            );
+            burst.extend_from_slice(&body);
+        }
+        burst.extend_from_slice(
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n",
+        );
+        stream.write_all(&burst).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for i in 0..2 {
+            let (status, body) = read_one_response(&mut reader);
+            assert_eq!(status, 200, "resp {i}: {body}");
+            let v = Json::parse(&body).unwrap();
+            assert_eq!(v.get("model").unwrap().as_str(), Some("m"),
+                       "event_loop={event_loop}");
+        }
+        let (status, body) = read_one_response(&mut reader);
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok\n");
+        // All three rode one connection: that is two keep-alive
+        // reuses on the server's counter.
+        assert!(
+            svc.http_metrics()
+                .keepalive_reuses
+                .load(std::sync::atomic::Ordering::Relaxed)
+                >= 2,
+            "event_loop={event_loop}"
+        );
+        drop(reader);
+        drop(stream);
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+}
+
+#[test]
+fn mid_body_disconnect_never_wedges_a_replica() {
+    for event_loop in front_ends() {
+        let (addr, stop, server, _svc) =
+            spawn_mock_server(event_loop, 5_000);
+        // Several clients advertise a full body, send half, vanish.
+        for _ in 0..4 {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                format!(
+                    "POST /classify HTTP/1.1\r\nHost: t\r\n\
+                     Content-Length: {}\r\n\r\n",
+                    3 * 32 * 32
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+            let torso = vec![1u8; 3 * 32 * 32 / 2];
+            s.write_all(&torso).unwrap();
+            drop(s); // RST/FIN mid-body
+        }
+        // No replica ever saw those torsos; a real request with a
+        // bounded deadline still answers 200 (not 504, not a hang).
+        let img = vec![9u8; 3 * 32 * 32];
+        let (status, body) =
+            http_post(&addr, "/classify?timeout_ms=5000", &img);
+        assert_eq!(status, 200, "event_loop={event_loop}: {body}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+}
+
 // --- tiny test HTTP client -------------------------------------------------
 
 fn http_get(addr: &std::net::SocketAddr, path: &str) -> (u16, String) {
@@ -268,7 +470,14 @@ fn http_post(addr: &std::net::SocketAddr, path: &str, body: &[u8])
 }
 
 fn read_response(stream: TcpStream) -> (u16, String) {
-    let mut reader = BufReader::new(stream);
+    read_one_response(&mut BufReader::new(stream))
+}
+
+/// Read exactly one framed response without consuming past its body,
+/// so the same reader can pull further pipelined/keep-alive replies.
+fn read_one_response(
+    reader: &mut BufReader<TcpStream>,
+) -> (u16, String) {
     let mut status_line = String::new();
     reader.read_line(&mut status_line).unwrap();
     let status: u16 =

@@ -60,7 +60,15 @@ echo "== scheme conformance: scheme x kernel x topology matrix"
 cargo test -q --test scheme_conformance
 
 echo "== shape-generic serving: heterogeneous models + submit validation"
+# Includes the adversarial-client suite (slowloris, pipelining,
+# mid-body disconnects) run against BOTH front ends.
 cargo test -q --test serving
+
+echo "== event-loop front end: epoll reactor acceptance"
+# Bit-identical to forward_reference through the reactor, 504 deadline
+# mapping, slow inference never blocking the loop, 503 connection
+# shedding, and a concurrent keep-alive sweep with zero loss.
+cargo test -q --test eventloop
 
 echo "== model lifecycle: mount/reload/unmount under live traffic"
 # Admin-API roundtrip, reload-under-hammer (every reply bit-identical
@@ -121,5 +129,10 @@ cargo bench --bench lifecycle -- --quick
 
 echo "== bench smoke: panic injection under load (--quick; asserts 0 lost)"
 cargo bench --bench chaos -- --quick
+
+echo "== bench smoke: front-end load sweep (--quick; both front ends)"
+# Drives blocking AND event-loop front ends with multiplexed
+# keep-alive clients; asserts the event loop loses zero requests.
+cargo bench --bench serve_load -- --quick
 
 echo "ci.sh: all green"
