@@ -144,6 +144,7 @@ fn main() {
                     max_batch: mb,
                     max_delay: Duration::from_millis(delay_ms),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -209,6 +210,7 @@ fn main() {
                         max_batch: mb,
                         max_delay: Duration::from_millis(delay_ms),
                     },
+                    ..RouterConfig::default()
                 },
             )
             .unwrap();
@@ -309,6 +311,7 @@ fn main() {
                     max_batch: mb,
                     max_delay: Duration::from_millis(3),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();

@@ -161,6 +161,7 @@ fn main() {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap(),

@@ -3,11 +3,20 @@
 //!
 //! For every conv/fc gemm shape of the full-scale BNN, times the native
 //! xnor kernels (blocked and SIMD tiers) vs the naive control vs the
-//! blocked/SIMD float kernels, then (with `--features pjrt` and
-//! artifacts present) the same shapes through the AOT PJRT executables.
+//! blocked/SIMD float kernels; a second table sweeps every single-core
+//! `XnorImpl` arm — including the AVX-512 VPOPCNTDQ tier — and reports
+//! per-impl throughput in GiOP/s.  On hosts with real VPOPCNTDQ the
+//! bench ASSERTS the avx512 arm beats the 256-bit simd arm on the
+//! acceptance shape (64x288x1024); elsewhere the arm falls back and no
+//! speedup is claimed.  With `--features pjrt` and artifacts present,
+//! the same shapes also run through the AOT PJRT executables.
+//!
+//! `--quick` shrinks the measurement budget and shape set to a CI
+//! smoke (the assertions still run).
 
 use bitkernel::benchkit::{bench, Table};
-use bitkernel::bitops::{pack_rows, simd_tier, xnor_gemm, XnorImpl};
+use bitkernel::bitops::{avx512_vpopcnt_available, pack_rows, simd_tier,
+                        xnor_gemm, XnorImpl};
 use bitkernel::gemm::{gemm_naive, gemm_simd};
 use bitkernel::utils::Rng;
 
@@ -20,8 +29,34 @@ const SHAPES: [(&str, usize, usize, usize); 4] = [
     ("fc1 b8 (1024x8192x8)", 1024, 8192, 8),
 ];
 
+/// The acceptance shape the AVX-512 tier is gated on: k=288 (9 words)
+/// exercises both the 16-word main loop remainder and the word tail.
+const ACCEPT: (&str, usize, usize, usize) =
+    ("accept (64x288x1024)", 64, 288, 1024);
+
+/// Single-core arms swept by the per-impl throughput table (Auto rides
+/// along to show what the heuristic picks).
+const PER_IMPL: [XnorImpl; 6] = [
+    XnorImpl::Blocked,
+    XnorImpl::Blocked2x4,
+    XnorImpl::Wide,
+    XnorImpl::Simd,
+    XnorImpl::Avx512,
+    XnorImpl::Auto,
+];
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Measurement budget: (seconds per point, repetitions).
+    let (secs, reps) = if quick { (0.02, 1) } else { (0.4, 3) };
     let mut rng = Rng::new(7);
+
+    let shapes: Vec<(&str, usize, usize, usize)> = if quick {
+        vec![ACCEPT]
+    } else {
+        SHAPES.iter().copied().chain([ACCEPT]).collect()
+    };
+
     let mut table = Table::new(
         &format!(
             "Native gemm kernels per BNN layer shape (ms; simd tier: {})",
@@ -31,7 +66,13 @@ fn main() {
           "control (naive f32)", "simd f32 (optimized)",
           "xnor-simd vs control"],
     );
-    for (name, d, k, n) in SHAPES {
+    let mut giops_table = Table::new(
+        "Per-impl xnor-gemm throughput (GiOP/s; 2*D*K*N bit-ops/gemm)",
+        &["layer", "blocked", "blocked2x4", "wide64", "simd",
+          "avx512", "auto"],
+    );
+
+    for (name, d, k, n) in shapes {
         let a = rng.sign_vec(d * k);
         let bt = rng.sign_vec(n * k);
         let wp = pack_rows(&a, d, k);
@@ -39,19 +80,19 @@ fn main() {
         let mut iout = vec![0i32; d * n];
         let mut fout = vec![0.0f32; d * n];
 
-        let mb = bench("xnor-blocked", 0.4, 3, 1.0, || {
+        let mb = bench("xnor-blocked", secs, reps, 1.0, || {
             xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Blocked);
         });
-        let ms = bench("xnor-simd", 0.4, 3, 1.0, || {
+        let ms = bench("xnor-simd", secs, reps, 1.0, || {
             xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Simd);
         });
-        let ma = bench("xnor-auto", 0.4, 3, 1.0, || {
+        let ma = bench("xnor-auto", secs, reps, 1.0, || {
             xnor_gemm(&wp, &xp, &mut iout, XnorImpl::Auto);
         });
-        let mc = bench("control", 0.4, 3, 1.0, || {
+        let mc = bench("control", secs, reps, 1.0, || {
             gemm_naive(&a, &bt, &mut fout, d, k, n);
         });
-        let mf = bench("simd-f32", 0.4, 3, 1.0, || {
+        let mf = bench("simd-f32", secs, reps, 1.0, || {
             gemm_simd(&a, &bt, &mut fout, d, k, n);
         });
         table.row(&[
@@ -65,10 +106,48 @@ fn main() {
         ]);
         assert!(ms.mean_s() < mc.mean_s(),
                 "{name}: xnor must beat naive float");
+
+        // Per-impl throughput sweep.  One xnor+popcount MAC covers a
+        // multiply and an add of the dense gemm, so ops = 2*D*K*N —
+        // the same convention the float kernels would report under.
+        let ops = (2 * d * k * n) as f64;
+        let mut row = vec![name.to_string()];
+        let mut per_impl_s = Vec::with_capacity(PER_IMPL.len());
+        for imp in PER_IMPL {
+            let m = bench(&format!("impl-{}", imp.name()), secs, reps,
+                          1.0, || {
+                xnor_gemm(&wp, &xp, &mut iout, imp);
+            });
+            per_impl_s.push(m.mean_s());
+            row.push(format!(
+                "{:.1}",
+                ops / m.mean_s() / (1u64 << 30) as f64
+            ));
+        }
+        giops_table.row(&row);
+
+        // Acceptance gate: on real VPOPCNTDQ hardware the 512-bit arm
+        // must beat the 256-bit simd arm on the acceptance shape.  On
+        // BW-only or AVX2 hosts the arm falls back (bit-identical by
+        // the conformance suites) and no speedup is asserted.
+        if (name, d, k, n) == ACCEPT && avx512_vpopcnt_available() {
+            let t_simd = per_impl_s[3];
+            let t_avx512 = per_impl_s[4];
+            assert!(
+                t_avx512 < t_simd,
+                "avx512 ({:.3} ms) must beat simd ({:.3} ms) on {}",
+                t_avx512 * 1e3,
+                t_simd * 1e3,
+                name
+            );
+        }
     }
     table.print();
+    giops_table.print();
 
-    pjrt_section();
+    if !quick {
+        pjrt_section();
+    }
 }
 
 /// PJRT micro-kernel executables (needs artifacts + the pjrt feature).

@@ -167,6 +167,7 @@ fn main() {
                 max_batch: 8,
                 max_delay: Duration::from_millis(1),
             },
+            ..RouterConfig::default()
         },
         max_resident: 0,
     });

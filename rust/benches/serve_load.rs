@@ -113,6 +113,7 @@ mod linux {
                         max_batch: 8,
                         max_delay: Duration::from_millis(2),
                     },
+                    ..RouterConfig::default()
                 },
             )
             .unwrap(),

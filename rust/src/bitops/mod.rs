@@ -9,15 +9,17 @@
 //!   words, register-blocked, SIMD/wide, 2-D tiled multi-threaded, and
 //!   a shape-aware `Auto`) benchmarked against each other in
 //!   `benches/ablation.rs`,
-//! * [`simd`] — the vectorized tiers behind the ladder: AVX2
-//!   xnor+popcount tiles and movemask sign packing, with a portable
-//!   `[u64; 4]`-wide fallback.
+//! * [`simd`] — the vectorized tiers behind the ladder: AVX-512
+//!   (`vpxorq` + `VPOPCNTDQ`, with an AVX512BW nibble-LUT variant) and
+//!   AVX2 xnor+popcount tiles, mask-register/movemask sign packing,
+//!   and a portable `[u64; 4]`-wide fallback.
 
 pub mod pack;
 pub mod simd;
 pub mod xnor;
 
 pub use pack::{pack_rows, pack_rows_from, pack_slice};
-pub use simd::{avx2_available, simd_tier};
+pub use simd::{avx2_available, avx512_available, avx512_vpopcnt_available,
+               avx512bw_available, avx512f_available, simd_tier};
 pub use xnor::{ternary_gemm, ternary_gemm_pooled, xnor_gemm,
                xnor_gemm_pooled, XnorImpl};

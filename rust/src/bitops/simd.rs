@@ -1,17 +1,25 @@
 //! SIMD xnor-popcount kernels + vectorized sign packing.
 //!
 //! The paper's throughput claim lives or dies in this inner loop, so it
-//! exists at three width tiers with a fixed runtime fallback chain:
+//! exists at four width tiers with a fixed runtime fallback chain:
 //!
-//! 1. **AVX2** (`x86_64`, detected via `is_x86_feature_detected!`):
-//!    xnor over 256-bit lanes, popcount via the nibble-LUT
+//! 1. **AVX-512** (`x86_64`, detected via `is_x86_feature_detected!`):
+//!    xnor over 512-bit lanes (`vpxorq`) with the popcount done by the
+//!    `VPOPCNTDQ` instruction (`_mm512_popcnt_epi64` — 16 packed words
+//!    per step, one µop per popcount) when the CPU has it, else by a
+//!    512-bit nibble-LUT `_mm512_shuffle_epi8` + `_mm512_sad_epu8`
+//!    variant on AVX512BW-only parts.  Sign packing writes compare
+//!    results straight out of mask registers
+//!    (`_mm512_cmp_ps_mask(GE_OQ)` — the `vpmov*2m`/`kmov` family
+//!    instead of a movemask round trip).
+//! 2. **AVX2**: xnor over 256-bit lanes, popcount via the nibble-LUT
 //!    `_mm256_shuffle_epi8` trick reduced with `_mm256_sad_epu8`
 //!    (the Harley–Seal byte-count family — 8 packed words per step),
 //!    and sign packing via `_mm256_cmp_ps(GE_OQ)` + `movemask`.
-//! 2. **Portable wide** (any arch): `[u64; 4]`-at-a-time xnor+popcount
+//! 3. **Portable wide** (any arch): `[u64; 4]`-at-a-time xnor+popcount
 //!    with independent accumulators, compiling to hardware `popcnt` /
 //!    `cnt` wherever the target has it.
-//! 3. The scalar u32/u64 kernels in [`super::xnor`] remain as the
+//! 4. The scalar u32/u64 kernels in [`super::xnor`] remain as the
 //!    bit-exactness oracles.
 //!
 //! Every tier computes the identical integer result (popcounts are
@@ -47,9 +55,66 @@ pub fn avx2_available() -> bool {
     }
 }
 
+/// Does this CPU have the AVX-512 `VPOPCNTDQ` tier (512-bit xnor with
+/// single-instruction 64-bit-lane popcounts)?
+#[inline]
+pub fn avx512_vpopcnt_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx512vpopcntdq")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Does this CPU have the AVX512BW tier (512-bit xnor with the
+/// nibble-LUT/`sad_epu8` popcount — the fallback for AVX-512 parts
+/// without `VPOPCNTDQ`)?
+#[inline]
+pub fn avx512bw_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx512bw")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Does this CPU run the 512-bit gemm tier at all (either popcount
+/// flavor)?  Gates the `XnorImpl::Avx512` arm in `Auto` resolution and
+/// calibration.
+#[inline]
+pub fn avx512_available() -> bool {
+    avx512_vpopcnt_available() || avx512bw_available()
+}
+
+/// AVX512F alone is enough for the mask-register sign packing (the
+/// gemm tiers additionally want BW or VPOPCNTDQ).
+#[inline]
+pub fn avx512f_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512f")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
 /// Human label for the widest available tier (bench/profile reports).
 pub fn simd_tier() -> &'static str {
-    if avx2_available() {
+    if avx512_vpopcnt_available() {
+        "avx512-vpopcntdq"
+    } else if avx512bw_available() {
+        "avx512bw"
+    } else if avx2_available() {
         "avx2"
     } else {
         "wide64x4"
@@ -271,8 +336,262 @@ pub(crate) unsafe fn gemm_tile_avx2(
     }
 }
 
-/// Widest-available gemm tile: AVX2 when the CPU has it, else the
-/// portable wide tier.  Same contract/safety as [`gemm_tile_wide`].
+/// Per-64-bit-lane popcount of a 512-bit vector on AVX512BW-only
+/// parts: the same nibble-LUT + `sad_epu8` trick as [`popcount256`],
+/// twice as wide (16 packed words per step).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+#[inline]
+unsafe fn popcount512(v: __m512i) -> __m512i {
+    let lut = _mm512_broadcast_i32x4(_mm_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    ));
+    let low = _mm512_set1_epi8(0x0f);
+    let lo = _mm512_and_si512(v, low);
+    let hi = _mm512_and_si512(_mm512_srli_epi16::<4>(v), low);
+    let cnt = _mm512_add_epi8(
+        _mm512_shuffle_epi8(lut, lo),
+        _mm512_shuffle_epi8(lut, hi),
+    );
+    _mm512_sad_epu8(cnt, _mm512_setzero_si512())
+}
+
+/// `VPOPCNTDQ` 512-bit gemm tile: 16 packed words per step, xnor via
+/// double-`vpxorq`, per-lane popcount in ONE instruction
+/// (`_mm512_popcnt_epi64`), 1x4 column blocking, word tails scalar —
+/// same contract as [`gemm_tile_wide`].
+///
+/// # Safety
+/// Caller must have verified [`avx512_vpopcnt_available`]; `out`
+/// aliasing rules as in [`gemm_tile_wide`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_tile_avx512vp(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    let kw16 = kw & !15;
+    let ones = _mm512_set1_epi64(-1);
+    for i in i_lo..i_hi {
+        let wrow = w.row(i);
+        let mut j = j_lo;
+        while j + 4 <= j_hi {
+            let rows =
+                [x.row(j), x.row(j + 1), x.row(j + 2), x.row(j + 3)];
+            let mut vacc = [_mm512_setzero_si512(); 4];
+            let mut wi = 0;
+            while wi < kw16 {
+                let wv =
+                    _mm512_loadu_si512(wrow.as_ptr().add(wi) as *const _);
+                for (c, xr) in rows.iter().enumerate() {
+                    let xv = _mm512_loadu_si512(
+                        xr.as_ptr().add(wi) as *const _
+                    );
+                    // xnor = NOT (w XOR x) = (w XOR x) XOR ones
+                    let xn = _mm512_xor_si512(_mm512_xor_si512(wv, xv),
+                                              ones);
+                    vacc[c] = _mm512_add_epi64(vacc[c],
+                                               _mm512_popcnt_epi64(xn));
+                }
+                wi += 16;
+            }
+            let mut acc = [
+                _mm512_reduce_add_epi64(vacc[0]) as u32,
+                _mm512_reduce_add_epi64(vacc[1]) as u32,
+                _mm512_reduce_add_epi64(vacc[2]) as u32,
+                _mm512_reduce_add_epi64(vacc[3]) as u32,
+            ];
+            while wi < kw {
+                let ww = wrow[wi];
+                for (c, xr) in rows.iter().enumerate() {
+                    acc[c] += (!(ww ^ xr[wi])).count_ones();
+                }
+                wi += 1;
+            }
+            for (c, &a) in acc.iter().enumerate() {
+                *out.add(i * n + j + c) = finish(a, kw, pad);
+            }
+            j += 4;
+        }
+        while j < j_hi {
+            let xr = x.row(j);
+            let mut vacc = _mm512_setzero_si512();
+            let mut wi = 0;
+            while wi < kw16 {
+                let wv =
+                    _mm512_loadu_si512(wrow.as_ptr().add(wi) as *const _);
+                let xv =
+                    _mm512_loadu_si512(xr.as_ptr().add(wi) as *const _);
+                let xn =
+                    _mm512_xor_si512(_mm512_xor_si512(wv, xv), ones);
+                vacc = _mm512_add_epi64(vacc, _mm512_popcnt_epi64(xn));
+                wi += 16;
+            }
+            let mut acc = _mm512_reduce_add_epi64(vacc) as u32;
+            while wi < kw {
+                acc += (!(wrow[wi] ^ xr[wi])).count_ones();
+                wi += 1;
+            }
+            *out.add(i * n + j) = finish(acc, kw, pad);
+            j += 1;
+        }
+    }
+}
+
+/// AVX512BW 512-bit gemm tile for parts without `VPOPCNTDQ`: identical
+/// structure to [`gemm_tile_avx512vp`] with the nibble-LUT
+/// [`popcount512`] in place of the single instruction, compiled WITHOUT
+/// the `avx512vpopcntdq` feature so no such instruction can be emitted.
+///
+/// # Safety
+/// Caller must have verified [`avx512bw_available`]; `out` aliasing
+/// rules as in [`gemm_tile_wide`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_tile_avx512bw(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    let (kw, pad) = (w.kw, w.pad_bits());
+    let kw16 = kw & !15;
+    let ones = _mm512_set1_epi64(-1);
+    for i in i_lo..i_hi {
+        let wrow = w.row(i);
+        let mut j = j_lo;
+        while j + 4 <= j_hi {
+            let rows =
+                [x.row(j), x.row(j + 1), x.row(j + 2), x.row(j + 3)];
+            let mut vacc = [_mm512_setzero_si512(); 4];
+            let mut wi = 0;
+            while wi < kw16 {
+                let wv =
+                    _mm512_loadu_si512(wrow.as_ptr().add(wi) as *const _);
+                for (c, xr) in rows.iter().enumerate() {
+                    let xv = _mm512_loadu_si512(
+                        xr.as_ptr().add(wi) as *const _
+                    );
+                    let xn = _mm512_xor_si512(_mm512_xor_si512(wv, xv),
+                                              ones);
+                    vacc[c] =
+                        _mm512_add_epi64(vacc[c], popcount512(xn));
+                }
+                wi += 16;
+            }
+            let mut acc = [
+                _mm512_reduce_add_epi64(vacc[0]) as u32,
+                _mm512_reduce_add_epi64(vacc[1]) as u32,
+                _mm512_reduce_add_epi64(vacc[2]) as u32,
+                _mm512_reduce_add_epi64(vacc[3]) as u32,
+            ];
+            while wi < kw {
+                let ww = wrow[wi];
+                for (c, xr) in rows.iter().enumerate() {
+                    acc[c] += (!(ww ^ xr[wi])).count_ones();
+                }
+                wi += 1;
+            }
+            for (c, &a) in acc.iter().enumerate() {
+                *out.add(i * n + j + c) = finish(a, kw, pad);
+            }
+            j += 4;
+        }
+        while j < j_hi {
+            let xr = x.row(j);
+            let mut vacc = _mm512_setzero_si512();
+            let mut wi = 0;
+            while wi < kw16 {
+                let wv =
+                    _mm512_loadu_si512(wrow.as_ptr().add(wi) as *const _);
+                let xv =
+                    _mm512_loadu_si512(xr.as_ptr().add(wi) as *const _);
+                let xn =
+                    _mm512_xor_si512(_mm512_xor_si512(wv, xv), ones);
+                vacc = _mm512_add_epi64(vacc, popcount512(xn));
+                wi += 16;
+            }
+            let mut acc = _mm512_reduce_add_epi64(vacc) as u32;
+            while wi < kw {
+                acc += (!(wrow[wi] ^ xr[wi])).count_ones();
+                wi += 1;
+            }
+            *out.add(i * n + j) = finish(acc, kw, pad);
+            j += 1;
+        }
+    }
+}
+
+/// 512-bit gemm tile with runtime popcount-flavor dispatch, falling
+/// through to AVX2 then the portable wide tier on CPUs without
+/// AVX-512 — the `XnorImpl::Avx512` arm.  Same contract/safety as
+/// [`gemm_tile_wide`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_tile_avx512(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_vpopcnt_available() {
+            return gemm_tile_avx512vp(w, x, out, n, i_lo, i_hi, j_lo,
+                                      j_hi);
+        }
+        if avx512bw_available() {
+            return gemm_tile_avx512bw(w, x, out, n, i_lo, i_hi, j_lo,
+                                      j_hi);
+        }
+    }
+    gemm_tile_avx2_or_wide(w, x, out, n, i_lo, i_hi, j_lo, j_hi)
+}
+
+/// The 256-bit tier pinned: AVX2 when the CPU has it, else the
+/// portable wide tier — the `XnorImpl::Simd` arm (kept at 256 bits so
+/// benches can compare it against [`gemm_tile_avx512`] on the same
+/// machine).  Same contract/safety as [`gemm_tile_wide`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_tile_avx2_or_wide(
+    w: &PackedMatrix,
+    x: &PackedMatrix,
+    out: *mut i32,
+    n: usize,
+    i_lo: usize,
+    i_hi: usize,
+    j_lo: usize,
+    j_hi: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return gemm_tile_avx2(w, x, out, n, i_lo, i_hi, j_lo, j_hi);
+        }
+    }
+    gemm_tile_wide(w, x, out, n, i_lo, i_hi, j_lo, j_hi)
+}
+
+/// Widest-available gemm tile: the AVX-512 tiers when the CPU has
+/// them, else AVX2, else the portable wide tier.  This is what
+/// `Threaded` hands its 2-D tiles to.  Same contract/safety as
+/// [`gemm_tile_wide`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn gemm_tile_best(
     w: &PackedMatrix,
@@ -286,6 +605,14 @@ pub(crate) unsafe fn gemm_tile_best(
 ) {
     #[cfg(target_arch = "x86_64")]
     {
+        if avx512_vpopcnt_available() {
+            return gemm_tile_avx512vp(w, x, out, n, i_lo, i_hi, j_lo,
+                                      j_hi);
+        }
+        if avx512bw_available() {
+            return gemm_tile_avx512bw(w, x, out, n, i_lo, i_hi, j_lo,
+                                      j_hi);
+        }
         if avx2_available() {
             return gemm_tile_avx2(w, x, out, n, i_lo, i_hi, j_lo, j_hi);
         }
@@ -360,6 +687,50 @@ unsafe fn pack_words_bn_avx2(vals: &[f32], a: f32, b: f32,
     }
 }
 
+/// AVX-512 packing: one `v >= 0` compare per 16 lanes lands directly
+/// in a mask register (`_mm512_cmp_ps_mask`, the `vpmov*2m`/`kmov`
+/// family — no movemask round trip), two masks per packed word.
+/// `GE_OQ` matches the scalar `>=` exactly (`-0.0` -> true, `NaN` ->
+/// false).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn pack_words_avx512(vals: &[f32], out: &mut [u32]) {
+    let zero = _mm512_setzero_ps();
+    for (wi, word) in out.iter_mut().enumerate() {
+        let base = vals.as_ptr().add(wi * 32);
+        let lo = _mm512_cmp_ps_mask::<_CMP_GE_OQ>(
+            _mm512_loadu_ps(base), zero,
+        ) as u32;
+        let hi = _mm512_cmp_ps_mask::<_CMP_GE_OQ>(
+            _mm512_loadu_ps(base.add(16)), zero,
+        ) as u32;
+        *word = lo | (hi << 16);
+    }
+}
+
+/// BN-folded AVX-512 packing: `a*v + b >= 0` into mask registers.
+/// Mul-then-add (explicit intrinsics, no FMA contraction), so the
+/// rounding is bit-identical to the scalar expression.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn pack_words_bn_avx512(vals: &[f32], a: f32, b: f32,
+                               out: &mut [u32]) {
+    let zero = _mm512_setzero_ps();
+    let av = _mm512_set1_ps(a);
+    let bv = _mm512_set1_ps(b);
+    for (wi, word) in out.iter_mut().enumerate() {
+        let base = vals.as_ptr().add(wi * 32);
+        let mut acc = 0u32;
+        for g in 0..2 {
+            let v = _mm512_loadu_ps(base.add(g * 16));
+            let t = _mm512_add_ps(_mm512_mul_ps(av, v), bv);
+            let m = _mm512_cmp_ps_mask::<_CMP_GE_OQ>(t, zero) as u32;
+            acc |= m << (g * 16);
+        }
+        *word = acc;
+    }
+}
+
 /// Pack full words of sign bits: `vals.len() == out.len() * 32`
 /// (callers handle ragged tails).  Bit 1 <=> `v >= 0.0`.
 #[inline]
@@ -367,6 +738,10 @@ pub(crate) fn pack_words(vals: &[f32], out: &mut [u32]) {
     debug_assert_eq!(vals.len(), out.len() * 32);
     #[cfg(target_arch = "x86_64")]
     {
+        if avx512f_available() {
+            unsafe { pack_words_avx512(vals, out) };
+            return;
+        }
         if avx2_available() {
             unsafe { pack_words_avx2(vals, out) };
             return;
@@ -383,6 +758,10 @@ pub(crate) fn pack_words_bn(vals: &[f32], a: f32, b: f32,
     debug_assert_eq!(vals.len(), out.len() * 32);
     #[cfg(target_arch = "x86_64")]
     {
+        if avx512f_available() {
+            unsafe { pack_words_bn_avx512(vals, a, b, out) };
+            return;
+        }
         if avx2_available() {
             unsafe { pack_words_bn_avx2(vals, a, b, out) };
             return;
@@ -420,10 +799,23 @@ mod tests {
         crate::bitops::xnor_gemm(&w, &x, &mut want,
                                  crate::bitops::XnorImpl::Scalar);
 
-        // full-range tile, both tiers
+        // full-range tile, every dispatch chain (each resolves to the
+        // widest tier this host actually has, so the AVX-512 kernels
+        // are covered wherever the CPU supports them)
         let mut wide = vec![0i32; d * n];
         unsafe { gemm_tile_wide(&w, &x, wide.as_mut_ptr(), n, 0, d, 0, n) };
         assert_eq!(wide, want, "wide d={d} k={k} n={n}");
+        let mut v256 = vec![0i32; d * n];
+        unsafe {
+            gemm_tile_avx2_or_wide(&w, &x, v256.as_mut_ptr(), n, 0, d,
+                                   0, n)
+        };
+        assert_eq!(v256, want, "avx2-or-wide d={d} k={k} n={n}");
+        let mut v512 = vec![0i32; d * n];
+        unsafe {
+            gemm_tile_avx512(&w, &x, v512.as_mut_ptr(), n, 0, d, 0, n)
+        };
+        assert_eq!(v512, want, "avx512 d={d} k={k} n={n}");
         let mut best = vec![0i32; d * n];
         unsafe { gemm_tile_best(&w, &x, best.as_mut_ptr(), n, 0, d, 0, n) };
         assert_eq!(best, want, "best d={d} k={k} n={n}");
@@ -452,9 +844,11 @@ mod tests {
 
     #[test]
     fn tiles_match_scalar_over_ragged_shapes() {
+        // k=513/1023 cross the 16-word (512-bit) step boundary so the
+        // AVX-512 main loops hit their scalar word tails too.
         for (d, k, n) in [(1, 1, 1), (3, 31, 5), (4, 32, 4), (5, 33, 7),
                           (2, 255, 3), (3, 257, 9), (8, 256, 8),
-                          (7, 289, 6)] {
+                          (7, 289, 6), (3, 513, 5), (2, 1023, 6)] {
             tile_vs_scalar(d, k, n, (d * 7919 + k * 31 + n) as u64);
         }
     }

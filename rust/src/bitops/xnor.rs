@@ -22,9 +22,11 @@
 //! * `Blocked2x4` — 2 w-rows x 4 x-rows register blocking
 //! * `Wide`       — portable `[u64; 4]`-wide kernel with 4-column
 //!   blocking (SIMD fallback tier)
-//! * `Simd`       — widest tier the CPU supports (AVX2, else `Wide`)
-//! * `Threaded`   — `Simd` tiles split 2-D (rows x columns) across
-//!   threads, so small-D layers still scale
+//! * `Simd`       — the 256-bit tier (AVX2, else `Wide`)
+//! * `Avx512`     — the 512-bit tier (`vpxorq` + `VPOPCNTDQ`, else the
+//!   AVX512BW nibble-LUT variant, else falls back through `Simd`)
+//! * `Threaded`   — widest-tier tiles split 2-D (rows x columns)
+//!   across threads, so small-D layers still scale
 //! * `Auto`       — resolved per shape (heuristic table, or one-shot
 //!   microbench via [`XnorImpl::calibrate`]) — the plan-time default
 //!
@@ -52,11 +54,16 @@ pub enum XnorImpl {
     Blocked2x4,
     /// Portable `[u64; 4]`-wide kernel (always available).
     Wide,
-    /// Widest SIMD tier detected at runtime (AVX2 -> `Wide` fallback).
+    /// The 256-bit SIMD tier (AVX2 -> `Wide` fallback).
     Simd,
+    /// The 512-bit SIMD tier: `vpxorq` + `VPOPCNTDQ` when the CPU has
+    /// it, else the AVX512BW nibble-LUT variant, else the `Simd`
+    /// fallback chain — always safe to request, detection-gated inside.
+    Avx512,
     /// Shape-aware choice, resolved at dispatch/plan time.
     Auto,
-    /// Simd tiles split across `n` threads (2-D row x column grid).
+    /// Widest-tier tiles split across `n` threads (2-D row x column
+    /// grid).
     Threaded(usize),
 }
 
@@ -81,13 +88,17 @@ fn auto_threads() -> usize {
 impl XnorImpl {
     /// Every single-threaded implementation (differential-fuzz and
     /// ablation coverage; `Auto`/`Threaded` are derived from these).
-    pub const ALL_SINGLE: [XnorImpl; 6] = [
+    /// `Avx512` is in the list unconditionally — on CPUs without
+    /// AVX-512 it falls back through the `Simd` chain, staying
+    /// bit-identical.
+    pub const ALL_SINGLE: [XnorImpl; 7] = [
         XnorImpl::Scalar,
         XnorImpl::Word64,
         XnorImpl::Blocked,
         XnorImpl::Blocked2x4,
         XnorImpl::Wide,
         XnorImpl::Simd,
+        XnorImpl::Avx512,
     ];
 
     /// Implementation label.  Borrowed (allocation-free) for every
@@ -101,9 +112,32 @@ impl XnorImpl {
             XnorImpl::Blocked2x4 => "blocked2x4".into(),
             XnorImpl::Wide => "wide64".into(),
             XnorImpl::Simd => "simd".into(),
+            XnorImpl::Avx512 => "avx512".into(),
             XnorImpl::Auto => "auto".into(),
             XnorImpl::Threaded(n) => format!("threaded{n}").into(),
         }
+    }
+
+    /// Inverse of [`XnorImpl::name`]: parse a stored label back into
+    /// an impl (the calibration cache persists choices by label so the
+    /// file stays human-readable).  Unknown labels — e.g. from a
+    /// future arm — return `None` and the caller re-calibrates.
+    pub fn from_name(name: &str) -> Option<XnorImpl> {
+        Some(match name {
+            "scalar32" => XnorImpl::Scalar,
+            "word64" => XnorImpl::Word64,
+            "blocked" => XnorImpl::Blocked,
+            "blocked2x4" => XnorImpl::Blocked2x4,
+            "wide64" => XnorImpl::Wide,
+            "simd" => XnorImpl::Simd,
+            "avx512" => XnorImpl::Avx512,
+            "auto" => XnorImpl::Auto,
+            other => {
+                let t: usize =
+                    other.strip_prefix("threaded")?.parse().ok()?;
+                XnorImpl::Threaded(t)
+            }
+        })
     }
 
     /// Resolve `Auto` into a concrete impl for a `[D, k] x [N, k]` gemm
@@ -120,6 +154,8 @@ impl XnorImpl {
                 let t = auto_threads();
                 if t > 1 && work >= THREAD_WORDS {
                     XnorImpl::Threaded(t)
+                } else if simd::avx512_available() {
+                    XnorImpl::Avx512
                 } else {
                     XnorImpl::Simd
                 }
@@ -150,6 +186,9 @@ impl XnorImpl {
             XnorImpl::Wide,
             XnorImpl::Simd,
         ];
+        if simd::avx512_available() {
+            candidates.push(XnorImpl::Avx512);
+        }
         let t = auto_threads();
         let pool = (t > 1).then(|| ThreadPool::new(t));
         if pool.is_some() {
@@ -377,8 +416,16 @@ fn gemm_wide(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
 fn gemm_simd(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
     // SAFETY: out covers the full [rows, n] block, single caller.
     unsafe {
-        simd::gemm_tile_best(w, x, out.as_mut_ptr(), x.rows, 0, w.rows,
-                             0, x.rows);
+        simd::gemm_tile_avx2_or_wide(w, x, out.as_mut_ptr(), x.rows, 0,
+                                     w.rows, 0, x.rows);
+    }
+}
+
+fn gemm_avx512(w: &PackedMatrix, x: &PackedMatrix, out: &mut [i32]) {
+    // SAFETY: out covers the full [rows, n] block, single caller.
+    unsafe {
+        simd::gemm_tile_avx512(w, x, out.as_mut_ptr(), x.rows, 0,
+                               w.rows, 0, x.rows);
     }
 }
 
@@ -475,6 +522,7 @@ pub fn xnor_gemm(
         XnorImpl::Blocked2x4 => gemm_blocked2x4(w, x, out),
         XnorImpl::Wide => gemm_wide(w, x, out),
         XnorImpl::Simd => gemm_simd(w, x, out),
+        XnorImpl::Avx512 => gemm_avx512(w, x, out),
         XnorImpl::Threaded(t) => gemm_tiled(w, x, out, t, None),
         XnorImpl::Auto => unreachable!("resolve() returns concrete impls"),
     }
@@ -692,14 +740,31 @@ mod tests {
     }
 
     #[test]
+    fn name_round_trips_through_from_name() {
+        let mut all = all_impls();
+        all.push(XnorImpl::Threaded(16));
+        for imp in all {
+            assert_eq!(XnorImpl::from_name(&imp.name()), Some(imp));
+        }
+        assert_eq!(XnorImpl::from_name("avx1024"), None);
+        assert_eq!(XnorImpl::from_name("threadedx"), None);
+        assert_eq!(XnorImpl::from_name(""), None);
+    }
+
+    #[test]
     fn auto_resolves_to_concrete() {
-        // tiny problem -> single-thread Simd
-        assert_eq!(XnorImpl::Auto.resolve(4, 32, 4), XnorImpl::Simd);
+        // tiny problem -> the widest single-thread SIMD tier
+        let want = if simd::avx512_available() {
+            XnorImpl::Avx512
+        } else {
+            XnorImpl::Simd
+        };
+        assert_eq!(XnorImpl::Auto.resolve(4, 32, 4), want);
         // huge problem -> Threaded iff the host has >1 core
         let r = XnorImpl::Auto.resolve(512, 4608, 4096);
         match r {
             XnorImpl::Threaded(t) => assert!(t >= 2),
-            XnorImpl::Simd => {
+            XnorImpl::Simd | XnorImpl::Avx512 => {
                 assert_eq!(super::auto_threads(), 1, "expected Threaded")
             }
             other => panic!("unexpected {other:?}"),

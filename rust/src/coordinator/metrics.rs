@@ -72,7 +72,6 @@ impl Histogram {
 }
 
 /// Counters for one replica worker in the pool.
-#[derive(Default)]
 pub struct ReplicaMetrics {
     /// Batches executed by this replica.
     pub batches: AtomicU64,
@@ -94,6 +93,26 @@ pub struct ReplicaMetrics {
     /// dispatcher deprioritizes restarting replicas; every replica
     /// restarting at once opens the router's circuit.
     pub restarting: AtomicU64,
+    /// NUMA node this replica's worker pinned itself to
+    /// ([`super::NumaPolicy::RoundRobin`]); [`u64::MAX`] = unpinned
+    /// (policy off, no topology, or the pin failed).
+    pub numa_node: AtomicU64,
+}
+
+impl Default for ReplicaMetrics {
+    fn default() -> Self {
+        Self {
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
+            infer_latency: Histogram::default(),
+            restarts: AtomicU64::new(0),
+            restarting: AtomicU64::new(0),
+            // Sentinel, not zero: node 0 is a real node.
+            numa_node: AtomicU64::new(u64::MAX),
+        }
+    }
 }
 
 /// All coordinator counters.  `default()` builds a router-wide-only
@@ -149,6 +168,8 @@ pub struct ReplicaSnapshot {
     pub restarts: u64,
     /// Whether the replica is currently down, mid-respawn.
     pub restarting: bool,
+    /// NUMA node the worker is pinned to (`None` = unpinned).
+    pub numa_node: Option<u64>,
 }
 
 /// A point-in-time copy for reporting.
@@ -227,6 +248,10 @@ impl Metrics {
                     infer_p99_us: r.infer_latency.quantile_us(0.99),
                     restarts: r.restarts.load(Ordering::Relaxed),
                     restarting: r.restarting.load(Ordering::Relaxed) != 0,
+                    numa_node: match r.numa_node.load(Ordering::Relaxed) {
+                        u64::MAX => None,
+                        n => Some(n),
+                    },
                 })
                 .collect(),
         }
@@ -313,6 +338,13 @@ impl Metrics {
                 r.restarts,
                 u64::from(r.restarting),
             ));
+            // Only pinned replicas emit the placement gauge — an
+            // absent series is "unpinned", not "node 0".
+            if let Some(node) = r.numa_node {
+                out.push_str(&format!(
+                    "bitkernel_replica_numa_node{rl} {node}\n"
+                ));
+            }
         }
         out
     }
@@ -377,6 +409,28 @@ mod tests {
         assert!(labelled.contains("bitkernel_batches_total{model=\"bnn\"} 0"),
                 "{labelled}");
         assert!(!labelled.contains("}{"), "{labelled}");
+    }
+
+    #[test]
+    fn numa_gauge_absent_until_pinned() {
+        let m = Metrics::with_replicas(2);
+        assert!(m.snapshot().replicas.iter()
+                    .all(|r| r.numa_node.is_none()));
+        assert!(!m.render_prometheus()
+                     .contains("bitkernel_replica_numa_node"));
+        // Replica 1 pins to node 0: the gauge appears for it only,
+        // and node id 0 is distinguishable from "unpinned".
+        m.replicas[1].numa_node.store(0, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.replicas[0].numa_node, None);
+        assert_eq!(s.replicas[1].numa_node, Some(0));
+        let text = m.render_prometheus();
+        assert!(text.contains(
+            "bitkernel_replica_numa_node{replica=\"1\"} 0"
+        ), "{text}");
+        assert!(!text.contains(
+            "bitkernel_replica_numa_node{replica=\"0\"}"
+        ), "{text}");
     }
 
     #[test]

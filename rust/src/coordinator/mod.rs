@@ -28,6 +28,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod numa;
 pub mod router;
 
 pub use backend::{Backend, MockBackend, NativeBackend, PjrtBackend};
@@ -35,6 +36,7 @@ pub use batcher::{
     BatchBuffer, BatcherConfig, ContinuousBatcher, DynamicBatcher,
 };
 pub use metrics::{Metrics, MetricsSnapshot, ReplicaMetrics, ReplicaSnapshot};
+pub use numa::{NumaNode, NumaPolicy};
 pub use router::{default_replicas, BackendFactory, InferReply, ReplyError,
                  RequestError, Router, RouterConfig, SubmitError,
                  SubmitOptions};

@@ -1,0 +1,291 @@
+//! NUMA topology discovery + replica core pinning.
+//!
+//! On multi-socket hosts a replica whose worker thread migrates across
+//! nodes pays remote-memory latency on every gemm: its `Session`
+//! scratch and its [`BatchBuffer`](super::BatchBuffer) were first
+//! touched — hence physically placed — wherever the thread happened to
+//! run at construction time.  The fix is placement, not allocation:
+//! pin each replica worker to ONE node's cores *before* it builds its
+//! backend and batch buffer, so first-touch puts every hot page on the
+//! node the thread will run on for its whole life (respawns rebuild on
+//! the same pinned thread, so placement survives supervision).
+//!
+//! Topology comes from sysfs (`/sys/devices/system/node/node*/cpulist`
+//! — kernel ABI, stable text like `0-7,16-23`), and pinning is a
+//! direct `sched_setaffinity` syscall declared inline: the container
+//! carries no `libc` crate, so this module uses the same raw
+//! `extern "C"` idiom as [`crate::model::Mmap`].  Non-linux builds
+//! see an empty topology and no-op pinning — callers never branch on
+//! platform.
+//!
+//! Policy ([`NumaPolicy`], wired through
+//! [`RouterConfig::numa_policy`](super::RouterConfig::numa_policy) and
+//! `serve --numa`): `Off` keeps today's behavior; `RoundRobin` deals
+//! nodes to replicas in order (`replica r -> node r % N`), which
+//! spreads the pool evenly across sockets and keeps each replica's
+//! working set local.  Each replica's assignment is exported as
+//! `bitkernel_replica_numa_node` on `/metrics`.
+
+use std::io;
+use std::path::Path;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::c_int;
+
+    /// u64 words in the affinity mask: 16 * 64 = 1024 cpus, the
+    /// kernel's default CPU_SETSIZE.
+    pub const MASK_WORDS: usize = 16;
+
+    extern "C" {
+        /// pid 0 = the calling thread (glibc routes this to the
+        /// per-thread syscall, which is exactly what pinning wants).
+        pub fn sched_setaffinity(
+            pid: c_int,
+            cpusetsize: usize,
+            mask: *const u64,
+        ) -> c_int;
+        pub fn sched_getaffinity(
+            pid: c_int,
+            cpusetsize: usize,
+            mask: *mut u64,
+        ) -> c_int;
+    }
+}
+
+/// One NUMA node: its sysfs id and the cpus it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaNode {
+    /// Node id (the `N` in `/sys/devices/system/node/nodeN`).
+    pub id: usize,
+    /// The cpus on this node, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// How the router places replica workers on NUMA nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NumaPolicy {
+    /// No pinning — threads float wherever the scheduler puts them
+    /// (the pre-NUMA behavior, and the default).
+    #[default]
+    Off,
+    /// Deal nodes to replicas round-robin (`replica r -> node r % N`)
+    /// and pin each worker to its node's cores before it builds its
+    /// backend, so first-touch places its buffers locally.
+    RoundRobin,
+}
+
+/// Parse a sysfs cpulist (`"0-7,16-23"`, trailing newline ok) into the
+/// cpu ids it names, ascending.  Malformed segments are skipped — the
+/// kernel won't produce them, and a partial answer beats a panic in a
+/// serving process reading an exotic sysfs.
+pub fn parse_cpulist(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for seg in list.trim().split(',') {
+        let seg = seg.trim();
+        if seg.is_empty() {
+            continue;
+        }
+        match seg.split_once('-') {
+            Some((lo, hi)) => {
+                let (Ok(lo), Ok(hi)) =
+                    (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                else {
+                    continue;
+                };
+                if lo <= hi && hi - lo < 4096 {
+                    cpus.extend(lo..=hi);
+                }
+            }
+            None => {
+                if let Ok(c) = seg.parse::<usize>() {
+                    cpus.push(c);
+                }
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// Read one node's cpulist file.
+fn node_cpus(dir: &Path) -> Option<Vec<usize>> {
+    let text = std::fs::read_to_string(dir.join("cpulist")).ok()?;
+    let cpus = parse_cpulist(&text);
+    (!cpus.is_empty()).then_some(cpus)
+}
+
+/// Discover the host's NUMA topology from
+/// `/sys/devices/system/node/node*/cpulist`, ascending by node id.
+/// Empty on non-linux hosts, containers that hide sysfs, and anything
+/// else unreadable — "no topology" rather than an error, so callers
+/// degrade to unpinned.
+pub fn nodes() -> Vec<NumaNode> {
+    nodes_from("/sys/devices/system/node")
+}
+
+/// [`nodes`] over an arbitrary sysfs root (tests point this at a
+/// fixture directory).
+pub fn nodes_from(root: impl AsRef<Path>) -> Vec<NumaNode> {
+    let Ok(entries) = std::fs::read_dir(root.as_ref()) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(idx) = name.strip_prefix("node") else { continue };
+        let Ok(id) = idx.parse::<usize>() else { continue };
+        if let Some(cpus) = node_cpus(&entry.path()) {
+            out.push(NumaNode { id, cpus });
+        }
+    }
+    out.sort_by_key(|n| n.id);
+    out
+}
+
+/// Pin the calling thread to exactly `cpus`.  An empty set is
+/// `InvalidInput`; cpus past the 1024-bit kernel mask are
+/// `InvalidInput` too (no silent truncation).  On non-linux targets
+/// this is a no-op `Ok` — there is nothing to pin to, and [`nodes`] is
+/// empty there anyway.
+pub fn pin_current_thread(cpus: &[usize]) -> io::Result<()> {
+    if cpus.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "empty cpu set",
+        ));
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; sys::MASK_WORDS];
+        for &c in cpus {
+            if c >= sys::MASK_WORDS * 64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("cpu {c} exceeds the affinity mask"),
+                ));
+            }
+            mask[c / 64] |= 1u64 << (c % 64);
+        }
+        // SAFETY: mask is a live [u64; 16] and the size matches; pid 0
+        // targets only the calling thread.
+        let rc = unsafe {
+            sys::sched_setaffinity(
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr(),
+            )
+        };
+        if rc != 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+/// The cpus the calling thread may currently run on (empty on
+/// non-linux targets or when the syscall fails).  Diagnostic
+/// counterpart to [`pin_current_thread`].
+pub fn current_affinity() -> Vec<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; sys::MASK_WORDS];
+        // SAFETY: mask is a live, writable [u64; 16] of matching size.
+        let rc = unsafe {
+            sys::sched_getaffinity(
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_mut_ptr(),
+            )
+        };
+        if rc == 0 {
+            return mask
+                .iter()
+                .enumerate()
+                .flat_map(|(w, &bits)| {
+                    (0..64).filter_map(move |b| {
+                        ((bits >> b) & 1 == 1).then_some(w * 64 + b)
+                    })
+                })
+                .collect();
+        }
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_singles_and_junk() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4,6-7\n"), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(" 2 , 0 - 1 "), vec![0, 1, 2]);
+        assert_eq!(parse_cpulist("3,1-2,2-3"), vec![1, 2, 3]); // dedup
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("x,7-4,1"), vec![1]); // junk skipped
+    }
+
+    #[test]
+    fn fixture_topology_round_trips() {
+        let root = std::env::temp_dir()
+            .join(format!("bk-numa-fixture-{}", std::process::id()));
+        for (node, list) in
+            [("node1", "8-15\n"), ("node0", "0-3,4-7\n")]
+        {
+            let d = root.join(node);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        // Non-node entries are ignored.
+        std::fs::create_dir_all(root.join("possible")).unwrap();
+        let nodes = nodes_from(&root);
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].id, 0);
+        assert_eq!(nodes[0].cpus, (0..8).collect::<Vec<_>>());
+        assert_eq!(nodes[1].id, 1);
+        assert_eq!(nodes[1].cpus, (8..16).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_sysfs_means_no_topology() {
+        assert!(nodes_from("/definitely/not/sysfs").is_empty());
+    }
+
+    #[test]
+    fn empty_pin_is_rejected() {
+        assert!(pin_current_thread(&[]).is_err());
+        // Out-of-mask cpus are rejected where a mask exists at all.
+        #[cfg(target_os = "linux")]
+        assert!(pin_current_thread(&[usize::MAX]).is_err());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn pin_round_trips_through_getaffinity() {
+        // Pin a scratch thread (not the test runner's) to the first
+        // cpu this process may use, and read the mask back.
+        let allowed = current_affinity();
+        assert!(!allowed.is_empty(), "getaffinity failed");
+        let target = allowed[0];
+        std::thread::spawn(move || {
+            pin_current_thread(&[target]).unwrap();
+            assert_eq!(current_affinity(), vec![target]);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn real_topology_is_sane_when_present() {
+        // Containers may hide /sys — only assert when it's there.
+        for n in nodes() {
+            assert!(!n.cpus.is_empty());
+        }
+    }
+}

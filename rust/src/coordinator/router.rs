@@ -80,6 +80,7 @@ use crate::nn::argmax;
 use super::backend::Backend;
 use super::batcher::{BatchBuffer, BatcherConfig, ContinuousBatcher};
 use super::metrics::Metrics;
+use super::numa::{self, NumaNode, NumaPolicy};
 
 /// A completed inference.
 #[derive(Debug, Clone)]
@@ -282,6 +283,11 @@ pub struct RouterConfig {
     pub replicas: usize,
     /// Batch-formation policy.
     pub batcher: BatcherConfig,
+    /// NUMA placement for replica workers (`serve --numa`).  With
+    /// [`NumaPolicy::RoundRobin`] each worker pins itself to one
+    /// node's cores BEFORE constructing its backend and batch buffer,
+    /// so first-touch places its hot pages on the node it will run on.
+    pub numa_policy: NumaPolicy,
 }
 
 impl Default for RouterConfig {
@@ -290,6 +296,7 @@ impl Default for RouterConfig {
             queue_cap: 256,
             replicas: default_replicas(),
             batcher: BatcherConfig::default(),
+            numa_policy: NumaPolicy::Off,
         }
     }
 }
@@ -364,6 +371,24 @@ impl Router {
         let (ready_tx, ready_rx) =
             mpsc::channel::<anyhow::Result<ReplicaInfo>>();
 
+        // NUMA topology is read once here; each worker gets its node
+        // assignment up front (round-robin over the discovered nodes).
+        // No topology — non-linux, hidden sysfs, single node with the
+        // policy off — degrades to unpinned workers, never an error.
+        let numa_nodes: Vec<NumaNode> = match cfg.numa_policy {
+            NumaPolicy::Off => Vec::new(),
+            NumaPolicy::RoundRobin => {
+                let nodes = numa::nodes();
+                if nodes.is_empty() {
+                    crate::log_warn!(
+                        "NUMA policy requested but no topology found; \
+                         replicas run unpinned"
+                    );
+                }
+                nodes
+            }
+        };
+
         // Per-replica dispatch channels are bounded to ONE queued batch:
         // enough to keep a replica busy back to back, small enough that
         // saturation propagates to the admission queue (backpressure).
@@ -376,10 +401,14 @@ impl Router {
             let f = Arc::clone(&factory);
             let m = Arc::clone(&metrics);
             let rtx = ready_tx.clone();
+            let node = (!numa_nodes.is_empty())
+                .then(|| numa_nodes[r % numa_nodes.len()].clone());
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bk-replica{r}"))
-                    .spawn(move || replica_loop(r, &*f, brx, &m, rtx))
+                    .spawn(move || {
+                        replica_loop(r, &*f, brx, &m, rtx, node)
+                    })
                     .expect("spawn replica worker"),
             );
         }
@@ -717,7 +746,35 @@ fn replica_loop(
     brx: mpsc::Receiver<Batch>,
     m: &Metrics,
     ready_tx: mpsc::Sender<anyhow::Result<ReplicaInfo>>,
+    node: Option<NumaNode>,
 ) {
+    // Pin BEFORE constructing anything: the backend's session scratch
+    // and the batch buffer below are first-touched — hence physically
+    // placed — by this thread, so pinning first makes every hot page
+    // node-local.  Respawns rebuild on this same pinned thread, so
+    // placement survives supervision.  A failed pin (shrunk cgroup
+    // cpuset, exotic kernel) degrades to unpinned, never to a dead
+    // replica.
+    if let Some(node) = &node {
+        match numa::pin_current_thread(&node.cpus) {
+            Ok(()) => {
+                m.replicas[replica]
+                    .numa_node
+                    .store(node.id as u64, Ordering::Relaxed);
+                crate::log_info!(
+                    "replica {replica} pinned to NUMA node {} \
+                     ({} cpus)",
+                    node.id,
+                    node.cpus.len()
+                );
+            }
+            Err(e) => crate::log_warn!(
+                "replica {replica}: pin to NUMA node {} failed: {e}; \
+                 running unpinned",
+                node.id
+            ),
+        }
+    }
     let mut backend = match factory(replica) {
         Ok(b) => {
             let _ = ready_tx.send(Ok(ReplicaInfo {
@@ -1097,6 +1154,7 @@ mod tests {
                     max_batch: 8,
                     max_delay: Duration::from_millis(50),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -1124,6 +1182,7 @@ mod tests {
                     max_batch: 1,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -1154,6 +1213,7 @@ mod tests {
                     max_batch: 1,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -1216,6 +1276,38 @@ mod tests {
         let reply = router.submit_wait(vec![0.5; 70]).unwrap();
         assert_eq!(reply.logits.len(), 3);
         assert_eq!(router.metrics().snapshot().completed, 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn numa_round_robin_starts_serves_and_labels() {
+        let router = Router::start(
+            |_| Ok(Box::new(MockBackend::new(4, 0)) as Box<dyn Backend>),
+            RouterConfig {
+                replicas: 2,
+                numa_policy: NumaPolicy::RoundRobin,
+                ..RouterConfig::default()
+            },
+        )
+        .unwrap();
+        let reply = router.submit_wait(image(0.5)).unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        let snap = router.metrics().snapshot();
+        let nodes = numa::nodes();
+        if nodes.is_empty() {
+            // No topology (non-linux, hidden sysfs): policy degrades
+            // to unpinned, never an error.
+            assert!(snap.replicas.iter().all(|r| r.numa_node.is_none()));
+        } else {
+            for (r, rs) in snap.replicas.iter().enumerate() {
+                // A pin can fail under restricted cgroup cpusets (the
+                // worker then runs unpinned); when it lands, the label
+                // must be the round-robin assignment.
+                if let Some(n) = rs.numa_node {
+                    assert_eq!(n, nodes[r % nodes.len()].id as u64);
+                }
+            }
+        }
         router.shutdown();
     }
 
@@ -1306,6 +1398,7 @@ mod tests {
                     max_batch: 1,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -1354,6 +1447,7 @@ mod tests {
                     max_batch: 1,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -1436,6 +1530,7 @@ mod tests {
                     max_batch: 1,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();

@@ -106,6 +106,9 @@ fn parse_kernel(name: &str) -> Result<EngineKernel> {
         // Both the flag spelling and the impl's reported label work.
         "xnor-wide" | "xnor-wide64" => EngineKernel::Xnor(XnorImpl::Wide),
         "xnor-simd" => EngineKernel::Xnor(XnorImpl::Simd),
+        // Safe everywhere: falls back through AVX512BW/AVX2/wide when
+        // VPOPCNTDQ is absent.
+        "xnor-avx512" => EngineKernel::Xnor(XnorImpl::Avx512),
         "control" => EngineKernel::Control,
         "optimized" => EngineKernel::Optimized,
         other => {
@@ -179,6 +182,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                    default: Some("0"),
                    help: "LRU-demote compiled pipelines beyond this many \
                           models (0 = unlimited)" },
+        FlagSpec { name: "numa", takes_value: false, default: None,
+                   help: "pin replica workers round-robin across NUMA \
+                          nodes (sysfs topology; first-touch places \
+                          each replica's buffers on its node)" },
         COMMON[1].clone(),
     ];
     let args = Args::parse(argv, &specs)?;
@@ -212,6 +219,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         batcher: BatcherConfig {
             max_batch: batch,
             max_delay: std::time::Duration::from_millis(delay as u64),
+        },
+        numa_policy: if args.has("numa") {
+            bitkernel::coordinator::NumaPolicy::RoundRobin
+        } else {
+            bitkernel::coordinator::NumaPolicy::Off
         },
     };
 
@@ -519,9 +531,9 @@ fn cmd_classify(argv: &[String]) -> Result<()> {
         FlagSpec { name: "count", takes_value: true, default: Some("8"),
                    help: "number of images" },
         FlagSpec { name: "kernel", takes_value: true, default: Some("xnor"),
-                   help: "xnor(-auto)|xnor-simd|xnor-wide|xnor-blocked|\
-                          xnor-blocked2x4|xnor-scalar|xnor-word64|\
-                          xnor-threaded<n>|control|optimized" },
+                   help: "xnor(-auto)|xnor-avx512|xnor-simd|xnor-wide|\
+                          xnor-blocked|xnor-blocked2x4|xnor-scalar|\
+                          xnor-word64|xnor-threaded<n>|control|optimized" },
         FlagSpec { name: "weights", takes_value: true, default: Some("small"),
                    help: "weight set" },
         COMMON[1].clone(),

@@ -1,0 +1,486 @@
+//! Persistent xnor-gemm calibration cache.
+//!
+//! `BITKERNEL_CALIBRATE=1` makes plan compilation microbench each
+//! distinct `Auto` gemm shape ([`XnorImpl::calibrate`]) instead of
+//! using the shape heuristic.  Before this cache every plan build paid
+//! that cost again — including rebuilding the *same* model on
+//! `PUT /models/{name}` reloads, lazy-mount first requests, and LRU
+//! re-promotions, where the answer cannot have changed.  Now the
+//! result of each microbench lands in a versioned sidecar file keyed
+//! by
+//!
+//! * a **CPU fingerprint** (arch + detected SIMD tiers + thread
+//!   count — a cache copied to different hardware is ignored, not
+//!   trusted),
+//! * the **impl set** (the candidate arms [`XnorImpl::calibrate`]
+//!   races — a new kernel tier invalidates old winners so it gets a
+//!   chance to win), and
+//! * the **D/K/N gemm shape**,
+//!
+//! so a warm cache makes plan builds perform **zero** microbenches.
+//! An in-memory layer in front of the file dedupes within the process
+//! even when persistence is disabled.
+//!
+//! Env knobs (read once, at first use of the global cache):
+//!
+//! * `BITKERNEL_CALIB_CACHE=<path>` — sidecar file location.  Default:
+//!   `$XDG_CACHE_HOME/bitkernel/calib-v1` (or `$HOME/.cache/...`,
+//!   or the temp dir).  `0`/`off` disables persistence entirely
+//!   (in-memory dedupe only).
+//! * `BITKERNEL_CALIB_INVALIDATE=1` — wipe the sidecar before first
+//!   use (the explicit invalidation path; [`CalibCache::invalidate`]
+//!   is the programmatic one).
+//!
+//! The file is line-oriented UTF-8 so it diffs and greps:
+//!
+//! ```text
+//! # bitkernel calib v1
+//! x86_64|avx2|t8|blocked,...,threaded8|64x288x1024|threaded8
+//! ```
+//!
+//! Lines whose version/fingerprint/impl-set don't match the running
+//! process are skipped (never deleted — one file can serve
+//! heterogeneous hosts on a shared home dir).  Appends are line-atomic
+//! (`O_APPEND`), and every write is best-effort: an unwritable cache
+//! degrades to per-process dedupe, never to an error.
+//!
+//! `bitkernel_calibrations_total` on `/metrics` counts the microbenches
+//! this process actually ran — a reload hammering the cache holds it
+//! flat, which is exactly what the lifecycle tests pin.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::bitops::{avx2_available, avx512bw_available,
+                    avx512_vpopcnt_available, XnorImpl};
+
+/// Cache format version — bump on any change to the line layout or
+/// the meaning of a fingerprint component; old files are then ignored
+/// wholesale.
+const VERSION: &str = "v1";
+
+/// Microbenches actually run by this process (any cache instance).
+/// Exposed as `bitkernel_calibrations_total`; a warm cache keeps this
+/// flat across plan rebuilds.
+static CALIBRATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Total microbenches run process-wide (the
+/// `bitkernel_calibrations_total` counter).
+pub fn calibrations_total() -> u64 {
+    CALIBRATIONS.load(Ordering::Relaxed)
+}
+
+/// Prometheus-style exposition of the calibration counter (appended to
+/// `/metrics` by the service layer).
+pub fn render_metrics() -> String {
+    crate::coordinator::Metrics::render_series(
+        "bitkernel_calibrations_total",
+        "",
+        calibrations_total(),
+    )
+}
+
+/// The hardware identity calibration results are valid for: arch, the
+/// detected SIMD gemm tiers, and the thread count `Auto`/`Threaded`
+/// would use.  Any of these changing (new machine, container with a
+/// different cpuset) makes old winners meaningless.
+pub fn cpu_fingerprint() -> String {
+    let mut tiers = Vec::new();
+    if avx512_vpopcnt_available() {
+        tiers.push("avx512vpopcntdq");
+    }
+    if avx512bw_available() {
+        tiers.push("avx512bw");
+    }
+    if avx2_available() {
+        tiers.push("avx2");
+    }
+    if tiers.is_empty() {
+        tiers.push("portable");
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    format!("{}|{}|t{threads}", std::env::consts::ARCH, tiers.join("+"))
+}
+
+/// The candidate set a cached winner was picked from.  Derived from
+/// [`XnorImpl::ALL_SINGLE`] so adding a kernel arm automatically
+/// invalidates every cached choice (the new arm deserves a race).
+pub fn impl_set() -> String {
+    XnorImpl::ALL_SINGLE
+        .iter()
+        .map(|i| i.name().into_owned())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// One calibration cache: an in-memory shape map in front of an
+/// optional sidecar file.  The process-wide instance is [`global`];
+/// tests build their own with explicit paths (no env mutation).
+pub struct CalibCache {
+    path: Option<PathBuf>,
+    cpu: String,
+    impls: String,
+    mem: Mutex<HashMap<(usize, usize, usize), XnorImpl>>,
+}
+
+impl CalibCache {
+    /// Open a cache over `path` (`None` = in-memory only), loading
+    /// every persisted entry whose version, CPU fingerprint, and impl
+    /// set match this process.  Missing or malformed files are treated
+    /// as empty.
+    pub fn open(path: Option<PathBuf>) -> CalibCache {
+        let cache = CalibCache {
+            path,
+            cpu: cpu_fingerprint(),
+            impls: impl_set(),
+            mem: Mutex::new(HashMap::new()),
+        };
+        if let Some(p) = cache.path.as_deref() {
+            let mut mem = cache.mem.lock().unwrap();
+            for (shape, imp) in cache.load_matching(p) {
+                mem.insert(shape, imp);
+            }
+            drop(mem);
+        }
+        cache
+    }
+
+    /// Parse `path`, returning only the entries valid for this
+    /// process (header version + fingerprints must match).
+    fn load_matching(
+        &self,
+        path: &Path,
+    ) -> Vec<((usize, usize, usize), XnorImpl)> {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return Vec::new();
+        };
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        if header.trim() != format!("# bitkernel calib {VERSION}") {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for line in lines {
+            let Some(entry) = self.parse_line(line) else { continue };
+            out.push(entry);
+        }
+        out
+    }
+
+    /// One entry line: `<cpu>|<impls>|<d>x<k>x<n>|<winner>`, where
+    /// `<cpu>` itself contains two `|`s (arch|tiers|tN).  Returns
+    /// `None` for comments, foreign fingerprints, and malformed lines.
+    fn parse_line(
+        &self,
+        line: &str,
+    ) -> Option<((usize, usize, usize), XnorImpl)> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return None;
+        }
+        let rest = line.strip_prefix(&self.cpu)?.strip_prefix('|')?;
+        let rest = rest.strip_prefix(&self.impls)?.strip_prefix('|')?;
+        let (shape, winner) = rest.split_once('|')?;
+        let mut dims = shape.split('x');
+        let d: usize = dims.next()?.parse().ok()?;
+        let k: usize = dims.next()?.parse().ok()?;
+        let n: usize = dims.next()?.parse().ok()?;
+        if dims.next().is_some() {
+            return None;
+        }
+        let imp = XnorImpl::from_name(winner)?;
+        // `Auto` as a stored winner would recurse at plan time —
+        // calibrate never returns it, so treat it as corruption.
+        if imp == XnorImpl::Auto {
+            return None;
+        }
+        Some(((d, k, n), imp))
+    }
+
+    /// Resolve a shape through the cache, running `bench` (and
+    /// persisting its winner) only on a miss.
+    pub fn resolve_with(
+        &self,
+        d: usize,
+        k: usize,
+        n: usize,
+        bench: impl FnOnce() -> XnorImpl,
+    ) -> XnorImpl {
+        if let Some(&hit) = self.mem.lock().unwrap().get(&(d, k, n)) {
+            return hit;
+        }
+        // Bench OUTSIDE the lock: concurrent plan builds of different
+        // shapes shouldn't serialize on a multi-ms microbench.  Two
+        // racers on the same shape both bench and the last write wins
+        // — both winners are valid answers for this hardware.
+        let imp = bench();
+        CALIBRATIONS.fetch_add(1, Ordering::Relaxed);
+        self.mem.lock().unwrap().insert((d, k, n), imp);
+        self.append(d, k, n, imp);
+        imp
+    }
+
+    /// Resolve a shape, microbenching via [`XnorImpl::calibrate`] on a
+    /// miss — the plan-compilation entry point.
+    pub fn resolve(&self, d: usize, k: usize, n: usize) -> XnorImpl {
+        self.resolve_with(d, k, n, || XnorImpl::calibrate(d, k, n))
+    }
+
+    /// Best-effort append of one entry (creates the file + header on
+    /// first write).  IO failure degrades to in-memory dedupe.
+    fn append(&self, d: usize, k: usize, n: usize, imp: XnorImpl) {
+        let Some(path) = self.path.as_deref() else { return };
+        let write = || -> std::io::Result<()> {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            let fresh = !path.exists();
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)?;
+            let mut line = String::new();
+            if fresh {
+                line.push_str(&format!("# bitkernel calib {VERSION}\n"));
+            }
+            line.push_str(&format!(
+                "{}|{}|{d}x{k}x{n}|{}\n",
+                self.cpu,
+                self.impls,
+                imp.name()
+            ));
+            f.write_all(line.as_bytes())
+        };
+        if let Err(e) = write() {
+            crate::log_warn!(
+                "calibration cache write to {} failed: {e} \
+                 (continuing in-memory)",
+                path.display()
+            );
+        }
+    }
+
+    /// Number of shapes currently cached (memory layer).
+    pub fn len(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+
+    /// True when no shape has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Explicit invalidation: clear the memory layer and delete the
+    /// sidecar file, so the next resolve re-benches from scratch.
+    pub fn invalidate(&self) -> std::io::Result<()> {
+        self.mem.lock().unwrap().clear();
+        match self.path.as_deref() {
+            Some(p) => match std::fs::remove_file(p) {
+                Err(e) if e.kind() != std::io::ErrorKind::NotFound => {
+                    Err(e)
+                }
+                _ => Ok(()),
+            },
+            None => Ok(()),
+        }
+    }
+
+    /// The sidecar path this cache persists to (`None` = memory-only).
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+/// Default sidecar location: the user cache dir, falling back to the
+/// system temp dir (always writable in containers).
+fn default_path() -> PathBuf {
+    let base = std::env::var_os("XDG_CACHE_HOME")
+        .map(PathBuf::from)
+        .or_else(|| {
+            std::env::var_os("HOME")
+                .map(|h| PathBuf::from(h).join(".cache"))
+        })
+        .unwrap_or_else(std::env::temp_dir);
+    base.join("bitkernel").join(format!("calib-{VERSION}"))
+}
+
+/// The process-wide cache, configured from the env on first use.
+pub fn global() -> &'static CalibCache {
+    static GLOBAL: OnceLock<CalibCache> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let path = match std::env::var("BITKERNEL_CALIB_CACHE") {
+            Ok(v) if v == "0" || v.eq_ignore_ascii_case("off") => None,
+            Ok(v) if !v.is_empty() => Some(PathBuf::from(v)),
+            _ => Some(default_path()),
+        };
+        let cache = CalibCache::open(path);
+        if std::env::var_os("BITKERNEL_CALIB_INVALIDATE")
+            .is_some_and(|v| v != "0")
+        {
+            let _ = cache.invalidate();
+        }
+        cache
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("bitkernel-calib-test-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn memory_layer_dedupes_benches() {
+        let cache = CalibCache::open(None);
+        let runs = AtomicUsize::new(0);
+        let bench = || {
+            runs.fetch_add(1, Ordering::Relaxed);
+            XnorImpl::Wide
+        };
+        assert_eq!(cache.resolve_with(4, 64, 8, bench), XnorImpl::Wide);
+        // Second resolve of the same shape: zero benches.
+        let again = cache.resolve_with(4, 64, 8, || {
+            runs.fetch_add(1, Ordering::Relaxed);
+            XnorImpl::Scalar
+        });
+        assert_eq!(again, XnorImpl::Wide);
+        assert_eq!(runs.load(Ordering::Relaxed), 1);
+        // A different shape benches once more.
+        cache.resolve_with(5, 64, 8, || {
+            runs.fetch_add(1, Ordering::Relaxed);
+            XnorImpl::Simd
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn round_trips_through_the_sidecar_file() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let cache = CalibCache::open(Some(path.clone()));
+        cache.resolve_with(64, 288, 1024, || XnorImpl::Threaded(8));
+        cache.resolve_with(3, 33, 7, || XnorImpl::Blocked2x4);
+
+        // A fresh instance over the same file: warm, zero benches.
+        let warm = CalibCache::open(Some(path.clone()));
+        assert_eq!(warm.len(), 2);
+        let hit = warm.resolve_with(64, 288, 1024, || {
+            panic!("warm cache must not bench")
+        });
+        assert_eq!(hit, XnorImpl::Threaded(8));
+        let hit = warm
+            .resolve_with(3, 33, 7, || panic!("warm cache must not bench"));
+        assert_eq!(hit, XnorImpl::Blocked2x4);
+
+        // The file is the documented line format.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# bitkernel calib v1\n"), "{text}");
+        assert!(text.contains("|64x288x1024|threaded8"), "{text}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn foreign_fingerprints_and_junk_are_skipped() {
+        let path = tmp("foreign");
+        std::fs::write(
+            &path,
+            format!(
+                "# bitkernel calib v1\n\
+                 otherarch|sse2|t2|{}|4x64x8|blocked\n\
+                 {}|{}|4x64x8|no-such-impl\n\
+                 {}|{}|4x64x8|auto\n\
+                 {}|{}|4x64|blocked\n\
+                 not a cache line\n",
+                impl_set(),
+                cpu_fingerprint(),
+                impl_set(),
+                cpu_fingerprint(),
+                impl_set(),
+                cpu_fingerprint(),
+                impl_set(),
+            ),
+        )
+        .unwrap();
+        let cache = CalibCache::open(Some(path.clone()));
+        assert_eq!(cache.len(), 0, "every line should have been skipped");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version_mismatch_ignores_the_whole_file() {
+        let path = tmp("version");
+        std::fs::write(
+            &path,
+            format!(
+                "# bitkernel calib v0\n{}|{}|4x64x8|blocked\n",
+                cpu_fingerprint(),
+                impl_set()
+            ),
+        )
+        .unwrap();
+        let cache = CalibCache::open(Some(path.clone()));
+        assert_eq!(cache.len(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn invalidate_clears_memory_and_file() {
+        let path = tmp("invalidate");
+        let _ = std::fs::remove_file(&path);
+        let cache = CalibCache::open(Some(path.clone()));
+        cache.resolve_with(4, 64, 8, || XnorImpl::Wide);
+        assert!(path.exists());
+        cache.invalidate().unwrap();
+        assert_eq!(cache.len(), 0);
+        assert!(!path.exists());
+        // Invalidating an already-clean cache is not an error.
+        cache.invalidate().unwrap();
+        // And the next resolve benches again, then persists again.
+        let runs = AtomicUsize::new(0);
+        cache.resolve_with(4, 64, 8, || {
+            runs.fetch_add(1, Ordering::Relaxed);
+            XnorImpl::Simd
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), 1);
+        assert!(path.exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn real_calibrate_lands_in_the_cache() {
+        // End-to-end with the actual microbench (small shape: fast).
+        let cache = CalibCache::open(None);
+        let before = calibrations_total();
+        let imp = cache.resolve(4, 32, 4);
+        assert!(
+            XnorImpl::ALL_SINGLE.contains(&imp)
+                || matches!(imp, XnorImpl::Threaded(_)),
+            "{imp:?}"
+        );
+        assert_eq!(calibrations_total(), before + 1);
+        assert_eq!(cache.resolve(4, 32, 4), imp);
+        assert_eq!(calibrations_total(), before + 1,
+                   "second resolve must not re-bench");
+    }
+
+    #[test]
+    fn fingerprint_shapes_are_stable() {
+        let fp = cpu_fingerprint();
+        assert_eq!(fp.matches('|').count(), 2, "{fp}");
+        assert!(impl_set().contains("avx512"), "{}", impl_set());
+        assert!(render_metrics()
+                    .contains("bitkernel_calibrations_total"));
+    }
+}

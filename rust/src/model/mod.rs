@@ -14,12 +14,14 @@
 //! ([`Plan::input_shape`] / [`Plan::classes`] / [`Plan::labels`]).
 
 pub mod bnn;
+pub mod calib;
 pub mod format;
 pub mod mmap;
 pub mod plan;
 pub mod spec;
 
 pub use bnn::{label_for, BnnEngine, EngineKernel};
+pub use calib::CalibCache;
 pub use format::{Dtype, FormatError, WeightFile, WeightTensor};
 pub use mmap::Mmap;
 pub use plan::{Plan, Session};

@@ -725,12 +725,15 @@ fn calibrate_enabled() -> bool {
 }
 
 /// Resolve one op's xnor impl at plan time: `Auto` goes through the
-/// shape heuristic (or the one-shot microbench when calibration is
-/// enabled); explicit impls pass through untouched.
+/// shape heuristic (or, when calibration is enabled, the persistent
+/// [`calibration cache`](super::calib) — which microbenches each
+/// distinct shape at most once per hardware/impl-set and then answers
+/// from memory or the sidecar file, so registry reloads and LRU
+/// rebuilds stop paying it); explicit impls pass through untouched.
 fn plan_xnor_impl(imp: XnorImpl, d: usize, k: usize, n: usize)
                   -> XnorImpl {
     if imp == XnorImpl::Auto && calibrate_enabled() {
-        XnorImpl::calibrate(d, k, n)
+        super::calib::global().resolve(d, k, n)
     } else {
         imp.resolve(d, k, n)
     }

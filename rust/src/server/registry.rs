@@ -827,6 +827,7 @@ mod tests {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
             ..RegistryConfig::default()
         }

@@ -196,6 +196,7 @@ impl Service {
             ("GET", "/metrics") => {
                 let mut body = self.registry.render_prometheus();
                 body.push_str(&self.http_metrics.render());
+                body.push_str(&crate::model::calib::render_metrics());
                 HttpResponse::text(200, body)
             }
             ("GET", _) | ("POST", _) => {

@@ -1,0 +1,82 @@
+//! End-to-end test of the persistent calibration cache: with
+//! `BITKERNEL_CALIBRATE` on, the FIRST plan build of each gemm shape
+//! microbenches, and every subsequent build — a second `plan()` of the
+//! same model, or a registry reload (`PUT /models/{name}`) rebuilding
+//! its pipeline — answers from the cache with ZERO microbenches, as
+//! counted by `bitkernel_calibrations_total`.
+//!
+//! This binary holds exactly ONE test because it configures the
+//! process-global cache through the environment (`calib::global()`
+//! reads the env once, at first use); unit-level coverage that needs
+//! no env lives in `model/calib.rs` against explicit instances.
+
+use std::time::Duration;
+
+use bitkernel::bitops::XnorImpl;
+use bitkernel::model::{calib, CalibCache, EngineKernel};
+use bitkernel::server::{ModelRegistry, RegistryConfig};
+use bitkernel::testing::{synthetic_engine, synthetic_weight_file};
+
+#[test]
+fn warm_cache_makes_repeat_plan_builds_and_reloads_bench_free() {
+    let dir = std::env::temp_dir()
+        .join(format!("bk-calib-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache_path = dir.join("calib");
+    // Must happen before anything touches calib::global(): the global
+    // cache reads its configuration from the env exactly once.
+    std::env::set_var("BITKERNEL_CALIBRATE", "1");
+    std::env::set_var("BITKERNEL_CALIB_CACHE", &cache_path);
+
+    // --- Plan-level: second build of the same engine is bench-free.
+    let engine = synthetic_engine([4, 4, 6, 6, 8, 8, 16, 12, 10], 21);
+    let kernel = EngineKernel::Xnor(XnorImpl::Auto);
+    let t0 = calib::calibrations_total();
+    let plan1 = engine.plan(kernel, 2).unwrap();
+    let t1 = calib::calibrations_total();
+    assert!(t1 > t0, "first build must microbench its gemm shapes");
+    let plan2 = engine.plan(kernel, 2).unwrap();
+    assert_eq!(calib::calibrations_total(), t1,
+               "rebuilding an identical plan must run zero microbenches");
+    // Cached winners are the winners: both plans picked identically.
+    assert_eq!(plan1.xnor_impls(), plan2.xnor_impls());
+    for imp in plan1.xnor_impls() {
+        assert_ne!(imp, XnorImpl::Auto, "unresolved Auto op");
+    }
+
+    // --- Registry-level: a reload rebuilds the pipeline through the
+    // same plan path and must hit the cache (satellite of PR 10: hot
+    // reloads stop paying the microbench).  Different widths than
+    // above so the mount itself proves cold shapes still bench.
+    let spec = bitkernel::model::NetSpec::from_widths(
+        &[4, 6, 4, 6, 4, 4, 12, 10, 10],
+    )
+    .unwrap();
+    let bkw = dir.join("model.bkw");
+    synthetic_weight_file(&spec, 7).save(&bkw).unwrap();
+    let registry = ModelRegistry::new(RegistryConfig {
+        kernel,
+        max_batch: 2,
+        ..RegistryConfig::default()
+    });
+    let entry = registry.mount("m", &bkw, false).unwrap();
+    assert_eq!(
+        entry.wait_settled(Duration::from_secs(30)).error, None
+    );
+    let after_mount = calib::calibrations_total();
+    assert!(after_mount > t1, "cold mount shapes must microbench");
+    let entry = registry.reload("m").unwrap();
+    let status = entry.wait_settled(Duration::from_secs(30));
+    assert_eq!(status.error, None);
+    assert!(status.generation >= 2, "{status:?}");
+    assert_eq!(calib::calibrations_total(), after_mount,
+               "reload rebuilt the plan without a single microbench");
+
+    // --- Persistence: the sidecar holds every calibrated shape, and a
+    // fresh instance over it (what a NEW process would open) is warm.
+    let warm = CalibCache::open(Some(cache_path.clone()));
+    assert_eq!(warm.len() as u64, after_mount - t0,
+               "every microbenched shape must have been persisted");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -73,6 +73,7 @@ fn hammered_router_survives_injected_panics_without_hangs() {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap(),
@@ -194,6 +195,7 @@ fn circuit_opens_while_every_replica_restarts_then_recloses() {
                     max_batch: 2,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap(),

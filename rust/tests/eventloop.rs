@@ -152,6 +152,7 @@ fn event_loop_is_bit_identical_to_forward_reference() {
                     max_batch: 4,
                     max_delay: Duration::from_millis(2),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap(),

@@ -51,6 +51,7 @@ fn router_with_native_engine_classifies_correctly() {
                 max_batch: 8,
                 max_delay: Duration::from_millis(2),
             },
+            ..RouterConfig::default()
         },
     )
     .unwrap();
@@ -275,6 +276,7 @@ fn replies_bit_identical_for_1_and_4_replicas() {
                     max_batch: 4,
                     max_delay: Duration::from_millis(2),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();
@@ -317,6 +319,7 @@ fn shutdown_drains_every_accepted_request() {
                 max_batch: 4,
                 max_delay: Duration::from_millis(1),
             },
+            ..RouterConfig::default()
         },
     )
     .unwrap();
@@ -357,6 +360,7 @@ fn saturated_admission_queue_surfaces_queue_full() {
                 max_batch: 1,
                 max_delay: Duration::from_millis(1),
             },
+            ..RouterConfig::default()
         },
     )
     .unwrap();

@@ -79,6 +79,7 @@ fn registry(max_resident: usize) -> Arc<ModelRegistry> {
                 max_batch: 4,
                 max_delay: Duration::from_millis(1),
             },
+            ..RouterConfig::default()
         },
         max_resident,
     })

@@ -26,12 +26,15 @@ const WIDTHS: [u32; 9] = [4, 4, 6, 6, 8, 8, 16, 12, 10];
 const CHW: usize = 3 * 32 * 32;
 const MAX_BATCH: usize = 4;
 
-fn arms() -> [EngineKernel; 8] {
+fn arms() -> [EngineKernel; 9] {
     [
         EngineKernel::Xnor(XnorImpl::Scalar),
         EngineKernel::Xnor(XnorImpl::Blocked),
         EngineKernel::Xnor(XnorImpl::Wide),
         EngineKernel::Xnor(XnorImpl::Simd),
+        // Detection-gated: real 512-bit tiles on AVX-512 hosts, the
+        // avx2/wide fallback elsewhere — bit-identical either way.
+        EngineKernel::Xnor(XnorImpl::Avx512),
         EngineKernel::Xnor(XnorImpl::Threaded(2)),
         EngineKernel::Xnor(XnorImpl::Auto),
         EngineKernel::Control,
@@ -211,6 +214,25 @@ fn auto_plan_resolves_impls_and_stays_bit_identical() {
     for (name, imp) in gemm_names.iter().zip(&impls) {
         assert!(name.ends_with(&format!("[{}]", imp.name())),
                 "stage {name} does not record {imp:?}");
+    }
+
+    // On AVX-512 hosts the small gemm shapes of this synthetic net
+    // must resolve Auto to the new 512-bit arm (big shapes may pick
+    // Threaded), and the stage name records it; elsewhere the
+    // single-core pick is Simd.  Either way the name round-trips
+    // through from_name — the contract the calibration cache's
+    // sidecar format rests on.
+    let single = if bitkernel::bitops::avx512_available() {
+        XnorImpl::Avx512
+    } else {
+        XnorImpl::Simd
+    };
+    for imp in &impls {
+        assert!(
+            matches!(imp, XnorImpl::Threaded(_)) || *imp == single,
+            "Auto resolved {imp:?}, expected {single:?} or Threaded"
+        );
+        assert_eq!(XnorImpl::from_name(&imp.name()), Some(*imp));
     }
 
     // Auto sessions are bit-identical to the unfused oracle and

@@ -34,14 +34,25 @@ fn prop_pack_roundtrip() {
 }
 
 /// Every impl a fuzz case may pick: the full single-threaded ladder
-/// (incl. the SIMD tiers), the shape-resolved `Auto`, and 2-D tiled
-/// threading at two widths.
+/// (incl. the AVX-512 and AVX2 SIMD tiers — `Avx512` is in
+/// `ALL_SINGLE` and detection-gates internally, so on AVX-512 hosts
+/// the 512-bit tile kernels join every cross-check below and elsewhere
+/// its fallback is re-verified), the shape-resolved `Auto`, and 2-D
+/// tiled threading at two widths.
 fn fuzz_impls() -> Vec<XnorImpl> {
     let mut v = XnorImpl::ALL_SINGLE.to_vec();
     v.push(XnorImpl::Auto);
     v.push(XnorImpl::Threaded(2));
     v.push(XnorImpl::Threaded(5));
     v
+}
+
+#[test]
+fn fuzz_set_includes_the_avx512_arm() {
+    // Guards the coverage above: if a refactor ever drops Avx512 from
+    // ALL_SINGLE, the differential fuzz would silently stop testing
+    // the 512-bit tier.
+    assert!(fuzz_impls().contains(&XnorImpl::Avx512));
 }
 
 #[test]

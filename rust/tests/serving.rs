@@ -53,6 +53,7 @@ fn router_for(engine: &BnnEngine, max_batch: usize) -> Router {
                 max_batch,
                 max_delay: Duration::from_millis(2),
             },
+            ..RouterConfig::default()
         },
     )
     .unwrap()
@@ -210,6 +211,7 @@ fn randomized_shapes_validate_submits_and_bodies() {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
                 },
+                ..RouterConfig::default()
             },
         )
         .unwrap();

@@ -42,6 +42,33 @@ if grep -rnE "QuantScheme::(SignSign|XnorAlpha|BinaryWeight|TernaryWeight)" src 
     exit 1
 fi
 
+echo "== dispatch gate: every XnorImpl variant is routed"
+# The compiler catches a missing match arm, but NOT a new arm that
+# never makes it into ALL_SINGLE — such an arm would be silently
+# unrouted: never calibrated (model/plan.rs Auto resolution and the
+# persistent calib cache both sweep ALL_SINGLE), never differential-
+# fuzzed by prop_bitops, never ablated.  Extract the variant list from
+# the enum itself so a future arm is gated the day it is added.
+variants=$(sed -n '/^pub enum XnorImpl/,/^}/p' src/bitops/xnor.rs \
+    | grep -oE '^    [A-Z][A-Za-z0-9]*' | tr -d ' ')
+if [ -z "$variants" ]; then
+    echo "could not extract XnorImpl variants from bitops/xnor.rs" >&2
+    exit 1
+fi
+all_single=$(sed -n '/ALL_SINGLE:/,/\];/p' src/bitops/xnor.rs)
+for v in $variants; do
+    if ! grep -qE "XnorImpl::$v(\([a-z_]+\))? =>" src/bitops/xnor.rs; then
+        echo "XnorImpl::$v has no dispatch arm in bitops/xnor.rs" >&2
+        exit 1
+    fi
+    case "$v" in Auto|Threaded) continue ;; esac
+    if ! echo "$all_single" | grep -q "XnorImpl::$v,"; then
+        echo "XnorImpl::$v missing from ALL_SINGLE: the arm would never" \
+             "be calibrated (plan.rs Auto path) or fuzzed" >&2
+        exit 1
+    fi
+done
+
 echo "== cargo build --release"
 cargo build --release
 
@@ -76,6 +103,13 @@ echo "== model lifecycle: mount/reload/unmount under live traffic"
 # traffic draining to clean 404s, lazy mounts, LRU demotion, metrics
 # GC.  Artifact-free.
 cargo test -q --test lifecycle
+
+echo "== calibration cache: double-build + reload run zero microbenches"
+# Separate test binary on purpose: it configures the process-global
+# cache via BITKERNEL_CALIB_CACHE/BITKERNEL_CALIBRATE, builds the same
+# Auto plan twice, and registry-mounts + reloads a model — asserting
+# via bitkernel_calibrations_total that only cold shapes ever bench.
+cargo test -q --test calib_cache
 
 echo "== example: custom_net (NetSpec end to end, artifact-free)"
 cargo run --release --example custom_net
@@ -117,6 +151,11 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== bench smoke: kernel ablation (--quick)"
 cargo bench --bench ablation -- --quick
+
+echo "== bench smoke: per-impl kernel throughput (--quick)"
+# Times every single-core arm (incl. the AVX-512 tier) on the
+# acceptance shape; on VPOPCNTDQ hosts it asserts avx512 beats simd.
+cargo bench --bench kernels -- --quick
 
 echo "== bench smoke: profile (1 rep)"
 cargo bench --bench profile -- --reps 1
